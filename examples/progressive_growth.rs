@@ -1,0 +1,75 @@
+//! Progressive growth (paper §4.3 Fig 5 and "future work": growing
+//! neural networks during training by progressively sampling more
+//! paths): start training with few Sobol' paths, then repeatedly double
+//! the path count mid-training.  The progressive-permutation property
+//! guarantees existing paths (and their learned weights) are untouched —
+//! new paths are appended with constant init and training continues.
+//!
+//! Run: `cargo run --release --example progressive_growth`
+
+use sobolnet::data::synth::SynthMnist;
+use sobolnet::nn::init::Init;
+use sobolnet::nn::optim::LrSchedule;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::trainer::{evaluate, train, TrainConfig};
+use sobolnet::nn::Model;
+use sobolnet::topology::{PathSource, TopologyBuilder};
+
+fn main() {
+    let sizes = [784usize, 256, 256, 10];
+    let (tr, te) = SynthMnist::new(4096, 1024, 3);
+    let stage_epochs = 2;
+    let mut paths = 256usize;
+    let source = PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) };
+
+    let mut topo = TopologyBuilder::new(&sizes).paths(paths).source(source).build();
+    let mut net = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantRandomSign, seed: 5, ..Default::default() },
+    );
+    println!("stage-wise growth: 256 → 512 → 1024 → 2048 paths\n");
+    for stage in 0..4 {
+        let cfg = TrainConfig {
+            epochs: stage_epochs,
+            schedule: LrSchedule::Constant(0.05),
+            seed: stage as u64,
+            ..Default::default()
+        };
+        let hist = train(&mut net, &tr, &te, &cfg);
+        println!(
+            "stage {stage}: {paths:4} paths ({:6} params) → test acc {:.2}%",
+            net.nparams(),
+            hist.final_acc() * 100.0
+        );
+        if stage == 3 {
+            break;
+        }
+
+        // grow: double the paths; prefix indices are unchanged
+        // (progressive permutations), so learned weights carry over.
+        let old_paths = paths;
+        paths *= 2;
+        topo.grow_to(paths);
+        let mut grown = SparseMlp::new(
+            &topo,
+            SparseMlpConfig { init: Init::ConstantRandomSign, seed: 5, ..Default::default() },
+        );
+        for t in 0..topo.transitions() {
+            // carry learned weights for the surviving prefix…
+            grown.w[t][..old_paths].copy_from_slice(&net.w[t][..old_paths]);
+            // …and start fresh paths at ZERO: the network function is
+            // preserved exactly across growth (they pick up nonzero
+            // gradients immediately and grow into the capacity).
+            grown.w[t][old_paths..].fill(0.0);
+        }
+        for (dst, src) in grown.bias.iter_mut().zip(&net.bias) {
+            dst.copy_from_slice(src);
+        }
+        let (_, acc_after_growth) = evaluate(&mut grown, &te, 256);
+        println!(
+            "         grew to {paths} paths; accuracy right after growth: {:.2}% (knowledge preserved)",
+            acc_after_growth * 100.0
+        );
+        net = grown;
+    }
+}

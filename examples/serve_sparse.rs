@@ -1,0 +1,107 @@
+//! Serving example: train the path-sparse MLP briefly via the AOT
+//! artifacts, then stand up the L3 inference server (request router +
+//! dynamic batcher) over the compiled `sparse_forward` executable and
+//! fire a concurrent request load, reporting latency percentiles and
+//! throughput — the serving-paper-shaped deliverable.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_sparse`
+
+use sobolnet::coordinator::server::{InferenceServer, ServerConfig};
+use sobolnet::coordinator::{AotTrainer, AotTrainerConfig};
+use sobolnet::data::synth::SynthMnist;
+use sobolnet::nn::init::Init;
+use sobolnet::topology::{PathSource, TopologyBuilder};
+use sobolnet::util::timer::Timer;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let topo = TopologyBuilder::new(&[784, 256, 256, 10])
+        .paths(2048)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .build();
+
+    // quick warm-up training so the served model is meaningful
+    let (tr, te) = SynthMnist::new(2048, 512, 11);
+    let te = Arc::new(te);
+    let cfg = AotTrainerConfig {
+        artifacts_dir: "artifacts".into(),
+        init: Init::ConstantRandomSign,
+        seed: 11,
+    };
+    let (trained_w, batch) = {
+        let mut trainer = AotTrainer::new(&cfg, &topo)?;
+        let b = trainer.shapes.batch;
+        for epoch in 0..3 {
+            let order = tr.epoch_order(epoch as u64);
+            for chunk in order.chunks(b) {
+                if chunk.len() == b {
+                    let (x, y) = tr.gather(chunk);
+                    let yi: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+                    trainer.train_step(&x.data, &yi, 0.05)?;
+                }
+            }
+        }
+        let yi: Vec<i32> = te.y.iter().map(|&v| v as i32).collect();
+        let acc = trainer.evaluate(&te.x.data, &yi)?;
+        println!("model trained to {:.1}% test acc; launching server", acc * 100.0);
+        (trainer.weights()?, b)
+    };
+
+    // PJRT handles are not Send — the server factory rebuilds the
+    // executable ON the worker thread and installs the trained weights
+    // (plain f32 vectors, which do cross threads).
+    let topo_for_server = topo.clone();
+    let server = Arc::new(InferenceServer::start_with(
+        move || {
+            let mut trainer = AotTrainer::new(&cfg, &topo_for_server).expect("artifacts");
+            trainer.set_weights(&trained_w).expect("weights fit");
+            Box::new(trainer.into_backend())
+        },
+        ServerConfig { max_wait: Duration::from_millis(2) },
+    ));
+    let b = batch;
+
+    // closed-loop load: 8 client threads × 64 requests each
+    let clients = 8;
+    let per_client = 64;
+    let t = Timer::start();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let s = server.clone();
+        let data = te.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut correct = 0usize;
+            for k in 0..per_client {
+                let i = (c * per_client + k) % data.len();
+                let logits = s.infer(data.x.row(i).to_vec());
+                let pred = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred as u32 == data.y[i] {
+                    correct += 1;
+                }
+            }
+            correct
+        }));
+    }
+    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let secs = t.elapsed_secs();
+    let total = clients * per_client;
+    let (p50, p90, p99) = server.metrics.latency_percentiles();
+    println!("\nserved {total} requests in {secs:.2}s → {:.0} req/s", total as f64 / secs);
+    println!(
+        "latency: p50 {:.2}ms  p90 {:.2}ms  p99 {:.2}ms | mean batch {:.1}/{}",
+        p50 * 1e3,
+        p90 * 1e3,
+        p99 * 1e3,
+        server.metrics.mean_batch_size(),
+        b,
+    );
+    println!("served accuracy {:.1}%", 100.0 * correct as f64 / total as f64);
+    println!("metrics: {}", server.metrics.summary());
+    Ok(())
+}

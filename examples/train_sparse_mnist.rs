@@ -1,0 +1,95 @@
+//! **End-to-end three-layer driver** (the repository's E2E validation
+//! run, recorded in EXPERIMENTS.md): the rust coordinator generates a
+//! Sobol' topology, loads the AOT-compiled JAX/Pallas `sparse_train_step`
+//! artifact through PJRT, trains the 784-256-256-10 path-sparse MLP on
+//! synthetic MNIST for several hundred steps while logging the loss
+//! curve, evaluates test accuracy, and checkpoints the weights.
+//!
+//! Python never runs here — `make artifacts` must have been executed
+//! once beforehand.
+//!
+//! Run: `make artifacts && cargo run --release --example train_sparse_mnist`
+
+use sobolnet::coordinator::checkpoint::Checkpoint;
+use sobolnet::coordinator::{AotTrainer, AotTrainerConfig};
+use sobolnet::data::synth::SynthMnist;
+use sobolnet::nn::init::Init;
+use sobolnet::nn::optim::LrSchedule;
+use sobolnet::topology::{PathSource, TopologyBuilder};
+use sobolnet::util::stats::Ema;
+use sobolnet::util::timer::Timer;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let epochs = 6;
+    let topo = TopologyBuilder::new(&[784, 256, 256, 10])
+        .paths(2048)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .build();
+    println!(
+        "topology: sobol, {} paths, nnz {}, sparsity {:.2}%",
+        topo.paths,
+        topo.nnz(),
+        topo.sparsity() * 100.0
+    );
+
+    let cfg = AotTrainerConfig {
+        artifacts_dir: "artifacts".into(),
+        init: Init::ConstantRandomSign,
+        seed: 7,
+    };
+    let mut trainer = AotTrainer::new(&cfg, &topo)?;
+    println!(
+        "AOT artifacts loaded: batch={} paths={} layers={:?}",
+        trainer.shapes.batch, trainer.shapes.paths, trainer.shapes.layer_sizes
+    );
+
+    let b = trainer.shapes.batch;
+    let (tr, te) = SynthMnist::new(4096, 1024, 7);
+    let te_labels: Vec<i32> = te.y.iter().map(|&v| v as i32).collect();
+    let schedule = LrSchedule::StepDecay { base: 0.1, factor: 0.1, milestones: vec![0.5, 0.75] };
+
+    let timer = Timer::start();
+    let mut ema = Ema::new(0.05);
+    let mut step = 0usize;
+    println!("\nstep, loss_ema, lr   (loss curve)");
+    for epoch in 0..epochs {
+        let lr = schedule.lr_at(epoch, epochs);
+        let order = tr.epoch_order(7 ^ (epoch as u64) << 5);
+        for chunk in order.chunks(b) {
+            if chunk.len() < b {
+                continue;
+            }
+            let (x, y) = tr.gather(chunk);
+            let yi: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+            let loss = trainer.train_step(&x.data, &yi, lr)?;
+            let smoothed = ema.push(loss as f64);
+            if step % 16 == 0 {
+                println!("{step:5}, {smoothed:.4}, {lr:.3}");
+            }
+            step += 1;
+        }
+        let acc = trainer.evaluate(&te.x.data, &te_labels)?;
+        println!("== epoch {epoch}: test acc {:.2}% ==", acc * 100.0);
+    }
+    let secs = timer.elapsed_secs();
+    let acc = trainer.evaluate(&te.x.data, &te_labels)?;
+    println!(
+        "\ntrained {step} steps in {secs:.1}s ({:.1} steps/s); final test acc {:.2}%",
+        step as f64 / secs,
+        acc * 100.0
+    );
+
+    // checkpoint the trained parameters + topology
+    let mut ckpt = Checkpoint::new();
+    ckpt.f32s.insert("w".into(), trainer.weights()?);
+    ckpt.f32s.insert("m".into(), trainer.momentum()?);
+    ckpt.i32s.insert("idx".into(), trainer.idx.clone());
+    ckpt.meta.insert(
+        "paths".into(),
+        sobolnet::config::json::JsonValue::Number(topo.paths as f64),
+    );
+    let path = std::path::Path::new("artifacts/mnist_sparse.ckpt");
+    ckpt.save(path)?;
+    println!("checkpoint written to {}", path.display());
+    Ok(())
+}

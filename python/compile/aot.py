@@ -1,0 +1,157 @@
+"""AOT lowering: JAX/Pallas model → HLO **text** artifacts + manifest.
+
+Run once by ``make artifacts``; the rust runtime
+(``rust/src/runtime``) loads the text, compiles it on the PJRT CPU
+client and executes it.  HLO text (not serialized ``HloModuleProto``)
+is the interchange format: jax ≥ 0.5 emits 64-bit instruction ids that
+xla_extension 0.5.1 rejects, while the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts (shapes baked at lowering time, topology is a runtime input):
+
+* ``sparse_train_step(w[T,P], m[T,P], idx[L,P]i32, x[B,F], y[B]i32, lr[])
+  → (w', m', loss)``
+* ``sparse_forward(w[T,P], idx[L,P]i32, x[B,F]) → logits[B,C]``
+* ``path_layer_fwd(x[B,n], w[P], ii[P]i32, io[P]i32) → y[B,n']`` — the
+  bare L1 kernel, for runtime micro-benches.
+
+``--report`` prints HLO statistics and the static VMEM/MXU estimates of
+the kernel BlockSpecs (DESIGN.md §Perf / §Hardware-Adaptation).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import path_layer as pk
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifacts(layer_sizes=model.LAYER_SIZES, paths=model.PATHS, batch=model.BATCH):
+    """Lower all artifacts; returns ``[(name, hlo_text, inputs, outputs, meta)]``."""
+    t_count = len(layer_sizes) - 1
+    l_count = len(layer_sizes)
+    f = layer_sizes[0]
+    c = layer_sizes[-1]
+    f32 = jnp.float32
+    i32 = jnp.int32
+    spec = jax.ShapeDtypeStruct
+
+    w = spec((t_count, paths), f32)
+    m = spec((t_count, paths), f32)
+    idx = spec((l_count, paths), i32)
+    x = spec((batch, f), f32)
+    y = spec((batch,), i32)
+    lr = spec((), f32)
+
+    meta = {"layer_sizes": list(layer_sizes), "paths": paths, "batch": batch}
+    arts = []
+
+    step = jax.jit(
+        lambda w, m, idx, x, y, lr: model.train_step(w, m, idx, x, y, lr, tuple(layer_sizes))
+    ).lower(w, m, idx, x, y, lr)
+    arts.append((
+        "sparse_train_step",
+        to_hlo_text(step),
+        [list(s.shape) for s in (w, m, idx, x, y, lr)],
+        [[t_count, paths], [t_count, paths], []],
+        meta,
+    ))
+
+    fwd = jax.jit(lambda w, idx, x: model.forward(w, idx, x, tuple(layer_sizes))).lower(w, idx, x)
+    arts.append((
+        "sparse_forward",
+        to_hlo_text(fwd),
+        [list(s.shape) for s in (w, idx, x)],
+        [[batch, c]],
+        meta,
+    ))
+
+    # bare L1 kernel over the first transition's geometry
+    n_in, n_out = layer_sizes[0], layer_sizes[1]
+    kx = spec((batch, n_in), f32)
+    kw = spec((paths,), f32)
+    ki = spec((paths,), i32)
+    kernel = jax.jit(
+        lambda x, w, ii, io: pk.path_layer_fwd(x, w, ii, io, n_out)
+    ).lower(kx, kw, ki, ki)
+    arts.append((
+        "path_layer_fwd",
+        to_hlo_text(kernel),
+        [[batch, n_in], [paths], [paths], [paths]],
+        [[batch, n_out]],
+        {**meta, "n_in": n_in, "n_out": n_out},
+    ))
+    return arts
+
+
+def write_artifacts(out_dir: str, arts) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+    for name, hlo, inputs, outputs, meta in arts:
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(hlo)
+        manifest["artifacts"].append(
+            {"name": name, "file": fname, "inputs": inputs, "outputs": outputs, "meta": meta}
+        )
+        print(f"wrote {fname}: {len(hlo)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+def report(arts) -> None:
+    """HLO op statistics + static kernel efficiency estimates."""
+    for name, hlo, _, _, meta in arts:
+        ops = {}
+        for line in hlo.splitlines():
+            line = line.strip()
+            if "=" in line and not line.startswith(("HloModule", "ENTRY", "}")):
+                rhs = line.split("=", 1)[1].strip()
+                head = rhs.split("(")[0].split()
+                if not head:
+                    continue
+                op = head[-1].split(".")[0]
+                ops[op] = ops.get(op, 0) + 1
+        top = sorted(ops.items(), key=lambda kv: -kv[1])[:8]
+        print(f"\n[{name}] {len(hlo.splitlines())} HLO lines; top ops: {top}")
+        if "n_in" in meta:
+            b = meta["batch"]
+            vmem = pk.vmem_estimate_bytes(b, meta["n_in"], meta["n_out"])
+            mxu = pk.mxu_utilization_estimate(b, meta["n_out"])
+            print(
+                f"  kernel block={pk.PATH_BLOCK}: VMEM/step ≈ {vmem / 1024:.1f} KiB "
+                f"(≤16 MiB budget), MXU tile utilization ≈ {mxu:.2%}"
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--report", action="store_true", help="print HLO/VMEM report only")
+    ap.add_argument("--paths", type=int, default=model.PATHS)
+    ap.add_argument("--batch", type=int, default=model.BATCH)
+    args = ap.parse_args()
+    arts = lower_artifacts(paths=args.paths, batch=args.batch)
+    if args.report:
+        report(arts)
+    else:
+        write_artifacts(args.out, arts)
+
+
+if __name__ == "__main__":
+    main()

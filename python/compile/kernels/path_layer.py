@@ -1,0 +1,187 @@
+"""Layer-1 Pallas kernels for the path-sparse layer (paper Fig 3).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a block of 2^k paths —
+one Sobol' permutation block — becomes a VMEM tile; the gather is a
+VPU-friendly take, the scatter is a one-hot matmul that lands on the
+MXU systolic array (the paper's §4.1/§4.4 crossbar argument: a
+permutation scatter *is* a permutation-matrix multiply).
+
+All kernels run ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO ops that the
+rust runtime executes (see /opt/xla-example/README.md).  Correctness is
+pinned to ``ref.py`` by ``python/tests/test_kernel.py``.
+
+The forward/backward trio is wired into ``jax.custom_vjp`` so the L2
+model trains through ``jax.grad`` with these kernels on both passes.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Path-block size: one Sobol' permutation block per grid step.  256
+# paths × f32 weight + two i32 indices = 3 KiB/step of index traffic;
+# with B×n tiles this keeps the working set well inside a TPU core's
+# ~16 MiB VMEM for every shape used by the models here (see
+# ``aot.py --report`` for the per-artifact accounting).
+PATH_BLOCK = 256
+
+
+def _fwd_kernel(x_ref, w_ref, ii_ref, io_ref, o_ref, *, n_out):
+    """One grid step: accumulate a block of paths into the output tile."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [B, n_in] tile
+    w = w_ref[...]  # [PB]
+    ii = ii_ref[...]  # [PB] int32
+    io = io_ref[...]  # [PB] int32
+    gathered = jnp.maximum(jnp.take(x, ii, axis=1), 0.0)  # [B, PB]
+    contrib = gathered * w[None, :]
+    onehot = jax.nn.one_hot(io, n_out, dtype=x.dtype)  # [PB, n_out] → MXU
+    o_ref[...] += contrib @ onehot
+
+
+def _bwd_input_kernel(x_ref, w_ref, ii_ref, io_ref, gy_ref, o_ref, *, n_in):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    gy = gy_ref[...]
+    w = w_ref[...]
+    ii = ii_ref[...]
+    io = io_ref[...]
+    gate = (jnp.take(x, ii, axis=1) > 0.0).astype(x.dtype)  # [B, PB]
+    ggath = jnp.take(gy, io, axis=1) * w[None, :] * gate
+    onehot = jax.nn.one_hot(ii, n_in, dtype=x.dtype)  # [PB, n_in]
+    o_ref[...] += ggath @ onehot
+
+
+def _bwd_weight_kernel(x_ref, ii_ref, io_ref, gy_ref, o_ref):
+    x = x_ref[...]
+    gy = gy_ref[...]
+    ii = ii_ref[...]
+    io = io_ref[...]
+    gathered = jnp.maximum(jnp.take(x, ii, axis=1), 0.0)  # [B, PB]
+    o_ref[...] = jnp.sum(jnp.take(gy, io, axis=1) * gathered, axis=0)  # [PB]
+
+
+def _path_grid(p):
+    """Grid size and effective block for P paths."""
+    pb = min(PATH_BLOCK, p)
+    assert p % pb == 0, f"paths {p} must be a multiple of the block {pb}"
+    return p // pb, pb
+
+
+def path_layer_fwd(x, w, idx_in, idx_out, n_out):
+    """Pallas forward: ``y[b, idx_out[p]] += w[p] · relu(x[b, idx_in[p]])``."""
+    b, _ = x.shape
+    (p,) = w.shape
+    grid, pb = _path_grid(p)
+    return pl.pallas_call(
+        partial(_fwd_kernel, n_out=n_out),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+            pl.BlockSpec((pb,), lambda i: (i,)),
+            pl.BlockSpec((pb,), lambda i: (i,)),
+            pl.BlockSpec((pb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b, n_out), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_out), x.dtype),
+        interpret=True,
+    )(x, w, idx_in, idx_out)
+
+
+def path_layer_bwd_input(x, w, idx_in, idx_out, gy):
+    """Pallas input-gradient kernel."""
+    b, n_in = x.shape
+    (p,) = w.shape
+    grid, pb = _path_grid(p)
+    return pl.pallas_call(
+        partial(_bwd_input_kernel, n_in=n_in),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+            pl.BlockSpec((pb,), lambda i: (i,)),
+            pl.BlockSpec((pb,), lambda i: (i,)),
+            pl.BlockSpec((pb,), lambda i: (i,)),
+            pl.BlockSpec(gy.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, n_in), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_in), x.dtype),
+        interpret=True,
+    )(x, w, idx_in, idx_out, gy)
+
+
+def path_layer_bwd_weight(x, idx_in, idx_out, gy):
+    """Pallas weight-gradient kernel (blocked over paths, no revisit)."""
+    (p,) = idx_in.shape
+    grid, pb = _path_grid(p)
+    return pl.pallas_call(
+        _bwd_weight_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+            pl.BlockSpec((pb,), lambda i: (i,)),
+            pl.BlockSpec((pb,), lambda i: (i,)),
+            pl.BlockSpec(gy.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((pb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), x.dtype),
+        interpret=True,
+    )(x, idx_in, idx_out, gy)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def path_layer(x, w, idx_in, idx_out, n_out):
+    """Differentiable path layer; fwd and bwd are Pallas kernels."""
+    return path_layer_fwd(x, w, idx_in, idx_out, n_out)
+
+
+def _vjp_fwd(x, w, idx_in, idx_out, n_out):
+    y = path_layer_fwd(x, w, idx_in, idx_out, n_out)
+    return y, (x, w, idx_in, idx_out)
+
+
+def _vjp_bwd(n_out, res, gy):
+    del n_out
+    x, w, idx_in, idx_out = res
+    gx = path_layer_bwd_input(x, w, idx_in, idx_out, gy)
+    gw = path_layer_bwd_weight(x, idx_in, idx_out, gy)
+    # indices are integers: no gradient
+    return gx, gw, None, None
+
+
+path_layer.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def vmem_estimate_bytes(batch, n_in, n_out, path_block=PATH_BLOCK, dtype_bytes=4):
+    """Static VMEM footprint estimate of one forward grid step (used by
+    ``aot.py --report`` and DESIGN.md §Perf): input tile + output tile +
+    path block (w + 2×i32) + one-hot staging.
+    """
+    x_tile = batch * n_in * dtype_bytes
+    o_tile = batch * n_out * dtype_bytes
+    path_blk = path_block * (dtype_bytes + 4 + 4)
+    onehot = path_block * n_out * dtype_bytes
+    gathered = batch * path_block * dtype_bytes
+    return x_tile + o_tile + path_blk + onehot + gathered
+
+
+def mxu_utilization_estimate(batch, n_out, path_block=PATH_BLOCK):
+    """Fraction of MXU 128×128 systolic slots doing useful work in the
+    one-hot matmul ``[B,PB] @ [PB,n_out]`` (bfloat16 tiling assumption).
+    """
+    def eff(dim, tile=128):
+        full, rem = divmod(dim, tile)
+        used = full * tile + rem
+        alloc = (full + (1 if rem else 0)) * tile
+        return used / alloc
+
+    return eff(batch) * eff(path_block) * eff(n_out)

@@ -1,0 +1,76 @@
+"""Pure-jnp reference (oracle) for the path-layer kernels.
+
+The sparse path layer of the paper (Fig 3), in segment-sum form:
+
+    y[b, idx_out[p]] += w[p] * relu(x[b, idx_in[p]])        (forward)
+
+and its two backward products:
+
+    gx[b, idx_in[p]] += w[p] * gy[b, idx_out[p]] * (x[b, idx_in[p]] > 0)
+    gw[p]            = sum_b gy[b, idx_out[p]] * relu(x[b, idx_in[p]])
+
+These are the ground truth the Pallas kernels are checked against by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes/dtypes) — the
+core correctness signal of the L1 layer.
+"""
+
+import jax.numpy as jnp
+
+
+def path_layer_fwd_ref(x, w, idx_in, idx_out, n_out):
+    """Forward: gather → scale → scatter-add (segment sum).
+
+    Args:
+      x:       [B, n_in] activations of the previous layer.
+      w:       [P] path weights.
+      idx_in:  [P] int32 source neuron per path.
+      idx_out: [P] int32 destination neuron per path.
+      n_out:   static output width.
+
+    Returns:
+      [B, n_out] pre-activations of the next layer.
+    """
+    gathered = jnp.maximum(x[:, idx_in], 0.0)  # [B, P]
+    contrib = gathered * w[None, :]
+    # scatter-add along axis 1 via one-hot matmul (same math the MXU
+    # mapping uses; exact in f32 for the sizes under test)
+    onehot = (idx_out[:, None] == jnp.arange(n_out)[None, :]).astype(x.dtype)  # [P, n_out]
+    return contrib @ onehot
+
+
+def path_layer_bwd_input_ref(x, w, idx_in, idx_out, gy):
+    """Input gradient of the path layer."""
+    gate = (x[:, idx_in] > 0.0).astype(x.dtype)  # [B, P]
+    ggath = gy[:, idx_out] * w[None, :] * gate  # [B, P]
+    n_in = x.shape[1]
+    onehot = (idx_in[:, None] == jnp.arange(n_in)[None, :]).astype(x.dtype)  # [P, n_in]
+    return ggath @ onehot
+
+
+def path_layer_bwd_weight_ref(x, w, idx_in, idx_out, gy):
+    """Weight gradient of the path layer (w only enters linearly)."""
+    del w  # unused: gradient is independent of w
+    gathered = jnp.maximum(x[:, idx_in], 0.0)  # [B, P]
+    return jnp.sum(gy[:, idx_out] * gathered, axis=0)  # [P]
+
+
+def sparse_mlp_forward_ref(weights, idx, x, layer_sizes):
+    """Whole-network reference forward (logits)."""
+    h = x
+    for t in range(len(layer_sizes) - 1):
+        h = path_layer_fwd_ref(h, weights[t], idx[t], idx[t + 1], layer_sizes[t + 1])
+    return h
+
+
+def masked_dense_forward_ref(weights, idx, x, layer_sizes):
+    """Footnote-1 emulation: coalesce duplicate edges into a dense
+    matrix and run ordinary dense layers.  Agrees with the path form
+    exactly (duplicate edges sum their weights in both forms).
+    """
+    h = x
+    for t in range(len(layer_sizes) - 1):
+        n_in, n_out = layer_sizes[t], layer_sizes[t + 1]
+        dense = jnp.zeros((n_in, n_out), x.dtype)
+        dense = dense.at[idx[t], idx[t + 1]].add(weights[t])
+        h = jnp.maximum(h, 0.0) @ dense
+    return h

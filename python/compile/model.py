@@ -1,0 +1,87 @@
+"""Layer-2 JAX model: the paper's path-sparse MLP (fwd/bwd) built on the
+Pallas path-layer kernels, plus the fused SGD-with-momentum train step
+that gets AOT-lowered by ``aot.py``.
+
+Conventions (the contract with the rust coordinator,
+``rust/src/coordinator/train.rs``):
+
+* weights ``w``    — ``[T, P]`` f32, row t = transition t;
+* momentum ``m``   — ``[T, P]`` f32;
+* topology ``idx`` — ``[L, P]`` int32, row l = neuron index per path in
+  layer l (a *runtime input*: rust generates Sobol'/random topologies);
+* batch ``x``      — ``[B, F]`` f32, labels ``y`` — ``[B]`` int32;
+* ``lr``           — scalar f32 input (schedule lives in rust).
+
+Momentum and weight decay are static (0.9 / 1e-4, the paper's §5.2
+hyperparameters); the learning rate is runtime so the rust side owns the
+schedule without recompiling.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.path_layer import path_layer
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 1e-4
+
+# Default model geometry baked into the artifacts (power-of-two hidden
+# widths per paper §4.3; input/output are not powers of two, which only
+# costs the permutation property on those layers).
+LAYER_SIZES = (784, 256, 256, 10)
+PATHS = 2048
+BATCH = 64
+
+
+def forward(w, idx, x, layer_sizes=LAYER_SIZES):
+    """Logits of the path-sparse MLP (Fig 3 inference, batched)."""
+    h = x
+    t_count = len(layer_sizes) - 1
+    for t in range(t_count):
+        h = path_layer(h, w[t], idx[t], idx[t + 1], int(layer_sizes[t + 1]))
+    return h
+
+
+def loss_fn(w, idx, x, y, layer_sizes=LAYER_SIZES):
+    """Mean softmax cross-entropy."""
+    logits = forward(w, idx, x, layer_sizes)
+    logz = jax.nn.logsumexp(logits, axis=1)
+    picked = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+@partial(jax.jit, static_argnums=(6,), donate_argnums=(0, 1))
+def train_step(w, m, idx, x, y, lr, layer_sizes=LAYER_SIZES):
+    """One SGD+momentum step; returns ``(w', m', loss)``.
+
+    Buffers ``w``/``m`` are donated: XLA updates them in place, so the
+    rust ping-pong driver pays no copy on the hot path.
+    """
+    loss, grad = jax.value_and_grad(loss_fn)(w, idx, x, y, layer_sizes)
+    grad = grad + WEIGHT_DECAY * w
+    m_new = MOMENTUM * m + grad
+    w_new = w - lr * m_new
+    return w_new, m_new, loss
+
+
+@partial(jax.jit, static_argnums=(3,))
+def forward_jit(w, idx, x, layer_sizes=LAYER_SIZES):
+    """Jitted forward for the serving artifact."""
+    return forward(w, idx, x, layer_sizes)
+
+
+def init_weights(key, layer_sizes=LAYER_SIZES, paths=PATHS):
+    """Constant-magnitude random-sign init (paper §3.1 default for
+    sparse nets), matching ``rust/src/nn/init.rs`` magnitudes."""
+    t_count = len(layer_sizes) - 1
+    rows = []
+    for t in range(t_count):
+        fan_in = max(paths // layer_sizes[t + 1], 1)
+        fan_out = max(paths // layer_sizes[t], 1)
+        mag = (6.0 / (fan_in + fan_out)) ** 0.5
+        key, sub = jax.random.split(key)
+        signs = jnp.where(jax.random.bernoulli(sub, 0.5, (paths,)), 1.0, -1.0)
+        rows.append(mag * signs)
+    return jnp.stack(rows).astype(jnp.float32)

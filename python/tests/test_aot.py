@@ -1,0 +1,62 @@
+"""AOT lowering tests: HLO text generation and the manifest contract
+with the rust runtime (`rust/src/runtime/artifact.rs`)."""
+
+import json
+
+from compile import aot, model
+
+SMALL_SIZES = (12, 16, 8)
+SMALL_PATHS = 32
+SMALL_BATCH = 4
+
+
+def lower_small():
+    return aot.lower_artifacts(SMALL_SIZES, SMALL_PATHS, SMALL_BATCH)
+
+
+def test_lowering_produces_hlo_text():
+    arts = lower_small()
+    names = [a[0] for a in arts]
+    assert names == ["sparse_train_step", "sparse_forward", "path_layer_fwd"]
+    for name, hlo, inputs, outputs, meta in arts:
+        assert hlo.startswith("HloModule"), name
+        assert "ENTRY" in hlo, name
+        assert len(inputs) > 0 and len(outputs) > 0
+        assert meta["paths"] == SMALL_PATHS
+    # train step: 6 inputs, 3 outputs
+    ts = arts[0]
+    assert len(ts[2]) == 6
+    assert ts[3] == [[2, SMALL_PATHS], [2, SMALL_PATHS], []]
+
+
+def test_no_custom_calls_in_hlo():
+    """interpret=True must lower Pallas to plain HLO — a Mosaic
+    custom-call would be unloadable by the CPU PJRT client."""
+    for name, hlo, *_ in lower_small():
+        assert "custom-call" not in hlo or "Sharding" in hlo, f"{name} has custom calls"
+
+
+def test_manifest_written(tmp_path):
+    arts = lower_small()
+    aot.write_artifacts(str(tmp_path), arts)
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert len(manifest["artifacts"]) == 3
+    for a in manifest["artifacts"]:
+        assert (tmp_path / a["file"]).exists()
+        assert a["meta"]["layer_sizes"] == list(SMALL_SIZES)
+    # rust-side parser contract: names it looks up
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert {"sparse_train_step", "sparse_forward"} <= names
+
+
+def test_report_runs(capsys):
+    aot.report(lower_small())
+    out = capsys.readouterr().out
+    assert "top ops" in out
+    assert "VMEM" in out
+
+
+def test_default_geometry_constants():
+    assert model.LAYER_SIZES[0] == 784
+    assert model.LAYER_SIZES[-1] == 10
+    assert model.PATHS % 256 == 0, "paths must tile the kernel block"

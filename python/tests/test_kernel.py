@@ -1,0 +1,145 @@
+"""L1 correctness: Pallas path-layer kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, path counts and index patterns;
+``assert_allclose`` against ``ref.py`` is the core correctness signal
+required by the architecture contract.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import path_layer as pk
+from compile.kernels import ref
+
+
+def make_case(rng, batch, n_in, n_out, paths):
+    x = rng.standard_normal((batch, n_in), dtype=np.float32)
+    w = rng.standard_normal(paths).astype(np.float32)
+    ii = rng.integers(0, n_in, paths).astype(np.int32)
+    io = rng.integers(0, n_out, paths).astype(np.int32)
+    gy = rng.standard_normal((batch, n_out), dtype=np.float32)
+    return (
+        jnp.asarray(x),
+        jnp.asarray(w),
+        jnp.asarray(ii),
+        jnp.asarray(io),
+        jnp.asarray(gy),
+    )
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 9),  # batch
+    st.integers(1, 37),  # n_in
+    st.integers(1, 23),  # n_out
+    st.sampled_from([1, 2, 4, 8, 16, 64, 256, 512]),  # paths (mult of block or < block)
+    st.integers(0, 2**31 - 1),  # seed
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_strategy)
+def test_fwd_matches_ref(case):
+    batch, n_in, n_out, paths, seed = case
+    rng = np.random.default_rng(seed)
+    x, w, ii, io, _ = make_case(rng, batch, n_in, n_out, paths)
+    got = pk.path_layer_fwd(x, w, ii, io, n_out)
+    want = ref.path_layer_fwd_ref(x, w, ii, io, n_out)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_bwd_input_matches_ref(case):
+    batch, n_in, n_out, paths, seed = case
+    rng = np.random.default_rng(seed)
+    x, w, ii, io, gy = make_case(rng, batch, n_in, n_out, paths)
+    got = pk.path_layer_bwd_input(x, w, ii, io, gy)
+    want = ref.path_layer_bwd_input_ref(x, w, ii, io, gy)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy)
+def test_bwd_weight_matches_ref(case):
+    batch, n_in, n_out, paths, seed = case
+    rng = np.random.default_rng(seed)
+    x, w, ii, io, gy = make_case(rng, batch, n_in, n_out, paths)
+    got = pk.path_layer_bwd_weight(x, ii, io, gy)
+    want = ref.path_layer_bwd_weight_ref(x, w, ii, io, gy)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_custom_vjp_matches_autodiff_of_ref():
+    """jax.grad through the Pallas custom_vjp must equal autodiff of the
+    reference implementation."""
+    rng = np.random.default_rng(7)
+    x, w, ii, io, _ = make_case(rng, 4, 12, 8, 64)
+
+    def loss_pallas(x, w):
+        return jnp.sum(pk.path_layer(x, w, ii, io, 8) ** 2)
+
+    def loss_ref(x, w):
+        return jnp.sum(ref.path_layer_fwd_ref(x, w, ii, io, 8) ** 2)
+
+    gx_p, gw_p = jax.grad(loss_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw_p, gw_r, rtol=1e-4, atol=1e-4)
+
+
+def test_relu_gating_boundary():
+    """Zero activations do NOT contribute (strict > 0, per Fig 3)."""
+    x = jnp.array([[0.0, -1.0, 2.0]], dtype=jnp.float32)
+    w = jnp.array([5.0, 5.0, 5.0], dtype=jnp.float32)
+    ii = jnp.array([0, 1, 2], dtype=jnp.int32)
+    io = jnp.array([0, 0, 0], dtype=jnp.int32)
+    y = pk.path_layer_fwd(x, w, ii, io, 1)
+    np.testing.assert_allclose(y, [[10.0]])
+    # gradient gates exactly at > 0
+    gy = jnp.ones((1, 1), dtype=jnp.float32)
+    gx = pk.path_layer_bwd_input(x, w, ii, io, gy)
+    np.testing.assert_allclose(gx, [[0.0, 0.0, 5.0]])
+
+
+def test_duplicate_edges_accumulate():
+    """Multiple paths on the same edge sum (footnote 1 coalescing)."""
+    x = jnp.array([[1.0, 3.0]], dtype=jnp.float32)
+    w = jnp.array([0.5, 0.25, 1.0], dtype=jnp.float32)
+    ii = jnp.array([0, 0, 1], dtype=jnp.int32)
+    io = jnp.array([0, 0, 0], dtype=jnp.int32)
+    y = pk.path_layer_fwd(x, w, ii, io, 1)
+    np.testing.assert_allclose(y, [[0.5 + 0.25 + 3.0]])
+
+
+def test_blocked_grid_equals_single_block():
+    """Paths spanning several PATH_BLOCK grid steps accumulate correctly."""
+    rng = np.random.default_rng(11)
+    paths = pk.PATH_BLOCK * 3
+    x, w, ii, io, _ = make_case(rng, 3, 20, 15, paths)
+    got = pk.path_layer_fwd(x, w, ii, io, 15)
+    want = ref.path_layer_fwd_ref(x, w, ii, io, 15)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_estimate_reasonable():
+    b = pk.vmem_estimate_bytes(64, 784, 256)
+    assert 0 < b < 16 * 1024 * 1024, "default geometry must fit VMEM"
+    u = pk.mxu_utilization_estimate(64, 256)
+    assert 0.0 < u <= 1.0
+
+
+@pytest.mark.parametrize("paths", [3, 257])
+def test_non_multiple_paths_rejected(paths):
+    """Path counts must tile the block (explicit contract, not silent)."""
+    rng = np.random.default_rng(0)
+    x, w, ii, io, _ = make_case(rng, 2, 4, 4, paths)
+    if paths < pk.PATH_BLOCK:
+        # smaller than one block is allowed (block shrinks)
+        pk.path_layer_fwd(x, w, ii, io, 4)
+    else:
+        with pytest.raises(AssertionError):
+            pk.path_layer_fwd(x, w, ii, io, 4)

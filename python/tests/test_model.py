@@ -1,0 +1,98 @@
+"""L2 correctness: the path-sparse MLP model and its train step."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+SIZES = (12, 16, 16, 4)
+PATHS = 64
+BATCH = 8
+
+
+def make_net(seed=0):
+    rng = np.random.default_rng(seed)
+    idx = np.stack([rng.integers(0, n, PATHS) for n in SIZES]).astype(np.int32)
+    w = model.init_weights(jax.random.PRNGKey(seed), SIZES, PATHS)
+    x = rng.standard_normal((BATCH, SIZES[0]), dtype=np.float32)
+    y = rng.integers(0, SIZES[-1], BATCH).astype(np.int32)
+    return jnp.asarray(w), jnp.asarray(idx), jnp.asarray(x), jnp.asarray(y)
+
+
+def test_forward_shapes_and_ref_agreement():
+    w, idx, x, _ = make_net()
+    logits = model.forward(w, idx, x, SIZES)
+    assert logits.shape == (BATCH, SIZES[-1])
+    want = ref.sparse_mlp_forward_ref(
+        [w[t] for t in range(len(SIZES) - 1)], [idx[l] for l in range(len(SIZES))], x, SIZES
+    )
+    np.testing.assert_allclose(logits, want, rtol=1e-5, atol=1e-5)
+
+
+def test_forward_matches_masked_dense_emulation():
+    """Footnote 1: the matrix emulation coalesces duplicates but computes
+    the same function — except the input layer gate. The path form gates
+    inputs with relu too, so feed non-negative inputs for exact match."""
+    w, idx, x, _ = make_net(3)
+    x = jnp.abs(x)
+    logits = model.forward(w, idx, x, SIZES)
+    want = ref.masked_dense_forward_ref(
+        [w[t] for t in range(len(SIZES) - 1)], [idx[l] for l in range(len(SIZES))], x, SIZES
+    )
+    np.testing.assert_allclose(logits, want, rtol=1e-4, atol=1e-4)
+
+
+def test_loss_is_lnC_at_zero_weights():
+    w, idx, x, y = make_net()
+    w = jnp.zeros_like(w)
+    loss = model.loss_fn(w, idx, x, y, SIZES)
+    np.testing.assert_allclose(loss, np.log(SIZES[-1]), rtol=1e-5)
+
+
+def test_train_step_reduces_loss():
+    w, idx, x, y = make_net(5)
+    m = jnp.zeros_like(w)
+    losses = []
+    for _ in range(60):
+        w, m, loss = model.train_step(w, m, idx, x, y, jnp.float32(0.05), SIZES)
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0], f"{losses[0]} -> {losses[-1]}"
+    assert np.isfinite(losses).all()
+
+
+def test_train_step_grad_matches_finite_difference():
+    w, idx, x, y = make_net(9)
+    g = jax.grad(model.loss_fn)(w, idx, x, y, SIZES)
+    eps = 1e-3
+    for (t, p) in [(0, 0), (1, 17), (2, 63)]:
+        wp = w.at[t, p].add(eps)
+        wm = w.at[t, p].add(-eps)
+        fd = (model.loss_fn(wp, idx, x, y, SIZES) - model.loss_fn(wm, idx, x, y, SIZES)) / (
+            2 * eps
+        )
+        np.testing.assert_allclose(g[t, p], fd, rtol=5e-2, atol=5e-4)
+
+
+def test_init_weights_magnitude():
+    w = model.init_weights(jax.random.PRNGKey(0), SIZES, PATHS)
+    assert w.shape == (len(SIZES) - 1, PATHS)
+    # transition 0: fan_in = P/n1 = 4, fan_out = P/n0 = 5
+    mag = (6.0 / (PATHS // SIZES[1] + PATHS // SIZES[0])) ** 0.5
+    np.testing.assert_allclose(np.abs(w[0]), mag, rtol=1e-5)
+    # roughly balanced signs
+    pos = int((w > 0).sum())
+    assert 0.3 * w.size < pos < 0.7 * w.size
+
+
+def test_topology_is_runtime_input():
+    """Different idx arrays through the SAME jitted function give
+    different logits (no topology baked into the compilation)."""
+    w, idx, x, _ = make_net(1)
+    rng = np.random.default_rng(42)
+    idx2 = jnp.asarray(np.stack([rng.integers(0, n, PATHS) for n in SIZES]).astype(np.int32))
+    a = model.forward_jit(w, idx, x, SIZES)
+    b = model.forward_jit(w, idx2, x, SIZES)
+    assert not np.allclose(np.asarray(a), np.asarray(b))

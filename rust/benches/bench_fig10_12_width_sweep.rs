@@ -1,0 +1,44 @@
+//! Figs 10–12 reproduction: scale the CNN width with the number of
+//! paths FIXED at 1024 and report accuracy (Fig 10), non-zero weights
+//! (Fig 11) and sparsity (Fig 12).
+//!
+//! Paper shape: accuracy peaks at moderate widths (1–4×) then degrades;
+//! nnz saturates at the path bound while dense capacity grows
+//! quadratically, so sparsity rises steeply with width.
+
+use sobolnet::bench::exp;
+use sobolnet::bench::Table;
+use sobolnet::nn::cnn::{Cnn, CnnConfig};
+use sobolnet::nn::init::Init;
+use sobolnet::nn::Model as _;
+use sobolnet::topology::{PathSource, TopologyBuilder};
+
+fn main() {
+    let budget = exp::Budget::cnn().apply_env();
+    let (tr, te) = exp::cifar_data(budget, 17);
+    let mut table = Table::new(
+        "Figs 10–12 — width sweep at 1024 paths",
+        &["width", "channels", "nnz (Fig 11)", "sparsity (Fig 12)", "test acc (Fig 10)"],
+    );
+    for width in [0.5f64, 1.0, 2.0, 4.0, 8.0] {
+        let sizes = exp::cnn_channel_sizes(width, 3);
+        let topo = TopologyBuilder::new(&sizes)
+            .paths(1024)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+            .build();
+        let cfg = CnnConfig::paper(width, 3, 10, Init::ConstantRandomSign, 0);
+        let dense_nnz = Cnn::dense(cfg.clone()).nnz();
+        let (hist, nnz, _) =
+            exp::run_cnn(Cnn::sparse(cfg, &topo, false), &tr, &te, budget.epochs);
+        table.row(&[
+            format!("{width}"),
+            format!("{:?}", &sizes[1..]),
+            nnz.to_string(),
+            format!("{:.2}%", 100.0 * (1.0 - nnz as f64 / dense_nnz as f64)),
+            format!("{:.2}%", hist.final_acc() * 100.0),
+        ]);
+    }
+    table.print();
+    println!("\n(paper Figs 10–12: best accuracy at widths 1–4; nnz bounded by the");
+    println!(" path count while sparsity grows quadratically with width)");
+}

@@ -1,0 +1,161 @@
+//! Performance micro-benches of every hot path (the §Perf baseline and
+//! after-numbers in EXPERIMENTS.md):
+//!
+//! * Sobol' point generation (direct vs Gray-code) and topology builds,
+//! * the sparse engine's fwd/bwd throughput in paths·batch/s,
+//! * dense matmul GFLOP/s (the baseline's bottleneck),
+//! * pair-sparse conv vs masked-dense conv,
+//! * AOT runtime: PJRT execute overhead of the compiled kernels
+//!   (skipped if artifacts are missing).
+
+use sobolnet::bench::Bench;
+use sobolnet::nn::cnn::{Cnn, CnnConfig};
+use sobolnet::nn::init::Init;
+use sobolnet::nn::matmul::matmul_nt;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::qmc::sobol::Sobol;
+use sobolnet::qmc::Sequence;
+use sobolnet::runtime::client::{literal_f32, literal_i32};
+use sobolnet::runtime::{ArtifactManifest, Runtime};
+use sobolnet::topology::{PathSource, TopologyBuilder};
+
+fn main() {
+    let b = Bench::new("hotpath").warmup(2).samples(8);
+
+    // --- Sobol' generation
+    let sobol = Sobol::new(8);
+    let n = 1 << 18;
+    b.run("sobol direct (points)", n, || {
+        let mut acc = 0u32;
+        for i in 0..n as u64 {
+            acc ^= sobol.component_u32(i, 3);
+        }
+        std::hint::black_box(acc);
+    });
+    b.run("sobol gray-code (points)", n, || {
+        let mut st = sobol.stream(3);
+        let mut acc = 0u32;
+        for _ in 0..n {
+            acc ^= st.next_gray();
+        }
+        std::hint::black_box(acc);
+    });
+
+    // --- topology build
+    b.run("topology build sobol 4096 paths", 4096, || {
+        let t = TopologyBuilder::new(&[784, 256, 256, 10])
+            .paths(4096)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+            .build();
+        std::hint::black_box(t.paths);
+    });
+
+    // --- sparse engine fwd/bwd
+    let topo = TopologyBuilder::new(&[784, 256, 256, 10])
+        .paths(4096)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .build();
+    let mut net = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantRandomSign, seed: 0, ..Default::default() },
+    );
+    let batch = 64;
+    let x = Tensor::from_vec(
+        (0..batch * 784).map(|i| ((i as f32) * 0.01).sin().abs()).collect(),
+        &[batch, 784],
+    );
+    let work = topo.paths * batch * topo.transitions();
+    b.run("sparse fwd (path·batch edges)", work, || {
+        std::hint::black_box(net.forward(&x, false));
+    });
+    let glogits = Tensor::from_vec(vec![0.01; batch * 10], &[batch, 10]);
+    b.run("sparse fwd+bwd (path·batch edges ×2)", work * 2, || {
+        net.forward(&x, true);
+        net.backward(&glogits);
+    });
+
+    // --- dense matmul baseline
+    let (m, k, nn) = (64usize, 784usize, 300usize);
+    let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+    let w: Vec<f32> = (0..nn * k).map(|i| (i as f32 * 0.11).cos()).collect();
+    let mut c = vec![0.0f32; m * nn];
+    let flops = 2 * m * k * nn;
+    b.run("matmul_nt 64×784×300 (flops)", flops, || {
+        c.iter_mut().for_each(|v| *v = 0.0);
+        matmul_nt(&a, &w, &mut c, m, k, nn);
+        std::hint::black_box(c[0]);
+    });
+
+    // --- conv: pair-sparse vs masked dense at width 4×
+    let width = 4.0;
+    let sizes = {
+        let mut s = vec![3usize];
+        s.extend(CnnConfig::paper(width, 3, 10, Init::UniformRandom, 0).channels);
+        s
+    };
+    let ctopo = TopologyBuilder::new(&sizes)
+        .paths(1024)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .build();
+    let xin = Tensor::from_vec(
+        (0..8 * 3 * 16 * 16).map(|i| (i as f32 * 0.013).sin()).collect(),
+        &[8, 3, 16, 16],
+    );
+    let mut sparse_cnn =
+        Cnn::sparse(CnnConfig::paper(width, 3, 10, Init::ConstantRandomSign, 0), &ctopo, false);
+    b.run("cnn fwd width-4 pair-sparse (samples)", 8, || {
+        std::hint::black_box(sparse_cnn.forward(&xin, false));
+    });
+    let mut dense_cnn = Cnn::dense(CnnConfig::paper(width, 3, 10, Init::UniformRandom, 0));
+    b.run("cnn fwd width-4 dense im2col (samples)", 8, || {
+        std::hint::black_box(dense_cnn.forward(&xin, false));
+    });
+
+    // --- AOT runtime overhead (needs artifacts)
+    match ArtifactManifest::load("artifacts") {
+        Ok(manifest) if manifest.complete() => {
+            // end-to-end train-step throughput (literal ping-pong path)
+            {
+                use sobolnet::coordinator::{AotTrainer, AotTrainerConfig};
+                let t = TopologyBuilder::new(&[784, 256, 256, 10])
+                    .paths(2048)
+                    .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+                    .build();
+                let cfg = AotTrainerConfig::default();
+                let mut trainer = AotTrainer::new(&cfg, &t).expect("artifacts");
+                let bsz = trainer.shapes.batch;
+                let x: Vec<f32> =
+                    (0..bsz * 784).map(|i| (i as f32 * 0.01).sin().abs()).collect();
+                let y: Vec<i32> = (0..bsz).map(|i| (i % 10) as i32).collect();
+                b.run("aot train_step (samples)", bsz, || {
+                    let loss = trainer.train_step(&x, &y, 0.05).expect("step");
+                    std::hint::black_box(loss);
+                });
+            }
+            let rt = Runtime::cpu().expect("pjrt");
+            let spec = manifest.find("path_layer_fwd").expect("kernel artifact");
+            let exe = rt.load_hlo_text(manifest.path_of(spec).to_str().unwrap()).expect("compile");
+            let batch = spec.meta.get("batch").unwrap().as_usize().unwrap();
+            let n_in = spec.meta.get("n_in").unwrap().as_usize().unwrap();
+            let paths = spec.meta.get("paths").unwrap().as_usize().unwrap();
+            let x: Vec<f32> = (0..batch * n_in).map(|i| (i as f32 * 0.01).sin()).collect();
+            let w: Vec<f32> = (0..paths).map(|i| (i as f32 * 0.1).cos()).collect();
+            let ii: Vec<i32> = (0..paths).map(|p| (p % n_in) as i32).collect();
+            let io: Vec<i32> = (0..paths).map(|p| (p % 256) as i32).collect();
+            b.run("pjrt path_layer_fwd execute (paths)", paths, || {
+                let out = exe
+                    .run(&[
+                        literal_f32(&x, &[batch, n_in]).unwrap(),
+                        literal_f32(&w, &[paths]).unwrap(),
+                        literal_i32(&ii, &[paths]).unwrap(),
+                        literal_i32(&io, &[paths]).unwrap(),
+                    ])
+                    .unwrap();
+                std::hint::black_box(out.len());
+            });
+        }
+        _ => println!("bench hotpath/pjrt: SKIPPED (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,41 @@
+//! Table 1 reproduction: test accuracy and loss of sparse networks
+//! created by the Sobol' sequence (skipping bad dimensions) with and
+//! without scrambling, for seeds {1174, 1741, 4117, 7141}, at 1024
+//! paths.  All runs share weights-at-init and a deterministic training
+//! order, so differences are purely due to the connectivity pattern.
+//!
+//! Paper shape: scrambling spreads accuracy over a few points; some
+//! scrambles beat the unscrambled sequence.
+
+use sobolnet::bench::exp;
+use sobolnet::bench::Table;
+use sobolnet::nn::cnn::{Cnn, CnnConfig};
+use sobolnet::nn::init::Init;
+use sobolnet::topology::{PathSource, TopologyBuilder};
+
+fn main() {
+    let budget = exp::Budget::cnn().apply_env();
+    let (tr, te) = exp::cifar_data(budget, 3);
+    let channel_sizes = exp::cnn_channel_sizes(1.0, 3);
+    let mut table = Table::new(
+        "Table 1 — scrambling seeds vs accuracy (sobol, skip bad dims, 1024 paths)",
+        &["scrambling seed", "nnz", "test acc", "test loss"],
+    );
+    for seed in [None, Some(1174u64), Some(1741), Some(4117), Some(7141)] {
+        let topo = TopologyBuilder::new(&channel_sizes)
+            .paths(1024)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: seed })
+            .build();
+        let cfg = CnnConfig::paper(1.0, 3, 10, Init::ConstantRandomSign, 0);
+        let (hist, nnz, _) = exp::run_cnn(Cnn::sparse(cfg, &topo, false), &tr, &te, budget.epochs);
+        table.row(&[
+            seed.map_or("not scrambled".to_string(), |s| s.to_string()),
+            nnz.to_string(),
+            format!("{:.2}%", hist.final_acc() * 100.0),
+            format!("{:.3}", hist.final_loss()),
+        ]);
+    }
+    table.print();
+    println!("\n(paper Table 1: 78.51% unscrambled; 77.73%–81.64% across seeds —");
+    println!(" connectivity alone moves accuracy by a few points)");
+}

@@ -1,0 +1,102 @@
+//! Table 3 reproduction: initialization strategies for dense vs sparse
+//! CNNs — uniformly random, constant positive, constant alternating,
+//! constant random sign (± the 90%-sparse dense variant), constant sign
+//! along path, and the fixed-sign magnitude-only training rows.
+//!
+//! Paper shape: constant init collapses DENSE nets to chance (identical
+//! neurons) but sparse nets train under every scheme; sign-along-path
+//! with 3×3 slices costs accuracy (can't express edge detectors);
+//! magnitude-only training lands within a few points.
+
+use sobolnet::bench::exp;
+use sobolnet::bench::Table;
+use sobolnet::nn::cnn::{Cnn, CnnConfig};
+use sobolnet::nn::init::Init;
+use sobolnet::nn::mlp::DenseMlp;
+use sobolnet::nn::trainer::train;
+use sobolnet::topology::{PathSource, SignPolicy, TopologyBuilder};
+
+fn main() {
+    let budget = exp::Budget::cnn().apply_env();
+    let (tr, te) = exp::cifar_data(budget, 13);
+    let channel_sizes = exp::cnn_channel_sizes(1.0, 3);
+    // The paper's Table 3 sparse CNN is built from RANDOM paths ("created
+    // by tracing 1024 paths"); random multiplicities also break the
+    // filter symmetry at the saturated first transition, which Sobol'
+    // near-uniform multiplicities would not.
+    let topo = TopologyBuilder::new(&channel_sizes)
+        .paths(1024)
+        .source(PathSource::Random { seed: 13 })
+        .sign_policy(SignPolicy::FirstHalfPositive)
+        .build();
+    let mut table = Table::new(
+        "Table 3 — initialization × dense/sparse CNN (synth-CIFAR)",
+        &["cnn", "initialization", "test acc"],
+    );
+    let mk_cfg = |init: Init, freeze: bool| CnnConfig {
+        freeze_signs: freeze,
+        ..CnnConfig::paper(1.0, 3, 10, init, 0)
+    };
+
+    // ---- dense rows
+    for init in [
+        Init::UniformRandom,
+        Init::ConstantPositive,
+        Init::ConstantAlternating,
+        Init::ConstantRandomSign,
+    ] {
+        let (hist, _, _) =
+            exp::run_cnn(Cnn::dense(mk_cfg(init, false)), &tr, &te, budget.epochs);
+        table.row(&["Dense".into(), init.label().into(), format!("{:.2}%", hist.final_acc() * 100.0)]);
+    }
+    // dense + 90% random unstructured sparsity (MLP-style mask on convs is
+    // not defined in the engine; the paper's row is about *random masks*
+    // making constant init viable — we reproduce it on the dense MLP head
+    // of the same budget class)
+    {
+        let (trf, tef) = exp::mnist_data(exp::Budget::mlp().apply_env(), 13);
+        let mut mlp = DenseMlp::new(&[784, 300, 300, 10], Init::ConstantRandomSign, 0);
+        mlp.randomly_sparsify(0.1, 7);
+        let hist = train(&mut mlp, &trf, &tef, &exp::mlp_train_config(budget.epochs));
+        table.row(&[
+            "Dense(MLP)".into(),
+            "Constant, random sign, 90% sparse".into(),
+            format!("{:.2}%", hist.final_acc() * 100.0),
+        ]);
+    }
+
+    // ---- sparse rows
+    for init in [
+        Init::UniformRandom,
+        Init::ConstantPositive,
+        Init::ConstantAlternating,
+        Init::ConstantRandomSign,
+        Init::ConstantSignAlongPath,
+    ] {
+        let sign_slices = init == Init::ConstantSignAlongPath;
+        let (hist, _, _) = exp::run_cnn(
+            Cnn::sparse(mk_cfg(init, false), &topo, sign_slices),
+            &tr,
+            &te,
+            budget.epochs,
+        );
+        table.row(&["Sparse".into(), init.label().into(), format!("{:.2}%", hist.final_acc() * 100.0)]);
+    }
+
+    // ---- fixed-sign, train-only-magnitude rows
+    for (label, init, sign_slices) in [
+        ("Constant, alternating sign, signs fixed", Init::ConstantAlternating, false),
+        ("Constant sign along path, signs fixed", Init::ConstantSignAlongPath, true),
+    ] {
+        let (hist, _, _) = exp::run_cnn(
+            Cnn::sparse(mk_cfg(init, true), &topo, sign_slices),
+            &tr,
+            &te,
+            budget.epochs,
+        );
+        table.row(&["Sparse".into(), label.into(), format!("{:.2}%", hist.final_acc() * 100.0)]);
+    }
+    table.print();
+    println!("\n(paper Table 3: dense constant/alternating ≈ 10% chance; sparse");
+    println!(" trains under every scheme; sign-per-3×3-slice costs the most)");
+}

@@ -1,0 +1,224 @@
+//! In-tree micro-benchmark harness (the `criterion` substrate) plus
+//! table formatting for the experiment benches.
+//!
+//! Design goals: warmup, multiple timed samples, mean ± CI and
+//! throughput reporting, and machine-greppable one-line results so
+//! `cargo bench | tee bench_output.txt` archives every table/figure.
+
+pub mod exp;
+
+use crate::util::stats::Welford;
+use crate::util::timer::Timer;
+use crate::util::{fmt_count, fmt_secs};
+
+/// A configured micro-benchmark runner.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    /// Benchmark group name (printed as prefix).
+    pub group: String,
+    /// Warmup iterations.
+    pub warmup: usize,
+    /// Timed samples.
+    pub samples: usize,
+    /// Minimum total measured time; samples are added until reached.
+    pub min_time_secs: f64,
+}
+
+impl Bench {
+    /// New runner with sensible defaults.
+    pub fn new(group: &str) -> Self {
+        Bench { group: group.to_string(), warmup: 3, samples: 10, min_time_secs: 0.2 }
+    }
+
+    /// Builder: warmup iterations.
+    pub fn warmup(mut self, w: usize) -> Self {
+        self.warmup = w;
+        self
+    }
+
+    /// Builder: sample count.
+    pub fn samples(mut self, s: usize) -> Self {
+        self.samples = s;
+        self
+    }
+
+    /// Run a closure repeatedly and report stats.  `work_units` scales
+    /// the throughput line (e.g. elements processed per call).
+    pub fn run<F: FnMut()>(&self, name: &str, work_units: usize, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut w = Welford::new();
+        let total = Timer::start();
+        let mut i = 0usize;
+        while i < self.samples || total.elapsed_secs() < self.min_time_secs {
+            let t = Timer::start();
+            f();
+            w.push(t.elapsed_secs());
+            i += 1;
+            if i > self.samples * 100 {
+                break; // pathological fast function; enough samples
+            }
+        }
+        let r = BenchResult {
+            group: self.group.clone(),
+            name: name.to_string(),
+            mean_secs: w.mean(),
+            ci95: w.ci95(),
+            min_secs: w.min(),
+            samples: w.count() as usize,
+            work_units,
+        };
+        println!("{r}");
+        r
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Group name.
+    pub group: String,
+    /// Case name.
+    pub name: String,
+    /// Mean seconds per call.
+    pub mean_secs: f64,
+    /// 95% CI half-width.
+    pub ci95: f64,
+    /// Fastest sample.
+    pub min_secs: f64,
+    /// Number of samples.
+    pub samples: usize,
+    /// Work units per call for throughput.
+    pub work_units: usize,
+}
+
+impl BenchResult {
+    /// Work units per second at the mean.
+    pub fn throughput(&self) -> f64 {
+        if self.mean_secs > 0.0 {
+            self.work_units as f64 / self.mean_secs
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bench {}/{}: {} ±{} (min {}, n={})",
+            self.group,
+            self.name,
+            fmt_secs(self.mean_secs),
+            fmt_secs(self.ci95),
+            fmt_secs(self.min_secs),
+            self.samples
+        )?;
+        if self.work_units > 0 {
+            write!(f, " | {}/s", fmt_count(self.throughput() as usize))?;
+        }
+        Ok(())
+    }
+}
+
+/// Simple aligned-column table printer for experiment outputs
+/// (the rows the paper's tables/figures report).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header count).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:w$} | "));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bench::new("test").warmup(1).samples(3);
+        let mut counter = 0u64;
+        let r = b.run("noop", 100, || {
+            counter += 1;
+        });
+        assert!(counter >= 4, "warmup + samples");
+        assert!(r.samples >= 3);
+        assert!(r.mean_secs >= 0.0);
+        assert!(r.throughput() > 0.0);
+        let s = format!("{r}");
+        assert!(s.contains("test/noop"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer-name".into(), "2.50".into()]);
+        let s = t.render();
+        assert!(s.contains("=== Demo ==="));
+        assert!(s.contains("longer-name"));
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[1].len(), lines[2].len(), "rows aligned");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_checks_width() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

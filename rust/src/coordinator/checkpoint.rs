@@ -1,0 +1,182 @@
+//! Checkpointing: save/restore the sparse model state (weights,
+//! momentum, topology index) in a small self-describing binary format:
+//!
+//! ```text
+//! magic "SBNC" | u32 version | u32 header_len | header JSON | blobs…
+//! ```
+//!
+//! The JSON header records blob names, dtypes, lengths and arbitrary
+//! metadata; blobs are raw little-endian arrays in header order.
+
+use crate::config::json::{self, JsonValue};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SBNC";
+const VERSION: u32 = 1;
+
+/// An in-memory checkpoint: named f32/i32 blobs plus metadata.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    /// f32 arrays by name.
+    pub f32s: BTreeMap<String, Vec<f32>>,
+    /// i32 arrays by name.
+    pub i32s: BTreeMap<String, Vec<i32>>,
+    /// Arbitrary metadata.
+    pub meta: BTreeMap<String, JsonValue>,
+}
+
+impl Checkpoint {
+    /// New empty checkpoint.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Serialize to a writer.
+    pub fn write_to<W: Write>(&self, mut w: W) -> std::io::Result<()> {
+        // header
+        let mut blobs = Vec::new();
+        for (name, data) in &self.f32s {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), JsonValue::String(name.clone()));
+            o.insert("dtype".into(), JsonValue::String("f32".into()));
+            o.insert("len".into(), JsonValue::Number(data.len() as f64));
+            blobs.push(JsonValue::Object(o));
+        }
+        for (name, data) in &self.i32s {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), JsonValue::String(name.clone()));
+            o.insert("dtype".into(), JsonValue::String("i32".into()));
+            o.insert("len".into(), JsonValue::Number(data.len() as f64));
+            blobs.push(JsonValue::Object(o));
+        }
+        let mut header = BTreeMap::new();
+        header.insert("blobs".into(), JsonValue::Array(blobs));
+        header.insert("meta".into(), JsonValue::Object(self.meta.clone()));
+        let header_text = JsonValue::Object(header).to_string_compact();
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(header_text.len() as u32).to_le_bytes())?;
+        w.write_all(header_text.as_bytes())?;
+        for data in self.f32s.values() {
+            for v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        for data in self.i32s.values() {
+            for v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Deserialize from a reader.
+    pub fn read_from<R: Read>(mut r: R) -> Result<Checkpoint, String> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).map_err(|e| e.to_string())?;
+        if &magic != MAGIC {
+            return Err("bad magic (not a sobolnet checkpoint)".into());
+        }
+        let mut buf4 = [0u8; 4];
+        r.read_exact(&mut buf4).map_err(|e| e.to_string())?;
+        let version = u32::from_le_bytes(buf4);
+        if version != VERSION {
+            return Err(format!("unsupported checkpoint version {version}"));
+        }
+        r.read_exact(&mut buf4).map_err(|e| e.to_string())?;
+        let hlen = u32::from_le_bytes(buf4) as usize;
+        let mut htext = vec![0u8; hlen];
+        r.read_exact(&mut htext).map_err(|e| e.to_string())?;
+        let header = json::parse(std::str::from_utf8(&htext).map_err(|e| e.to_string())?)?;
+        let mut ckpt = Checkpoint::new();
+        if let Some(JsonValue::Object(meta)) = header.get("meta") {
+            ckpt.meta = meta.clone();
+        }
+        let blobs = header.get("blobs").and_then(|b| b.as_array()).ok_or("missing blobs")?;
+        for b in blobs {
+            let name = b.get("name").and_then(|v| v.as_str()).ok_or("blob name")?.to_string();
+            let dtype = b.get("dtype").and_then(|v| v.as_str()).ok_or("blob dtype")?;
+            let len = b.get("len").and_then(|v| v.as_usize()).ok_or("blob len")?;
+            let mut raw = vec![0u8; len * 4];
+            r.read_exact(&mut raw).map_err(|e| format!("blob {name}: {e}"))?;
+            match dtype {
+                "f32" => {
+                    let data =
+                        raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+                    ckpt.f32s.insert(name, data);
+                }
+                "i32" => {
+                    let data =
+                        raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+                    ckpt.i32s.insert(name, data);
+                }
+                other => return Err(format!("unknown dtype {other}")),
+            }
+        }
+        Ok(ckpt)
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        self.write_to(std::io::BufWriter::new(f))
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Checkpoint, String> {
+        let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::read_from(std::io::BufReader::new(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let mut c = Checkpoint::new();
+        c.f32s.insert("w".into(), vec![1.5, -2.25, 0.0]);
+        c.f32s.insert("m".into(), vec![0.125; 8]);
+        c.i32s.insert("idx".into(), vec![3, -1, 700000]);
+        c.meta.insert("paths".into(), JsonValue::Number(1024.0));
+        c.meta.insert("source".into(), JsonValue::String("sobol".into()));
+        let mut buf = Vec::new();
+        c.write_to(&mut buf).unwrap();
+        let back = Checkpoint::read_from(buf.as_slice()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("sobolnet_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        let mut c = Checkpoint::new();
+        c.f32s.insert("w".into(), (0..100).map(|i| i as f32 * 0.5).collect());
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.f32s["w"].len(), 100);
+        assert_eq!(back.f32s["w"][7], 3.5);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Checkpoint::read_from(&b"NOPE...."[..]).is_err());
+        let mut buf = Vec::new();
+        Checkpoint::new().write_to(&mut buf).unwrap();
+        buf[4] = 99; // corrupt version
+        assert!(Checkpoint::read_from(buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn empty_checkpoint_roundtrips() {
+        let c = Checkpoint::new();
+        let mut buf = Vec::new();
+        c.write_to(&mut buf).unwrap();
+        assert_eq!(Checkpoint::read_from(buf.as_slice()).unwrap(), c);
+    }
+}

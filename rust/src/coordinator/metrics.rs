@@ -1,0 +1,103 @@
+//! Lightweight metrics: counters and latency histograms for the
+//! inference server and training driver.
+
+use crate::util::stats::latency_percentiles;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metrics registry (cheap to clone via `Arc`).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted.
+    pub requests: AtomicU64,
+    /// Requests completed.
+    pub completed: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    /// Total samples padded into batches (wasted slots).
+    pub padded_slots: AtomicU64,
+    latencies: Mutex<Vec<f64>>,
+    batch_sizes: Mutex<Vec<usize>>,
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed request with its end-to-end latency.
+    pub fn record_latency(&self, secs: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latencies.lock().unwrap().push(secs);
+    }
+
+    /// Record an executed batch (`used` real samples of `capacity`).
+    pub fn record_batch(&self, used: usize, capacity: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_slots.fetch_add((capacity - used) as u64, Ordering::Relaxed);
+        self.batch_sizes.lock().unwrap().push(used);
+    }
+
+    /// Latency percentiles `(p50, p90, p99)` in seconds.
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        let l = self.latencies.lock().unwrap();
+        latency_percentiles(&l)
+    }
+
+    /// Mean executed batch occupancy.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batch_sizes.lock().unwrap();
+        if b.is_empty() {
+            0.0
+        } else {
+            b.iter().sum::<usize>() as f64 / b.len() as f64
+        }
+    }
+
+    /// Human-readable summary line.
+    pub fn summary(&self) -> String {
+        let (p50, p90, p99) = self.latency_percentiles();
+        format!(
+            "requests={} completed={} batches={} mean_batch={:.1} p50={:.3}ms p90={:.3}ms p99={:.3}ms",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            p50 * 1e3,
+            p90 * 1e3,
+            p99 * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record_latency(0.010);
+        m.record_latency(0.020);
+        m.record_batch(2, 4);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.padded_slots.load(Ordering::Relaxed), 2);
+        let (p50, _, p99) = m.latency_percentiles();
+        assert!(p50 >= 0.010 && p99 <= 0.020 + 1e-9);
+        assert_eq!(m.mean_batch_size(), 2.0);
+        let s = m.summary();
+        assert!(s.contains("requests=3"));
+        assert!(s.contains("batches=1"));
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let m = Metrics::new();
+        let (p50, _, _) = m.latency_percentiles();
+        assert!(p50.is_nan());
+        assert_eq!(m.mean_batch_size(), 0.0);
+        let _ = m.summary();
+    }
+}

@@ -1,0 +1,16 @@
+//! Layer-3 coordinator: process lifecycle, training orchestration over
+//! the AOT runtime, the inference server (request router + dynamic
+//! batcher + worker pool), metrics and checkpoints.
+//!
+//! Rust owns the event loop; the compiled HLO artifacts (JAX+Pallas,
+//! lowered once at build time) are the only compute the request path
+//! touches.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod server;
+pub mod train;
+
+pub use metrics::Metrics;
+pub use server::{InferenceBackend, InferenceServer, ServerConfig};
+pub use train::{AotTrainer, AotTrainerConfig};

@@ -1,0 +1,296 @@
+//! AOT training driver: owns the parameter state and ping-pongs it
+//! through the compiled `sparse_train_step` HLO (JAX fwd/bwd + SGD
+//! update, with the Pallas path-layer kernels inside), entirely from
+//! rust.
+//!
+//! Artifact contract (see `python/compile/aot.py`):
+//!
+//! ```text
+//! sparse_train_step(w[T,P], m[T,P], idx[L,P]i32, x[B,F], y[B]i32, lr[])
+//!     -> (w'[T,P], m'[T,P], loss[])
+//! sparse_forward(w[T,P], idx[L,P]i32, x[B,F]) -> logits[B,C]
+//! ```
+//!
+//! The topology `idx` is a *runtime input*: the same compiled artifact
+//! serves Sobol', scrambled and PRNG topologies generated on the rust
+//! side — the coordinator decides the connectivity, the artifact only
+//! fixes shapes.
+
+use super::server::InferenceBackend;
+use crate::nn::init::{w_init_magnitude, Init};
+use crate::runtime::client::{literal_f32, literal_i32, to_scalar_f32, to_vec_f32};
+use crate::runtime::{ArtifactManifest, Executable, Runtime};
+use crate::topology::PathTopology;
+use anyhow::{Context, Result};
+
+/// Configuration of the AOT trainer.
+#[derive(Debug, Clone)]
+pub struct AotTrainerConfig {
+    /// Directory containing `manifest.json` and the HLO artifacts.
+    pub artifacts_dir: String,
+    /// Initialization scheme for the path weights.
+    pub init: Init,
+    /// Seed for random init schemes.
+    pub seed: u64,
+}
+
+impl Default for AotTrainerConfig {
+    fn default() -> Self {
+        AotTrainerConfig { artifacts_dir: "artifacts".into(), init: Init::ConstantRandomSign, seed: 0 }
+    }
+}
+
+/// Static shape info baked into the artifacts, parsed from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AotShapes {
+    /// Layer sizes (input first).
+    pub layer_sizes: Vec<usize>,
+    /// Paths per transition.
+    pub paths: usize,
+    /// Training batch size.
+    pub batch: usize,
+    /// Transitions = layers − 1.
+    pub transitions: usize,
+    /// Classes.
+    pub classes: usize,
+    /// Input features.
+    pub features: usize,
+}
+
+impl AotShapes {
+    fn from_manifest(m: &ArtifactManifest) -> Result<AotShapes> {
+        let spec = m
+            .find("sparse_train_step")
+            .context("manifest lacks sparse_train_step (re-run `make artifacts`)")?;
+        let meta = &spec.meta;
+        let layer_sizes: Vec<usize> = meta
+            .get("layer_sizes")
+            .and_then(|v| v.as_array())
+            .context("meta.layer_sizes")?
+            .iter()
+            .map(|v| v.as_usize().context("layer size"))
+            .collect::<Result<_>>()?;
+        let paths = meta.get("paths").and_then(|v| v.as_usize()).context("meta.paths")?;
+        let batch = meta.get("batch").and_then(|v| v.as_usize()).context("meta.batch")?;
+        Ok(AotShapes {
+            transitions: layer_sizes.len() - 1,
+            classes: *layer_sizes.last().unwrap(),
+            features: layer_sizes[0],
+            layer_sizes,
+            paths,
+            batch,
+        })
+    }
+}
+
+/// Trains the path-sparse MLP by repeatedly executing the AOT step.
+///
+/// Hot-path note (EXPERIMENTS.md §Perf): parameters and momentum live
+/// as PJRT **literals** between steps — the step's tuple outputs become
+/// the next step's inputs directly, with no literal→Vec→literal
+/// round-trip; the topology literal is built once.
+pub struct AotTrainer {
+    #[allow(dead_code)]
+    rt: Runtime,
+    step_exe: Executable,
+    fwd_exe: Executable,
+    /// Shapes baked into the artifacts.
+    pub shapes: AotShapes,
+    w_lit: xla::Literal,
+    m_lit: xla::Literal,
+    idx_lit: xla::Literal,
+    /// Topology index `[L·P]` as i32 (host copy, for checkpointing).
+    pub idx: Vec<i32>,
+    /// Steps executed.
+    pub steps: usize,
+}
+
+impl AotTrainer {
+    /// Load artifacts, validate the topology against the baked shapes,
+    /// and initialize parameters.
+    pub fn new(cfg: &AotTrainerConfig, topo: &PathTopology) -> Result<AotTrainer> {
+        let manifest = ArtifactManifest::load(&cfg.artifacts_dir)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let shapes = AotShapes::from_manifest(&manifest)?;
+        anyhow::ensure!(
+            topo.layer_sizes == shapes.layer_sizes,
+            "topology layers {:?} != artifact layers {:?}",
+            topo.layer_sizes,
+            shapes.layer_sizes
+        );
+        anyhow::ensure!(
+            topo.paths == shapes.paths,
+            "topology paths {} != artifact paths {}",
+            topo.paths,
+            shapes.paths
+        );
+        let rt = Runtime::cpu()?;
+        let step_spec = manifest.find("sparse_train_step").unwrap();
+        let fwd_spec = manifest.find("sparse_forward").context("manifest lacks sparse_forward")?;
+        let step_exe = rt.load_hlo_text(manifest.path_of(step_spec).to_str().unwrap())?;
+        let fwd_exe = rt.load_hlo_text(manifest.path_of(fwd_spec).to_str().unwrap())?;
+
+        // weights: per-transition magnitude from average valence
+        let t_cnt = shapes.transitions;
+        let p = shapes.paths;
+        let mut w = vec![0.0f32; t_cnt * p];
+        for t in 0..t_cnt {
+            let fan_in = (p as f32 / shapes.layer_sizes[t + 1] as f32).max(1.0) as usize;
+            let fan_out = (p as f32 / shapes.layer_sizes[t] as f32).max(1.0) as usize;
+            let mag = w_init_magnitude(fan_in, fan_out);
+            cfg.init.fill(
+                &mut w[t * p..(t + 1) * p],
+                mag,
+                topo.signs.as_deref(),
+                cfg.seed ^ (t as u64) << 17,
+            );
+        }
+        let idx: Vec<i32> =
+            topo.index.iter().flat_map(|layer| layer.iter().map(|&v| v as i32)).collect();
+        let w_lit = literal_f32(&w, &[shapes.transitions, shapes.paths])?;
+        let m_lit = literal_f32(&vec![0.0; w.len()], &[shapes.transitions, shapes.paths])?;
+        let idx_lit = literal_i32(&idx, &[shapes.layer_sizes.len(), shapes.paths])?;
+        Ok(AotTrainer { rt, step_exe, fwd_exe, w_lit, m_lit, idx_lit, idx, shapes, steps: 0 })
+    }
+
+    /// Host copy of the current weights `[T·P]`.
+    pub fn weights(&self) -> Result<Vec<f32>> {
+        to_vec_f32(&self.w_lit)
+    }
+
+    /// Host copy of the momentum buffer `[T·P]`.
+    pub fn momentum(&self) -> Result<Vec<f32>> {
+        to_vec_f32(&self.m_lit)
+    }
+
+    /// Install weights (e.g. restored from a checkpoint).
+    pub fn set_weights(&mut self, w: &[f32]) -> Result<()> {
+        let s = &self.shapes;
+        anyhow::ensure!(w.len() == s.transitions * s.paths, "weight shape");
+        self.w_lit = literal_f32(w, &[s.transitions, s.paths])?;
+        Ok(())
+    }
+
+    /// Execute one SGD step on a `[batch × features]` batch.  Returns
+    /// the batch loss.
+    pub fn train_step(&mut self, x: &[f32], y: &[i32], lr: f32) -> Result<f32> {
+        let s = &self.shapes;
+        anyhow::ensure!(x.len() == s.batch * s.features, "x shape");
+        anyhow::ensure!(y.len() == s.batch, "y shape");
+        let x_lit = literal_f32(x, &[s.batch, s.features])?;
+        let y_lit = literal_i32(y, &[s.batch])?;
+        let lr_lit = literal_f32(&[lr], &[])?;
+        let inputs = [&self.w_lit, &self.m_lit, &self.idx_lit, &x_lit, &y_lit, &lr_lit];
+        let mut out = self.step_exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 3, "train_step must return (w, m, loss)");
+        let loss = to_scalar_f32(&out[2])?;
+        self.m_lit = out.swap_remove(1);
+        self.w_lit = out.swap_remove(0);
+        self.steps += 1;
+        Ok(loss)
+    }
+
+    /// Forward pass on a full `[batch × features]` buffer.
+    pub fn forward(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let s = &self.shapes;
+        anyhow::ensure!(x.len() == s.batch * s.features, "x shape");
+        let x_lit = literal_f32(x, &[s.batch, s.features])?;
+        let inputs = [&self.w_lit, &self.idx_lit, &x_lit];
+        let out = self.fwd_exe.run(&inputs)?;
+        to_vec_f32(&out[0])
+    }
+
+    /// Evaluate accuracy over a dataset (runs ⌈n/batch⌉ padded batches).
+    pub fn evaluate(&self, xs: &[f32], ys: &[i32]) -> Result<f64> {
+        let s = &self.shapes;
+        let n = ys.len();
+        anyhow::ensure!(xs.len() == n * s.features, "xs shape");
+        let mut correct = 0usize;
+        let mut xbuf = vec![0.0f32; s.batch * s.features];
+        let mut i = 0usize;
+        while i < n {
+            let take = (n - i).min(s.batch);
+            xbuf.iter_mut().for_each(|v| *v = 0.0);
+            xbuf[..take * s.features]
+                .copy_from_slice(&xs[i * s.features..(i + take) * s.features]);
+            let logits = self.forward(&xbuf)?;
+            for k in 0..take {
+                let row = &logits[k * s.classes..(k + 1) * s.classes];
+                let mut best = 0usize;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                if best as i32 == ys[i + k] {
+                    correct += 1;
+                }
+            }
+            i += take;
+        }
+        Ok(correct as f64 / n as f64)
+    }
+
+    /// Wrap the forward executable as a serving backend (weights are
+    /// snapshot at call time).
+    pub fn into_backend(self) -> AotForward {
+        AotForward { trainer: self }
+    }
+}
+
+/// Serving adapter over a trained [`AotTrainer`].
+pub struct AotForward {
+    trainer: AotTrainer,
+}
+
+impl InferenceBackend for AotForward {
+    fn batch_capacity(&self) -> usize {
+        self.trainer.shapes.batch
+    }
+
+    fn features(&self) -> usize {
+        self.trainer.shapes.features
+    }
+
+    fn classes(&self) -> usize {
+        self.trainer.shapes.classes
+    }
+
+    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
+        self.trainer.forward(x).expect("AOT forward")
+    }
+}
+
+// Integration tests (require `make artifacts`) live in
+// rust/tests/aot_integration.rs; shape-parsing tests below run always.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn shapes_from_manifest_meta() {
+        let manifest = ArtifactManifest::parse(
+            r#"{"artifacts": [{
+                "name": "sparse_train_step",
+                "file": "x.hlo.txt",
+                "inputs": [], "outputs": [],
+                "meta": {"layer_sizes": [784, 256, 256, 10], "paths": 2048, "batch": 64}
+            }]}"#,
+            PathBuf::from("."),
+        )
+        .unwrap();
+        let s = AotShapes::from_manifest(&manifest).unwrap();
+        assert_eq!(s.transitions, 3);
+        assert_eq!(s.features, 784);
+        assert_eq!(s.classes, 10);
+        assert_eq!(s.paths, 2048);
+        assert_eq!(s.batch, 64);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let manifest = ArtifactManifest::parse(r#"{"artifacts": []}"#, PathBuf::from(".")).unwrap();
+        assert!(AotShapes::from_manifest(&manifest).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Normalization and training-time augmentation (paper §5.2: mean/std
+//! normalization over the training set, random horizontal flips, and
+//! 4-pixel pad + random crop).
+
+use super::ClassificationData;
+use crate::nn::tensor::Tensor;
+use crate::rng::{Pcg32, Rng};
+
+/// Per-channel mean/std statistics.
+#[derive(Debug, Clone)]
+pub struct ChannelStats {
+    /// Mean per channel.
+    pub mean: Vec<f32>,
+    /// Std per channel.
+    pub std: Vec<f32>,
+}
+
+/// Compute per-channel statistics of a `[N, C, H, W]` dataset.
+pub fn channel_stats(d: &ClassificationData) -> ChannelStats {
+    assert_eq!(d.x.shape.len(), 4, "channel stats need [N,C,H,W]");
+    let (n, c) = (d.x.shape[0], d.x.shape[1]);
+    let hw: usize = d.x.shape[2..].iter().product();
+    let mut mean = vec![0.0f64; c];
+    let mut var = vec![0.0f64; c];
+    for i in 0..n {
+        for ch in 0..c {
+            let base = (i * c + ch) * hw;
+            for k in 0..hw {
+                mean[ch] += d.x.data[base + k] as f64;
+            }
+        }
+    }
+    let cnt = (n * hw) as f64;
+    for m in &mut mean {
+        *m /= cnt;
+    }
+    for i in 0..n {
+        for ch in 0..c {
+            let base = (i * c + ch) * hw;
+            for k in 0..hw {
+                let dlt = d.x.data[base + k] as f64 - mean[ch];
+                var[ch] += dlt * dlt;
+            }
+        }
+    }
+    ChannelStats {
+        mean: mean.iter().map(|&m| m as f32).collect(),
+        std: var.iter().map(|&v| ((v / cnt).sqrt().max(1e-6)) as f32).collect(),
+    }
+}
+
+/// Normalize in place with the given statistics.
+pub fn normalize(d: &mut ClassificationData, stats: &ChannelStats) {
+    let (n, c) = (d.x.shape[0], d.x.shape[1]);
+    let hw: usize = d.x.shape[2..].iter().product();
+    for i in 0..n {
+        for ch in 0..c {
+            let base = (i * c + ch) * hw;
+            for k in 0..hw {
+                d.x.data[base + k] = (d.x.data[base + k] - stats.mean[ch]) / stats.std[ch];
+            }
+        }
+    }
+}
+
+/// Normalize train and test with the *training* statistics (paper §5.2).
+pub fn normalize_pair(train: &mut ClassificationData, test: &mut ClassificationData) {
+    let stats = channel_stats(train);
+    normalize(train, &stats);
+    normalize(test, &stats);
+}
+
+/// Random horizontal flip + pad-`pad`/random-crop of a batch, in place.
+/// Applied per sample with probability ½ for the flip.
+pub fn augment_batch(x: &mut Tensor, pad: usize, rng: &mut Pcg32) {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut scratch = vec![0.0f32; c * h * w];
+    for bi in 0..b {
+        let flip = rng.next_u32() & 1 == 1;
+        let dy = rng.next_below((2 * pad + 1) as u32) as isize - pad as isize;
+        let dx = rng.next_below((2 * pad + 1) as u32) as isize - pad as isize;
+        let img = &mut x.data[bi * c * h * w..(bi + 1) * c * h * w];
+        scratch.copy_from_slice(img);
+        for ch in 0..c {
+            for y in 0..h {
+                for xx in 0..w {
+                    let sx0 = if flip { w - 1 - xx } else { xx };
+                    let sy = y as isize + dy;
+                    let sx = sx0 as isize + dx;
+                    let v = if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                        scratch[ch * h * w + sy as usize * w + sx as usize]
+                    } else {
+                        0.0
+                    };
+                    img[ch * h * w + y * w + xx] = v;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ClassificationData {
+        ClassificationData {
+            x: Tensor::from_vec((0..32).map(|v| v as f32 / 31.0).collect(), &[2, 2, 2, 4]),
+            y: vec![0, 1],
+            classes: 2,
+        }
+    }
+
+    #[test]
+    fn normalization_zero_mean_unit_std() {
+        let mut d = toy();
+        let stats = channel_stats(&d);
+        normalize(&mut d, &stats);
+        let after = channel_stats(&d);
+        for ch in 0..2 {
+            assert!(after.mean[ch].abs() < 1e-5);
+            assert!((after.std[ch] - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pair_uses_train_stats() {
+        let mut tr = toy();
+        let mut te = toy();
+        te.x.scale(2.0);
+        normalize_pair(&mut tr, &mut te);
+        let tr_stats = channel_stats(&tr);
+        let te_stats = channel_stats(&te);
+        assert!(tr_stats.mean[0].abs() < 1e-5);
+        // test normalized with train stats — its mean need not be zero
+        assert!(te_stats.mean[0].abs() > 0.1);
+    }
+
+    #[test]
+    fn augment_preserves_shape_and_determinism() {
+        let mut a = Tensor::from_vec((0..48).map(|v| v as f32).collect(), &[1, 3, 4, 4]);
+        let mut b = a.clone();
+        let mut r1 = Pcg32::seeded(5);
+        let mut r2 = Pcg32::seeded(5);
+        augment_batch(&mut a, 1, &mut r1);
+        augment_batch(&mut b, 1, &mut r2);
+        assert_eq!(a.data, b.data, "same seed same augmentation");
+        assert_eq!(a.shape, vec![1, 3, 4, 4]);
+    }
+
+    #[test]
+    fn flip_only_mirrors() {
+        // find a seed whose first sample flips with zero shift: then row
+        // content is mirrored
+        for seed in 0..64 {
+            let mut rng = Pcg32::seeded(seed);
+            let flip = rng.next_u32() & 1 == 1;
+            let dy = rng.next_below(1) as isize;
+            let dx = rng.next_below(1) as isize;
+            if flip && dy == 0 && dx == 0 {
+                let mut t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[1, 1, 1, 4]);
+                let mut rng = Pcg32::seeded(seed);
+                augment_batch(&mut t, 0, &mut rng);
+                assert_eq!(t.data, vec![4.0, 3.0, 2.0, 1.0]);
+                return;
+            }
+        }
+        panic!("no pure-flip seed found in 64 tries (improbable)");
+    }
+}

@@ -1,0 +1,124 @@
+//! Datasets and batching.
+//!
+//! The paper evaluates on MNIST, Fashion-MNIST and CIFAR-10.  This image
+//! has no network access, so [`synth`] provides deterministic synthetic
+//! stand-ins with the same tensor shapes and class counts (see DESIGN.md
+//! §Substitutions); [`augment`] implements the paper's augmentation
+//! (random horizontal flips, pad-4 + crop) and mean/std normalization.
+
+pub mod augment;
+pub mod synth;
+
+use crate::nn::tensor::Tensor;
+use crate::rng::{Pcg32, Rng};
+
+/// A labelled classification dataset held in memory.
+#[derive(Debug, Clone)]
+pub struct ClassificationData {
+    /// Inputs `[N, …]` (e.g. `[N, 784]` or `[N, 3, H, W]`).
+    pub x: Tensor,
+    /// Labels, one per row.
+    pub y: Vec<u32>,
+    /// Number of classes.
+    pub classes: usize,
+}
+
+impl ClassificationData {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Features per sample.
+    pub fn features(&self) -> usize {
+        self.x.features()
+    }
+
+    /// Copy a batch given sample indices.
+    pub fn gather(&self, idx: &[usize]) -> (Tensor, Vec<u32>) {
+        let f = self.features();
+        let mut shape = self.x.shape.clone();
+        shape[0] = idx.len();
+        let mut x = Tensor::zeros(&shape);
+        let mut y = Vec::with_capacity(idx.len());
+        for (k, &i) in idx.iter().enumerate() {
+            x.data[k * f..(k + 1) * f].copy_from_slice(&self.x.data[i * f..(i + 1) * f]);
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+
+    /// Shuffled epoch order.
+    pub fn epoch_order(&self, seed: u64) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.len()).collect();
+        let mut rng = Pcg32::seeded(seed);
+        rng.shuffle(&mut order);
+        order
+    }
+
+    /// Iterate over batches of a given order.
+    pub fn batches<'a>(
+        &'a self,
+        order: &'a [usize],
+        batch_size: usize,
+    ) -> impl Iterator<Item = (Tensor, Vec<u32>)> + 'a {
+        order.chunks(batch_size).map(move |chunk| self.gather(chunk))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ClassificationData {
+        ClassificationData {
+            x: Tensor::from_vec((0..20).map(|v| v as f32).collect(), &[10, 2]),
+            y: (0..10).map(|v| (v % 3) as u32).collect(),
+            classes: 3,
+        }
+    }
+
+    #[test]
+    fn gather_preserves_rows() {
+        let d = toy();
+        let (x, y) = d.gather(&[3, 0, 7]);
+        assert_eq!(x.shape, vec![3, 2]);
+        assert_eq!(x.row(0), &[6.0, 7.0]);
+        assert_eq!(x.row(1), &[0.0, 1.0]);
+        assert_eq!(y, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn epoch_order_is_permutation() {
+        let d = toy();
+        let order = d.epoch_order(3);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batch_iteration_covers_all() {
+        let d = toy();
+        let order = d.epoch_order(1);
+        let mut count = 0;
+        for (x, y) in d.batches(&order, 4) {
+            assert_eq!(x.batch(), y.len());
+            count += y.len();
+        }
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn keeps_nd_shape() {
+        let d =
+            ClassificationData { x: Tensor::zeros(&[4, 3, 2, 2]), y: vec![0; 4], classes: 2 };
+        let (x, _) = d.gather(&[0, 1]);
+        assert_eq!(x.shape, vec![2, 3, 2, 2]);
+    }
+}

@@ -1,0 +1,304 @@
+//! Deterministic synthetic image-classification datasets — stand-ins
+//! for MNIST / Fashion-MNIST / CIFAR-10 (no network access in this
+//! environment; see DESIGN.md §Substitutions).
+//!
+//! Each class is defined by a deterministic template (a sum of random
+//! Gaussian blobs plus an oriented grating, seeded by the class id);
+//! samples are translated, brightness-jittered, noisy renderings of
+//! their class template.  The tasks preserve what the paper's
+//! experiments measure: a dense network clearly beats chance, capacity
+//! matters, and relative orderings between topologies/initializations
+//! are meaningful.
+
+use super::ClassificationData;
+use crate::nn::tensor::Tensor;
+use crate::rng::{Pcg32, Rng};
+
+/// Which synthetic dataset family to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthKind {
+    /// 28×28×1, digit-like blobs, mild noise (MNIST stand-in).
+    Mnist,
+    /// 28×28×1, stripier templates, more noise (Fashion stand-in).
+    Fashion,
+    /// `hw`׍`hw`×3, colored blob+grating templates (CIFAR stand-in).
+    Cifar,
+}
+
+/// Generator parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthConfig {
+    /// Dataset family.
+    pub kind: SynthKind,
+    /// Image side length (28 for MNIST/Fashion; CIFAR default 16 to keep
+    /// the sweep benches fast — the paper's 32 is available).
+    pub hw: usize,
+    /// Number of classes.
+    pub classes: usize,
+    /// Additive noise σ.
+    pub noise: f32,
+    /// Max translation jitter in pixels.
+    pub jitter: usize,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl SynthConfig {
+    /// MNIST-like defaults (noise/jitter tuned so sparse nets below a
+    /// few hundred paths sit visibly under the dense ceiling — the
+    /// Fig 7 ramp).
+    pub fn mnist(seed: u64) -> Self {
+        SynthConfig { kind: SynthKind::Mnist, hw: 28, classes: 10, noise: 0.22, jitter: 3, seed }
+    }
+
+    /// Fashion-MNIST-like defaults (harder than MNIST, as in the paper).
+    pub fn fashion(seed: u64) -> Self {
+        SynthConfig { kind: SynthKind::Fashion, hw: 28, classes: 10, noise: 0.30, jitter: 3, seed }
+    }
+
+    /// CIFAR-10-like defaults (16×16×3 for bench speed).  Noisier and
+    /// with confusable classes (templates share a common base) so CNNs
+    /// do not saturate within the reduced budgets — keeping the Fig
+    /// 8/10 and Table 1–3 orderings visible.
+    pub fn cifar(seed: u64) -> Self {
+        SynthConfig { kind: SynthKind::Cifar, hw: 16, classes: 10, noise: 0.35, jitter: 3, seed }
+    }
+
+    /// Channels for the family.
+    pub fn channels(&self) -> usize {
+        match self.kind {
+            SynthKind::Cifar => 3,
+            _ => 1,
+        }
+    }
+}
+
+/// Class template: per channel, a dense `hw×hw` image in [0,1].
+fn class_template(cfg: &SynthConfig, class: usize) -> Vec<f32> {
+    let raw = class_template_raw(cfg, class as u64 + 1, class);
+    if cfg.kind != SynthKind::Cifar {
+        return raw;
+    }
+    // CIFAR-like classes share a common base pattern (natural images all
+    // contain sky/ground/texture); only part of the signal is
+    // class-specific, which keeps the task from saturating instantly.
+    let base = class_template_raw(cfg, 0xBA5E, 0);
+    raw.iter().zip(&base).map(|(r, b)| 0.55 * r + 0.45 * b).collect()
+}
+
+fn class_template_raw(cfg: &SynthConfig, stream: u64, class: usize) -> Vec<f32> {
+    let c = cfg.channels();
+    let hw = cfg.hw;
+    let mut rng = Pcg32::new(cfg.seed ^ 0xC1A55, stream);
+    let mut img = vec![0.0f32; c * hw * hw];
+    let blobs = match cfg.kind {
+        SynthKind::Mnist => 3,
+        SynthKind::Fashion => 5,
+        SynthKind::Cifar => 4,
+    };
+    for ch in 0..c {
+        // Gaussian blobs
+        for _ in 0..blobs {
+            let cx = rng.next_f32() * hw as f32;
+            let cy = rng.next_f32() * hw as f32;
+            let sx = 1.5 + rng.next_f32() * (hw as f32 / 6.0);
+            let sy = 1.5 + rng.next_f32() * (hw as f32 / 6.0);
+            let amp = 0.5 + rng.next_f32() * 0.5;
+            for y in 0..hw {
+                for x in 0..hw {
+                    let dx = (x as f32 - cx) / sx;
+                    let dy = (y as f32 - cy) / sy;
+                    img[ch * hw * hw + y * hw + x] += amp * (-0.5 * (dx * dx + dy * dy)).exp();
+                }
+            }
+        }
+        // oriented grating (orientation + frequency keyed by class)
+        let theta = class as f32 * std::f32::consts::PI / cfg.classes as f32;
+        let freq = match cfg.kind {
+            SynthKind::Mnist => 0.0, // pure blobs
+            SynthKind::Fashion => 0.55,
+            SynthKind::Cifar => 0.45 + 0.1 * ch as f32,
+        };
+        if freq > 0.0 {
+            let (s, co) = theta.sin_cos();
+            let phase = rng.next_f32() * std::f32::consts::TAU;
+            for y in 0..hw {
+                for x in 0..hw {
+                    let u = co * x as f32 + s * y as f32;
+                    img[ch * hw * hw + y * hw + x] += 0.35 * (freq * u + phase).sin();
+                }
+            }
+        }
+    }
+    // normalize template to [0,1]
+    let mn = img.iter().cloned().fold(f32::INFINITY, f32::min);
+    let mx = img.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let range = (mx - mn).max(1e-6);
+    for v in &mut img {
+        *v = (*v - mn) / range;
+    }
+    img
+}
+
+/// Render one sample of a class: translate + brightness jitter + noise.
+fn render_sample(cfg: &SynthConfig, template: &[f32], rng: &mut Pcg32) -> Vec<f32> {
+    let c = cfg.channels();
+    let hw = cfg.hw;
+    let j = cfg.jitter as i32;
+    let dx = rng.next_below((2 * j + 1) as u32) as i32 - j;
+    let dy = rng.next_below((2 * j + 1) as u32) as i32 - j;
+    let gain = 0.8 + rng.next_f32() * 0.4;
+    let mut img = vec![0.0f32; c * hw * hw];
+    for ch in 0..c {
+        for y in 0..hw {
+            for x in 0..hw {
+                let sx = x as i32 - dx;
+                let sy = y as i32 - dy;
+                let v = if sx >= 0 && sx < hw as i32 && sy >= 0 && sy < hw as i32 {
+                    template[ch * hw * hw + sy as usize * hw + sx as usize]
+                } else {
+                    0.0
+                };
+                let noise = (rng.next_f32() - 0.5) * 2.0 * cfg.noise;
+                img[ch * hw * hw + y * hw + x] = (v * gain + noise).clamp(0.0, 1.0);
+            }
+        }
+    }
+    img
+}
+
+/// Generate `n` samples.  Returns flat images `[N, C, H, W]` (C=1 kept
+/// as a real dim so CNNs and MLPs share data via reshape).
+pub fn generate(cfg: &SynthConfig, n: usize, split_seed: u64) -> ClassificationData {
+    let c = cfg.channels();
+    let hw = cfg.hw;
+    let templates: Vec<Vec<f32>> = (0..cfg.classes).map(|k| class_template(cfg, k)).collect();
+    let mut rng = Pcg32::new(cfg.seed ^ split_seed, 77);
+    let mut x = Tensor::zeros(&[n, c, hw, hw]);
+    let mut y = Vec::with_capacity(n);
+    let f = c * hw * hw;
+    for i in 0..n {
+        let cls = rng.next_below(cfg.classes as u32);
+        let img = render_sample(cfg, &templates[cls as usize], &mut rng);
+        x.data[i * f..(i + 1) * f].copy_from_slice(&img);
+        y.push(cls);
+    }
+    ClassificationData { x, y, classes: cfg.classes }
+}
+
+/// Convenience: train/test pair with disjoint sample streams.
+pub fn train_test(cfg: &SynthConfig, n_train: usize, n_test: usize) -> (ClassificationData, ClassificationData) {
+    (generate(cfg, n_train, 0x7EA1), generate(cfg, n_test, 0x7E57))
+}
+
+/// Flattened (`[N, C·H·W]`) copy for MLP consumption.
+pub fn flatten(d: &ClassificationData) -> ClassificationData {
+    ClassificationData {
+        x: d.x.clone().reshape(&[d.len(), d.features()]),
+        y: d.y.clone(),
+        classes: d.classes,
+    }
+}
+
+/// MNIST-like train/test pair, flattened, normalized.
+pub struct SynthMnist;
+
+impl SynthMnist {
+    /// `(train, test)` of the given sizes, flattened and normalized.
+    pub fn new(n_train: usize, n_test: usize, seed: u64) -> (ClassificationData, ClassificationData) {
+        let cfg = SynthConfig::mnist(seed);
+        let (mut tr, mut te) = train_test(&cfg, n_train, n_test);
+        super::augment::normalize_pair(&mut tr, &mut te);
+        (flatten(&tr), flatten(&te))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn shapes_and_ranges() {
+        for cfg in [SynthConfig::mnist(1), SynthConfig::fashion(1), SynthConfig::cifar(1)] {
+            let d = generate(&cfg, 32, 0);
+            assert_eq!(d.x.shape, vec![32, cfg.channels(), cfg.hw, cfg.hw]);
+            assert_eq!(d.y.len(), 32);
+            assert!(d.x.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert!(d.y.iter().all(|&c| (c as usize) < cfg.classes));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = SynthConfig::cifar(9);
+        let a = generate(&cfg, 16, 0);
+        let b = generate(&cfg, 16, 0);
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let cfg = SynthConfig::mnist(9);
+        let (tr, te) = train_test(&cfg, 16, 16);
+        assert_ne!(tr.x.data, te.x.data);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Same-class samples must be closer (on average) than
+        // cross-class samples: the fundamental learnability check.
+        let cfg = SynthConfig::mnist(3);
+        let d = generate(&cfg, 200, 0);
+        let f = d.features();
+        let dist = |a: usize, b: usize| -> f32 {
+            d.x.data[a * f..(a + 1) * f]
+                .iter()
+                .zip(&d.x.data[b * f..(b + 1) * f])
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum()
+        };
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..60 {
+            for k in i + 1..60 {
+                if d.y[i] == d.y[k] {
+                    same.push(dist(i, k));
+                } else {
+                    diff.push(dist(i, k));
+                }
+            }
+        }
+        let ms: f32 = same.iter().sum::<f32>() / same.len() as f32;
+        let md: f32 = diff.iter().sum::<f32>() / diff.len() as f32;
+        assert!(ms < 0.7 * md, "same-class dist {ms} vs cross {md}");
+    }
+
+    #[test]
+    fn all_classes_appear() {
+        let cfg = SynthConfig::cifar(2);
+        let d = generate(&cfg, 300, 0);
+        let seen: HashSet<u32> = d.y.iter().cloned().collect();
+        assert_eq!(seen.len(), 10);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let cfg = SynthConfig::mnist(1);
+        let d = generate(&cfg, 4, 0);
+        let f = flatten(&d);
+        assert_eq!(f.x.shape, vec![4, 784]);
+        assert_eq!(f.x.data, d.x.data);
+    }
+
+    #[test]
+    fn synthmnist_convenience() {
+        let (tr, te) = SynthMnist::new(64, 32, 5);
+        assert_eq!(tr.x.shape, vec![64, 784]);
+        assert_eq!(te.x.shape, vec![32, 784]);
+        // normalized: mean approx 0
+        let m: f32 = tr.x.data.iter().sum::<f32>() / tr.x.len() as f32;
+        assert!(m.abs() < 0.1, "mean={m}");
+    }
+}

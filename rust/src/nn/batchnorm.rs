@@ -1,0 +1,245 @@
+//! Batch normalization [IS15], used by the paper's CNN (§5.2: every
+//! convolutional layer is followed by BatchNorm and ReLU).  Scale is
+//! initialized to 1 and shift to 0 (§3.1).
+//!
+//! Operates per channel over `[B, C, H, W]` tensors (or per feature
+//! over `[B, C]` with `H=W=1` semantics).
+
+use super::optim::Sgd;
+use super::tensor::Tensor;
+
+/// Batch normalization layer over channel dimension 1.
+#[derive(Debug, Clone)]
+pub struct BatchNorm {
+    /// Channels.
+    pub c: usize,
+    /// Scale γ (init 1).
+    pub gamma: Vec<f32>,
+    /// Shift β (init 0).
+    pub beta: Vec<f32>,
+    /// Running mean (eval mode).
+    pub running_mean: Vec<f32>,
+    /// Running variance (eval mode).
+    pub running_var: Vec<f32>,
+    /// Momentum of the running statistics.
+    pub bn_momentum: f32,
+    eps: f32,
+    gg: Vec<f32>,
+    gb: Vec<f32>,
+    mg: Vec<f32>,
+    mb: Vec<f32>,
+    // caches for backward
+    xhat: Vec<f32>,
+    inv_std: Vec<f32>,
+    cached_shape: Vec<usize>,
+}
+
+impl BatchNorm {
+    /// New batch-norm over `c` channels.
+    pub fn new(c: usize) -> Self {
+        BatchNorm {
+            c,
+            gamma: vec![1.0; c],
+            beta: vec![0.0; c],
+            running_mean: vec![0.0; c],
+            running_var: vec![1.0; c],
+            bn_momentum: 0.1,
+            eps: 1e-5,
+            gg: vec![0.0; c],
+            gb: vec![0.0; c],
+            mg: vec![0.0; c],
+            mb: vec![0.0; c],
+            xhat: Vec::new(),
+            inv_std: vec![0.0; c],
+            cached_shape: Vec::new(),
+        }
+    }
+
+    fn plane(shape: &[usize]) -> (usize, usize) {
+        // (batch, spatial-per-channel)
+        let b = shape[0];
+        let hw: usize = shape[2..].iter().product::<usize>().max(1);
+        (b, hw)
+    }
+
+    /// Forward; uses batch statistics in train mode and running
+    /// statistics in eval mode.
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        assert!(x.shape.len() >= 2 && x.shape[1] == self.c, "batchnorm channel dim");
+        let (b, hw) = Self::plane(&x.shape);
+        let n = (b * hw) as f32;
+        let mut y = Tensor::zeros(&x.shape);
+        if train {
+            self.xhat = vec![0.0; x.len()];
+            self.cached_shape = x.shape.clone();
+        }
+        for ch in 0..self.c {
+            let (mean, var) = if train {
+                let mut s = 0.0f64;
+                let mut s2 = 0.0f64;
+                for bi in 0..b {
+                    let base = (bi * self.c + ch) * hw;
+                    for k in 0..hw {
+                        let v = x.data[base + k] as f64;
+                        s += v;
+                        s2 += v * v;
+                    }
+                }
+                let mean = (s / n as f64) as f32;
+                let var = ((s2 / n as f64) - (mean as f64) * (mean as f64)).max(0.0) as f32;
+                self.running_mean[ch] =
+                    (1.0 - self.bn_momentum) * self.running_mean[ch] + self.bn_momentum * mean;
+                self.running_var[ch] =
+                    (1.0 - self.bn_momentum) * self.running_var[ch] + self.bn_momentum * var;
+                (mean, var)
+            } else {
+                (self.running_mean[ch], self.running_var[ch])
+            };
+            let inv_std = 1.0 / (var + self.eps).sqrt();
+            if train {
+                self.inv_std[ch] = inv_std;
+            }
+            let g = self.gamma[ch];
+            let bta = self.beta[ch];
+            for bi in 0..b {
+                let base = (bi * self.c + ch) * hw;
+                for k in 0..hw {
+                    let xh = (x.data[base + k] - mean) * inv_std;
+                    if train {
+                        self.xhat[base + k] = xh;
+                    }
+                    y.data[base + k] = g * xh + bta;
+                }
+            }
+        }
+        y
+    }
+
+    /// Backward through the batch statistics (full formula).
+    pub fn backward(&mut self, gy: &Tensor) -> Tensor {
+        assert_eq!(gy.shape, self.cached_shape, "train-mode forward must precede backward");
+        let (b, hw) = Self::plane(&gy.shape);
+        let n = (b * hw) as f32;
+        let mut gx = Tensor::zeros(&gy.shape);
+        for ch in 0..self.c {
+            let mut sum_gy = 0.0f64;
+            let mut sum_gy_xhat = 0.0f64;
+            for bi in 0..b {
+                let base = (bi * self.c + ch) * hw;
+                for k in 0..hw {
+                    let g = gy.data[base + k] as f64;
+                    sum_gy += g;
+                    sum_gy_xhat += g * self.xhat[base + k] as f64;
+                }
+            }
+            self.gb[ch] += sum_gy as f32;
+            self.gg[ch] += sum_gy_xhat as f32;
+            let gamma = self.gamma[ch];
+            let inv_std = self.inv_std[ch];
+            let k1 = (sum_gy / n as f64) as f32;
+            let k2 = (sum_gy_xhat / n as f64) as f32;
+            for bi in 0..b {
+                let base = (bi * self.c + ch) * hw;
+                for k in 0..hw {
+                    let g = gy.data[base + k];
+                    let xh = self.xhat[base + k];
+                    gx.data[base + k] = gamma * inv_std * (g - k1 - xh * k2);
+                }
+            }
+        }
+        gx
+    }
+
+    /// SGD update of γ/β (no weight decay, per common practice).
+    pub fn step(&mut self, opt: &Sgd) {
+        opt.update_no_decay(&mut self.gamma, &mut self.gg, &mut self.mg);
+        opt.update_no_decay(&mut self.beta, &mut self.gb, &mut self.mb);
+    }
+
+    /// Parameter count (γ + β).
+    pub fn nparams(&self) -> usize {
+        2 * self.c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes_batch_statistics() {
+        let mut bn = BatchNorm::new(2);
+        // x: B=4, C=2, spatial 1
+        let x = Tensor::from_vec(vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0], &[4, 2]);
+        let y = bn.forward(&x, true);
+        for ch in 0..2 {
+            let vals: Vec<f32> = (0..4).map(|b| y.data[b * 2 + ch]).collect();
+            let m: f32 = vals.iter().sum::<f32>() / 4.0;
+            let v: f32 = vals.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / 4.0;
+            assert!(m.abs() < 1e-5, "mean {m}");
+            assert!((v - 1.0).abs() < 1e-2, "var {v}");
+        }
+    }
+
+    #[test]
+    fn eval_uses_running_stats() {
+        let mut bn = BatchNorm::new(1);
+        let x = Tensor::from_vec(vec![4.0, 6.0], &[2, 1]);
+        for _ in 0..200 {
+            bn.forward(&x, true); // converge running stats to mean=5, var=1
+        }
+        let y = bn.forward(&Tensor::from_vec(vec![5.0], &[1, 1]), false);
+        assert!(y.data[0].abs() < 0.05, "eval-normalized mean should be ~0, got {}", y.data[0]);
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut bn = BatchNorm::new(2);
+        bn.gamma = vec![1.5, 0.5];
+        bn.beta = vec![0.1, -0.2];
+        let x = Tensor::from_vec(
+            vec![0.5, -1.0, 1.5, 2.0, -0.5, 0.3, 0.9, -2.0],
+            &[2, 2, 2, 1], // B=2, C=2, H=2, W=1
+        );
+        let y = bn.forward(&x, true);
+        let gy = Tensor::from_vec((0..y.len()).map(|i| 0.1 * i as f32 - 0.3).collect(), &y.shape);
+        let gx = bn.backward(&gy);
+        let loss = |bn: &mut BatchNorm, x: &Tensor| -> f32 {
+            let y = bn.forward(x, true);
+            y.data.iter().zip(&gy.data).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 3, 5, 7] {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let fd = (loss(&mut bn, &xp) - loss(&mut bn, &xm)) / (2.0 * eps);
+            assert!(
+                (fd - gx.data[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "idx={idx} fd={fd} anal={}",
+                gx.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn step_updates_gamma_beta() {
+        let mut bn = BatchNorm::new(1);
+        let x = Tensor::from_vec(vec![1.0, 3.0], &[2, 1]);
+        let y = bn.forward(&x, true);
+        let gy = Tensor::from_vec(vec![1.0, 1.0], &y.shape);
+        bn.backward(&gy);
+        let g0 = bn.gamma[0];
+        let b0 = bn.beta[0];
+        bn.step(&Sgd { lr: 0.1, momentum: 0.0, weight_decay: 0.0 });
+        assert_ne!(bn.beta[0], b0, "beta should move (sum gy != 0)");
+        // gamma grad = sum gy*xhat ≈ 0 for symmetric batch
+        assert!((bn.gamma[0] - g0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn nparams_counts() {
+        assert_eq!(BatchNorm::new(16).nparams(), 32);
+    }
+}

@@ -1,0 +1,368 @@
+//! The paper's CIFAR CNN (§5.2): five 3×3 convolutions with channel
+//! counts `(16, 32, 32, 64, 64)·width`, each followed by BatchNorm and
+//! ReLU, max-pooling between stages, global average pooling, and a
+//! final fully connected softmax classifier.
+//!
+//! The sparse variant traces paths through the *channel* graph
+//! `[c_in, 16w, 32w, 32w, 64w, 64w]` (§2.2): each path activates a full
+//! `3×3` filter slice per transition — the coarse, hardware-friendly
+//! sparsity the paper advocates.
+
+use super::batchnorm::BatchNorm;
+use super::conv::{Conv2d, GlobalAvgPool, MaxPool2};
+use super::dense::Dense;
+use super::init::Init;
+use super::optim::Sgd;
+use super::tensor::Tensor;
+use super::Model;
+use crate::topology::PathTopology;
+
+/// CNN configuration.
+#[derive(Debug, Clone)]
+pub struct CnnConfig {
+    /// Input channels (3 for CIFAR-like data).
+    pub in_channels: usize,
+    /// Conv channel counts (paper: 16, 32, 32, 64, 64).
+    pub channels: Vec<usize>,
+    /// Conv indices after which a 2×2 max-pool is inserted.
+    pub pool_after: Vec<usize>,
+    /// Output classes.
+    pub classes: usize,
+    /// Weight initialization scheme.
+    pub init: Init,
+    /// Seed for random init schemes.
+    pub seed: u64,
+    /// Freeze signs after init (train only magnitudes).
+    pub freeze_signs: bool,
+}
+
+impl CnnConfig {
+    /// Paper architecture at a given width multiplier, for `hw`-sized
+    /// inputs (pooling chosen so spatial dims stay even).
+    pub fn paper(width: f64, in_channels: usize, classes: usize, init: Init, seed: u64) -> Self {
+        let base = [16usize, 32, 32, 64, 64];
+        let channels = base.iter().map(|&c| ((c as f64 * width).round() as usize).max(1)).collect();
+        CnnConfig {
+            in_channels,
+            channels,
+            pool_after: vec![0, 2],
+            classes,
+            init,
+            seed,
+            freeze_signs: false,
+        }
+    }
+}
+
+/// The convolutional classifier (dense or channel-path-sparse).
+#[derive(Debug, Clone)]
+pub struct Cnn {
+    /// Configuration used to build the network.
+    pub cfg: CnnConfig,
+    convs: Vec<Conv2d>,
+    bns: Vec<BatchNorm>,
+    pools: Vec<MaxPool2>,
+    gap: GlobalAvgPool,
+    fc: Dense,
+    relu_masks: Vec<Vec<f32>>,
+    /// Channel topology when sparse (for nnz bookkeeping).
+    pub topo: Option<PathTopology>,
+}
+
+impl Cnn {
+    /// Dense (fully connected channels) variant.
+    pub fn dense(cfg: CnnConfig) -> Self {
+        // Sign-along-path has no meaning before a topology exists: build
+        // with positive constants (the magnitude is what matters) and
+        // let `sparse()` stamp the per-slice signs; the dense FC gets a
+        // deterministic alternating sign so it can still learn.
+        let conv_init = match cfg.init {
+            Init::ConstantSignAlongPath => Init::ConstantPositive,
+            other => other,
+        };
+        let fc_init = match cfg.init {
+            Init::ConstantSignAlongPath => Init::ConstantAlternating,
+            other => other,
+        };
+        let mut convs = Vec::new();
+        let mut bns = Vec::new();
+        let mut prev = cfg.in_channels;
+        for (i, &c) in cfg.channels.iter().enumerate() {
+            let mut conv = Conv2d::new(prev, c, 3, conv_init, cfg.seed ^ (i as u64) << 9);
+            if cfg.freeze_signs {
+                conv.freeze_signs();
+            }
+            convs.push(conv);
+            bns.push(BatchNorm::new(c));
+            prev = c;
+        }
+        let mut fc = Dense::new(prev, cfg.classes, fc_init, cfg.seed ^ 0xFC);
+        if cfg.freeze_signs {
+            fc.freeze_signs();
+        }
+        let n_pools = cfg.pool_after.len();
+        Cnn {
+            cfg,
+            convs,
+            bns,
+            pools: (0..n_pools).map(|_| MaxPool2::new()).collect(),
+            gap: GlobalAvgPool::new(),
+            fc,
+            relu_masks: Vec::new(),
+            topo: None,
+        }
+    }
+
+    /// Sparse variant: channel masks from a path topology over
+    /// `[in_channels, channels…]`.  `sign_slices` additionally fixes the
+    /// sign of each filter slice to its path's sign (§5.4's cautionary
+    /// configuration).
+    pub fn sparse(cfg: CnnConfig, topo: &PathTopology, sign_slices: bool) -> Self {
+        let mut expected = vec![cfg.in_channels];
+        expected.extend_from_slice(&cfg.channels);
+        assert_eq!(topo.layer_sizes, expected, "topology must match channel graph");
+        let mut net = Self::dense(cfg);
+        for (t, conv) in net.convs.iter_mut().enumerate() {
+            let mask = topo.dense_mask(t);
+            let n_in = topo.layer_sizes[t];
+            let n_out = topo.layer_sizes[t + 1];
+            // Signed path multiplicity per (c_out, c_in) pair.  Paper
+            // footnote 1: duplicate edges coalesce by SUMMING in the
+            // matrix emulation — a constant per-path weight w therefore
+            // becomes multiplicity·w (or (n₊−n₋)·w with signs), which is
+            // exactly what breaks the filter symmetry of constant init
+            // for sparse nets (§3.1): saturated transitions get distinct
+            // multiplicity patterns per filter.
+            let mut signed_mult = vec![0.0f32; n_in * n_out];
+            for p in 0..topo.paths {
+                let ci = topo.index[t][p] as usize;
+                let co = topo.index[t + 1][p] as usize;
+                let s = if sign_slices {
+                    topo.signs.as_ref().expect("sign_slices requires topology signs")[p]
+                } else {
+                    1.0
+                };
+                signed_mult[co * n_in + ci] += s;
+            }
+            conv.set_channel_mask(mask, None);
+            // Constant-family inits emulate the per-path weight sum.
+            let coalesce_init = matches!(
+                net.cfg.init,
+                Init::ConstantPositive | Init::ConstantSignAlongPath
+            );
+            if coalesce_init || sign_slices {
+                let kk = conv.k * conv.k;
+                for co in 0..n_out {
+                    for ci in 0..n_in {
+                        let m = signed_mult[co * n_in + ci];
+                        let base = (co * n_in + ci) * kk;
+                        for wv in &mut conv.w[base..base + kk] {
+                            *wv = wv.abs() * m;
+                        }
+                    }
+                }
+            }
+            if net.cfg.freeze_signs {
+                conv.freeze_signs();
+            }
+        }
+        net.topo = Some(topo.clone());
+        net
+    }
+
+    /// Total conv weight capacity of the dense counterpart (for
+    /// sparsity reporting, Fig 12 / Table 2).
+    pub fn dense_conv_weights(&self) -> usize {
+        let mut prev = self.cfg.in_channels;
+        let mut total = 0;
+        for &c in &self.cfg.channels {
+            total += prev * c * 9;
+            prev = c;
+        }
+        total + prev * self.cfg.classes
+    }
+}
+
+impl Model for Cnn {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        assert_eq!(x.shape.len(), 4, "CNN input must be [B,C,H,W]");
+        let mut h = x.clone();
+        if train {
+            self.relu_masks.clear();
+        }
+        let mut pool_i = 0;
+        for i in 0..self.convs.len() {
+            h = self.convs[i].forward(&h, train);
+            h = self.bns[i].forward(&h, train);
+            if train {
+                self.relu_masks.push(h.data.iter().map(|&v| (v > 0.0) as u8 as f32).collect());
+            }
+            h = h.relu();
+            if self.cfg.pool_after.contains(&i) {
+                h = self.pools[pool_i].forward(&h, train);
+                pool_i += 1;
+            }
+        }
+        let pooled = self.gap.forward(&h, train);
+        self.fc.forward(&pooled, train)
+    }
+
+    fn backward(&mut self, glogits: &Tensor) {
+        let g = self.fc.backward(glogits);
+        let mut g = self.gap.backward(&g);
+        let mut pool_i = self.pools.len();
+        for i in (0..self.convs.len()).rev() {
+            if self.cfg.pool_after.contains(&i) {
+                pool_i -= 1;
+                g = self.pools[pool_i].backward(&g);
+            }
+            for (gv, &m) in g.data.iter_mut().zip(&self.relu_masks[i]) {
+                *gv *= m;
+            }
+            g = self.bns[i].backward(&g);
+            g = self.convs[i].backward(&g);
+        }
+    }
+
+    fn step(&mut self, opt: &Sgd) {
+        for c in &mut self.convs {
+            c.step(opt);
+        }
+        for b in &mut self.bns {
+            b.step(opt);
+        }
+        self.fc.step(opt);
+    }
+
+    fn nparams(&self) -> usize {
+        self.convs.iter().map(|c| c.nparams()).sum::<usize>()
+            + self.bns.iter().map(|b| b.nparams()).sum::<usize>()
+            + self.fc.nparams()
+    }
+
+    fn nnz(&self) -> usize {
+        self.convs.iter().map(|c| c.nnz()).sum::<usize>() + self.fc.w.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::softmax_xent;
+    use crate::topology::{PathSource, SignPolicy, TopologyBuilder};
+
+    fn tiny_cfg() -> CnnConfig {
+        CnnConfig {
+            in_channels: 3,
+            channels: vec![4, 8],
+            pool_after: vec![0],
+            classes: 4,
+            init: Init::UniformRandom,
+            seed: 1,
+            freeze_signs: false,
+        }
+    }
+
+    #[test]
+    fn paper_architecture_params() {
+        // width 1.0, 3 input channels, 10 classes:
+        // convs 432+4608+9216+18432+36864 = 69552, fc 640, biases
+        // 16+32+32+64+64+10 = 218, bn 2·208 = 416 → 70826 ≈ paper 70.4K
+        let cnn = Cnn::dense(CnnConfig::paper(1.0, 3, 10, Init::UniformRandom, 0));
+        assert_eq!(cnn.nnz(), 69552 + 640);
+        let total = cnn.nparams();
+        assert!((70000..71500).contains(&total), "total={total}");
+    }
+
+    #[test]
+    fn width_multiplier_scales() {
+        let w2 = Cnn::dense(CnnConfig::paper(2.0, 3, 10, Init::UniformRandom, 0));
+        assert_eq!(w2.cfg.channels, vec![32, 64, 64, 128, 128]);
+        let half = Cnn::dense(CnnConfig::paper(0.5, 3, 10, Init::UniformRandom, 0));
+        assert_eq!(half.cfg.channels, vec![8, 16, 16, 32, 32]);
+    }
+
+    #[test]
+    fn forward_shape_and_backward_runs() {
+        let mut cnn = Cnn::dense(tiny_cfg());
+        let x = Tensor::from_vec((0..2 * 3 * 8 * 8).map(|i| (i as f32 * 0.01).sin()).collect(), &[2, 3, 8, 8]);
+        let y = cnn.forward(&x, true);
+        assert_eq!(y.shape, vec![2, 4]);
+        let (_, g) = softmax_xent(&y, &[0, 2]);
+        cnn.backward(&g);
+        cnn.step(&Sgd::default());
+    }
+
+    #[test]
+    fn sparse_masks_reduce_nnz() {
+        let cfg = tiny_cfg();
+        let topo = TopologyBuilder::new(&[3, 4, 8])
+            .paths(8)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+            .build();
+        let sparse = Cnn::sparse(cfg.clone(), &topo, false);
+        let dense = Cnn::dense(cfg);
+        assert!(sparse.nnz() < dense.nnz(), "{} < {}", sparse.nnz(), dense.nnz());
+        // nnz = unique channel pairs × 9 + fc
+        let expected: usize =
+            (0..2).map(|t| topo.unique_edges(t)).sum::<usize>() * 9 + sparse.fc.w.len();
+        assert_eq!(sparse.nnz(), expected);
+    }
+
+    #[test]
+    fn sparse_training_reduces_loss() {
+        let cfg = CnnConfig {
+            in_channels: 1,
+            channels: vec![4, 8],
+            pool_after: vec![0],
+            classes: 2,
+            init: Init::ConstantSignAlongPath,
+            seed: 0,
+            freeze_signs: false,
+        };
+        // random paths: signed multiplicities vary, so coalesced slices
+        // start non-zero (Sobol' + alternating signs at saturated
+        // capacity would cancel exactly — see EXPERIMENTS.md §Findings)
+        let topo = TopologyBuilder::new(&[1, 4, 8])
+            .paths(16)
+            .source(PathSource::Random { seed: 5 })
+            .sign_policy(SignPolicy::AlternatingPath)
+            .build();
+        let mut cnn = Cnn::sparse(cfg, &topo, true);
+        // two-class toy: vertical vs horizontal stripes
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for k in 0..16 {
+            let cls = k % 2;
+            for y in 0..8 {
+                for x in 0..8 {
+                    let v = if cls == 0 { (x % 2) as f32 } else { (y % 2) as f32 };
+                    xs.push(v + 0.05 * ((k * 64 + y * 8 + x) as f32).sin());
+                }
+            }
+            ys.push(cls as u32);
+        }
+        let x = Tensor::from_vec(xs, &[16, 1, 8, 8]);
+        let opt = Sgd { lr: 0.05, momentum: 0.9, weight_decay: 1e-4 };
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..60 {
+            let logits = cnn.forward(&x, true);
+            let (loss, g) = softmax_xent(&logits, &ys);
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            cnn.backward(&g);
+            cnn.step(&opt);
+        }
+        assert!(last < 0.6 * first, "sparse CNN should learn stripes: {first} -> {last}");
+    }
+
+    #[test]
+    #[should_panic(expected = "topology must match channel graph")]
+    fn sparse_shape_mismatch_panics() {
+        let topo = TopologyBuilder::new(&[3, 5, 8]).paths(8).build();
+        let _ = Cnn::sparse(tiny_cfg(), &topo, false);
+    }
+}

@@ -1,0 +1,702 @@
+//! 2-D convolution (im2col + GEMM), max pooling and global average
+//! pooling for the paper's CIFAR CNN (§5.2).
+//!
+//! Channel-level path sparsity (§2.2): a path through a convolutional
+//! layer selects one input channel per output filter; the active
+//! `(c_out, c_in)` pairs form a channel mask and each active pair
+//! carries a full `kh × kw` filter slice — the "coarse sparsity on the
+//! filter level" the paper notes is hardware-friendlier than per-weight
+//! sparsity.
+
+use super::init::{w_init_magnitude, Init};
+use super::matmul::{matmul_nn, matmul_nt, matmul_tn};
+use super::optim::Sgd;
+use super::tensor::Tensor;
+
+/// 3×3 (or general) convolution with stride 1 and symmetric padding.
+#[derive(Debug, Clone)]
+pub struct Conv2d {
+    /// Input channels.
+    pub c_in: usize,
+    /// Output channels (filters).
+    pub c_out: usize,
+    /// Kernel height/width.
+    pub k: usize,
+    /// Padding on each side.
+    pub pad: usize,
+    /// Weights `[c_out][c_in·k·k]` flattened.
+    pub w: Vec<f32>,
+    /// Bias `[c_out]`.
+    pub b: Vec<f32>,
+    /// Channel mask `[c_out][c_in]` (1 = active pair); `None` = dense.
+    pub channel_mask: Option<Vec<f32>>,
+    /// Active `(c_out, c_in)` pairs, derived from the mask.  When the
+    /// mask density is low the forward/backward passes iterate only the
+    /// active pairs — compute **linear in the number of paths** instead
+    /// of quadratic in the width (the paper's §2/§3 complexity claim;
+    /// this is what keeps the width-8× sweeps of Table 2/Figs 10-12
+    /// tractable).
+    pub active_pairs: Option<Vec<(u32, u32)>>,
+    /// Fixed signs for magnitude-only training (same layout as `w`).
+    pub fixed_signs: Option<Vec<f32>>,
+    gw: Vec<f32>,
+    gb: Vec<f32>,
+    mw: Vec<f32>,
+    mb: Vec<f32>,
+    cols_cache: Vec<f32>,
+    x_cache: Tensor,
+    in_shape: Vec<usize>,
+}
+
+impl Conv2d {
+    /// New convolution layer.
+    pub fn new(c_in: usize, c_out: usize, k: usize, init: Init, seed: u64) -> Self {
+        let len = c_out * c_in * k * k;
+        let mut w = vec![0.0f32; len];
+        let fan_in = c_in * k * k;
+        let fan_out = c_out * k * k;
+        let mag = w_init_magnitude(fan_in, fan_out);
+        init.fill(&mut w, mag, None, seed);
+        if init == Init::ConstantAlternating {
+            // paper semantics: sign alternates by output FILTER index
+            for co in 0..c_out {
+                let s = if co % 2 == 0 { mag } else { -mag };
+                w[co * c_in * k * k..(co + 1) * c_in * k * k].fill(s);
+            }
+        }
+        Conv2d {
+            c_in,
+            c_out,
+            k,
+            pad: k / 2,
+            w,
+            b: vec![0.0; c_out],
+            channel_mask: None,
+            active_pairs: None,
+            fixed_signs: None,
+            gw: vec![0.0; len],
+            gb: vec![0.0; c_out],
+            mw: vec![0.0; len],
+            mb: vec![0.0; c_out],
+            cols_cache: Vec::new(),
+            x_cache: Tensor::zeros(&[0]),
+            in_shape: Vec::new(),
+        }
+    }
+
+    /// Apply a channel mask `[c_out][c_in]`: inactive pairs are zeroed
+    /// now and their gradients zeroed every backward pass.  With
+    /// `sign_per_pair`, the whole filter slice additionally takes the
+    /// path sign (paper §5.4 caution: this constrains the features a
+    /// slice can express).
+    pub fn set_channel_mask(&mut self, mask: Vec<f32>, sign_per_pair: Option<&[f32]>) {
+        assert_eq!(mask.len(), self.c_out * self.c_in);
+        let kk = self.k * self.k;
+        for co in 0..self.c_out {
+            for ci in 0..self.c_in {
+                let m = mask[co * self.c_in + ci];
+                let base = (co * self.c_in + ci) * kk;
+                for t in 0..kk {
+                    self.w[base + t] *= m;
+                    if let Some(signs) = sign_per_pair {
+                        let s = signs[co * self.c_in + ci];
+                        self.w[base + t] = self.w[base + t].abs() * s.signum() * m;
+                    }
+                }
+            }
+        }
+        let mut pairs = Vec::new();
+        for co in 0..self.c_out {
+            for ci in 0..self.c_in {
+                if mask[co * self.c_in + ci] > 0.0 {
+                    pairs.push((co as u32, ci as u32));
+                }
+            }
+        }
+        self.active_pairs = Some(pairs);
+        self.channel_mask = Some(mask);
+    }
+
+    /// Use the pair-sparse path when it saves work (density below half).
+    fn use_sparse_path(&self) -> bool {
+        match &self.active_pairs {
+            Some(p) => p.len() * 2 < self.c_out * self.c_in,
+            None => false,
+        }
+    }
+
+    /// Freeze current signs (train only magnitudes).
+    pub fn freeze_signs(&mut self) {
+        self.fixed_signs = Some(self.w.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect());
+    }
+
+    /// Output spatial size for an input of `h × w` (stride 1, padded).
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (h + 2 * self.pad + 1 - self.k, w + 2 * self.pad + 1 - self.k)
+    }
+
+    fn im2col(&self, x: &Tensor) -> (Vec<f32>, usize, usize) {
+        let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let (oh, ow) = self.out_hw(h, w);
+        let kk = self.k * self.k;
+        let row_len = c * kk;
+        let mut cols = vec![0.0f32; b * oh * ow * row_len];
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let dst_base = ((bi * oh + oy) * ow + ox) * row_len;
+                    for ci in 0..c {
+                        let src_plane = (bi * c + ci) * h * w;
+                        for ky in 0..self.k {
+                            let iy = oy + ky;
+                            let iy = iy as isize - self.pad as isize;
+                            for kx in 0..self.k {
+                                let ix = (ox + kx) as isize - self.pad as isize;
+                                let v = if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w
+                                {
+                                    x.data[src_plane + iy as usize * w + ix as usize]
+                                } else {
+                                    0.0
+                                };
+                                cols[dst_base + ci * kk + ky * self.k + kx] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (cols, oh, ow)
+    }
+
+    fn col2im(&self, gcols: &[f32], shape: &[usize]) -> Tensor {
+        let (b, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
+        let (oh, ow) = self.out_hw(h, w);
+        let kk = self.k * self.k;
+        let row_len = c * kk;
+        let mut gx = Tensor::zeros(shape);
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let src_base = ((bi * oh + oy) * ow + ox) * row_len;
+                    for ci in 0..c {
+                        let dst_plane = (bi * c + ci) * h * w;
+                        for ky in 0..self.k {
+                            let iy = (oy + ky) as isize - self.pad as isize;
+                            if iy < 0 || iy as usize >= h {
+                                continue;
+                            }
+                            for kx in 0..self.k {
+                                let ix = (ox + kx) as isize - self.pad as isize;
+                                if ix < 0 || ix as usize >= w {
+                                    continue;
+                                }
+                                gx.data[dst_plane + iy as usize * w + ix as usize] +=
+                                    gcols[src_base + ci * kk + ky * self.k + kx];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        gx
+    }
+
+    /// Pair-sparse forward: iterate only active `(c_out, c_in)` pairs —
+    /// O(pairs · k² · H·W · B), independent of the dense width.
+    fn forward_sparse(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, _, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let (oh, ow) = self.out_hw(h, w);
+        let mut y = Tensor::zeros(&[b, self.c_out, oh, ow]);
+        let pairs = self.active_pairs.as_ref().unwrap();
+        let kk = self.k * self.k;
+        let pad = self.pad as isize;
+        let plane_out = oh * ow;
+        let sample_out = self.c_out * plane_out;
+        crate::util::parallel::parallel_rows(&mut y.data, sample_out, |bi, ysample| {
+            for &(co, ci) in pairs {
+                let wslice = &self.w[(co as usize * self.c_in + ci as usize) * kk..][..kk];
+                let xin = &x.data[(bi * self.c_in + ci as usize) * h * w..][..h * w];
+                let yplane = &mut ysample[co as usize * plane_out..][..plane_out];
+                for (kidx, &wv) in wslice.iter().enumerate() {
+                    if wv == 0.0 {
+                        continue;
+                    }
+                    let ky = (kidx / self.k) as isize - pad;
+                    let kx = (kidx % self.k) as isize - pad;
+                    let y0 = (-ky).max(0) as usize;
+                    let y1 = ((h as isize - ky).min(oh as isize)).max(0) as usize;
+                    let x0 = (-kx).max(0) as usize;
+                    let x1 = ((w as isize - kx).min(ow as isize)).max(0) as usize;
+                    for oy in y0..y1 {
+                        let src = ((oy as isize + ky) as usize) * w;
+                        let dst = oy * ow;
+                        for ox in x0..x1 {
+                            yplane[dst + ox] += wv * xin[src + (ox as isize + kx) as usize];
+                        }
+                    }
+                }
+            }
+            // bias
+            for co in 0..self.c_out {
+                let bv = self.b[co];
+                if bv != 0.0 {
+                    for v in &mut ysample[co * plane_out..(co + 1) * plane_out] {
+                        *v += bv;
+                    }
+                }
+            }
+        });
+        if train {
+            self.cols_cache.clear(); // sparse path caches x, not cols
+            self.x_cache = x.clone();
+            self.in_shape = x.shape.clone();
+        }
+        y
+    }
+
+    /// Pair-sparse backward.
+    fn backward_sparse(&mut self, gy: &Tensor) -> Tensor {
+        let shape = self.in_shape.clone();
+        let (b, _, h, w) = (shape[0], shape[1], shape[2], shape[3]);
+        let (oh, ow) = self.out_hw(h, w);
+        let pairs = self.active_pairs.as_ref().unwrap().clone();
+        let kk = self.k * self.k;
+        let pad = self.pad as isize;
+        let x = &self.x_cache;
+        // bias grads
+        for bi in 0..b {
+            for co in 0..self.c_out {
+                let plane = &gy.data[((bi * self.c_out + co) * oh * ow)..][..oh * ow];
+                self.gb[co] += plane.iter().sum::<f32>();
+            }
+        }
+        // weight grads per active pair
+        for &(co, ci) in &pairs {
+            let gw = &mut self.gw[(co as usize * self.c_in + ci as usize) * kk..][..kk];
+            for bi in 0..b {
+                let gplane = &gy.data[((bi * self.c_out + co as usize) * oh * ow)..][..oh * ow];
+                let xin = &x.data[(bi * self.c_in + ci as usize) * h * w..][..h * w];
+                for kidx in 0..kk {
+                    let ky = (kidx / self.k) as isize - pad;
+                    let kx = (kidx % self.k) as isize - pad;
+                    let y0 = (-ky).max(0) as usize;
+                    let y1 = ((h as isize - ky).min(oh as isize)).max(0) as usize;
+                    let x0 = (-kx).max(0) as usize;
+                    let x1 = ((w as isize - kx).min(ow as isize)).max(0) as usize;
+                    let mut acc = 0.0f32;
+                    for oy in y0..y1 {
+                        let src = ((oy as isize + ky) as usize) * w;
+                        let dst = oy * ow;
+                        for ox in x0..x1 {
+                            acc += gplane[dst + ox] * xin[src + (ox as isize + kx) as usize];
+                        }
+                    }
+                    gw[kidx] += acc;
+                }
+            }
+        }
+        // input grads (transposed conv over active pairs)
+        let mut gx = Tensor::zeros(&shape);
+        let sample_in = self.c_in * h * w;
+        crate::util::parallel::parallel_rows(&mut gx.data, sample_in, |bi, gxs| {
+            for &(co, ci) in &pairs {
+                let wslice = &self.w[(co as usize * self.c_in + ci as usize) * kk..][..kk];
+                let gplane = &gy.data[((bi * self.c_out + co as usize) * oh * ow)..][..oh * ow];
+                let gxin = &mut gxs[ci as usize * h * w..][..h * w];
+                for (kidx, &wv) in wslice.iter().enumerate() {
+                    if wv == 0.0 {
+                        continue;
+                    }
+                    let ky = (kidx / self.k) as isize - pad;
+                    let kx = (kidx % self.k) as isize - pad;
+                    let y0 = (-ky).max(0) as usize;
+                    let y1 = ((h as isize - ky).min(oh as isize)).max(0) as usize;
+                    let x0 = (-kx).max(0) as usize;
+                    let x1 = ((w as isize - kx).min(ow as isize)).max(0) as usize;
+                    for oy in y0..y1 {
+                        let src = ((oy as isize + ky) as usize) * w;
+                        let dst = oy * ow;
+                        for ox in x0..x1 {
+                            gxin[src + (ox as isize + kx) as usize] += wv * gplane[dst + ox];
+                        }
+                    }
+                }
+            }
+        });
+        gx
+    }
+
+    /// Forward: `[B, c_in, H, W] → [B, c_out, H', W']`.
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        assert_eq!(x.shape.len(), 4);
+        assert_eq!(x.shape[1], self.c_in);
+        if self.use_sparse_path() {
+            return self.forward_sparse(x, train);
+        }
+        let (cols, oh, ow) = self.im2col(x);
+        let b = x.shape[0];
+        let rows = b * oh * ow;
+        let row_len = self.c_in * self.k * self.k;
+        // y[rows, c_out] = cols[rows, row_len] · wᵀ
+        let mut y_rows = vec![0.0f32; rows * self.c_out];
+        matmul_nt(&cols, &self.w, &mut y_rows, rows, row_len, self.c_out);
+        // reorder to [B, c_out, oh, ow] and add bias
+        let mut y = Tensor::zeros(&[b, self.c_out, oh, ow]);
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let r = (bi * oh + oy) * ow + ox;
+                    for co in 0..self.c_out {
+                        y.data[((bi * self.c_out + co) * oh + oy) * ow + ox] =
+                            y_rows[r * self.c_out + co] + self.b[co];
+                    }
+                }
+            }
+        }
+        if train {
+            self.cols_cache = cols;
+            self.in_shape = x.shape.clone();
+        }
+        y
+    }
+
+    /// Backward: accumulates `gw`/`gb`, returns input gradient.
+    pub fn backward(&mut self, gy: &Tensor) -> Tensor {
+        let (b, co_, oh, ow) = (gy.shape[0], gy.shape[1], gy.shape[2], gy.shape[3]);
+        assert_eq!(co_, self.c_out);
+        assert!(!self.in_shape.is_empty(), "forward(train=true) must precede backward");
+        if self.use_sparse_path() {
+            return self.backward_sparse(gy);
+        }
+        let rows = b * oh * ow;
+        let row_len = self.c_in * self.k * self.k;
+        // reorder gy to [rows, c_out]
+        let mut gy_rows = vec![0.0f32; rows * self.c_out];
+        for bi in 0..b {
+            for co in 0..self.c_out {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        gy_rows[((bi * oh + oy) * ow + ox) * self.c_out + co] =
+                            gy.data[((bi * self.c_out + co) * oh + oy) * ow + ox];
+                    }
+                }
+            }
+        }
+        // gw[c_out, row_len] += gy_rowsᵀ[rows,c_out] · cols[rows,row_len]
+        matmul_tn(&gy_rows, &self.cols_cache, &mut self.gw, self.c_out, rows, row_len);
+        for r in 0..rows {
+            for co in 0..self.c_out {
+                self.gb[co] += gy_rows[r * self.c_out + co];
+            }
+        }
+        if let Some(mask) = &self.channel_mask {
+            let kk = self.k * self.k;
+            for co in 0..self.c_out {
+                for ci in 0..self.c_in {
+                    let m = mask[co * self.c_in + ci];
+                    if m == 0.0 {
+                        let base = (co * self.c_in + ci) * kk;
+                        self.gw[base..base + kk].fill(0.0);
+                    }
+                }
+            }
+        }
+        // gcols[rows, row_len] = gy_rows · w
+        let mut gcols = vec![0.0f32; rows * row_len];
+        matmul_nn(&gy_rows, &self.w, &mut gcols, rows, self.c_out, row_len);
+        self.col2im(&gcols, &self.in_shape.clone())
+    }
+
+    /// SGD step (mask re-applied to defeat weight decay drift).
+    pub fn step(&mut self, opt: &Sgd) {
+        opt.update(&mut self.w, &mut self.gw, &mut self.mw, self.fixed_signs.as_deref());
+        opt.update_no_decay(&mut self.b, &mut self.gb, &mut self.mb);
+        if let Some(mask) = &self.channel_mask {
+            let kk = self.k * self.k;
+            for co in 0..self.c_out {
+                for ci in 0..self.c_in {
+                    if mask[co * self.c_in + ci] == 0.0 {
+                        let base = (co * self.c_in + ci) * kk;
+                        self.w[base..base + kk].fill(0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Non-zero weight count (mask-aware, excluding bias).
+    pub fn nnz(&self) -> usize {
+        match &self.channel_mask {
+            None => self.w.len(),
+            Some(m) => {
+                m.iter().filter(|&&v| v > 0.0).count() * self.k * self.k
+            }
+        }
+    }
+
+    /// Trainable parameters (nnz + bias).
+    pub fn nparams(&self) -> usize {
+        self.nnz() + self.b.len()
+    }
+}
+
+/// 2×2 max pooling with stride 2.
+#[derive(Debug, Clone, Default)]
+pub struct MaxPool2 {
+    argmax: Vec<usize>,
+    in_shape: Vec<usize>,
+}
+
+impl MaxPool2 {
+    /// New pooling layer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Forward `[B,C,H,W] → [B,C,H/2,W/2]` (H, W even).
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        assert!(h % 2 == 0 && w % 2 == 0, "maxpool needs even dims, got {h}x{w}");
+        let (oh, ow) = (h / 2, w / 2);
+        let mut y = Tensor::zeros(&[b, c, oh, ow]);
+        let mut argmax = vec![0usize; y.len()];
+        for bc in 0..b * c {
+            let xin = &x.data[bc * h * w..(bc + 1) * h * w];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_i = 0usize;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let i = (oy * 2 + dy) * w + ox * 2 + dx;
+                            if xin[i] > best {
+                                best = xin[i];
+                                best_i = i;
+                            }
+                        }
+                    }
+                    let oi = bc * oh * ow + oy * ow + ox;
+                    y.data[oi] = best;
+                    argmax[oi] = bc * h * w + best_i;
+                }
+            }
+        }
+        if train {
+            self.argmax = argmax;
+            self.in_shape = x.shape.clone();
+        }
+        y
+    }
+
+    /// Backward: route gradients to the argmax positions.
+    pub fn backward(&self, gy: &Tensor) -> Tensor {
+        let mut gx = Tensor::zeros(&self.in_shape);
+        for (i, &g) in gy.data.iter().enumerate() {
+            gx.data[self.argmax[i]] += g;
+        }
+        gx
+    }
+}
+
+/// Global average pooling `[B,C,H,W] → [B,C]`.
+#[derive(Debug, Clone, Default)]
+pub struct GlobalAvgPool {
+    in_shape: Vec<usize>,
+}
+
+impl GlobalAvgPool {
+    /// New layer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Forward.
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (b, c) = (x.shape[0], x.shape[1]);
+        let hw: usize = x.shape[2..].iter().product();
+        let mut y = Tensor::zeros(&[b, c]);
+        for bc in 0..b * c {
+            let s: f32 = x.data[bc * hw..(bc + 1) * hw].iter().sum();
+            y.data[bc] = s / hw as f32;
+        }
+        if train {
+            self.in_shape = x.shape.clone();
+        }
+        y
+    }
+
+    /// Backward.
+    pub fn backward(&self, gy: &Tensor) -> Tensor {
+        let hw: usize = self.in_shape[2..].iter().product();
+        let mut gx = Tensor::zeros(&self.in_shape);
+        for (bc, &g) in gy.data.iter().enumerate() {
+            let v = g / hw as f32;
+            gx.data[bc * hw..(bc + 1) * hw].fill(v);
+        }
+        gx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weights passes input through
+        let mut conv = Conv2d::new(2, 2, 1, Init::ConstantPositive, 0);
+        conv.w.copy_from_slice(&[1.0, 0.0, 0.0, 1.0]);
+        conv.pad = 0;
+        let x = Tensor::from_vec((0..8).map(|v| v as f32).collect(), &[1, 2, 2, 2]);
+        let y = conv.forward(&x, false);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_known_3x3() {
+        // single channel, 3x3 all-ones kernel on a 3x3 input of ones:
+        // center output = 9, corners = 4, edges = 6 (with padding 1)
+        let mut conv = Conv2d::new(1, 1, 3, Init::ConstantPositive, 0);
+        conv.w.iter_mut().for_each(|w| *w = 1.0);
+        let x = Tensor::from_vec(vec![1.0; 9], &[1, 1, 3, 3]);
+        let y = conv.forward(&x, false);
+        assert_eq!(y.shape, vec![1, 1, 3, 3]);
+        assert_eq!(y.data[4], 9.0);
+        assert_eq!(y.data[0], 4.0);
+        assert_eq!(y.data[1], 6.0);
+    }
+
+    #[test]
+    fn conv_gradients_match_finite_difference() {
+        let mut conv = Conv2d::new(2, 3, 3, Init::UniformRandom, 11);
+        let x = Tensor::from_vec(
+            (0..2 * 2 * 4 * 4).map(|i| ((i as f32) * 0.23).sin()).collect(),
+            &[2, 2, 4, 4],
+        );
+        let y = conv.forward(&x, true);
+        let gy = Tensor::from_vec((0..y.len()).map(|i| 0.01 * i as f32 - 0.2).collect(), &y.shape);
+        let gx = conv.backward(&gy);
+        let loss = |conv: &mut Conv2d, x: &Tensor| -> f32 {
+            conv.forward(x, false).data.iter().zip(&gy.data).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-2;
+        for idx in [0usize, 7, 20, conv.w.len() - 1] {
+            let orig = conv.w[idx];
+            conv.w[idx] = orig + eps;
+            let lp = loss(&mut conv, &x);
+            conv.w[idx] = orig - eps;
+            let lm = loss(&mut conv, &x);
+            conv.w[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - conv.gw[idx]).abs() < 3e-2 * (1.0 + fd.abs()),
+                "w[{idx}] fd={fd} anal={}",
+                conv.gw[idx]
+            );
+        }
+        for idx in [0usize, 13, 40] {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let fd = (loss(&mut conv, &xp) - loss(&mut conv, &xm)) / (2.0 * eps);
+            assert!(
+                (fd - gx.data[idx]).abs() < 3e-2 * (1.0 + fd.abs()),
+                "x[{idx}] fd={fd} anal={}",
+                gx.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn channel_mask_zeroes_slices() {
+        let mut conv = Conv2d::new(2, 2, 3, Init::ConstantPositive, 0);
+        // only pairs (0,0) and (1,1) active
+        conv.set_channel_mask(vec![1.0, 0.0, 0.0, 1.0], None);
+        let kk = 9;
+        assert!(conv.w[kk..2 * kk].iter().all(|&v| v == 0.0));
+        assert!(conv.w[2 * kk..3 * kk].iter().all(|&v| v == 0.0));
+        assert_eq!(conv.nnz(), 2 * 9);
+        assert_eq!(conv.nparams(), 18 + 2);
+        // grads masked after backward
+        let x = Tensor::from_vec(vec![1.0; 2 * 16], &[1, 2, 4, 4]);
+        let y = conv.forward(&x, true);
+        conv.backward(&Tensor::from_vec(vec![1.0; y.len()], &y.shape));
+        assert!(conv.gw[kk..2 * kk].iter().all(|&v| v == 0.0));
+        conv.step(&Sgd::default());
+        assert!(conv.w[kk..2 * kk].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn maxpool_forward_backward() {
+        let mut pool = MaxPool2::new();
+        let x = Tensor::from_vec(
+            vec![
+                1.0, 2.0, 3.0, 4.0, //
+                5.0, 6.0, 7.0, 8.0, //
+                1.0, 1.0, 1.0, 1.0, //
+                1.0, 9.0, 1.0, 1.0,
+            ],
+            &[1, 1, 4, 4],
+        );
+        let y = pool.forward(&x, true);
+        assert_eq!(y.shape, vec![1, 1, 2, 2]);
+        assert_eq!(y.data, vec![6.0, 8.0, 9.0, 1.0]);
+        let gy = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &y.shape);
+        let gx = pool.backward(&gy);
+        assert_eq!(gx.data[5], 1.0); // position of 6
+        assert_eq!(gx.data[7], 2.0); // position of 8
+        assert_eq!(gx.data[13], 3.0); // position of 9
+        assert_eq!(gx.data.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn sparse_path_matches_masked_dense() {
+        // forward + both gradients must agree between the pair-sparse
+        // implementation and the masked im2col path
+        let mk = || {
+            let mut c = Conv2d::new(6, 8, 3, Init::UniformRandom, 3);
+            // low-density mask triggers the sparse path
+            let mut mask = vec![0.0f32; 48];
+            for (i, m) in mask.iter_mut().enumerate() {
+                if i % 5 == 0 {
+                    *m = 1.0;
+                }
+            }
+            c.set_channel_mask(mask, None);
+            c
+        };
+        let mut sparse = mk();
+        let mut dense = mk();
+        assert!(sparse.use_sparse_path());
+        dense.active_pairs = None; // force the im2col path
+        let x = Tensor::from_vec(
+            (0..2 * 6 * 5 * 5).map(|i| ((i as f32) * 0.17).sin()).collect(),
+            &[2, 6, 5, 5],
+        );
+        let ys = sparse.forward(&x, true);
+        let yd = dense.forward(&x, true);
+        assert!(ys.max_abs_diff(&yd) < 1e-4, "fwd diff {}", ys.max_abs_diff(&yd));
+        let gy = Tensor::from_vec((0..ys.len()).map(|i| 0.01 * i as f32 - 0.5).collect(), &ys.shape);
+        let gxs = sparse.backward(&gy);
+        let gxd = dense.backward(&gy);
+        assert!(gxs.max_abs_diff(&gxd) < 1e-3, "gx diff {}", gxs.max_abs_diff(&gxd));
+        for (a, b) in sparse.gw.iter().zip(&dense.gw) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "gw {a} vs {b}");
+        }
+        for (a, b) in sparse.gb.iter().zip(&dense.gb) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "gb {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn global_avg_pool() {
+        let mut gap = GlobalAvgPool::new();
+        let x = Tensor::from_vec(vec![1.0, 3.0, 5.0, 7.0, 2.0, 2.0, 2.0, 2.0], &[1, 2, 2, 2]);
+        let y = gap.forward(&x, true);
+        assert_eq!(y.data, vec![4.0, 2.0]);
+        let gx = gap.backward(&Tensor::from_vec(vec![4.0, 8.0], &[1, 2]));
+        assert!(gx.data[..4].iter().all(|&v| v == 1.0));
+        assert!(gx.data[4..].iter().all(|&v| v == 2.0));
+    }
+}

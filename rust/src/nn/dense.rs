@@ -1,0 +1,252 @@
+//! Fully connected (dense) layer — the baseline the paper compares
+//! against, with optional static sparsity mask (the matrix emulation of
+//! a path topology, footnote 1) and optional fixed signs (Table 3).
+
+use super::init::{w_init_magnitude, Init};
+use super::matmul::{matmul_nn, matmul_nt, matmul_tn};
+use super::optim::Sgd;
+use super::tensor::Tensor;
+
+/// Dense layer `y = x · wᵀ + b` with weights stored `[out][in]`.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    /// Input features.
+    pub in_dim: usize,
+    /// Output features.
+    pub out_dim: usize,
+    /// Weights `[out][in]` flattened.
+    pub w: Vec<f32>,
+    /// Bias `[out]`.
+    pub b: Vec<f32>,
+    /// Optional static 0/1 mask (same layout as `w`).
+    pub mask: Option<Vec<f32>>,
+    /// Optional fixed signs (same layout as `w`): training only
+    /// magnitudes (paper §3.2 / Table 3).
+    pub fixed_signs: Option<Vec<f32>>,
+    gw: Vec<f32>,
+    gb: Vec<f32>,
+    mw: Vec<f32>,
+    mb: Vec<f32>,
+    x_cache: Tensor,
+}
+
+impl Dense {
+    /// New dense layer with the given initialization.
+    pub fn new(in_dim: usize, out_dim: usize, init: Init, seed: u64) -> Self {
+        let mut w = vec![0.0f32; in_dim * out_dim];
+        let mag = w_init_magnitude(in_dim, out_dim);
+        init.fill(&mut w, mag, None, seed);
+        if init == Init::ConstantAlternating {
+            // paper semantics: sign alternates by output NEURON index
+            for o in 0..out_dim {
+                let s = if o % 2 == 0 { mag } else { -mag };
+                w[o * in_dim..(o + 1) * in_dim].fill(s);
+            }
+        }
+        Dense {
+            in_dim,
+            out_dim,
+            w,
+            b: vec![0.0; out_dim],
+            mask: None,
+            fixed_signs: None,
+            gw: vec![0.0; in_dim * out_dim],
+            gb: vec![0.0; out_dim],
+            mw: vec![0.0; in_dim * out_dim],
+            mb: vec![0.0; out_dim],
+            x_cache: Tensor::zeros(&[0]),
+        }
+    }
+
+    /// Apply a static sparsity mask (zeroes masked weights immediately;
+    /// gradients are masked on every backward pass).
+    pub fn set_mask(&mut self, mask: Vec<f32>) {
+        assert_eq!(mask.len(), self.w.len());
+        for (w, &m) in self.w.iter_mut().zip(&mask) {
+            *w *= m;
+        }
+        self.mask = Some(mask);
+    }
+
+    /// Freeze the current weight signs (Table 3 "signs fixed, train only
+    /// magnitude").
+    pub fn freeze_signs(&mut self) {
+        self.fixed_signs = Some(self.w.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect());
+    }
+
+    /// Forward pass; caches the input for backward when `train`.
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        assert_eq!(x.features(), self.in_dim, "dense input dim");
+        let bsz = x.batch();
+        let mut y = Tensor::zeros(&[bsz, self.out_dim]);
+        matmul_nt(&x.data, &self.w, &mut y.data, bsz, self.in_dim, self.out_dim);
+        for i in 0..bsz {
+            let row = y.row_mut(i);
+            for (v, &bias) in row.iter_mut().zip(&self.b) {
+                *v += bias;
+            }
+        }
+        if train {
+            self.x_cache = x.clone();
+        }
+        y
+    }
+
+    /// Backward pass: accumulate `gw`, `gb`, return input gradient.
+    pub fn backward(&mut self, gy: &Tensor) -> Tensor {
+        let bsz = gy.batch();
+        assert_eq!(gy.features(), self.out_dim);
+        assert_eq!(self.x_cache.batch(), bsz, "forward(train=true) must precede backward");
+        // gw[out][in] += gyᵀ[out,B] · x[B,in]
+        matmul_tn(&gy.data, &self.x_cache.data, &mut self.gw, self.out_dim, bsz, self.in_dim);
+        for i in 0..bsz {
+            for (gb, &g) in self.gb.iter_mut().zip(gy.row(i)) {
+                *gb += g;
+            }
+        }
+        if let Some(mask) = &self.mask {
+            for (g, &m) in self.gw.iter_mut().zip(mask) {
+                *g *= m;
+            }
+        }
+        // gx[B,in] = gy[B,out] · w[out,in]
+        let mut gx = Tensor::zeros(&[bsz, self.in_dim]);
+        matmul_nn(&gy.data, &self.w, &mut gx.data, bsz, self.out_dim, self.in_dim);
+        gx
+    }
+
+    /// SGD update of weights and bias.
+    pub fn step(&mut self, opt: &Sgd) {
+        opt.update(&mut self.w, &mut self.gw, &mut self.mw, self.fixed_signs.as_deref());
+        opt.update_no_decay(&mut self.b, &mut self.gb, &mut self.mb);
+        if let Some(mask) = &self.mask {
+            // keep masked weights at exactly zero despite weight decay
+            for (w, &m) in self.w.iter_mut().zip(mask) {
+                *w *= m;
+            }
+        }
+    }
+
+    /// Trainable parameter count (mask-aware).
+    pub fn nparams(&self) -> usize {
+        match &self.mask {
+            None => self.w.len() + self.b.len(),
+            Some(m) => m.iter().filter(|&&v| v > 0.0).count() + self.b.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd_check(layer: &mut Dense, x: &Tensor, eps: f32) {
+        // loss = sum(y); dL/dw finite difference vs backward
+        let y = layer.forward(x, true);
+        let gy = Tensor::from_vec(vec![1.0; y.len()], &y.shape);
+        let gx = layer.backward(&gy);
+        // check a few weight gradients
+        for &idx in &[0usize, 1, layer.w.len() / 2, layer.w.len() - 1] {
+            let orig = layer.w[idx];
+            layer.w[idx] = orig + eps;
+            let yp: f32 = layer.forward(x, false).data.iter().sum();
+            layer.w[idx] = orig - eps;
+            let ym: f32 = layer.forward(x, false).data.iter().sum();
+            layer.w[idx] = orig;
+            let fd = (yp - ym) / (2.0 * eps);
+            assert!(
+                (fd - layer.gw[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "w[{idx}] fd={fd} anal={}",
+                layer.gw[idx]
+            );
+        }
+        // input gradient: dL/dx = sum over outputs of w
+        for bi in 0..x.batch() {
+            for i in 0..layer.in_dim {
+                let want: f32 = (0..layer.out_dim).map(|o| layer.w[o * layer.in_dim + i]).sum();
+                let got = gx.row(bi)[i];
+                assert!((want - got).abs() < 1e-4, "gx[{bi},{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_known_values() {
+        let mut l = Dense::new(2, 2, Init::ConstantPositive, 0);
+        l.w.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]); // rows: out0=[1,2], out1=[3,4]
+        l.b.copy_from_slice(&[0.5, -0.5]);
+        let x = Tensor::from_vec(vec![1.0, 1.0], &[1, 2]);
+        let y = l.forward(&x, false);
+        assert_eq!(y.data, vec![3.5, 6.5]);
+    }
+
+    #[test]
+    fn gradients_match_finite_difference() {
+        let mut l = Dense::new(5, 4, Init::UniformRandom, 42);
+        let x = Tensor::from_vec((0..10).map(|v| v as f32 * 0.1 - 0.4).collect(), &[2, 5]);
+        fd_check(&mut l, &x, 1e-2);
+    }
+
+    #[test]
+    fn mask_zeroes_weights_and_grads() {
+        let mut l = Dense::new(3, 2, Init::ConstantPositive, 0);
+        let mask = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        l.set_mask(mask.clone());
+        for (w, &m) in l.w.iter().zip(&mask) {
+            assert_eq!(*w != 0.0, m != 0.0);
+        }
+        let x = Tensor::from_vec(vec![1.0, 2.0, 3.0], &[1, 3]);
+        let y = l.forward(&x, true);
+        let gy = Tensor::from_vec(vec![1.0; 2], &y.shape);
+        l.backward(&gy);
+        for (g, &m) in l.gw.iter().zip(&mask) {
+            if m == 0.0 {
+                assert_eq!(*g, 0.0);
+            }
+        }
+        assert_eq!(l.nparams(), 3 + 2);
+        // step keeps masked weights zero
+        l.step(&Sgd::default());
+        for (w, &m) in l.w.iter().zip(&mask) {
+            if m == 0.0 {
+                assert_eq!(*w, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn step_moves_downhill() {
+        let mut l = Dense::new(4, 3, Init::UniformRandom, 1);
+        let x = Tensor::from_vec(vec![0.5; 8], &[2, 4]);
+        // loss = sum(y^2)/2 → gy = y; a step should reduce it
+        let mut last = f32::INFINITY;
+        let opt = Sgd { lr: 0.05, momentum: 0.0, weight_decay: 0.0 };
+        for _ in 0..10 {
+            let y = l.forward(&x, true);
+            let loss: f32 = y.data.iter().map(|v| v * v).sum::<f32>() / 2.0;
+            let gy = y.clone();
+            l.backward(&gy);
+            l.step(&opt);
+            assert!(loss <= last * 1.001, "loss increased {last} -> {loss}");
+            last = loss;
+        }
+    }
+
+    #[test]
+    fn freeze_signs_prevents_flips() {
+        let mut l = Dense::new(2, 1, Init::ConstantRandomSign, 3);
+        l.freeze_signs();
+        let signs: Vec<f32> = l.w.iter().map(|v| v.signum()).collect();
+        let x = Tensor::from_vec(vec![5.0, -5.0], &[1, 2]);
+        let opt = Sgd { lr: 1.0, momentum: 0.0, weight_decay: 0.0 };
+        for _ in 0..5 {
+            let y = l.forward(&x, true);
+            let gy = y.clone();
+            l.backward(&gy);
+            l.step(&opt);
+        }
+        for (w, s) in l.w.iter().zip(&signs) {
+            assert!(w * s >= 0.0, "sign flipped: w={w} sign={s}");
+        }
+    }
+}

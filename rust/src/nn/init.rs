@@ -1,0 +1,184 @@
+//! Weight initialization schemes (paper §3.1, §5.4, Table 3).
+//!
+//! The paper's central observation: sparse path networks do **not** need
+//! random initialization — the heterogeneous connectivity breaks the
+//! symmetry that forces dense layers to initialize randomly.  All that
+//! matters is the *magnitude* `w_init`, chosen to control the operator
+//! norm of each neuron's affine map.
+//!
+//! Following the paper's reference to He et al. / Glorot-style analysis
+//! we use the fan-based magnitude
+//! `w_init = sqrt(6 / (fan_in + fan_out))`.  (The paper's text prints
+//! `6/sqrt(fan_in+fan_out)`; the Glorot-uniform bound `sqrt(6/(…))` is
+//! the standard form of the quantity cited and keeps the operator norm
+//! O(1) — see DESIGN.md §Substitutions.)
+
+use crate::rng::{Pcg32, Rng};
+
+/// Magnitude used for constant initialization.
+pub fn w_init_magnitude(fan_in: usize, fan_out: usize) -> f32 {
+    (6.0 / (fan_in + fan_out) as f32).sqrt()
+}
+
+/// The initialization strategies of Table 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Init {
+    /// "Uniformly random": U(−w_init, +w_init).
+    UniformRandom,
+    /// "Constant, positive": every weight `+w_init`.
+    ConstantPositive,
+    /// "Constant, alternating sign": positive for even *neuron* indices
+    /// and negative for odd (paper Table 3 caption).  [`Init::fill`]
+    /// alternates by flat weight index; the layer constructors
+    /// (`Dense::new`, `Conv2d::new`, `SparseMlp::new`) re-stamp the sign
+    /// by output-neuron index, which is the semantics the paper means.
+    ConstantAlternating,
+    /// "Constant, random sign": magnitude `w_init`, sign ±1 uniformly.
+    ConstantRandomSign,
+    /// "Constant, sign along path": magnitude `w_init`, sign given by the
+    /// topology's per-path sign (sparse networks only; §3.2).
+    ConstantSignAlongPath,
+}
+
+impl Init {
+    /// Parse from CLI/config strings.
+    pub fn parse(s: &str) -> Option<Init> {
+        match s {
+            "uniform" | "random" => Some(Init::UniformRandom),
+            "constant" | "constant-positive" => Some(Init::ConstantPositive),
+            "alternating" | "constant-alternating" => Some(Init::ConstantAlternating),
+            "random-sign" | "constant-random-sign" => Some(Init::ConstantRandomSign),
+            "sign-along-path" => Some(Init::ConstantSignAlongPath),
+            _ => None,
+        }
+    }
+
+    /// Human-readable Table 3 row label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Init::UniformRandom => "Uniformly random",
+            Init::ConstantPositive => "Constant, positive",
+            Init::ConstantAlternating => "Constant, alternating sign",
+            Init::ConstantRandomSign => "Constant, random sign",
+            Init::ConstantSignAlongPath => "Constant, sign along path",
+        }
+    }
+
+    /// Fill `w` (flat weight slice) according to the scheme.
+    ///
+    /// * `magnitude` — the constant `w_init`.
+    /// * `path_signs` — per-weight signs for [`Init::ConstantSignAlongPath`]
+    ///   (must be provided for that scheme; one sign per weight slot).
+    /// * `seed` — randomness for the random schemes.
+    pub fn fill(
+        &self,
+        w: &mut [f32],
+        magnitude: f32,
+        path_signs: Option<&[f32]>,
+        seed: u64,
+    ) {
+        let mut rng = Pcg32::seeded(seed);
+        match self {
+            Init::UniformRandom => {
+                for v in w.iter_mut() {
+                    *v = (rng.next_f32() * 2.0 - 1.0) * magnitude;
+                }
+            }
+            Init::ConstantPositive => w.fill(magnitude),
+            Init::ConstantAlternating => {
+                for (i, v) in w.iter_mut().enumerate() {
+                    *v = if i % 2 == 0 { magnitude } else { -magnitude };
+                }
+            }
+            Init::ConstantRandomSign => {
+                for v in w.iter_mut() {
+                    *v = if rng.next_u32() & 1 == 0 { magnitude } else { -magnitude };
+                }
+            }
+            Init::ConstantSignAlongPath => {
+                let signs = path_signs.expect("sign-along-path requires topology signs");
+                assert_eq!(signs.len(), w.len());
+                for (v, &s) in w.iter_mut().zip(signs) {
+                    *v = magnitude * s.signum();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn magnitude_formula() {
+        let m = w_init_magnitude(300, 300);
+        assert!((m - (6.0f32 / 600.0).sqrt()).abs() < 1e-7);
+        assert!(w_init_magnitude(10, 10) > w_init_magnitude(1000, 1000));
+    }
+
+    #[test]
+    fn parse_labels_roundtrip() {
+        for s in ["uniform", "constant", "alternating", "random-sign", "sign-along-path"] {
+            assert!(Init::parse(s).is_some(), "{s}");
+        }
+        assert!(Init::parse("bogus").is_none());
+        assert_eq!(Init::ConstantPositive.label(), "Constant, positive");
+    }
+
+    #[test]
+    fn fill_constant_positive() {
+        let mut w = vec![0.0; 8];
+        Init::ConstantPositive.fill(&mut w, 0.5, None, 0);
+        assert!(w.iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn fill_alternating() {
+        let mut w = vec![0.0; 6];
+        Init::ConstantAlternating.fill(&mut w, 1.0, None, 0);
+        assert_eq!(w, vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn fill_random_sign_balances_roughly() {
+        let mut w = vec![0.0; 10_000];
+        Init::ConstantRandomSign.fill(&mut w, 1.0, None, 3);
+        assert!(w.iter().all(|&v| v.abs() == 1.0));
+        let pos = w.iter().filter(|&&v| v > 0.0).count();
+        assert!((4500..5500).contains(&pos), "pos={pos}");
+    }
+
+    #[test]
+    fn fill_uniform_within_bounds_nonconstant() {
+        let mut w = vec![0.0; 1000];
+        Init::UniformRandom.fill(&mut w, 0.3, None, 5);
+        assert!(w.iter().all(|&v| v.abs() <= 0.3));
+        let distinct: std::collections::HashSet<u32> = w.iter().map(|v| v.to_bits()).collect();
+        assert!(distinct.len() > 900);
+    }
+
+    #[test]
+    fn fill_sign_along_path() {
+        let mut w = vec![0.0; 4];
+        let signs = [1.0f32, -1.0, -1.0, 1.0];
+        Init::ConstantSignAlongPath.fill(&mut w, 2.0, Some(&signs), 0);
+        assert_eq!(w, vec![2.0, -2.0, -2.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sign-along-path requires topology signs")]
+    fn sign_along_path_needs_signs() {
+        let mut w = vec![0.0; 4];
+        Init::ConstantSignAlongPath.fill(&mut w, 1.0, None, 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = vec![0.0; 64];
+        let mut b = vec![0.0; 64];
+        Init::UniformRandom.fill(&mut a, 1.0, None, 9);
+        Init::UniformRandom.fill(&mut b, 1.0, None, 9);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,120 @@
+//! Softmax cross-entropy loss and classification metrics.
+
+use super::tensor::Tensor;
+
+/// Numerically stable softmax cross-entropy.
+///
+/// `logits` `[B, C]`, `labels[b] ∈ 0..C`.  Returns `(mean_loss, dL/dlogits)`
+/// with the gradient already averaged over the batch.
+pub fn softmax_xent(logits: &Tensor, labels: &[u32]) -> (f32, Tensor) {
+    let b = logits.batch();
+    let c = logits.features();
+    assert_eq!(labels.len(), b);
+    let mut grad = Tensor::zeros(&logits.shape);
+    let mut loss = 0.0f64;
+    let inv_b = 1.0 / b as f32;
+    for i in 0..b {
+        let row = logits.row(i);
+        let y = labels[i] as usize;
+        debug_assert!(y < c);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - mx).exp();
+        }
+        let log_z = mx + sum.ln();
+        loss += (log_z - row[y]) as f64;
+        let grow = grad.row_mut(i);
+        for (j, g) in grow.iter_mut().enumerate() {
+            let p = (row[j] - log_z).exp();
+            *g = (p - if j == y { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    ((loss / b as f64) as f32, grad)
+}
+
+/// Fraction of rows whose argmax equals the label.
+pub fn accuracy(logits: &Tensor, labels: &[u32]) -> f64 {
+    let b = logits.batch();
+    assert_eq!(labels.len(), b);
+    let mut correct = 0usize;
+    for i in 0..b {
+        let row = logits.row(i);
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_for_uniform_logits_is_log_c() {
+        let logits = Tensor::zeros(&[4, 10]);
+        let labels = [0u32, 3, 7, 9];
+        let (loss, grad) = softmax_xent(&logits, &labels);
+        assert!((loss - (10.0f32).ln()).abs() < 1e-5);
+        // gradient rows sum to zero
+        for i in 0..4 {
+            let s: f32 = grad.row(i).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn perfect_prediction_low_loss() {
+        let mut logits = Tensor::zeros(&[2, 3]);
+        logits.row_mut(0)[1] = 50.0;
+        logits.row_mut(1)[2] = 50.0;
+        let (loss, _) = softmax_xent(&logits, &[1, 2]);
+        assert!(loss < 1e-5, "loss={loss}");
+        assert_eq!(accuracy(&logits, &[1, 2]), 1.0);
+        assert_eq!(accuracy(&logits, &[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let logits = Tensor::from_vec(vec![0.3, -0.7, 1.2, 0.0, 0.5, -0.1], &[2, 3]);
+        let labels = [2u32, 0];
+        let (_, grad) = softmax_xent(&logits, &labels);
+        let eps = 1e-3f32;
+        for idx in 0..6 {
+            let mut lp = logits.clone();
+            lp.data[idx] += eps;
+            let mut lm = logits.clone();
+            lm.data[idx] -= eps;
+            let (fp, _) = softmax_xent(&lp, &labels);
+            let (fm, _) = softmax_xent(&lm, &labels);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!(
+                (fd - grad.data[idx]).abs() < 1e-3,
+                "idx={idx} fd={fd} grad={}",
+                grad.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn stable_for_large_logits() {
+        let logits = Tensor::from_vec(vec![1e4, -1e4], &[1, 2]);
+        let (loss, grad) = softmax_xent(&logits, &[0]);
+        assert!(loss.is_finite() && loss < 1e-5);
+        assert!(grad.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn accuracy_ties_pick_first() {
+        let logits = Tensor::from_vec(vec![1.0, 1.0], &[1, 2]);
+        assert_eq!(accuracy(&logits, &[0]), 1.0);
+        assert_eq!(accuracy(&logits, &[1]), 0.0);
+    }
+}

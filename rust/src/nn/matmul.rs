@@ -1,0 +1,182 @@
+//! Blocked, multithreaded matrix multiplication kernels for the dense
+//! baselines and the im2col convolutions.
+//!
+//! Row-major layouts throughout.  Three variants cover forward and both
+//! backward products of a linear layer without materializing
+//! transposes:
+//!
+//! * [`matmul_nt`]: `C[M,N] = A[M,K] · B[N,K]ᵀ` — forward (`x · wᵀ`).
+//! * [`matmul_nn`]: `C[M,N] = A[M,K] · B[K,N]` — input gradient (`g · w`).
+//! * [`matmul_tn`]: `C[M,N] = A[K,M]ᵀ · B[K,N]` — weight gradient (`gᵀ · x`).
+//!
+//! The inner loops are written so LLVM auto-vectorizes them; the M
+//! dimension is parallelized across threads.
+
+use crate::util::parallel::parallel_rows;
+
+/// `C[M,N] += A[M,K] · B[N,K]ᵀ`, i.e. dot products of rows — the natural
+/// layout for `y = x · wᵀ` with `w` stored `[out][in]`.
+pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    parallel_rows(c, n, |i, crow| {
+        let arow = &a[i * k..(i + 1) * k];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            // 4-way unrolled dot product: independent accumulator chains
+            // let LLVM keep several FMA pipes busy (EXPERIMENTS.md §Perf)
+            let chunks = k / 4;
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for t in 0..chunks {
+                let base = t * 4;
+                s0 += arow[base] * brow[base];
+                s1 += arow[base + 1] * brow[base + 1];
+                s2 += arow[base + 2] * brow[base + 2];
+                s3 += arow[base + 3] * brow[base + 3];
+            }
+            let mut acc = (s0 + s1) + (s2 + s3);
+            for t in chunks * 4..k {
+                acc += arow[t] * brow[t];
+            }
+            *cv += acc;
+        }
+    });
+}
+
+/// `C[M,N] += A[M,K] · B[K,N]` (classic row-major GEMM, k-panel order so
+/// the B row is streamed and C row stays hot).
+pub fn matmul_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    parallel_rows(c, n, |i, crow| {
+        let arow = &a[i * k..(i + 1) * k];
+        for (t, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let brow = &b[t * n..(t + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// `C[M,N] += A[K,M]ᵀ · B[K,N]` — weight gradients `gᵀ · x` without
+/// transposing `g`.
+pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    parallel_rows(c, n, |i, crow| {
+        // C row i accumulates Σ_t A[t][i] * B[t][:]
+        for t in 0..k {
+            let av = a[t * m + i];
+            if av != 0.0 {
+                let brow = &b[t * n..(t + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg32, Rng};
+
+    fn naive_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for t in 0..k {
+                    c[i * n + j] += a[i * k + t] * b[t * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn rand_vec(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..len).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn nn_matches_naive() {
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (16, 16, 16), (33, 65, 17)] {
+            let a = rand_vec(m * k, 1);
+            let b = rand_vec(k * n, 2);
+            let mut c = vec![0.0; m * n];
+            matmul_nn(&a, &b, &mut c, m, k, n);
+            let want = naive_nn(&a, &b, m, k, n);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn nt_matches_naive_via_transpose() {
+        let (m, k, n) = (9, 13, 11);
+        let a = rand_vec(m * k, 3);
+        let bt = rand_vec(n * k, 4); // B stored [N,K]
+        // build B [K,N] for the naive reference
+        let mut b = vec![0.0; k * n];
+        for j in 0..n {
+            for t in 0..k {
+                b[t * n + j] = bt[j * k + t];
+            }
+        }
+        let mut c = vec![0.0; m * n];
+        matmul_nt(&a, &bt, &mut c, m, k, n);
+        let want = naive_nn(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn tn_matches_naive_via_transpose() {
+        let (m, k, n) = (7, 10, 5);
+        let at = rand_vec(k * m, 5); // A stored [K,M]
+        let b = rand_vec(k * n, 6);
+        let mut a = vec![0.0; m * k];
+        for t in 0..k {
+            for i in 0..m {
+                a[i * k + t] = at[t * m + i];
+            }
+        }
+        let mut c = vec![0.0; m * n];
+        matmul_tn(&at, &b, &mut c, m, k, n);
+        let want = naive_nn(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        let a = [1.0f32, 0.0, 0.0, 1.0];
+        let b = [2.0f32, 0.0, 0.0, 2.0];
+        let mut c = vec![1.0f32; 4];
+        matmul_nn(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, vec![3.0, 1.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn large_parallel_consistency() {
+        let (m, k, n) = (128, 64, 96);
+        let a = rand_vec(m * k, 7);
+        let b = rand_vec(k * n, 8);
+        let mut c1 = vec![0.0; m * n];
+        matmul_nn(&a, &b, &mut c1, m, k, n);
+        // run again; determinism across parallel schedules
+        let mut c2 = vec![0.0; m * n];
+        matmul_nn(&a, &b, &mut c2, m, k, n);
+        assert_eq!(c1, c2);
+    }
+}

@@ -1,0 +1,218 @@
+//! Multilayer perceptrons: the dense baseline of Fig 7 and the masked
+//! dense variant of Table 3 ("Constant, random sign, 90% sparse"), built
+//! from [`super::dense::Dense`] + ReLU.
+//!
+//! (The path-sparse MLP lives in [`super::sparse`]; this module hosts
+//! the matrix-based models it is compared against.)
+
+use super::dense::Dense;
+use super::init::Init;
+use super::optim::Sgd;
+use super::tensor::Tensor;
+use super::Model;
+use crate::rng::{Pcg32, Rng};
+
+/// Dense MLP with ReLU between layers and linear output.
+#[derive(Debug, Clone)]
+pub struct DenseMlp {
+    /// Layer stack.
+    pub layers: Vec<Dense>,
+    relu_mask: Vec<Vec<f32>>,
+}
+
+impl DenseMlp {
+    /// Build from layer sizes (e.g. `[784, 300, 300, 10]`).
+    pub fn new(sizes: &[usize], init: Init, seed: u64) -> Self {
+        assert!(sizes.len() >= 2);
+        let layers = sizes
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| Dense::new(w[0], w[1], init, seed ^ (i as u64) << 13))
+            .collect();
+        DenseMlp { layers, relu_mask: Vec::new() }
+    }
+
+    /// Apply random unstructured sparsity of the given density to every
+    /// layer (Table 3's "Constant, random sign, 90% sparse" row:
+    /// `density = 0.1`).
+    pub fn randomly_sparsify(&mut self, density: f64, seed: u64) {
+        let mut rng = Pcg32::seeded(seed);
+        for layer in &mut self.layers {
+            let mask: Vec<f32> = (0..layer.w.len())
+                .map(|_| if (rng.next_f64()) < density { 1.0 } else { 0.0 })
+                .collect();
+            layer.set_mask(mask);
+        }
+    }
+
+    /// Freeze all weight signs (Table 3 "signs fixed").
+    pub fn freeze_signs(&mut self) {
+        for l in &mut self.layers {
+            l.freeze_signs();
+        }
+    }
+}
+
+impl Model for DenseMlp {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let mut h = x.clone();
+        if train {
+            self.relu_mask.clear();
+        }
+        let last = self.layers.len() - 1;
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            h = layer.forward(&h, train);
+            if i != last {
+                if train {
+                    self.relu_mask.push(h.data.iter().map(|&v| (v > 0.0) as u8 as f32).collect());
+                }
+                h = h.relu();
+            }
+        }
+        h
+    }
+
+    fn backward(&mut self, glogits: &Tensor) {
+        let mut g = glogits.clone();
+        let last = self.layers.len() - 1;
+        for i in (0..self.layers.len()).rev() {
+            if i != last {
+                let mask = &self.relu_mask[i];
+                for (gv, &m) in g.data.iter_mut().zip(mask) {
+                    *gv *= m;
+                }
+            }
+            g = self.layers[i].backward(&g);
+        }
+    }
+
+    fn step(&mut self, opt: &Sgd) {
+        for l in &mut self.layers {
+            l.step(opt);
+        }
+    }
+
+    fn nparams(&self) -> usize {
+        self.layers.iter().map(|l| l.nparams()).sum()
+    }
+
+    fn nnz(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match &l.mask {
+                None => l.w.len(),
+                Some(m) => m.iter().filter(|&&v| v > 0.0).count(),
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::{accuracy, softmax_xent};
+
+    #[test]
+    fn shapes_and_counts() {
+        let mlp = DenseMlp::new(&[784, 300, 300, 10], Init::UniformRandom, 0);
+        assert_eq!(mlp.nparams(), 784 * 300 + 300 + 300 * 300 + 300 + 300 * 10 + 10);
+        assert_eq!(mlp.nnz(), 784 * 300 + 300 * 300 + 300 * 10);
+    }
+
+    #[test]
+    fn forward_backward_run() {
+        let mut mlp = DenseMlp::new(&[8, 16, 4], Init::UniformRandom, 1);
+        let x = Tensor::from_vec((0..16).map(|v| v as f32 * 0.1).collect(), &[2, 8]);
+        let y = mlp.forward(&x, true);
+        assert_eq!(y.shape, vec![2, 4]);
+        let (_, g) = softmax_xent(&y, &[0, 3]);
+        mlp.backward(&g);
+        mlp.step(&Sgd::default());
+    }
+
+    #[test]
+    fn relu_gradient_gating() {
+        // finite-difference through the whole MLP
+        let mut mlp = DenseMlp::new(&[4, 6, 3], Init::UniformRandom, 5);
+        let x = Tensor::from_vec(vec![0.3, -0.2, 0.8, 0.1], &[1, 4]);
+        let labels = [2u32];
+        let logits = mlp.forward(&x, true);
+        let (_, g) = softmax_xent(&logits, &labels);
+        mlp.backward(&g);
+        let gw0 = mlp.layers[0].w.clone();
+        let grad0: Vec<f32> = {
+            // recover accumulated gradient by re-running a step with lr so
+            // small it's readable: instead, access via finite difference
+            let eps = 1e-3;
+            (0..gw0.len())
+                .map(|i| {
+                    let orig = mlp.layers[0].w[i];
+                    mlp.layers[0].w[i] = orig + eps;
+                    let (lp, _) = softmax_xent(&mlp.forward(&x, false), &labels);
+                    mlp.layers[0].w[i] = orig - eps;
+                    let (lm, _) = softmax_xent(&mlp.forward(&x, false), &labels);
+                    mlp.layers[0].w[i] = orig;
+                    (lp - lm) / (2.0 * eps)
+                })
+                .collect()
+        };
+        // compare against a fresh backward's accumulated grads
+        let logits = mlp.forward(&x, true);
+        let (_, g) = softmax_xent(&logits, &labels);
+        mlp.backward(&g);
+        // pull grads via step with momentum 0 and lr 1: w' = w - g
+        let before = mlp.layers[0].w.clone();
+        mlp.step(&Sgd { lr: 1.0, momentum: 0.0, weight_decay: 0.0 });
+        // note: backward was called twice without step, so grads doubled
+        for (i, fd) in grad0.iter().enumerate() {
+            let anal = (before[i] - mlp.layers[0].w[i]) / 2.0;
+            assert!(
+                (fd - anal).abs() < 2e-2 * (1.0 + fd.abs()),
+                "i={i} fd={fd} anal={anal}"
+            );
+        }
+    }
+
+    #[test]
+    fn constant_init_dense_cannot_learn() {
+        // §3.1/Table 3: constant positive init on a dense net keeps all
+        // neurons identical — accuracy stays at chance.
+        let mut mlp = DenseMlp::new(&[8, 16, 16, 4], Init::ConstantPositive, 0);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..64 {
+            let cls = rng.next_below(4);
+            let mut v = vec![0.1f32; 8];
+            v[cls as usize * 2] = 1.0;
+            v[cls as usize * 2 + 1] = 1.0;
+            xs.extend(v);
+            ys.push(cls);
+        }
+        let x = Tensor::from_vec(xs, &[64, 8]);
+        let opt = Sgd { lr: 0.05, momentum: 0.9, weight_decay: 0.0 };
+        for _ in 0..100 {
+            let logits = mlp.forward(&x, true);
+            let (_, g) = softmax_xent(&logits, &ys);
+            mlp.backward(&g);
+            mlp.step(&opt);
+        }
+        let acc = accuracy(&mlp.forward(&x, false), &ys);
+        assert!(acc < 0.5, "dense constant-init should stay near chance, acc={acc}");
+        // hidden neurons remain identical
+        let w = &mlp.layers[1].w;
+        let row0: Vec<f32> = w[..16].to_vec();
+        let row1: Vec<f32> = w[16..32].to_vec();
+        assert_eq!(row0, row1, "identical neurons under constant init");
+    }
+
+    #[test]
+    fn random_sparsify_density() {
+        let mut mlp = DenseMlp::new(&[100, 100, 10], Init::ConstantRandomSign, 2);
+        mlp.randomly_sparsify(0.1, 7);
+        let nnz = mlp.nnz();
+        let total = 100 * 100 + 100 * 10;
+        let density = nnz as f64 / total as f64;
+        assert!((0.07..0.13).contains(&density), "density={density}");
+    }
+}

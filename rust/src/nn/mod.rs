@@ -1,0 +1,48 @@
+//! Pure-rust neural network engine.
+//!
+//! Implements both the paper's **path-sparse** networks (the Fig 3
+//! algorithm, [`sparse::SparseMlp`], and the channel-sparse CNN
+//! [`cnn::Cnn`]) and their **dense** baselines, together with the
+//! optimizer, losses, batch norm, and the training loop.
+//!
+//! This engine drives the table/figure reproduction benches where
+//! arbitrary widths and path counts are swept; the AOT JAX/Pallas stack
+//! ([`crate::runtime`] + `python/compile/`) carries the fixed-shape
+//! MLP end-to-end (training and serving) to prove the three-layer
+//! architecture.
+
+pub mod batchnorm;
+pub mod cnn;
+pub mod conv;
+pub mod dense;
+pub mod init;
+pub mod loss;
+pub mod matmul;
+pub mod mlp;
+pub mod optim;
+pub mod sparse;
+pub mod tensor;
+pub mod trainer;
+
+use optim::Sgd;
+use tensor::Tensor;
+
+/// A trainable classifier: maps `[B, features…]` to logits `[B, C]`.
+pub trait Model {
+    /// Forward pass; when `train`, caches whatever backward needs.
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor;
+
+    /// Backward from the loss gradient w.r.t. the logits; accumulates
+    /// parameter gradients internally.
+    fn backward(&mut self, glogits: &Tensor);
+
+    /// Apply one optimizer step and clear gradients.
+    fn step(&mut self, opt: &Sgd);
+
+    /// Number of trainable parameters (sparsity-aware).
+    fn nparams(&self) -> usize;
+
+    /// Effective non-zero weights (coalesced duplicate edges counted
+    /// once; excludes biases and batch-norm parameters).
+    fn nnz(&self) -> usize;
+}

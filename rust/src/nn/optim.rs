@@ -1,0 +1,170 @@
+//! Stochastic gradient descent with momentum and weight decay, plus the
+//! paper's step-decay learning-rate schedule (§5.2: SGD momentum 0.9,
+//! lr 0.1 decayed ×0.1 at epochs 91 and 136 of 182 ⇒ at 50% and 75%),
+//! and the fixed-sign constraint of Table 3 ("signs fixed, train only
+//! magnitude").
+
+/// SGD hyperparameters; `lr` is the *current* learning rate (the trainer
+/// applies the schedule).
+#[derive(Debug, Clone, Copy)]
+pub struct Sgd {
+    /// Current learning rate.
+    pub lr: f32,
+    /// Momentum coefficient (0 = plain SGD).
+    pub momentum: f32,
+    /// L2 weight decay coefficient.
+    pub weight_decay: f32,
+}
+
+impl Default for Sgd {
+    fn default() -> Self {
+        Sgd { lr: 0.1, momentum: 0.9, weight_decay: 1e-4 }
+    }
+}
+
+impl Sgd {
+    /// One parameter-group update: `m ← μ·m + g + wd·w`, `w ← w − lr·m`,
+    /// then zero the gradient.  If `fixed_signs` is given, weights whose
+    /// update would flip the stored sign are clamped to zero magnitude
+    /// (training only magnitudes, paper Table 3 / §3.2).
+    pub fn update(
+        &self,
+        w: &mut [f32],
+        g: &mut [f32],
+        m: &mut [f32],
+        fixed_signs: Option<&[f32]>,
+    ) {
+        debug_assert_eq!(w.len(), g.len());
+        debug_assert_eq!(w.len(), m.len());
+        for i in 0..w.len() {
+            let grad = g[i] + self.weight_decay * w[i];
+            m[i] = self.momentum * m[i] + grad;
+            w[i] -= self.lr * m[i];
+            g[i] = 0.0;
+        }
+        if let Some(signs) = fixed_signs {
+            debug_assert_eq!(w.len(), signs.len());
+            for i in 0..w.len() {
+                // sign(w) must stay sign(signs[i]); clamp crossings to 0.
+                if w[i] * signs[i] < 0.0 {
+                    w[i] = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Update without weight decay (biases, batch-norm parameters).
+    pub fn update_no_decay(&self, w: &mut [f32], g: &mut [f32], m: &mut [f32]) {
+        let nodecay = Sgd { weight_decay: 0.0, ..*self };
+        nodecay.update(w, g, m, None);
+    }
+}
+
+/// Learning-rate schedules.
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    /// Constant learning rate.
+    Constant(f32),
+    /// Paper schedule: `base` decayed by ×`factor` at each fraction of
+    /// total epochs in `milestones` (e.g. `[0.5, 0.75]`).
+    StepDecay {
+        /// Initial learning rate.
+        base: f32,
+        /// Multiplicative decay applied at each milestone.
+        factor: f32,
+        /// Milestones as fractions of total epochs, ascending.
+        milestones: Vec<f32>,
+    },
+}
+
+impl LrSchedule {
+    /// Paper §5.2 default: 0.1, ×0.1 at 50% and 75%.
+    pub fn paper_default() -> Self {
+        LrSchedule::StepDecay { base: 0.1, factor: 0.1, milestones: vec![0.5, 0.75] }
+    }
+
+    /// Learning rate for `epoch` (0-based) of `total` epochs.
+    pub fn lr_at(&self, epoch: usize, total: usize) -> f32 {
+        match self {
+            LrSchedule::Constant(lr) => *lr,
+            LrSchedule::StepDecay { base, factor, milestones } => {
+                let frac = (epoch as f32 + 0.5) / total.max(1) as f32;
+                let hits = milestones.iter().filter(|&&m| frac >= m).count() as i32;
+                base * factor.powi(hits)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_step() {
+        let opt = Sgd { lr: 0.5, momentum: 0.0, weight_decay: 0.0 };
+        let mut w = vec![1.0f32];
+        let mut g = vec![2.0f32];
+        let mut m = vec![0.0f32];
+        opt.update(&mut w, &mut g, &mut m, None);
+        assert_eq!(w[0], 0.0); // 1 - 0.5*2
+        assert_eq!(g[0], 0.0, "gradient zeroed");
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let opt = Sgd { lr: 1.0, momentum: 0.5, weight_decay: 0.0 };
+        let mut w = vec![0.0f32];
+        let mut m = vec![0.0f32];
+        let mut g = vec![1.0f32];
+        opt.update(&mut w, &mut g, &mut m, None); // m=1, w=-1
+        g[0] = 1.0;
+        opt.update(&mut w, &mut g, &mut m, None); // m=1.5, w=-2.5
+        assert!((w[0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let opt = Sgd { lr: 0.1, momentum: 0.0, weight_decay: 1.0 };
+        let mut w = vec![1.0f32];
+        let mut g = vec![0.0f32];
+        let mut m = vec![0.0f32];
+        opt.update(&mut w, &mut g, &mut m, None);
+        assert!((w[0] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fixed_signs_clamp_crossings() {
+        let opt = Sgd { lr: 1.0, momentum: 0.0, weight_decay: 0.0 };
+        let signs = vec![1.0f32, -1.0];
+        let mut w = vec![0.5f32, -0.5];
+        let mut g = vec![2.0f32, -2.0]; // would push w to -1.5 and +1.5
+        let mut m = vec![0.0f32; 2];
+        opt.update(&mut w, &mut g, &mut m, Some(&signs));
+        assert_eq!(w, vec![0.0, 0.0], "crossing weights clamp to zero");
+        // non-crossing updates pass through
+        let mut w = vec![0.5f32, -0.5];
+        let mut g = vec![-0.1f32, 0.1];
+        let mut m = vec![0.0f32; 2];
+        opt.update(&mut w, &mut g, &mut m, Some(&signs));
+        assert!(w[0] > 0.5 && w[1] < -0.5);
+    }
+
+    #[test]
+    fn schedule_paper_default() {
+        let s = LrSchedule::paper_default();
+        let total = 182;
+        assert!((s.lr_at(0, total) - 0.1).abs() < 1e-7);
+        assert!((s.lr_at(90, total) - 0.1).abs() < 1e-7, "before 50%");
+        assert!((s.lr_at(91, total) - 0.01).abs() < 1e-7, "after 50%");
+        assert!((s.lr_at(136, total) - 0.001).abs() < 1e-7, "after 75%");
+        assert!((s.lr_at(181, total) - 0.001).abs() < 1e-7);
+    }
+
+    #[test]
+    fn schedule_constant() {
+        let s = LrSchedule::Constant(0.05);
+        assert_eq!(s.lr_at(0, 10), 0.05);
+        assert_eq!(s.lr_at(9, 10), 0.05);
+    }
+}

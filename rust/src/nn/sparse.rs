@@ -1,0 +1,488 @@
+//! The paper's Fig 3 algorithm: an MLP represented by paths, trained
+//! sparse from scratch.
+//!
+//! Weights are stored per `(transition, path)` and streamed **linearly**
+//! during both inference and backpropagation — the paper's §3/§4.4
+//! memory-access argument.  Activations are held in `[neurons, batch]`
+//! layout so the per-path inner loop over the batch is contiguous and
+//! vectorizes.
+//!
+//! The ReLU is implicit exactly as in Fig 3: a path contributes only if
+//! its source activation is positive.
+
+use super::init::{w_init_magnitude, Init};
+use super::optim::Sgd;
+use super::tensor::Tensor;
+use super::Model;
+use crate::topology::PathTopology;
+
+/// Configuration for [`SparseMlp`].
+#[derive(Debug, Clone, Copy)]
+pub struct SparseMlpConfig {
+    /// Weight initialization scheme (Table 3).
+    pub init: Init,
+    /// Seed for random initialization schemes.
+    pub seed: u64,
+    /// Use per-neuron biases (`bias[i]` in Fig 3).
+    pub bias: bool,
+    /// Freeze the initial signs and train only magnitudes (§3.2).
+    pub freeze_signs: bool,
+}
+
+impl Default for SparseMlpConfig {
+    fn default() -> Self {
+        SparseMlpConfig { init: Init::ConstantPositive, seed: 0, bias: true, freeze_signs: false }
+    }
+}
+
+/// Path-sparse multilayer perceptron (paper Fig 3).
+#[derive(Debug, Clone)]
+pub struct SparseMlp {
+    /// The path topology (owns `index[][]`).
+    pub topo: PathTopology,
+    /// Path weights `w[t][p]` — streamed linearly.
+    pub w: Vec<Vec<f32>>,
+    /// Per-neuron biases of layers 1..=L (empty vecs when disabled).
+    pub bias: Vec<Vec<f32>>,
+    /// Fixed signs per weight (set when `freeze_signs`).
+    pub fixed_signs: Option<Vec<Vec<f32>>>,
+    gw: Vec<Vec<f32>>,
+    mw: Vec<Vec<f32>>,
+    gb: Vec<Vec<f32>>,
+    mb: Vec<Vec<f32>>,
+    /// Cached pre-activations per layer in `[n, B]` layout (train mode);
+    /// `z[0]` is the raw input.
+    z: Vec<Vec<f32>>,
+    zbatch: usize,
+}
+
+impl SparseMlp {
+    /// Build a sparse MLP over `topo` with the given config.
+    pub fn new(topo: &PathTopology, cfg: SparseMlpConfig) -> Self {
+        let t_cnt = topo.transitions();
+        let p = topo.paths;
+        let mut w: Vec<Vec<f32>> = Vec::with_capacity(t_cnt);
+        for t in 0..t_cnt {
+            let mut wt = vec![0.0f32; p];
+            // magnitude from the average valence of this transition
+            let fan_in = (p as f32 / topo.layer_sizes[t + 1] as f32).max(1.0) as usize;
+            let fan_out = (p as f32 / topo.layer_sizes[t] as f32).max(1.0) as usize;
+            let mag = w_init_magnitude(fan_in, fan_out);
+            let signs_per_weight: Option<Vec<f32>> =
+                topo.signs.as_ref().map(|s| s.to_vec());
+            cfg.init.fill(
+                &mut wt,
+                mag,
+                signs_per_weight.as_deref(),
+                cfg.seed ^ (t as u64) << 17,
+            );
+            if cfg.init == Init::ConstantAlternating {
+                // paper semantics: sign by destination NEURON index
+                for (p, wv) in wt.iter_mut().enumerate() {
+                    let dst = topo.index[t + 1][p];
+                    *wv = if dst % 2 == 0 { mag } else { -mag };
+                }
+            }
+            w.push(wt);
+        }
+        let bias: Vec<Vec<f32>> = (1..topo.layer_sizes.len())
+            .map(|l| if cfg.bias { vec![0.0; topo.layer_sizes[l]] } else { Vec::new() })
+            .collect();
+        let fixed_signs = if cfg.freeze_signs {
+            Some(
+                w.iter()
+                    .map(|wt| wt.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect())
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let gw = w.iter().map(|wt| vec![0.0; wt.len()]).collect();
+        let mw = w.iter().map(|wt| vec![0.0; wt.len()]).collect();
+        let gb = bias.iter().map(|b| vec![0.0; b.len()]).collect();
+        let mb = bias.iter().map(|b| vec![0.0; b.len()]).collect();
+        SparseMlp {
+            topo: topo.clone(),
+            w,
+            bias,
+            fixed_signs,
+            gw,
+            mw,
+            gb,
+            mb,
+            z: Vec::new(),
+            zbatch: 0,
+        }
+    }
+
+    /// Transpose `[B, n]` → `[n, B]`.
+    fn transpose_in(x: &Tensor, n: usize) -> Vec<f32> {
+        let b = x.batch();
+        assert_eq!(x.features(), n);
+        let mut out = vec![0.0f32; n * b];
+        for bi in 0..b {
+            let row = x.row(bi);
+            for (i, &v) in row.iter().enumerate() {
+                out[i * b + bi] = v;
+            }
+        }
+        out
+    }
+
+    /// Transpose `[n, B]` → `[B, n]` tensor.
+    fn transpose_out(z: &[f32], n: usize, b: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[b, n]);
+        for i in 0..n {
+            for bi in 0..b {
+                t.data[bi * n + i] = z[i * b + bi];
+            }
+        }
+        t
+    }
+
+    /// The paper's Fig 3 inference loop, scalar and literal, for a
+    /// single input — used as the correctness oracle in tests.
+    pub fn fig3_reference(&self, input: &[f32]) -> Vec<f32> {
+        let sizes = &self.topo.layer_sizes;
+        let total: usize = sizes.iter().sum();
+        let mut a = vec![0.0f32; total];
+        a[..sizes[0]].copy_from_slice(input);
+        // offsets of each layer in the flat activation array
+        let mut off = vec![0usize; sizes.len()];
+        for l in 1..sizes.len() {
+            off[l] = off[l - 1] + sizes[l - 1];
+            // biases (Fig 3: "or bias[i], if bias terms are used")
+            if !self.bias[l - 1].is_empty() {
+                for (i, &b) in self.bias[l - 1].iter().enumerate() {
+                    a[off[l] + i] = b;
+                }
+            }
+        }
+        for l in 1..sizes.len() {
+            for p in 0..self.topo.paths {
+                let prev = off[l - 1] + self.topo.index[l - 1][p] as usize;
+                if a[prev] > 0.0 {
+                    let cur = off[l] + self.topo.index[l][p] as usize;
+                    a[cur] += self.w[l - 1][p] * a[prev];
+                }
+            }
+        }
+        a[off[sizes.len() - 1]..].to_vec()
+    }
+}
+
+impl Model for SparseMlp {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let sizes = &self.topo.layer_sizes;
+        let b = x.batch();
+        let mut z: Vec<Vec<f32>> = Vec::with_capacity(sizes.len());
+        z.push(Self::transpose_in(x, sizes[0]));
+        for t in 0..self.topo.transitions() {
+            let n_out = sizes[t + 1];
+            let mut znext = vec![0.0f32; n_out * b];
+            if !self.bias[t].is_empty() {
+                for (i, &bv) in self.bias[t].iter().enumerate() {
+                    znext[i * b..(i + 1) * b].fill(bv);
+                }
+            }
+            let src_idx = &self.topo.index[t];
+            let dst_idx = &self.topo.index[t + 1];
+            let wt = &self.w[t];
+            let zprev = &z[t];
+            for p in 0..self.topo.paths {
+                let s = src_idx[p] as usize * b;
+                let d = dst_idx[p] as usize * b;
+                let w = wt[p];
+                let (src, dst) = (&zprev[s..s + b], &mut znext[d..d + b]);
+                // branchless ReLU gate: w·max(v,0) — vectorizes cleanly
+                // (EXPERIMENTS.md §Perf)
+                for bi in 0..b {
+                    dst[bi] += w * src[bi].max(0.0);
+                }
+            }
+            z.push(znext);
+        }
+        let logits = Self::transpose_out(z.last().unwrap(), sizes[sizes.len() - 1], b);
+        if train {
+            self.z = z;
+            self.zbatch = b;
+        }
+        logits
+    }
+
+    fn backward(&mut self, glogits: &Tensor) {
+        let sizes = &self.topo.layer_sizes;
+        let b = self.zbatch;
+        assert_eq!(glogits.batch(), b, "forward(train=true) must precede backward");
+        let mut gz = Self::transpose_in(glogits, sizes[sizes.len() - 1]);
+        for t in (0..self.topo.transitions()).rev() {
+            // bias gradients: row sums of gz (layer t+1)
+            if !self.bias[t].is_empty() {
+                for i in 0..sizes[t + 1] {
+                    let mut s = 0.0f32;
+                    for bi in 0..b {
+                        s += gz[i * b + bi];
+                    }
+                    self.gb[t][i] += s;
+                }
+            }
+            let src_idx = &self.topo.index[t];
+            let dst_idx = &self.topo.index[t + 1];
+            let wt = &self.w[t];
+            let gwt = &mut self.gw[t];
+            let zprev = &self.z[t];
+            let mut gprev = vec![0.0f32; sizes[t] * b];
+            for p in 0..self.topo.paths {
+                let s = src_idx[p] as usize * b;
+                let d = dst_idx[p] as usize * b;
+                let w = wt[p];
+                let mut gacc = 0.0f32;
+                let (src, gout) = (&zprev[s..s + b], &gz[d..d + b]);
+                let gsrc = &mut gprev[s..s + b];
+                // branchless gating: the (v > 0) indicator multiplies
+                // both products, letting LLVM vectorize the loop
+                for bi in 0..b {
+                    let v = src[bi];
+                    let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
+                    let g = gout[bi] * gate;
+                    gacc += g * v;
+                    gsrc[bi] += w * g;
+                }
+                gwt[p] += gacc;
+            }
+            gz = gprev;
+        }
+    }
+
+    fn step(&mut self, opt: &Sgd) {
+        for t in 0..self.w.len() {
+            let signs = self.fixed_signs.as_ref().map(|s| s[t].as_slice());
+            opt.update(&mut self.w[t], &mut self.gw[t], &mut self.mw[t], signs);
+            if !self.bias[t].is_empty() {
+                opt.update_no_decay(&mut self.bias[t], &mut self.gb[t], &mut self.mb[t]);
+            }
+        }
+    }
+
+    fn nparams(&self) -> usize {
+        self.w.iter().map(|w| w.len()).sum::<usize>()
+            + self.bias.iter().map(|b| b.len()).sum::<usize>()
+    }
+
+    fn nnz(&self) -> usize {
+        self.topo.nnz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::softmax_xent;
+    use crate::topology::{PathSource, SignPolicy, TopologyBuilder};
+
+    fn topo(sizes: &[usize], paths: usize) -> PathTopology {
+        TopologyBuilder::new(sizes)
+            .paths(paths)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+            .build()
+    }
+
+    #[test]
+    fn forward_matches_fig3_reference() {
+        let t = topo(&[8, 16, 16, 4], 64);
+        let mut net = SparseMlp::new(
+            &t,
+            SparseMlpConfig { init: Init::UniformRandom, seed: 3, bias: true, freeze_signs: false },
+        );
+        // non-trivial biases
+        for bl in net.bias.iter_mut() {
+            for (i, v) in bl.iter_mut().enumerate() {
+                *v = 0.01 * i as f32 - 0.02;
+            }
+        }
+        let input: Vec<f32> = (0..8).map(|i| (i as f32 * 0.37).sin()).collect();
+        let x = Tensor::from_vec(input.clone(), &[1, 8]);
+        let batched = net.forward(&x, false);
+        let reference = net.fig3_reference(&input);
+        for (a, b) in batched.row(0).iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batching_is_consistent_with_single() {
+        let t = topo(&[6, 8, 4], 32);
+        let mut net = SparseMlp::new(
+            &t,
+            SparseMlpConfig { init: Init::UniformRandom, seed: 1, ..Default::default() },
+        );
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|k| (0..6).map(|i| ((i + k) as f32 * 0.31).cos()).collect())
+            .collect();
+        let flat: Vec<f32> = xs.iter().flatten().cloned().collect();
+        let batch = net.forward(&Tensor::from_vec(flat, &[5, 6]), false);
+        for (k, xrow) in xs.iter().enumerate() {
+            let single = net.forward(&Tensor::from_vec(xrow.clone(), &[1, 6]), false);
+            for (a, b) in batch.row(k).iter().zip(single.row(0)) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_difference() {
+        let t = topo(&[5, 7, 3], 24);
+        let mut net = SparseMlp::new(
+            &t,
+            SparseMlpConfig { init: Init::UniformRandom, seed: 7, bias: true, freeze_signs: false },
+        );
+        let x = Tensor::from_vec(
+            (0..10).map(|i| (i as f32 * 0.7).sin().abs() + 0.1).collect(),
+            &[2, 5],
+        );
+        let labels = [1u32, 2];
+        let logits = net.forward(&x, true);
+        let (_, glogits) = softmax_xent(&logits, &labels);
+        net.backward(&glogits);
+        let eps = 1e-3f32;
+        // check several weight gradients per transition
+        for t_i in 0..net.w.len() {
+            for &p in &[0usize, 5, 11, 23] {
+                let orig = net.w[t_i][p];
+                net.w[t_i][p] = orig + eps;
+                let (lp, _) = softmax_xent(&net.forward(&x, false), &labels);
+                net.w[t_i][p] = orig - eps;
+                let (lm, _) = softmax_xent(&net.forward(&x, false), &labels);
+                net.w[t_i][p] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let anal = net.gw[t_i][p];
+                assert!(
+                    (fd - anal).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "t={t_i} p={p} fd={fd} anal={anal}"
+                );
+            }
+        }
+        // bias gradients
+        for t_i in 0..net.bias.len() {
+            for i in [0usize, 1] {
+                if i >= net.bias[t_i].len() {
+                    continue;
+                }
+                let orig = net.bias[t_i][i];
+                net.bias[t_i][i] = orig + eps;
+                let (lp, _) = softmax_xent(&net.forward(&x, false), &labels);
+                net.bias[t_i][i] = orig - eps;
+                let (lm, _) = softmax_xent(&net.forward(&x, false), &labels);
+                net.bias[t_i][i] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let anal = net.gb[t_i][i];
+                assert!(
+                    (fd - anal).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "bias t={t_i} i={i} fd={fd} anal={anal}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn constant_init_trains_on_toy_task() {
+        // §3.1: constant init works for sparse nets. Tiny binary task:
+        // class = which half of the input has larger mass.
+        //
+        // Paths stay below the 8×16 edge capacity: at exact saturation
+        // every edge exists exactly once and half/half signed constant
+        // init cancels into an exact mirror symmetry (see EXPERIMENTS.md
+        // §Findings — the degenerate regime behind the paper's Table 1
+        // scrambling discussion); the sparse regime is the paper's
+        // operating point.
+        let t = TopologyBuilder::new(&[8, 16, 16, 2])
+            .paths(96)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+            .sign_policy(SignPolicy::FirstHalfPositive)
+            .build();
+        let mut net = SparseMlp::new(
+            &t,
+            SparseMlpConfig {
+                init: Init::ConstantSignAlongPath,
+                seed: 0,
+                bias: true,
+                freeze_signs: false,
+            },
+        );
+        let mk = |seed: u64| {
+            use crate::rng::{Pcg32, Rng};
+            let mut rng = Pcg32::seeded(seed);
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for _ in 0..64 {
+                let cls = rng.next_u32() & 1;
+                let mut v = vec![0.1f32; 8];
+                for i in 0..4 {
+                    let idx = if cls == 0 { i } else { 4 + i };
+                    v[idx] = 0.5 + rng.next_f32() * 0.5;
+                }
+                xs.extend(v);
+                ys.push(cls);
+            }
+            (Tensor::from_vec(xs, &[64, 8]), ys)
+        };
+        let opt = Sgd { lr: 0.05, momentum: 0.9, weight_decay: 0.0 };
+        let (xtr, ytr) = mk(1);
+        let mut first_loss = 0.0;
+        let mut last_loss = 0.0;
+        for step in 0..150 {
+            let logits = net.forward(&xtr, true);
+            let (loss, g) = softmax_xent(&logits, &ytr);
+            if step == 0 {
+                first_loss = loss;
+            }
+            last_loss = loss;
+            net.backward(&g);
+            net.step(&opt);
+        }
+        assert!(
+            last_loss < 0.5 * first_loss,
+            "constant-init sparse net should learn: {first_loss} -> {last_loss}"
+        );
+        let (xte, yte) = mk(2);
+        let acc = crate::nn::loss::accuracy(&net.forward(&xte, false), &yte);
+        assert!(acc > 0.8, "test acc {acc}");
+    }
+
+    #[test]
+    fn freeze_signs_keeps_signs() {
+        let t = topo(&[6, 8, 2], 32);
+        let mut net = SparseMlp::new(
+            &t,
+            SparseMlpConfig {
+                init: Init::ConstantAlternating,
+                seed: 0,
+                bias: false,
+                freeze_signs: true,
+            },
+        );
+        let signs: Vec<Vec<f32>> =
+            net.w.iter().map(|wt| wt.iter().map(|v| v.signum()).collect()).collect();
+        let x = Tensor::from_vec(vec![0.5; 12], &[2, 6]);
+        let opt = Sgd { lr: 0.5, momentum: 0.0, weight_decay: 0.0 };
+        for _ in 0..20 {
+            let logits = net.forward(&x, true);
+            let (_, g) = softmax_xent(&logits, &[0, 1]);
+            net.backward(&g);
+            net.step(&opt);
+        }
+        for (wt, st) in net.w.iter().zip(&signs) {
+            for (w, s) in wt.iter().zip(st) {
+                assert!(w * s >= 0.0, "sign flipped");
+            }
+        }
+    }
+
+    #[test]
+    fn nparams_and_nnz() {
+        let t = topo(&[8, 16, 4], 64);
+        let net = SparseMlp::new(&t, Default::default());
+        assert_eq!(net.nparams(), 2 * 64 + 16 + 4);
+        assert!(net.nnz() <= 128);
+    }
+}

@@ -1,0 +1,148 @@
+//! A minimal row-major f32 tensor for the pure-rust engine.
+//!
+//! Deliberately simple: contiguous `Vec<f32>` plus a shape.  The engine
+//! only needs 2-D `[batch, features]` and 4-D `[batch, c, h, w]` views,
+//! elementwise ops, and matmul (in [`super::matmul`]).
+
+/// Row-major dense tensor of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    /// Flat storage, row-major.
+    pub data: Vec<f32>,
+    /// Dimension sizes.
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    /// All-zero tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Tensor from existing data (checked).
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// First shape dimension (batch size by convention).
+    pub fn batch(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Product of all dims except the first (features per sample).
+    pub fn features(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.len(), shape.iter().product::<usize>(), "reshape size mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row `b` of a 2-D view `[batch, features]`.
+    pub fn row(&self, b: usize) -> &[f32] {
+        let f = self.features();
+        &self.data[b * f..(b + 1) * f]
+    }
+
+    /// Mutable row.
+    pub fn row_mut(&mut self, b: usize) -> &mut [f32] {
+        let f = self.features();
+        &mut self.data[b * f..(b + 1) * f]
+    }
+
+    /// Elementwise ReLU (new tensor).
+    pub fn relu(&self) -> Tensor {
+        Tensor {
+            data: self.data.iter().map(|&v| v.max(0.0)).collect(),
+            shape: self.shape.clone(),
+        }
+    }
+
+    /// In-place `self += other`.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Max absolute difference against another tensor (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_views() {
+        let t = Tensor::zeros(&[4, 3]);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.batch(), 4);
+        assert_eq!(t.features(), 3);
+        let t = Tensor::from_vec((0..12).map(|v| v as f32).collect(), &[4, 3]);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        let t4 = t.clone().reshape(&[2, 2, 3, 1]);
+        assert_eq!(t4.shape, vec![2, 2, 3, 1]);
+        assert_eq!(t4.features(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape size mismatch")]
+    fn bad_reshape_panics() {
+        let _ = Tensor::zeros(&[2, 2]).reshape(&[5]);
+    }
+
+    #[test]
+    fn elementwise() {
+        let mut a = Tensor::from_vec(vec![-1.0, 2.0], &[2]);
+        let r = a.relu();
+        assert_eq!(r.data, vec![0.0, 2.0]);
+        a.add_assign(&Tensor::from_vec(vec![1.0, 1.0], &[2]));
+        assert_eq!(a.data, vec![0.0, 3.0]);
+        a.scale(2.0);
+        assert_eq!(a.data, vec![0.0, 6.0]);
+        assert_eq!(a.max_abs_diff(&Tensor::from_vec(vec![0.0, 5.0], &[2])), 1.0);
+        assert!((Tensor::from_vec(vec![3.0, 4.0], &[2]).norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn row_mut_writes() {
+        let mut t = Tensor::zeros(&[2, 2]);
+        t.row_mut(1).copy_from_slice(&[7.0, 8.0]);
+        assert_eq!(t.data, vec![0.0, 0.0, 7.0, 8.0]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Training loop: epochs, shuffled mini-batches, learning-rate schedule,
+//! optional augmentation, and per-epoch evaluation — the shared driver
+//! of every experiment bench.
+
+use super::loss::{accuracy, softmax_xent};
+use super::optim::{LrSchedule, Sgd};
+use super::tensor::Tensor;
+use super::Model;
+use crate::data::{augment, ClassificationData};
+use crate::log_debug;
+use crate::rng::Pcg32;
+use crate::util::timer::Timer;
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of epochs.
+    pub epochs: usize,
+    /// Mini-batch size.
+    pub batch_size: usize,
+    /// Learning-rate schedule.
+    pub schedule: LrSchedule,
+    /// Momentum.
+    pub momentum: f32,
+    /// Weight decay.
+    pub weight_decay: f32,
+    /// Shuffling/augmentation seed.
+    pub seed: u64,
+    /// Apply flip + pad-crop augmentation (CNN inputs only).
+    pub augment: bool,
+    /// Padding for the crop augmentation.
+    pub augment_pad: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 10,
+            batch_size: 64,
+            schedule: LrSchedule::paper_default(),
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            seed: 0,
+            augment: false,
+            augment_pad: 4,
+        }
+    }
+}
+
+/// Per-epoch training history.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    /// Mean training loss per epoch.
+    pub train_loss: Vec<f32>,
+    /// Test accuracy per epoch.
+    pub test_acc: Vec<f64>,
+    /// Test loss per epoch.
+    pub test_loss: Vec<f32>,
+    /// Wall-clock seconds of the whole run.
+    pub wall_secs: f64,
+}
+
+impl History {
+    /// Final test accuracy (0 if never evaluated).
+    pub fn final_acc(&self) -> f64 {
+        self.test_acc.last().copied().unwrap_or(0.0)
+    }
+
+    /// Best test accuracy across epochs (paper reports best of weight
+    /// decay sweeps; we use best-epoch within a run).
+    pub fn best_acc(&self) -> f64 {
+        self.test_acc.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Final test loss.
+    pub fn final_loss(&self) -> f32 {
+        self.test_loss.last().copied().unwrap_or(f32::NAN)
+    }
+}
+
+/// Evaluate mean loss and accuracy over a dataset.
+pub fn evaluate(model: &mut dyn Model, data: &ClassificationData, batch_size: usize) -> (f32, f64) {
+    let order: Vec<usize> = (0..data.len()).collect();
+    let mut loss_sum = 0.0f64;
+    let mut acc_sum = 0.0f64;
+    let mut n = 0usize;
+    for (x, y) in data.batches(&order, batch_size) {
+        let logits = model.forward(&x, false);
+        let (loss, _) = softmax_xent(&logits, &y);
+        loss_sum += loss as f64 * y.len() as f64;
+        acc_sum += accuracy(&logits, &y) * y.len() as f64;
+        n += y.len();
+    }
+    ((loss_sum / n as f64) as f32, acc_sum / n as f64)
+}
+
+/// Train `model` on `train`, evaluating on `test` after every epoch.
+pub fn train(
+    model: &mut dyn Model,
+    train: &ClassificationData,
+    test: &ClassificationData,
+    cfg: &TrainConfig,
+) -> History {
+    let timer = Timer::start();
+    let mut hist = History::default();
+    let mut aug_rng = Pcg32::seeded(cfg.seed ^ 0xAA99);
+    for epoch in 0..cfg.epochs {
+        let opt = Sgd {
+            lr: cfg.schedule.lr_at(epoch, cfg.epochs),
+            momentum: cfg.momentum,
+            weight_decay: cfg.weight_decay,
+        };
+        let order = train.epoch_order(cfg.seed ^ (epoch as u64) << 7);
+        let mut loss_sum = 0.0f64;
+        let mut n = 0usize;
+        for (mut x, y) in train.batches(&order, cfg.batch_size) {
+            if cfg.augment {
+                augment_if_image(&mut x, cfg.augment_pad, &mut aug_rng);
+            }
+            let logits = model.forward(&x, true);
+            let (loss, glogits) = softmax_xent(&logits, &y);
+            model.backward(&glogits);
+            model.step(&opt);
+            loss_sum += loss as f64 * y.len() as f64;
+            n += y.len();
+        }
+        let train_loss = (loss_sum / n as f64) as f32;
+        let (test_loss, test_acc) = evaluate(model, test, cfg.batch_size.max(128));
+        log_debug!(
+            "epoch {epoch}: lr={:.4} train_loss={train_loss:.4} test_loss={test_loss:.4} acc={test_acc:.4}",
+            opt.lr
+        );
+        hist.train_loss.push(train_loss);
+        hist.test_loss.push(test_loss);
+        hist.test_acc.push(test_acc);
+    }
+    hist.wall_secs = timer.elapsed_secs();
+    hist
+}
+
+fn augment_if_image(x: &mut Tensor, pad: usize, rng: &mut Pcg32) {
+    if x.shape.len() == 4 {
+        augment::augment_batch(x, pad, rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthConfig, SynthMnist};
+    use crate::nn::init::Init;
+    use crate::nn::mlp::DenseMlp;
+    use crate::nn::sparse::{SparseMlp, SparseMlpConfig};
+    use crate::topology::{PathSource, TopologyBuilder};
+
+    #[test]
+    fn dense_mlp_learns_synth_mnist() {
+        let (tr, te) = SynthMnist::new(512, 256, 7);
+        let mut mlp = DenseMlp::new(&[784, 64, 10], Init::UniformRandom, 1);
+        let cfg = TrainConfig {
+            epochs: 4,
+            batch_size: 64,
+            schedule: LrSchedule::Constant(0.05),
+            weight_decay: 0.0,
+            ..Default::default()
+        };
+        let hist = train(&mut mlp, &tr, &te, &cfg);
+        assert_eq!(hist.test_acc.len(), 4);
+        assert!(
+            hist.final_acc() > 0.6,
+            "dense MLP should learn synth-mnist, acc={}",
+            hist.final_acc()
+        );
+        assert!(hist.train_loss[3] < hist.train_loss[0]);
+        assert!(hist.wall_secs > 0.0);
+        assert!(hist.best_acc() >= hist.final_acc());
+    }
+
+    #[test]
+    fn sparse_mlp_learns_synth_mnist() {
+        let (tr, te) = SynthMnist::new(512, 256, 7);
+        let topo = TopologyBuilder::new(&[784, 128, 10])
+            .paths(2048)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+            .build();
+        let mut net = SparseMlp::new(
+            &topo,
+            SparseMlpConfig { init: Init::ConstantRandomSign, seed: 3, ..Default::default() },
+        );
+        let cfg = TrainConfig {
+            epochs: 4,
+            batch_size: 64,
+            schedule: LrSchedule::Constant(0.05),
+            weight_decay: 0.0,
+            ..Default::default()
+        };
+        let hist = train(&mut net, &tr, &te, &cfg);
+        assert!(
+            hist.final_acc() > 0.5,
+            "sparse MLP should learn synth-mnist, acc={}",
+            hist.final_acc()
+        );
+    }
+
+    #[test]
+    fn evaluate_counts_whole_set() {
+        let cfg = SynthConfig::mnist(1);
+        let d = crate::data::synth::flatten(&crate::data::synth::generate(&cfg, 100, 0));
+        let mut mlp = DenseMlp::new(&[784, 16, 10], Init::UniformRandom, 0);
+        let (loss, acc) = evaluate(&mut mlp, &d, 32);
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

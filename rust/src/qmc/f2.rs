@@ -1,0 +1,182 @@
+//! Linear algebra over the field F₂ of two elements.
+//!
+//! Generator matrices of digital (t,s)-sequences are nonsingular upper
+//! triangular matrices over F₂; the Sobol' component j maps the digit
+//! vector of the index through C_j (paper Eqn 5).  Because every C_j is
+//! invertible, the network addressing is invertible too — the property
+//! the paper uses for backpropagation in hardware (§4.4): computing
+//! C_j⁻¹ lets one walk *backwards* through a layer permutation.
+//!
+//! Matrices are stored column-major as `u32` bit masks: `cols[k]` holds
+//! column k, bit r (LSB = row 0) is entry (r, k).  This matches the
+//! XOR-accumulation loop of the paper §4.2 exactly.
+
+/// A square matrix over F₂, up to 32×32, stored as columns of bits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct F2Matrix {
+    /// Size (rows == cols == n).
+    pub n: usize,
+    /// Column bit masks; `cols[k] >> r & 1` is entry (r, k).
+    pub cols: Vec<u32>,
+}
+
+impl F2Matrix {
+    /// Identity matrix of size n.
+    pub fn identity(n: usize) -> Self {
+        assert!(n <= 32);
+        F2Matrix { n, cols: (0..n).map(|k| 1u32 << k).collect() }
+    }
+
+    /// Build from columns.
+    pub fn from_cols(n: usize, cols: Vec<u32>) -> Self {
+        assert!(n <= 32 && cols.len() == n);
+        let mask = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
+        assert!(cols.iter().all(|c| c & !mask == 0), "column bits above n");
+        F2Matrix { n, cols }
+    }
+
+    /// Entry (row, col) as a bool.
+    pub fn get(&self, row: usize, col: usize) -> bool {
+        (self.cols[col] >> row) & 1 == 1
+    }
+
+    /// Matrix-vector product C·d over F₂ where the vector is a bit mask
+    /// (bit k = digit d_k).  This is the paper's §4.2 XOR loop.
+    #[inline]
+    pub fn mul_vec(&self, mut v: u32) -> u32 {
+        let mut acc = 0u32;
+        let mut k = 0usize;
+        while v != 0 {
+            if v & 1 == 1 {
+                acc ^= self.cols[k];
+            }
+            v >>= 1;
+            k += 1;
+        }
+        acc
+    }
+
+    /// Matrix product self · other over F₂.
+    pub fn mul(&self, other: &F2Matrix) -> F2Matrix {
+        assert_eq!(self.n, other.n);
+        let cols = other.cols.iter().map(|&c| self.mul_vec(c)).collect();
+        F2Matrix { n: self.n, cols }
+    }
+
+    /// Inverse via Gauss-Jordan elimination; `None` if singular.
+    pub fn inverse(&self) -> Option<F2Matrix> {
+        let n = self.n;
+        // Work row-major for elimination: rows as bit masks over columns.
+        let mut a: Vec<u64> = (0..n)
+            .map(|r| {
+                let mut row = 0u64;
+                for c in 0..n {
+                    if self.get(r, c) {
+                        row |= 1 << c;
+                    }
+                }
+                // augmented identity in high bits
+                row | (1u64 << (n + r))
+            })
+            .collect();
+        for col in 0..n {
+            // find pivot
+            let piv = (col..n).find(|&r| a[r] >> col & 1 == 1)?;
+            a.swap(col, piv);
+            let prow = a[col];
+            for (r, row) in a.iter_mut().enumerate() {
+                if r != col && *row >> col & 1 == 1 {
+                    *row ^= prow;
+                }
+            }
+        }
+        // extract inverse from the augmented half (row-major) → columns.
+        let mut cols = vec![0u32; n];
+        for (r, row) in a.iter().enumerate() {
+            for c in 0..n {
+                if row >> (n + c) & 1 == 1 {
+                    cols[c] |= 1 << r;
+                }
+            }
+        }
+        Some(F2Matrix { n, cols })
+    }
+
+    /// `true` iff upper triangular with unit diagonal — the shape every
+    /// valid digital-sequence generator matrix must have to give a
+    /// (0,1)-sequence component.
+    pub fn is_unit_upper_triangular(&self) -> bool {
+        // Column k must have bit k set and no bits above k.
+        self.cols.iter().enumerate().all(|(k, &c)| {
+            let below_mask = if k == 31 { u32::MAX } else { (1u32 << (k + 1)) - 1 };
+            (c >> k) & 1 == 1 && c & !below_mask == 0
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg32, Rng};
+
+    #[test]
+    fn identity_properties() {
+        let id = F2Matrix::identity(8);
+        assert!(id.is_unit_upper_triangular());
+        for v in [0u32, 1, 0xAB, 0xFF] {
+            assert_eq!(id.mul_vec(v), v);
+        }
+        assert_eq!(id.inverse().unwrap(), id);
+    }
+
+    #[test]
+    fn mul_vec_matches_get() {
+        // brute-force check C·e_k = column k
+        let m = F2Matrix::from_cols(4, vec![0b0001, 0b0011, 0b0101, 0b1111]);
+        for k in 0..4 {
+            assert_eq!(m.mul_vec(1 << k), m.cols[k]);
+        }
+        // linearity: C(a ^ b) = C a ^ C b
+        assert_eq!(m.mul_vec(0b1010), m.mul_vec(0b1000) ^ m.mul_vec(0b0010));
+    }
+
+    #[test]
+    fn inverse_roundtrip_random_triangular() {
+        let mut rng = Pcg32::seeded(5);
+        for n in [4usize, 8, 16, 32] {
+            // random unit upper triangular is always invertible
+            let cols: Vec<u32> = (0..n)
+                .map(|k| {
+                    let above = if k == 0 { 0 } else { rng.next_u32() & ((1u32 << k) - 1) };
+                    above | (1u32 << k)
+                })
+                .collect();
+            let m = F2Matrix::from_cols(n, cols);
+            assert!(m.is_unit_upper_triangular());
+            let inv = m.inverse().expect("triangular must invert");
+            assert_eq!(m.mul(&inv), F2Matrix::identity(n));
+            assert_eq!(inv.mul(&m), F2Matrix::identity(n));
+            // inverse really inverts the vector map
+            for _ in 0..16 {
+                let v = rng.next_u32() & if n == 32 { u32::MAX } else { (1 << n) - 1 };
+                assert_eq!(inv.mul_vec(m.mul_vec(v)), v);
+            }
+        }
+    }
+
+    #[test]
+    fn singular_matrix_has_no_inverse() {
+        let m = F2Matrix::from_cols(3, vec![0b001, 0b001, 0b100]); // duplicate column
+        assert!(m.inverse().is_none());
+    }
+
+    #[test]
+    fn triangularity_detector() {
+        let good = F2Matrix::from_cols(3, vec![0b001, 0b011, 0b111]);
+        assert!(good.is_unit_upper_triangular());
+        let bad_diag = F2Matrix::from_cols(3, vec![0b001, 0b001, 0b111]);
+        assert!(!bad_diag.is_unit_upper_triangular());
+        let lower = F2Matrix::from_cols(3, vec![0b111, 0b010, 0b100]);
+        assert!(!lower.is_unit_upper_triangular());
+    }
+}

@@ -1,0 +1,198 @@
+//! The Halton sequence — the classic radical-inverse sequence in
+//! coprime bases — as an alternative topology generator (paper §6
+//! future work: *"we like to look at more low-discrepancy sequences"*).
+//!
+//! Component j is Φ_{b_j}(i) for the j-th prime base.  Unlike the
+//! Sobol' sequence, components in base b stratify per blocks of b^m
+//! (not 2^m), so the progressive-permutation property holds for
+//! power-of-`b_j` block sizes: only dimension 0 (base 2) matches the
+//! power-of-two hardware blocking of §4.4.  The topology builder exposes
+//! Halton to quantify exactly that trade-off (see
+//! `bench_hw_memory`-style comparisons in the tests below).
+//!
+//! Scrambling: per-digit multiplicative scrambling (a fixed multiplier
+//! coprime to the base per dimension) counters the well-known linear
+//! correlations of high Halton dimensions.
+
+use super::Sequence;
+use crate::rng::splitmix64;
+
+/// First 16 primes (more dimensions than any layer stack here needs).
+const PRIMES: [u32; 16] = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53];
+
+/// The Halton sequence with optional digit scrambling.
+#[derive(Debug, Clone)]
+pub struct Halton {
+    dims: usize,
+    /// Per-dimension digit multiplier (1 = unscrambled).
+    multipliers: Vec<u32>,
+}
+
+impl Halton {
+    /// Unscrambled Halton sequence.
+    pub fn new(dims: usize) -> Self {
+        assert!(dims <= PRIMES.len(), "at most {} Halton dimensions", PRIMES.len());
+        Halton { dims, multipliers: vec![1; dims] }
+    }
+
+    /// Scrambled variant: per-dimension multipliers derived from `seed`,
+    /// coprime to (i.e. non-zero mod) the base.  Base 2 admits only the
+    /// identity multiplier, so dimension 0 is unaffected (the pow-2
+    /// hardware dimension stays canonical).
+    pub fn scrambled(dims: usize, seed: u64) -> Self {
+        assert!(dims <= PRIMES.len());
+        let multipliers = (0..dims)
+            .map(|d| {
+                let b = PRIMES[d];
+                1 + (splitmix64(seed ^ (d as u64) << 7) % (b as u64 - 1).max(1)) as u32
+            })
+            .collect();
+        Halton { dims, multipliers }
+    }
+
+    /// Base of dimension `dim`.
+    pub fn base(&self, dim: usize) -> u32 {
+        PRIMES[dim]
+    }
+}
+
+impl Sequence for Halton {
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn component_u32(&self, index: u64, dim: usize) -> u32 {
+        let (num, den) = self.radical_parts(index, dim);
+        // exact rational → 32-bit fraction (floor)
+        (((num as u128) << 32) / den as u128) as u32
+    }
+
+    fn map_to(&self, index: u64, dim: usize, n: usize) -> usize {
+        // exact: floor(n · num/den) in integer arithmetic.  Non-dyadic
+        // bases have slot boundaries that f32/f64 fractions cannot
+        // represent, so the default fixed-point path would round below
+        // boundaries and break the permutation property.
+        let (num, den) = self.radical_parts(index, dim);
+        ((num as u128 * n as u128) / den as u128) as usize
+    }
+}
+
+impl Halton {
+    /// Radical inverse as an exact rational `num / den`, `den = b^digits`.
+    fn radical_parts(&self, mut index: u64, dim: usize) -> (u64, u64) {
+        let b = PRIMES[dim] as u64;
+        let mult = self.multipliers[dim] as u64;
+        let mut num = 0u64;
+        let mut den = 1u64;
+        while index > 0 {
+            let digit = (index % b * mult) % b;
+            num = num * b + digit;
+            den *= b;
+            index /= b;
+        }
+        (num, den.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qmc::nets::is_progressive_permutation;
+
+    #[test]
+    fn dim0_is_van_der_corput_base2() {
+        let h = Halton::new(2);
+        for i in 0..256u64 {
+            let want = crate::qmc::vdc::phi2(i);
+            let got = h.component(i, 0);
+            assert!((want - got).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn dim1_base3_values() {
+        let h = Halton::new(2);
+        let expect = [0.0, 1.0 / 3.0, 2.0 / 3.0, 1.0 / 9.0, 4.0 / 9.0, 7.0 / 9.0];
+        for (i, &e) in expect.iter().enumerate() {
+            assert!((h.component(i as u64, 1) - e).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn stratifies_in_its_own_base_blocks() {
+        // base-b component: every contiguous block of b^m points is a
+        // permutation of b^m slots
+        let h = Halton::new(3);
+        for (dim, b) in [(0usize, 2u64), (1, 3), (2, 5)] {
+            let n = b * b; // b^2 slots
+            for k in 0..3u64 {
+                let mut seen = vec![false; n as usize];
+                for i in k * n..(k + 1) * n {
+                    let slot = h.map_to(i, dim, n as usize);
+                    assert!(!seen[slot], "dim {dim} block {k} dup {slot}");
+                    seen[slot] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn power_of_two_blocks_only_guaranteed_for_base2() {
+        // the §4.4 hardware point: only dimension 0 forms permutations
+        // over power-of-two blocks; base-3 generally does not.
+        let h = Halton::new(2);
+        assert!(is_progressive_permutation(&h, 0, 4, 0));
+        let mut all_perm = true;
+        for k in 0..8 {
+            if !is_progressive_permutation(&h, 1, 4, k) {
+                all_perm = false;
+            }
+        }
+        assert!(!all_perm, "base-3 should break pow-2 permutation blocks somewhere");
+    }
+
+    #[test]
+    fn scrambling_preserves_base_stratification() {
+        let h = Halton::scrambled(3, 1174);
+        for (dim, b) in [(0usize, 2u64), (1, 3), (2, 5)] {
+            let n = b * b;
+            let mut seen = vec![false; n as usize];
+            for i in 0..n {
+                let slot = h.map_to(i, dim, n as usize);
+                assert!(!seen[slot], "dim {dim}");
+                seen[slot] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn scrambles_differ_and_are_deterministic() {
+        // compare on a high-base dimension (base 11 → 10 multipliers)
+        // where distinct seeds almost surely pick distinct multipliers
+        let dim = 4;
+        let mut distinct = 0;
+        for seed in 1..=4u64 {
+            let a = Halton::scrambled(6, seed);
+            let b = Halton::scrambled(6, seed + 10);
+            let a2 = Halton::scrambled(6, seed);
+            let same_ab =
+                (1..64u64).filter(|&i| a.component_u32(i, dim) == b.component_u32(i, dim)).count();
+            if same_ab < 40 {
+                distinct += 1;
+            }
+            for i in 0..64u64 {
+                assert_eq!(a.component_u32(i, dim), a2.component_u32(i, dim));
+            }
+        }
+        assert!(distinct >= 2, "most seed pairs should scramble differently");
+    }
+
+    #[test]
+    fn mean_is_uniform() {
+        let h = Halton::new(4);
+        for d in 0..4 {
+            let m: f64 = (0..2048).map(|i| h.component(i, d)).sum::<f64>() / 2048.0;
+            assert!((m - 0.5).abs() < 0.02, "dim {d} mean {m}");
+        }
+    }
+}

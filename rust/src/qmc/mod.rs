@@ -1,0 +1,77 @@
+//! Quasi-Monte Carlo machinery (paper §4): radical inversion, the Sobol'
+//! sequence, scrambling, F2 linear algebra, and (t,m,s)-net property
+//! checkers.
+//!
+//! The key structural fact exploited by the paper: each component of the
+//! Sobol' sequence is a **(0,1)-sequence in base 2**, so every contiguous
+//! block of 2^m indices maps to an equidistant stratification of [0,1) —
+//! equivalently, `floor(2^m · x_i)` over such a block is a *permutation*
+//! of {0, …, 2^m − 1}.  Connecting consecutive network layers by these
+//! *progressive permutations* gives constant fan-in/fan-out, collision-free
+//! routing, and natural progressive growth (paper §4.2-4.4).
+
+pub mod f2;
+pub mod halton;
+pub mod nets;
+pub mod scramble;
+pub mod sobol;
+pub mod vdc;
+
+/// A deterministic point sequence in [0,1)^s addressed by (index, dim).
+///
+/// Implemented by the Sobol' sequence, its scrambled variant, and — for
+/// baseline comparisons — PRNG-backed fake "sequences".
+pub trait Sequence {
+    /// Number of available dimensions.
+    fn dims(&self) -> usize;
+
+    /// Component `dim` of point `index`, as a 32-bit fixed-point fraction
+    /// (the integer numerator of x over 2^32).  All sequence math is done
+    /// in fixed point so that `floor(n · x)` is exact.
+    fn component_u32(&self, index: u64, dim: usize) -> u32;
+
+    /// Component as f64 in [0,1).
+    fn component(&self, index: u64, dim: usize) -> f64 {
+        self.component_u32(index, dim) as f64 * (1.0 / 4294967296.0)
+    }
+
+    /// First `n` values of component `dim` in natural order.  The
+    /// default evaluates point-wise; digital sequences override it with
+    /// the XOR-doubling recursion `x_{i+2^k} = x_i ⊕ v_{k+1}`, which is
+    /// O(1) per point (EXPERIMENTS.md §Perf).
+    fn component_block(&self, dim: usize, n: usize) -> Vec<u32> {
+        (0..n as u64).map(|i| self.component_u32(i, dim)).collect()
+    }
+
+    /// `floor(n · x_index^{(dim)})` computed exactly in integer arithmetic.
+    fn map_to(&self, index: u64, dim: usize, n: usize) -> usize {
+        debug_assert!(n > 0 && n <= u32::MAX as usize);
+        ((self.component_u32(index, dim) as u64 * n as u64) >> 32) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sobol::Sobol;
+    use super::*;
+
+    #[test]
+    fn map_to_is_exact_for_pow2() {
+        let s = Sobol::new(4);
+        // floor(16 * Phi_2(i)) over i=0..16 must be the bit-reversal
+        // permutation of 0..16 (paper §4.2 example).
+        let perm: Vec<usize> = (0..16).map(|i| s.map_to(i, 0, 16)).collect();
+        assert_eq!(perm, vec![0, 8, 4, 12, 2, 10, 6, 14, 1, 9, 5, 13, 3, 11, 7, 15]);
+    }
+
+    #[test]
+    fn component_in_unit_interval() {
+        let s = Sobol::new(8);
+        for dim in 0..8 {
+            for i in 0..256 {
+                let x = s.component(i, dim);
+                assert!((0.0..1.0).contains(&x), "dim={dim} i={i} x={x}");
+            }
+        }
+    }
+}

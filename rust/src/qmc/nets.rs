@@ -1,0 +1,170 @@
+//! Property checkers for digital nets and sequences.
+//!
+//! These verify — and let tests/benches *demonstrate* — the structural
+//! claims of the paper:
+//!
+//! * each Sobol' component is a (0,1)-sequence ⇒ progressive
+//!   permutations ([`is_progressive_permutation`]),
+//! * quality of 2-D projections via the exact t-value of the first 2^m
+//!   points ([`t_value_2d`]) — the diagnostic behind "skipping bad
+//!   dimensions" (paper §4.3, Table 1 caption).
+
+use super::Sequence;
+
+/// Check that block `k` (of length 2^m) of component `dim` induces a
+/// permutation of {0,…,2^m−1} under `floor(2^m · x)`.
+pub fn is_progressive_permutation(seq: &dyn Sequence, dim: usize, m: u32, k: u64) -> bool {
+    let n = 1u64 << m;
+    let mut seen = vec![false; n as usize];
+    for i in k * n..(k + 1) * n {
+        let slot = seq.map_to(i, dim, n as usize);
+        if seen[slot] {
+            return false;
+        }
+        seen[slot] = true;
+    }
+    true
+}
+
+/// Extract the permutation of block `k`: element i-within-block → slot.
+pub fn block_permutation(seq: &dyn Sequence, dim: usize, m: u32, k: u64) -> Vec<u32> {
+    let n = 1u64 << m;
+    (k * n..(k + 1) * n).map(|i| seq.map_to(i, dim, n as usize) as u32).collect()
+}
+
+/// Exact t-value of the 2-D projection (dima, dimb) of the first 2^m
+/// points: the smallest t such that every elementary interval of volume
+/// 2^{t−m} contains exactly 2^t points.
+///
+/// Small t = well stratified pair; t = m means no guarantee beyond the
+/// trivial one (the telltale of a "bad" dimension pair the topology
+/// builder should skip).
+pub fn t_value_2d(seq: &dyn Sequence, dima: usize, dimb: usize, m: u32) -> u32 {
+    let n = 1u64 << m;
+    let pts: Vec<(u32, u32)> = (0..n)
+        .map(|i| {
+            (
+                seq.component_u32(i, dima) >> (32 - m.max(1)),
+                seq.component_u32(i, dimb) >> (32 - m.max(1)),
+            )
+        })
+        .collect();
+    't_loop: for t in 0..=m {
+        // Every split m = q + r with q+r = m - t must have exactly 2^t
+        // points per cell of the 2^q × 2^r grid.
+        let cells_per_axis_budget = m - t;
+        for q in 0..=cells_per_axis_budget {
+            let r = cells_per_axis_budget - q;
+            let mut counts = vec![0u32; 1usize << (q + r)];
+            for &(a, b) in &pts {
+                let ca = (a >> (m - q).min(31)) as usize & ((1usize << q) - 1).max(0);
+                let cb = (b >> (m - r).min(31)) as usize & ((1usize << r) - 1).max(0);
+                counts[(ca << r) | cb] += 1;
+            }
+            let want = 1u32 << t;
+            if counts.iter().any(|&c| c != want) {
+                continue 't_loop;
+            }
+        }
+        return t;
+    }
+    m
+}
+
+/// Star-discrepancy style diagnostic: max absolute deviation of the
+/// empirical CDF over a grid of anchored boxes for a dimension pair.
+/// Cheap proxy used in benches to contrast LDS vs PRNG uniformity.
+pub fn box_discrepancy_2d(seq: &dyn Sequence, dima: usize, dimb: usize, n: u64, grid: u32) -> f64 {
+    let pts: Vec<(f64, f64)> =
+        (0..n).map(|i| (seq.component(i, dima), seq.component(i, dimb))).collect();
+    let mut worst: f64 = 0.0;
+    for gx in 1..=grid {
+        for gy in 1..=grid {
+            let bx = gx as f64 / grid as f64;
+            let by = gy as f64 / grid as f64;
+            let inside = pts.iter().filter(|&&(x, y)| x < bx && y < by).count();
+            let dev = (inside as f64 / n as f64 - bx * by).abs();
+            worst = worst.max(dev);
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qmc::sobol::Sobol;
+    use crate::rng::{Pcg32, Rng};
+
+    /// A fake "sequence" backed by a PRNG snapshot, for baselines.
+    pub struct RandomPoints {
+        pts: Vec<Vec<u32>>,
+    }
+
+    impl RandomPoints {
+        pub fn new(dims: usize, n: usize, seed: u64) -> Self {
+            let mut rng = Pcg32::seeded(seed);
+            let pts = (0..n).map(|_| (0..dims).map(|_| rng.next_u32()).collect()).collect();
+            RandomPoints { pts }
+        }
+    }
+
+    impl Sequence for RandomPoints {
+        fn dims(&self) -> usize {
+            self.pts.first().map_or(0, |p| p.len())
+        }
+        fn component_u32(&self, index: u64, dim: usize) -> u32 {
+            self.pts[index as usize][dim]
+        }
+    }
+
+    #[test]
+    fn sobol_blocks_are_permutations_random_are_not() {
+        let sobol = Sobol::new(4);
+        for d in 0..4 {
+            for k in 0..3 {
+                assert!(is_progressive_permutation(&sobol, d, 5, k));
+            }
+        }
+        // Random points of the same size essentially never form
+        // permutations for m=5 (probability 32!/32^32 ≈ 1e-13).
+        let rnd = RandomPoints::new(2, 32, 3);
+        assert!(!is_progressive_permutation(&rnd, 0, 5, 0));
+    }
+
+    #[test]
+    fn block_permutation_contents() {
+        let sobol = Sobol::new(2);
+        let p = block_permutation(&sobol, 0, 4, 0);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16).collect::<Vec<u32>>());
+        assert_eq!(p, vec![0, 8, 4, 12, 2, 10, 6, 14, 1, 9, 5, 13, 3, 11, 7, 15]);
+    }
+
+    #[test]
+    fn t_value_good_pair_is_small() {
+        let sobol = Sobol::new(3);
+        // dims (0,1) of Sobol' are a (0,m,2)-net in base 2: t = 0.
+        assert_eq!(t_value_2d(&sobol, 0, 1, 6), 0);
+    }
+
+    #[test]
+    fn t_value_random_is_large() {
+        let rnd = RandomPoints::new(2, 64, 11);
+        let t = t_value_2d(&rnd, 0, 1, 6);
+        assert!(t >= 4, "random points should have poor t-value, got {t}");
+    }
+
+    #[test]
+    fn discrepancy_lds_beats_random() {
+        let sobol = Sobol::new(2);
+        let rnd = RandomPoints::new(2, 1024, 17);
+        let d_lds = box_discrepancy_2d(&sobol, 0, 1, 1024, 8);
+        let d_rnd = box_discrepancy_2d(&rnd, 0, 1, 1024, 8);
+        assert!(
+            d_lds < d_rnd,
+            "LDS discrepancy {d_lds} should beat random {d_rnd}"
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! The van der Corput sequence Φ_b — the 1-dimensional prototype of all
+//! radical-inverse based low discrepancy sequences (paper §4.2).
+//!
+//! Φ_b mirrors the base-b digit expansion of the index at the radix
+//! point.  In base 2 this is exactly a bit reversal, which is why the
+//! paper notes the hardware realization "amounts to bit reversal"
+//! (§4.4).
+
+use crate::util::bit_reverse;
+
+/// Radical inverse Φ₂(i) as a 32-bit fixed-point fraction (numerator of
+/// x over 2^32): the 32-bit reversal of `i`.
+#[inline]
+pub fn phi2_u32(i: u64) -> u32 {
+    (i as u32).reverse_bits()
+}
+
+/// Radical inverse Φ₂(i) in [0,1).
+#[inline]
+pub fn phi2(i: u64) -> f64 {
+    phi2_u32(i) as f64 * (1.0 / 4294967296.0)
+}
+
+/// Radical inverse Φ_b(i) in [0,1) for an arbitrary base `b ≥ 2`.
+pub fn phi(b: u32, mut i: u64) -> f64 {
+    assert!(b >= 2);
+    let inv_b = 1.0 / b as f64;
+    let mut inv = inv_b;
+    let mut x = 0.0;
+    while i > 0 {
+        x += (i % b as u64) as f64 * inv;
+        i /= b as u64;
+        inv *= inv_b;
+    }
+    x
+}
+
+/// The permutation of {0..2^m-1} induced by the first 2^m van der Corput
+/// points: `perm[i] = floor(2^m · Φ₂(i))` — i.e. m-bit reversal.
+pub fn vdc_permutation(m: u32) -> Vec<u32> {
+    assert!(m <= 31);
+    (0..1u32 << m).map(|i| bit_reverse(i, m)).collect()
+}
+
+/// Inverse of [`vdc_permutation`]; bit reversal is an involution so it is
+/// the same permutation, exposed separately for API symmetry with the
+/// Sobol' inverse (paper §4.4 backpropagation addressing).
+pub fn vdc_inverse_permutation(m: u32) -> Vec<u32> {
+    vdc_permutation(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_points_base2() {
+        // 0, 1/2, 1/4, 3/4, 1/8, 5/8, 3/8, 7/8
+        let expect = [0.0, 0.5, 0.25, 0.75, 0.125, 0.625, 0.375, 0.875];
+        for (i, &e) in expect.iter().enumerate() {
+            assert!((phi2(i as u64) - e).abs() < 1e-12, "i={i}");
+            assert!((phi(2, i as u64) - e).abs() < 1e-12, "i={i} generic");
+        }
+    }
+
+    #[test]
+    fn first_points_base3() {
+        // 0, 1/3, 2/3, 1/9, 4/9, 7/9
+        let expect = [0.0, 1.0 / 3.0, 2.0 / 3.0, 1.0 / 9.0, 4.0 / 9.0, 7.0 / 9.0];
+        for (i, &e) in expect.iter().enumerate() {
+            assert!((phi(3, i as u64) - e).abs() < 1e-12, "i={i}");
+        }
+    }
+
+    #[test]
+    fn paper_permutation_example() {
+        // Paper §4.2: 16·Φ₂(i) for i=0..16.
+        let p = vdc_permutation(4);
+        assert_eq!(p, vec![0, 8, 4, 12, 2, 10, 6, 14, 1, 9, 5, 13, 3, 11, 7, 15]);
+    }
+
+    #[test]
+    fn vdc_blocks_are_permutations() {
+        // Every contiguous block k·2^m .. (k+1)·2^m yields a permutation
+        // of {0..2^m-1} under floor(2^m Φ₂) — the (0,1)-sequence property.
+        for m in [2u32, 4, 6] {
+            let n = 1u64 << m;
+            for k in 0..4u64 {
+                let mut seen = vec![false; n as usize];
+                for i in k * n..(k + 1) * n {
+                    let v = (phi2_u32(i) as u64 * n as u64 >> 32) as usize;
+                    assert!(!seen[v], "m={m} k={k} duplicate {v}");
+                    seen[v] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_is_involution() {
+        let m = 6;
+        let p = vdc_permutation(m);
+        let inv = vdc_inverse_permutation(m);
+        for i in 0..p.len() {
+            assert_eq!(inv[p[i] as usize], i as u32);
+        }
+    }
+
+    #[test]
+    fn fixed_point_and_float_agree() {
+        for i in 0..1000u64 {
+            let a = phi2(i);
+            let b = phi2_u32(i) as f64 / 4294967296.0;
+            assert_eq!(a, b);
+        }
+    }
+}

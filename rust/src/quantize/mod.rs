@@ -1,0 +1,229 @@
+//! Quantization of trained dense networks by sampling paths (paper §2.1,
+//! Fig 2).
+//!
+//! A trained dense ReLU network is compressed by tracing paths from the
+//! outputs back to the inputs, sampling each step proportionally to the
+//! L1-normalized absolute weights of the neuron.  Because sampling is an
+//! unbiased discretization of the weight distribution, keeping only the
+//! sampled fraction of connections preserves test accuracy until the
+//! fraction gets small (Fig 2).
+//!
+//! The sampler supports both a PRNG and — in the spirit of the paper —
+//! a low discrepancy sequence driving the inverse-CDF selection.
+
+use crate::nn::dense::Dense;
+use crate::nn::mlp::DenseMlp;
+use crate::nn::Model;
+use crate::qmc::sobol::Sobol;
+use crate::qmc::Sequence;
+use crate::rng::{Pcg32, Rng};
+
+/// Driver of the per-step uniform samples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SampleDriver {
+    /// PCG32 pseudo-random sampling.
+    Random(u64),
+    /// Sobol' sequence: path i uses component (i, layer-dim).
+    Sobol,
+}
+
+/// Build the cumulative distribution of `|w|` for one output neuron row.
+fn row_cdf(w: &[f32]) -> Vec<f32> {
+    let mut cdf = Vec::with_capacity(w.len());
+    let mut acc = 0.0f32;
+    for &v in w {
+        acc += v.abs();
+        cdf.push(acc);
+    }
+    if acc > 0.0 {
+        for c in &mut cdf {
+            *c /= acc;
+        }
+    }
+    cdf
+}
+
+/// Inverse-CDF selection: first index whose cdf ≥ u.
+fn select(cdf: &[f32], u: f32) -> usize {
+    match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        Ok(i) => i,
+        Err(i) => i.min(cdf.len() - 1),
+    }
+}
+
+/// Quantize a trained [`DenseMlp`] by tracing `paths_per_output` paths
+/// backwards from every output neuron.  Returns a masked copy where only
+/// sampled connections survive (duplicates coalesce, paper footnote 1).
+pub fn quantize_mlp(
+    net: &DenseMlp,
+    paths_per_output: usize,
+    driver: SampleDriver,
+) -> DenseMlp {
+    let mut masks: Vec<Vec<f32>> =
+        net.layers.iter().map(|l| vec![0.0f32; l.w.len()]).collect();
+    // Pre-compute the per-neuron CDFs of every layer.
+    let cdfs: Vec<Vec<Vec<f32>>> = net
+        .layers
+        .iter()
+        .map(|l| (0..l.out_dim).map(|o| row_cdf(&l.w[o * l.in_dim..(o + 1) * l.in_dim])).collect())
+        .collect();
+    let mut rng = match driver {
+        SampleDriver::Random(seed) => Some(Pcg32::seeded(seed)),
+        SampleDriver::Sobol => None,
+    };
+    let sobol = Sobol::new(net.layers.len().min(crate::qmc::sobol::MAX_DIMS));
+    let outputs = net.layers.last().unwrap().out_dim;
+    let mut path_i = 0u64;
+    for out in 0..outputs {
+        for _ in 0..paths_per_output {
+            // trace from this output back to the inputs
+            let mut cur = out;
+            for (li, layer) in net.layers.iter().enumerate().rev() {
+                let u = match &mut rng {
+                    Some(r) => r.next_f32(),
+                    None => sobol.component(path_i, li) as f32,
+                };
+                let src = select(&cdfs[li][cur], u);
+                masks[li][cur * layer.in_dim + src] = 1.0;
+                cur = src;
+            }
+            path_i += 1;
+        }
+    }
+    let mut q = net.clone();
+    for (l, m) in q.layers.iter_mut().zip(masks) {
+        l.set_mask(m);
+    }
+    q
+}
+
+/// Fraction of dense connections kept by a quantized network.
+pub fn kept_fraction(q: &DenseMlp) -> f64 {
+    let kept: usize = q.nnz();
+    let total: usize = q.layers.iter().map(|l| l.w.len()).sum();
+    kept as f64 / total as f64
+}
+
+/// ReLU-invariance normalization of §2.1: scale each neuron's incoming
+/// weights to unit L1 norm and push the factor into the *outgoing*
+/// weights of the next layer — output logits are unchanged (biases must
+/// be absent or zero for exactness; asserted).
+pub fn l1_normalize_forward(net: &mut DenseMlp) {
+    for li in 0..net.layers.len() - 1 {
+        assert!(
+            net.layers[li].b.iter().all(|&b| b == 0.0),
+            "L1 forward-propagation requires zero biases"
+        );
+        let (head, tail) = net.layers.split_at_mut(li + 1);
+        let cur: &mut Dense = &mut head[li];
+        let next: &mut Dense = &mut tail[0];
+        for o in 0..cur.out_dim {
+            let row = &mut cur.w[o * cur.in_dim..(o + 1) * cur.in_dim];
+            let norm: f32 = row.iter().map(|v| v.abs()).sum();
+            if norm > 0.0 {
+                for v in row.iter_mut() {
+                    *v /= norm;
+                }
+                // scale the o-th *input column* of the next layer
+                for no in 0..next.out_dim {
+                    next.w[no * next.in_dim + o] *= norm;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::init::Init;
+    use crate::nn::tensor::Tensor;
+
+    fn trained_like_net(seed: u64) -> DenseMlp {
+        // random weights act as a stand-in for a trained net in unit
+        // tests; the bench trains a real one.
+        DenseMlp::new(&[16, 32, 32, 4], Init::UniformRandom, seed)
+    }
+
+    #[test]
+    fn cdf_and_select() {
+        let cdf = row_cdf(&[1.0, -1.0, 2.0]);
+        assert!((cdf[2] - 1.0).abs() < 1e-6);
+        assert_eq!(select(&cdf, 0.1), 0);
+        assert_eq!(select(&cdf, 0.3), 1);
+        assert_eq!(select(&cdf, 0.9), 2);
+        assert_eq!(select(&cdf, 1.0), 2);
+    }
+
+    #[test]
+    fn zero_row_cdf_is_safe() {
+        let cdf = row_cdf(&[0.0, 0.0]);
+        assert_eq!(select(&cdf, 0.5), 1.min(cdf.len() - 1));
+    }
+
+    #[test]
+    fn quantize_keeps_subset_monotone_in_paths() {
+        let net = trained_like_net(3);
+        let q_small = quantize_mlp(&net, 4, SampleDriver::Random(1));
+        let q_large = quantize_mlp(&net, 64, SampleDriver::Random(1));
+        let f_small = kept_fraction(&q_small);
+        let f_large = kept_fraction(&q_large);
+        assert!(f_small > 0.0 && f_small < 1.0);
+        assert!(f_large > f_small, "{f_large} > {f_small}");
+        // kept weights identical to original where mask=1
+        for (lo, lq) in net.layers.iter().zip(&q_small.layers) {
+            let mask = lq.mask.as_ref().unwrap();
+            for i in 0..lo.w.len() {
+                if mask[i] > 0.0 {
+                    assert_eq!(lq.w[i], lo.w[i]);
+                } else {
+                    assert_eq!(lq.w[i], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sobol_driver_works() {
+        let net = trained_like_net(5);
+        let q = quantize_mlp(&net, 16, SampleDriver::Sobol);
+        assert!(kept_fraction(&q) > 0.0);
+    }
+
+    #[test]
+    fn every_output_neuron_keeps_an_edge() {
+        let net = trained_like_net(7);
+        let q = quantize_mlp(&net, 2, SampleDriver::Random(9));
+        let last = q.layers.last().unwrap();
+        let mask = last.mask.as_ref().unwrap();
+        for o in 0..last.out_dim {
+            let row = &mask[o * last.in_dim..(o + 1) * last.in_dim];
+            assert!(row.iter().any(|&m| m > 0.0), "output {o} lost all edges");
+        }
+    }
+
+    #[test]
+    fn l1_normalization_preserves_logits() {
+        let mut net = trained_like_net(11);
+        // zero all biases for exact invariance
+        for l in &mut net.layers {
+            l.b.iter_mut().for_each(|b| *b = 0.0);
+        }
+        let x = Tensor::from_vec((0..32).map(|i| (i as f32 * 0.17).sin()).collect(), &[2, 16]);
+        let before = net.forward(&x, false);
+        l1_normalize_forward(&mut net);
+        let after = net.forward(&x, false);
+        assert!(
+            before.max_abs_diff(&after) < 1e-4,
+            "ReLU scaling invariance violated: {}",
+            before.max_abs_diff(&after)
+        );
+        // hidden rows now have unit L1 norm
+        for l in &net.layers[..net.layers.len() - 1] {
+            for o in 0..l.out_dim {
+                let s: f32 = l.w[o * l.in_dim..(o + 1) * l.in_dim].iter().map(|v| v.abs()).sum();
+                assert!((s - 1.0).abs() < 1e-4 || s == 0.0);
+            }
+        }
+    }
+}

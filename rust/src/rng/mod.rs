@@ -1,0 +1,285 @@
+//! Pseudo-random number generators — the *baseline* path samplers of the
+//! paper (Sec 3 uses `drand48()` in Fig 3), plus general-purpose PRNGs for
+//! data synthesis and random initialization.
+//!
+//! The `rand` crate is not available offline, so the generators are
+//! implemented from their published recurrences:
+//!
+//! * [`Drand48`] — POSIX `drand48` LCG, bit-exact, to mirror the paper's
+//!   reference implementation in Fig 3.
+//! * [`Pcg32`] — PCG-XSH-RR 64/32 (O'Neill 2014), the default engine.
+//! * [`SplitMix64`] — stateless-seedable mixer, used for seeding and
+//!   Owen-style hashing in [`crate::qmc::scramble`].
+//! * [`XorShift64Star`] — cheap generator for the bank-conflict traces.
+
+/// Common interface for all generators in this crate.
+pub trait Rng {
+    /// Next 32 uniformly distributed bits.
+    fn next_u32(&mut self) -> u32;
+
+    /// Next 64 uniformly distributed bits (default: two u32 draws).
+    fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 random bits.
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)` with 24 random bits.
+    fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free bound for
+    /// our purposes; modulo bias is negligible for n ≪ 2^32 but we use the
+    /// widening-multiply trick anyway).
+    fn next_below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        ((self.next_u32() as u64 * n as u64) >> 32) as u32
+    }
+
+    /// Standard normal via Box-Muller (one value; second is discarded for
+    /// simplicity — initialization is not on the hot path).
+    fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// POSIX `drand48`: X_{n+1} = (a·X_n + c) mod 2^48 with a = 0x5DEECE66D,
+/// c = 0xB.  `next_f64` mirrors `drand48()` exactly (48-bit mantissa).
+#[derive(Debug, Clone)]
+pub struct Drand48 {
+    state: u64,
+}
+
+impl Drand48 {
+    const A: u64 = 0x5DEECE66D;
+    const C: u64 = 0xB;
+    const MASK: u64 = (1 << 48) - 1;
+
+    /// Seed like `srand48(seed)`: high 32 bits from the seed, low 16 bits
+    /// set to 0x330E.
+    pub fn new(seed: u32) -> Self {
+        Drand48 { state: ((seed as u64) << 16 | 0x330E) & Self::MASK }
+    }
+
+    fn step(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(Self::A).wrapping_add(Self::C) & Self::MASK;
+        self.state
+    }
+
+    /// Exact `drand48()` output: the 48 state bits as a fraction.
+    pub fn drand48(&mut self) -> f64 {
+        self.step() as f64 / (1u64 << 48) as f64
+    }
+}
+
+impl Rng for Drand48 {
+    fn next_u32(&mut self) -> u32 {
+        (self.step() >> 16) as u32
+    }
+
+    fn next_f64(&mut self) -> f64 {
+        self.drand48()
+    }
+}
+
+/// PCG-XSH-RR 64/32 — small, fast, statistically excellent.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    const MULT: u64 = 6364136223846793005;
+
+    /// Create from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.state.wrapping_mul(Self::MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed);
+        rng.state = rng.state.wrapping_mul(Self::MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Convenience: single-argument seeding with a fixed stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 54)
+    }
+}
+
+impl Rng for Pcg32 {
+    fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+}
+
+/// SplitMix64 — used for seeding and as the hash in Owen scrambling.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create from a seed.
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+}
+
+/// One stateless SplitMix64 step: a high-quality 64-bit mixer.
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng for SplitMix64 {
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xorshift64* — minimal-state generator for synthetic access traces.
+#[derive(Debug, Clone)]
+pub struct XorShift64Star {
+    state: u64,
+}
+
+impl XorShift64Star {
+    /// Create from a non-zero seed (zero is mapped to a fixed constant).
+    pub fn new(seed: u64) -> Self {
+        XorShift64Star { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+}
+
+impl Rng for XorShift64Star {
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drand48_matches_posix_reference() {
+        // Reference values from glibc: srand48(0); drand48() thrice.
+        let mut r = Drand48::new(0);
+        let v1 = r.drand48();
+        let v2 = r.drand48();
+        let v3 = r.drand48();
+        assert!((v1 - 0.17082803610628972).abs() < 1e-12, "v1={v1}");
+        assert!((v2 - 0.7499019804849638).abs() < 1e-12, "v2={v2}");
+        assert!((v3 - 0.09637165562356742).abs() < 1e-12, "v3={v3}");
+    }
+
+    #[test]
+    fn pcg32_is_deterministic_and_distinct_per_stream() {
+        let mut a = Pcg32::new(42, 54);
+        let mut b = Pcg32::new(42, 54);
+        let mut c = Pcg32::new(42, 55);
+        let xs: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let ys: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        let zs: Vec<u32> = (0..8).map(|_| c.next_u32()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn uniformity_rough() {
+        // Mean of 10k uniforms should be close to 0.5 for every generator.
+        fn check<R: Rng>(mut r: R) {
+            let n = 10_000;
+            let m: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+            assert!((m - 0.5).abs() < 0.02, "mean={m}");
+        }
+        check(Pcg32::seeded(1));
+        check(SplitMix64::new(2));
+        check(XorShift64Star::new(3));
+        check(Drand48::new(4));
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Pcg32::seeded(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.next_below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should occur");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(9);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "shuffle should move things");
+    }
+
+    #[test]
+    fn normal_has_zero_mean_unit_var() {
+        let mut r = Pcg32::seeded(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+        let m = xs.iter().sum::<f64>() / n as f64;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n as f64;
+        assert!(m.abs() < 0.05, "mean={m}");
+        assert!((v - 1.0).abs() < 0.1, "var={v}");
+    }
+
+    #[test]
+    fn splitmix_stateless_matches_reference() {
+        // Known-answer test from the SplitMix64 reference (Vigna).
+        // seed 0: first output 0xE220A8397B1DCDAF
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220A8397B1DCDAF);
+    }
+}

@@ -1,0 +1,145 @@
+//! Artifact manifest: `python/compile/aot.py` writes
+//! `artifacts/manifest.json` describing every lowered HLO module (name,
+//! file, input/output shapes and the model hyperparameters baked into
+//! it); the coordinator reads it to wire inputs without hardcoding
+//! shapes in two languages.
+
+use crate::config::json::{self, JsonValue};
+use std::path::{Path, PathBuf};
+
+/// One lowered module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    /// Logical name, e.g. `sparse_train_step`.
+    pub name: String,
+    /// HLO text file (relative to the manifest).
+    pub file: String,
+    /// Input tensor shapes, in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output tensor shapes, in tuple order.
+    pub outputs: Vec<Vec<usize>>,
+    /// Free-form metadata (layer sizes, paths, batch…).
+    pub meta: JsonValue,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// Directory containing the manifest (files resolve against it).
+    pub dir: PathBuf,
+    /// All artifacts by name.
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn parse_shape_list(v: &JsonValue) -> Result<Vec<Vec<usize>>, String> {
+    v.as_array()
+        .ok_or("shape list must be an array")?
+        .iter()
+        .map(|s| {
+            s.as_array()
+                .ok_or("shape must be an array")?
+                .iter()
+                .map(|d| d.as_usize().ok_or("dim must be int".to_string()))
+                .collect()
+        })
+        .collect()
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<ArtifactManifest, String> {
+        let dir = PathBuf::from(dir);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<ArtifactManifest, String> {
+        let root = json::parse(text)?;
+        let arr = root
+            .get("artifacts")
+            .and_then(|a| a.as_array())
+            .ok_or("manifest must contain an 'artifacts' array")?;
+        let mut artifacts = Vec::new();
+        for a in arr {
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or("artifact.name")?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or("artifact.file")?
+                    .to_string(),
+                inputs: parse_shape_list(a.get("inputs").ok_or("artifact.inputs")?)?,
+                outputs: parse_shape_list(a.get("outputs").ok_or("artifact.outputs")?)?,
+                meta: a.get("meta").cloned().unwrap_or(JsonValue::Null),
+            });
+        }
+        Ok(ArtifactManifest { dir, artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// True if every artifact file exists on disk.
+    pub fn complete(&self) -> bool {
+        self.artifacts.iter().all(|a| Path::new(&self.path_of(a)).exists())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {
+          "name": "sparse_train_step",
+          "file": "sparse_train_step.hlo.txt",
+          "inputs": [[2048], [2048], [64, 784], [64]],
+          "outputs": [[2048], [2048], [1]],
+          "meta": {"paths": 2048, "batch": 64}
+        },
+        {
+          "name": "sparse_forward",
+          "file": "sparse_forward.hlo.txt",
+          "inputs": [[2048], [64, 784]],
+          "outputs": [[64, 10]]
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp/art")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let ts = m.find("sparse_train_step").unwrap();
+        assert_eq!(ts.inputs.len(), 4);
+        assert_eq!(ts.inputs[2], vec![64, 784]);
+        assert_eq!(ts.meta.get("paths").unwrap().as_usize(), Some(2048));
+        assert_eq!(
+            m.path_of(ts),
+            PathBuf::from("/tmp/art/sparse_train_step.hlo.txt")
+        );
+        assert!(m.find("nope").is_none());
+        assert!(!m.complete(), "files do not exist");
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(ArtifactManifest::parse(r#"{"artifacts": [{"name": "x"}]}"#, ".".into()).is_err());
+        assert!(ArtifactManifest::parse(r#"{}"#, ".".into()).is_err());
+    }
+}

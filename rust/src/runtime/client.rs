@@ -1,0 +1,117 @@
+//! PJRT client wrapper over the `xla` crate.
+
+use anyhow::{Context, Result};
+
+/// A PJRT client (CPU in this environment).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform name reported by PJRT.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    pub fn load_hlo_text(&self, path: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path}"))?;
+        Ok(Executable { exe, name: path.to_string() })
+    }
+
+}
+
+/// A compiled executable ready to run.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Source path (diagnostics).
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    ///
+    /// `aot.py` lowers every artifact with `return_tuple=True`, so the
+    /// single device output is a tuple literal which we decompose.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute(inputs).context("execute")?;
+        let mut out = result[0][0].to_literal_sync().context("device → host transfer")?;
+        let tuple = out.decompose_tuple().context("decomposing output tuple")?;
+        Ok(tuple)
+    }
+}
+
+/// Build an f32 literal of the given dimensions.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal_f32 size mismatch: {} vs {:?}", data.len(), dims);
+    let lit = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).context("reshape literal")
+}
+
+/// Build an i32 literal of the given dimensions.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal_i32 size mismatch");
+    let lit = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).context("reshape literal")
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+/// Extract a scalar f32.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = to_vec_f32(lit)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    //! Runtime tests that need compiled artifacts live in
+    //! `rust/tests/aot_integration.rs` (they require `make artifacts`).
+    use super::*;
+
+    #[test]
+    fn literal_helpers_validate_sizes() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3], &[2]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let back = to_vec_f32(&lit).unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let lit = literal_f32(&[7.5], &[1]).unwrap();
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 7.5);
+        let lit2 = literal_f32(&[1.0, 2.0], &[2]).unwrap();
+        assert!(to_scalar_f32(&lit2).is_err());
+    }
+}

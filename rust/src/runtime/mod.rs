@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts (produced by
+//! `python/compile/aot.py`) and execute them from rust — the bridge
+//! between the L3 coordinator and the L2/L1 JAX+Pallas compute.
+//!
+//! Interchange format is **HLO text** (not serialized protos): jax≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids cleanly (see /opt/xla-example).
+//!
+//! Python never runs at request time: artifacts are compiled once by
+//! `make artifacts`, and every invocation here is pure rust → PJRT.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactManifest, ArtifactSpec};
+pub use client::{Executable, Runtime};

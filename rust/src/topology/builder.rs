@@ -1,0 +1,520 @@
+//! Path generation: random walks (paper §3, Fig 3) and Sobol'
+//! enumeration (paper §4.3, Eqn 6), with sign policies (§3.2) and
+//! bad-dimension skipping (§4.3, Table 1 caption).
+
+use super::PathTopology;
+use crate::qmc::scramble::OwenScramble;
+use crate::qmc::sobol::{Sobol, MAX_DIMS};
+use crate::qmc::Sequence;
+use crate::rng::{Drand48, Pcg32, Rng};
+
+/// Which engine generates the path indices.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PathSource {
+    /// Random walk on the dense graph, one uniform draw per (layer,
+    /// path) — the paper's Fig 3 `drand48()` loop.  *Progressive* in the
+    /// paths (path p never changes when more paths are appended) because
+    /// draws are indexed by `(layer, path)` via a counter-based RNG.
+    Random {
+        /// Seed of the counter-based generator.
+        seed: u64,
+    },
+    /// drand48-compatible sequential generation, reproducing Fig 3
+    /// bit-exactly (NOT progressive: appending paths reshuffles draws).
+    Drand48 {
+        /// srand48 seed.
+        seed: u32,
+    },
+    /// Sobol' sequence: path i is linked through layer l at neuron
+    /// `floor(n_l · x_i^{(dim_l)})` (Eqn 6).
+    Sobol {
+        /// Skip dimensions whose pairing with the previous layer's
+        /// dimension coalesces many edges (§4.3).
+        skip_bad_dims: bool,
+        /// Owen-scramble the sequence with this seed (Table 1).
+        scramble_seed: Option<u64>,
+    },
+    /// Halton sequence (paper §6 future work: other low discrepancy
+    /// sequences).  Stratifies per prime-base blocks, so the §4.4
+    /// power-of-two hardware guarantees hold only for its base-2
+    /// dimension — exposed to quantify that trade-off.
+    Halton {
+        /// Digit-scramble with this seed (`None` = plain).
+        scramble_seed: Option<u64>,
+    },
+}
+
+/// Sign assignment per path (paper §3.2, §4.3 and Table 3 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SignPolicy {
+    /// No signs (plain topology).
+    None,
+    /// Even path index ⇒ +, odd ⇒ − ("alternating" / perfectly balanced
+    /// supporting + inhibiting networks, §3.2).
+    AlternatingPath,
+    /// First half of the paths positive, second half negative (§4.3).
+    FirstHalfPositive,
+    /// Dedicate one extra Sobol' dimension (or RNG draw) to the sign:
+    /// component < ½ ⇒ +, else − (§4.3, second option).
+    SequenceDimension,
+}
+
+/// Builder for [`PathTopology`].
+#[derive(Debug, Clone)]
+pub struct TopologyBuilder {
+    layer_sizes: Vec<usize>,
+    paths: usize,
+    source: PathSource,
+    sign_policy: SignPolicy,
+    /// Duplicate-edge fraction above which a Sobol' dimension pairing is
+    /// considered "bad" and skipped (only with `skip_bad_dims`).
+    pub bad_dim_threshold: f64,
+}
+
+impl TopologyBuilder {
+    /// Start a builder for the given layer sizes (input layer first).
+    pub fn new(layer_sizes: &[usize]) -> Self {
+        assert!(layer_sizes.len() >= 2, "need at least input and output layer");
+        assert!(layer_sizes.iter().all(|&n| n > 0));
+        TopologyBuilder {
+            layer_sizes: layer_sizes.to_vec(),
+            paths: 1024,
+            source: PathSource::Sobol { skip_bad_dims: true, scramble_seed: None },
+            sign_policy: SignPolicy::None,
+            bad_dim_threshold: 0.05,
+        }
+    }
+
+    /// Number of paths to trace.
+    pub fn paths(mut self, paths: usize) -> Self {
+        assert!(paths > 0);
+        self.paths = paths;
+        self
+    }
+
+    /// Path generation engine.
+    pub fn source(mut self, source: PathSource) -> Self {
+        self.source = source;
+        self
+    }
+
+    /// Sign assignment policy.
+    pub fn sign_policy(mut self, policy: SignPolicy) -> Self {
+        self.sign_policy = policy;
+        self
+    }
+
+    /// Generate the topology.
+    pub fn build(&self) -> PathTopology {
+        let (index, dims_used) = match &self.source {
+            PathSource::Random { seed } => (self.build_random(*seed), None),
+            PathSource::Drand48 { seed } => (self.build_drand48(*seed), None),
+            PathSource::Sobol { skip_bad_dims, scramble_seed } => {
+                let (idx, dims) = self.build_sobol(*skip_bad_dims, *scramble_seed);
+                (idx, Some(dims))
+            }
+            PathSource::Halton { scramble_seed } => {
+                let layers = self.layer_sizes.len();
+                let seq: crate::qmc::halton::Halton = match scramble_seed {
+                    None => crate::qmc::halton::Halton::new(layers),
+                    Some(s) => crate::qmc::halton::Halton::scrambled(layers, *s),
+                };
+                let idx = (0..layers)
+                    .map(|l| {
+                        let n = self.layer_sizes[l];
+                        (0..self.paths).map(|p| seq.map_to(p as u64, l, n) as u32).collect()
+                    })
+                    .collect();
+                (idx, Some((0..layers).collect()))
+            }
+        };
+        let signs = self.build_signs();
+        PathTopology {
+            layer_sizes: self.layer_sizes.clone(),
+            paths: self.paths,
+            index,
+            signs,
+            source: self.source.clone(),
+            dims_used,
+        }
+    }
+
+    /// Counter-based random walk: draw (layer, path) ↦ uniform via a
+    /// stateless hash so the prefix is stable under growth.
+    fn build_random(&self, seed: u64) -> Vec<Vec<u32>> {
+        self.layer_sizes
+            .iter()
+            .enumerate()
+            .map(|(l, &n)| {
+                (0..self.paths)
+                    .map(|p| {
+                        let h = crate::rng::splitmix64(
+                            seed ^ (l as u64) << 40 ^ (p as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                        );
+                        (((h >> 32) * n as u64) >> 32) as u32
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Bit-exact Fig 3 reference: sequential drand48 over layers, then
+    /// paths (`index[l][p] = (int)(drand48()*neuronsPerLayer[l])`).
+    fn build_drand48(&self, seed: u32) -> Vec<Vec<u32>> {
+        let mut rng = Drand48::new(seed);
+        self.layer_sizes
+            .iter()
+            .map(|&n| (0..self.paths).map(|_| (rng.drand48() * n as f64) as u32).collect())
+            .collect()
+    }
+
+    /// Sobol' enumeration per Eqn 6, optionally skipping bad dimensions.
+    fn build_sobol(
+        &self,
+        skip_bad_dims: bool,
+        scramble_seed: Option<u64>,
+    ) -> (Vec<Vec<u32>>, Vec<usize>) {
+        let seq: Box<dyn Sequence> = match scramble_seed {
+            None => Box::new(Sobol::new(MAX_DIMS)),
+            Some(s) => Box::new(OwenScramble::new(Sobol::new(MAX_DIMS), s)),
+        };
+        let layers = self.layer_sizes.len();
+        let mut dims_used = Vec::with_capacity(layers);
+        let mut next_dim = 0usize;
+        // scan at most this many candidate dimensions per layer; if none
+        // is conflict-free, take the best seen (near capacity saturation
+        // no pairing can avoid duplicates, so "skip forever" must not
+        // exhaust the dimension budget).
+        const MAX_SCAN: usize = 8;
+        for l in 0..layers {
+            let mut dim = next_dim;
+            if skip_bad_dims && l > 0 {
+                let prev_dim = *dims_used.last().unwrap();
+                let mut best = (usize::MAX, dim);
+                for cand in next_dim..(next_dim + MAX_SCAN).min(MAX_DIMS) {
+                    let avoidable = self.avoidable_duplicates(
+                        seq.as_ref(),
+                        prev_dim,
+                        cand,
+                        self.layer_sizes[l - 1],
+                        self.layer_sizes[l],
+                    );
+                    if avoidable < best.0 {
+                        best = (avoidable, cand);
+                    }
+                    if (avoidable as f64) <= self.bad_dim_threshold * self.paths as f64 {
+                        best = (avoidable, cand);
+                        break;
+                    }
+                }
+                dim = best.1;
+            }
+            assert!(dim < MAX_DIMS, "ran out of Sobol' dimensions");
+            dims_used.push(dim);
+            next_dim = dim + 1;
+        }
+        let index = (0..layers)
+            .map(|l| {
+                let n = self.layer_sizes[l] as u64;
+                let block = seq.component_block(dims_used[l], self.paths);
+                block.iter().map(|&x| ((x as u64 * n) >> 32) as u32).collect()
+            })
+            .collect();
+        (index, dims_used)
+    }
+
+    /// Duplicate (src, dst) pairs beyond the pigeonhole minimum for a
+    /// candidate dimension pairing — the §4.3 "multiple references"
+    /// diagnostic driving dimension skipping.
+    fn avoidable_duplicates(
+        &self,
+        seq: &dyn Sequence,
+        dim_a: usize,
+        dim_b: usize,
+        n_a: usize,
+        n_b: usize,
+    ) -> usize {
+        let capacity = n_a * n_b;
+        let unavoidable = self.paths.saturating_sub(capacity);
+        let mut dups = 0usize;
+        // perf: block generation (XOR-doubling / O(1) scrambling) plus a
+        // flat occupancy bitmap beat per-point eval + HashSet by an
+        // order of magnitude (EXPERIMENTS.md §Perf); fall back to
+        // hashing only for absurdly wide transitions.
+        let ba = seq.component_block(dim_a, self.paths);
+        let bb = seq.component_block(dim_b, self.paths);
+        let map = |x: u32, n: usize| ((x as u64 * n as u64) >> 32) as usize;
+        if capacity <= 1 << 24 {
+            let mut seen = vec![false; capacity];
+            for p in 0..self.paths {
+                let cell = map(ba[p], n_a) * n_b + map(bb[p], n_b);
+                if seen[cell] {
+                    dups += 1;
+                } else {
+                    seen[cell] = true;
+                }
+            }
+        } else {
+            let mut seen = std::collections::HashSet::with_capacity(self.paths);
+            for p in 0..self.paths {
+                let key = (map(ba[p], n_a) as u64) << 32 | map(bb[p], n_b) as u64;
+                if !seen.insert(key) {
+                    dups += 1;
+                }
+            }
+        }
+        dups - unavoidable.min(dups)
+    }
+
+    fn build_signs(&self) -> Option<Vec<f32>> {
+        match self.sign_policy {
+            SignPolicy::None => None,
+            SignPolicy::AlternatingPath => {
+                Some((0..self.paths).map(|p| if p % 2 == 0 { 1.0 } else { -1.0 }).collect())
+            }
+            SignPolicy::FirstHalfPositive => {
+                Some((0..self.paths).map(|p| if p < self.paths / 2 { 1.0 } else { -1.0 }).collect())
+            }
+            SignPolicy::SequenceDimension => {
+                // Use a dedicated dimension/draw per §4.3: Sobol' dim
+                // MAX_DIMS-1 (far from topology dims) or a hashed draw
+                // for random sources.
+                match &self.source {
+                    PathSource::Sobol { scramble_seed, .. } => {
+                        let seq: Box<dyn Sequence> = match scramble_seed {
+                            None => Box::new(Sobol::new(MAX_DIMS)),
+                            Some(s) => Box::new(OwenScramble::new(Sobol::new(MAX_DIMS), *s)),
+                        };
+                        Some(
+                            (0..self.paths)
+                                .map(|p| {
+                                    if seq.component_u32(p as u64, MAX_DIMS - 1) >> 31 == 0 {
+                                        1.0
+                                    } else {
+                                        -1.0
+                                    }
+                                })
+                                .collect(),
+                        )
+                    }
+                    PathSource::Random { seed } => Some(
+                        (0..self.paths)
+                            .map(|p| {
+                                let h = crate::rng::splitmix64(seed ^ 0x5157 ^ (p as u64) << 1);
+                                if h >> 63 == 0 {
+                                    1.0
+                                } else {
+                                    -1.0
+                                }
+                            })
+                            .collect(),
+                    ),
+                    PathSource::Drand48 { seed } => {
+                        let mut rng = Pcg32::seeded(*seed as u64);
+                        Some(
+                            (0..self.paths)
+                                .map(|_| if rng.next_f32() < 0.5 { 1.0 } else { -1.0 })
+                                .collect(),
+                        )
+                    }
+                    PathSource::Halton { scramble_seed } => {
+                        // dedicate the next unused prime-base dimension
+                        let dims = self.layer_sizes.len();
+                        let seq = match scramble_seed {
+                            None => crate::qmc::halton::Halton::new(dims + 1),
+                            Some(s) => crate::qmc::halton::Halton::scrambled(dims + 1, *s),
+                        };
+                        Some(
+                            (0..self.paths)
+                                .map(|p| {
+                                    if seq.component_u32(p as u64, dims) >> 31 == 0 {
+                                        1.0
+                                    } else {
+                                        -1.0
+                                    }
+                                })
+                                .collect(),
+                        )
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_is_progressive_in_paths() {
+        let a = TopologyBuilder::new(&[16, 16, 16])
+            .paths(32)
+            .source(PathSource::Random { seed: 7 })
+            .build();
+        let b = TopologyBuilder::new(&[16, 16, 16])
+            .paths(64)
+            .source(PathSource::Random { seed: 7 })
+            .build();
+        for l in 0..3 {
+            assert_eq!(&a.index[l][..], &b.index[l][..32]);
+        }
+    }
+
+    #[test]
+    fn drand48_matches_fig3_loop() {
+        // replicate the Fig 3 loop manually and compare
+        let sizes = [8usize, 4, 2];
+        let paths = 16;
+        let mut rng = Drand48::new(99);
+        let mut expect: Vec<Vec<u32>> = Vec::new();
+        for &n in &sizes {
+            expect.push((0..paths).map(|_| (rng.drand48() * n as f64) as u32).collect());
+        }
+        let t = TopologyBuilder::new(&sizes)
+            .paths(paths)
+            .source(PathSource::Drand48 { seed: 99 })
+            .build();
+        assert_eq!(t.index, expect);
+    }
+
+    #[test]
+    fn indices_in_range_all_sources() {
+        for source in [
+            PathSource::Random { seed: 3 },
+            PathSource::Drand48 { seed: 3 },
+            PathSource::Sobol { skip_bad_dims: true, scramble_seed: None },
+            PathSource::Sobol { skip_bad_dims: false, scramble_seed: Some(1174) },
+        ] {
+            let t = TopologyBuilder::new(&[10, 300, 7]).paths(333).source(source.clone()).build();
+            for (l, &n) in t.layer_sizes.iter().enumerate() {
+                assert!(
+                    t.index[l].iter().all(|&i| (i as usize) < n),
+                    "source {source:?} layer {l}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sobol_skipping_reduces_duplicates() {
+        // Find a configuration where consecutive dims coalesce edges and
+        // verify skipping improves the unique-edge count (Fig 9 logic).
+        let sizes = [64usize, 64, 64, 64, 64];
+        let paths = 2048;
+        let plain = TopologyBuilder::new(&sizes)
+            .paths(paths)
+            .source(PathSource::Sobol { skip_bad_dims: false, scramble_seed: None })
+            .build();
+        let skipped = TopologyBuilder::new(&sizes)
+            .paths(paths)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+            .build();
+        assert!(
+            skipped.nnz() >= plain.nnz(),
+            "skipping should never lose unique edges: {} vs {}",
+            skipped.nnz(),
+            plain.nnz()
+        );
+    }
+
+    #[test]
+    fn sobol_dims_are_strictly_increasing() {
+        let t = TopologyBuilder::new(&[32, 32, 32, 32])
+            .paths(256)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+            .build();
+        let dims = t.dims_used.unwrap();
+        assert_eq!(dims.len(), 4);
+        for w in dims.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn halton_source_valid_and_progressive() {
+        let a = TopologyBuilder::new(&[16, 27, 8])
+            .paths(81)
+            .source(PathSource::Halton { scramble_seed: Some(7) })
+            .build();
+        for (l, &n) in a.layer_sizes.iter().enumerate() {
+            assert!(a.index[l].iter().all(|&i| (i as usize) < n));
+        }
+        let b = TopologyBuilder::new(&[16, 27, 8])
+            .paths(162)
+            .source(PathSource::Halton { scramble_seed: Some(7) })
+            .build();
+        for l in 0..3 {
+            assert_eq!(&a.index[l][..], &b.index[l][..81], "halton is progressive");
+        }
+        // base-3 dimension over 27 neurons covers every neuron in 27
+        // paths (b^3 block = permutation)
+        let mut seen = vec![false; 27];
+        for p in 0..27 {
+            seen[b.index[1][p] as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sign_policies() {
+        let base = TopologyBuilder::new(&[8, 8]).paths(64);
+        let alt = base
+            .clone()
+            .source(PathSource::Sobol { skip_bad_dims: false, scramble_seed: None })
+            .sign_policy(SignPolicy::AlternatingPath)
+            .build();
+        let s = alt.signs.as_ref().unwrap();
+        assert_eq!(s.iter().filter(|&&v| v > 0.0).count(), 32);
+        assert!(s[0] > 0.0 && s[1] < 0.0);
+
+        let half = base
+            .clone()
+            .source(PathSource::Sobol { skip_bad_dims: false, scramble_seed: None })
+            .sign_policy(SignPolicy::FirstHalfPositive)
+            .build();
+        let s = half.signs.as_ref().unwrap();
+        assert!(s[..32].iter().all(|&v| v > 0.0));
+        assert!(s[32..].iter().all(|&v| v < 0.0));
+
+        // sequence-dimension policy balances approximately (exactly for
+        // pow-2 path counts with Sobol': the dedicated component is a
+        // (0,1)-sequence, so each block of 2 has one value < 1/2).
+        let seqd = base
+            .source(PathSource::Sobol { skip_bad_dims: false, scramble_seed: None })
+            .sign_policy(SignPolicy::SequenceDimension)
+            .build();
+        let s = seqd.signs.as_ref().unwrap();
+        assert_eq!(s.iter().filter(|&&v| v > 0.0).count(), 32);
+    }
+
+    #[test]
+    fn deterministic_rebuild() {
+        let mk = || {
+            TopologyBuilder::new(&[784, 300, 300, 10])
+                .paths(512)
+                .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(4117) })
+                .build()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.dims_used, b.dims_used);
+    }
+
+    #[test]
+    fn non_pow2_layers_still_valid() {
+        // Paper: when widths are not powers of two the permutation
+        // property is lost but floor(n·x) still yields valid indices.
+        let t = TopologyBuilder::new(&[784, 300, 10])
+            .paths(1000)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+            .build();
+        assert!(t.index[0].iter().all(|&i| i < 784));
+        assert!(t.index[1].iter().all(|&i| i < 300));
+        assert!(t.index[2].iter().all(|&i| i < 10));
+        // coverage: with ≥ n·log n paths every output neuron is hit
+        let f = t.fan_in(2);
+        assert!(f.iter().all(|&v| v > 0), "every class neuron reached: {f:?}");
+    }
+}

@@ -1,0 +1,149 @@
+//! Duplicate-edge (coalescing) analysis — paper §4.3 and Fig 9.
+//!
+//! When the number of paths approaches (or exceeds) the product of two
+//! consecutive layer widths, several paths select the same edge.  In a
+//! matrix emulation those duplicates coalesce into a single element
+//! (footnote 1), *reducing the effective capacity* of the network.  The
+//! Sobol' construction can avoid most avoidable duplicates by skipping
+//! dimensions; random walks cannot (birthday collisions).
+
+use super::PathTopology;
+use std::collections::HashMap;
+
+/// Per-transition duplicate-edge statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoalesceStats {
+    /// Transition index (layer t → t+1).
+    pub transition: usize,
+    /// Paths through this transition (= total paths).
+    pub paths: usize,
+    /// Unique edges.
+    pub unique: usize,
+    /// Paths that landed on an already-used edge.
+    pub duplicates: usize,
+    /// Dense capacity `n_in · n_out` of this transition.
+    pub capacity: usize,
+    /// Histogram: multiplicity → number of edges with that multiplicity.
+    pub multiplicity_hist: Vec<(u32, usize)>,
+}
+
+impl CoalesceStats {
+    /// Duplicates that were avoidable given the capacity (pigeonhole).
+    pub fn avoidable_duplicates(&self) -> usize {
+        let unavoidable = self.paths.saturating_sub(self.capacity);
+        self.duplicates.saturating_sub(unavoidable)
+    }
+
+    /// Fraction of paths wasted on duplicate edges.
+    pub fn waste(&self) -> f64 {
+        self.duplicates as f64 / self.paths as f64
+    }
+}
+
+/// Analyze one transition of a topology.
+pub fn analyze_transition(topo: &PathTopology, t: usize) -> CoalesceStats {
+    let mut mult: HashMap<u64, u32> = HashMap::with_capacity(topo.paths);
+    for e in topo.edges(t) {
+        *mult.entry((e.src as u64) << 32 | e.dst as u64).or_insert(0) += 1;
+    }
+    let unique = mult.len();
+    let duplicates = topo.paths - unique;
+    let mut hist: HashMap<u32, usize> = HashMap::new();
+    for &m in mult.values() {
+        *hist.entry(m).or_insert(0) += 1;
+    }
+    let mut multiplicity_hist: Vec<(u32, usize)> = hist.into_iter().collect();
+    multiplicity_hist.sort_unstable();
+    CoalesceStats {
+        transition: t,
+        paths: topo.paths,
+        unique,
+        duplicates,
+        capacity: topo.layer_sizes[t] * topo.layer_sizes[t + 1],
+        multiplicity_hist,
+    }
+}
+
+/// Analyze all transitions.
+pub fn analyze(topo: &PathTopology) -> Vec<CoalesceStats> {
+    (0..topo.transitions()).map(|t| analyze_transition(topo, t)).collect()
+}
+
+/// Total unique edges across the network (the Fig 9 y-axis value).
+pub fn total_nnz(topo: &PathTopology) -> usize {
+    analyze(topo).iter().map(|s| s.unique).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{PathSource, TopologyBuilder};
+
+    #[test]
+    fn stats_are_consistent() {
+        let t = TopologyBuilder::new(&[16, 16, 16])
+            .paths(512)
+            .source(PathSource::Random { seed: 5 })
+            .build();
+        for s in analyze(&t) {
+            assert_eq!(s.unique + s.duplicates, s.paths);
+            let from_hist: usize = s.multiplicity_hist.iter().map(|&(_, c)| c).sum();
+            assert_eq!(from_hist, s.unique);
+            let paths_from_hist: usize =
+                s.multiplicity_hist.iter().map(|&(m, c)| m as usize * c).sum();
+            assert_eq!(paths_from_hist, s.paths);
+            assert_eq!(s.capacity, 256);
+        }
+        assert_eq!(total_nnz(&t), t.nnz());
+    }
+
+    #[test]
+    fn saturation_beyond_capacity() {
+        // more paths than capacity forces duplicates (pigeonhole)
+        let t = TopologyBuilder::new(&[4, 4])
+            .paths(64)
+            .source(PathSource::Sobol { skip_bad_dims: false, scramble_seed: None })
+            .build();
+        let s = analyze_transition(&t, 0);
+        assert!(s.duplicates >= 64 - 16);
+        assert!(s.unique <= 16);
+        // Sobol' should saturate capacity exactly: the (dim0, dim1) pair
+        // of consecutive 2-bit slots covers all 16 cells in 16 points…
+        assert_eq!(s.avoidable_duplicates(), 0, "sobol should have no avoidable dups: {s:?}");
+    }
+
+    #[test]
+    fn sobol_wastes_less_than_random_near_capacity() {
+        // Fig 9's message: near-capacity, the LDS with good dims keeps
+        // more unique weights than random walks.
+        let sizes = [32usize, 32];
+        let paths = 1024; // == capacity
+        let sobol = TopologyBuilder::new(&sizes)
+            .paths(paths)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+            .build();
+        let random = TopologyBuilder::new(&sizes)
+            .paths(paths)
+            .source(PathSource::Random { seed: 1 })
+            .build();
+        let su = analyze_transition(&sobol, 0).unique;
+        let ru = analyze_transition(&random, 0).unique;
+        assert!(
+            su > ru,
+            "sobol unique {su} should beat random unique {ru} at capacity"
+        );
+        // random keeps ≈ (1-1/e) ≈ 63% of capacity; allow wide band
+        assert!((0.55..0.72).contains(&(ru as f64 / 1024.0)), "random unique ratio {ru}");
+    }
+
+    #[test]
+    fn waste_and_avoidable() {
+        let t = TopologyBuilder::new(&[8, 8])
+            .paths(32)
+            .source(PathSource::Random { seed: 2 })
+            .build();
+        let s = analyze_transition(&t, 0);
+        assert!((0.0..=1.0).contains(&s.waste()));
+        assert!(s.avoidable_duplicates() <= s.duplicates);
+    }
+}

@@ -1,0 +1,296 @@
+//! Path topologies: the paper's representation of a neural network as a
+//! set of paths through the layer graph (§2, §3, §4.3).
+//!
+//! A [`PathTopology`] stores, for `L+1` layers and `P` paths, the neuron
+//! index of every path in every layer (`index[l][p]`, exactly the
+//! `index[][]` array of the paper's Fig 3), plus optional per-path signs
+//! (§3.2) and the provenance needed for progressive growth (§4.3,
+//! Fig 5).
+//!
+//! Submodules:
+//! * [`builder`] — random-walk and Sobol' path generation, sign
+//!   policies, bad-dimension skipping.
+//! * [`coalesce`] — duplicate-edge analysis (Fig 9).
+//! * [`bank`] — memory-bank-conflict and crossbar-routing simulation
+//!   (§4.4 hardware claims).
+
+pub mod bank;
+pub mod builder;
+pub mod coalesce;
+
+pub use builder::{PathSource, SignPolicy, TopologyBuilder};
+
+use std::collections::HashSet;
+
+/// A sparse network topology represented by paths.
+#[derive(Debug, Clone)]
+pub struct PathTopology {
+    /// Neurons per layer, input layer first (`neuronsPerLayer` in Fig 3).
+    pub layer_sizes: Vec<usize>,
+    /// Number of paths `P`.
+    pub paths: usize,
+    /// `index[l][p]` = neuron index (within layer l) of path p.
+    pub index: Vec<Vec<u32>>,
+    /// Per-path sign (+1.0 / −1.0); `None` ⇒ unsigned topology.
+    pub signs: Option<Vec<f32>>,
+    /// How the paths were generated (used by [`PathTopology::grow_to`]).
+    pub source: PathSource,
+    /// Sobol' dimension assigned to each layer (after skipping), when the
+    /// source is a low discrepancy sequence.
+    pub dims_used: Option<Vec<usize>>,
+}
+
+/// One directed edge of the path graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Edge {
+    /// Neuron index in layer `l-1`.
+    pub src: u32,
+    /// Neuron index in layer `l`.
+    pub dst: u32,
+}
+
+impl PathTopology {
+    /// Number of layer *transitions* (weight arrays) = layers − 1.
+    pub fn transitions(&self) -> usize {
+        self.layer_sizes.len() - 1
+    }
+
+    /// Total number of path-weights (`transitions × paths`) — the
+    /// storage cost of the sparse network, before coalescing.
+    pub fn weight_count(&self) -> usize {
+        self.transitions() * self.paths
+    }
+
+    /// Edges of transition `t` (from layer `t` to `t+1`), one per path,
+    /// in path order (the linear weight-streaming order of Fig 3).
+    pub fn edges(&self, t: usize) -> impl Iterator<Item = Edge> + '_ {
+        let src = &self.index[t];
+        let dst = &self.index[t + 1];
+        (0..self.paths).map(move |p| Edge { src: src[p], dst: dst[p] })
+    }
+
+    /// Number of *unique* edges of transition `t` (duplicates coalesce
+    /// into one matrix entry — paper footnote 1; basis of Fig 9/11).
+    pub fn unique_edges(&self, t: usize) -> usize {
+        let set: HashSet<Edge> = self.edges(t).collect();
+        set.len()
+    }
+
+    /// Total non-zero weights after coalescing duplicates, across all
+    /// transitions (the y-axis of Figs 9 and 11).
+    pub fn nnz(&self) -> usize {
+        (0..self.transitions()).map(|t| self.unique_edges(t)).sum()
+    }
+
+    /// Dense parameter count of the fully connected counterpart.
+    pub fn dense_weight_count(&self) -> usize {
+        self.layer_sizes.windows(2).map(|w| w[0] * w[1]).sum()
+    }
+
+    /// Sparsity in [0,1]: fraction of dense weights *not* realized
+    /// (Fig 12, Table 2).
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / self.dense_weight_count() as f64
+    }
+
+    /// Fan-in of each neuron of layer `l` (number of incident paths from
+    /// layer `l−1`); `l ≥ 1`.
+    pub fn fan_in(&self, l: usize) -> Vec<u32> {
+        assert!(l >= 1);
+        let mut f = vec![0u32; self.layer_sizes[l]];
+        for p in 0..self.paths {
+            f[self.index[l][p] as usize] += 1;
+        }
+        f
+    }
+
+    /// Fan-out of each neuron of layer `l` (paths leaving towards layer
+    /// `l+1`); `l < last`.
+    pub fn fan_out(&self, l: usize) -> Vec<u32> {
+        assert!(l + 1 < self.layer_sizes.len());
+        let mut f = vec![0u32; self.layer_sizes[l]];
+        for p in 0..self.paths {
+            f[self.index[l][p] as usize] += 1;
+        }
+        f
+    }
+
+    /// `true` iff every neuron of every layer has the same valence — the
+    /// paper's Fig 6 caption property ("the fan-in and fan-out is
+    /// constant across each layer"), guaranteed by Sobol' generation
+    /// when `paths` and all layer sizes are powers of two.
+    pub fn constant_valence(&self) -> bool {
+        for l in 0..self.layer_sizes.len() {
+            let mut f = vec![0u32; self.layer_sizes[l]];
+            for p in 0..self.paths {
+                f[self.index[l][p] as usize] += 1;
+            }
+            let first = f[0];
+            if f.iter().any(|&c| c != first) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Per-transition grouping by destination neuron: for each dst
+    /// neuron, the list of path ids terminating there.  Used by the
+    /// engine's backward pass and by the quantizer.
+    pub fn paths_by_dst(&self, t: usize) -> Vec<Vec<u32>> {
+        let mut by: Vec<Vec<u32>> = vec![Vec::new(); self.layer_sizes[t + 1]];
+        for p in 0..self.paths {
+            by[self.index[t + 1][p] as usize].push(p as u32);
+        }
+        by
+    }
+
+    /// Dense boolean mask of transition `t` (`[n_out][n_in]`, row-major
+    /// flattened) — the "emulation in matrix frameworks" of footnote 1,
+    /// used for cross-checks against the dense engine and the JAX L2.
+    pub fn dense_mask(&self, t: usize) -> Vec<f32> {
+        let n_in = self.layer_sizes[t];
+        let n_out = self.layer_sizes[t + 1];
+        let mut mask = vec![0.0f32; n_in * n_out];
+        for e in self.edges(t) {
+            mask[e.dst as usize * n_in + e.src as usize] = 1.0;
+        }
+        mask
+    }
+
+    /// Zero-sum check of §4.3: with a power-of-two number of signed paths
+    /// and constant valence, supporting and inhibiting paths per neuron
+    /// balance exactly.
+    pub fn signed_balance(&self, l: usize) -> Option<Vec<i64>> {
+        let signs = self.signs.as_ref()?;
+        let mut bal = vec![0i64; self.layer_sizes[l]];
+        for p in 0..self.paths {
+            bal[self.index[l][p] as usize] += signs[p] as i64;
+        }
+        Some(bal)
+    }
+
+    /// Progressively grow the topology to `new_paths` (≥ current) by
+    /// enumerating further points of the same source — the paper's Fig 5
+    /// "from sparse to fully connected" enumeration.  Existing paths are
+    /// unchanged (progressive property).
+    pub fn grow_to(&mut self, new_paths: usize) {
+        assert!(new_paths >= self.paths, "grow_to cannot shrink");
+        if new_paths == self.paths {
+            return;
+        }
+        let grown = TopologyBuilder::new(&self.layer_sizes)
+            .paths(new_paths)
+            .source(self.source.clone())
+            .build();
+        // progressive sources keep the prefix intact; assert in debug.
+        #[cfg(debug_assertions)]
+        for l in 0..self.index.len() {
+            for p in 0..self.paths {
+                debug_assert_eq!(self.index[l][p], grown.index[l][p], "source not progressive");
+            }
+        }
+        *self = grown;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sobol_topo(sizes: &[usize], paths: usize) -> PathTopology {
+        TopologyBuilder::new(sizes)
+            .paths(paths)
+            .source(PathSource::Sobol { skip_bad_dims: false, scramble_seed: None })
+            .build()
+    }
+
+    #[test]
+    fn fig5_constant_valence() {
+        // Paper Fig 5: 32 neurons × 5 layers; 32/64/128 paths give
+        // valence 1/2/4 per neural unit.
+        for (paths, valence) in [(32usize, 1u32), (64, 2), (128, 4)] {
+            let t = sobol_topo(&[32, 32, 32, 32, 32], paths);
+            assert!(t.constant_valence(), "paths={paths}");
+            for l in 0..4 {
+                let f = t.fan_out(l);
+                assert!(f.iter().all(|&v| v == valence), "paths={paths} l={l} f={f:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig6_classifier_and_autoencoder_shapes() {
+        // 32 inputs → 4 outputs classifier; 32 → 8 → 32 autoencoder.
+        let c = sobol_topo(&[32, 16, 8, 4], 64);
+        assert!(c.constant_valence());
+        let a = sobol_topo(&[32, 16, 8, 16, 32], 64);
+        assert!(a.constant_valence());
+        // autoencoder: 64 paths over 8-neuron latent = valence 8
+        let latent_fan = a.fan_in(2);
+        assert!(latent_fan.iter().all(|&v| v == 8));
+    }
+
+    #[test]
+    fn grow_is_progressive() {
+        let mut t = sobol_topo(&[32, 32, 32], 32);
+        let before = t.index.clone();
+        t.grow_to(128);
+        assert_eq!(t.paths, 128);
+        for l in 0..3 {
+            assert_eq!(&t.index[l][..32], &before[l][..]);
+        }
+        assert!(t.constant_valence());
+    }
+
+    #[test]
+    fn weight_and_dense_counts() {
+        let t = sobol_topo(&[8, 16, 4], 32);
+        assert_eq!(t.transitions(), 2);
+        assert_eq!(t.weight_count(), 64);
+        assert_eq!(t.dense_weight_count(), 8 * 16 + 16 * 4);
+        assert!(t.nnz() <= t.weight_count());
+        let s = t.sparsity();
+        assert!((0.0..=1.0).contains(&s));
+    }
+
+    #[test]
+    fn dense_mask_matches_edges() {
+        let t = sobol_topo(&[8, 8], 16);
+        let mask = t.dense_mask(0);
+        let from_mask: usize = mask.iter().filter(|&&v| v > 0.0).count();
+        assert_eq!(from_mask, t.unique_edges(0));
+        for e in t.edges(0) {
+            assert_eq!(mask[e.dst as usize * 8 + e.src as usize], 1.0);
+        }
+    }
+
+    #[test]
+    fn paths_by_dst_covers_all_paths() {
+        let t = sobol_topo(&[16, 8, 4], 64);
+        for tr in 0..2 {
+            let by = t.paths_by_dst(tr);
+            let total: usize = by.iter().map(|v| v.len()).sum();
+            assert_eq!(total, 64);
+            for (dst, plist) in by.iter().enumerate() {
+                for &p in plist {
+                    assert_eq!(t.index[tr + 1][p as usize] as usize, dst);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signed_balance_zero_for_pow2_half_half() {
+        let t = TopologyBuilder::new(&[32, 32, 32])
+            .paths(64)
+            .source(PathSource::Sobol { skip_bad_dims: false, scramble_seed: None })
+            .sign_policy(SignPolicy::FirstHalfPositive)
+            .build();
+        // §4.3: power-of-two paths + constant valence ⇒ zero weight sum
+        // per neuron at constant init.  FirstHalfPositive with Sobol':
+        // each half is itself a union of permutation blocks, so each
+        // neuron receives equally many + and − paths.
+        let bal = t.signed_balance(1).unwrap();
+        assert!(bal.iter().all(|&b| b == 0), "balance={bal:?}");
+    }
+}

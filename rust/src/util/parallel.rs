@@ -1,0 +1,115 @@
+//! Minimal data-parallel helper (the `rayon` substrate): split a range
+//! of work items across `std::thread::scope` threads.
+//!
+//! Used by the matmul kernel and the batch loops of the pure-rust
+//! engine.  Thread count defaults to the machine parallelism, capped by
+//! `SOBOLNET_THREADS`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use.
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("SOBOLNET_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()));
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on worker threads.
+/// `f` must be `Sync` (it receives disjoint ranges, so data writes should
+/// be pre-partitioned by the caller, e.g. via `chunks_mut`).
+pub fn parallel_ranges<F: Fn(usize, usize) + Sync>(n: usize, min_chunk: usize, f: F) {
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= min_chunk {
+        f(0, n);
+        return;
+    }
+    let chunk = (n + threads - 1) / threads;
+    let chunk = chunk.max(min_chunk);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            s.spawn(move || f(start, end));
+            start = end;
+        }
+    });
+}
+
+/// Map over mutable row-chunks of `data` (each of `row_len` floats) in
+/// parallel: `f(row_index, row_slice)`.
+pub fn parallel_rows<F: Fn(usize, &mut [f32]) + Sync>(data: &mut [f32], row_len: usize, f: F) {
+    assert!(row_len > 0 && data.len() % row_len == 0);
+    let rows = data.len() / row_len;
+    let threads = num_threads().min(rows.max(1));
+    if threads <= 1 {
+        for (r, row) in data.chunks_mut(row_len).enumerate() {
+            f(r, row);
+        }
+        return;
+    }
+    let per = (rows + threads - 1) / threads;
+    std::thread::scope(|s| {
+        let f = &f;
+        for (t, block) in data.chunks_mut(per * row_len).enumerate() {
+            s.spawn(move || {
+                for (i, row) in block.chunks_mut(row_len).enumerate() {
+                    f(t * per + i, row);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn ranges_cover_everything_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_ranges(1000, 16, |a, b| {
+            for i in a..b {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn small_n_runs_inline() {
+        let hits = AtomicU64::new(0);
+        parallel_ranges(3, 16, |a, b| {
+            hits.fetch_add((b - a) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn rows_see_correct_indices() {
+        let mut data = vec![0.0f32; 64 * 8];
+        parallel_rows(&mut data, 8, |r, row| {
+            for v in row.iter_mut() {
+                *v = r as f32;
+            }
+        });
+        for (r, row) in data.chunks(8).enumerate() {
+            assert!(row.iter().all(|&v| v == r as f32));
+        }
+    }
+
+    #[test]
+    fn num_threads_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+}

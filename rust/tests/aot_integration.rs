@@ -1,0 +1,174 @@
+//! End-to-end integration over the AOT bridge: rust loads the HLO text
+//! artifacts produced by `python/compile/aot.py`, executes them on the
+//! PJRT CPU client, and cross-checks the numerics against the pure-rust
+//! engine — proving all three layers compose.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use sobolnet::coordinator::{AotTrainer, AotTrainerConfig};
+use sobolnet::data::synth::SynthMnist;
+use sobolnet::nn::init::Init;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::runtime::client::{literal_f32, literal_i32, to_vec_f32};
+use sobolnet::runtime::{ArtifactManifest, Runtime};
+use sobolnet::topology::{PathSource, TopologyBuilder};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("SOBOLNET_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let manifest = ArtifactManifest::load(&dir).ok()?;
+    manifest.complete().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts missing — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+fn mnist_topo(paths: usize) -> sobolnet::topology::PathTopology {
+    TopologyBuilder::new(&[784, 256, 256, 10])
+        .paths(paths)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .build()
+}
+
+#[test]
+fn kernel_artifact_matches_rust_sparse_layer() {
+    let dir = require_artifacts!();
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let spec = manifest.find("path_layer_fwd").expect("kernel artifact");
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(manifest.path_of(spec).to_str().unwrap()).unwrap();
+    let batch = spec.meta.get("batch").unwrap().as_usize().unwrap();
+    let n_in = spec.meta.get("n_in").unwrap().as_usize().unwrap();
+    let n_out = spec.meta.get("n_out").unwrap().as_usize().unwrap();
+    let paths = spec.meta.get("paths").unwrap().as_usize().unwrap();
+
+    // deterministic inputs
+    let x: Vec<f32> = (0..batch * n_in).map(|i| ((i as f32) * 0.37).sin()).collect();
+    let w: Vec<f32> = (0..paths).map(|p| ((p as f32) * 0.11).cos() * 0.5).collect();
+    let ii: Vec<i32> = (0..paths).map(|p| (p * 7919 % n_in) as i32).collect();
+    let io: Vec<i32> = (0..paths).map(|p| (p * 104729 % n_out) as i32).collect();
+
+    let out = exe
+        .run(&[
+            literal_f32(&x, &[batch, n_in]).unwrap(),
+            literal_f32(&w, &[paths]).unwrap(),
+            literal_i32(&ii, &[paths]).unwrap(),
+            literal_i32(&io, &[paths]).unwrap(),
+        ])
+        .unwrap();
+    let y = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(y.len(), batch * n_out);
+
+    // pure-rust oracle of the same layer math
+    let mut want = vec![0.0f32; batch * n_out];
+    for b in 0..batch {
+        for p in 0..paths {
+            let v = x[b * n_in + ii[p] as usize];
+            if v > 0.0 {
+                want[b * n_out + io[p] as usize] += w[p] * v;
+            }
+        }
+    }
+    for (i, (a, b)) in y.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "elem {i}: pjrt={a} rust={b}");
+    }
+}
+
+#[test]
+fn forward_artifact_matches_rust_engine() {
+    let dir = require_artifacts!();
+    let topo = mnist_topo(2048);
+    let cfg = AotTrainerConfig {
+        artifacts_dir: dir,
+        init: Init::ConstantRandomSign,
+        seed: 42,
+    };
+    let trainer = AotTrainer::new(&cfg, &topo).unwrap();
+
+    // identical weights in the pure-rust engine (bias-free to match AOT)
+    let mut net = SparseMlp::new(
+        &topo,
+        SparseMlpConfig {
+            init: Init::ConstantRandomSign,
+            seed: 42,
+            bias: false,
+            freeze_signs: false,
+        },
+    );
+    let p = topo.paths;
+    let tw = trainer.weights().unwrap();
+    for t in 0..3 {
+        net.w[t].copy_from_slice(&tw[t * p..(t + 1) * p]);
+    }
+
+    let b = trainer.shapes.batch;
+    let x: Vec<f32> = (0..b * 784).map(|i| ((i as f32) * 0.013).sin().abs()).collect();
+    let aot_logits = trainer.forward(&x).unwrap();
+    let rust_logits = net.forward(&Tensor::from_vec(x, &[b, 784]), false);
+    for i in 0..b * 10 {
+        let (a, r) = (aot_logits[i], rust_logits.data[i]);
+        assert!(
+            (a - r).abs() < 1e-2 * (1.0 + r.abs()),
+            "logit {i}: aot={a} rust={r}"
+        );
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_end_to_end() {
+    let dir = require_artifacts!();
+    let topo = mnist_topo(2048);
+    let cfg = AotTrainerConfig {
+        artifacts_dir: dir,
+        init: Init::ConstantRandomSign,
+        seed: 7,
+    };
+    let mut trainer = AotTrainer::new(&cfg, &topo).unwrap();
+    let b = trainer.shapes.batch;
+    let (tr, _) = SynthMnist::new(b * 4, 16, 3);
+    let order: Vec<usize> = (0..tr.len()).collect();
+    let mut first = None;
+    let mut last = 0.0;
+    for _epoch in 0..6 {
+        for chunk in order.chunks(b) {
+            let (x, y) = tr.gather(chunk);
+            let yi: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+            let loss = trainer.train_step(&x.data, &yi, 0.05).unwrap();
+            assert!(loss.is_finite());
+            if first.is_none() {
+                first = Some(loss);
+            }
+            last = loss;
+        }
+    }
+    let first = first.unwrap();
+    assert!(
+        last < 0.7 * first,
+        "AOT training should reduce loss: {first} -> {last}"
+    );
+    assert_eq!(trainer.steps, 24);
+}
+
+#[test]
+fn evaluate_runs_over_ragged_set() {
+    let dir = require_artifacts!();
+    let topo = mnist_topo(2048);
+    let cfg = AotTrainerConfig::default();
+    let cfg = AotTrainerConfig { artifacts_dir: dir, ..cfg };
+    let trainer = AotTrainer::new(&cfg, &topo).unwrap();
+    let n = trainer.shapes.batch + 7; // force a padded tail batch
+    let (te, _) = SynthMnist::new(n, 8, 5);
+    let yi: Vec<i32> = te.y.iter().map(|&v| v as i32).collect();
+    let acc = trainer.evaluate(&te.x.data, &yi).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}

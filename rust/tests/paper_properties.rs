@@ -1,0 +1,213 @@
+//! Property-based tests of the paper's structural claims, swept over
+//! randomized configurations (the in-tree `proptest` substitute: a
+//! seeded generator drives many cases per property and shrink-free
+//! assertion messages carry the configuration).
+
+use sobolnet::nn::init::Init;
+use sobolnet::nn::loss::softmax_xent;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::qmc::nets::{block_permutation, is_progressive_permutation};
+use sobolnet::qmc::scramble::OwenScramble;
+use sobolnet::qmc::sobol::{Sobol, MAX_DIMS};
+use sobolnet::qmc::Sequence;
+use sobolnet::rng::{Pcg32, Rng};
+use sobolnet::topology::bank::{simulate_bank_conflicts, BankMapping};
+use sobolnet::topology::{PathSource, TopologyBuilder};
+
+/// Property: every Sobol' component — scrambled with any seed — forms
+/// progressive permutations in every block of every power-of-two size.
+#[test]
+fn prop_progressive_permutations_under_scrambling() {
+    let mut rng = Pcg32::seeded(0xA11CE);
+    for case in 0..24 {
+        let seed = rng.next_u64();
+        let dim = rng.next_below(MAX_DIMS as u32) as usize;
+        let m = 1 + rng.next_below(6);
+        let k = rng.next_below(8) as u64;
+        let seq = OwenScramble::new(Sobol::new(MAX_DIMS), seed);
+        assert!(
+            is_progressive_permutation(&seq, dim, m, k),
+            "case {case}: seed={seed} dim={dim} m={m} k={k}"
+        );
+    }
+}
+
+/// Property: the generator matrices are invertible and inversion
+/// recovers the index for random (dim, bits, index) triples — the
+/// §4.4 backward-addressing claim.
+#[test]
+fn prop_inverse_addressing() {
+    let sobol = Sobol::new(MAX_DIMS);
+    let mut rng = Pcg32::seeded(0xB0B);
+    for case in 0..200 {
+        let dim = rng.next_below(MAX_DIMS as u32) as usize;
+        let bits = 1 + rng.next_below(12) as usize;
+        let i = rng.next_below(1 << bits);
+        let slot = sobol.map_to(i as u64, dim, 1usize << bits) as u32;
+        let back = sobol.invert_component(dim, bits, slot);
+        assert_eq!(back, i, "case {case}: dim={dim} bits={bits} i={i}");
+    }
+}
+
+/// Property: Sobol' topologies with pow-2 geometry are bank-conflict
+/// free for EVERY layer, block size, and scramble seed (banks == block).
+#[test]
+fn prop_conflict_free_any_pow2_geometry() {
+    let mut rng = Pcg32::seeded(0xC0FFEE);
+    for case in 0..12 {
+        let layers = 2 + rng.next_below(4) as usize;
+        let width = 1usize << (4 + rng.next_below(3)); // 16..64
+        let sizes = vec![width; layers];
+        let paths = width << (1 + rng.next_below(3)) as usize;
+        let seed = rng.next_u64();
+        let topo = TopologyBuilder::new(&sizes)
+            .paths(paths)
+            .source(PathSource::Sobol { skip_bad_dims: false, scramble_seed: Some(seed) })
+            .build();
+        for l in 0..layers {
+            for logb in 2..=4u32 {
+                let block = 1usize << logb;
+                if block > width {
+                    continue;
+                }
+                let r = simulate_bank_conflicts(&topo, l, block, block, BankMapping::HighBits);
+                assert!(
+                    r.conflict_free(),
+                    "case {case}: sizes={sizes:?} paths={paths} l={l} block={block}: {r:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Property: training the sparse engine is invariant to batch
+/// composition — summing per-sample gradients equals the batch gradient
+/// (routing/batching invariant of the coordinator).
+#[test]
+fn prop_batch_gradient_additivity() {
+    let mut rng = Pcg32::seeded(0xD00D);
+    for case in 0..6 {
+        let topo = TopologyBuilder::new(&[6, 12, 4])
+            .paths(32 + 16 * rng.next_below(4) as usize)
+            .source(PathSource::Random { seed: rng.next_u64() })
+            .build();
+        let cfg = SparseMlpConfig {
+            init: Init::UniformRandom,
+            seed: rng.next_u64(),
+            bias: false,
+            freeze_signs: false,
+        };
+        let b = 4usize;
+        let xs: Vec<f32> = (0..b * 6).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let ys: Vec<u32> = (0..b).map(|_| rng.next_below(4)).collect();
+
+        // batch gradient
+        let mut net = SparseMlp::new(&topo, cfg);
+        let logits = net.forward(&Tensor::from_vec(xs.clone(), &[b, 6]), true);
+        let (_, g) = softmax_xent(&logits, &ys);
+        net.backward(&g);
+        let batch_gw = net.w.clone(); // capture via a unit step
+        let mut net_b = SparseMlp::new(&topo, cfg);
+        let logits = net_b.forward(&Tensor::from_vec(xs.clone(), &[b, 6]), true);
+        let (_, g) = softmax_xent(&logits, &ys);
+        net_b.backward(&g);
+        net_b.step(&sobolnet::nn::optim::Sgd { lr: 1.0, momentum: 0.0, weight_decay: 0.0 });
+        let batch_grad: Vec<Vec<f32>> = batch_gw
+            .iter()
+            .zip(&net_b.w)
+            .map(|(w0, w1)| w0.iter().zip(w1).map(|(a, b)| a - b).collect())
+            .collect();
+
+        // per-sample gradients, averaged
+        let mut accum: Vec<Vec<f32>> = net.w.iter().map(|w| vec![0.0; w.len()]).collect();
+        for i in 0..b {
+            let mut net_i = SparseMlp::new(&topo, cfg);
+            let x = Tensor::from_vec(xs[i * 6..(i + 1) * 6].to_vec(), &[1, 6]);
+            let logits = net_i.forward(&x, true);
+            let (_, g) = softmax_xent(&logits, &[ys[i]]);
+            net_i.backward(&g);
+            let before = net_i.w.clone();
+            net_i.step(&sobolnet::nn::optim::Sgd { lr: 1.0, momentum: 0.0, weight_decay: 0.0 });
+            for t in 0..accum.len() {
+                for p in 0..accum[t].len() {
+                    accum[t][p] += (before[t][p] - net_i.w[t][p]) / b as f32;
+                }
+            }
+        }
+        for t in 0..accum.len() {
+            for p in 0..accum[t].len() {
+                assert!(
+                    (accum[t][p] - batch_grad[t][p]).abs() < 1e-4,
+                    "case {case} t={t} p={p}: {} vs {}",
+                    accum[t][p],
+                    batch_grad[t][p]
+                );
+            }
+        }
+    }
+}
+
+/// Property: constant valence whenever paths and all layer sizes are
+/// powers of two (Fig 6 caption), for any scramble seed.
+#[test]
+fn prop_constant_valence_pow2() {
+    let mut rng = Pcg32::seeded(0xFEED);
+    for case in 0..16 {
+        let layers = 2 + rng.next_below(4) as usize;
+        let sizes: Vec<usize> = (0..layers).map(|_| 1usize << (3 + rng.next_below(4))).collect();
+        let max_size = *sizes.iter().max().unwrap();
+        let paths = max_size << rng.next_below(3) as usize;
+        let topo = TopologyBuilder::new(&sizes)
+            .paths(paths)
+            .source(PathSource::Sobol {
+                skip_bad_dims: false,
+                scramble_seed: Some(rng.next_u64()),
+            })
+            .build();
+        assert!(topo.constant_valence(), "case {case}: sizes={sizes:?} paths={paths}");
+    }
+}
+
+/// Property: the first 2^m block permutations of distinct dimensions
+/// differ (the sequence actually decorrelates layers).
+#[test]
+fn prop_blocks_differ_across_dims() {
+    let sobol = Sobol::new(8);
+    let m = 5;
+    let p0 = block_permutation(&sobol, 0, m, 0);
+    let mut distinct = 0;
+    for d in 1..8 {
+        if block_permutation(&sobol, d, m, 0) != p0 {
+            distinct += 1;
+        }
+    }
+    assert!(distinct >= 6, "dims too correlated: only {distinct}/7 distinct");
+}
+
+/// Property: growth preserves the prefix for both Sobol' and
+/// counter-based random topologies, across sizes and seeds.
+#[test]
+fn prop_growth_preserves_prefix() {
+    let mut rng = Pcg32::seeded(0x6066);
+    for case in 0..10 {
+        let source = if case % 2 == 0 {
+            PathSource::Sobol { skip_bad_dims: false, scramble_seed: Some(rng.next_u64()) }
+        } else {
+            PathSource::Random { seed: rng.next_u64() }
+        };
+        let sizes = [32usize, 64, 16];
+        let small = 16 + 16 * rng.next_below(4) as usize;
+        let big = small * (2 + rng.next_below(3) as usize);
+        let a = TopologyBuilder::new(&sizes).paths(small).source(source.clone()).build();
+        let b = TopologyBuilder::new(&sizes).paths(big).source(source.clone()).build();
+        for l in 0..sizes.len() {
+            assert_eq!(
+                &a.index[l][..],
+                &b.index[l][..small],
+                "case {case} source={source:?} layer {l}"
+            );
+        }
+    }
+}

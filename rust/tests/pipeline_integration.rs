@@ -1,0 +1,189 @@
+//! Cross-module integration: topology → engine → trainer → quantizer →
+//! checkpoint → server, all in the pure-rust stack (no artifacts
+//! required).
+
+use sobolnet::coordinator::checkpoint::Checkpoint;
+use sobolnet::coordinator::server::{InferenceServer, ModelBackend, ServerConfig};
+use sobolnet::data::synth::{self, SynthConfig, SynthMnist};
+use sobolnet::nn::cnn::{Cnn, CnnConfig};
+use sobolnet::nn::init::Init;
+use sobolnet::nn::mlp::DenseMlp;
+use sobolnet::nn::optim::LrSchedule;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::trainer::{evaluate, train, TrainConfig};
+use sobolnet::nn::Model;
+use sobolnet::quantize::{kept_fraction, quantize_mlp, SampleDriver};
+use sobolnet::topology::{PathSource, TopologyBuilder};
+
+fn quick_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        epochs,
+        batch_size: 64,
+        schedule: LrSchedule::Constant(0.05),
+        weight_decay: 0.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sparse_beats_chance_and_approaches_dense() {
+    let (tr, te) = SynthMnist::new(2048, 512, 21);
+    let topo = TopologyBuilder::new(&[784, 128, 10])
+        .paths(2048)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .build();
+    let mut sparse = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantRandomSign, seed: 1, ..Default::default() },
+    );
+    let sparse_hist = train(&mut sparse, &tr, &te, &quick_cfg(3));
+    let mut dense = DenseMlp::new(&[784, 128, 10], Init::UniformRandom, 1);
+    let dense_hist = train(&mut dense, &tr, &te, &quick_cfg(3));
+    assert!(sparse_hist.final_acc() > 0.5, "sparse acc {}", sparse_hist.final_acc());
+    assert!(dense_hist.final_acc() > 0.6, "dense acc {}", dense_hist.final_acc());
+    // shape check: sparse within 25 points of dense at ~2% of params
+    assert!(
+        sparse_hist.final_acc() > dense_hist.final_acc() - 0.25,
+        "sparse {} vs dense {}",
+        sparse_hist.final_acc(),
+        dense_hist.final_acc()
+    );
+    assert!(sparse.nparams() * 10 < dense.nparams());
+}
+
+#[test]
+fn trained_model_survives_checkpoint_roundtrip() {
+    let (tr, te) = SynthMnist::new(1024, 256, 5);
+    let topo = TopologyBuilder::new(&[784, 64, 10])
+        .paths(1024)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(4117) })
+        .build();
+    let mut net = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantRandomSign, seed: 2, ..Default::default() },
+    );
+    train(&mut net, &tr, &te, &quick_cfg(2));
+    let (_, acc_before) = evaluate(&mut net, &te, 256);
+
+    // save weights + topology
+    let mut ckpt = Checkpoint::new();
+    for (t, w) in net.w.iter().enumerate() {
+        ckpt.f32s.insert(format!("w{t}"), w.clone());
+    }
+    for (t, b) in net.bias.iter().enumerate() {
+        ckpt.f32s.insert(format!("b{t}"), b.clone());
+    }
+    let dir = std::env::temp_dir().join("sobolnet_pipeline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.ckpt");
+    ckpt.save(&path).unwrap();
+
+    // restore into a FRESH model over the same (deterministic) topology
+    let loaded = Checkpoint::load(&path).unwrap();
+    let mut restored = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantPositive, seed: 99, ..Default::default() },
+    );
+    for t in 0..restored.w.len() {
+        restored.w[t].copy_from_slice(&loaded.f32s[&format!("w{t}")]);
+        restored.bias[t].copy_from_slice(&loaded.f32s[&format!("b{t}")]);
+    }
+    let (_, acc_after) = evaluate(&mut restored, &te, 256);
+    assert!((acc_before - acc_after).abs() < 1e-9, "{acc_before} vs {acc_after}");
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn server_serves_trained_sparse_model_correctly() {
+    let (tr, te) = SynthMnist::new(1024, 128, 13);
+    let topo = TopologyBuilder::new(&[784, 64, 10])
+        .paths(1024)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1741) })
+        .build();
+    let mut net = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantRandomSign, seed: 4, ..Default::default() },
+    );
+    train(&mut net, &tr, &te, &quick_cfg(2));
+    // offline predictions
+    let logits = net.forward(&te.x, false);
+    let offline: Vec<usize> = (0..te.len())
+        .map(|i| {
+            let row = logits.row(i);
+            (0..10).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap()
+        })
+        .collect();
+    // served predictions must match exactly
+    let backend = ModelBackend { model: net, capacity: 16, features: 784, classes: 10 };
+    let server = InferenceServer::start(Box::new(backend), ServerConfig::default());
+    for i in 0..te.len() {
+        let y = server.infer(te.x.row(i).to_vec());
+        let pred = (0..10).max_by(|&a, &b| y[a].partial_cmp(&y[b]).unwrap()).unwrap();
+        assert_eq!(pred, offline[i], "sample {i}");
+    }
+    assert_eq!(
+        server.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+        te.len() as u64
+    );
+    server.shutdown();
+}
+
+#[test]
+fn quantized_dense_keeps_most_accuracy() {
+    // Fig 2 shape: generous sampling keeps accuracy close to dense.
+    let (tr, te) = SynthMnist::new(2048, 512, 17);
+    let mut dense = DenseMlp::new(&[784, 64, 10], Init::UniformRandom, 3);
+    let hist = train(&mut dense, &tr, &te, &quick_cfg(3));
+    let dense_acc = hist.final_acc();
+    assert!(dense_acc > 0.6);
+    let mut q = quantize_mlp(&dense, 128, SampleDriver::Random(5));
+    let kept = kept_fraction(&q);
+    let (_, q_acc) = evaluate(&mut q, &te, 256);
+    assert!(kept < 0.6, "kept {kept}");
+    assert!(
+        q_acc > dense_acc - 0.1,
+        "quantized acc {q_acc} too far below dense {dense_acc} (kept {kept})"
+    );
+    // tiny sampling must hurt: the curve has the right shape
+    let mut q_tiny = quantize_mlp(&dense, 1, SampleDriver::Random(5));
+    let (_, tiny_acc) = evaluate(&mut q_tiny, &te, 256);
+    assert!(tiny_acc < q_acc, "tiny {tiny_acc} vs generous {q_acc}");
+}
+
+#[test]
+fn sparse_cnn_trains_on_synth_cifar() {
+    let cfg = SynthConfig::cifar(31);
+    let (mut tr, mut te) = synth::train_test(&cfg, 768, 256);
+    sobolnet::data::augment::normalize_pair(&mut tr, &mut te);
+    let channels = [3usize, 16, 32, 32, 64, 64];
+    let topo = TopologyBuilder::new(&channels)
+        .paths(1024)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .build();
+    let net_cfg = CnnConfig::paper(1.0, 3, 10, Init::ConstantRandomSign, 0);
+    let mut cnn = Cnn::sparse(net_cfg.clone(), &topo, false);
+    let dense_nnz = Cnn::dense(net_cfg).nnz();
+    assert!(
+        cnn.nnz() * 2 < dense_nnz,
+        "sparse CNN nnz {} should be well below dense {dense_nnz}",
+        cnn.nnz()
+    );
+    let hist = train(
+        &mut cnn,
+        &tr,
+        &te,
+        &TrainConfig {
+            epochs: 2,
+            batch_size: 64,
+            schedule: LrSchedule::Constant(0.05),
+            augment: true,
+            augment_pad: 2,
+            ..Default::default()
+        },
+    );
+    assert!(
+        hist.final_acc() > 0.3,
+        "sparse CNN should beat 10% chance clearly: {}",
+        hist.final_acc()
+    );
+}
