@@ -1,15 +1,16 @@
 //! Serving example: train the path-sparse MLP briefly via the AOT
-//! artifacts, then stand up the L3 inference server (request router +
-//! dynamic batcher) over the compiled `sparse_forward` executable and
-//! fire a concurrent request load, reporting latency percentiles and
+//! artifacts, then stand up the **sharded** inference serving subsystem
+//! (dispatcher + per-worker queues/batchers) over replicas of the
+//! compiled `sparse_forward` executable and fire a concurrent request
+//! load, reporting per-worker and aggregate latency percentiles and
 //! throughput — the serving-paper-shaped deliverable.
 //!
 //! Run: `make artifacts && cargo run --release --example serve_sparse`
 
-use sobolnet::coordinator::server::{InferenceServer, ServerConfig};
 use sobolnet::coordinator::{AotTrainer, AotTrainerConfig};
 use sobolnet::data::synth::SynthMnist;
 use sobolnet::nn::init::Init;
+use sobolnet::serve::{Dispatch, InferenceBackend, ServeConfig, ShardedServer};
 use sobolnet::topology::{PathSource, TopologyBuilder};
 use sobolnet::util::timer::Timer;
 use std::sync::Arc;
@@ -48,17 +49,23 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         (trainer.weights()?, b)
     };
 
-    // PJRT handles are not Send — the server factory rebuilds the
-    // executable ON the worker thread and installs the trained weights
-    // (plain f32 vectors, which do cross threads).
+    // PJRT handles are not Send — each worker shard rebuilds its own
+    // executable replica ON its worker thread (the factory is cloned per
+    // shard) and installs the trained weights, which are plain f32
+    // vectors and do cross threads.
+    let workers = 2;
     let topo_for_server = topo.clone();
-    let server = Arc::new(InferenceServer::start_with(
-        move || {
+    let server = Arc::new(ShardedServer::start_sharded_with(
+        move || -> Box<dyn InferenceBackend> {
             let mut trainer = AotTrainer::new(&cfg, &topo_for_server).expect("artifacts");
             trainer.set_weights(&trained_w).expect("weights fit");
             Box::new(trainer.into_backend())
         },
-        ServerConfig { max_wait: Duration::from_millis(2) },
+        ServeConfig {
+            workers,
+            max_wait: Duration::from_millis(2),
+            dispatch: Dispatch::LeastLoaded,
+        },
     ));
     let b = batch;
 
@@ -102,6 +109,6 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         b,
     );
     println!("served accuracy {:.1}%", 100.0 * correct as f64 / total as f64);
-    println!("metrics: {}", server.metrics.summary());
+    println!("{}", server.report());
     Ok(())
 }

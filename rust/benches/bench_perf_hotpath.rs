@@ -76,6 +76,29 @@ fn main() {
         net.backward(&glogits);
     });
 
+    // --- sparse fwd thread scaling (column-sharded parallel hot path;
+    //     equivalent to sweeping SOBOLNET_THREADS across runs)
+    {
+        use sobolnet::util::parallel::{num_threads, set_num_threads};
+        let ambient = num_threads();
+        let mut throughputs: Vec<(usize, f64)> = Vec::new();
+        for threads in [1usize, 2, 4, 8] {
+            set_num_threads(threads);
+            let r = b.run(&format!("sparse fwd {threads} threads (path·batch edges)"), work, || {
+                std::hint::black_box(net.forward(&x, false));
+            });
+            throughputs.push((threads, r.throughput()));
+        }
+        set_num_threads(ambient);
+        let t1 = throughputs[0].1;
+        for &(threads, tp) in &throughputs[1..] {
+            println!(
+                "bench hotpath/sparse fwd scaling: {threads} threads = {:.2}x over 1 thread",
+                tp / t1
+            );
+        }
+    }
+
     // --- dense matmul baseline
     let (m, k, nn) = (64usize, 784usize, 300usize);
     let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();

@@ -1,6 +1,7 @@
 //! Layer-3 coordinator: process lifecycle, training orchestration over
-//! the AOT runtime, the inference server (request router + dynamic
-//! batcher + worker pool), metrics and checkpoints.
+//! the AOT runtime, metrics and checkpoints.  The inference server
+//! itself lives in [`crate::serve`] (sharded multi-worker subsystem);
+//! [`server`] re-exports it under the historical names.
 //!
 //! Rust owns the event loop; the compiled HLO artifacts (JAX+Pallas,
 //! lowered once at build time) are the only compute the request path

@@ -1,291 +1,12 @@
-//! Inference server: request router + dynamic batcher + worker thread —
-//! the vLLM-router-shaped L3 component, serving a path-sparse model
-//! behind a channel API.
+//! Legacy location of the inference server.
 //!
-//! Requests (single samples) are queued; a worker drains the queue into
-//! fixed-capacity batches (AOT executables have a static batch size),
-//! padding the tail, runs the backend once per batch, and answers each
-//! request through its response channel.  Batching policy: wait up to
-//! `max_wait` for a full batch, then flush whatever is pending.
+//! The single-worker router/batcher that lived here grew into the
+//! sharded multi-worker serving subsystem at [`crate::serve`]
+//! (dispatcher + per-worker queues/batchers/metrics).  This module
+//! re-exports the new types under their historical names so existing
+//! imports (`coordinator::server::{InferenceServer, ServerConfig}`)
+//! keep working; new code should use `crate::serve` directly.
 
-use super::metrics::Metrics;
-use crate::util::timer::Timer;
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::Duration;
-
-/// Something that can classify a fixed-size batch.
-///
-/// Implemented by the AOT executable wrapper (see
-/// `coordinator::train::AotForward`) and by the pure-rust models (via
-/// [`ModelBackend`]), so the same server fronts both.
-///
-/// Backends need not be `Send`: the server constructs them *on* the
-/// worker thread via a factory (PJRT handles are `Rc`-based and cannot
-/// cross threads).
-pub trait InferenceBackend {
-    /// Static batch capacity of one execution.
-    fn batch_capacity(&self) -> usize;
-
-    /// Features per sample.
-    fn features(&self) -> usize;
-
-    /// Classes per sample.
-    fn classes(&self) -> usize;
-
-    /// Run on a `[capacity × features]` buffer (padded rows arbitrary);
-    /// returns `[capacity × classes]` logits.
-    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32>;
-}
-
-/// Blanket adapter for pure-rust [`crate::nn::Model`]s.
-pub struct ModelBackend<M: crate::nn::Model + Send> {
-    /// Wrapped model.
-    pub model: M,
-    /// Fixed batch capacity to emulate.
-    pub capacity: usize,
-    /// Input features.
-    pub features: usize,
-    /// Output classes.
-    pub classes: usize,
-}
-
-impl<M: crate::nn::Model + Send> InferenceBackend for ModelBackend<M> {
-    fn batch_capacity(&self) -> usize {
-        self.capacity
-    }
-
-    fn features(&self) -> usize {
-        self.features
-    }
-
-    fn classes(&self) -> usize {
-        self.classes
-    }
-
-    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
-        let t = crate::nn::tensor::Tensor::from_vec(x.to_vec(), &[self.capacity, self.features]);
-        self.model.forward(&t, false).data
-    }
-}
-
-/// Server configuration.
-#[derive(Debug, Clone)]
-pub struct ServerConfig {
-    /// Max time to wait for a full batch before flushing.
-    pub max_wait: Duration,
-}
-
-impl Default for ServerConfig {
-    fn default() -> Self {
-        ServerConfig { max_wait: Duration::from_millis(2) }
-    }
-}
-
-struct Request {
-    x: Vec<f32>,
-    respond: Sender<Vec<f32>>,
-    t_start: Timer,
-}
-
-/// Handle to a running inference server.
-pub struct InferenceServer {
-    tx: Option<Sender<Request>>,
-    worker: Option<JoinHandle<()>>,
-    /// Shared metrics.
-    pub metrics: Arc<Metrics>,
-    features: usize,
-}
-
-impl InferenceServer {
-    /// Spawn the worker thread around a backend built by `factory`
-    /// (construction happens on the worker thread so non-`Send` PJRT
-    /// backends work).
-    pub fn start_with<F>(factory: F, cfg: ServerConfig) -> InferenceServer
-    where
-        F: FnOnce() -> Box<dyn InferenceBackend> + Send + 'static,
-    {
-        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
-        let (meta_tx, meta_rx) = channel();
-        let metrics = Arc::new(Metrics::new());
-        let m = metrics.clone();
-        let worker = std::thread::spawn(move || {
-            let mut backend = factory();
-            let cap = backend.batch_capacity();
-            meta_tx.send(backend.features()).expect("server alive");
-            let feat = backend.features();
-            let classes = backend.classes();
-            let mut pending: Vec<Request> = Vec::with_capacity(cap);
-            let mut xbuf = vec![0.0f32; cap * feat];
-            loop {
-                // block for the first request, then drain for max_wait
-                let first = match rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => return, // server dropped
-                };
-                pending.push(first);
-                let deadline = Timer::start();
-                while pending.len() < cap {
-                    let remaining = cfg.max_wait.saturating_sub(Duration::from_secs_f64(
-                        deadline.elapsed_secs(),
-                    ));
-                    match rx.recv_timeout(remaining) {
-                        Ok(r) => pending.push(r),
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-                // assemble the padded batch
-                xbuf.iter_mut().for_each(|v| *v = 0.0);
-                for (i, r) in pending.iter().enumerate() {
-                    xbuf[i * feat..(i + 1) * feat].copy_from_slice(&r.x);
-                }
-                let logits = backend.infer_batch(&xbuf);
-                m.record_batch(pending.len(), cap);
-                for (i, r) in pending.drain(..).enumerate() {
-                    let out = logits[i * classes..(i + 1) * classes].to_vec();
-                    m.record_latency(r.t_start.elapsed_secs());
-                    let _ = r.respond.send(out);
-                }
-            }
-        });
-        let features = meta_rx.recv().expect("backend constructed");
-        InferenceServer { tx: Some(tx), worker: Some(worker), metrics, features }
-    }
-
-    /// Spawn around an already-constructed `Send` backend.
-    pub fn start(backend: Box<dyn InferenceBackend + Send>, cfg: ServerConfig) -> InferenceServer {
-        Self::start_with(move || backend as Box<dyn InferenceBackend>, cfg)
-    }
-
-    /// Submit one sample; returns a receiver for the logits.
-    pub fn submit(&self, x: Vec<f32>) -> Receiver<Vec<f32>> {
-        assert_eq!(x.len(), self.features, "wrong feature count");
-        let (rtx, rrx) = channel();
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .as_ref()
-            .expect("server running")
-            .send(Request { x, respond: rtx, t_start: Timer::start() })
-            .expect("worker alive");
-        rrx
-    }
-
-    /// Convenience: submit and wait.
-    pub fn infer(&self, x: Vec<f32>) -> Vec<f32> {
-        self.submit(x).recv().expect("response")
-    }
-
-    /// Graceful shutdown (drains in-flight work).
-    pub fn shutdown(mut self) {
-        self.tx.take();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-impl Drop for InferenceServer {
-    fn drop(&mut self) {
-        self.tx.take();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    /// Backend that sums features into class 0 and counts calls.
-    struct Echo {
-        calls: Arc<Metrics>,
-    }
-
-    impl InferenceBackend for Echo {
-        fn batch_capacity(&self) -> usize {
-            4
-        }
-        fn features(&self) -> usize {
-            3
-        }
-        fn classes(&self) -> usize {
-            2
-        }
-        fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
-            self.calls.batches.fetch_add(1, Ordering::Relaxed);
-            let mut out = vec![0.0; 4 * 2];
-            for i in 0..4 {
-                out[i * 2] = x[i * 3] + x[i * 3 + 1] + x[i * 3 + 2];
-                out[i * 2 + 1] = -1.0;
-            }
-            out
-        }
-    }
-
-    #[test]
-    fn single_request_roundtrip() {
-        let srv = InferenceServer::start(
-            Box::new(Echo { calls: Arc::new(Metrics::new()) }),
-            ServerConfig { max_wait: Duration::from_millis(1) },
-        );
-        let y = srv.infer(vec![1.0, 2.0, 3.0]);
-        assert_eq!(y, vec![6.0, -1.0]);
-        let (p50, _, _) = srv.metrics.latency_percentiles();
-        assert!(p50 > 0.0);
-        srv.shutdown();
-    }
-
-    #[test]
-    fn batching_coalesces_requests() {
-        let counter = Arc::new(Metrics::new());
-        let srv = InferenceServer::start(
-            Box::new(Echo { calls: counter.clone() }),
-            ServerConfig { max_wait: Duration::from_millis(50) },
-        );
-        // submit 4 requests quickly: should execute as ONE batch
-        let rxs: Vec<_> = (0..4).map(|i| srv.submit(vec![i as f32, 0.0, 0.0])).collect();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let y = rx.recv().unwrap();
-            assert_eq!(y[0], i as f32);
-        }
-        assert_eq!(counter.batches.load(Ordering::Relaxed), 1, "one coalesced batch");
-        assert_eq!(srv.metrics.mean_batch_size(), 4.0);
-        srv.shutdown();
-    }
-
-    #[test]
-    fn flushes_partial_batch_on_timeout() {
-        let srv = InferenceServer::start(
-            Box::new(Echo { calls: Arc::new(Metrics::new()) }),
-            ServerConfig { max_wait: Duration::from_millis(5) },
-        );
-        let y = srv.infer(vec![1.0, 1.0, 1.0]); // alone in its batch
-        assert_eq!(y[0], 3.0);
-        assert!(srv.metrics.padded_slots.load(Ordering::Relaxed) >= 3);
-        srv.shutdown();
-    }
-
-    #[test]
-    fn many_concurrent_clients() {
-        let srv = Arc::new(InferenceServer::start(
-            Box::new(Echo { calls: Arc::new(Metrics::new()) }),
-            ServerConfig::default(),
-        ));
-        let mut handles = Vec::new();
-        for k in 0..16 {
-            let s = srv.clone();
-            handles.push(std::thread::spawn(move || {
-                let y = s.infer(vec![k as f32, k as f32, 0.0]);
-                assert_eq!(y[0], 2.0 * k as f32);
-            }));
-        }
-        for h in handles {
-            h.join().unwrap();
-        }
-        assert_eq!(srv.metrics.completed.load(Ordering::Relaxed), 16);
-    }
-}
+pub use crate::serve::{Dispatch, InferenceBackend, ModelBackend};
+pub use crate::serve::{ServeConfig, ServeConfig as ServerConfig};
+pub use crate::serve::{ShardedServer, ShardedServer as InferenceServer};

@@ -16,12 +16,13 @@
 //! side — the coordinator decides the connectivity, the artifact only
 //! fixes shapes.
 
-use super::server::InferenceBackend;
 use crate::nn::init::{w_init_magnitude, Init};
 use crate::runtime::client::{literal_f32, literal_i32, to_scalar_f32, to_vec_f32};
+use crate::runtime::xla_stub as xla;
 use crate::runtime::{ArtifactManifest, Executable, Runtime};
+use crate::serve::InferenceBackend;
 use crate::topology::PathTopology;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 /// Configuration of the AOT trainer.
 #[derive(Debug, Clone)]
@@ -109,16 +110,15 @@ impl AotTrainer {
     /// Load artifacts, validate the topology against the baked shapes,
     /// and initialize parameters.
     pub fn new(cfg: &AotTrainerConfig, topo: &PathTopology) -> Result<AotTrainer> {
-        let manifest = ArtifactManifest::load(&cfg.artifacts_dir)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let manifest = ArtifactManifest::load(&cfg.artifacts_dir).map_err(crate::util::error::Error::msg)?;
         let shapes = AotShapes::from_manifest(&manifest)?;
-        anyhow::ensure!(
+        crate::ensure!(
             topo.layer_sizes == shapes.layer_sizes,
             "topology layers {:?} != artifact layers {:?}",
             topo.layer_sizes,
             shapes.layer_sizes
         );
-        anyhow::ensure!(
+        crate::ensure!(
             topo.paths == shapes.paths,
             "topology paths {} != artifact paths {}",
             topo.paths,
@@ -166,7 +166,7 @@ impl AotTrainer {
     /// Install weights (e.g. restored from a checkpoint).
     pub fn set_weights(&mut self, w: &[f32]) -> Result<()> {
         let s = &self.shapes;
-        anyhow::ensure!(w.len() == s.transitions * s.paths, "weight shape");
+        crate::ensure!(w.len() == s.transitions * s.paths, "weight shape");
         self.w_lit = literal_f32(w, &[s.transitions, s.paths])?;
         Ok(())
     }
@@ -175,14 +175,14 @@ impl AotTrainer {
     /// the batch loss.
     pub fn train_step(&mut self, x: &[f32], y: &[i32], lr: f32) -> Result<f32> {
         let s = &self.shapes;
-        anyhow::ensure!(x.len() == s.batch * s.features, "x shape");
-        anyhow::ensure!(y.len() == s.batch, "y shape");
+        crate::ensure!(x.len() == s.batch * s.features, "x shape");
+        crate::ensure!(y.len() == s.batch, "y shape");
         let x_lit = literal_f32(x, &[s.batch, s.features])?;
         let y_lit = literal_i32(y, &[s.batch])?;
         let lr_lit = literal_f32(&[lr], &[])?;
         let inputs = [&self.w_lit, &self.m_lit, &self.idx_lit, &x_lit, &y_lit, &lr_lit];
         let mut out = self.step_exe.run(&inputs)?;
-        anyhow::ensure!(out.len() == 3, "train_step must return (w, m, loss)");
+        crate::ensure!(out.len() == 3, "train_step must return (w, m, loss)");
         let loss = to_scalar_f32(&out[2])?;
         self.m_lit = out.swap_remove(1);
         self.w_lit = out.swap_remove(0);
@@ -193,7 +193,7 @@ impl AotTrainer {
     /// Forward pass on a full `[batch × features]` buffer.
     pub fn forward(&self, x: &[f32]) -> Result<Vec<f32>> {
         let s = &self.shapes;
-        anyhow::ensure!(x.len() == s.batch * s.features, "x shape");
+        crate::ensure!(x.len() == s.batch * s.features, "x shape");
         let x_lit = literal_f32(x, &[s.batch, s.features])?;
         let inputs = [&self.w_lit, &self.idx_lit, &x_lit];
         let out = self.fwd_exe.run(&inputs)?;
@@ -204,7 +204,7 @@ impl AotTrainer {
     pub fn evaluate(&self, xs: &[f32], ys: &[i32]) -> Result<f64> {
         let s = &self.shapes;
         let n = ys.len();
-        anyhow::ensure!(xs.len() == n * s.features, "xs shape");
+        crate::ensure!(xs.len() == n * s.features, "xs shape");
         let mut correct = 0usize;
         let mut xbuf = vec![0.0f32; s.batch * s.features];
         let mut i = 0usize;

@@ -9,12 +9,27 @@
 //!
 //! The ReLU is implicit exactly as in Fig 3: a path contributes only if
 //! its source activation is positive.
+//!
+//! **Parallel inference hot path.** The `[neurons, batch]` layout makes
+//! every per-path inner loop a contiguous run of batch columns, and
+//! distinct columns never share an accumulator — so the forward pass
+//! shards conflict-free over batch columns via
+//! [`crate::util::parallel::parallel_ranges`] (thread count:
+//! `SOBOLNET_THREADS` / [`crate::util::parallel::set_num_threads`]).
+//! Each column is still processed in exact path order, so results are
+//! **bitwise identical** for every thread count.
 
 use super::init::{w_init_magnitude, Init};
 use super::optim::Sgd;
 use super::tensor::Tensor;
 use super::Model;
 use crate::topology::PathTopology;
+use crate::util::parallel::{parallel_ranges, SendPtr};
+
+/// Minimum `paths × batch × transitions` edge-work before the forward
+/// pass fans out to threads: below this, scoped-thread spawn overhead
+/// beats the win (EXPERIMENTS.md §Perf).
+const PAR_MIN_WORK: usize = 1 << 17;
 
 /// Configuration for [`SparseMlp`].
 #[derive(Debug, Clone, Copy)]
@@ -175,32 +190,55 @@ impl Model for SparseMlp {
     fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
         let sizes = &self.topo.layer_sizes;
         let b = x.batch();
+        let t_cnt = self.topo.transitions();
+        let paths = self.topo.paths;
         let mut z: Vec<Vec<f32>> = Vec::with_capacity(sizes.len());
         z.push(Self::transpose_in(x, sizes[0]));
-        for t in 0..self.topo.transitions() {
-            let n_out = sizes[t + 1];
-            let mut znext = vec![0.0f32; n_out * b];
-            if !self.bias[t].is_empty() {
-                for (i, &bv) in self.bias[t].iter().enumerate() {
-                    znext[i * b..(i + 1) * b].fill(bv);
+        for t in 0..t_cnt {
+            z.push(vec![0.0f32; sizes[t + 1] * b]);
+        }
+        {
+            // Column-sharded execution: each thread owns a disjoint
+            // range [c0, c1) of batch columns of EVERY layer buffer and
+            // runs the whole multi-layer loop for it — one thread fan-out
+            // per forward, no barriers between transitions.
+            let ptrs: Vec<SendPtr<f32>> =
+                z.iter_mut().map(|zl| SendPtr::new(zl.as_mut_ptr())).collect();
+            let index = &self.topo.index;
+            let ws = &self.w;
+            let biases = &self.bias;
+            let columns = |c0: usize, c1: usize| {
+                for t in 0..t_cnt {
+                    let src_idx = &index[t];
+                    let dst_idx = &index[t + 1];
+                    let wt = &ws[t];
+                    let zprev = ptrs[t].get() as *const f32;
+                    let znext = ptrs[t + 1].get();
+                    if !biases[t].is_empty() {
+                        for (i, &bv) in biases[t].iter().enumerate() {
+                            for bi in c0..c1 {
+                                unsafe { *znext.add(i * b + bi) = bv };
+                            }
+                        }
+                    }
+                    for p in 0..paths {
+                        let s = src_idx[p] as usize * b;
+                        let d = dst_idx[p] as usize * b;
+                        let w = wt[p];
+                        // branchless ReLU gate: w·max(v,0) — vectorizes
+                        // cleanly (EXPERIMENTS.md §Perf)
+                        for bi in c0..c1 {
+                            unsafe {
+                                *znext.add(d + bi) += w * (*zprev.add(s + bi)).max(0.0);
+                            }
+                        }
+                    }
                 }
-            }
-            let src_idx = &self.topo.index[t];
-            let dst_idx = &self.topo.index[t + 1];
-            let wt = &self.w[t];
-            let zprev = &z[t];
-            for p in 0..self.topo.paths {
-                let s = src_idx[p] as usize * b;
-                let d = dst_idx[p] as usize * b;
-                let w = wt[p];
-                let (src, dst) = (&zprev[s..s + b], &mut znext[d..d + b]);
-                // branchless ReLU gate: w·max(v,0) — vectorizes cleanly
-                // (EXPERIMENTS.md §Perf)
-                for bi in 0..b {
-                    dst[bi] += w * src[bi].max(0.0);
-                }
-            }
-            z.push(znext);
+            };
+            // below the work threshold run inline (min_chunk = b makes
+            // parallel_ranges take its sequential path)
+            let min_chunk = if paths * b * t_cnt >= PAR_MIN_WORK { 1 } else { b.max(1) };
+            parallel_ranges(b, min_chunk, columns);
         }
         let logits = Self::transpose_out(z.last().unwrap(), sizes[sizes.len() - 1], b);
         if train {

@@ -1,6 +1,11 @@
-//! PJRT client wrapper over the `xla` crate.
+//! PJRT client wrapper over the `xla` crate surface.
+//!
+//! In the offline build `xla` resolves to the in-tree host stub
+//! ([`crate::runtime::xla_stub`]); swap the import below to the real
+//! crate to target actual PJRT hardware.
 
-use anyhow::{Context, Result};
+use super::xla_stub as xla;
+use crate::util::error::{Context, Result};
 
 /// A PJRT client (CPU in this environment).
 pub struct Runtime {
@@ -61,7 +66,7 @@ impl Executable {
 /// Build an f32 literal of the given dimensions.
 pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "literal_f32 size mismatch: {} vs {:?}", data.len(), dims);
+    crate::ensure!(n == data.len(), "literal_f32 size mismatch: {} vs {:?}", data.len(), dims);
     let lit = xla::Literal::vec1(data);
     let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
     lit.reshape(&dims_i64).context("reshape literal")
@@ -70,7 +75,7 @@ pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
 /// Build an i32 literal of the given dimensions.
 pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
-    anyhow::ensure!(n == data.len(), "literal_i32 size mismatch");
+    crate::ensure!(n == data.len(), "literal_i32 size mismatch");
     let lit = xla::Literal::vec1(data);
     let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
     lit.reshape(&dims_i64).context("reshape literal")
@@ -84,7 +89,7 @@ pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
 /// Extract a scalar f32.
 pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
     let v = to_vec_f32(lit)?;
-    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    crate::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
     Ok(v[0])
 }
 

@@ -11,6 +11,7 @@
 
 pub mod artifact;
 pub mod client;
+pub mod xla_stub;
 
 pub use artifact::{ArtifactManifest, ArtifactSpec};
 pub use client::{Executable, Runtime};

@@ -1,0 +1,224 @@
+//! Host-side stand-in for the `xla` (PJRT) crate.
+//!
+//! The offline build carries no `xla_extension` shared library, so the
+//! runtime layer compiles against this stub instead of the real crate:
+//! [`Literal`] is a fully functional host literal (shape + typed data +
+//! tuples — enough for every literal helper and its tests), while the
+//! client/compile/execute surface exists but reports PJRT as
+//! unavailable.  `runtime/client.rs` and `coordinator/train.rs` import
+//! this module as `xla`; pointing those imports back at the real crate
+//! (and adding the dependency) restores hardware execution without any
+//! other code change.
+
+use crate::util::error::{Error, Result};
+
+/// Element types the stub literal can hold.
+pub trait NativeType: Copy {
+    /// Build a rank-1 literal from a data vector.
+    fn literal_from(data: Vec<Self>) -> Literal;
+    /// Extract the flat data if the literal holds this element type.
+    fn literal_to(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn literal_from(data: Vec<f32>) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal::F32 { data, dims }
+    }
+
+    fn literal_to(lit: &Literal) -> Option<Vec<f32>> {
+        match lit {
+            Literal::F32 { data, .. } => Some(data.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn literal_from(data: Vec<i32>) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal::I32 { data, dims }
+    }
+
+    fn literal_to(lit: &Literal) -> Option<Vec<i32>> {
+        match lit {
+            Literal::I32 { data, .. } => Some(data.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host literal: typed flat data plus dimensions, or a tuple.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    /// f32 array.
+    F32 {
+        /// Flat row-major data.
+        data: Vec<f32>,
+        /// Dimension sizes.
+        dims: Vec<i64>,
+    },
+    /// i32 array.
+    I32 {
+        /// Flat row-major data.
+        data: Vec<i32>,
+        /// Dimension sizes.
+        dims: Vec<i64>,
+    },
+    /// Tuple of literals (executable outputs).
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice (mirrors `xla::Literal::vec1`).
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::literal_from(data.to_vec())
+    }
+
+    /// Element count of an array literal.
+    fn element_count(&self) -> Result<usize> {
+        match self {
+            Literal::F32 { data, .. } => Ok(data.len()),
+            Literal::I32 { data, .. } => Ok(data.len()),
+            Literal::Tuple(_) => Err(Error::msg("tuple literal has no element count")),
+        }
+    }
+
+    /// Return a copy with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let have = self.element_count()?;
+        if n as usize != have {
+            return Err(crate::err!("reshape {dims:?} does not match {have} elements"));
+        }
+        Ok(match self {
+            Literal::F32 { data, .. } => Literal::F32 { data: data.clone(), dims: dims.to_vec() },
+            Literal::I32 { data, .. } => Literal::I32 { data: data.clone(), dims: dims.to_vec() },
+            Literal::Tuple(_) => unreachable!("element_count rejected tuples"),
+        })
+    }
+
+    /// Flat host copy of the data (mirrors `xla::Literal::to_vec`).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::literal_to(self).ok_or_else(|| Error::msg("literal element type mismatch"))
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(elems) => Ok(std::mem::take(elems)),
+            _ => Err(Error::msg("not a tuple literal")),
+        }
+    }
+}
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: built against the in-tree xla stub (no xla_extension in this environment)";
+
+/// Parsed HLO module (stub: never constructed successfully).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file — always fails in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::msg(UNAVAILABLE))
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client — always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::msg(UNAVAILABLE))
+    }
+
+    /// Platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Addressable device count.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation — unreachable (no client can exist).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::msg(UNAVAILABLE))
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Device → host transfer — unreachable (no buffer can exist).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::msg(UNAVAILABLE))
+    }
+}
+
+/// Loaded executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal inputs — unreachable (cannot be compiled).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::msg(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_and_extract() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3]).is_err());
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes_once() {
+        let mut t = Literal::Tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        let mut arr = Literal::vec1(&[1.0f32]);
+        assert!(arr.decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Adaptive dynamic batcher: the queue-drain policy of one worker
+//! shard.
+//!
+//! AOT executables (and the `[neurons, batch]` sparse engine layout)
+//! run fixed-capacity batches, so each worker coalesces queued
+//! single-sample requests into one execution.  Policy: block for the
+//! first request, then keep draining until the batch is **full** or
+//! `max_wait` has elapsed since the first arrival — whichever comes
+//! first.  A full batch therefore never waits, and a lone request is
+//! never delayed by more than `max_wait`.
+
+use crate::util::timer::Timer;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+/// The flush policy of one worker's queue.
+#[derive(Debug, Clone, Copy)]
+pub struct Batcher {
+    /// Batch capacity of the backend (flush immediately when reached).
+    pub capacity: usize,
+    /// Max time to wait for a full batch after the first arrival.
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    /// Drain the next batch from `rx`.  Blocks until at least one item
+    /// arrives; returns `None` when the channel is closed and empty
+    /// (worker shutdown).
+    pub fn next_batch<T>(&self, rx: &Receiver<T>) -> Option<Vec<T>> {
+        let first = rx.recv().ok()?;
+        let mut batch = Vec::with_capacity(self.capacity);
+        batch.push(first);
+        let since_first = Timer::start();
+        while batch.len() < self.capacity {
+            let remaining = self
+                .max_wait
+                .saturating_sub(Duration::from_secs_f64(since_first.elapsed_secs()));
+            match rx.recv_timeout(remaining) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn full_batch_flushes_without_waiting() {
+        let (tx, rx) = channel();
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher { capacity: 4, max_wait: Duration::from_secs(3600) };
+        let t = Timer::start();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert!(t.elapsed_secs() < 1.0, "must not wait out max_wait on a full batch");
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_deadline() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        let b = Batcher { capacity: 8, max_wait: Duration::from_millis(5) };
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch, vec![7]);
+    }
+
+    #[test]
+    fn closed_empty_channel_yields_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let b = Batcher { capacity: 4, max_wait: Duration::from_millis(1) };
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn drains_remaining_items_after_close() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        let b = Batcher { capacity: 8, max_wait: Duration::from_secs(3600) };
+        // disconnected channel must flush what is pending, not hang
+        assert_eq!(b.next_batch(&rx).unwrap(), vec![1, 2]);
+        assert!(b.next_batch(&rx).is_none());
+    }
+}

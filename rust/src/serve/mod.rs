@@ -1,0 +1,431 @@
+//! Sharded inference serving subsystem (L3): N worker shards, each
+//! owning a backend instance and a private request queue, behind a
+//! round-robin / least-loaded dispatcher.
+//!
+//! This realizes the paper's parallel-hardware argument *end-to-end*:
+//! path-sparse networks stream weights as contiguous blocks
+//! (§3, §4.4), the engine's forward pass shards conflict-free over
+//! batch columns ([`crate::nn::sparse`]), and this layer shards request
+//! traffic over backend replicas — so throughput scales with both
+//! threads-per-forward (`SOBOLNET_THREADS`) and workers-per-server.
+//!
+//! Architecture (one [`ShardedServer`]):
+//!
+//! ```text
+//! submit(x) ──► dispatcher (round-robin | least-loaded inflight gauge)
+//!                 │                │
+//!                 ▼                ▼
+//!             worker 0         worker N-1          (each: own thread,
+//!            ┌─────────┐      ┌─────────┐           own backend built
+//!            │ queue    │  …  │ queue    │          on-thread via the
+//!            │ batcher  │     │ batcher  │          factory, so non-
+//!            │ backend  │     │ backend  │          `Send` PJRT works)
+//!            │ metrics  │     │ metrics  │
+//!            └─────────┘      └─────────┘
+//! ```
+//!
+//! The [`batcher::Batcher`] flushes on a full batch or `max_wait`,
+//! whichever comes first; per-worker [`Metrics`] are aggregated into
+//! server-wide latency percentiles and throughput counters.
+//!
+//! The single-worker `coordinator::server::InferenceServer` of earlier
+//! revisions is absorbed here; `coordinator::server` re-exports these
+//! types under their old names for compatibility.
+
+pub mod batcher;
+pub mod worker;
+
+use crate::coordinator::metrics::Metrics;
+use crate::util::timer::Timer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::Duration;
+use worker::{Request, WorkerHandle};
+
+/// Something that can classify a fixed-size batch.
+///
+/// Implemented by the AOT executable wrapper (see
+/// `coordinator::train::AotForward`) and by the pure-rust models (via
+/// [`ModelBackend`]), so the same server fronts both.
+///
+/// Backends need not be `Send`: workers construct them *on* their own
+/// thread via a factory (PJRT handles are `Rc`-based and cannot cross
+/// threads).
+pub trait InferenceBackend {
+    /// Static batch capacity of one execution.
+    fn batch_capacity(&self) -> usize;
+
+    /// Features per sample.
+    fn features(&self) -> usize;
+
+    /// Classes per sample.
+    fn classes(&self) -> usize;
+
+    /// Run on a `[capacity × features]` buffer (padded rows arbitrary);
+    /// returns `[capacity × classes]` logits.
+    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32>;
+}
+
+/// Blanket adapter for pure-rust [`crate::nn::Model`]s.
+pub struct ModelBackend<M: crate::nn::Model + Send> {
+    /// Wrapped model.
+    pub model: M,
+    /// Fixed batch capacity to emulate.
+    pub capacity: usize,
+    /// Input features.
+    pub features: usize,
+    /// Output classes.
+    pub classes: usize,
+}
+
+impl<M: crate::nn::Model + Send> InferenceBackend for ModelBackend<M> {
+    fn batch_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn features(&self) -> usize {
+        self.features
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
+        let t = crate::nn::tensor::Tensor::from_vec(x.to_vec(), &[self.capacity, self.features]);
+        self.model.forward(&t, false).data
+    }
+}
+
+/// How `submit` picks a worker shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Strict rotation over the shards.
+    RoundRobin,
+    /// Shard with the fewest in-flight requests (rotating tie-break).
+    LeastLoaded,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Number of worker shards (each owns one backend instance).
+    pub workers: usize,
+    /// Max time a worker waits for a full batch before flushing.
+    pub max_wait: Duration,
+    /// Dispatch policy across shards.
+    pub dispatch: Dispatch,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(2),
+            dispatch: Dispatch::LeastLoaded,
+        }
+    }
+}
+
+/// Handle to a running sharded inference server.
+pub struct ShardedServer {
+    shards: Vec<WorkerHandle>,
+    rr: AtomicUsize,
+    dispatch: Dispatch,
+    /// Aggregate metrics across all shards (plus accepted-request count).
+    pub metrics: Arc<Metrics>,
+    features: usize,
+}
+
+impl ShardedServer {
+    /// Spawn `cfg.workers` shards, each building its own backend by
+    /// calling a clone of `factory` on its worker thread.
+    pub fn start_sharded_with<F>(factory: F, cfg: ServeConfig) -> ShardedServer
+    where
+        F: Fn() -> Box<dyn InferenceBackend> + Clone + Send + 'static,
+    {
+        let n = cfg.workers.max(1);
+        let metrics = Arc::new(Metrics::new());
+        let mut shards = Vec::with_capacity(n);
+        // spawn every worker first so the backends construct concurrently,
+        // then collect their metadata
+        let mut metas = Vec::with_capacity(n);
+        for wid in 0..n {
+            let f = factory.clone();
+            let (handle, meta_rx) = worker::spawn(wid, move || f(), cfg.max_wait, metrics.clone());
+            shards.push(handle);
+            metas.push(meta_rx);
+        }
+        let mut features: Option<usize> = None;
+        for meta_rx in metas {
+            let (feat, _classes) = meta_rx.recv().expect("backend constructed");
+            match features {
+                None => features = Some(feat),
+                Some(prev) => assert_eq!(prev, feat, "workers disagree on feature count"),
+            }
+        }
+        ShardedServer {
+            shards,
+            rr: AtomicUsize::new(0),
+            dispatch: cfg.dispatch,
+            metrics,
+            features: features.expect("at least one worker"),
+        }
+    }
+
+    /// Spawn a single shard around a backend built by `factory` on the
+    /// worker thread (a `FnOnce` factory can only build one backend, so
+    /// `cfg.workers` is ignored; use [`ShardedServer::start_sharded_with`]
+    /// for N > 1).
+    pub fn start_with<F>(factory: F, cfg: ServeConfig) -> ShardedServer
+    where
+        F: FnOnce() -> Box<dyn InferenceBackend> + Send + 'static,
+    {
+        let metrics = Arc::new(Metrics::new());
+        let (handle, meta_rx) = worker::spawn(0, factory, cfg.max_wait, metrics.clone());
+        let (features, _classes) = meta_rx.recv().expect("backend constructed");
+        ShardedServer {
+            shards: vec![handle],
+            rr: AtomicUsize::new(0),
+            dispatch: cfg.dispatch,
+            metrics,
+            features,
+        }
+    }
+
+    /// Spawn a single shard around an already-constructed `Send` backend.
+    pub fn start(backend: Box<dyn InferenceBackend + Send>, cfg: ServeConfig) -> ShardedServer {
+        Self::start_with(move || backend as Box<dyn InferenceBackend>, cfg)
+    }
+
+    /// Number of worker shards.
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn pick_shard(&self) -> usize {
+        let n = self.shards.len();
+        if n == 1 {
+            return 0;
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        match self.dispatch {
+            Dispatch::RoundRobin => start,
+            Dispatch::LeastLoaded => {
+                let mut best = start;
+                let mut best_load = self.shards[start].inflight.load(Ordering::Relaxed);
+                for k in 1..n {
+                    let i = (start + k) % n;
+                    let load = self.shards[i].inflight.load(Ordering::Relaxed);
+                    if load < best_load {
+                        best = i;
+                        best_load = load;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Submit one sample; returns a receiver for the logits.
+    pub fn submit(&self, x: Vec<f32>) -> Receiver<Vec<f32>> {
+        assert_eq!(x.len(), self.features, "wrong feature count");
+        let (rtx, rrx) = channel();
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let shard = &self.shards[self.pick_shard()];
+        shard.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        shard.inflight.fetch_add(1, Ordering::Relaxed);
+        shard
+            .tx
+            .as_ref()
+            .expect("server running")
+            .send(Request { x, respond: rtx, t_start: Timer::start() })
+            .expect("worker alive");
+        rrx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer(&self, x: Vec<f32>) -> Vec<f32> {
+        self.submit(x).recv().expect("response")
+    }
+
+    /// Per-worker metrics, shard order.
+    pub fn worker_metrics(&self) -> Vec<Arc<Metrics>> {
+        self.shards.iter().map(|s| s.metrics.clone()).collect()
+    }
+
+    /// Multi-line report: aggregate summary plus one line per shard.
+    pub fn report(&self) -> String {
+        let mut out = format!("aggregate ({} workers): {}", self.shards.len(), self.metrics.summary());
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!("\n  worker {i}: {}", s.metrics.summary()));
+        }
+        out
+    }
+
+    fn stop(&mut self) {
+        for s in self.shards.iter_mut() {
+            s.tx.take();
+        }
+        for s in self.shards.iter_mut() {
+            if let Some(j) = s.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+
+    /// Graceful shutdown (drains in-flight work on every shard).
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+}
+
+impl Drop for ShardedServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Backend that sums features into class 0 and counts calls.
+    struct Echo {
+        calls: Arc<Metrics>,
+    }
+
+    impl InferenceBackend for Echo {
+        fn batch_capacity(&self) -> usize {
+            4
+        }
+        fn features(&self) -> usize {
+            3
+        }
+        fn classes(&self) -> usize {
+            2
+        }
+        fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
+            self.calls.batches.fetch_add(1, Ordering::Relaxed);
+            let mut out = vec![0.0; 4 * 2];
+            for i in 0..4 {
+                out[i * 2] = x[i * 3] + x[i * 3 + 1] + x[i * 3 + 2];
+                out[i * 2 + 1] = -1.0;
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let srv = ShardedServer::start(
+            Box::new(Echo { calls: Arc::new(Metrics::new()) }),
+            ServeConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+        );
+        let y = srv.infer(vec![1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![6.0, -1.0]);
+        let (p50, _, _) = srv.metrics.latency_percentiles();
+        assert!(p50 > 0.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batching_coalesces_requests() {
+        let counter = Arc::new(Metrics::new());
+        let srv = ShardedServer::start(
+            Box::new(Echo { calls: counter.clone() }),
+            ServeConfig { max_wait: Duration::from_millis(50), ..Default::default() },
+        );
+        // submit 4 requests quickly: should execute as ONE batch
+        let rxs: Vec<_> = (0..4).map(|i| srv.submit(vec![i as f32, 0.0, 0.0])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let y = rx.recv().unwrap();
+            assert_eq!(y[0], i as f32);
+        }
+        assert_eq!(counter.batches.load(Ordering::Relaxed), 1, "one coalesced batch");
+        assert_eq!(srv.metrics.mean_batch_size(), 4.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_timeout() {
+        let srv = ShardedServer::start(
+            Box::new(Echo { calls: Arc::new(Metrics::new()) }),
+            ServeConfig { max_wait: Duration::from_millis(5), ..Default::default() },
+        );
+        let y = srv.infer(vec![1.0, 1.0, 1.0]); // alone in its batch
+        assert_eq!(y[0], 3.0);
+        assert!(srv.metrics.padded_slots.load(Ordering::Relaxed) >= 3);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_clients() {
+        let srv = Arc::new(ShardedServer::start(
+            Box::new(Echo { calls: Arc::new(Metrics::new()) }),
+            ServeConfig::default(),
+        ));
+        let mut handles = Vec::new();
+        for k in 0..16 {
+            let s = srv.clone();
+            handles.push(std::thread::spawn(move || {
+                let y = s.infer(vec![k as f32, k as f32, 0.0]);
+                assert_eq!(y[0], 2.0 * k as f32);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(srv.metrics.completed.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn sharded_workers_all_serve_round_robin() {
+        let srv = ShardedServer::start_sharded_with(
+            || Box::new(Echo { calls: Arc::new(Metrics::new()) }) as Box<dyn InferenceBackend>,
+            ServeConfig {
+                workers: 3,
+                max_wait: Duration::from_micros(200),
+                dispatch: Dispatch::RoundRobin,
+            },
+        );
+        assert_eq!(srv.workers(), 3);
+        for i in 0..12 {
+            let y = srv.infer(vec![i as f32, 1.0, 0.0]);
+            assert_eq!(y[0], i as f32 + 1.0);
+        }
+        // strict rotation: every shard answered exactly a third
+        for (i, m) in srv.worker_metrics().iter().enumerate() {
+            assert_eq!(m.completed.load(Ordering::Relaxed), 4, "worker {i}");
+        }
+        assert_eq!(srv.metrics.completed.load(Ordering::Relaxed), 12);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_shard() {
+        let srv = ShardedServer::start_sharded_with(
+            || Box::new(Echo { calls: Arc::new(Metrics::new()) }) as Box<dyn InferenceBackend>,
+            ServeConfig {
+                workers: 2,
+                max_wait: Duration::from_millis(40),
+                dispatch: Dispatch::LeastLoaded,
+            },
+        );
+        // four un-awaited submissions: the gauge steers them across both
+        // shards (each shard waits for its batch, so inflight stays up)
+        let rxs: Vec<_> = (0..4).map(|i| srv.submit(vec![i as f32, 0.0, 0.0])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap()[0], i as f32);
+        }
+        let served: Vec<u64> = srv
+            .worker_metrics()
+            .iter()
+            .map(|m| m.completed.load(Ordering::Relaxed))
+            .collect();
+        assert_eq!(served.iter().sum::<u64>(), 4);
+        assert!(served.iter().all(|&c| c > 0), "both shards served: {served:?}");
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,90 @@
+//! One worker shard: a dedicated OS thread owning a backend instance
+//! and draining its private request queue through the adaptive
+//! [`Batcher`](super::batcher::Batcher).
+//!
+//! The backend is constructed *on* the worker thread via a factory, so
+//! non-`Send` backends (PJRT handles are `Rc`-based) work unchanged.
+//! Each worker keeps its own [`Metrics`] and additionally records into
+//! the server-wide aggregate, and maintains an in-flight gauge the
+//! dispatcher uses for least-loaded routing.
+
+use super::batcher::Batcher;
+use super::InferenceBackend;
+use crate::coordinator::metrics::Metrics;
+use crate::util::timer::Timer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One queued inference request (a single sample).
+pub struct Request {
+    /// Flattened input features.
+    pub x: Vec<f32>,
+    /// Channel the logits are answered on.
+    pub respond: Sender<Vec<f32>>,
+    /// End-to-end latency stopwatch, started at submit.
+    pub t_start: Timer,
+}
+
+/// Handle to a running worker shard.
+pub struct WorkerHandle {
+    /// Queue sender (`None` once shutdown begins).
+    pub(crate) tx: Option<Sender<Request>>,
+    /// Requests dispatched to this shard but not yet answered.
+    pub(crate) inflight: Arc<AtomicUsize>,
+    /// This worker's own metrics (the server aggregates them).
+    pub metrics: Arc<Metrics>,
+    pub(crate) join: Option<JoinHandle<()>>,
+}
+
+/// Spawn a worker shard.  Returns the handle plus a one-shot channel
+/// carrying `(features, classes)` once the backend is constructed.
+pub(crate) fn spawn<F>(
+    worker_id: usize,
+    factory: F,
+    max_wait: Duration,
+    aggregate: Arc<Metrics>,
+) -> (WorkerHandle, Receiver<(usize, usize)>)
+where
+    F: FnOnce() -> Box<dyn InferenceBackend> + Send + 'static,
+{
+    let (tx, rx) = channel::<Request>();
+    let (meta_tx, meta_rx) = channel();
+    let metrics = Arc::new(Metrics::new());
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let own = metrics.clone();
+    let gauge = inflight.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("sobolnet-serve-{worker_id}"))
+        .spawn(move || {
+            let mut backend = factory();
+            let cap = backend.batch_capacity();
+            let feat = backend.features();
+            let classes = backend.classes();
+            let _ = meta_tx.send((feat, classes));
+            let batcher = Batcher { capacity: cap, max_wait };
+            let mut xbuf = vec![0.0f32; cap * feat];
+            while let Some(batch) = batcher.next_batch(&rx) {
+                // assemble the padded batch (tail rows stay zero)
+                xbuf.iter_mut().for_each(|v| *v = 0.0);
+                for (i, r) in batch.iter().enumerate() {
+                    xbuf[i * feat..(i + 1) * feat].copy_from_slice(&r.x);
+                }
+                let logits = backend.infer_batch(&xbuf);
+                own.record_batch(batch.len(), cap);
+                aggregate.record_batch(batch.len(), cap);
+                for (i, r) in batch.into_iter().enumerate() {
+                    let out = logits[i * classes..(i + 1) * classes].to_vec();
+                    let secs = r.t_start.elapsed_secs();
+                    own.record_latency(secs);
+                    aggregate.record_latency(secs);
+                    gauge.fetch_sub(1, Ordering::Relaxed);
+                    let _ = r.respond.send(out);
+                }
+            }
+        })
+        .expect("spawn serve worker thread");
+    (WorkerHandle { tx: Some(tx), inflight, metrics, join: Some(join) }, meta_rx)
+}

@@ -1,0 +1,145 @@
+//! Minimal error-context substrate (the `anyhow` substitute): a string
+//! error type, a [`Context`] extension trait for `Result`/`Option`, and
+//! the [`crate::ensure!`] / [`crate::bail!`] / [`crate::err!`] macros.
+//!
+//! Exists in-tree because the crate builds with zero external
+//! dependencies (see `rust/Cargo.toml`); the API mirrors the `anyhow`
+//! surface the runtime/coordinator layers use, so swapping the real
+//! crate back is a one-line import change.
+
+/// A boxed-string error carrying its accumulated context chain.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    /// Wrap a message into an [`Error`].
+    pub fn msg<M: std::fmt::Display>(m: M) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+/// Crate-wide result type (defaults the error to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human-readable context to failures, `anyhow`-style.
+pub trait Context<T> {
+    /// Replace/prefix the error with `ctx` (keeps the cause message).
+    fn context<C: std::fmt::Display>(self, ctx: C) -> Result<T, Error>;
+
+    /// Lazily-built variant of [`Context::context`].
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: std::fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string
+/// (the `anyhow::anyhow!` substrate).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)+) => {
+        $crate::util::error::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::err!($($arg)+).into())
+    };
+}
+
+/// Return early with an error when a condition does not hold (the
+/// `anyhow::ensure!` substrate).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::err!($($arg)+).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(Error::msg("boom"))
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let e = fails().context("stage A").unwrap_err();
+        assert_eq!(e.to_string(), "stage A: boom");
+        let e = fails().with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3: boom");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        assert_eq!(Some(7).context("x").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn guarded(v: usize) -> Result<usize> {
+            crate::ensure!(v < 10, "value {v} out of range");
+            if v == 9 {
+                crate::bail!("nine is reserved");
+            }
+            Ok(v)
+        }
+        assert_eq!(guarded(3).unwrap(), 3);
+        assert_eq!(guarded(12).unwrap_err().to_string(), "value 12 out of range");
+        assert_eq!(guarded(9).unwrap_err().to_string(), "nine is reserved");
+        assert_eq!(crate::err!("code {}", 42).to_string(), "code 42");
+    }
+
+    #[test]
+    fn boxes_into_std_error() {
+        let b: Box<dyn std::error::Error> = Error::msg("x").into();
+        assert_eq!(b.to_string(), "x");
+    }
+}

@@ -7,10 +7,11 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+static CACHED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
 /// Number of worker threads to use.
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
-    let c = CACHED.load(Ordering::Relaxed);
+    let c = CACHED_THREADS.load(Ordering::Relaxed);
     if c != 0 {
         return c;
     }
@@ -19,8 +20,38 @@ pub fn num_threads() -> usize {
         .and_then(|s| s.parse::<usize>().ok())
         .filter(|&n| n >= 1)
         .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()));
-    CACHED.store(n, Ordering::Relaxed);
+    CACHED_THREADS.store(n, Ordering::Relaxed);
     n
+}
+
+/// Override the worker-thread count at runtime (wins over the
+/// `SOBOLNET_THREADS` environment variable).  Used by benches and tests
+/// to sweep thread scaling within one process; clamped to ≥ 1.
+pub fn set_num_threads(n: usize) {
+    CACHED_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Raw mutable pointer that may cross scoped-thread boundaries.
+///
+/// Safety contract: every thread must write only to index ranges
+/// disjoint from all other threads' (the [`parallel_ranges`] pattern:
+/// the caller partitions `0..n` and derives offsets from its range).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Wrap a raw pointer.
+    pub fn new(p: *mut T) -> Self {
+        SendPtr(p)
+    }
+
+    /// The wrapped pointer.
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
 }
 
 /// Run `f(start, end)` over disjoint chunks of `0..n` on worker threads.
@@ -111,5 +142,28 @@ mod tests {
     #[test]
     fn num_threads_at_least_one() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn set_num_threads_overrides_and_clamps() {
+        let before = num_threads();
+        set_num_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_num_threads(0); // clamped
+        assert_eq!(num_threads(), 1);
+        set_num_threads(before);
+        assert_eq!(num_threads(), before);
+    }
+
+    #[test]
+    fn send_ptr_disjoint_writes() {
+        let mut data = vec![0u32; 256];
+        let p = SendPtr::new(data.as_mut_ptr());
+        parallel_ranges(256, 16, |a, b| {
+            for i in a..b {
+                unsafe { *p.get().add(i) = i as u32 };
+            }
+        });
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i as u32));
     }
 }

@@ -1,0 +1,134 @@
+//! Golden-value test: the parallel `SparseMlp::forward` must reproduce
+//! the checked-in fixture computed by the pure-jnp oracle
+//! `python/compile/kernels/ref.py` (see
+//! `python/compile/gen_golden_fixture.py`), within 1e-5, for every
+//! thread count — plus a bitwise thread-invariance check on a network
+//! large enough to actually take the column-sharded parallel path.
+
+use sobolnet::config::json::{self, JsonValue};
+use sobolnet::nn::init::Init;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::topology::{PathSource, PathTopology, TopologyBuilder};
+use sobolnet::util::parallel::set_num_threads;
+
+const FIXTURE: &str = include_str!("fixtures/sparse_forward_golden.json");
+
+/// Both tests sweep the process-global thread count; serialize them so
+/// neither observes the other's setting mid-sweep.
+static THREADS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn usizes(v: &JsonValue) -> Vec<usize> {
+    v.as_array().expect("array").iter().map(|x| x.as_usize().expect("usize")).collect()
+}
+
+fn f32s(v: &JsonValue) -> Vec<f32> {
+    v.as_array().expect("array").iter().map(|x| x.as_f64().expect("f64") as f32).collect()
+}
+
+fn nested<T, F: Fn(&JsonValue) -> Vec<T>>(v: &JsonValue, inner: F) -> Vec<Vec<T>> {
+    v.as_array().expect("array").iter().map(inner).collect()
+}
+
+fn net_from_fixture(fx: &JsonValue) -> (SparseMlp, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let layer_sizes = usizes(fx.get("layer_sizes").unwrap());
+    let paths = fx.get("paths").unwrap().as_usize().unwrap();
+    let index: Vec<Vec<u32>> = nested(fx.get("index").unwrap(), |l| {
+        usizes(l).into_iter().map(|v| v as u32).collect()
+    });
+    assert_eq!(index.len(), layer_sizes.len());
+    for (l, layer) in index.iter().enumerate() {
+        assert_eq!(layer.len(), paths);
+        assert!(layer.iter().all(|&i| (i as usize) < layer_sizes[l]));
+    }
+    let topo = PathTopology {
+        layer_sizes,
+        paths,
+        index,
+        signs: None,
+        source: PathSource::Random { seed: 0 },
+        dims_used: None,
+    };
+    // bias disabled: the jnp oracle models the bias-free Fig 3 network
+    let mut net = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantPositive, seed: 0, bias: false, freeze_signs: false },
+    );
+    let weights = nested(fx.get("weights").unwrap(), f32s);
+    assert_eq!(weights.len(), net.w.len());
+    for (t, wt) in weights.iter().enumerate() {
+        net.w[t].copy_from_slice(wt);
+    }
+    let inputs = nested(fx.get("inputs").unwrap(), f32s);
+    let expected = nested(fx.get("expected_logits").unwrap(), f32s);
+    (net, inputs, expected)
+}
+
+#[test]
+fn forward_matches_ref_py_fixture_for_any_thread_count() {
+    let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let fx = json::parse(FIXTURE).expect("fixture parses");
+    let (mut net, inputs, expected) = net_from_fixture(&fx);
+    let base = inputs.len();
+    let features = inputs[0].len();
+    let classes = expected[0].len();
+
+    // Tile the fixture rows until paths × batch × transitions clears the
+    // engine's PAR_MIN_WORK threshold (1<<17), so the ≥2-thread sweeps
+    // genuinely take the column-sharded parallel path: 48 paths × 3
+    // transitions needs batch ≥ 911 — use 204 copies of the 5 rows.
+    let copies = 204usize;
+    let batch = base * copies;
+    let mut flat: Vec<f32> = Vec::with_capacity(batch * features);
+    for _ in 0..copies {
+        flat.extend(inputs.iter().flatten().copied());
+    }
+    let x = Tensor::from_vec(flat, &[batch, features]);
+
+    let ambient = sobolnet::util::parallel::num_threads();
+    for threads in [1usize, 2, 8] {
+        set_num_threads(threads);
+        let logits = net.forward(&x, false);
+        for b in 0..batch {
+            for c in 0..classes {
+                let got = logits.row(b)[c];
+                let want = expected[b % base][c];
+                assert!(
+                    (got - want).abs() < 1e-5,
+                    "threads={threads} sample={b} class={c}: {got} vs {want}"
+                );
+            }
+        }
+    }
+    set_num_threads(ambient);
+}
+
+#[test]
+fn forward_is_bitwise_invariant_to_thread_count_on_parallel_path() {
+    let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // 4096 paths × 64 batch × 3 transitions clears the engine's
+    // parallelism threshold, so ≥2 threads genuinely shard columns.
+    let topo = TopologyBuilder::new(&[32, 64, 64, 10])
+        .paths(4096)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .build();
+    let mut net = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::UniformRandom, seed: 9, bias: true, freeze_signs: false },
+    );
+    let batch = 64;
+    let x = Tensor::from_vec(
+        (0..batch * 32).map(|i| ((i as f32) * 0.0137).sin()).collect(),
+        &[batch, 32],
+    );
+    let ambient = sobolnet::util::parallel::num_threads();
+    set_num_threads(1);
+    let reference = net.forward(&x, false);
+    for threads in [2usize, 4, 8] {
+        set_num_threads(threads);
+        let got = net.forward(&x, false);
+        assert_eq!(got.data, reference.data, "threads={threads}: forward not bitwise stable");
+    }
+    set_num_threads(ambient);
+}

@@ -14,7 +14,7 @@ use sobolnet::qmc::sobol::{Sobol, MAX_DIMS};
 use sobolnet::qmc::Sequence;
 use sobolnet::rng::{Pcg32, Rng};
 use sobolnet::topology::bank::{simulate_bank_conflicts, BankMapping};
-use sobolnet::topology::{PathSource, TopologyBuilder};
+use sobolnet::topology::{PathSource, PathTopology, SignPolicy, TopologyBuilder};
 
 /// Property: every Sobol' component — scrambled with any seed — forms
 /// progressive permutations in every block of every power-of-two size.
@@ -167,6 +167,108 @@ fn prop_constant_valence_pow2() {
             })
             .build();
         assert!(topo.constant_valence(), "case {case}: sizes={sizes:?} paths={paths}");
+    }
+}
+
+/// Property (§4.4): with `P = layer width` (power-of-two geometry),
+/// every Sobol'-generated layer is a **progressive permutation** of the
+/// layer's neurons — the full block is bijective, every power-of-two
+/// prefix hits pairwise-distinct neurons, and therefore each layer
+/// transition `index[l] → index[l+1]` is a bijection.  This is the
+/// structure behind the paper's bank-conflict-freedom claim: each of
+/// the `P` parallel lanes touches a distinct source and a distinct
+/// destination neuron.
+#[test]
+fn prop_layer_transitions_are_progressive_permutations() {
+    let mut rng = Pcg32::seeded(0x5EED);
+    for case in 0..12 {
+        let width = 1usize << (3 + rng.next_below(4)); // 8..64
+        let layers = 2 + rng.next_below(4) as usize; // 2..5
+        let sizes = vec![width; layers];
+        let seed = rng.next_u64();
+        let topo = TopologyBuilder::new(&sizes)
+            .paths(width)
+            .source(PathSource::Sobol { skip_bad_dims: false, scramble_seed: Some(seed) })
+            .build();
+        for l in 0..layers {
+            // full block: a permutation of 0..width
+            let mut seen = vec![false; width];
+            for p in 0..width {
+                let i = topo.index[l][p] as usize;
+                assert!(!seen[i], "case {case} seed={seed} l={l}: neuron {i} repeated");
+                seen[i] = true;
+            }
+            // progressive: every power-of-two prefix is collision-free
+            let mut m = 1usize;
+            while m < width {
+                let mut hit = vec![false; width];
+                for p in 0..m {
+                    let i = topo.index[l][p] as usize;
+                    assert!(
+                        !hit[i],
+                        "case {case} seed={seed} l={l}: prefix {m} collides at neuron {i}"
+                    );
+                    hit[i] = true;
+                }
+                m <<= 1;
+            }
+        }
+        // each transition maps sources to destinations bijectively
+        for t in 0..topo.transitions() {
+            let mut dst_of: Vec<Option<u32>> = vec![None; width];
+            for p in 0..width {
+                let s = topo.index[t][p] as usize;
+                let d = topo.index[t + 1][p];
+                assert!(
+                    dst_of[s].is_none(),
+                    "case {case} t={t}: source neuron {s} used by two paths"
+                );
+                dst_of[s] = Some(d);
+            }
+            let mut dsts: Vec<u32> = dst_of.into_iter().map(|d| d.unwrap()).collect();
+            dsts.sort_unstable();
+            let expect: Vec<u32> = (0..width as u32).collect();
+            assert_eq!(dsts, expect, "case {case} t={t}: transition not bijective");
+        }
+    }
+}
+
+/// Property: topology generation is deterministic — two builds with the
+/// same seed produce byte-identical index tables (and identical skipped
+/// dimensions and signs).  The serving subsystem relies on this: every
+/// worker shard rebuilds its backend from the same seed and must end up
+/// with the same network.
+#[test]
+fn prop_topology_generation_is_deterministic() {
+    let index_bytes = |t: &PathTopology| -> Vec<u8> {
+        t.index
+            .iter()
+            .flat_map(|layer| layer.iter().flat_map(|v| v.to_le_bytes()))
+            .collect()
+    };
+    let mut rng = Pcg32::seeded(0xD37);
+    for case in 0..8 {
+        let seed = rng.next_u64();
+        let scramble = if case % 2 == 0 { Some(seed) } else { None };
+        let sizes = [784usize, 256, 64, 10];
+        let paths = 512 + 256 * rng.next_below(3) as usize;
+        let mk = || {
+            TopologyBuilder::new(&sizes)
+                .paths(paths)
+                .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: scramble })
+                .sign_policy(SignPolicy::SequenceDimension)
+                .build()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.index, b.index, "case {case}: index tables differ");
+        assert_eq!(a.dims_used, b.dims_used, "case {case}: skipped dims differ");
+        assert_eq!(a.signs, b.signs, "case {case}: signs differ");
+        assert_eq!(
+            index_bytes(&a),
+            index_bytes(&b),
+            "case {case}: serialized topologies not byte-identical"
+        );
     }
 }
 

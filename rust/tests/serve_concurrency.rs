@@ -1,0 +1,139 @@
+//! Integration: the sharded multi-worker server under concurrent load
+//! answers every request with logits **bitwise identical** to a
+//! sequential single-backend reference pass.
+//!
+//! This is the end-to-end form of the engine's determinism guarantee:
+//! the `[neurons, batch]` layout processes each batch column in exact
+//! path order, so neither server-side batching/padding nor the worker
+//! count nor `SOBOLNET_THREADS` can change a single bit of the output.
+
+use sobolnet::nn::init::Init;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::serve::{Dispatch, InferenceBackend, ModelBackend, ServeConfig, ShardedServer};
+use sobolnet::topology::{PathSource, TopologyBuilder};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+const FEATURES: usize = 16;
+const CLASSES: usize = 8;
+
+fn make_net() -> SparseMlp {
+    let topo = TopologyBuilder::new(&[FEATURES, 32, 32, CLASSES])
+        .paths(256)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .build();
+    let mut net = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::UniformRandom, seed: 42, bias: true, freeze_signs: false },
+    );
+    // non-trivial biases so padding bugs would show
+    for bl in net.bias.iter_mut() {
+        for (i, v) in bl.iter_mut().enumerate() {
+            *v = 0.03 * (i as f32) - 0.1;
+        }
+    }
+    net
+}
+
+fn sample(i: usize) -> Vec<f32> {
+    (0..FEATURES).map(|j| ((i * FEATURES + j) as f32 * 0.173).sin()).collect()
+}
+
+#[test]
+fn sharded_server_matches_sequential_reference_bitwise() {
+    let n_requests = 384usize;
+    let clients = 8usize;
+
+    // sequential single-backend reference pass
+    let mut reference_net = make_net();
+    let reference: Vec<Vec<f32>> = (0..n_requests)
+        .map(|i| reference_net.forward(&Tensor::from_vec(sample(i), &[1, FEATURES]), false).data)
+        .collect();
+
+    let net = make_net();
+    let server = Arc::new(ShardedServer::start_sharded_with(
+        move || -> Box<dyn InferenceBackend> {
+            Box::new(ModelBackend {
+                model: net.clone(),
+                capacity: 8,
+                features: FEATURES,
+                classes: CLASSES,
+            })
+        },
+        ServeConfig {
+            workers: 4,
+            max_wait: Duration::from_millis(1),
+            dispatch: Dispatch::LeastLoaded,
+        },
+    ));
+    assert_eq!(server.workers(), 4);
+
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let per = n_requests / clients;
+            let mut got = Vec::with_capacity(per);
+            for k in 0..per {
+                let i = c * per + k;
+                got.push((i, s.infer(sample(i))));
+            }
+            got
+        }));
+    }
+    let mut answered = 0usize;
+    for h in handles {
+        for (i, logits) in h.join().expect("client thread") {
+            answered += 1;
+            assert_eq!(logits, reference[i], "request {i}: served logits differ from reference");
+        }
+    }
+    assert_eq!(answered, n_requests, "every request answered");
+    assert_eq!(server.metrics.completed.load(Ordering::Relaxed), n_requests as u64);
+
+    // per-worker metrics add up to the aggregate, and the load actually
+    // spread across shards
+    let per_worker = server.worker_metrics();
+    let counts: Vec<u64> =
+        per_worker.iter().map(|m| m.completed.load(Ordering::Relaxed)).collect();
+    assert_eq!(counts.iter().sum::<u64>(), n_requests as u64, "shard counts {counts:?}");
+    let active = counts.iter().filter(|&&c| c > 0).count();
+    assert!(active >= 2, "expected ≥2 active shards under concurrent load, got {counts:?}");
+}
+
+#[test]
+fn round_robin_sharding_answers_everything_in_order_of_dispatch() {
+    let n_requests = 64usize;
+    let net = make_net();
+    let mut reference_net = make_net();
+    let server = ShardedServer::start_sharded_with(
+        move || -> Box<dyn InferenceBackend> {
+            // capacity 1: every request is its own full batch (no waits)
+            Box::new(ModelBackend {
+                model: net.clone(),
+                capacity: 1,
+                features: FEATURES,
+                classes: CLASSES,
+            })
+        },
+        ServeConfig {
+            workers: 4,
+            max_wait: Duration::from_millis(1),
+            dispatch: Dispatch::RoundRobin,
+        },
+    );
+    for i in 0..n_requests {
+        let served = server.infer(sample(i));
+        let reference =
+            reference_net.forward(&Tensor::from_vec(sample(i), &[1, FEATURES]), false).data;
+        assert_eq!(served, reference, "request {i}");
+    }
+    // strict rotation: every shard served exactly a quarter
+    for (w, m) in server.worker_metrics().iter().enumerate() {
+        assert_eq!(m.completed.load(Ordering::Relaxed), (n_requests / 4) as u64, "worker {w}");
+    }
+    server.shutdown();
+}
