@@ -2,13 +2,20 @@
 //! after-numbers in EXPERIMENTS.md):
 //!
 //! * Sobol' point generation (direct vs Gray-code) and topology builds,
-//! * the sparse engine's fwd/bwd throughput in paths·batch/s,
+//! * the sparse engine's fwd/bwd throughput in paths·batch/s, with
+//!   `{1, 2, 4, 8}`-thread scaling sweeps for fwd, bwd, and fwd+bwd on
+//!   the persistent worker pool,
 //! * dense matmul GFLOP/s (the baseline's bottleneck),
 //! * pair-sparse conv vs masked-dense conv,
 //! * AOT runtime: PJRT execute overhead of the compiled kernels
 //!   (skipped if artifacts are missing).
+//!
+//! Every result lands in `BENCH_hotpath.json` at the repo root
+//! ([`sobolnet::bench::BenchReport`]) so the perf trajectory is
+//! comparable across PRs; pass `--quick` (CI smoke mode) for a
+//! low-sample run with the same coverage.
 
-use sobolnet::bench::Bench;
+use sobolnet::bench::{Bench, BenchReport};
 use sobolnet::nn::cnn::{Cnn, CnnConfig};
 use sobolnet::nn::init::Init;
 use sobolnet::nn::matmul::matmul_nt;
@@ -22,19 +29,27 @@ use sobolnet::runtime::{ArtifactManifest, Runtime};
 use sobolnet::topology::{PathSource, TopologyBuilder};
 
 fn main() {
-    let b = Bench::new("hotpath").warmup(2).samples(8);
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = Bench::new("hotpath").warmup(2).samples(8);
+    if quick {
+        b = b.warmup(1).samples(3);
+        b.min_time_secs = 0.02;
+        println!("bench hotpath: quick mode (CI smoke)");
+    }
+    let mut report = BenchReport::new();
 
     // --- Sobol' generation
     let sobol = Sobol::new(8);
     let n = 1 << 18;
-    b.run("sobol direct (points)", n, || {
+    let r = b.run("sobol direct (points)", n, || {
         let mut acc = 0u32;
         for i in 0..n as u64 {
             acc ^= sobol.component_u32(i, 3);
         }
         std::hint::black_box(acc);
     });
-    b.run("sobol gray-code (points)", n, || {
+    report.push(&r);
+    let r = b.run("sobol gray-code (points)", n, || {
         let mut st = sobol.stream(3);
         let mut acc = 0u32;
         for _ in 0..n {
@@ -42,15 +57,17 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
+    report.push(&r);
 
     // --- topology build
-    b.run("topology build sobol 4096 paths", 4096, || {
+    let r = b.run("topology build sobol 4096 paths", 4096, || {
         let t = TopologyBuilder::new(&[784, 256, 256, 10])
             .paths(4096)
             .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
             .build();
         std::hint::black_box(t.paths);
     });
+    report.push(&r);
 
     // --- sparse engine fwd/bwd
     let topo = TopologyBuilder::new(&[784, 256, 256, 10])
@@ -67,35 +84,68 @@ fn main() {
         &[batch, 784],
     );
     let work = topo.paths * batch * topo.transitions();
-    b.run("sparse fwd (path·batch edges)", work, || {
+    let glogits = Tensor::from_vec(vec![0.01; batch * 10], &[batch, 10]);
+    let r = b.run("sparse fwd (path·batch edges)", work, || {
         std::hint::black_box(net.forward(&x, false));
     });
-    let glogits = Tensor::from_vec(vec![0.01; batch * 10], &[batch, 10]);
-    b.run("sparse fwd+bwd (path·batch edges ×2)", work * 2, || {
+    report.push(&r);
+    let r = b.run("sparse fwd+bwd (path·batch edges ×2)", work * 2, || {
         net.forward(&x, true);
         net.backward(&glogits);
     });
+    report.push(&r);
 
-    // --- sparse fwd thread scaling (column-sharded parallel hot path;
-    //     equivalent to sweeping SOBOLNET_THREADS across runs)
+    // --- sparse fwd/bwd thread scaling on the persistent pool
+    //     (column-sharded hot path; equivalent to sweeping
+    //     SOBOLNET_THREADS across runs)
     {
         use sobolnet::util::parallel::{num_threads, set_num_threads};
         let ambient = num_threads();
-        let mut throughputs: Vec<(usize, f64)> = Vec::new();
+        let mut fwd_tp: Vec<(usize, f64)> = Vec::new();
+        let mut bwd_tp: Vec<(usize, f64)> = Vec::new();
+        let mut both_tp: Vec<(usize, f64)> = Vec::new();
         for threads in [1usize, 2, 4, 8] {
             set_num_threads(threads);
             let r = b.run(&format!("sparse fwd {threads} threads (path·batch edges)"), work, || {
                 std::hint::black_box(net.forward(&x, false));
             });
-            throughputs.push((threads, r.throughput()));
+            report.push(&r);
+            fwd_tp.push((threads, r.throughput()));
+            // isolate backward: one train-mode forward caches the
+            // activations, then backward runs repeatedly against them
+            net.forward(&x, true);
+            let r = b.run(&format!("sparse bwd {threads} threads (path·batch edges)"), work, || {
+                net.backward(&glogits);
+            });
+            report.push(&r);
+            bwd_tp.push((threads, r.throughput()));
+            let r = b.run(
+                &format!("sparse fwd+bwd {threads} threads (path·batch edges ×2)"),
+                work * 2,
+                || {
+                    net.forward(&x, true);
+                    net.backward(&glogits);
+                },
+            );
+            report.push(&r);
+            both_tp.push((threads, r.throughput()));
         }
         set_num_threads(ambient);
-        let t1 = throughputs[0].1;
-        for &(threads, tp) in &throughputs[1..] {
-            println!(
-                "bench hotpath/sparse fwd scaling: {threads} threads = {:.2}x over 1 thread",
-                tp / t1
-            );
+        for (label, key, tps) in [
+            ("fwd", "sparse_fwd", &fwd_tp),
+            ("bwd", "sparse_bwd", &bwd_tp),
+            ("fwd+bwd", "sparse_fwd_bwd", &both_tp),
+        ] {
+            let t1 = tps[0].1;
+            report.metric(&format!("{key}_edges_per_sec_1t"), t1);
+            for &(threads, tp) in &tps[1..] {
+                println!(
+                    "bench hotpath/sparse {label} scaling: {threads} threads = {:.2}x over 1 thread",
+                    tp / t1
+                );
+                report.metric(&format!("{key}_edges_per_sec_{threads}t"), tp);
+                report.metric(&format!("{key}_scaling_{threads}t"), tp / t1);
+            }
         }
     }
 
@@ -105,11 +155,12 @@ fn main() {
     let w: Vec<f32> = (0..nn * k).map(|i| (i as f32 * 0.11).cos()).collect();
     let mut c = vec![0.0f32; m * nn];
     let flops = 2 * m * k * nn;
-    b.run("matmul_nt 64×784×300 (flops)", flops, || {
+    let r = b.run("matmul_nt 64×784×300 (flops)", flops, || {
         c.iter_mut().for_each(|v| *v = 0.0);
         matmul_nt(&a, &w, &mut c, m, k, nn);
         std::hint::black_box(c[0]);
     });
+    report.push(&r);
 
     // --- conv: pair-sparse vs masked dense at width 4×
     let width = 4.0;
@@ -128,13 +179,15 @@ fn main() {
     );
     let mut sparse_cnn =
         Cnn::sparse(CnnConfig::paper(width, 3, 10, Init::ConstantRandomSign, 0), &ctopo, false);
-    b.run("cnn fwd width-4 pair-sparse (samples)", 8, || {
+    let r = b.run("cnn fwd width-4 pair-sparse (samples)", 8, || {
         std::hint::black_box(sparse_cnn.forward(&xin, false));
     });
+    report.push(&r);
     let mut dense_cnn = Cnn::dense(CnnConfig::paper(width, 3, 10, Init::UniformRandom, 0));
-    b.run("cnn fwd width-4 dense im2col (samples)", 8, || {
+    let r = b.run("cnn fwd width-4 dense im2col (samples)", 8, || {
         std::hint::black_box(dense_cnn.forward(&xin, false));
     });
+    report.push(&r);
 
     // --- AOT runtime overhead (needs artifacts)
     match ArtifactManifest::load("artifacts") {
@@ -152,10 +205,11 @@ fn main() {
                 let x: Vec<f32> =
                     (0..bsz * 784).map(|i| (i as f32 * 0.01).sin().abs()).collect();
                 let y: Vec<i32> = (0..bsz).map(|i| (i % 10) as i32).collect();
-                b.run("aot train_step (samples)", bsz, || {
+                let r = b.run("aot train_step (samples)", bsz, || {
                     let loss = trainer.train_step(&x, &y, 0.05).expect("step");
                     std::hint::black_box(loss);
                 });
+                report.push(&r);
             }
             let rt = Runtime::cpu().expect("pjrt");
             let spec = manifest.find("path_layer_fwd").expect("kernel artifact");
@@ -167,7 +221,7 @@ fn main() {
             let w: Vec<f32> = (0..paths).map(|i| (i as f32 * 0.1).cos()).collect();
             let ii: Vec<i32> = (0..paths).map(|p| (p % n_in) as i32).collect();
             let io: Vec<i32> = (0..paths).map(|p| (p % 256) as i32).collect();
-            b.run("pjrt path_layer_fwd execute (paths)", paths, || {
+            let r = b.run("pjrt path_layer_fwd execute (paths)", paths, || {
                 let out = exe
                     .run(&[
                         literal_f32(&x, &[batch, n_in]).unwrap(),
@@ -178,7 +232,18 @@ fn main() {
                     .unwrap();
                 std::hint::black_box(out.len());
             });
+            report.push(&r);
         }
         _ => println!("bench hotpath/pjrt: SKIPPED (run `make artifacts`)"),
+    }
+
+    // --- machine-readable output, tracked across PRs
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|repo| repo.join("BENCH_hotpath.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_hotpath.json"));
+    match report.write(&out_path) {
+        Ok(()) => println!("bench hotpath: wrote {}", out_path.display()),
+        Err(e) => println!("bench hotpath: could not write {}: {e}", out_path.display()),
     }
 }

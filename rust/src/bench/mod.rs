@@ -2,14 +2,20 @@
 //! table formatting for the experiment benches.
 //!
 //! Design goals: warmup, multiple timed samples, mean ± CI and
-//! throughput reporting, and machine-greppable one-line results so
-//! `cargo bench | tee bench_output.txt` archives every table/figure.
+//! throughput reporting, machine-greppable one-line results so
+//! `cargo bench | tee bench_output.txt` archives every table/figure,
+//! and a machine-readable [`BenchReport`] (results + named metrics such
+//! as thread-scaling ratios) serialized as JSON — the perf-hotpath
+//! bench writes `BENCH_hotpath.json` at the repo root so the
+//! throughput trajectory is tracked across PRs.
 
 pub mod exp;
 
+use crate::config::json::JsonValue;
 use crate::util::stats::Welford;
 use crate::util::timer::Timer;
 use crate::util::{fmt_count, fmt_secs};
+use std::collections::BTreeMap;
 
 /// A configured micro-benchmark runner.
 #[derive(Debug, Clone)]
@@ -123,6 +129,73 @@ impl std::fmt::Display for BenchResult {
     }
 }
 
+/// Machine-readable run report: accumulates [`BenchResult`]s plus named
+/// scalar metrics (e.g. thread-scaling ratios) and serializes them to
+/// compact JSON for cross-PR perf tracking.
+#[derive(Debug, Clone, Default)]
+pub struct BenchReport {
+    /// All recorded results, in run order.
+    pub results: Vec<BenchResult>,
+    /// Named scalar metrics, in record order.
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// JSON number that is always valid JSON (non-finite values clamp to 0).
+fn json_num(v: f64) -> JsonValue {
+    JsonValue::Number(if v.is_finite() { v } else { 0.0 })
+}
+
+impl BenchReport {
+    /// Empty report.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one bench result.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(r.clone());
+    }
+
+    /// Record a named scalar metric (e.g. `"sparse_bwd_scaling_4t"`).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// JSON form: `{"version", "results": [...], "metrics": {...}}`.
+    pub fn to_json(&self) -> JsonValue {
+        let results: Vec<JsonValue> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("group".to_string(), JsonValue::String(r.group.clone()));
+                m.insert("name".to_string(), JsonValue::String(r.name.clone()));
+                m.insert("mean_secs".to_string(), json_num(r.mean_secs));
+                m.insert("ci95_secs".to_string(), json_num(r.ci95));
+                m.insert("min_secs".to_string(), json_num(r.min_secs));
+                m.insert("samples".to_string(), json_num(r.samples as f64));
+                m.insert("work_units".to_string(), json_num(r.work_units as f64));
+                m.insert("throughput_per_sec".to_string(), json_num(r.throughput()));
+                JsonValue::Object(m)
+            })
+            .collect();
+        let mut metrics = BTreeMap::new();
+        for (k, v) in &self.metrics {
+            metrics.insert(k.clone(), json_num(*v));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("version".to_string(), JsonValue::String(crate::VERSION.to_string()));
+        top.insert("results".to_string(), JsonValue::Array(results));
+        top.insert("metrics".to_string(), JsonValue::Object(metrics));
+        JsonValue::Object(top)
+    }
+
+    /// Write compact JSON to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_compact())
+    }
+}
+
 /// Simple aligned-column table printer for experiment outputs
 /// (the rows the paper's tables/figures report).
 #[derive(Debug, Clone, Default)]
@@ -220,5 +293,52 @@ mod tests {
     fn table_checks_width() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn report_serializes_valid_json() {
+        let mut rep = BenchReport::new();
+        rep.push(&BenchResult {
+            group: "g".into(),
+            name: "case a".into(),
+            mean_secs: 0.002,
+            ci95: 0.0001,
+            min_secs: 0.0018,
+            samples: 10,
+            work_units: 4096,
+        });
+        rep.metric("scaling_4t", 3.1);
+        let text = rep.to_json().to_string_compact();
+        // must round-trip through the in-tree parser
+        let v = crate::config::json::parse(&text).expect("valid JSON");
+        let results = v.get("results").and_then(|r| r.as_array()).expect("results");
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").and_then(|n| n.as_str()), Some("case a"));
+        assert_eq!(results[0].get("work_units").and_then(|n| n.as_usize()), Some(4096));
+        let tp = results[0].get("throughput_per_sec").and_then(|n| n.as_f64()).unwrap();
+        assert!((tp - 4096.0 / 0.002).abs() / tp < 1e-9);
+        let m = v.get("metrics").expect("metrics");
+        assert_eq!(m.get("scaling_4t").and_then(|n| n.as_f64()), Some(3.1));
+    }
+
+    #[test]
+    fn report_clamps_non_finite_numbers() {
+        let mut rep = BenchReport::new();
+        rep.push(&BenchResult {
+            group: "g".into(),
+            name: "instant".into(),
+            mean_secs: 0.0, // throughput would be +inf
+            ci95: 0.0,
+            min_secs: 0.0,
+            samples: 1,
+            work_units: 10,
+        });
+        let text = rep.to_json().to_string_compact();
+        let v = crate::config::json::parse(&text).expect("still valid JSON");
+        let results = v.get("results").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(
+            results[0].get("throughput_per_sec").and_then(|n| n.as_f64()),
+            Some(0.0)
+        );
     }
 }

@@ -7,10 +7,22 @@ use super::tensor::Tensor;
 /// `logits` `[B, C]`, `labels[b] ∈ 0..C`.  Returns `(mean_loss, dL/dlogits)`
 /// with the gradient already averaged over the batch.
 pub fn softmax_xent(logits: &Tensor, labels: &[u32]) -> (f32, Tensor) {
+    let mut grad = Tensor::empty();
+    let loss = softmax_xent_into(logits, labels, &mut grad);
+    (loss, grad)
+}
+
+/// [`softmax_xent`] writing the gradient into a caller-held tensor
+/// (reshaped/resized as needed) — the train-loop form: with a reused
+/// `grad`, allocation-free once warm.
+pub fn softmax_xent_into(logits: &Tensor, labels: &[u32], grad: &mut Tensor) -> f32 {
     let b = logits.batch();
     let c = logits.features();
     assert_eq!(labels.len(), b);
-    let mut grad = Tensor::zeros(&logits.shape);
+    grad.shape.clear();
+    grad.shape.extend_from_slice(&logits.shape);
+    // no clear: the per-row loop below writes every element
+    grad.data.resize(b * c, 0.0);
     let mut loss = 0.0f64;
     let inv_b = 1.0 / b as f32;
     for i in 0..b {
@@ -30,7 +42,7 @@ pub fn softmax_xent(logits: &Tensor, labels: &[u32]) -> (f32, Tensor) {
             *g = (p - if j == y { 1.0 } else { 0.0 }) * inv_b;
         }
     }
-    ((loss / b as f64) as f32, grad)
+    (loss / b as f64) as f32
 }
 
 /// Fraction of rows whose argmax equals the label.

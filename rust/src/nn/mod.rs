@@ -32,6 +32,15 @@ pub trait Model {
     /// Forward pass; when `train`, caches whatever backward needs.
     fn forward(&mut self, x: &Tensor, train: bool) -> Tensor;
 
+    /// Forward pass writing the logits into a caller-held tensor
+    /// (reshaped/resized as needed).  The default delegates to
+    /// [`Model::forward`]; models with reusable scratch override it so
+    /// the train/serve hot loop performs no per-call allocation once
+    /// warm ([`sparse::SparseMlp`] does).
+    fn forward_into(&mut self, x: &Tensor, train: bool, out: &mut Tensor) {
+        *out = self.forward(x, train);
+    }
+
     /// Backward from the loss gradient w.r.t. the logits; accumulates
     /// parameter gradients internally.
     fn backward(&mut self, glogits: &Tensor);

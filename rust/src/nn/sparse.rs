@@ -10,26 +10,158 @@
 //! The ReLU is implicit exactly as in Fig 3: a path contributes only if
 //! its source activation is positive.
 //!
-//! **Parallel inference hot path.** The `[neurons, batch]` layout makes
+//! **Parallel training hot path.**  The `[neurons, batch]` layout makes
 //! every per-path inner loop a contiguous run of batch columns, and
-//! distinct columns never share an accumulator — so the forward pass
-//! shards conflict-free over batch columns via
-//! [`crate::util::parallel::parallel_ranges`] (thread count:
+//! distinct columns never share an activation accumulator — so **both**
+//! the forward and the backward pass shard over batch columns on the
+//! persistent worker pool of [`crate::util::parallel`] (thread count:
 //! `SOBOLNET_THREADS` / [`crate::util::parallel::set_num_threads`]).
-//! Each column is still processed in exact path order, so results are
-//! **bitwise identical** for every thread count.
+//!
+//! * *Forward* shards via [`parallel_ranges`]: each thread owns a
+//!   disjoint column range of every layer buffer and runs the whole
+//!   multi-layer loop for it.  Columns are processed in exact path
+//!   order, so logits are **bitwise identical** for every thread count.
+//! * *Backward* shards via [`parallel_chunks`] at a **fixed** shard
+//!   width that depends only on the batch size ([`bwd_shard_width`]),
+//!   never on the thread count.  Column-disjoint outputs (`gz`) are
+//!   written in place; the two cross-column reductions — the per-path
+//!   scalar `gacc` feeding `gw`, and the per-neuron bias row-sums
+//!   feeding `gb` — go to per-*shard* shadow accumulators that are
+//!   merged in fixed shard order afterwards.  Because the shard
+//!   partition and the merge order are pure functions of the batch
+//!   size, `gw`/`gb`/`gz` are **bitwise identical** for every
+//!   `SOBOLNET_THREADS` setting (asserted by `tests/golden_backward.rs`).
+//!
+//! **Scratch-buffer contract.**  All hot-loop buffers (per-layer
+//! activations `z`, per-layer gradients `gz`, the shadow accumulators,
+//! and transpose staging) live in the model and are grown on demand:
+//! after a warm-up step with a given batch size, `forward_into` +
+//! `backward` + `step` perform **zero heap allocation**
+//! (`tests/alloc_hotpath.rs` pins this with a counting global
+//! allocator).  The buffers are transient: each `forward` overwrites
+//! `z` (train *and* eval), so `backward` requires the most recent
+//! forward to have been `train = true` and asserts it.
+//!
+//! `PAR_MIN_WORK` is the edge-work level (`paths × batch ×
+//! transitions`) below which a pass stays on the calling thread.  With
+//! the persistent pool this no longer buys back thread *spawns* — only
+//! a park/wake round-trip (~µs) — so it sits at `2^14`, an order of
+//! magnitude below the `2^17` the scoped-spawn implementation needed
+//! (EXPERIMENTS.md §Perf).
 
 use super::init::{w_init_magnitude, Init};
 use super::optim::Sgd;
 use super::tensor::Tensor;
 use super::Model;
 use crate::topology::PathTopology;
-use crate::util::parallel::{parallel_ranges, SendPtr};
+use crate::util::parallel::{parallel_chunks, parallel_ranges, sequential_chunks, SendPtr};
 
-/// Minimum `paths × batch × transitions` edge-work before the forward
-/// pass fans out to threads: below this, scoped-thread spawn overhead
-/// beats the win (EXPERIMENTS.md §Perf).
-const PAR_MIN_WORK: usize = 1 << 17;
+/// Minimum `paths × batch × transitions` edge-work before a pass fans
+/// out to the worker pool: below this, even a pool wake/park
+/// round-trip beats the win (EXPERIMENTS.md §Perf).
+const PAR_MIN_WORK: usize = 1 << 14;
+
+/// Baseline backward shard width in batch columns (one AVX2 register of
+/// f32 per inner step).
+const BWD_COL_SHARD: usize = 8;
+
+/// Upper bound on backward shards, capping shadow-buffer size and merge
+/// cost for large batches.
+const MAX_BWD_SHARDS: usize = 32;
+
+/// Tile edge for the blocked transposes: a 32×32 f32 tile keeps source
+/// and destination lines cache-resident instead of striding the full
+/// matrix per element.
+const TRANSPOSE_TILE: usize = 32;
+
+/// Fixed backward column-shard width: a pure function of the batch
+/// size — [`BWD_COL_SHARD`] columns, or `⌈b / MAX_BWD_SHARDS⌉` once the
+/// batch exceeds `BWD_COL_SHARD × MAX_BWD_SHARDS` columns (shards grow,
+/// their count stays ≤ [`MAX_BWD_SHARDS`]) — and **never** of the
+/// thread count: the shadow partition and merge order, and therefore
+/// every gradient bit, are identical for any `SOBOLNET_THREADS`.
+fn bwd_shard_width(b: usize) -> usize {
+    ((b + MAX_BWD_SHARDS - 1) / MAX_BWD_SHARDS).max(BWD_COL_SHARD)
+}
+
+/// Transpose `[B, n]` (tensor rows) → `[n, B]` into `out` (length
+/// `n·B`), tiled [`TRANSPOSE_TILE`]² so both sides stay cache-resident;
+/// element-for-element equal to the naive strided loop (unit-tested).
+fn transpose_in_blocked(x: &Tensor, n: usize, out: &mut [f32]) {
+    let b = x.batch();
+    assert_eq!(x.features(), n);
+    assert_eq!(out.len(), n * b);
+    let xd = &x.data;
+    let mut i0 = 0;
+    while i0 < n {
+        let i1 = (i0 + TRANSPOSE_TILE).min(n);
+        let mut b0 = 0;
+        while b0 < b {
+            let b1 = (b0 + TRANSPOSE_TILE).min(b);
+            for bi in b0..b1 {
+                for i in i0..i1 {
+                    out[i * b + bi] = xd[bi * n + i];
+                }
+            }
+            b0 = b1;
+        }
+        i0 = i1;
+    }
+}
+
+/// Transpose `[n, B]` → `[B, n]` into `out` (length `B·n`), tiled.
+fn transpose_out_blocked(z: &[f32], n: usize, b: usize, out: &mut [f32]) {
+    assert_eq!(z.len(), n * b);
+    assert_eq!(out.len(), b * n);
+    let mut b0 = 0;
+    while b0 < b {
+        let b1 = (b0 + TRANSPOSE_TILE).min(b);
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + TRANSPOSE_TILE).min(n);
+            for bi in b0..b1 {
+                for i in i0..i1 {
+                    out[bi * n + i] = z[i * b + bi];
+                }
+            }
+            i0 = i1;
+        }
+        b0 = b1;
+    }
+}
+
+/// Reusable hot-loop buffers, grown on demand and never shrunk; their
+/// contents are transient per call.  Cloning a model starts with fresh
+/// (empty) scratch — the pointers cached in `zptrs`/`gzptrs` are only
+/// valid within the forward/backward call that rebuilt them.
+#[derive(Default)]
+struct Scratch {
+    /// Per-layer activation buffer pointers for the forward fan-out.
+    zptrs: Vec<SendPtr<f32>>,
+    /// Per-layer gradient buffers `gz[l]` in `[sizes[l], B]` layout.
+    gz: Vec<Vec<f32>>,
+    /// Per-layer gradient buffer pointers for the backward fan-out.
+    gzptrs: Vec<SendPtr<f32>>,
+    /// Per-shard `gw` shadows, `[shards][transitions][paths]` flat.
+    gw_shadow: Vec<f32>,
+    /// Per-shard `gb` shadows, `[shards][Σ sizes[1..]]` flat.
+    gb_shadow: Vec<f32>,
+    /// Offset of transition `t`'s bias segment inside one `gb` shadow
+    /// row (layer `t+1`, length `sizes[t+1]`).
+    gb_off: Vec<usize>,
+}
+
+impl Clone for Scratch {
+    fn clone(&self) -> Self {
+        Scratch::default()
+    }
+}
+
+impl std::fmt::Debug for Scratch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Scratch { .. }")
+    }
+}
 
 /// Configuration for [`SparseMlp`].
 #[derive(Debug, Clone, Copy)]
@@ -65,10 +197,14 @@ pub struct SparseMlp {
     mw: Vec<Vec<f32>>,
     gb: Vec<Vec<f32>>,
     mb: Vec<Vec<f32>>,
-    /// Cached pre-activations per layer in `[n, B]` layout (train mode);
-    /// `z[0]` is the raw input.
+    /// Cached pre-activations per layer in `[n, B]` layout; `z[0]` is
+    /// the raw input.  Overwritten by every forward (train and eval).
     z: Vec<Vec<f32>>,
     zbatch: usize,
+    /// True iff the most recent forward ran with `train = true` (the
+    /// precondition for `backward`).
+    z_train: bool,
+    scratch: Scratch,
 }
 
 impl SparseMlp {
@@ -127,32 +263,28 @@ impl SparseMlp {
             mb,
             z: Vec::new(),
             zbatch: 0,
+            z_train: false,
+            scratch: Scratch::default(),
         }
     }
 
-    /// Transpose `[B, n]` → `[n, B]`.
-    fn transpose_in(x: &Tensor, n: usize) -> Vec<f32> {
-        let b = x.batch();
-        assert_eq!(x.features(), n);
-        let mut out = vec![0.0f32; n * b];
-        for bi in 0..b {
-            let row = x.row(bi);
-            for (i, &v) in row.iter().enumerate() {
-                out[i * b + bi] = v;
-            }
-        }
-        out
+    /// Accumulated weight gradients `gw[t][p]` (cleared by
+    /// [`Model::step`]).
+    pub fn weight_grads(&self) -> &[Vec<f32>] {
+        &self.gw
     }
 
-    /// Transpose `[n, B]` → `[B, n]` tensor.
-    fn transpose_out(z: &[f32], n: usize, b: usize) -> Tensor {
-        let mut t = Tensor::zeros(&[b, n]);
-        for i in 0..n {
-            for bi in 0..b {
-                t.data[bi * n + i] = z[i * b + bi];
-            }
-        }
-        t
+    /// Accumulated bias gradients `gb[t][i]` (empty vecs when biases
+    /// are disabled; cleared by [`Model::step`]).
+    pub fn bias_grads(&self) -> &[Vec<f32>] {
+        &self.gb
+    }
+
+    /// Gradient w.r.t. the *input* activations in `[n_in, B]` layout,
+    /// as propagated by the most recent [`Model::backward`] call
+    /// (`None` before any backward; overwritten by the next one).
+    pub fn input_grad(&self) -> Option<&[f32]> {
+        self.scratch.gz.first().map(|v| v.as_slice()).filter(|v| !v.is_empty())
     }
 
     /// The paper's Fig 3 inference loop, scalar and literal, for a
@@ -188,22 +320,40 @@ impl SparseMlp {
 
 impl Model for SparseMlp {
     fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
-        let sizes = &self.topo.layer_sizes;
+        let mut out = Tensor::empty();
+        self.forward_into(x, train, &mut out);
+        out
+    }
+
+    fn forward_into(&mut self, x: &Tensor, train: bool, out: &mut Tensor) {
         let b = x.batch();
         let t_cnt = self.topo.transitions();
         let paths = self.topo.paths;
-        let mut z: Vec<Vec<f32>> = Vec::with_capacity(sizes.len());
-        z.push(Self::transpose_in(x, sizes[0]));
-        for t in 0..t_cnt {
-            z.push(vec![0.0f32; sizes[t + 1] * b]);
+        let n_layers = self.topo.layer_sizes.len();
+
+        // (re)shape the per-layer activation scratch; at steady state
+        // (same batch size) these keep their capacity — no allocation
+        if self.z.len() != n_layers {
+            self.z = vec![Vec::new(); n_layers];
         }
+        for l in 0..n_layers {
+            let len = self.topo.layer_sizes[l] * b;
+            let zl = &mut self.z[l];
+            zl.clear();
+            zl.resize(len, 0.0);
+        }
+        transpose_in_blocked(x, self.topo.layer_sizes[0], &mut self.z[0]);
+
         {
             // Column-sharded execution: each thread owns a disjoint
             // range [c0, c1) of batch columns of EVERY layer buffer and
-            // runs the whole multi-layer loop for it — one thread fan-out
+            // runs the whole multi-layer loop for it — one pool fan-out
             // per forward, no barriers between transitions.
-            let ptrs: Vec<SendPtr<f32>> =
-                z.iter_mut().map(|zl| SendPtr::new(zl.as_mut_ptr())).collect();
+            self.scratch.zptrs.clear();
+            for zl in self.z.iter_mut() {
+                self.scratch.zptrs.push(SendPtr::new(zl.as_mut_ptr()));
+            }
+            let ptrs = &self.scratch.zptrs;
             let index = &self.topo.index;
             let ws = &self.w;
             let biases = &self.bias;
@@ -240,55 +390,160 @@ impl Model for SparseMlp {
             let min_chunk = if paths * b * t_cnt >= PAR_MIN_WORK { 1 } else { b.max(1) };
             parallel_ranges(b, min_chunk, columns);
         }
-        let logits = Self::transpose_out(z.last().unwrap(), sizes[sizes.len() - 1], b);
-        if train {
-            self.z = z;
-            self.zbatch = b;
-        }
-        logits
+
+        let classes = self.topo.layer_sizes[n_layers - 1];
+        out.shape.clear();
+        out.shape.push(b);
+        out.shape.push(classes);
+        // no clear: the transpose overwrites every element
+        out.data.resize(b * classes, 0.0);
+        transpose_out_blocked(self.z.last().unwrap(), classes, b, &mut out.data);
+        self.zbatch = b;
+        self.z_train = train;
     }
 
     fn backward(&mut self, glogits: &Tensor) {
-        let sizes = &self.topo.layer_sizes;
         let b = self.zbatch;
+        assert!(
+            self.z_train,
+            "backward requires the most recent forward to have run with train=true \
+             (forward overwrites the activation scratch)"
+        );
         assert_eq!(glogits.batch(), b, "forward(train=true) must precede backward");
-        let mut gz = Self::transpose_in(glogits, sizes[sizes.len() - 1]);
-        for t in (0..self.topo.transitions()).rev() {
-            // bias gradients: row sums of gz (layer t+1)
-            if !self.bias[t].is_empty() {
-                for i in 0..sizes[t + 1] {
-                    let mut s = 0.0f32;
-                    for bi in 0..b {
-                        s += gz[i * b + bi];
+        let t_cnt = self.topo.transitions();
+        let paths = self.topo.paths;
+        let n_layers = self.topo.layer_sizes.len();
+        let classes = self.topo.layer_sizes[n_layers - 1];
+        assert_eq!(glogits.features(), classes);
+
+        // fixed column-shard partition (independent of thread count)
+        let width = bwd_shard_width(b);
+        let shards = (b + width - 1) / width;
+        let tp = t_cnt * paths;
+        let brow: usize = self.topo.layer_sizes[1..].iter().sum();
+
+        // (re)shape the per-layer gradient scratch
+        if self.scratch.gz.len() != n_layers {
+            self.scratch.gz = vec![Vec::new(); n_layers];
+        }
+        for l in 0..n_layers {
+            let len = self.topo.layer_sizes[l] * b;
+            let gzl = &mut self.scratch.gz[l];
+            gzl.clear();
+            gzl.resize(len, 0.0);
+        }
+        transpose_in_blocked(glogits, classes, &mut self.scratch.gz[n_layers - 1]);
+
+        if self.scratch.gb_off.len() != t_cnt {
+            self.scratch.gb_off.clear();
+            let mut off = 0usize;
+            for &sz in &self.topo.layer_sizes[1..] {
+                self.scratch.gb_off.push(off);
+                off += sz;
+            }
+        }
+
+        // zeroed per-shard shadow accumulators (capacity reused)
+        self.scratch.gw_shadow.clear();
+        self.scratch.gw_shadow.resize(shards * tp, 0.0);
+        self.scratch.gb_shadow.clear();
+        self.scratch.gb_shadow.resize(shards * brow, 0.0);
+
+        {
+            self.scratch.gzptrs.clear();
+            for gzl in self.scratch.gz.iter_mut() {
+                self.scratch.gzptrs.push(SendPtr::new(gzl.as_mut_ptr()));
+            }
+            let gzptrs = &self.scratch.gzptrs;
+            let gb_off = &self.scratch.gb_off;
+            let gw_sh = SendPtr::new(self.scratch.gw_shadow.as_mut_ptr());
+            let gb_sh = SendPtr::new(self.scratch.gb_shadow.as_mut_ptr());
+            let sizes = &self.topo.layer_sizes;
+            let index = &self.topo.index;
+            let ws = &self.w;
+            let biases = &self.bias;
+            let z = &self.z;
+
+            // One shard = one fixed chunk of batch columns.  The shard
+            // runs the whole reversed multi-transition loop for its
+            // columns (no barriers): gz writes are column-disjoint, and
+            // the cross-column reductions go to this shard's shadows.
+            let shard = |c0: usize, c1: usize| {
+                let s_idx = c0 / width;
+                let gwb = unsafe { gw_sh.get().add(s_idx * tp) };
+                let gbb = unsafe { gb_sh.get().add(s_idx * brow) };
+                for t in (0..t_cnt).rev() {
+                    let gznext = gzptrs[t + 1].get() as *const f32;
+                    let gzprev = gzptrs[t].get();
+                    // bias gradients: per-shard row sums of gz (layer t+1)
+                    if !biases[t].is_empty() {
+                        let off = gb_off[t];
+                        for i in 0..sizes[t + 1] {
+                            let mut s = 0.0f32;
+                            for bi in c0..c1 {
+                                s += unsafe { *gznext.add(i * b + bi) };
+                            }
+                            unsafe { *gbb.add(off + i) += s };
+                        }
                     }
-                    self.gb[t][i] += s;
+                    let src_idx = &index[t];
+                    let dst_idx = &index[t + 1];
+                    let wt = &ws[t];
+                    let zprev = &z[t];
+                    for p in 0..paths {
+                        let sb = src_idx[p] as usize * b;
+                        let db = dst_idx[p] as usize * b;
+                        let w = wt[p];
+                        let mut gacc = 0.0f32;
+                        // branchless gating: the (v > 0) indicator
+                        // multiplies both products, letting LLVM
+                        // vectorize the loop
+                        for bi in c0..c1 {
+                            let v = zprev[sb + bi];
+                            let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
+                            let g = unsafe { *gznext.add(db + bi) } * gate;
+                            gacc += g * v;
+                            unsafe { *gzprev.add(sb + bi) += w * g };
+                        }
+                        unsafe { *gwb.add(t * paths + p) += gacc };
+                    }
+                }
+            };
+            if paths * b * t_cnt >= PAR_MIN_WORK {
+                parallel_chunks(b, width, &shard);
+            } else {
+                // identical chunk boundaries, inline
+                sequential_chunks(b, width, &shard);
+            }
+        }
+
+        // Fixed-order shadow reduction: shards merge in index order
+        // 0, 1, 2, … regardless of which threads computed them, so the
+        // accumulated gradients are bitwise thread-invariant.
+        for s in 0..shards {
+            let base = s * tp;
+            for t in 0..t_cnt {
+                let sh = &self.scratch.gw_shadow[base + t * paths..base + (t + 1) * paths];
+                let gwt = &mut self.gw[t];
+                for (gp, &sv) in gwt.iter_mut().zip(sh) {
+                    *gp += sv;
                 }
             }
-            let src_idx = &self.topo.index[t];
-            let dst_idx = &self.topo.index[t + 1];
-            let wt = &self.w[t];
-            let gwt = &mut self.gw[t];
-            let zprev = &self.z[t];
-            let mut gprev = vec![0.0f32; sizes[t] * b];
-            for p in 0..self.topo.paths {
-                let s = src_idx[p] as usize * b;
-                let d = dst_idx[p] as usize * b;
-                let w = wt[p];
-                let mut gacc = 0.0f32;
-                let (src, gout) = (&zprev[s..s + b], &gz[d..d + b]);
-                let gsrc = &mut gprev[s..s + b];
-                // branchless gating: the (v > 0) indicator multiplies
-                // both products, letting LLVM vectorize the loop
-                for bi in 0..b {
-                    let v = src[bi];
-                    let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
-                    let g = gout[bi] * gate;
-                    gacc += g * v;
-                    gsrc[bi] += w * g;
+        }
+        for s in 0..shards {
+            let base = s * brow;
+            for t in 0..t_cnt {
+                if self.gb[t].is_empty() {
+                    continue;
                 }
-                gwt[p] += gacc;
+                let off = self.scratch.gb_off[t];
+                let n_t = self.topo.layer_sizes[t + 1];
+                let sh = &self.scratch.gb_shadow[base + off..base + off + n_t];
+                let gbt = &mut self.gb[t];
+                for (gp, &sv) in gbt.iter_mut().zip(sh) {
+                    *gp += sv;
+                }
             }
-            gz = gprev;
         }
     }
 
@@ -368,6 +623,84 @@ mod tests {
     }
 
     #[test]
+    fn blocked_transposes_match_naive() {
+        // deliberately not multiples of the tile size
+        let (n, b) = (37usize, 53usize);
+        let x = Tensor::from_vec(
+            (0..b * n).map(|i| (i as f32 * 0.123).sin()).collect(),
+            &[b, n],
+        );
+        let mut blocked = vec![0.0f32; n * b];
+        transpose_in_blocked(&x, n, &mut blocked);
+        for bi in 0..b {
+            for i in 0..n {
+                assert_eq!(
+                    blocked[i * b + bi].to_bits(),
+                    x.data[bi * n + i].to_bits(),
+                    "transpose_in ({bi},{i})"
+                );
+            }
+        }
+        let mut back = vec![0.0f32; b * n];
+        transpose_out_blocked(&blocked, n, b, &mut back);
+        for (got, want) in back.iter().zip(&x.data) {
+            assert_eq!(got.to_bits(), want.to_bits(), "transpose_out roundtrip");
+        }
+    }
+
+    #[test]
+    fn scratch_buffers_are_reused_across_steps() {
+        // capacity/pointer stability = no steady-state reallocation
+        // (the cross-crate allocation count lives in
+        // tests/alloc_hotpath.rs; this pins the mechanism in-unit)
+        let t = topo(&[16, 32, 32, 8], 512);
+        let mut net = SparseMlp::new(
+            &t,
+            SparseMlpConfig { init: Init::UniformRandom, seed: 5, ..Default::default() },
+        );
+        let b = 24usize;
+        let x = Tensor::from_vec(
+            (0..b * 16).map(|i| ((i as f32) * 0.05).sin()).collect(),
+            &[b, 16],
+        );
+        let glogits = Tensor::from_vec(vec![0.01f32; b * 8], &[b, 8]);
+        let opt = Sgd { lr: 0.01, momentum: 0.9, weight_decay: 0.0 };
+        let mut out = Tensor::empty();
+        // warm-up sizes everything
+        net.forward_into(&x, true, &mut out);
+        net.backward(&glogits);
+        net.step(&opt);
+        let z_ptrs: Vec<*const f32> = net.z.iter().map(|v| v.as_ptr()).collect();
+        let z_caps: Vec<usize> = net.z.iter().map(|v| v.capacity()).collect();
+        let gz_caps: Vec<usize> = net.scratch.gz.iter().map(|v| v.capacity()).collect();
+        let gw_sh_cap = net.scratch.gw_shadow.capacity();
+        let out_cap = out.data.capacity();
+        for _ in 0..4 {
+            net.forward_into(&x, true, &mut out);
+            net.backward(&glogits);
+            net.step(&opt);
+        }
+        let z_ptrs2: Vec<*const f32> = net.z.iter().map(|v| v.as_ptr()).collect();
+        assert_eq!(z_ptrs, z_ptrs2, "activation buffers moved");
+        assert_eq!(z_caps, net.z.iter().map(|v| v.capacity()).collect::<Vec<_>>());
+        assert_eq!(gz_caps, net.scratch.gz.iter().map(|v| v.capacity()).collect::<Vec<_>>());
+        assert_eq!(gw_sh_cap, net.scratch.gw_shadow.capacity());
+        assert_eq!(out_cap, out.data.capacity());
+    }
+
+    #[test]
+    #[should_panic(expected = "train=true")]
+    fn backward_after_eval_forward_panics() {
+        let t = topo(&[6, 8, 4], 32);
+        let mut net = SparseMlp::new(&t, Default::default());
+        let x = Tensor::from_vec(vec![0.5; 6], &[1, 6]);
+        net.forward(&x, true);
+        net.forward(&x, false); // overwrites the activation scratch
+        let g = Tensor::from_vec(vec![0.1; 4], &[1, 4]);
+        net.backward(&g);
+    }
+
+    #[test]
     fn gradients_match_finite_difference() {
         let t = topo(&[5, 7, 3], 24);
         let mut net = SparseMlp::new(
@@ -383,6 +716,8 @@ mod tests {
         let (_, glogits) = softmax_xent(&logits, &labels);
         net.backward(&glogits);
         let eps = 1e-3f32;
+        let gw: Vec<Vec<f32>> = net.weight_grads().to_vec();
+        let gb: Vec<Vec<f32>> = net.bias_grads().to_vec();
         // check several weight gradients per transition
         for t_i in 0..net.w.len() {
             for &p in &[0usize, 5, 11, 23] {
@@ -393,7 +728,7 @@ mod tests {
                 let (lm, _) = softmax_xent(&net.forward(&x, false), &labels);
                 net.w[t_i][p] = orig;
                 let fd = (lp - lm) / (2.0 * eps);
-                let anal = net.gw[t_i][p];
+                let anal = gw[t_i][p];
                 assert!(
                     (fd - anal).abs() < 2e-2 * (1.0 + fd.abs()),
                     "t={t_i} p={p} fd={fd} anal={anal}"
@@ -413,7 +748,7 @@ mod tests {
                 let (lm, _) = softmax_xent(&net.forward(&x, false), &labels);
                 net.bias[t_i][i] = orig;
                 let fd = (lp - lm) / (2.0 * eps);
-                let anal = net.gb[t_i][i];
+                let anal = gb[t_i][i];
                 assert!(
                     (fd - anal).abs() < 2e-2 * (1.0 + fd.abs()),
                     "bias t={t_i} i={i} fd={fd} anal={anal}"

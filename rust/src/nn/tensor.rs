@@ -19,6 +19,14 @@ impl Tensor {
         Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
     }
 
+    /// Empty scratch tensor (performs no allocation) — the reusable
+    /// output slot for `*_into` fillers like
+    /// [`crate::nn::Model::forward_into`] and
+    /// [`crate::nn::loss::softmax_xent_into`].
+    pub fn empty() -> Self {
+        Tensor { data: Vec::new(), shape: Vec::new() }
+    }
+
     /// Tensor from existing data (checked).
     pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Self {
         assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");

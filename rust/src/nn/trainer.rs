@@ -2,7 +2,7 @@
 //! optional augmentation, and per-epoch evaluation — the shared driver
 //! of every experiment bench.
 
-use super::loss::{accuracy, softmax_xent};
+use super::loss::{accuracy, softmax_xent_into};
 use super::optim::{LrSchedule, Sgd};
 use super::tensor::Tensor;
 use super::Model;
@@ -84,9 +84,12 @@ pub fn evaluate(model: &mut dyn Model, data: &ClassificationData, batch_size: us
     let mut loss_sum = 0.0f64;
     let mut acc_sum = 0.0f64;
     let mut n = 0usize;
+    // reused across batches (models with scratch allocate nothing here)
+    let mut logits = Tensor::empty();
+    let mut glogits = Tensor::empty();
     for (x, y) in data.batches(&order, batch_size) {
-        let logits = model.forward(&x, false);
-        let (loss, _) = softmax_xent(&logits, &y);
+        model.forward_into(&x, false, &mut logits);
+        let loss = softmax_xent_into(&logits, &y, &mut glogits);
         loss_sum += loss as f64 * y.len() as f64;
         acc_sum += accuracy(&logits, &y) * y.len() as f64;
         n += y.len();
@@ -104,6 +107,11 @@ pub fn train(
     let timer = Timer::start();
     let mut hist = History::default();
     let mut aug_rng = Pcg32::seeded(cfg.seed ^ 0xAA99);
+    // logits/gradient tensors are reused across every step: together
+    // with the model-held scratch this makes the steady-state epoch
+    // loop allocation-free apart from batch assembly
+    let mut logits = Tensor::empty();
+    let mut glogits = Tensor::empty();
     for epoch in 0..cfg.epochs {
         let opt = Sgd {
             lr: cfg.schedule.lr_at(epoch, cfg.epochs),
@@ -117,8 +125,8 @@ pub fn train(
             if cfg.augment {
                 augment_if_image(&mut x, cfg.augment_pad, &mut aug_rng);
             }
-            let logits = model.forward(&x, true);
-            let (loss, glogits) = softmax_xent(&logits, &y);
+            model.forward_into(&x, true, &mut logits);
+            let loss = softmax_xent_into(&logits, &y, &mut glogits);
             model.backward(&glogits);
             model.step(&opt);
             loss_sum += loss as f64 * y.len() as f64;

@@ -8,6 +8,11 @@
 //! batch columns ([`crate::nn::sparse`]), and this layer shards request
 //! traffic over backend replicas — so throughput scales with both
 //! threads-per-forward (`SOBOLNET_THREADS`) and workers-per-server.
+//! All worker shards dispatch onto the single process-wide persistent
+//! pool of [`crate::util::parallel`] (one job at a time, each using
+//! every pool thread), so per-forward fan-out costs a park/wake
+//! round-trip instead of thread spawns even at batch sizes of a few
+//! thousand edge-work units.
 //!
 //! Architecture (one [`ShardedServer`]):
 //!
@@ -68,6 +73,12 @@ pub trait InferenceBackend {
 }
 
 /// Blanket adapter for pure-rust [`crate::nn::Model`]s.
+///
+/// Holds reusable input/output tensors, so on the serve hot path each
+/// batch costs one forward pass plus a single logits copy — the model's
+/// own scratch (e.g. `SparseMlp`) allocates nothing once warm, and the
+/// forward fans out on the shared process-wide worker pool of
+/// [`crate::util::parallel`].
 pub struct ModelBackend<M: crate::nn::Model + Send> {
     /// Wrapped model.
     pub model: M,
@@ -77,6 +88,25 @@ pub struct ModelBackend<M: crate::nn::Model + Send> {
     pub features: usize,
     /// Output classes.
     pub classes: usize,
+    /// Reused `[capacity, features]` input staging tensor.
+    xbuf: crate::nn::tensor::Tensor,
+    /// Reused logits tensor.
+    obuf: crate::nn::tensor::Tensor,
+}
+
+impl<M: crate::nn::Model + Send> ModelBackend<M> {
+    /// Wrap `model` behind a fixed `[capacity × features] →
+    /// [capacity × classes]` serving contract.
+    pub fn new(model: M, capacity: usize, features: usize, classes: usize) -> Self {
+        ModelBackend {
+            model,
+            capacity,
+            features,
+            classes,
+            xbuf: crate::nn::tensor::Tensor::empty(),
+            obuf: crate::nn::tensor::Tensor::empty(),
+        }
+    }
 }
 
 impl<M: crate::nn::Model + Send> InferenceBackend for ModelBackend<M> {
@@ -93,8 +123,14 @@ impl<M: crate::nn::Model + Send> InferenceBackend for ModelBackend<M> {
     }
 
     fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
-        let t = crate::nn::tensor::Tensor::from_vec(x.to_vec(), &[self.capacity, self.features]);
-        self.model.forward(&t, false).data
+        assert_eq!(x.len(), self.capacity * self.features, "infer_batch input shape");
+        self.xbuf.shape.clear();
+        self.xbuf.shape.push(self.capacity);
+        self.xbuf.shape.push(self.features);
+        self.xbuf.data.clear();
+        self.xbuf.data.extend_from_slice(x);
+        self.model.forward_into(&self.xbuf, false, &mut self.obuf);
+        self.obuf.data.clone()
     }
 }
 

@@ -1,11 +1,40 @@
-//! Minimal data-parallel helper (the `rayon` substrate): split a range
-//! of work items across `std::thread::scope` threads.
+//! Data-parallel helpers (the `rayon` substrate) backed by a
+//! **persistent worker pool**: long-lived threads parked on a condvar,
+//! woken per dispatch, with chunk claiming under a mutex.
 //!
-//! Used by the matmul kernel and the batch loops of the pure-rust
-//! engine.  Thread count defaults to the machine parallelism, capped by
-//! `SOBOLNET_THREADS`.
+//! Earlier revisions spawned a fresh `std::thread::scope` per call,
+//! which put ~tens of microseconds of spawn/join cost on every forward
+//! pass and forced the sparse engine to gate parallelism behind a large
+//! `PAR_MIN_WORK` threshold.  The pool amortizes that cost to a
+//! wake/park round-trip, so small-batch serving and the backward pass
+//! profit from threads too.
+//!
+//! Used by the matmul kernel, the conv/batch loops, and the
+//! column-sharded forward/backward of [`crate::nn::sparse`].  Thread
+//! count defaults to the machine parallelism, capped by
+//! `SOBOLNET_THREADS` and overridable at runtime via
+//! [`set_num_threads`] (the pool grows on demand and never shrinks;
+//! each dispatch admits at most `threads − 1` workers, so surplus
+//! workers park through it and a lowered thread target is honored even
+//! when chunks outnumber threads).  A chunk panic on a worker is
+//! re-raised on the dispatching thread once the region completes, like
+//! the scoped-thread implementation it replaces.
+//!
+//! Guarantees relied on elsewhere:
+//!
+//! * **Exact chunk boundaries.**  [`parallel_chunks`] partitions `0..n`
+//!   at multiples of `chunk` regardless of the thread count, and the
+//!   sequential fallback iterates the *same* boundaries — callers can
+//!   key per-chunk shadow buffers off `start / chunk` and get
+//!   bitwise-deterministic reductions for every `SOBOLNET_THREADS`.
+//! * **Nested calls run inline.**  A `parallel_*` call from inside a
+//!   worker (or from the dispatching thread while it helps execute
+//!   chunks) degrades to the sequential path instead of deadlocking on
+//!   the single job slot.
+//! * **Zero work is safe.**  `n == 0` dispatches nothing.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
 
 static CACHED_THREADS: AtomicUsize = AtomicUsize::new(0);
 
@@ -26,12 +55,13 @@ pub fn num_threads() -> usize {
 
 /// Override the worker-thread count at runtime (wins over the
 /// `SOBOLNET_THREADS` environment variable).  Used by benches and tests
-/// to sweep thread scaling within one process; clamped to ≥ 1.
+/// to sweep thread scaling within one process; clamped to ≥ 1.  The
+/// pool resizes lazily: the next dispatch spawns missing workers.
 pub fn set_num_threads(n: usize) {
     CACHED_THREADS.store(n.max(1), Ordering::Relaxed);
 }
 
-/// Raw mutable pointer that may cross scoped-thread boundaries.
+/// Raw mutable pointer that may cross thread boundaries.
 ///
 /// Safety contract: every thread must write only to index ranges
 /// disjoint from all other threads' (the [`parallel_ranges`] pattern:
@@ -54,26 +84,351 @@ impl<T> SendPtr<T> {
     }
 }
 
-/// Run `f(start, end)` over disjoint chunks of `0..n` on worker threads.
-/// `f` must be `Sync` (it receives disjoint ranges, so data writes should
-/// be pre-partitioned by the caller, e.g. via `chunks_mut`).
+impl<T> std::fmt::Debug for SendPtr<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SendPtr({:p})", self.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------------
+
+/// One dispatched parallel region: a type-erased `Fn(usize, usize)`
+/// living on the dispatcher's stack.  Valid only while that dispatch is
+/// active — the dispatcher does not return (or unwind) past its
+/// [`ActiveJob`] guard until every claimed chunk has finished.
+#[derive(Clone, Copy)]
+struct Job {
+    call: unsafe fn(*const (), usize, usize),
+    data: *const (),
+    n: usize,
+    chunk: usize,
+}
+
+// Safety: `data` is only dereferenced through `call` while the
+// dispatching thread keeps the closure alive (see `ActiveJob`), and the
+// closure itself is required to be `Sync` by the public entry points.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Monotone dispatch generation; workers remember the last one they
+    /// looked at so a stale worker never claims chunks of a new job.
+    gen: u64,
+    /// The single active job slot (`None` between dispatches).
+    job: Option<Job>,
+    /// Next unclaimed index (multiple of `job.chunk` from 0).
+    next: usize,
+    /// Claimed-but-unfinished chunks.
+    remaining: usize,
+    /// Workers that joined the current generation (capped by `limit`,
+    /// so a dispatch never runs wider than its thread target even when
+    /// the pool holds more parked workers).
+    joined: usize,
+    /// Max workers allowed to join the current generation
+    /// (thread target − 1; the dispatcher itself is the +1).
+    limit: usize,
+    /// A chunk of the current dispatch panicked on a worker; re-raised
+    /// on the dispatcher after completion.
+    panicked: bool,
+    /// Worker threads alive (dispatchers are not counted).
+    spawned: usize,
+    /// Completed dispatches (observability / tests).
+    dispatches: u64,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    /// Workers park here waiting for a new generation.
+    work_cv: Condvar,
+    /// Dispatchers park here waiting for `remaining == 0` (and queued
+    /// dispatchers wait here for the job slot to free up).
+    done_cv: Condvar,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState {
+            gen: 0,
+            job: None,
+            next: 0,
+            remaining: 0,
+            joined: 0,
+            limit: 0,
+            panicked: false,
+            spawned: 0,
+            dispatches: 0,
+        }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+    })
+}
+
+/// Poison-immune lock: a worker can only panic inside caller code while
+/// *not* holding the state lock, but be robust anyway.
+fn lock(p: &Pool) -> MutexGuard<'_, PoolState> {
+    p.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+thread_local! {
+    /// True while this thread is executing chunks of a parallel region
+    /// (worker, or dispatcher helping).  Nested `parallel_*` calls then
+    /// run inline instead of re-entering the pool.
+    static IN_PARALLEL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn in_parallel() -> bool {
+    IN_PARALLEL.with(|c| c.get())
+}
+
+/// Restores the thread-local nesting flag even if a chunk panics.
+struct ParallelFlagGuard;
+
+impl ParallelFlagGuard {
+    fn enter() -> ParallelFlagGuard {
+        IN_PARALLEL.with(|c| c.set(true));
+        ParallelFlagGuard
+    }
+}
+
+impl Drop for ParallelFlagGuard {
+    fn drop(&mut self) {
+        IN_PARALLEL.with(|c| c.set(false));
+    }
+}
+
+/// Marks one claimed chunk finished on drop — including on unwind, so a
+/// panicking chunk cannot strand the dispatcher in its completion wait.
+struct ChunkDoneGuard(&'static Pool);
+
+impl Drop for ChunkDoneGuard {
+    fn drop(&mut self) {
+        let mut st = lock(self.0);
+        if std::thread::panicking() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.0.done_cv.notify_all();
+        }
+    }
+}
+
+/// Dispatcher-side guard: waits out stragglers and frees the job slot,
+/// on the normal path and on unwind alike, so `Job::data` never
+/// outlives the closure it points into.
+struct ActiveJob(&'static Pool);
+
+impl Drop for ActiveJob {
+    fn drop(&mut self) {
+        let mut st = lock(self.0);
+        // Cancel chunks nobody has claimed yet.  On the normal path the
+        // dispatcher's help loop already drained them (no-op); on the
+        // unwind path this prevents waiting forever on work no thread
+        // will ever take (e.g. worker spawn failed entirely).
+        if let Some(j) = st.job {
+            if st.next < j.n {
+                let unclaimed = (j.n - st.next + j.chunk - 1) / j.chunk;
+                st.next = j.n;
+                st.remaining -= unclaimed;
+            }
+        }
+        while st.remaining > 0 {
+            st = self.0.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        st.dispatches += 1;
+        // wake dispatchers queued on the job slot
+        self.0.done_cv.notify_all();
+    }
+}
+
+fn worker_main() {
+    let pool = pool();
+
+    /// Keeps `spawned` truthful if a chunk panic kills this worker, so
+    /// a later dispatch spawns a replacement.
+    struct Alive(&'static Pool);
+    impl Drop for Alive {
+        fn drop(&mut self) {
+            lock(self.0).spawned -= 1;
+        }
+    }
+    let _alive = Alive(pool);
+
+    let mut seen = 0u64;
+    loop {
+        let mut st = lock(pool);
+        loop {
+            if st.gen != seen {
+                match st.job {
+                    // join only while the dispatch is below its thread
+                    // target — surplus parked workers sit this one out
+                    Some(j) if st.next < j.n && st.joined < st.limit => {
+                        st.joined += 1;
+                        break;
+                    }
+                    _ => seen = st.gen, // nothing (left) for us here
+                }
+            }
+            st = pool.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        seen = st.gen;
+        let job = st.job.expect("claimable job");
+        let _flag = ParallelFlagGuard::enter();
+        loop {
+            // claim under the lock; generations guard against claiming
+            // chunks of a newer job with this job's closure
+            if st.gen != seen || st.next >= job.n {
+                break;
+            }
+            let start = st.next;
+            let end = (start + job.chunk).min(job.n);
+            st.next = end;
+            drop(st);
+            {
+                let _done = ChunkDoneGuard(pool);
+                unsafe { (job.call)(job.data, start, end) };
+            }
+            st = lock(pool);
+        }
+        drop(st);
+    }
+}
+
+unsafe fn invoke<F: Fn(usize, usize)>(data: *const (), start: usize, end: usize) {
+    (*(data as *const F))(start, end)
+}
+
+/// Dispatch `f` over `0..n` in `chunk`-sized pieces on the pool.  The
+/// calling thread installs the job, helps execute chunks, then waits
+/// for stragglers.  Requires `threads ≥ 2`, `n ≥ 1`, `chunk ≥ 1`.
+fn run_pool<F: Fn(usize, usize) + Sync>(n: usize, chunk: usize, threads: usize, f: &F) {
+    let pool = pool();
+    let job = Job { call: invoke::<F>, data: f as *const F as *const (), n, chunk };
+    let nchunks = (n + chunk - 1) / chunk;
+
+    let mut st = lock(pool);
+    // single job slot: queue behind any active dispatch
+    while st.job.is_some() {
+        st = pool.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+    // grow the pool to the requested width (never shrinks; surplus
+    // workers claim nothing and park again)
+    let want = threads.saturating_sub(1);
+    while st.spawned < want {
+        let name = format!("sobolnet-pool-{}", st.spawned);
+        match std::thread::Builder::new().name(name).spawn(worker_main) {
+            Ok(handle) => {
+                drop(handle); // detached; lives for the process
+                st.spawned += 1;
+            }
+            Err(_) => break, // resource limit: proceed with what we have
+        }
+    }
+    st.gen = st.gen.wrapping_add(1);
+    st.job = Some(job);
+    st.next = 0;
+    st.remaining = nchunks;
+    st.joined = 0;
+    st.limit = want;
+    st.panicked = false;
+    pool.work_cv.notify_all();
+
+    // From here on the job slot MUST be cleaned up exactly once, even
+    // if `f` panics on this thread — ActiveJob's drop waits for the
+    // workers and frees the slot.
+    let active = ActiveJob(pool);
+    {
+        let _flag = ParallelFlagGuard::enter();
+        loop {
+            if st.next >= n {
+                break;
+            }
+            let start = st.next;
+            let end = (start + chunk).min(n);
+            st.next = end;
+            drop(st);
+            {
+                let _done = ChunkDoneGuard(pool);
+                f(start, end);
+            }
+            st = lock(pool);
+        }
+        drop(st);
+    }
+    // Normal path: wait out stragglers while the slot is still ours so
+    // a worker-side chunk panic can be re-raised here (ActiveJob's drop
+    // stays the unwind path and must not panic).
+    let worker_panicked = {
+        let mut st = lock(pool);
+        while st.remaining > 0 {
+            st = pool.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.panicked
+    };
+    drop(active); // clear the slot, count the dispatch
+    if worker_panicked {
+        panic!("worker pool: a parallel chunk panicked on a worker thread; results are incomplete");
+    }
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on the worker
+/// pool.  `f` must be `Sync` (it receives disjoint ranges, so data
+/// writes should be pre-partitioned by the caller, e.g. via
+/// `chunks_mut` or [`SendPtr`]).  Chunk sizes derive from the current
+/// thread count; when the *values* computed depend on chunk boundaries
+/// (reductions), use [`parallel_chunks`] instead.
+///
+/// Runs inline when `n <= min_chunk`, when only one thread is
+/// configured, or when called from inside another parallel region.
 pub fn parallel_ranges<F: Fn(usize, usize) + Sync>(n: usize, min_chunk: usize, f: F) {
     let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n <= min_chunk {
+    if threads <= 1 || n <= min_chunk || in_parallel() {
         f(0, n);
         return;
     }
-    let chunk = (n + threads - 1) / threads;
-    let chunk = chunk.max(min_chunk);
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut start = 0;
-        while start < n {
-            let end = (start + chunk).min(n);
-            s.spawn(move || f(start, end));
-            start = end;
-        }
-    });
+    let chunk = ((n + threads - 1) / threads).max(min_chunk).max(1);
+    run_pool(n, chunk, threads, &f);
+}
+
+/// Run `f(start, end)` over **fixed** `chunk`-aligned pieces of `0..n`:
+/// every call sees `start % chunk == 0` and `end - start <= chunk`,
+/// independent of the thread count, and the single-thread/nested
+/// fallback iterates the exact same boundaries in order.
+///
+/// This is the deterministic-reduction primitive: callers may index
+/// per-chunk shadow accumulators by `start / chunk` and merge them in
+/// fixed chunk order, making the result bitwise identical for every
+/// `SOBOLNET_THREADS` setting (see `SparseMlp::backward`).
+pub fn parallel_chunks<F: Fn(usize, usize) + Sync>(n: usize, chunk: usize, f: F) {
+    assert!(chunk > 0, "chunk must be positive");
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads();
+    if threads <= 1 || n <= chunk || in_parallel() {
+        sequential_chunks(n, chunk, &f);
+        return;
+    }
+    run_pool(n, chunk, threads, &f);
+}
+
+/// Iterate `f(start, end)` over the exact same `chunk`-aligned
+/// boundaries as [`parallel_chunks`], on the calling thread.  The
+/// single source of truth for chunk geometry: callers that gate
+/// parallelism themselves (work thresholds) use this for the inline
+/// path so both paths see identical boundaries.
+pub fn sequential_chunks<F: FnMut(usize, usize)>(n: usize, chunk: usize, mut f: F) {
+    assert!(chunk > 0, "chunk must be positive");
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        f(start, end);
+        start = end;
+    }
 }
 
 /// Map over mutable row-chunks of `data` (each of `row_len` floats) in
@@ -81,30 +436,46 @@ pub fn parallel_ranges<F: Fn(usize, usize) + Sync>(n: usize, min_chunk: usize, f
 pub fn parallel_rows<F: Fn(usize, &mut [f32]) + Sync>(data: &mut [f32], row_len: usize, f: F) {
     assert!(row_len > 0 && data.len() % row_len == 0);
     let rows = data.len() / row_len;
-    let threads = num_threads().min(rows.max(1));
-    if threads <= 1 {
-        for (r, row) in data.chunks_mut(row_len).enumerate() {
-            f(r, row);
-        }
+    if rows == 0 {
         return;
     }
-    let per = (rows + threads - 1) / threads;
-    std::thread::scope(|s| {
-        let f = &f;
-        for (t, block) in data.chunks_mut(per * row_len).enumerate() {
-            s.spawn(move || {
-                for (i, row) in block.chunks_mut(row_len).enumerate() {
-                    f(t * per + i, row);
-                }
-            });
+    let p = SendPtr::new(data.as_mut_ptr());
+    parallel_ranges(rows, 1, |r0, r1| {
+        for r in r0..r1 {
+            // Safety: disjoint row ranges per chunk; `data` is borrowed
+            // mutably for the whole call.
+            let row =
+                unsafe { std::slice::from_raw_parts_mut(p.get().add(r * row_len), row_len) };
+            f(r, row);
         }
     });
+}
+
+/// Pool observability for tests and benches: `(worker threads alive,
+/// completed dispatches)`.  Both are process-global; `spawned` is
+/// monotone while no worker panics and is bounded by the largest thread
+/// target any dispatch has used, minus one (the dispatcher itself).
+pub fn pool_stats() -> (usize, u64) {
+    let st = lock(pool());
+    (st.spawned, st.dispatches)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+
+    /// Serializes every test that mutates the process-global thread
+    /// count or asserts on `pool_stats` (other tests in this binary may
+    /// dispatch concurrently, but they leave the thread count alone).
+    static POOL_SHAPE_LOCK: Mutex<()> = Mutex::new(());
+
+    /// A thread target no concurrent test exceeds: every other dispatch
+    /// in this binary uses at most the machine parallelism (or small
+    /// explicit overrides ≤ 8).
+    fn max_target() -> usize {
+        std::thread::available_parallelism().map_or(1, |n| n.get()).max(8)
+    }
 
     #[test]
     fn ranges_cover_everything_once() {
@@ -146,6 +517,7 @@ mod tests {
 
     #[test]
     fn set_num_threads_overrides_and_clamps() {
+        let _guard = POOL_SHAPE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let before = num_threads();
         set_num_threads(3);
         assert_eq!(num_threads(), 3);
@@ -165,5 +537,144 @@ mod tests {
             }
         });
         assert!(data.iter().enumerate().all(|(i, &v)| v == i as u32));
+    }
+
+    #[test]
+    fn pool_reuses_threads_across_dispatches() {
+        let _guard = POOL_SHAPE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let ambient = num_threads();
+        // grow the pool to the binary-wide max once, then verify that
+        // further dispatches reuse the same threads
+        set_num_threads(max_target());
+        let sink = AtomicU64::new(0);
+        let work = |a: usize, b: usize| {
+            sink.fetch_add((b - a) as u64, Ordering::Relaxed);
+        };
+        parallel_ranges(1 << 12, 1, work);
+        let (spawned_warm, dispatches_warm) = pool_stats();
+        assert!(spawned_warm >= max_target() - 1, "pool grew to the target width");
+        for _ in 0..8 {
+            parallel_ranges(1 << 12, 1, work);
+        }
+        let (spawned_after, dispatches_after) = pool_stats();
+        assert_eq!(spawned_after, spawned_warm, "no re-spawn on later dispatches");
+        assert!(dispatches_after >= dispatches_warm + 8, "dispatches counted");
+        set_num_threads(ambient);
+    }
+
+    #[test]
+    fn resize_mid_process_takes_effect() {
+        let _guard = POOL_SHAPE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let ambient = num_threads();
+        let run = |n: usize| {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            parallel_ranges(n, 1, |a, b| {
+                for i in a..b {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        };
+        set_num_threads(2);
+        run(4096);
+        set_num_threads(6);
+        run(4096);
+        let (spawned, _) = pool_stats();
+        assert!(spawned >= 5, "pool grew after set_num_threads(6), spawned={spawned}");
+        set_num_threads(1);
+        run(64); // sequential path still covers everything
+        set_num_threads(ambient);
+    }
+
+    #[test]
+    fn nested_calls_run_inline_without_deadlock() {
+        let hits: Vec<AtomicU64> = (0..64 * 64).map(|_| AtomicU64::new(0)).collect();
+        let hits = &hits;
+        parallel_ranges(64, 1, |a, b| {
+            for outer in a..b {
+                // nested: must run inline on this thread, not re-enter
+                // the single job slot
+                parallel_ranges(64, 1, |c, d| {
+                    for inner in c..d {
+                        hits[outer * 64 + inner].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_work_is_a_noop() {
+        let hits = AtomicU64::new(0);
+        parallel_ranges(0, 4, |a, b| {
+            hits.fetch_add((b - a) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0);
+        parallel_chunks(0, 4, |_, _| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0);
+        parallel_rows(&mut [], 8, |_, _| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fixed_chunks_have_stable_boundaries() {
+        let _guard = POOL_SHAPE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let ambient = num_threads();
+        let collect = |threads: usize| {
+            set_num_threads(threads);
+            let seen = Mutex::new(Vec::new());
+            parallel_chunks(103, 8, |a, b| {
+                seen.lock().unwrap().push((a, b));
+            });
+            let mut v = seen.into_inner().unwrap();
+            v.sort_unstable();
+            v
+        };
+        let one = collect(1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(collect(threads), one, "threads={threads}");
+        }
+        set_num_threads(ambient);
+        assert_eq!(one.len(), 13); // ceil(103 / 8)
+        for (i, &(a, b)) in one.iter().enumerate() {
+            assert_eq!(a, i * 8);
+            assert_eq!(b, ((i + 1) * 8).min(103));
+        }
+    }
+
+    #[test]
+    fn chunk_dispatch_respects_thread_cap() {
+        let _guard = POOL_SHAPE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let ambient = num_threads();
+        // make sure the pool already holds more workers than the cap
+        set_num_threads(max_target());
+        parallel_ranges(1 << 12, 1, |_, _| {});
+        // a 2-thread dispatch with many more chunks than threads must
+        // still run on at most 2 distinct threads
+        set_num_threads(2);
+        let ids = Mutex::new(std::collections::HashSet::new());
+        parallel_chunks(256, 1, |_, _| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+        let n = ids.into_inner().unwrap().len();
+        assert!(n <= 2, "2-thread dispatch ran on {n} distinct threads");
+        set_num_threads(ambient);
+    }
+
+    #[test]
+    #[should_panic]
+    fn chunk_panic_propagates_to_dispatcher() {
+        let _guard = POOL_SHAPE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_num_threads(4);
+        parallel_ranges(1 << 10, 1, |a, _| {
+            if a == 0 {
+                panic!("boom");
+            }
+        });
     }
 }

@@ -1,0 +1,103 @@
+//! Steady-state allocation audit of the sparse training hot path.
+//!
+//! After a warm-up step sizes the model-held scratch (activation/
+//! gradient layer buffers, shadow accumulators, transpose staging) and
+//! the reused logits/gradient tensors, a full train step —
+//! `forward_into` + `softmax_xent_into` + `backward` + `step` — must
+//! perform **zero** heap allocation, including on the worker-pool
+//! threads the passes fan out to.  A counting `#[global_allocator]`
+//! (all threads) pins this.
+//!
+//! This file deliberately contains a single test: any concurrent test
+//! in the same binary would allocate and pollute the global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use sobolnet::nn::init::Init;
+use sobolnet::nn::loss::softmax_xent_into;
+use sobolnet::nn::optim::Sgd;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::topology::{PathSource, TopologyBuilder};
+use sobolnet::util::parallel::set_num_threads;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_train_step_does_not_allocate() {
+    // large enough that forward AND backward take the pooled parallel
+    // path (2048 × 64 × 3 edge-work ≫ PAR_MIN_WORK)
+    let topo = TopologyBuilder::new(&[64, 128, 128, 10])
+        .paths(2048)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .build();
+    let mut net = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::UniformRandom, seed: 11, bias: true, freeze_signs: false },
+    );
+    set_num_threads(4);
+    let batch = 64usize;
+    let x = Tensor::from_vec(
+        (0..batch * 64).map(|i| ((i as f32) * 0.013).sin()).collect(),
+        &[batch, 64],
+    );
+    let labels: Vec<u32> = (0..batch as u32).map(|i| i % 10).collect();
+    let opt = Sgd { lr: 0.01, momentum: 0.9, weight_decay: 1e-4 };
+    let mut logits = Tensor::empty();
+    let mut glogits = Tensor::empty();
+
+    let step = |net: &mut SparseMlp, logits: &mut Tensor, glogits: &mut Tensor| {
+        net.forward_into(&x, true, logits);
+        let loss = softmax_xent_into(logits, &labels, glogits);
+        net.backward(glogits);
+        net.step(&opt);
+        loss
+    };
+
+    // warm-up: sizes every scratch buffer and spawns the pool threads
+    for _ in 0..3 {
+        step(&mut net, &mut logits, &mut glogits);
+    }
+
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    let mut loss_sink = 0.0f32;
+    for _ in 0..5 {
+        loss_sink += step(&mut net, &mut logits, &mut glogits);
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert!(loss_sink.is_finite());
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state train step allocated {} time(s) in 5 steps",
+        after - before
+    );
+}

@@ -1,0 +1,234 @@
+//! Backward-pass determinism and golden-value tests.
+//!
+//! The column-sharded `SparseMlp::backward` must produce `gw`, `gb`,
+//! and the propagated input gradient `gz` **bitwise identical** for
+//! every `SOBOLNET_THREADS` ∈ {1, 2, 4, 8} (the shard partition and the
+//! shadow-merge order depend only on the batch size), and must match
+//! the pre-shard single-threaded reference — the seed implementation's
+//! full-batch accumulation order, re-implemented naively here — to
+//! 1e-6.
+//!
+//! The network comes from the checked-in jnp-oracle fixture
+//! (`tests/fixtures/sparse_forward_golden.json`), tiled along the batch
+//! so the run clears the engine's parallel-work threshold and spans
+//! many backward shards.
+
+use sobolnet::config::json::{self, JsonValue};
+use sobolnet::nn::init::Init;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::topology::{PathSource, PathTopology};
+use sobolnet::util::parallel::set_num_threads;
+
+const FIXTURE: &str = include_str!("fixtures/sparse_forward_golden.json");
+
+/// Both tests sweep the process-global thread count; serialize them so
+/// neither observes the other's setting mid-sweep.
+static THREADS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn usizes(v: &JsonValue) -> Vec<usize> {
+    v.as_array().expect("array").iter().map(|x| x.as_usize().expect("usize")).collect()
+}
+
+fn f32s(v: &JsonValue) -> Vec<f32> {
+    v.as_array().expect("array").iter().map(|x| x.as_f64().expect("f64") as f32).collect()
+}
+
+fn nested<T, F: Fn(&JsonValue) -> Vec<T>>(v: &JsonValue, inner: F) -> Vec<Vec<T>> {
+    v.as_array().expect("array").iter().map(inner).collect()
+}
+
+/// Fixture network (bias-free, Fig 3) plus its input rows.
+fn net_from_fixture() -> (SparseMlp, Vec<Vec<f32>>) {
+    let fx = json::parse(FIXTURE).expect("fixture parses");
+    let layer_sizes = usizes(fx.get("layer_sizes").unwrap());
+    let paths = fx.get("paths").unwrap().as_usize().unwrap();
+    let index: Vec<Vec<u32>> = nested(fx.get("index").unwrap(), |l| {
+        usizes(l).into_iter().map(|v| v as u32).collect()
+    });
+    let topo = PathTopology {
+        layer_sizes,
+        paths,
+        index,
+        signs: None,
+        source: PathSource::Random { seed: 0 },
+        dims_used: None,
+    };
+    let mut net = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantPositive, seed: 0, bias: false, freeze_signs: false },
+    );
+    let weights = nested(fx.get("weights").unwrap(), f32s);
+    assert_eq!(weights.len(), net.w.len());
+    for (t, wt) in weights.iter().enumerate() {
+        net.w[t].copy_from_slice(wt);
+    }
+    let inputs = nested(fx.get("inputs").unwrap(), f32s);
+    (net, inputs)
+}
+
+/// Tile the fixture rows `copies`× so the batch clears the engine's
+/// parallel-work threshold and spans many fixed-width backward shards.
+fn tiled_batch(inputs: &[Vec<f32>], copies: usize) -> (Tensor, usize) {
+    let base = inputs.len();
+    let features = inputs[0].len();
+    let batch = base * copies;
+    let mut flat: Vec<f32> = Vec::with_capacity(batch * features);
+    for _ in 0..copies {
+        flat.extend(inputs.iter().flatten().copied());
+    }
+    (Tensor::from_vec(flat, &[batch, features]), batch)
+}
+
+/// Deterministic, small loss gradient (amplitude 0.01 keeps the
+/// accumulated sums ≲ O(1), far from cancellation trouble).
+fn make_glogits(batch: usize, classes: usize) -> Tensor {
+    Tensor::from_vec(
+        (0..batch * classes).map(|i| 0.01 * ((i as f32) * 0.37).sin()).collect(),
+        &[batch, classes],
+    )
+}
+
+/// Run forward(train)+backward on a fresh fixture net at the given
+/// thread count; return `(gw, gb, input_grad)`.
+fn grads_at(
+    threads: usize,
+    x: &Tensor,
+    glogits: &Tensor,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<f32>) {
+    set_num_threads(threads);
+    let (mut net, _) = net_from_fixture();
+    net.forward(x, true);
+    net.backward(glogits);
+    (
+        net.weight_grads().to_vec(),
+        net.bias_grads().to_vec(),
+        net.input_grad().expect("input grad after backward").to_vec(),
+    )
+}
+
+fn bits2(v: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    v.iter().map(|row| row.iter().map(|f| f.to_bits()).collect()).collect()
+}
+
+#[test]
+fn backward_is_bitwise_invariant_across_thread_counts() {
+    let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ambient = sobolnet::util::parallel::num_threads();
+    let (net, inputs) = net_from_fixture();
+    let classes = *net.topo.layer_sizes.last().unwrap();
+    drop(net);
+    // 32 copies of the 5 fixture rows: batch 160 = 20 shards of 8
+    // columns; 48 paths × 160 × 3 transitions clears PAR_MIN_WORK
+    let (x, batch) = tiled_batch(&inputs, 32);
+    let glogits = make_glogits(batch, classes);
+
+    let (gw1, gb1, gz1) = grads_at(1, &x, &glogits);
+    for threads in [2usize, 4, 8] {
+        let (gw, gb, gz) = grads_at(threads, &x, &glogits);
+        assert_eq!(bits2(&gw), bits2(&gw1), "threads={threads}: gw not bitwise stable");
+        assert_eq!(bits2(&gb), bits2(&gb1), "threads={threads}: gb not bitwise stable");
+        assert_eq!(
+            gz.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            gz1.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            "threads={threads}: propagated gz not bitwise stable"
+        );
+    }
+    set_num_threads(ambient);
+}
+
+#[test]
+fn backward_matches_naive_single_threaded_reference() {
+    let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ambient = sobolnet::util::parallel::num_threads();
+    let (net, inputs) = net_from_fixture();
+    let classes = *net.topo.layer_sizes.last().unwrap();
+    let (x, batch) = tiled_batch(&inputs, 32);
+    let glogits = make_glogits(batch, classes);
+    let (gw_ref, gz_ref) = naive_backward(&net, &x, &glogits);
+    drop(net);
+
+    for threads in [1usize, 8] {
+        let (gw, _gb, gz) = grads_at(threads, &x, &glogits);
+        for (t, (got_t, want_t)) in gw.iter().zip(&gw_ref).enumerate() {
+            for (p, (got, want)) in got_t.iter().zip(want_t).enumerate() {
+                assert!(
+                    (got - want).abs() <= 1e-6 * (1.0 + want.abs()),
+                    "threads={threads} gw[{t}][{p}]: {got} vs naive {want}"
+                );
+            }
+        }
+        for (i, (got, want)) in gz.iter().zip(&gz_ref).enumerate() {
+            assert!(
+                (got - want).abs() <= 1e-6 * (1.0 + want.abs()),
+                "threads={threads} gz[{i}]: {got} vs naive {want}"
+            );
+        }
+    }
+    set_num_threads(ambient);
+}
+
+/// The seed implementation's backward, verbatim in spirit: full-batch
+/// `[n, B]` buffers, per-path `gacc` accumulated over the *whole* batch
+/// in column order, bias-free (the fixture network has no biases).
+/// Returns `(gw, gz_input)`.
+fn naive_backward(net: &SparseMlp, x: &Tensor, glogits: &Tensor) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let sizes = &net.topo.layer_sizes;
+    let t_cnt = sizes.len() - 1;
+    let b = x.batch();
+    let paths = net.topo.paths;
+
+    // forward, caching [n, B] activations per layer
+    let mut z: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0.0f32; n * b]).collect();
+    for bi in 0..b {
+        for (i, &v) in x.row(bi).iter().enumerate() {
+            z[0][i * b + bi] = v;
+        }
+    }
+    for t in 0..t_cnt {
+        let (prev, next) = {
+            let (a, c) = z.split_at_mut(t + 1);
+            (&a[t], &mut c[0])
+        };
+        for p in 0..paths {
+            let s = net.topo.index[t][p] as usize * b;
+            let d = net.topo.index[t + 1][p] as usize * b;
+            let w = net.w[t][p];
+            for bi in 0..b {
+                let v = prev[s + bi];
+                if v > 0.0 {
+                    next[d + bi] += w * v;
+                }
+            }
+        }
+    }
+
+    // backward, seed accumulation order
+    let mut gz = vec![0.0f32; sizes[t_cnt] * b];
+    for bi in 0..b {
+        for (i, &v) in glogits.row(bi).iter().enumerate() {
+            gz[i * b + bi] = v;
+        }
+    }
+    let mut gw: Vec<Vec<f32>> = net.w.iter().map(|wt| vec![0.0f32; wt.len()]).collect();
+    for t in (0..t_cnt).rev() {
+        let mut gprev = vec![0.0f32; sizes[t] * b];
+        for p in 0..paths {
+            let s = net.topo.index[t][p] as usize * b;
+            let d = net.topo.index[t + 1][p] as usize * b;
+            let w = net.w[t][p];
+            let mut gacc = 0.0f32;
+            for bi in 0..b {
+                let v = z[t][s + bi];
+                let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
+                let g = gz[d + bi] * gate;
+                gacc += g * v;
+                gprev[s + bi] += w * g;
+            }
+            gw[t][p] += gacc;
+        }
+        gz = gprev;
+    }
+    (gw, gz)
+}

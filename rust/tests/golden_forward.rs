@@ -75,9 +75,10 @@ fn forward_matches_ref_py_fixture_for_any_thread_count() {
     let classes = expected[0].len();
 
     // Tile the fixture rows until paths × batch × transitions clears the
-    // engine's PAR_MIN_WORK threshold (1<<17), so the ≥2-thread sweeps
-    // genuinely take the column-sharded parallel path: 48 paths × 3
-    // transitions needs batch ≥ 911 — use 204 copies of the 5 rows.
+    // engine's PAR_MIN_WORK threshold (1<<14 since the persistent-pool
+    // rework; 48 paths × 3 transitions needs batch ≥ 114), so the
+    // ≥2-thread sweeps genuinely take the column-sharded parallel path —
+    // 204 copies of the 5 rows leaves plenty of headroom.
     let copies = 204usize;
     let batch = base * copies;
     let mut flat: Vec<f32> = Vec::with_capacity(batch * features);

@@ -114,7 +114,7 @@ fn server_serves_trained_sparse_model_correctly() {
         })
         .collect();
     // served predictions must match exactly
-    let backend = ModelBackend { model: net, capacity: 16, features: 784, classes: 10 };
+    let backend = ModelBackend::new(net, 16, 784, 10);
     let server = InferenceServer::start(Box::new(backend), ServerConfig::default());
     for i in 0..te.len() {
         let y = server.infer(te.x.row(i).to_vec());

@@ -56,12 +56,7 @@ fn sharded_server_matches_sequential_reference_bitwise() {
     let net = make_net();
     let server = Arc::new(ShardedServer::start_sharded_with(
         move || -> Box<dyn InferenceBackend> {
-            Box::new(ModelBackend {
-                model: net.clone(),
-                capacity: 8,
-                features: FEATURES,
-                classes: CLASSES,
-            })
+            Box::new(ModelBackend::new(net.clone(), 8, FEATURES, CLASSES))
         },
         ServeConfig {
             workers: 4,
@@ -112,12 +107,7 @@ fn round_robin_sharding_answers_everything_in_order_of_dispatch() {
     let server = ShardedServer::start_sharded_with(
         move || -> Box<dyn InferenceBackend> {
             // capacity 1: every request is its own full batch (no waits)
-            Box::new(ModelBackend {
-                model: net.clone(),
-                capacity: 1,
-                features: FEATURES,
-                classes: CLASSES,
-            })
+            Box::new(ModelBackend::new(net.clone(), 1, FEATURES, CLASSES))
         },
         ServeConfig {
             workers: 4,
