@@ -1,16 +1,19 @@
 //! Serving example: train the path-sparse MLP briefly via the AOT
-//! artifacts, then stand up the **sharded** inference serving subsystem
-//! (dispatcher + per-worker queues/batchers) over replicas of the
-//! compiled `sparse_forward` executable and fire a concurrent request
-//! load, reporting per-worker and aggregate latency percentiles and
-//! throughput — the serving-paper-shaped deliverable.
+//! artifacts, then stand up the unified **engine** (bounded admission
+//! queues + pluggable dispatch + per-worker adaptive batchers) over
+//! replicas of the compiled `sparse_forward` executable and fire a
+//! concurrent request load through the non-blocking ticket path,
+//! reporting shed counts and merged latency percentiles — the
+//! serving-paper-shaped deliverable.
 //!
 //! Run: `make artifacts && cargo run --release --example serve_sparse`
 
 use sobolnet::coordinator::{AotTrainer, AotTrainerConfig};
 use sobolnet::data::synth::SynthMnist;
+use sobolnet::engine::{
+    AdmissionPolicy, DispatchKind, EngineBuilder, InferenceBackend, RejectReason, Response,
+};
 use sobolnet::nn::init::Init;
-use sobolnet::serve::{Dispatch, InferenceBackend, ServeConfig, ShardedServer};
 use sobolnet::topology::{PathSource, TopologyBuilder};
 use sobolnet::util::timer::Timer;
 use std::sync::Arc;
@@ -45,70 +48,94 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
         let yi: Vec<i32> = te.y.iter().map(|&v| v as i32).collect();
         let acc = trainer.evaluate(&te.x.data, &yi)?;
-        println!("model trained to {:.1}% test acc; launching server", acc * 100.0);
+        println!("model trained to {:.1}% test acc; launching engine", acc * 100.0);
         (trainer.weights()?, b)
     };
 
     // PJRT handles are not Send — each worker shard rebuilds its own
     // executable replica ON its worker thread (the factory is cloned per
     // shard) and installs the trained weights, which are plain f32
-    // vectors and do cross threads.
-    let workers = 2;
+    // vectors and do cross threads.  The engine caps each shard's queue
+    // at 64 requests and sheds the newest on overflow instead of
+    // queueing unboundedly; dispatch is the p99-aware EWMA policy.
     let topo_for_server = topo.clone();
-    let server = Arc::new(ShardedServer::start_sharded_with(
-        move || -> Box<dyn InferenceBackend> {
-            let mut trainer = AotTrainer::new(&cfg, &topo_for_server).expect("artifacts");
-            trainer.set_weights(&trained_w).expect("weights fit");
-            Box::new(trainer.into_backend())
-        },
-        ServeConfig {
-            workers,
-            max_wait: Duration::from_millis(2),
-            dispatch: Dispatch::LeastLoaded,
-        },
-    ));
+    let engine = Arc::new(
+        EngineBuilder::new()
+            .workers(2)
+            .max_wait(Duration::from_millis(2))
+            .queue_depth(64)
+            .admission(AdmissionPolicy::ShedNewest)
+            .dispatch(DispatchKind::EwmaP99)
+            .build_with(move || -> Box<dyn InferenceBackend> {
+                let mut trainer = AotTrainer::new(&cfg, &topo_for_server).expect("artifacts");
+                trainer.set_weights(&trained_w).expect("weights fit");
+                Box::new(trainer.into_backend())
+            }),
+    );
     let b = batch;
 
-    // closed-loop load: 8 client threads × 64 requests each
+    // closed-loop load: 8 client threads × 64 requests over the
+    // non-blocking ticket path
     let clients = 8;
     let per_client = 64;
     let t = Timer::start();
     let mut handles = Vec::new();
     for c in 0..clients {
-        let s = server.clone();
+        let eng = engine.clone();
         let data = te.clone();
         handles.push(std::thread::spawn(move || {
-            let mut correct = 0usize;
+            let (mut correct, mut shed) = (0usize, 0usize);
             for k in 0..per_client {
                 let i = (c * per_client + k) % data.len();
-                let logits = s.infer(data.x.row(i).to_vec());
-                let pred = logits
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
-                if pred as u32 == data.y[i] {
-                    correct += 1;
+                let ticket = match eng.try_submit(data.x.row(i).to_vec()) {
+                    Ok(t) => t,
+                    Err(RejectReason::QueueFull) => {
+                        shed += 1;
+                        continue;
+                    }
+                    Err(e) => panic!("submit failed: {e}"),
+                };
+                match ticket.wait() {
+                    Response::Logits(logits) => {
+                        let pred = logits
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .unwrap()
+                            .0;
+                        if pred as u32 == data.y[i] {
+                            correct += 1;
+                        }
+                    }
+                    Response::Rejected(r) => panic!("admitted ticket rejected: {r}"),
                 }
             }
-            correct
+            (correct, shed)
         }));
     }
-    let correct: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let (mut correct, mut shed) = (0usize, 0usize);
+    for h in handles {
+        let (c, s) = h.join().unwrap();
+        correct += c;
+        shed += s;
+    }
     let secs = t.elapsed_secs();
     let total = clients * per_client;
-    let (p50, p90, p99) = server.metrics.latency_percentiles();
-    println!("\nserved {total} requests in {secs:.2}s → {:.0} req/s", total as f64 / secs);
+    let answered = total - shed;
+    let (p50, p90, p99) = engine.latency_percentiles();
     println!(
-        "latency: p50 {:.2}ms  p90 {:.2}ms  p99 {:.2}ms | mean batch {:.1}/{}",
+        "\nanswered {answered}/{total} requests ({shed} shed) in {secs:.2}s → {:.0} req/s",
+        answered as f64 / secs
+    );
+    println!(
+        "latency (merged across workers): p50 {:.2}ms  p90 {:.2}ms  p99 {:.2}ms | mean batch {:.1}/{}",
         p50 * 1e3,
         p90 * 1e3,
         p99 * 1e3,
-        server.metrics.mean_batch_size(),
+        engine.metrics.mean_batch_size(),
         b,
     );
-    println!("served accuracy {:.1}%", 100.0 * correct as f64 / total as f64);
-    println!("{}", server.report());
+    println!("served accuracy {:.1}%", 100.0 * correct as f64 / answered.max(1) as f64);
+    println!("{}", engine.report());
     Ok(())
 }

@@ -1,0 +1,185 @@
+//! Serving-engine benchmark: open-loop load against the unified
+//! engine at 1/2/4/8 workers, per dispatch policy (the §Serving
+//! methodology in EXPERIMENTS.md).
+//!
+//! Open loop means the pacer submits at a fixed offered rate
+//! regardless of completions — unlike closed-loop clients it does not
+//! self-throttle, so queue growth and shedding behave like real
+//! traffic.  The offered rate is calibrated once to ~2× the measured
+//! single-worker service rate and held constant across worker counts,
+//! so the output shows how added workers convert shed requests into
+//! served ones and what happens to the latency tail.
+//!
+//! Every figure lands in `BENCH_serve.json` at the repo root
+//! ([`sobolnet::bench::BenchReport`] metrics): per
+//! `(policy, workers)` cell the achieved throughput, merged p50/p99,
+//! and shed count.  Pass `--quick` (CI smoke mode) for a low-request
+//! run with the same coverage.
+
+use sobolnet::bench::BenchReport;
+use sobolnet::engine::{AdmissionPolicy, DispatchKind, EngineBuilder, Response};
+use sobolnet::nn::init::Init;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::topology::{PathSource, TopologyBuilder};
+use sobolnet::util::timer::Timer;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+const FEATURES: usize = 64;
+const CLASSES: usize = 10;
+
+fn make_net() -> SparseMlp {
+    let topo = TopologyBuilder::new(&[FEATURES, 64, 64, CLASSES])
+        .paths(1024)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .build();
+    SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantRandomSign, seed: 7, ..Default::default() },
+    )
+}
+
+fn sample(i: usize) -> Vec<f32> {
+    (0..FEATURES).map(|j| ((i * FEATURES + j) as f32 * 0.173).sin()).collect()
+}
+
+struct LoadResult {
+    served: usize,
+    shed: usize,
+    secs: f64,
+    p50: f64,
+    p99: f64,
+}
+
+/// Fire `n` requests at a fixed `interval` (open loop) against a fresh
+/// engine; a collector thread drains tickets concurrently.
+fn run_open_loop(
+    net: &SparseMlp,
+    workers: usize,
+    kind: DispatchKind,
+    interval_secs: f64,
+    n: usize,
+) -> LoadResult {
+    let engine = Arc::new(
+        EngineBuilder::new()
+            .workers(workers)
+            .batch(16)
+            .max_wait(Duration::from_micros(500))
+            .queue_depth(32)
+            .admission(AdmissionPolicy::ShedNewest)
+            .dispatch(kind)
+            .build_model(net.clone(), FEATURES, CLASSES),
+    );
+    let (tx, rx) = channel();
+    let collector = std::thread::spawn(move || {
+        let mut served = 0usize;
+        for ticket in rx {
+            if matches!(ticket.wait(), Response::Logits(_)) {
+                served += 1;
+            }
+        }
+        served
+    });
+    let t = Timer::start();
+    let mut shed = 0usize;
+    for i in 0..n {
+        // pace to the open-loop schedule: sleep coarsely, spin the rest
+        let target = interval_secs * i as f64;
+        loop {
+            let now = t.elapsed_secs();
+            if now >= target {
+                break;
+            }
+            if target - now > 0.001 {
+                std::thread::sleep(Duration::from_micros(500));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        match engine.try_submit(sample(i)) {
+            Ok(ticket) => tx.send(ticket).expect("collector alive"),
+            Err(_) => shed += 1,
+        }
+    }
+    drop(tx);
+    let served = collector.join().expect("collector thread");
+    let secs = t.elapsed_secs();
+    let (p50, _, p99) = engine.latency_percentiles();
+    LoadResult { served, shed, secs, p50, p99 }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n: usize = if quick { 192 } else { 1024 };
+    let worker_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    if quick {
+        println!("bench serve: quick mode (CI smoke)");
+    }
+    let mut report = BenchReport::new();
+    let net = make_net();
+
+    // calibrate: max sustainable per-request service time of ONE worker
+    // under the exact knobs the measured cells use (same batch capacity
+    // and flush deadline — a lone closed-loop request would measure the
+    // batcher's max_wait, not service).  A pre-submitted burst keeps the
+    // worker's batches full, so total/cal_n is the saturated rate.
+    let cal = EngineBuilder::new()
+        .workers(1)
+        .batch(16)
+        .max_wait(Duration::from_micros(500))
+        .queue_depth(0) // unbounded: calibration must not shed
+        .build_model(net.clone(), FEATURES, CLASSES);
+    let cal_n = 256usize;
+    let t = Timer::start();
+    let tickets: Vec<_> =
+        (0..cal_n).map(|i| cal.try_submit(sample(i)).expect("unbounded")).collect();
+    for ticket in tickets {
+        assert!(matches!(ticket.wait(), Response::Logits(_)), "calibration request served");
+    }
+    let service_secs = t.elapsed_secs() / cal_n as f64;
+    cal.shutdown();
+    // offered rate: 2× the single-worker saturated rate, so one worker
+    // must shed while 4+ workers keep up
+    let interval = service_secs / 2.0;
+    report.metric("serve_calibrated_service_ms", service_secs * 1e3);
+    report.metric("serve_offered_req_per_sec", 1.0 / interval.max(1e-12));
+    println!(
+        "bench serve: calibrated service {:.3}ms → offered load {:.0} req/s, n={n}",
+        service_secs * 1e3,
+        1.0 / interval.max(1e-12)
+    );
+
+    for &kind in
+        &[DispatchKind::RoundRobin, DispatchKind::LeastLoaded, DispatchKind::EwmaP99]
+    {
+        for &w in worker_counts {
+            let r = run_open_loop(&net, w, kind, interval, n);
+            let key = kind.as_str().replace('-', "_");
+            let throughput = r.served as f64 / r.secs.max(1e-12);
+            println!(
+                "bench serve/{}/{w}w: {:.0} req/s served={} shed={} p50={:.3}ms p99={:.3}ms",
+                kind.as_str(),
+                throughput,
+                r.served,
+                r.shed,
+                r.p50 * 1e3,
+                r.p99 * 1e3,
+            );
+            report.metric(&format!("serve_{key}_{w}w_req_per_sec"), throughput);
+            report.metric(&format!("serve_{key}_{w}w_p50_ms"), r.p50 * 1e3);
+            report.metric(&format!("serve_{key}_{w}w_p99_ms"), r.p99 * 1e3);
+            report.metric(&format!("serve_{key}_{w}w_shed"), r.shed as f64);
+        }
+    }
+
+    // machine-readable output, tracked across PRs
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|repo| repo.join("BENCH_serve.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_serve.json"));
+    match report.write(&out_path) {
+        Ok(()) => println!("bench serve: wrote {}", out_path.display()),
+        Err(e) => println!("bench serve: could not write {}: {e}", out_path.display()),
+    }
+}

@@ -4,9 +4,95 @@
 
 pub mod json;
 
+use crate::engine::{AdmissionPolicy, DispatchKind};
 use crate::nn::init::Init;
 use crate::topology::{PathSource, SignPolicy};
 use json::JsonValue;
+use std::collections::BTreeMap;
+
+/// Serving/engine knobs of an experiment config (`"serve": {...}`),
+/// so engine setup is file-drivable like training.  Feeds
+/// [`crate::engine::EngineBuilder::from_config`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeSection {
+    /// Number of worker shards.
+    pub workers: usize,
+    /// Backend batch capacity.
+    pub batch: usize,
+    /// Max milliseconds a worker waits for a full batch before flushing.
+    pub max_wait_ms: u64,
+    /// Per-shard admission queue depth bound (`0` = unbounded).
+    pub queue_depth: usize,
+    /// Dispatch policy: "round-robin", "least-loaded", "ewma-p99".
+    pub dispatch: DispatchKind,
+    /// Admission policy: "block", "shed-newest", "shed-oldest".
+    pub admission: AdmissionPolicy,
+}
+
+impl Default for ServeSection {
+    fn default() -> Self {
+        ServeSection {
+            workers: 2,
+            batch: 64,
+            max_wait_ms: 2,
+            queue_depth: 1024,
+            dispatch: DispatchKind::LeastLoaded,
+            admission: AdmissionPolicy::Block,
+        }
+    }
+}
+
+impl ServeSection {
+    /// Parse from a JSON object; missing keys fall back to defaults.
+    pub fn from_json(v: &JsonValue) -> Result<Self, String> {
+        let mut cfg = ServeSection::default();
+        let obj = v.as_object().ok_or("serve section must be an object")?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "workers" => cfg.workers = val.as_usize().ok_or("serve.workers int")?,
+                "batch" => cfg.batch = val.as_usize().ok_or("serve.batch int")?,
+                "max_wait_ms" => {
+                    cfg.max_wait_ms = val.as_usize().ok_or("serve.max_wait_ms int")? as u64
+                }
+                "queue_depth" => {
+                    cfg.queue_depth = val.as_usize().ok_or("serve.queue_depth int")?
+                }
+                "dispatch" => {
+                    let s = val.as_str().ok_or("serve.dispatch string")?;
+                    cfg.dispatch = DispatchKind::parse(s)
+                        .ok_or_else(|| format!("unknown serve.dispatch '{s}'"))?;
+                }
+                "admission" => {
+                    let s = val.as_str().ok_or("serve.admission string")?;
+                    cfg.admission = AdmissionPolicy::parse(s)
+                        .ok_or_else(|| format!("unknown serve.admission '{s}'"))?;
+                }
+                "comment" | "description" => {}
+                other => return Err(format!("unknown serve key '{other}'")),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to a JSON object (round-trips through
+    /// [`ServeSection::from_json`]).
+    pub fn to_json(&self) -> JsonValue {
+        let mut m = BTreeMap::new();
+        m.insert("workers".to_string(), JsonValue::Number(self.workers as f64));
+        m.insert("batch".to_string(), JsonValue::Number(self.batch as f64));
+        m.insert("max_wait_ms".to_string(), JsonValue::Number(self.max_wait_ms as f64));
+        m.insert("queue_depth".to_string(), JsonValue::Number(self.queue_depth as f64));
+        m.insert(
+            "dispatch".to_string(),
+            JsonValue::String(self.dispatch.as_str().to_string()),
+        );
+        m.insert(
+            "admission".to_string(),
+            JsonValue::String(self.admission.as_str().to_string()),
+        );
+        JsonValue::Object(m)
+    }
+}
 
 /// Experiment-level configuration (CLI `--config file.json`).
 #[derive(Debug, Clone, PartialEq)]
@@ -37,6 +123,8 @@ pub struct ExperimentConfig {
     pub n_test: usize,
     /// Master seed.
     pub seed: u64,
+    /// Serving/engine section (`"serve": {...}`).
+    pub serve: ServeSection,
 }
 
 impl Default for ExperimentConfig {
@@ -55,6 +143,7 @@ impl Default for ExperimentConfig {
             n_train: 4096,
             n_test: 1024,
             seed: 0,
+            serve: ServeSection::default(),
         }
     }
 }
@@ -104,6 +193,7 @@ impl ExperimentConfig {
                 "scramble_seed" => {
                     scramble = Some(val.as_usize().ok_or("scramble_seed int")? as u64);
                 }
+                "serve" => cfg.serve = ServeSection::from_json(val)?,
                 "comment" | "description" => {}
                 "sign_policy" => {
                     let s = val.as_str().ok_or("sign_policy string")?;
@@ -197,5 +287,60 @@ mod tests {
     fn bad_types_rejected() {
         let v = json::parse(r#"{"paths": "many"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn serve_section_parses_inside_experiment_config() {
+        let text = r#"{
+            "paths": 512,
+            "serve": {
+                "workers": 4,
+                "batch": 32,
+                "max_wait_ms": 5,
+                "queue_depth": 128,
+                "dispatch": "ewma-p99",
+                "admission": "shed-newest"
+            }
+        }"#;
+        let cfg = ExperimentConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.paths, 512);
+        assert_eq!(cfg.serve.workers, 4);
+        assert_eq!(cfg.serve.batch, 32);
+        assert_eq!(cfg.serve.max_wait_ms, 5);
+        assert_eq!(cfg.serve.queue_depth, 128);
+        assert_eq!(cfg.serve.dispatch, DispatchKind::EwmaP99);
+        assert_eq!(cfg.serve.admission, AdmissionPolicy::ShedNewest);
+    }
+
+    #[test]
+    fn serve_section_round_trips_through_serializer() {
+        let section = ServeSection {
+            workers: 8,
+            batch: 16,
+            max_wait_ms: 1,
+            queue_depth: 64,
+            dispatch: DispatchKind::RoundRobin,
+            admission: AdmissionPolicy::ShedOldest,
+        };
+        let text = section.to_json().to_string_compact();
+        let back = ServeSection::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, section, "serialize → parse is the identity");
+        // defaults round-trip too, and partial objects fall back to them
+        let dflt = ServeSection::default();
+        let text = dflt.to_json().to_string_compact();
+        assert_eq!(ServeSection::from_json(&json::parse(&text).unwrap()).unwrap(), dflt);
+        let partial = json::parse(r#"{"workers": 3}"#).unwrap();
+        let cfg = ServeSection::from_json(&partial).unwrap();
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.dispatch, dflt.dispatch);
+    }
+
+    #[test]
+    fn serve_section_rejects_unknown_keys_and_policies() {
+        assert!(ServeSection::from_json(&json::parse(r#"{"bogus": 1}"#).unwrap()).is_err());
+        assert!(ServeSection::from_json(&json::parse(r#"{"dispatch": "psychic"}"#).unwrap())
+            .is_err());
+        assert!(ServeSection::from_json(&json::parse(r#"{"admission": "yolo"}"#).unwrap())
+            .is_err());
     }
 }

@@ -1,5 +1,14 @@
 //! Lightweight metrics: counters and latency histograms for the
-//! inference server and training driver.
+//! inference engine and training driver.
+//!
+//! Aggregation contract: each worker shard records latency **samples**
+//! only into its own `Metrics`; engine-wide percentiles are computed
+//! with [`Metrics::merged_percentiles`], which pools the per-worker
+//! samples *before* taking percentiles.  Averaging per-worker
+//! percentiles is not a percentile (a shard that answered 10 requests
+//! would weigh as much as one that answered 10 000, and tail values
+//! from a slow shard would be diluted instead of dominating the
+//! aggregate tail) — the unit tests pin the difference.
 
 use crate::util::stats::latency_percentiles;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -12,6 +21,8 @@ pub struct Metrics {
     pub requests: AtomicU64,
     /// Requests completed.
     pub completed: AtomicU64,
+    /// Requests shed by admission control (rejected or evicted).
+    pub shed: AtomicU64,
     /// Batches executed.
     pub batches: AtomicU64,
     /// Total samples padded into batches (wasted slots).
@@ -45,6 +56,32 @@ impl Metrics {
         latency_percentiles(&l)
     }
 
+    /// Number of latency samples recorded.
+    pub fn latency_count(&self) -> usize {
+        self.latencies.lock().unwrap().len()
+    }
+
+    /// Append this registry's latency samples to `out` (the merge step
+    /// of cross-worker aggregation).
+    pub fn extend_latencies_into(&self, out: &mut Vec<f64>) {
+        out.extend_from_slice(&self.latencies.lock().unwrap());
+    }
+
+    /// Percentiles `(p50, p90, p99)` over the **union** of several
+    /// registries' latency samples.  This is the correct way to
+    /// aggregate per-worker histograms: merge first, then take
+    /// percentiles — never average per-worker percentiles.
+    pub fn merged_percentiles<'a, I>(parts: I) -> (f64, f64, f64)
+    where
+        I: IntoIterator<Item = &'a Metrics>,
+    {
+        let mut all = Vec::new();
+        for m in parts {
+            m.extend_latencies_into(&mut all);
+        }
+        latency_percentiles(&all)
+    }
+
     /// Mean executed batch occupancy.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batch_sizes.lock().unwrap();
@@ -59,9 +96,10 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let (p50, p90, p99) = self.latency_percentiles();
         format!(
-            "requests={} completed={} batches={} mean_batch={:.1} p50={:.3}ms p90={:.3}ms p99={:.3}ms",
+            "requests={} completed={} shed={} batches={} mean_batch={:.1} p50={:.3}ms p90={:.3}ms p99={:.3}ms",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             p50 * 1e3,
@@ -99,5 +137,53 @@ mod tests {
         assert!(p50.is_nan());
         assert_eq!(m.mean_batch_size(), 0.0);
         let _ = m.summary();
+    }
+
+    /// Known distribution: worker A answers 99 fast requests (1 ms),
+    /// worker B answers a single slow one (101 ms).  The true merged
+    /// p99 (per `util::stats::percentile_sorted`, linear interpolation
+    /// over 100 samples) interpolates 1% of the way between the two
+    /// modes, landing at 2 ms; the p50 stays at 1 ms.  Averaging the
+    /// per-worker "percentiles" instead gives 51 ms for *every*
+    /// percentile — off by an order of magnitude in both directions.
+    #[test]
+    fn merged_percentiles_pool_samples_before_ranking() {
+        let a = Metrics::new();
+        for _ in 0..99 {
+            a.record_latency(0.001);
+        }
+        let b = Metrics::new();
+        b.record_latency(0.101);
+
+        let (p50, p90, p99) = Metrics::merged_percentiles([&a, &b]);
+        assert!((p50 - 0.001).abs() < 1e-9, "merged p50 = 1ms, got {p50}");
+        assert!((p90 - 0.001).abs() < 1e-9, "merged p90 = 1ms, got {p90}");
+        // rank 99 * 0.99 = 98.01 → interpolates 1% of the way from
+        // 1ms (sample 98) to 101ms (sample 99): 1ms + 0.01·100ms = 2ms
+        assert!((p99 - 0.002).abs() < 1e-6, "merged p99 = 2ms, got {p99}");
+
+        // the broken aggregation (mean of per-worker percentiles)
+        let (a50, _, a99) = a.latency_percentiles();
+        let (b50, _, b99) = b.latency_percentiles();
+        let avg50 = (a50 + b50) / 2.0;
+        let avg99 = (a99 + b99) / 2.0;
+        assert!((avg50 - 0.051).abs() < 1e-9, "averaged 'p50' is 51ms");
+        assert!(avg99 > 25.0 * p99, "averaged 'p99' ({avg99}) wildly overstates merged ({p99})");
+    }
+
+    #[test]
+    fn merged_percentiles_edge_cases() {
+        let empty = Metrics::new();
+        let (p50, _, _) = Metrics::merged_percentiles([&empty]);
+        assert!(p50.is_nan(), "no samples anywhere → NaN");
+        let one = Metrics::new();
+        one.record_latency(0.005);
+        let (p50, p90, p99) = Metrics::merged_percentiles([&empty, &one]);
+        assert_eq!((p50, p90, p99), (0.005, 0.005, 0.005));
+        assert_eq!(one.latency_count(), 1);
+        let mut pooled = Vec::new();
+        one.extend_latencies_into(&mut pooled);
+        one.extend_latencies_into(&mut pooled);
+        assert_eq!(pooled, vec![0.005, 0.005]);
     }
 }

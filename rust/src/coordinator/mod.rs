@@ -1,7 +1,8 @@
 //! Layer-3 coordinator: process lifecycle, training orchestration over
-//! the AOT runtime, metrics and checkpoints.  The inference server
-//! itself lives in [`crate::serve`] (sharded multi-worker subsystem);
-//! [`server`] re-exports it under the historical names.
+//! the AOT runtime, metrics and checkpoints.  The inference engine
+//! itself lives in [`crate::engine`] (admission + dispatch + worker
+//! shards; [`crate::serve`] is its blocking compatibility surface);
+//! [`server`] keeps the historical names as deprecated aliases.
 //!
 //! Rust owns the event loop; the compiled HLO artifacts (JAX+Pallas,
 //! lowered once at build time) are the only compute the request path
@@ -13,5 +14,7 @@ pub mod server;
 pub mod train;
 
 pub use metrics::Metrics;
-pub use server::{InferenceBackend, InferenceServer, ServerConfig};
+pub use server::InferenceBackend;
+#[allow(deprecated)]
+pub use server::{InferenceServer, ServerConfig};
 pub use train::{AotTrainer, AotTrainerConfig};

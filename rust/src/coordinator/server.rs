@@ -1,12 +1,36 @@
-//! Legacy location of the inference server.
+//! Legacy location of the inference server — deprecated aliases only.
 //!
-//! The single-worker router/batcher that lived here grew into the
-//! sharded multi-worker serving subsystem at [`crate::serve`]
-//! (dispatcher + per-worker queues/batchers/metrics).  This module
-//! re-exports the new types under their historical names so existing
-//! imports (`coordinator::server::{InferenceServer, ServerConfig}`)
-//! keep working; new code should use `crate::serve` directly.
+//! The single-worker router/batcher that lived here grew first into the
+//! sharded [`crate::serve::ShardedServer`] and then into the unified
+//! [`crate::engine::Engine`] (backpressure-aware admission, ticket
+//! requests, pluggable dispatch).  The historical names below keep old
+//! imports compiling; they are `#[deprecated]` and new code should use
+//! `crate::engine` (or `crate::serve` for the blocking compatibility
+//! surface).
 
-pub use crate::serve::{Dispatch, InferenceBackend, ModelBackend};
-pub use crate::serve::{ServeConfig, ServeConfig as ServerConfig};
-pub use crate::serve::{ShardedServer, ShardedServer as InferenceServer};
+pub use crate::engine::InferenceBackend;
+
+/// Deprecated alias of [`crate::engine::ModelBackend`].
+#[deprecated(since = "0.1.0", note = "use crate::engine::ModelBackend")]
+pub type ModelBackend<M> = crate::engine::ModelBackend<M>;
+
+/// Deprecated alias of [`crate::serve::Dispatch`]; the engine's
+/// [`crate::engine::DispatchKind`] supersedes both.
+#[deprecated(since = "0.1.0", note = "use crate::engine::DispatchKind")]
+pub type Dispatch = crate::serve::Dispatch;
+
+/// Deprecated alias of [`crate::serve::ServeConfig`].
+#[deprecated(since = "0.1.0", note = "use crate::engine::EngineBuilder")]
+pub type ServeConfig = crate::serve::ServeConfig;
+
+/// Deprecated alias of [`crate::serve::ServeConfig`].
+#[deprecated(since = "0.1.0", note = "use crate::engine::EngineBuilder")]
+pub type ServerConfig = crate::serve::ServeConfig;
+
+/// Deprecated alias of [`crate::serve::ShardedServer`].
+#[deprecated(since = "0.1.0", note = "use crate::engine::Engine via EngineBuilder")]
+pub type ShardedServer = crate::serve::ShardedServer;
+
+/// Deprecated alias of [`crate::serve::ShardedServer`].
+#[deprecated(since = "0.1.0", note = "use crate::engine::Engine via EngineBuilder")]
+pub type InferenceServer = crate::serve::ShardedServer;

@@ -20,7 +20,7 @@ use crate::nn::init::{w_init_magnitude, Init};
 use crate::runtime::client::{literal_f32, literal_i32, to_scalar_f32, to_vec_f32};
 use crate::runtime::xla_stub as xla;
 use crate::runtime::{ArtifactManifest, Executable, Runtime};
-use crate::serve::InferenceBackend;
+use crate::engine::InferenceBackend;
 use crate::topology::PathTopology;
 use crate::util::error::{Context, Result};
 

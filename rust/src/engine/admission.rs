@@ -1,0 +1,309 @@
+//! Bounded per-shard admission queues: the backpressure primitive of
+//! the engine.
+//!
+//! Every worker shard owns one [`BoundedQueue`].  A queue has a depth
+//! bound and an [`AdmissionPolicy`] decides what happens when a request
+//! arrives at a full queue:
+//!
+//! * [`AdmissionPolicy::Block`] — the submitting thread waits for a
+//!   slot (closed-loop clients self-throttle; this is the legacy
+//!   `ShardedServer::submit` behavior when the bound is unlimited),
+//! * [`AdmissionPolicy::ShedNewest`] — the *new* request is rejected
+//!   immediately (`try_submit` returns
+//!   [`RejectReason::QueueFull`](super::ticket::RejectReason)),
+//! * [`AdmissionPolicy::ShedOldest`] — the new request is admitted and
+//!   the *oldest* queued request is evicted; its ticket resolves to
+//!   `Response::Rejected(RejectReason::QueueFull)`.
+//!
+//! The queue also tracks a depth high-watermark under the same lock as
+//! the push, so "in-queue depth never exceeded the bound" is a checkable
+//! post-condition (`tests/engine_backpressure.rs`), not a hope.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// What to do when a request arrives at a full shard queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Block the submitter until a slot frees (or the engine shuts down).
+    #[default]
+    Block,
+    /// Reject the incoming request (`RejectReason::QueueFull`).
+    ShedNewest,
+    /// Admit the incoming request; evict the oldest queued one.
+    ShedOldest,
+}
+
+impl AdmissionPolicy {
+    /// Parse from a config/CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "block" => Some(AdmissionPolicy::Block),
+            "shed-newest" | "shed_newest" => Some(AdmissionPolicy::ShedNewest),
+            "shed-oldest" | "shed_oldest" => Some(AdmissionPolicy::ShedOldest),
+            _ => None,
+        }
+    }
+
+    /// Canonical config/CLI spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::ShedNewest => "shed-newest",
+            AdmissionPolicy::ShedOldest => "shed-oldest",
+        }
+    }
+}
+
+/// Outcome of [`BoundedQueue::admit`].
+pub enum Admit<T> {
+    /// Item enqueued.
+    Admitted,
+    /// Queue full under `ShedNewest`: the item is handed back.
+    RejectedFull(T),
+    /// Queue closed (engine shutting down): the item is handed back.
+    RejectedClosed(T),
+    /// Item enqueued under `ShedOldest`; the evicted oldest is returned
+    /// so the caller can resolve its ticket.
+    Evicted(T),
+}
+
+/// Why a timed pop returned without an item.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopWait {
+    /// Deadline elapsed with the queue still empty.
+    TimedOut,
+    /// Queue closed and fully drained.
+    Closed,
+}
+
+struct State<T> {
+    q: VecDeque<T>,
+    closed: bool,
+    max_depth: usize,
+}
+
+/// A depth-bounded MPSC queue with admission policies and a depth
+/// high-watermark.  `bound == 0` means unbounded (legacy behavior).
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    bound: usize,
+    /// Lock-free mirror of the queue length, so dispatch policies can
+    /// read [`BoundedQueue::depth`] on every submit without contending
+    /// with the worker's pop path.  Updated under the state lock.
+    depth: AtomicUsize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// New queue with the given depth bound (`0` = unbounded).
+    pub fn new(bound: usize) -> Self {
+        BoundedQueue {
+            state: Mutex::new(State { q: VecDeque::new(), closed: false, max_depth: 0 }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            bound,
+            depth: AtomicUsize::new(0),
+        }
+    }
+
+    /// Depth bound (`0` = unbounded).
+    pub fn bound(&self) -> usize {
+        self.bound
+    }
+
+    /// Try to enqueue `item` under `policy`.  See [`Admit`].
+    pub fn admit(&self, item: T, policy: AdmissionPolicy) -> Admit<T> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Admit::RejectedClosed(item);
+        }
+        let mut evicted = None;
+        if self.bound > 0 && s.q.len() >= self.bound {
+            match policy {
+                AdmissionPolicy::Block => {
+                    while s.q.len() >= self.bound && !s.closed {
+                        s = self.not_full.wait(s).unwrap();
+                    }
+                    if s.closed {
+                        return Admit::RejectedClosed(item);
+                    }
+                }
+                AdmissionPolicy::ShedNewest => return Admit::RejectedFull(item),
+                AdmissionPolicy::ShedOldest => evicted = s.q.pop_front(),
+            }
+        }
+        s.q.push_back(item);
+        s.max_depth = s.max_depth.max(s.q.len());
+        self.depth.store(s.q.len(), Ordering::Relaxed);
+        self.not_empty.notify_one();
+        drop(s);
+        match evicted {
+            Some(old) => Admit::Evicted(old),
+            None => Admit::Admitted,
+        }
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop_block(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.q.pop_front() {
+                self.depth.store(s.q.len(), Ordering::Relaxed);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Pop with a timeout (used by the batcher's flush deadline).
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<T, PopWait> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.q.pop_front() {
+                self.depth.store(s.q.len(), Ordering::Relaxed);
+                self.not_full.notify_one();
+                return Ok(item);
+            }
+            if s.closed {
+                return Err(PopWait::Closed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(PopWait::TimedOut);
+            }
+            let (guard, _) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Close the queue: wakes all waiters; producers get
+    /// [`Admit::RejectedClosed`], the consumer drains what remains.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Current queued depth (lock-free snapshot; exact at quiescence,
+    /// momentarily stale under concurrent push/pop — fine for dispatch
+    /// heuristics and post-drain assertions).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Highest depth ever observed (recorded under the push lock).
+    pub fn max_depth(&self) -> usize {
+        self.state.lock().unwrap().max_depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn policy_strings_round_trip() {
+        for p in [AdmissionPolicy::Block, AdmissionPolicy::ShedNewest, AdmissionPolicy::ShedOldest]
+        {
+            assert_eq!(AdmissionPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(AdmissionPolicy::parse("drop-everything"), None);
+    }
+
+    #[test]
+    fn shed_newest_bounces_at_bound() {
+        let q = BoundedQueue::new(2);
+        assert!(matches!(q.admit(1, AdmissionPolicy::ShedNewest), Admit::Admitted));
+        assert!(matches!(q.admit(2, AdmissionPolicy::ShedNewest), Admit::Admitted));
+        match q.admit(3, AdmissionPolicy::ShedNewest) {
+            Admit::RejectedFull(item) => assert_eq!(item, 3),
+            _ => panic!("expected RejectedFull"),
+        }
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.max_depth(), 2);
+        // FIFO order preserved for the admitted items
+        assert_eq!(q.pop_block(), Some(1));
+        assert_eq!(q.pop_block(), Some(2));
+    }
+
+    #[test]
+    fn shed_oldest_evicts_head() {
+        let q = BoundedQueue::new(2);
+        q.admit(1, AdmissionPolicy::ShedOldest);
+        q.admit(2, AdmissionPolicy::ShedOldest);
+        match q.admit(3, AdmissionPolicy::ShedOldest) {
+            Admit::Evicted(old) => assert_eq!(old, 1),
+            _ => panic!("expected Evicted"),
+        }
+        assert_eq!(q.depth(), 2, "depth stays at the bound");
+        assert_eq!(q.max_depth(), 2);
+        assert_eq!(q.pop_block(), Some(2));
+        assert_eq!(q.pop_block(), Some(3));
+    }
+
+    #[test]
+    fn block_waits_for_a_slot() {
+        let q = Arc::new(BoundedQueue::new(1));
+        assert!(matches!(q.admit(10, AdmissionPolicy::Block), Admit::Admitted));
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || {
+            // blocks until the consumer pops
+            matches!(q2.admit(11, AdmissionPolicy::Block), Admit::Admitted)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.depth(), 1, "second push still parked");
+        assert_eq!(q.pop_block(), Some(10));
+        assert!(pusher.join().unwrap());
+        assert_eq!(q.pop_block(), Some(11));
+        assert_eq!(q.max_depth(), 1, "blocking admission never exceeded the bound");
+    }
+
+    #[test]
+    fn close_unblocks_producer_and_drains_consumer() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.admit(1, AdmissionPolicy::Block);
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.admit(2, AdmissionPolicy::Block));
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        match pusher.join().unwrap() {
+            Admit::RejectedClosed(item) => assert_eq!(item, 2),
+            _ => panic!("blocked producer must be rejected on close"),
+        }
+        // consumer still drains the admitted item, then sees Closed
+        assert_eq!(q.pop_block(), Some(1));
+        assert_eq!(q.pop_block(), None);
+        assert!(matches!(q.admit(9, AdmissionPolicy::Block), Admit::RejectedClosed(9)));
+    }
+
+    #[test]
+    fn pop_timeout_semantics() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        assert_eq!(q.pop_timeout(Duration::from_millis(2)), Err(PopWait::TimedOut));
+        q.admit(5, AdmissionPolicy::Block);
+        assert_eq!(q.pop_timeout(Duration::from_millis(2)), Ok(5));
+        q.close();
+        assert_eq!(q.pop_timeout(Duration::from_millis(2)), Err(PopWait::Closed));
+    }
+
+    #[test]
+    fn unbounded_queue_never_sheds() {
+        let q = BoundedQueue::new(0);
+        for i in 0..1000 {
+            assert!(matches!(q.admit(i, AdmissionPolicy::ShedNewest), Admit::Admitted));
+        }
+        assert_eq!(q.depth(), 1000);
+        assert_eq!(q.max_depth(), 1000);
+    }
+}

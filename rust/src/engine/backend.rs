@@ -1,0 +1,89 @@
+//! Backend contract of the engine: anything that can classify a
+//! fixed-size batch, plus the blanket adapter for pure-rust models.
+//! (Moved here from `serve`; `serve` re-exports both names.)
+
+/// Something that can classify a fixed-size batch.
+///
+/// Implemented by the AOT executable wrapper (see
+/// `coordinator::train::AotForward`) and by the pure-rust models (via
+/// [`ModelBackend`]), so the same engine fronts both.
+///
+/// Backends need not be `Send`: workers construct them *on* their own
+/// thread via a factory (PJRT handles are `Rc`-based and cannot cross
+/// threads).
+pub trait InferenceBackend {
+    /// Static batch capacity of one execution.
+    fn batch_capacity(&self) -> usize;
+
+    /// Features per sample.
+    fn features(&self) -> usize;
+
+    /// Classes per sample.
+    fn classes(&self) -> usize;
+
+    /// Run on a `[capacity × features]` buffer (padded rows arbitrary);
+    /// returns `[capacity × classes]` logits.
+    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32>;
+}
+
+/// Blanket adapter for pure-rust [`crate::nn::Model`]s.
+///
+/// Holds reusable input/output tensors, so on the serve hot path each
+/// batch costs one forward pass plus a single logits copy — the model's
+/// own scratch (e.g. `SparseMlp`) allocates nothing once warm, and the
+/// forward fans out on the shared process-wide worker pool of
+/// [`crate::util::parallel`].
+pub struct ModelBackend<M: crate::nn::Model + Send> {
+    /// Wrapped model.
+    pub model: M,
+    /// Fixed batch capacity to emulate.
+    pub capacity: usize,
+    /// Input features.
+    pub features: usize,
+    /// Output classes.
+    pub classes: usize,
+    /// Reused `[capacity, features]` input staging tensor.
+    xbuf: crate::nn::tensor::Tensor,
+    /// Reused logits tensor.
+    obuf: crate::nn::tensor::Tensor,
+}
+
+impl<M: crate::nn::Model + Send> ModelBackend<M> {
+    /// Wrap `model` behind a fixed `[capacity × features] →
+    /// [capacity × classes]` serving contract.
+    pub fn new(model: M, capacity: usize, features: usize, classes: usize) -> Self {
+        ModelBackend {
+            model,
+            capacity,
+            features,
+            classes,
+            xbuf: crate::nn::tensor::Tensor::empty(),
+            obuf: crate::nn::tensor::Tensor::empty(),
+        }
+    }
+}
+
+impl<M: crate::nn::Model + Send> InferenceBackend for ModelBackend<M> {
+    fn batch_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn features(&self) -> usize {
+        self.features
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.capacity * self.features, "infer_batch input shape");
+        self.xbuf.shape.clear();
+        self.xbuf.shape.push(self.capacity);
+        self.xbuf.shape.push(self.features);
+        self.xbuf.data.clear();
+        self.xbuf.data.extend_from_slice(x);
+        self.model.forward_into(&self.xbuf, false, &mut self.obuf);
+        self.obuf.data.clone()
+    }
+}

@@ -8,10 +8,48 @@
 //! `max_wait` has elapsed since the first arrival — whichever comes
 //! first.  A full batch therefore never waits, and a lone request is
 //! never delayed by more than `max_wait`.
+//!
+//! The batcher is generic over a [`BatchSource`] so the same policy
+//! drains both the engine's [`BoundedQueue`](super::admission::BoundedQueue)
+//! shard queues and plain `mpsc` channels (unit tests, ad-hoc tools).
 
+use super::admission::{BoundedQueue, PopWait};
 use crate::util::timer::Timer;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::Duration;
+
+/// A blocking source of single requests the batcher can drain.
+pub trait BatchSource<T> {
+    /// Block for the next item; `None` once the source is closed and
+    /// fully drained.
+    fn recv_block(&self) -> Option<T>;
+
+    /// Wait up to `timeout` for the next item.
+    fn recv_wait(&self, timeout: Duration) -> Result<T, PopWait>;
+}
+
+impl<T> BatchSource<T> for Receiver<T> {
+    fn recv_block(&self) -> Option<T> {
+        self.recv().ok()
+    }
+
+    fn recv_wait(&self, timeout: Duration) -> Result<T, PopWait> {
+        self.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => PopWait::TimedOut,
+            RecvTimeoutError::Disconnected => PopWait::Closed,
+        })
+    }
+}
+
+impl<T> BatchSource<T> for BoundedQueue<T> {
+    fn recv_block(&self) -> Option<T> {
+        self.pop_block()
+    }
+
+    fn recv_wait(&self, timeout: Duration) -> Result<T, PopWait> {
+        self.pop_timeout(timeout)
+    }
+}
 
 /// The flush policy of one worker's queue.
 #[derive(Debug, Clone, Copy)]
@@ -23,11 +61,11 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Drain the next batch from `rx`.  Blocks until at least one item
-    /// arrives; returns `None` when the channel is closed and empty
+    /// Drain the next batch from `src`.  Blocks until at least one item
+    /// arrives; returns `None` when the source is closed and empty
     /// (worker shutdown).
-    pub fn next_batch<T>(&self, rx: &Receiver<T>) -> Option<Vec<T>> {
-        let first = rx.recv().ok()?;
+    pub fn next_batch<T, S: BatchSource<T>>(&self, src: &S) -> Option<Vec<T>> {
+        let first = src.recv_block()?;
         let mut batch = Vec::with_capacity(self.capacity);
         batch.push(first);
         let since_first = Timer::start();
@@ -35,10 +73,10 @@ impl Batcher {
             let remaining = self
                 .max_wait
                 .saturating_sub(Duration::from_secs_f64(since_first.elapsed_secs()));
-            match rx.recv_timeout(remaining) {
+            match src.recv_wait(remaining) {
                 Ok(item) => batch.push(item),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+                Err(PopWait::TimedOut) => break,
+                Err(PopWait::Closed) => break,
             }
         }
         Some(batch)
@@ -48,6 +86,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::admission::AdmissionPolicy;
     use std::sync::mpsc::channel;
 
     #[test]
@@ -90,5 +129,21 @@ mod tests {
         // disconnected channel must flush what is pending, not hang
         assert_eq!(b.next_batch(&rx).unwrap(), vec![1, 2]);
         assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn drains_bounded_queue_the_same_way() {
+        let q = BoundedQueue::new(8);
+        for i in 0..3 {
+            q.admit(i, AdmissionPolicy::Block);
+        }
+        let b = Batcher { capacity: 4, max_wait: Duration::from_millis(5) };
+        // 3 queued < capacity 4: flushes on the deadline with all three
+        assert_eq!(b.next_batch(&q).unwrap(), vec![0, 1, 2]);
+        q.admit(9, AdmissionPolicy::Block);
+        q.close();
+        // closed queue still drains what is pending, then yields None
+        assert_eq!(b.next_batch(&q).unwrap(), vec![9]);
+        assert!(b.next_batch(&q).is_none());
     }
 }

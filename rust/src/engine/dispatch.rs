@@ -1,0 +1,358 @@
+//! Pluggable shard dispatch: how the engine picks the worker shard for
+//! an incoming request.
+//!
+//! Replaces the old hardcoded `serve::Dispatch` enum with a
+//! [`DispatchPolicy`] trait object plus three built-ins:
+//!
+//! * [`RoundRobin`] — strict rotation (deterministic spread, the
+//!   interleaver of the serving layer),
+//! * [`LeastLoaded`] — fewest in-flight requests, rotating tie-break,
+//! * [`EwmaLatency`] — p99-aware: per-shard EWMA of observed request
+//!   latency and its variance estimate a tail latency
+//!   (`mean + 2.33·σ` ≈ p99 under a normal approximation); the score
+//!   is that tail estimate scaled by the shard's current occupancy, so
+//!   a shard that has gone slow (e.g. a cold replica, a noisy
+//!   neighbor) is routed around instead of piling up queue depth.
+//!
+//! Workers feed completions back through [`DispatchPolicy::observe`];
+//! policies that don't learn ignore it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Instantaneous load view of one shard, passed to [`DispatchPolicy::pick`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShardView {
+    /// Requests dispatched to the shard and not yet answered
+    /// (queued + in execution).
+    pub inflight: usize,
+    /// Requests sitting in the shard's admission queue right now.
+    pub queue_depth: usize,
+}
+
+/// A shard-selection strategy.  Implementations must be cheap: `pick`
+/// runs on every submit.
+pub trait DispatchPolicy: Send + Sync {
+    /// Pick a shard index in `0..views.len()` (`views` is never empty).
+    fn pick(&self, views: &[ShardView]) -> usize;
+
+    /// Feedback: a request dispatched to `shard` completed with the
+    /// given end-to-end latency.  Default: ignored.
+    fn observe(&self, shard: usize, latency_secs: f64) {
+        let _ = (shard, latency_secs);
+    }
+
+    /// Short policy name for reports/JSON.
+    fn name(&self) -> &'static str;
+}
+
+/// Strict rotation over the shards.
+#[derive(Default)]
+pub struct RoundRobin {
+    next: AtomicUsize,
+}
+
+impl RoundRobin {
+    /// New rotation starting at shard 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl DispatchPolicy for RoundRobin {
+    fn pick(&self, views: &[ShardView]) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % views.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Shard with the fewest in-flight requests; ties break by a rotating
+/// start offset so equal shards share the load.
+#[derive(Default)]
+pub struct LeastLoaded {
+    rr: AtomicUsize,
+}
+
+impl LeastLoaded {
+    /// New policy.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl DispatchPolicy for LeastLoaded {
+    fn pick(&self, views: &[ShardView]) -> usize {
+        let n = views.len();
+        if n == 1 {
+            return 0;
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_load = views[start].inflight;
+        for k in 1..n {
+            let i = (start + k) % n;
+            if views[i].inflight < best_load {
+                best = i;
+                best_load = views[i].inflight;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+}
+
+/// Per-shard latency statistics for [`EwmaLatency`].
+#[derive(Debug, Clone, Copy, Default)]
+struct LatencyEwma {
+    /// EWMA of latency (seconds); 0 until the first observation.
+    mean: f64,
+    /// EWMA of squared deviation (variance estimate).
+    var: f64,
+    /// Observation count (drives the cold-start ramp).
+    count: u64,
+}
+
+impl LatencyEwma {
+    /// Estimated tail latency: `mean + 2.33·σ` (≈ p99 for a normal
+    /// latency distribution; a deliberate, documented approximation —
+    /// exact per-shard percentiles would need a full histogram on the
+    /// submit path).
+    fn p99_estimate(&self) -> f64 {
+        self.mean + 2.33 * self.var.max(0.0).sqrt()
+    }
+}
+
+/// p99-aware dispatch: route to the shard with the lowest
+/// `tail_latency_estimate × (occupancy + 1)` score.
+pub struct EwmaLatency {
+    /// Smoothing factor in (0, 1]; larger adapts faster.
+    alpha: f64,
+    stats: Vec<Mutex<LatencyEwma>>,
+    rr: AtomicUsize,
+}
+
+impl EwmaLatency {
+    /// New policy over `workers` shards with smoothing factor `alpha`.
+    pub fn new(workers: usize, alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0,1]");
+        EwmaLatency {
+            alpha,
+            stats: (0..workers.max(1)).map(|_| Mutex::new(LatencyEwma::default())).collect(),
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    /// Current `(mean, p99_estimate)` of one shard, in seconds.
+    pub fn shard_latency(&self, shard: usize) -> (f64, f64) {
+        let s = self.stats[shard].lock().unwrap();
+        (s.mean, s.p99_estimate())
+    }
+}
+
+impl DispatchPolicy for EwmaLatency {
+    fn pick(&self, views: &[ShardView]) -> usize {
+        // every shard is a candidate even if the policy was sized for
+        // fewer (shards beyond `stats` just stay cold/unlearned), so an
+        // undersized policy never starves the extra shards
+        let n = views.len();
+        if n <= 1 {
+            return 0;
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_score = f64::INFINITY;
+        for k in 0..n {
+            let i = (start + k) % n;
+            // cold shards (few observations, or beyond the learned set)
+            // score as free capacity so every replica gets probed
+            // before the EWMA takes over
+            let tail = match self.stats.get(i) {
+                Some(cell) => {
+                    let st = *cell.lock().unwrap();
+                    if st.count < 4 {
+                        0.0
+                    } else {
+                        st.p99_estimate()
+                    }
+                }
+                None => 0.0,
+            };
+            let occupancy = (views[i].inflight + views[i].queue_depth + 1) as f64;
+            let score = tail * occupancy + occupancy * 1e-9;
+            if score < best_score {
+                best = i;
+                best_score = score;
+            }
+        }
+        best
+    }
+
+    fn observe(&self, shard: usize, latency_secs: f64) {
+        if shard >= self.stats.len() {
+            return;
+        }
+        let mut s = self.stats[shard].lock().unwrap();
+        s.count += 1;
+        if s.count == 1 {
+            s.mean = latency_secs;
+            s.var = 0.0;
+        } else {
+            let d = latency_secs - s.mean;
+            s.mean += self.alpha * d;
+            s.var = (1.0 - self.alpha) * (s.var + self.alpha * d * d);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "ewma-p99"
+    }
+}
+
+/// Named dispatch policies for config files and CLI flags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchKind {
+    /// [`RoundRobin`].
+    RoundRobin,
+    /// [`LeastLoaded`].
+    #[default]
+    LeastLoaded,
+    /// [`EwmaLatency`] with the default smoothing (`alpha = 0.2`).
+    EwmaP99,
+}
+
+impl DispatchKind {
+    /// Parse from a config/CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rr" | "round-robin" | "round_robin" => Some(DispatchKind::RoundRobin),
+            "ll" | "least-loaded" | "least_loaded" => Some(DispatchKind::LeastLoaded),
+            "ewma" | "ewma-p99" | "p99" => Some(DispatchKind::EwmaP99),
+            _ => None,
+        }
+    }
+
+    /// Canonical config/CLI spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DispatchKind::RoundRobin => "round-robin",
+            DispatchKind::LeastLoaded => "least-loaded",
+            DispatchKind::EwmaP99 => "ewma-p99",
+        }
+    }
+
+    /// Build the policy instance for an engine with `workers` shards.
+    pub fn instantiate(&self, workers: usize) -> Arc<dyn DispatchPolicy> {
+        match self {
+            DispatchKind::RoundRobin => Arc::new(RoundRobin::new()),
+            DispatchKind::LeastLoaded => Arc::new(LeastLoaded::new()),
+            DispatchKind::EwmaP99 => Arc::new(EwmaLatency::new(workers, 0.2)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(loads: &[usize]) -> Vec<ShardView> {
+        loads.iter().map(|&l| ShardView { inflight: l, queue_depth: 0 }).collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let p = RoundRobin::new();
+        let v = views(&[0, 0, 0]);
+        let picks: Vec<usize> = (0..6).map(|_| p.pick(&v)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_minimum() {
+        let p = LeastLoaded::new();
+        let v = views(&[5, 1, 3]);
+        for _ in 0..8 {
+            assert_eq!(p.pick(&v), 1);
+        }
+    }
+
+    #[test]
+    fn least_loaded_ties_rotate() {
+        let p = LeastLoaded::new();
+        let v = views(&[2, 2]);
+        let picks: std::collections::BTreeSet<usize> = (0..4).map(|_| p.pick(&v)).collect();
+        assert_eq!(picks.len(), 2, "equal shards share the load");
+    }
+
+    #[test]
+    fn ewma_cold_start_probes_every_shard() {
+        let p = EwmaLatency::new(3, 0.2);
+        let v = views(&[0, 0, 0]);
+        let picks: std::collections::BTreeSet<usize> = (0..6).map(|_| p.pick(&v)).collect();
+        assert_eq!(picks.len(), 3, "rotating start probes all shards when cold");
+    }
+
+    #[test]
+    fn ewma_routes_around_slow_shard() {
+        let p = EwmaLatency::new(2, 0.5);
+        // shard 0 is consistently 10× slower than shard 1
+        for _ in 0..16 {
+            p.observe(0, 0.010);
+            p.observe(1, 0.001);
+        }
+        let (m0, t0) = p.shard_latency(0);
+        let (m1, t1) = p.shard_latency(1);
+        assert!(m0 > 5.0 * m1, "EWMA learned the asymmetry: {m0} vs {m1}");
+        assert!(t0 >= m0 && t1 >= m1, "tail estimate ≥ mean");
+        let v = views(&[1, 1]);
+        for _ in 0..8 {
+            assert_eq!(p.pick(&v), 1, "equal occupancy → faster shard wins");
+        }
+        // ...until the fast shard is drowning: occupancy scales the score
+        let v = views(&[0, 200]);
+        assert_eq!(p.pick(&v), 0, "massive queue on the fast shard flips the choice");
+    }
+
+    #[test]
+    fn ewma_variance_widens_tail() {
+        let p = EwmaLatency::new(1, 0.3);
+        for i in 0..32 {
+            // alternate 1ms / 9ms: mean ~5ms, high variance
+            p.observe(0, if i % 2 == 0 { 0.001 } else { 0.009 });
+        }
+        let (mean, tail) = p.shard_latency(0);
+        assert!(tail > mean + 1e-4, "jittery shard gets a wide tail: {mean} → {tail}");
+    }
+
+    #[test]
+    fn ewma_undersized_policy_still_covers_all_shards() {
+        // policy learned 2 shards, engine has 4: the extra shards count
+        // as cold capacity instead of being starved
+        let p = EwmaLatency::new(2, 0.2);
+        for _ in 0..8 {
+            p.observe(0, 0.005);
+            p.observe(1, 0.005);
+        }
+        let v = views(&[1, 1, 1, 1]);
+        let picks: std::collections::BTreeSet<usize> = (0..16).map(|_| p.pick(&v)).collect();
+        assert!(
+            picks.contains(&2) && picks.contains(&3),
+            "shards beyond the learned set must still receive traffic: {picks:?}"
+        );
+        p.observe(7, 0.001); // out-of-range feedback is ignored, not a panic
+    }
+
+    #[test]
+    fn kind_strings_round_trip() {
+        for k in [DispatchKind::RoundRobin, DispatchKind::LeastLoaded, DispatchKind::EwmaP99] {
+            assert_eq!(DispatchKind::parse(k.as_str()), Some(k));
+            assert_eq!(k.instantiate(2).name(), k.as_str());
+        }
+        assert_eq!(DispatchKind::parse("random"), None);
+    }
+}

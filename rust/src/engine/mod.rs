@@ -1,0 +1,713 @@
+//! Unified serving engine (L3): one facade over admission, dispatch,
+//! batching, and worker shards.
+//!
+//! This is the public contract of the serving layer.  The paper's case
+//! for path-sparse networks is that they keep parallel hardware
+//! saturated (contiguous weight blocks, permutation-based layer hops —
+//! §3, §4.4); the engine makes *admission and routing* part of that
+//! contract too, so the server can shed load and route around a slow
+//! shard instead of queueing unboundedly.
+//!
+//! ```text
+//! try_submit(x) ──► DispatchPolicy (round-robin │ least-loaded │ ewma-p99)
+//!       │                │                     │
+//!       ▼                ▼                     ▼
+//!    Ticket          shard 0    …          shard N-1
+//!   (wait /       ┌───────────┐         ┌───────────┐   each: own thread,
+//!    wait_timeout)│ bounded   │         │ bounded   │   own backend built
+//!                 │ queue ≤ Q │         │ queue ≤ Q │   on-thread via the
+//!                 │ batcher   │         │ batcher   │   factory (non-`Send`
+//!                 │ backend   │         │ backend   │   PJRT works)
+//!                 │ metrics   │         │ metrics   │
+//!                 └───────────┘         └───────────┘
+//! ```
+//!
+//! **Admission** ([`AdmissionPolicy`]): every shard queue has a depth
+//! bound; at the bound, `Block` parks the submitter, `ShedNewest`
+//! rejects the new request with [`RejectReason::QueueFull`], and
+//! `ShedOldest` admits it while evicting the oldest queued request
+//! (its ticket resolves to `Response::Rejected(QueueFull)`).  Queue
+//! depth is therefore an invariant, not a hope — the queues track a
+//! high-watermark that `tests/engine_backpressure.rs` asserts.
+//!
+//! **Dispatch** ([`DispatchPolicy`]): a trait object, not an enum.
+//! Built-ins: strict [`RoundRobin`], in-flight-gauge [`LeastLoaded`],
+//! and the p99-aware [`EwmaLatency`] which learns per-shard tail
+//! latency from completion feedback and routes around slow replicas.
+//!
+//! **Tickets** ([`Ticket`]): `try_submit` never blocks on a full queue
+//! (unless the policy is `Block`); it returns a one-shot handle whose
+//! payload is plain data — exactly the shape an IPC transport needs
+//! for the ROADMAP's multi-process sharding item.
+//!
+//! **Determinism**: batching, padding, shard choice, and thread count
+//! cannot change a single output bit — each batch column is processed
+//! in exact path order by the sparse engine, so an admitted request's
+//! logits are bitwise identical to a sequential single-worker
+//! reference (`tests/engine_backpressure.rs`,
+//! `tests/serve_concurrency.rs`).
+//!
+//! The legacy [`crate::serve::ShardedServer`] and
+//! `coordinator::server` surfaces are thin compatibility layers over
+//! this module.
+
+pub mod admission;
+pub mod backend;
+pub mod batcher;
+pub mod dispatch;
+pub mod ticket;
+pub(crate) mod worker;
+
+pub use admission::{AdmissionPolicy, BoundedQueue};
+pub use backend::{InferenceBackend, ModelBackend};
+pub use batcher::{BatchSource, Batcher};
+pub use dispatch::{DispatchKind, DispatchPolicy, EwmaLatency, LeastLoaded, RoundRobin, ShardView};
+pub use ticket::{RejectReason, Response, Ticket};
+
+pub use crate::coordinator::metrics::Metrics;
+
+use std::cell::RefCell;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+use ticket::ReplyTx;
+use worker::{EngineRequest, Shard};
+
+thread_local! {
+    /// Reused per-thread scratch for the dispatch load snapshot, so the
+    /// submit hot path performs no heap allocation for it.
+    static VIEW_SCRATCH: RefCell<Vec<ShardView>> = RefCell::new(Vec::new());
+}
+
+enum DispatchChoice {
+    Kind(DispatchKind),
+    Custom(Arc<dyn DispatchPolicy>),
+}
+
+/// Composes topology/model/serving knobs into a running [`Engine`].
+///
+/// Absorbs what used to be scattered across `serve::ServeConfig`,
+/// `main.rs serve` flags, and ad-hoc example code:
+///
+/// ```no_run
+/// use sobolnet::engine::{AdmissionPolicy, DispatchKind, EngineBuilder};
+/// # let model: sobolnet::nn::sparse::SparseMlp = todo!();
+/// let engine = EngineBuilder::new()
+///     .workers(4)
+///     .batch(64)
+///     .max_wait(std::time::Duration::from_millis(2))
+///     .queue_depth(128)
+///     .admission(AdmissionPolicy::ShedNewest)
+///     .dispatch(DispatchKind::EwmaP99)
+///     .build_model(model, 784, 10);
+/// let ticket = engine.try_submit(vec![0.0; 784]).expect("admitted");
+/// let response = ticket.wait();
+/// ```
+pub struct EngineBuilder {
+    workers: usize,
+    batch: usize,
+    max_wait: Duration,
+    queue_depth: usize,
+    admission: AdmissionPolicy,
+    dispatch: DispatchChoice,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            workers: 1,
+            batch: 64,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+            admission: AdmissionPolicy::Block,
+            dispatch: DispatchChoice::Kind(DispatchKind::LeastLoaded),
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// New builder with defaults: 1 worker, batch 64, 2 ms max wait,
+    /// queue depth 1024, `Block` admission, `LeastLoaded` dispatch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of worker shards (each owns one backend instance).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Batch capacity used by [`EngineBuilder::build_model`] backends.
+    pub fn batch(mut self, capacity: usize) -> Self {
+        self.batch = capacity.max(1);
+        self
+    }
+
+    /// Max time a worker waits for a full batch before flushing.
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.max_wait = d;
+        self
+    }
+
+    /// Per-shard admission queue depth bound (`0` = unbounded).
+    pub fn queue_depth(mut self, q: usize) -> Self {
+        self.queue_depth = q;
+        self
+    }
+
+    /// What happens when a request meets a full shard queue.
+    pub fn admission(mut self, p: AdmissionPolicy) -> Self {
+        self.admission = p;
+        self
+    }
+
+    /// Use a named built-in dispatch policy.
+    pub fn dispatch(mut self, kind: DispatchKind) -> Self {
+        self.dispatch = DispatchChoice::Kind(kind);
+        self
+    }
+
+    /// Plug in a custom [`DispatchPolicy`].
+    pub fn dispatch_policy(mut self, policy: Arc<dyn DispatchPolicy>) -> Self {
+        self.dispatch = DispatchChoice::Custom(policy);
+        self
+    }
+
+    /// Apply the `serve` section of an experiment config file.
+    pub fn from_config(mut self, cfg: &crate::config::ServeSection) -> Self {
+        self.workers = cfg.workers.max(1);
+        self.batch = cfg.batch.max(1);
+        self.max_wait = Duration::from_millis(cfg.max_wait_ms);
+        self.queue_depth = cfg.queue_depth;
+        self.admission = cfg.admission;
+        self.dispatch = DispatchChoice::Kind(cfg.dispatch);
+        self
+    }
+
+    /// Start the engine; every worker builds its own backend by calling
+    /// a clone of `factory` on its worker thread.
+    pub fn build_with<F>(self, factory: F) -> Engine
+    where
+        F: Fn() -> Box<dyn InferenceBackend> + Clone + Send + 'static,
+    {
+        let n = self.workers;
+        let factories: Vec<BackendFactory> = (0..n)
+            .map(|_| {
+                let f = factory.clone();
+                Box::new(move || f()) as BackendFactory
+            })
+            .collect();
+        self.build_each(factories)
+    }
+
+    /// Start the engine over replicas of a cloneable pure-rust model
+    /// (each worker gets its own [`ModelBackend`] at the configured
+    /// batch capacity).
+    pub fn build_model<M>(self, model: M, features: usize, classes: usize) -> Engine
+    where
+        M: crate::nn::Model + Clone + Send + 'static,
+    {
+        let capacity = self.batch;
+        self.build_with(move || -> Box<dyn InferenceBackend> {
+            Box::new(ModelBackend::new(model.clone(), capacity, features, classes))
+        })
+    }
+
+    /// Start the engine with one explicit factory per worker (the
+    /// worker count is `factories.len()`); this is the `FnOnce` path
+    /// for backends that cannot be built from a cloneable factory.
+    pub fn build_each(self, factories: Vec<BackendFactory>) -> Engine {
+        assert!(!factories.is_empty(), "at least one worker factory");
+        let n = factories.len();
+        let dispatch = match self.dispatch {
+            DispatchChoice::Kind(kind) => kind.instantiate(n),
+            DispatchChoice::Custom(policy) => policy,
+        };
+        let metrics = Arc::new(Metrics::new());
+        let mut shards = Vec::with_capacity(n);
+        // spawn every worker first so the backends construct
+        // concurrently, then collect their metadata
+        let mut metas = Vec::with_capacity(n);
+        for (wid, factory) in factories.into_iter().enumerate() {
+            let (shard, meta_rx) = worker::spawn(
+                wid,
+                factory,
+                self.max_wait,
+                self.queue_depth,
+                metrics.clone(),
+                dispatch.clone(),
+            );
+            shards.push(shard);
+            metas.push(meta_rx);
+        }
+        let mut features: Option<usize> = None;
+        let mut classes: Option<usize> = None;
+        for meta_rx in metas {
+            let (feat, cls) = meta_rx.recv().expect("backend constructed");
+            match features {
+                None => features = Some(feat),
+                Some(prev) => assert_eq!(prev, feat, "workers disagree on feature count"),
+            }
+            match classes {
+                None => classes = Some(cls),
+                Some(prev) => assert_eq!(prev, cls, "workers disagree on class count"),
+            }
+        }
+        Engine {
+            shards,
+            dispatch,
+            admission: self.admission,
+            metrics,
+            features: features.expect("at least one worker"),
+            classes: classes.expect("at least one worker"),
+        }
+    }
+}
+
+/// A boxed one-shot backend constructor, run on the worker's thread.
+pub type BackendFactory = Box<dyn FnOnce() -> Box<dyn InferenceBackend> + Send>;
+
+/// Snapshot of one shard's load and lifetime counters.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    /// Requests dispatched and not yet answered.
+    pub inflight: usize,
+    /// Requests queued right now.
+    pub queue_depth: usize,
+    /// Highest queue depth ever observed (never exceeds the bound).
+    pub max_queue_depth: usize,
+    /// Requests this shard answered with logits.
+    pub completed: u64,
+    /// Requests shed at this shard's queue (rejected or evicted).
+    pub shed: u64,
+}
+
+/// Snapshot of engine-wide counters plus per-shard detail.
+#[derive(Debug, Clone)]
+pub struct EngineStats {
+    /// Submit attempts (admitted + shed).
+    pub submitted: u64,
+    /// Requests answered with logits.
+    pub completed: u64,
+    /// Requests shed by admission control (rejected new + evicted old).
+    pub shed: u64,
+    /// Per-shard snapshots, shard order.
+    pub shards: Vec<ShardStats>,
+}
+
+/// A running inference engine: worker shards behind backpressure-aware
+/// admission and pluggable dispatch.  See the [module docs](self).
+pub struct Engine {
+    shards: Vec<Shard>,
+    dispatch: Arc<dyn DispatchPolicy>,
+    admission: AdmissionPolicy,
+    /// Engine-wide aggregate counters (latency *samples* live in the
+    /// per-worker metrics and are merged on read).
+    pub metrics: Arc<Metrics>,
+    features: usize,
+    classes: usize,
+}
+
+impl Engine {
+    /// Number of worker shards.
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Features per sample.
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// Classes per sample.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Admission policy in force.
+    pub fn admission(&self) -> AdmissionPolicy {
+        self.admission
+    }
+
+    /// Name of the dispatch policy in force.
+    pub fn dispatch_name(&self) -> &'static str {
+        self.dispatch.name()
+    }
+
+    /// Route `x` and enqueue it under the reply channel; the common
+    /// path behind both the ticket API and the legacy `submit`.
+    pub(crate) fn admit(&self, x: Vec<f32>, reply: ReplyTx) -> Result<usize, RejectReason> {
+        if x.len() != self.features {
+            return Err(RejectReason::BadShape { expected: self.features, got: x.len() });
+        }
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        // load snapshot in a reused thread-local buffer: inflight and
+        // queue depth are both plain atomic loads, so a submit costs no
+        // allocation and no shard-queue lock
+        let idx = VIEW_SCRATCH.with(|scratch| {
+            let mut views = scratch.borrow_mut();
+            views.clear();
+            views.extend(self.shards.iter().map(|s| ShardView {
+                inflight: s.inflight.load(Ordering::Relaxed),
+                queue_depth: s.queue.depth(),
+            }));
+            self.dispatch.pick(&views)
+        });
+        let idx = idx.min(self.shards.len() - 1);
+        let shard = &self.shards[idx];
+        shard.inflight.fetch_add(1, Ordering::Relaxed);
+        let req = EngineRequest { x, reply, t_start: crate::util::timer::Timer::start() };
+        match shard.queue.admit(req, self.admission) {
+            admission::Admit::Admitted => {
+                shard.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                Ok(idx)
+            }
+            admission::Admit::Evicted(old) => {
+                // the new request is in; the oldest queued one is shed
+                shard.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                shard.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                old.reply.send_rejected(RejectReason::QueueFull);
+                Ok(idx)
+            }
+            admission::Admit::RejectedFull(_) => {
+                shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                shard.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                Err(RejectReason::QueueFull)
+            }
+            admission::Admit::RejectedClosed(_) => {
+                shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                Err(RejectReason::ShuttingDown)
+            }
+        }
+    }
+
+    /// Non-blocking request path (the `Block` admission policy may
+    /// still park the caller at a full queue — that is its contract).
+    /// `Err` means the request was never admitted; an `Ok` ticket
+    /// resolves to logits, or to a rejection if the request is later
+    /// evicted (`ShedOldest`) or its worker dies.
+    pub fn try_submit(&self, x: Vec<f32>) -> Result<Ticket, RejectReason> {
+        let (tx, rx) = channel();
+        let shard = self.admit(x, ReplyTx::Ticket(tx))?;
+        Ok(Ticket { rx, shard })
+    }
+
+    /// Convenience: submit and wait for the outcome.
+    pub fn infer(&self, x: Vec<f32>) -> Response {
+        match self.try_submit(x) {
+            Ok(ticket) => ticket.wait(),
+            Err(reason) => Response::Rejected(reason),
+        }
+    }
+
+    /// Per-worker metrics, shard order.
+    pub fn worker_metrics(&self) -> Vec<Arc<Metrics>> {
+        self.shards.iter().map(|s| s.metrics.clone()).collect()
+    }
+
+    /// Engine-wide latency percentiles `(p50, p90, p99)` in seconds,
+    /// computed over the **merged** per-worker latency samples (never
+    /// by averaging per-worker percentiles — that is not a percentile).
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        Metrics::merged_percentiles(self.shards.iter().map(|s| s.metrics.as_ref()))
+    }
+
+    /// Snapshot of counters and per-shard load.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            submitted: self.metrics.requests.load(Ordering::Relaxed),
+            completed: self.metrics.completed.load(Ordering::Relaxed),
+            shed: self.metrics.shed.load(Ordering::Relaxed),
+            shards: self
+                .shards
+                .iter()
+                .map(|s| ShardStats {
+                    inflight: s.inflight.load(Ordering::Relaxed),
+                    queue_depth: s.queue.depth(),
+                    max_queue_depth: s.queue.max_depth(),
+                    completed: s.metrics.completed.load(Ordering::Relaxed),
+                    shed: s.metrics.shed.load(Ordering::Relaxed),
+                })
+                .collect(),
+        }
+    }
+
+    /// Multi-line report: aggregate summary plus one line per shard.
+    pub fn report(&self) -> String {
+        let (p50, p90, p99) = self.latency_percentiles();
+        let stats = self.stats();
+        let mut out = format!(
+            "engine ({} workers, dispatch={}, admission={}): requests={} completed={} \
+             shed={} batches={} mean_batch={:.1} | p50={:.3}ms p90={:.3}ms p99={:.3}ms",
+            self.shards.len(),
+            self.dispatch.name(),
+            self.admission.as_str(),
+            stats.submitted,
+            stats.completed,
+            stats.shed,
+            self.metrics.batches.load(Ordering::Relaxed),
+            self.metrics.mean_batch_size(),
+            p50 * 1e3,
+            p90 * 1e3,
+            p99 * 1e3,
+        );
+        for (i, (s, st)) in self.shards.iter().zip(&stats.shards).enumerate() {
+            // the summary line already carries this shard's shed counter
+            out.push_str(&format!(
+                "\n  worker {i}: {} max_depth={}",
+                s.metrics.summary(),
+                st.max_queue_depth
+            ));
+        }
+        out
+    }
+
+    fn stop(&mut self) {
+        for s in self.shards.iter() {
+            s.queue.close();
+        }
+        for s in self.shards.iter_mut() {
+            if let Some(j) = s.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+
+    /// Graceful shutdown: closes every shard queue (blocked submitters
+    /// get `ShuttingDown`), drains in-flight work, joins the workers.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Backend that sums features into class 0, optionally slowly.
+    struct Echo {
+        calls: Arc<AtomicUsize>,
+        delay: Duration,
+    }
+
+    impl Echo {
+        fn factory(
+            calls: Arc<AtomicUsize>,
+            delay: Duration,
+        ) -> impl Fn() -> Box<dyn InferenceBackend> + Clone + Send + 'static {
+            move || Box::new(Echo { calls: calls.clone(), delay }) as Box<dyn InferenceBackend>
+        }
+    }
+
+    impl InferenceBackend for Echo {
+        fn batch_capacity(&self) -> usize {
+            4
+        }
+        fn features(&self) -> usize {
+            3
+        }
+        fn classes(&self) -> usize {
+            2
+        }
+        fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            let mut out = vec![0.0; 4 * 2];
+            for i in 0..4 {
+                out[i * 2] = x[i * 3] + x[i * 3 + 1] + x[i * 3 + 2];
+                out[i * 2 + 1] = -1.0;
+            }
+            out
+        }
+    }
+
+    fn quick_engine(workers: usize) -> Engine {
+        EngineBuilder::new()
+            .workers(workers)
+            .max_wait(Duration::from_millis(1))
+            .build_with(Echo::factory(Arc::new(AtomicUsize::new(0)), Duration::ZERO))
+    }
+
+    #[test]
+    fn ticket_roundtrip() {
+        let eng = quick_engine(1);
+        assert_eq!(eng.features(), 3);
+        assert_eq!(eng.classes(), 2);
+        let t = eng.try_submit(vec![1.0, 2.0, 3.0]).expect("admitted");
+        assert_eq!(t.wait(), Response::Logits(vec![6.0, -1.0]));
+        let (p50, _, p99) = eng.latency_percentiles();
+        assert!(p50 > 0.0 && p99 >= p50, "merged percentiles populated");
+        let stats = eng.stats();
+        assert_eq!((stats.submitted, stats.completed, stats.shed), (1, 1, 0));
+        eng.shutdown();
+    }
+
+    #[test]
+    fn bad_shape_is_rejected_immediately() {
+        let eng = quick_engine(1);
+        match eng.try_submit(vec![1.0]) {
+            Err(RejectReason::BadShape { expected: 3, got: 1 }) => {}
+            other => panic!("expected BadShape, got {:?}", other.map(|_| "ticket")),
+        }
+    }
+
+    #[test]
+    fn infer_convenience_matches_ticket_path() {
+        let eng = quick_engine(2);
+        for i in 0..8 {
+            let x = vec![i as f32, 1.0, 0.0];
+            assert_eq!(eng.infer(x), Response::Logits(vec![i as f32 + 1.0, -1.0]));
+        }
+        assert_eq!(eng.stats().completed, 8);
+    }
+
+    #[test]
+    fn shed_newest_rejects_past_the_bound() {
+        // one slow worker, queue bound 2, capacity-4 batches
+        let eng = EngineBuilder::new()
+            .workers(1)
+            .queue_depth(2)
+            .admission(AdmissionPolicy::ShedNewest)
+            .max_wait(Duration::from_millis(1))
+            .build_with(Echo::factory(Arc::new(AtomicUsize::new(0)), Duration::from_millis(20)));
+        let mut tickets = Vec::new();
+        let mut rejected = 0usize;
+        for i in 0..32 {
+            match eng.try_submit(vec![i as f32, 0.0, 0.0]) {
+                Ok(t) => tickets.push((i, t)),
+                Err(RejectReason::QueueFull) => rejected += 1,
+                Err(other) => panic!("unexpected rejection {other:?}"),
+            }
+        }
+        assert!(rejected > 0, "32 rapid submits at a 2-deep queue must shed");
+        let stats = eng.stats();
+        assert_eq!(stats.shed, rejected as u64);
+        assert!(stats.shards[0].max_queue_depth <= 2, "bound held");
+        for (i, t) in tickets {
+            assert_eq!(
+                t.wait(),
+                Response::Logits(vec![i as f32, -1.0]),
+                "admitted request {i} served correctly"
+            );
+        }
+        eng.shutdown();
+    }
+
+    #[test]
+    fn shed_oldest_evicts_and_resolves_old_ticket() {
+        let eng = EngineBuilder::new()
+            .workers(1)
+            .queue_depth(1)
+            .admission(AdmissionPolicy::ShedOldest)
+            .max_wait(Duration::from_millis(1))
+            .build_with(Echo::factory(Arc::new(AtomicUsize::new(0)), Duration::from_millis(30)));
+        // first request occupies the worker; then overfill the 1-deep queue
+        let mut tickets = Vec::new();
+        for i in 0..6 {
+            tickets.push(eng.try_submit(vec![i as f32, 0.0, 0.0]).expect("shed-oldest admits"));
+        }
+        let outcomes: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+        let served = outcomes.iter().filter(|r| matches!(r, Response::Logits(_))).count();
+        let evicted = outcomes
+            .iter()
+            .filter(|r| matches!(r, Response::Rejected(RejectReason::QueueFull)))
+            .count();
+        assert_eq!(served + evicted, 6);
+        assert!(evicted > 0, "overfilling a 1-deep shed-oldest queue evicts");
+        assert_eq!(eng.stats().shed, evicted as u64);
+        // the newest request always survives eviction
+        assert!(
+            matches!(outcomes.last().unwrap(), Response::Logits(_)),
+            "newest request is never the eviction victim"
+        );
+        eng.shutdown();
+    }
+
+    #[test]
+    fn builder_round_robin_spreads_exactly() {
+        let eng = EngineBuilder::new()
+            .workers(3)
+            .dispatch(DispatchKind::RoundRobin)
+            .max_wait(Duration::from_micros(200))
+            .build_with(Echo::factory(Arc::new(AtomicUsize::new(0)), Duration::ZERO));
+        for i in 0..12 {
+            assert_eq!(
+                eng.infer(vec![i as f32, 1.0, 0.0]),
+                Response::Logits(vec![i as f32 + 1.0, -1.0])
+            );
+        }
+        for (i, m) in eng.worker_metrics().iter().enumerate() {
+            assert_eq!(m.completed.load(Ordering::Relaxed), 4, "worker {i}");
+        }
+        eng.shutdown();
+    }
+
+    #[test]
+    fn worker_panic_resolves_queued_tickets_instead_of_hanging() {
+        /// Backend whose every inference panics.
+        struct Bomb;
+        impl InferenceBackend for Bomb {
+            fn batch_capacity(&self) -> usize {
+                1
+            }
+            fn features(&self) -> usize {
+                1
+            }
+            fn classes(&self) -> usize {
+                1
+            }
+            fn infer_batch(&mut self, _x: &[f32]) -> Vec<f32> {
+                panic!("backend exploded (expected in this test)");
+            }
+        }
+        let eng = EngineBuilder::new()
+            .workers(1)
+            .queue_depth(8)
+            .max_wait(Duration::from_millis(1))
+            .build_with(|| Box::new(Bomb) as Box<dyn InferenceBackend>);
+        // burst several requests: the first batch dies mid-inference,
+        // the rest are drained by the worker's queue guard
+        let tickets: Vec<_> = (0..6).filter_map(|_| eng.try_submit(vec![0.5]).ok()).collect();
+        assert!(!tickets.is_empty(), "at least the first submit is admitted");
+        for (i, t) in tickets.into_iter().enumerate() {
+            // the contract: resolve (to WorkerFailed), never hang
+            match t.wait_timeout(Duration::from_secs(10)) {
+                Some(Response::Rejected(RejectReason::WorkerFailed)) => {}
+                other => panic!("ticket {i}: expected WorkerFailed, got {other:?}"),
+            }
+        }
+        // the dead shard's queue is closed: new submits are refused
+        match eng.infer(vec![0.5]) {
+            Response::Rejected(RejectReason::ShuttingDown | RejectReason::WorkerFailed) => {}
+            other => panic!("expected rejection from dead shard, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn report_mentions_policies() {
+        let eng = EngineBuilder::new()
+            .workers(2)
+            .dispatch(DispatchKind::EwmaP99)
+            .admission(AdmissionPolicy::ShedNewest)
+            .build_with(Echo::factory(Arc::new(AtomicUsize::new(0)), Duration::ZERO));
+        let _ = eng.infer(vec![0.0, 0.0, 0.0]);
+        let r = eng.report();
+        assert!(r.contains("ewma-p99") && r.contains("shed-newest"), "{r}");
+        assert_eq!(eng.dispatch_name(), "ewma-p99");
+        assert_eq!(eng.admission(), AdmissionPolicy::ShedNewest);
+    }
+}

@@ -1,0 +1,180 @@
+//! Ticket-based request path: `try_submit` hands back a [`Ticket`]
+//! immediately; the outcome — logits or a typed rejection — arrives
+//! through it.
+//!
+//! The ticket is the unit the ROADMAP's multi-process sharding item
+//! needs: it is a one-shot channel whose payload ([`Response`]) is
+//! plain data, so an IPC transport can carry the same contract across
+//! process boundaries without touching the engine internals.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::Duration;
+
+/// Why a request was not (or will not be) served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The picked shard's admission queue was at its depth bound
+    /// (`ShedNewest` rejects the new request, `ShedOldest` evicts the
+    /// oldest queued one — both report this reason).
+    QueueFull,
+    /// The engine is shutting down (or already shut down).
+    ShuttingDown,
+    /// Input length does not match the model's feature count.
+    BadShape {
+        /// Expected feature count.
+        expected: usize,
+        /// Submitted input length.
+        got: usize,
+    },
+    /// The worker shard died before answering (its thread panicked).
+    WorkerFailed,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull => write!(f, "admission queue full"),
+            RejectReason::ShuttingDown => write!(f, "engine shutting down"),
+            RejectReason::BadShape { expected, got } => {
+                write!(f, "bad input shape: expected {expected} features, got {got}")
+            }
+            RejectReason::WorkerFailed => write!(f, "worker shard failed"),
+        }
+    }
+}
+
+/// Terminal outcome of an admitted request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Class logits for the submitted sample.
+    Logits(Vec<f32>),
+    /// The request was admitted but later rejected (evicted by
+    /// `ShedOldest`, or its worker died).
+    Rejected(RejectReason),
+}
+
+impl Response {
+    /// Logits if served, `None` on rejection.
+    pub fn logits(self) -> Option<Vec<f32>> {
+        match self {
+            Response::Logits(l) => Some(l),
+            Response::Rejected(_) => None,
+        }
+    }
+}
+
+/// Handle to one in-flight request.
+pub struct Ticket {
+    pub(crate) rx: Receiver<Response>,
+    pub(crate) shard: usize,
+}
+
+impl Ticket {
+    /// Index of the worker shard the request was dispatched to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Block until the outcome arrives.  A dead worker resolves to
+    /// [`Response::Rejected`]`(`[`RejectReason::WorkerFailed`]`)`
+    /// instead of panicking.
+    pub fn wait(self) -> Response {
+        self.rx.recv().unwrap_or(Response::Rejected(RejectReason::WorkerFailed))
+    }
+
+    /// Wait up to `timeout`; `None` if no outcome arrived in time (the
+    /// ticket stays valid — call again or [`Ticket::wait`]).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Response> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                Some(Response::Rejected(RejectReason::WorkerFailed))
+            }
+        }
+    }
+
+    /// Non-blocking poll; `None` if the outcome is not ready yet.
+    pub fn try_wait(&self) -> Option<Response> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                Some(Response::Rejected(RejectReason::WorkerFailed))
+            }
+        }
+    }
+}
+
+/// Reply channel of one queued request.  The engine's ticket path
+/// carries a typed [`Response`]; the legacy `ShardedServer::submit`
+/// path carries bare logits (rejections there surface as a closed
+/// channel, matching the historical behavior).
+pub(crate) enum ReplyTx {
+    /// `try_submit` path: typed response.
+    Ticket(Sender<Response>),
+    /// Legacy `submit` path: bare logits.
+    Legacy(Sender<Vec<f32>>),
+}
+
+impl ReplyTx {
+    /// Answer with logits (receiver may have hung up; that's fine).
+    pub(crate) fn send_logits(self, logits: Vec<f32>) {
+        match self {
+            ReplyTx::Ticket(tx) => {
+                let _ = tx.send(Response::Logits(logits));
+            }
+            ReplyTx::Legacy(tx) => {
+                let _ = tx.send(logits);
+            }
+        }
+    }
+
+    /// Answer with a rejection (legacy receivers just see the channel
+    /// close).
+    pub(crate) fn send_rejected(self, reason: RejectReason) {
+        match self {
+            ReplyTx::Ticket(tx) => {
+                let _ = tx.send(Response::Rejected(reason));
+            }
+            ReplyTx::Legacy(_) => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn ticket_waits_and_times_out() {
+        let (tx, rx) = channel();
+        let t = Ticket { rx, shard: 3 };
+        assert_eq!(t.shard(), 3);
+        assert!(t.try_wait().is_none());
+        assert!(t.wait_timeout(Duration::from_millis(2)).is_none(), "nothing sent yet");
+        tx.send(Response::Logits(vec![1.0, 2.0])).unwrap();
+        assert_eq!(t.wait(), Response::Logits(vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn dead_worker_resolves_to_worker_failed() {
+        let (tx, rx) = channel::<Response>();
+        drop(tx);
+        let t = Ticket { rx, shard: 0 };
+        assert_eq!(t.wait(), Response::Rejected(RejectReason::WorkerFailed));
+    }
+
+    #[test]
+    fn response_logits_accessor() {
+        assert_eq!(Response::Logits(vec![0.5]).logits(), Some(vec![0.5]));
+        assert_eq!(Response::Rejected(RejectReason::QueueFull).logits(), None);
+    }
+
+    #[test]
+    fn reject_reasons_display() {
+        assert!(format!("{}", RejectReason::QueueFull).contains("full"));
+        assert!(format!("{}", RejectReason::BadShape { expected: 784, got: 3 }).contains("784"));
+    }
+}

@@ -1,0 +1,130 @@
+//! One worker shard: a dedicated OS thread owning a backend instance,
+//! draining its private bounded admission queue through the adaptive
+//! [`Batcher`](super::batcher::Batcher).
+//!
+//! The backend is constructed *on* the worker thread via a factory, so
+//! non-`Send` backends (PJRT handles are `Rc`-based) work unchanged.
+//! Each worker keeps its own [`Metrics`] (the engine merges them on
+//! read — see `Metrics::merged_percentiles`), bumps the engine-wide
+//! aggregate counters, maintains the in-flight gauge the dispatcher
+//! reads, and reports each completion latency back to the
+//! [`DispatchPolicy`](super::dispatch::DispatchPolicy) so learning
+//! policies (EWMA) can adapt.
+
+use super::admission::BoundedQueue;
+use super::batcher::Batcher;
+use super::dispatch::DispatchPolicy;
+use super::ticket::{RejectReason, ReplyTx};
+use super::InferenceBackend;
+use crate::coordinator::metrics::Metrics;
+use crate::util::timer::Timer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One queued inference request (a single sample).
+pub(crate) struct EngineRequest {
+    /// Flattened input features.
+    pub x: Vec<f32>,
+    /// Where the outcome goes.
+    pub reply: ReplyTx,
+    /// End-to-end latency stopwatch, started at submit.
+    pub t_start: Timer,
+}
+
+/// Handle to a running worker shard.
+pub(crate) struct Shard {
+    /// Bounded admission queue (`close()` begins shutdown).
+    pub queue: Arc<BoundedQueue<EngineRequest>>,
+    /// Requests dispatched to this shard but not yet answered.
+    pub inflight: Arc<AtomicUsize>,
+    /// This worker's own metrics, including its `shed` counter (the
+    /// engine merges these on read).
+    pub metrics: Arc<Metrics>,
+    /// Worker thread handle.
+    pub join: Option<JoinHandle<()>>,
+}
+
+/// Closes and drains the shard queue when the worker thread exits —
+/// normally or by **panic** — so queued tickets resolve to
+/// [`RejectReason::WorkerFailed`] instead of hanging forever and
+/// submitters blocked on a full queue wake up (they get
+/// `ShuttingDown`).  Without this, a panicking backend would strand
+/// every queued request and deadlock `Block`-admission producers.
+struct QueueGuard {
+    queue: Arc<BoundedQueue<EngineRequest>>,
+}
+
+impl Drop for QueueGuard {
+    fn drop(&mut self) {
+        self.queue.close();
+        while let Some(req) = self.queue.pop_block() {
+            req.reply.send_rejected(RejectReason::WorkerFailed);
+        }
+    }
+}
+
+/// Spawn a worker shard.  Returns the shard handle plus a one-shot
+/// channel carrying `(features, classes)` once the backend is
+/// constructed on the worker thread.
+pub(crate) fn spawn<F>(
+    worker_id: usize,
+    factory: F,
+    max_wait: Duration,
+    queue_bound: usize,
+    aggregate: Arc<Metrics>,
+    dispatch: Arc<dyn DispatchPolicy>,
+) -> (Shard, Receiver<(usize, usize)>)
+where
+    F: FnOnce() -> Box<dyn InferenceBackend> + Send + 'static,
+{
+    let queue = Arc::new(BoundedQueue::new(queue_bound));
+    let (meta_tx, meta_rx) = channel();
+    let metrics = Arc::new(Metrics::new());
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let own = metrics.clone();
+    let gauge = inflight.clone();
+    let q = queue.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("sobolnet-engine-{worker_id}"))
+        .spawn(move || {
+            let _guard = QueueGuard { queue: q.clone() };
+            let mut backend = factory();
+            let cap = backend.batch_capacity();
+            let feat = backend.features();
+            let classes = backend.classes();
+            let _ = meta_tx.send((feat, classes));
+            let batcher = Batcher { capacity: cap, max_wait };
+            let mut xbuf = vec![0.0f32; cap * feat];
+            while let Some(batch) = batcher.next_batch(&*q) {
+                // assemble the padded batch: real rows are overwritten,
+                // only the tail padding needs (re)zeroing
+                for (i, r) in batch.iter().enumerate() {
+                    xbuf[i * feat..(i + 1) * feat].copy_from_slice(&r.x);
+                }
+                for v in &mut xbuf[batch.len() * feat..] {
+                    *v = 0.0;
+                }
+                let logits = backend.infer_batch(&xbuf);
+                own.record_batch(batch.len(), cap);
+                aggregate.record_batch(batch.len(), cap);
+                for (i, r) in batch.into_iter().enumerate() {
+                    let out = logits[i * classes..(i + 1) * classes].to_vec();
+                    let secs = r.t_start.elapsed_secs();
+                    // latency samples live only in the per-worker
+                    // metrics; the engine merges them before computing
+                    // aggregate percentiles, so the per-request cost
+                    // here is one uncontended lock, not two
+                    own.record_latency(secs);
+                    aggregate.completed.fetch_add(1, Ordering::Relaxed);
+                    dispatch.observe(worker_id, secs);
+                    gauge.fetch_sub(1, Ordering::Relaxed);
+                    r.reply.send_logits(out);
+                }
+            }
+        })
+        .expect("spawn engine worker thread");
+    (Shard { queue, inflight, metrics, join: Some(join) }, meta_rx)
+}

@@ -1,140 +1,39 @@
-//! Sharded inference serving subsystem (L3): N worker shards, each
-//! owning a backend instance and a private request queue, behind a
-//! round-robin / least-loaded dispatcher.
+//! Legacy serving surface: a thin compatibility layer over
+//! [`crate::engine`].
 //!
-//! This realizes the paper's parallel-hardware argument *end-to-end*:
-//! path-sparse networks stream weights as contiguous blocks
-//! (§3, §4.4), the engine's forward pass shards conflict-free over
-//! batch columns ([`crate::nn::sparse`]), and this layer shards request
-//! traffic over backend replicas — so throughput scales with both
-//! threads-per-forward (`SOBOLNET_THREADS`) and workers-per-server.
-//! All worker shards dispatch onto the single process-wide persistent
-//! pool of [`crate::util::parallel`] (one job at a time, each using
-//! every pool thread), so per-forward fan-out costs a park/wake
-//! round-trip instead of thread spawns even at batch sizes of a few
-//! thousand edge-work units.
+//! The sharded dispatcher/batcher/worker machinery that lived here
+//! grew into the unified engine (`rust/src/engine/`): non-blocking
+//! ticket submission, bounded per-shard admission queues with
+//! [`AdmissionPolicy`](crate::engine::AdmissionPolicy), and a
+//! pluggable [`DispatchPolicy`](crate::engine::DispatchPolicy)
+//! replacing the [`Dispatch`] enum kept here.  New code should build an
+//! [`crate::engine::EngineBuilder`]; this module keeps the historical
+//! `ShardedServer` API working on top of it:
 //!
-//! Architecture (one [`ShardedServer`]):
+//! * [`ShardedServer::submit`] is the blocking path — it maps to the
+//!   engine with `AdmissionPolicy::Block` over unbounded queues, which
+//!   is exactly the old behavior (never sheds, never rejects),
+//! * [`ServeConfig`] carries the old three knobs and converts into an
+//!   engine configuration,
+//! * [`InferenceBackend`] / [`ModelBackend`] moved to
+//!   [`crate::engine::backend`] and are re-exported under their old
+//!   paths.
 //!
-//! ```text
-//! submit(x) ──► dispatcher (round-robin | least-loaded inflight gauge)
-//!                 │                │
-//!                 ▼                ▼
-//!             worker 0         worker N-1          (each: own thread,
-//!            ┌─────────┐      ┌─────────┐           own backend built
-//!            │ queue    │  …  │ queue    │          on-thread via the
-//!            │ batcher  │     │ batcher  │          factory, so non-
-//!            │ backend  │     │ backend  │          `Send` PJRT works)
-//!            │ metrics  │     │ metrics  │
-//!            └─────────┘      └─────────┘
-//! ```
-//!
-//! The [`batcher::Batcher`] flushes on a full batch or `max_wait`,
-//! whichever comes first; per-worker [`Metrics`] are aggregated into
-//! server-wide latency percentiles and throughput counters.
-//!
-//! The single-worker `coordinator::server::InferenceServer` of earlier
-//! revisions is absorbed here; `coordinator::server` re-exports these
-//! types under their old names for compatibility.
+//! The still-older single-worker `coordinator::server::InferenceServer`
+//! names remain as `#[deprecated]` aliases one layer further out.
 
-pub mod batcher;
-pub mod worker;
-
-use crate::coordinator::metrics::Metrics;
-use crate::util::timer::Timer;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::engine::ticket::ReplyTx;
+use crate::engine::{AdmissionPolicy, DispatchKind, Engine, EngineBuilder};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::time::Duration;
-use worker::{Request, WorkerHandle};
 
-/// Something that can classify a fixed-size batch.
-///
-/// Implemented by the AOT executable wrapper (see
-/// `coordinator::train::AotForward`) and by the pure-rust models (via
-/// [`ModelBackend`]), so the same server fronts both.
-///
-/// Backends need not be `Send`: workers construct them *on* their own
-/// thread via a factory (PJRT handles are `Rc`-based and cannot cross
-/// threads).
-pub trait InferenceBackend {
-    /// Static batch capacity of one execution.
-    fn batch_capacity(&self) -> usize;
+pub use crate::coordinator::metrics::Metrics;
+pub use crate::engine::{InferenceBackend, ModelBackend};
 
-    /// Features per sample.
-    fn features(&self) -> usize;
-
-    /// Classes per sample.
-    fn classes(&self) -> usize;
-
-    /// Run on a `[capacity × features]` buffer (padded rows arbitrary);
-    /// returns `[capacity × classes]` logits.
-    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32>;
-}
-
-/// Blanket adapter for pure-rust [`crate::nn::Model`]s.
-///
-/// Holds reusable input/output tensors, so on the serve hot path each
-/// batch costs one forward pass plus a single logits copy — the model's
-/// own scratch (e.g. `SparseMlp`) allocates nothing once warm, and the
-/// forward fans out on the shared process-wide worker pool of
-/// [`crate::util::parallel`].
-pub struct ModelBackend<M: crate::nn::Model + Send> {
-    /// Wrapped model.
-    pub model: M,
-    /// Fixed batch capacity to emulate.
-    pub capacity: usize,
-    /// Input features.
-    pub features: usize,
-    /// Output classes.
-    pub classes: usize,
-    /// Reused `[capacity, features]` input staging tensor.
-    xbuf: crate::nn::tensor::Tensor,
-    /// Reused logits tensor.
-    obuf: crate::nn::tensor::Tensor,
-}
-
-impl<M: crate::nn::Model + Send> ModelBackend<M> {
-    /// Wrap `model` behind a fixed `[capacity × features] →
-    /// [capacity × classes]` serving contract.
-    pub fn new(model: M, capacity: usize, features: usize, classes: usize) -> Self {
-        ModelBackend {
-            model,
-            capacity,
-            features,
-            classes,
-            xbuf: crate::nn::tensor::Tensor::empty(),
-            obuf: crate::nn::tensor::Tensor::empty(),
-        }
-    }
-}
-
-impl<M: crate::nn::Model + Send> InferenceBackend for ModelBackend<M> {
-    fn batch_capacity(&self) -> usize {
-        self.capacity
-    }
-
-    fn features(&self) -> usize {
-        self.features
-    }
-
-    fn classes(&self) -> usize {
-        self.classes
-    }
-
-    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.capacity * self.features, "infer_batch input shape");
-        self.xbuf.shape.clear();
-        self.xbuf.shape.push(self.capacity);
-        self.xbuf.shape.push(self.features);
-        self.xbuf.data.clear();
-        self.xbuf.data.extend_from_slice(x);
-        self.model.forward_into(&self.xbuf, false, &mut self.obuf);
-        self.obuf.data.clone()
-    }
-}
-
-/// How `submit` picks a worker shard.
+/// How `submit` picks a worker shard (legacy enum; the engine's
+/// [`DispatchKind`](crate::engine::DispatchKind) supersedes it and
+/// adds the p99-aware EWMA policy).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dispatch {
     /// Strict rotation over the shards.
@@ -143,7 +42,17 @@ pub enum Dispatch {
     LeastLoaded,
 }
 
-/// Server configuration.
+impl Dispatch {
+    fn kind(self) -> DispatchKind {
+        match self {
+            Dispatch::RoundRobin => DispatchKind::RoundRobin,
+            Dispatch::LeastLoaded => DispatchKind::LeastLoaded,
+        }
+    }
+}
+
+/// Server configuration (legacy knobs; `EngineBuilder` absorbs these
+/// plus admission policy and queue bounds).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Number of worker shards (each owns one backend instance).
@@ -164,50 +73,44 @@ impl Default for ServeConfig {
     }
 }
 
-/// Handle to a running sharded inference server.
+impl ServeConfig {
+    fn builder(&self) -> EngineBuilder {
+        EngineBuilder::new()
+            .workers(self.workers)
+            .max_wait(self.max_wait)
+            .dispatch(self.dispatch.kind())
+            // legacy semantics: unbounded queues, blocking admission
+            .queue_depth(0)
+            .admission(AdmissionPolicy::Block)
+    }
+}
+
+/// Handle to a running sharded inference server (compatibility wrapper
+/// over [`crate::engine::Engine`]).
 pub struct ShardedServer {
-    shards: Vec<WorkerHandle>,
-    rr: AtomicUsize,
-    dispatch: Dispatch,
-    /// Aggregate metrics across all shards (plus accepted-request count).
+    engine: Engine,
+    /// Aggregate *counters* across all shards.  Latency samples now
+    /// live per-worker and are merged on read, so calling
+    /// `latency_percentiles()`/`summary()` on this registry yields NaN
+    /// percentiles — use [`ShardedServer::latency_percentiles`] (or
+    /// [`ShardedServer::report`]), which merge the per-worker
+    /// histograms before ranking.
     pub metrics: Arc<Metrics>,
-    features: usize,
 }
 
 impl ShardedServer {
+    fn wrap(engine: Engine) -> ShardedServer {
+        let metrics = engine.metrics.clone();
+        ShardedServer { engine, metrics }
+    }
+
     /// Spawn `cfg.workers` shards, each building its own backend by
     /// calling a clone of `factory` on its worker thread.
     pub fn start_sharded_with<F>(factory: F, cfg: ServeConfig) -> ShardedServer
     where
         F: Fn() -> Box<dyn InferenceBackend> + Clone + Send + 'static,
     {
-        let n = cfg.workers.max(1);
-        let metrics = Arc::new(Metrics::new());
-        let mut shards = Vec::with_capacity(n);
-        // spawn every worker first so the backends construct concurrently,
-        // then collect their metadata
-        let mut metas = Vec::with_capacity(n);
-        for wid in 0..n {
-            let f = factory.clone();
-            let (handle, meta_rx) = worker::spawn(wid, move || f(), cfg.max_wait, metrics.clone());
-            shards.push(handle);
-            metas.push(meta_rx);
-        }
-        let mut features: Option<usize> = None;
-        for meta_rx in metas {
-            let (feat, _classes) = meta_rx.recv().expect("backend constructed");
-            match features {
-                None => features = Some(feat),
-                Some(prev) => assert_eq!(prev, feat, "workers disagree on feature count"),
-            }
-        }
-        ShardedServer {
-            shards,
-            rr: AtomicUsize::new(0),
-            dispatch: cfg.dispatch,
-            metrics,
-            features: features.expect("at least one worker"),
-        }
+        Self::wrap(cfg.builder().build_with(factory))
     }
 
     /// Spawn a single shard around a backend built by `factory` on the
@@ -218,16 +121,8 @@ impl ShardedServer {
     where
         F: FnOnce() -> Box<dyn InferenceBackend> + Send + 'static,
     {
-        let metrics = Arc::new(Metrics::new());
-        let (handle, meta_rx) = worker::spawn(0, factory, cfg.max_wait, metrics.clone());
-        let (features, _classes) = meta_rx.recv().expect("backend constructed");
-        ShardedServer {
-            shards: vec![handle],
-            rr: AtomicUsize::new(0),
-            dispatch: cfg.dispatch,
-            metrics,
-            features,
-        }
+        let boxed: crate::engine::BackendFactory = Box::new(factory);
+        Self::wrap(cfg.builder().workers(1).build_each(vec![boxed]))
     }
 
     /// Spawn a single shard around an already-constructed `Send` backend.
@@ -235,49 +130,23 @@ impl ShardedServer {
         Self::start_with(move || backend as Box<dyn InferenceBackend>, cfg)
     }
 
+    /// The engine underneath (tickets, stats, admission control).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
     /// Number of worker shards.
     pub fn workers(&self) -> usize {
-        self.shards.len()
+        self.engine.workers()
     }
 
-    fn pick_shard(&self) -> usize {
-        let n = self.shards.len();
-        if n == 1 {
-            return 0;
-        }
-        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
-        match self.dispatch {
-            Dispatch::RoundRobin => start,
-            Dispatch::LeastLoaded => {
-                let mut best = start;
-                let mut best_load = self.shards[start].inflight.load(Ordering::Relaxed);
-                for k in 1..n {
-                    let i = (start + k) % n;
-                    let load = self.shards[i].inflight.load(Ordering::Relaxed);
-                    if load < best_load {
-                        best = i;
-                        best_load = load;
-                    }
-                }
-                best
-            }
-        }
-    }
-
-    /// Submit one sample; returns a receiver for the logits.
+    /// Submit one sample; returns a receiver for the logits.  Blocking
+    /// legacy path: admission never sheds (unbounded queues), so the
+    /// receiver always gets an answer while the server lives.
     pub fn submit(&self, x: Vec<f32>) -> Receiver<Vec<f32>> {
-        assert_eq!(x.len(), self.features, "wrong feature count");
+        assert_eq!(x.len(), self.engine.features(), "wrong feature count");
         let (rtx, rrx) = channel();
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let shard = &self.shards[self.pick_shard()];
-        shard.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        shard.inflight.fetch_add(1, Ordering::Relaxed);
-        shard
-            .tx
-            .as_ref()
-            .expect("server running")
-            .send(Request { x, respond: rtx, t_start: Timer::start() })
-            .expect("worker alive");
+        self.engine.admit(x, ReplyTx::Legacy(rtx)).expect("server running");
         rrx
     }
 
@@ -288,44 +157,30 @@ impl ShardedServer {
 
     /// Per-worker metrics, shard order.
     pub fn worker_metrics(&self) -> Vec<Arc<Metrics>> {
-        self.shards.iter().map(|s| s.metrics.clone()).collect()
+        self.engine.worker_metrics()
+    }
+
+    /// Server-wide latency percentiles `(p50, p90, p99)` in seconds,
+    /// merged across the per-worker histograms.
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        self.engine.latency_percentiles()
     }
 
     /// Multi-line report: aggregate summary plus one line per shard.
     pub fn report(&self) -> String {
-        let mut out = format!("aggregate ({} workers): {}", self.shards.len(), self.metrics.summary());
-        for (i, s) in self.shards.iter().enumerate() {
-            out.push_str(&format!("\n  worker {i}: {}", s.metrics.summary()));
-        }
-        out
-    }
-
-    fn stop(&mut self) {
-        for s in self.shards.iter_mut() {
-            s.tx.take();
-        }
-        for s in self.shards.iter_mut() {
-            if let Some(j) = s.join.take() {
-                let _ = j.join();
-            }
-        }
+        self.engine.report()
     }
 
     /// Graceful shutdown (drains in-flight work on every shard).
-    pub fn shutdown(mut self) {
-        self.stop();
-    }
-}
-
-impl Drop for ShardedServer {
-    fn drop(&mut self) {
-        self.stop();
+    pub fn shutdown(self) {
+        self.engine.shutdown();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::Ordering;
 
     /// Backend that sums features into class 0 and counts calls.
     struct Echo {
@@ -361,7 +216,7 @@ mod tests {
         );
         let y = srv.infer(vec![1.0, 2.0, 3.0]);
         assert_eq!(y, vec![6.0, -1.0]);
-        let (p50, _, _) = srv.metrics.latency_percentiles();
+        let (p50, _, _) = srv.latency_percentiles();
         assert!(p50 > 0.0);
         srv.shutdown();
     }
@@ -462,6 +317,20 @@ mod tests {
             .collect();
         assert_eq!(served.iter().sum::<u64>(), 4);
         assert!(served.iter().all(|&c| c > 0), "both shards served: {served:?}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn engine_accessor_exposes_ticket_path() {
+        let srv = ShardedServer::start(
+            Box::new(Echo { calls: Arc::new(Metrics::new()) }),
+            ServeConfig { max_wait: Duration::from_millis(1), ..Default::default() },
+        );
+        let t = srv.engine().try_submit(vec![2.0, 2.0, 2.0]).expect("block policy admits");
+        match t.wait() {
+            crate::engine::Response::Logits(l) => assert_eq!(l[0], 6.0),
+            other => panic!("unexpected {other:?}"),
+        }
         srv.shutdown();
     }
 }

@@ -1,10 +1,10 @@
 //! Cross-module integration: topology → engine → trainer → quantizer →
-//! checkpoint → server, all in the pure-rust stack (no artifacts
-//! required).
+//! checkpoint → serving engine, all in the pure-rust stack (no
+//! artifacts required).
 
 use sobolnet::coordinator::checkpoint::Checkpoint;
-use sobolnet::coordinator::server::{InferenceServer, ModelBackend, ServerConfig};
 use sobolnet::data::synth::{self, SynthConfig, SynthMnist};
+use sobolnet::engine::{EngineBuilder, Response};
 use sobolnet::nn::cnn::{Cnn, CnnConfig};
 use sobolnet::nn::init::Init;
 use sobolnet::nn::mlp::DenseMlp;
@@ -113,19 +113,20 @@ fn server_serves_trained_sparse_model_correctly() {
             (0..10).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap()
         })
         .collect();
-    // served predictions must match exactly
-    let backend = ModelBackend::new(net, 16, 784, 10);
-    let server = InferenceServer::start(Box::new(backend), ServerConfig::default());
+    // served predictions must match exactly (ticket path, batch 16)
+    let engine = EngineBuilder::new().batch(16).build_model(net, 784, 10);
     for i in 0..te.len() {
-        let y = server.infer(te.x.row(i).to_vec());
+        let y = match engine.infer(te.x.row(i).to_vec()) {
+            Response::Logits(y) => y,
+            Response::Rejected(r) => panic!("sample {i} rejected: {r}"),
+        };
         let pred = (0..10).max_by(|&a, &b| y[a].partial_cmp(&y[b]).unwrap()).unwrap();
         assert_eq!(pred, offline[i], "sample {i}");
     }
-    assert_eq!(
-        server.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
-        te.len() as u64
-    );
-    server.shutdown();
+    let stats = engine.stats();
+    assert_eq!(stats.completed, te.len() as u64);
+    assert_eq!(stats.shed, 0, "block admission never sheds");
+    engine.shutdown();
 }
 
 #[test]
