@@ -1,0 +1,168 @@
+//! Multi-process serving benchmark: the same burst load against an
+//! in-process engine and an N-process engine (worker shards spawned as
+//! real `shard-worker` child processes over Unix sockets), per the
+//! §Multi-process methodology in EXPERIMENTS.md.
+//!
+//! The interesting quantity is the **transport tax**: what one socket
+//! hop (serialize → unix socket → deserialize, and back) costs against
+//! the in-process path at equal worker counts, and how it amortizes as
+//! workers scale.  Both sides run the identical model replica (the
+//! deterministic spec means the processes build the same bits), the
+//! same batch capacity, and the same closed-burst load: submit `n`
+//! tickets up front, wait for all.
+//!
+//! Every figure lands in `BENCH_remote.json` at the repo root
+//! ([`sobolnet::bench::BenchReport`] metrics): per worker count the
+//! achieved throughput and merged p50/p99 for `inproc` and `remote`,
+//! plus the remote worker-process-side percentiles folded from stats
+//! frames.  Pass `--quick` (CI smoke mode) for a low-request run with
+//! the same coverage.
+
+use sobolnet::bench::BenchReport;
+use sobolnet::engine::{
+    DispatchKind, EngineBuilder, RemoteOptions, Response, SpawnSpec,
+};
+use sobolnet::nn::init::Init;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::topology::{PathSource, TopologyBuilder};
+use sobolnet::util::timer::Timer;
+use std::time::Duration;
+
+const FEATURES: usize = 64;
+const CLASSES: usize = 10;
+const PATHS: usize = 1024;
+const SEED: u64 = 7;
+const BATCH: usize = 16;
+
+/// Mirror of the model a `shard-worker` child builds from the same
+/// spec (sizes/paths/seed, epochs 0).
+fn make_net() -> SparseMlp {
+    let topo = TopologyBuilder::new(&[FEATURES, 64, 64, CLASSES])
+        .paths(PATHS)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+        .build();
+    SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantRandomSign, seed: SEED, ..Default::default() },
+    )
+}
+
+fn sample(i: usize) -> Vec<f32> {
+    (0..FEATURES).map(|j| ((i * FEATURES + j) as f32 * 0.173).sin()).collect()
+}
+
+struct BurstResult {
+    throughput: f64,
+    p50: f64,
+    p99: f64,
+}
+
+/// Closed burst: submit `n` tickets up front, wait for every outcome.
+fn run_burst(engine: &sobolnet::engine::Engine, n: usize) -> BurstResult {
+    let t = Timer::start();
+    let tickets: Vec<_> =
+        (0..n).map(|i| engine.try_submit(sample(i)).expect("block admission")).collect();
+    let mut served = 0usize;
+    for ticket in tickets {
+        if matches!(ticket.wait(), Response::Logits(_)) {
+            served += 1;
+        }
+    }
+    let secs = t.elapsed_secs();
+    assert_eq!(served, n, "closed burst over Block admission serves everything");
+    let (p50, _, p99) = engine.latency_percentiles();
+    BurstResult { throughput: served as f64 / secs.max(1e-12), p50, p99 }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n: usize = if quick { 128 } else { 512 };
+    let worker_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    if quick {
+        println!("bench remote: quick mode (CI smoke)");
+    }
+    let mut report = BenchReport::new();
+    let net = make_net();
+    // built from the same constants as make_net(): the spec and the
+    // in-process replica cannot silently diverge
+    let shard_args: Vec<String> = vec![
+        "--sizes".into(),
+        format!("{FEATURES},64,64,{CLASSES}"),
+        "--paths".into(),
+        PATHS.to_string(),
+        "--seed".into(),
+        SEED.to_string(),
+        "--batch".into(),
+        BATCH.to_string(),
+        "--max-wait-ms".into(),
+        "1".into(),
+    ];
+
+    for &w in worker_counts {
+        // in-process baseline at w workers
+        let inproc = EngineBuilder::new()
+            .workers(w)
+            .batch(BATCH)
+            .max_wait(Duration::from_millis(1))
+            .dispatch(DispatchKind::RoundRobin)
+            .build_model(net.clone(), FEATURES, CLASSES);
+        let a = run_burst(&inproc, n);
+        inproc.shutdown();
+
+        // the same load against w worker *processes*
+        let spec = SpawnSpec {
+            program: std::path::PathBuf::from(env!("CARGO_BIN_EXE_sobolnet")),
+            shard_args: shard_args.clone(),
+            ..Default::default()
+        };
+        let remote = EngineBuilder::new()
+            .max_wait(Duration::from_millis(1))
+            .dispatch(DispatchKind::RoundRobin)
+            .remote_options(RemoteOptions { stats_every: 32, ..Default::default() })
+            .spawn_workers(w, spec)
+            .expect("spawn shard-worker processes")
+            .build_remote()
+            .expect("build remote engine");
+        let b = run_burst(&remote, n);
+        // worker-process-side view, folded from the final stats frames
+        let slots = remote.remote_shard_metrics().expect("remote engine");
+        remote.shutdown();
+        let (rp50, _, rp99) =
+            sobolnet::engine::Metrics::merged_percentiles(slots.iter().map(|m| m.as_ref()));
+
+        println!(
+            "bench remote/{w}w: inproc {:.0} req/s (p50 {:.3}ms p99 {:.3}ms) | \
+             {w}-process {:.0} req/s (p50 {:.3}ms p99 {:.3}ms; worker-side p50 {:.3}ms p99 {:.3}ms)",
+            a.throughput,
+            a.p50 * 1e3,
+            a.p99 * 1e3,
+            b.throughput,
+            b.p50 * 1e3,
+            b.p99 * 1e3,
+            rp50 * 1e3,
+            rp99 * 1e3,
+        );
+        report.metric(&format!("remote_inproc_{w}w_req_per_sec"), a.throughput);
+        report.metric(&format!("remote_inproc_{w}w_p50_ms"), a.p50 * 1e3);
+        report.metric(&format!("remote_inproc_{w}w_p99_ms"), a.p99 * 1e3);
+        report.metric(&format!("remote_proc_{w}w_req_per_sec"), b.throughput);
+        report.metric(&format!("remote_proc_{w}w_p50_ms"), b.p50 * 1e3);
+        report.metric(&format!("remote_proc_{w}w_p99_ms"), b.p99 * 1e3);
+        report.metric(&format!("remote_proc_{w}w_worker_p50_ms"), rp50 * 1e3);
+        report.metric(&format!("remote_proc_{w}w_worker_p99_ms"), rp99 * 1e3);
+        report.metric(
+            &format!("remote_proc_{w}w_transport_tax"),
+            b.p50 / a.p50.max(1e-12),
+        );
+    }
+
+    // machine-readable output, tracked across PRs
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|repo| repo.join("BENCH_remote.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_remote.json"));
+    match report.write(&out_path) {
+        Ok(()) => println!("bench remote: wrote {}", out_path.display()),
+        Err(e) => println!("bench remote: could not write {}: {e}", out_path.display()),
+    }
+}

@@ -10,6 +10,73 @@ use crate::topology::{PathSource, SignPolicy};
 use json::JsonValue;
 use std::collections::BTreeMap;
 
+/// Multi-process serving knobs (`"serve": {"remote": {...}}`): where
+/// the worker shards live when they are separate OS processes.  Feeds
+/// the remote path of [`crate::engine::EngineBuilder`] (see
+/// `docs/ARCHITECTURE.md` for the transport itself).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RemoteSection {
+    /// Pre-started `shard-worker` addresses (`unix:/path`,
+    /// `tcp:host:port`).  Empty = not remote (unless `spawn` is set).
+    pub addrs: Vec<String>,
+    /// Number of `shard-worker` child processes for the CLI to spawn
+    /// (`0` = none; ignored when `addrs` is non-empty).
+    pub spawn: usize,
+    /// Poll each worker's stats frame every N batches (`0` = only the
+    /// final poll at shutdown).
+    pub stats_every: u64,
+}
+
+impl Default for RemoteSection {
+    fn default() -> Self {
+        RemoteSection { addrs: Vec::new(), spawn: 0, stats_every: 8 }
+    }
+}
+
+impl RemoteSection {
+    /// Parse from a JSON object; missing keys fall back to defaults.
+    pub fn from_json(v: &JsonValue) -> Result<Self, String> {
+        let mut cfg = RemoteSection::default();
+        let obj = v.as_object().ok_or("serve.remote section must be an object")?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "addrs" => {
+                    cfg.addrs = val
+                        .as_array()
+                        .ok_or("serve.remote.addrs must be an array")?
+                        .iter()
+                        .map(|a| {
+                            a.as_str()
+                                .map(|s| s.to_string())
+                                .ok_or("serve.remote.addrs entries must be strings")
+                        })
+                        .collect::<Result<_, _>>()?;
+                }
+                "spawn" => cfg.spawn = val.as_usize().ok_or("serve.remote.spawn int")?,
+                "stats_every" => {
+                    cfg.stats_every = val.as_usize().ok_or("serve.remote.stats_every int")? as u64
+                }
+                "comment" | "description" => {}
+                other => return Err(format!("unknown serve.remote key '{other}'")),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to a JSON object (round-trips through
+    /// [`RemoteSection::from_json`]).
+    pub fn to_json(&self) -> JsonValue {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "addrs".to_string(),
+            JsonValue::Array(self.addrs.iter().map(|a| JsonValue::String(a.clone())).collect()),
+        );
+        m.insert("spawn".to_string(), JsonValue::Number(self.spawn as f64));
+        m.insert("stats_every".to_string(), JsonValue::Number(self.stats_every as f64));
+        JsonValue::Object(m)
+    }
+}
+
 /// Serving/engine knobs of an experiment config (`"serve": {...}`),
 /// so engine setup is file-drivable like training.  Feeds
 /// [`crate::engine::EngineBuilder::from_config`].
@@ -27,6 +94,8 @@ pub struct ServeSection {
     pub dispatch: DispatchKind,
     /// Admission policy: "block", "shed-newest", "shed-oldest".
     pub admission: AdmissionPolicy,
+    /// Multi-process subsection (`"remote": {...}`).
+    pub remote: RemoteSection,
 }
 
 impl Default for ServeSection {
@@ -38,6 +107,7 @@ impl Default for ServeSection {
             queue_depth: 1024,
             dispatch: DispatchKind::LeastLoaded,
             admission: AdmissionPolicy::Block,
+            remote: RemoteSection::default(),
         }
     }
 }
@@ -67,6 +137,7 @@ impl ServeSection {
                     cfg.admission = AdmissionPolicy::parse(s)
                         .ok_or_else(|| format!("unknown serve.admission '{s}'"))?;
                 }
+                "remote" => cfg.remote = RemoteSection::from_json(val)?,
                 "comment" | "description" => {}
                 other => return Err(format!("unknown serve key '{other}'")),
             }
@@ -90,6 +161,7 @@ impl ServeSection {
             "admission".to_string(),
             JsonValue::String(self.admission.as_str().to_string()),
         );
+        m.insert("remote".to_string(), self.remote.to_json());
         JsonValue::Object(m)
     }
 }
@@ -333,6 +405,42 @@ mod tests {
         let cfg = ServeSection::from_json(&partial).unwrap();
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.dispatch, dflt.dispatch);
+    }
+
+    #[test]
+    fn remote_section_round_trips() {
+        let text = r#"{
+            "serve": {
+                "workers": 4,
+                "remote": {
+                    "addrs": ["unix:/tmp/shard-a.sock", "tcp:127.0.0.1:7070"],
+                    "spawn": 0,
+                    "stats_every": 4
+                }
+            }
+        }"#;
+        let cfg = ExperimentConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(
+            cfg.serve.remote.addrs,
+            vec!["unix:/tmp/shard-a.sock".to_string(), "tcp:127.0.0.1:7070".to_string()]
+        );
+        assert_eq!(cfg.serve.remote.spawn, 0);
+        assert_eq!(cfg.serve.remote.stats_every, 4);
+        // serializer round-trips, with and without defaults
+        let sec = RemoteSection { addrs: vec!["unix:/x.sock".into()], spawn: 3, stats_every: 1 };
+        let back =
+            RemoteSection::from_json(&json::parse(&sec.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back, sec);
+        let dflt = ServeSection::default();
+        let back =
+            ServeSection::from_json(&json::parse(&dflt.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back, dflt, "serve section with remote subsection round-trips");
+        // malformed remote sections are typed errors
+        assert!(RemoteSection::from_json(&json::parse(r#"{"bogus": 1}"#).unwrap()).is_err());
+        assert!(RemoteSection::from_json(&json::parse(r#"{"addrs": [1]}"#).unwrap()).is_err());
+        assert!(RemoteSection::from_json(&json::parse(r#"{"spawn": "two"}"#).unwrap()).is_err());
     }
 
     #[test]

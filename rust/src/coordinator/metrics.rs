@@ -67,6 +67,16 @@ impl Metrics {
         out.extend_from_slice(&self.latencies.lock().unwrap());
     }
 
+    /// Append at most the `cap` most recent latency samples to `out`.
+    /// The bounded snapshot of the remote stats path: the copy cost
+    /// per poll (taken under the same lock the hot path's
+    /// `record_latency` needs) stays `O(cap)` no matter how long the
+    /// worker has been running.
+    pub fn extend_recent_latencies_into(&self, out: &mut Vec<f64>, cap: usize) {
+        let l = self.latencies.lock().unwrap();
+        out.extend_from_slice(&l[l.len().saturating_sub(cap)..]);
+    }
+
     /// Percentiles `(p50, p90, p99)` over the **union** of several
     /// registries' latency samples.  This is the correct way to
     /// aggregate per-worker histograms: merge first, then take
@@ -80,6 +90,24 @@ impl Metrics {
             m.extend_latencies_into(&mut all);
         }
         latency_percentiles(&all)
+    }
+
+    /// Fold a remote worker's stats frame into this registry: the
+    /// frame carries the worker's **cumulative** counters since
+    /// process start plus its most recent raw latency samples (the
+    /// sender bounds the window), so the fold *replaces* the registry
+    /// contents wholesale (idempotent — folding the same frame twice
+    /// is a no-op).  The coordinator keeps one registry per remote
+    /// shard and aggregates them with [`Metrics::merged_percentiles`];
+    /// shipping raw samples instead of per-worker percentiles is what
+    /// makes that merge correct.
+    pub fn fold_remote(&self, completed: u64, shed: u64, batches: u64, latencies: &[f64]) {
+        self.completed.store(completed, Ordering::Relaxed);
+        self.shed.store(shed, Ordering::Relaxed);
+        self.batches.store(batches, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        l.clear();
+        l.extend_from_slice(latencies);
     }
 
     /// Mean executed batch occupancy.
@@ -169,6 +197,32 @@ mod tests {
         let avg99 = (a99 + b99) / 2.0;
         assert!((avg50 - 0.051).abs() < 1e-9, "averaged 'p50' is 51ms");
         assert!(avg99 > 25.0 * p99, "averaged 'p99' ({avg99}) wildly overstates merged ({p99})");
+    }
+
+    /// The multi-process fold: one registry per remote shard, each
+    /// replaced wholesale by that shard's cumulative stats frame;
+    /// merging the folded registries must equal percentiles over the
+    /// union of samples, and re-folding the same frame is a no-op.
+    #[test]
+    fn fold_remote_is_idempotent_and_merges_exactly() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        let sa: Vec<f64> = (1..=99).map(|i| i as f64 * 1e-3).collect();
+        let sb = vec![0.101];
+        a.fold_remote(99, 2, 10, &sa);
+        b.fold_remote(1, 0, 1, &sb);
+        // folding the same cumulative frame again changes nothing
+        a.fold_remote(99, 2, 10, &sa);
+        assert_eq!(a.latency_count(), 99);
+        assert_eq!(a.completed.load(Ordering::Relaxed), 99);
+        assert_eq!(a.shed.load(Ordering::Relaxed), 2);
+        assert_eq!(b.batches.load(Ordering::Relaxed), 1);
+        let merged = Metrics::merged_percentiles([&a, &b]);
+        let pooled = Metrics::new();
+        for s in sa.iter().chain(&sb) {
+            pooled.record_latency(*s);
+        }
+        assert_eq!(merged, pooled.latency_percentiles(), "fold+merge == pooled percentiles");
     }
 
     #[test]

@@ -3,34 +3,58 @@
 //! The single-worker router/batcher that lived here grew first into the
 //! sharded [`crate::serve::ShardedServer`] and then into the unified
 //! [`crate::engine::Engine`] (backpressure-aware admission, ticket
-//! requests, pluggable dispatch).  The historical names below keep old
-//! imports compiling; they are `#[deprecated]` and new code should use
-//! `crate::engine` (or `crate::serve` for the blocking compatibility
-//! surface).
+//! requests, pluggable dispatch, and the multi-process socket
+//! transport in [`crate::engine::remote`]).  The historical names
+//! below keep old imports compiling; they are `#[deprecated]` and new
+//! code should use `crate::engine` (or `crate::serve` for the blocking
+//! compatibility surface).  The engine layering is documented in
+//! [`crate::engine`] and `docs/ARCHITECTURE.md`.
 
 pub use crate::engine::InferenceBackend;
 
 /// Deprecated alias of [`crate::engine::ModelBackend`].
-#[deprecated(since = "0.1.0", note = "use crate::engine::ModelBackend")]
+#[deprecated(
+    since = "0.1.0",
+    note = "use crate::engine::ModelBackend (engine layering: see crate::engine docs and docs/ARCHITECTURE.md)"
+)]
 pub type ModelBackend<M> = crate::engine::ModelBackend<M>;
 
 /// Deprecated alias of [`crate::serve::Dispatch`]; the engine's
 /// [`crate::engine::DispatchKind`] supersedes both.
-#[deprecated(since = "0.1.0", note = "use crate::engine::DispatchKind")]
+#[deprecated(
+    since = "0.1.0",
+    note = "use crate::engine::DispatchKind (engine layering: see crate::engine docs and docs/ARCHITECTURE.md)"
+)]
 pub type Dispatch = crate::serve::Dispatch;
 
 /// Deprecated alias of [`crate::serve::ServeConfig`].
-#[deprecated(since = "0.1.0", note = "use crate::engine::EngineBuilder")]
+#[deprecated(
+    since = "0.1.0",
+    note = "use crate::engine::EngineBuilder (engine layering: see crate::engine docs and docs/ARCHITECTURE.md)"
+)]
 pub type ServeConfig = crate::serve::ServeConfig;
 
 /// Deprecated alias of [`crate::serve::ServeConfig`].
-#[deprecated(since = "0.1.0", note = "use crate::engine::EngineBuilder")]
+#[deprecated(
+    since = "0.1.0",
+    note = "use crate::engine::EngineBuilder (engine layering: see crate::engine docs and docs/ARCHITECTURE.md)"
+)]
 pub type ServerConfig = crate::serve::ServeConfig;
 
-/// Deprecated alias of [`crate::serve::ShardedServer`].
-#[deprecated(since = "0.1.0", note = "use crate::engine::Engine via EngineBuilder")]
+/// Deprecated alias of [`crate::serve::ShardedServer`] (itself a thin
+/// compat wrapper over the engine — its docs carry the migration
+/// snippet).
+#[deprecated(
+    since = "0.1.0",
+    note = "use crate::engine::Engine via EngineBuilder (engine layering: see crate::engine docs and docs/ARCHITECTURE.md)"
+)]
 pub type ShardedServer = crate::serve::ShardedServer;
 
-/// Deprecated alias of [`crate::serve::ShardedServer`].
-#[deprecated(since = "0.1.0", note = "use crate::engine::Engine via EngineBuilder")]
+/// Deprecated alias of [`crate::serve::ShardedServer`] (itself a thin
+/// compat wrapper over the engine — its docs carry the migration
+/// snippet).
+#[deprecated(
+    since = "0.1.0",
+    note = "use crate::engine::Engine via EngineBuilder (engine layering: see crate::engine docs and docs/ARCHITECTURE.md)"
+)]
 pub type InferenceServer = crate::serve::ShardedServer;

@@ -20,7 +20,7 @@
 //! post-condition (`tests/engine_backpressure.rs`), not a hope.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -96,6 +96,10 @@ pub struct BoundedQueue<T> {
     /// read [`BoundedQueue::depth`] on every submit without contending
     /// with the worker's pop path.  Updated under the state lock.
     depth: AtomicUsize,
+    /// Lock-free mirror of the closed flag, so the engine's submit
+    /// path can skip dead shards without taking the state lock.  Set
+    /// under the state lock in [`BoundedQueue::close`].
+    closed: AtomicBool,
 }
 
 impl<T> BoundedQueue<T> {
@@ -107,6 +111,7 @@ impl<T> BoundedQueue<T> {
             not_full: Condvar::new(),
             bound,
             depth: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
         }
     }
 
@@ -190,8 +195,18 @@ impl<T> BoundedQueue<T> {
     pub fn close(&self) {
         let mut s = self.state.lock().unwrap();
         s.closed = true;
+        self.closed.store(true, Ordering::Relaxed);
         self.not_empty.notify_all();
         self.not_full.notify_all();
+    }
+
+    /// `true` once [`BoundedQueue::close`] ran — the owning worker is
+    /// gone (its queue guard closes on thread exit) or the engine is
+    /// shutting down.  Lock-free (the engine's submit path reads it
+    /// for every shard to skip dead ones); the authoritative check
+    /// stays inside [`BoundedQueue::admit`] under the lock.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Relaxed)
     }
 
     /// Current queued depth (lock-free snapshot; exact at quiescence,
@@ -276,7 +291,9 @@ mod tests {
         let q2 = q.clone();
         let pusher = std::thread::spawn(move || q2.admit(2, AdmissionPolicy::Block));
         std::thread::sleep(Duration::from_millis(10));
+        assert!(!q.is_closed());
         q.close();
+        assert!(q.is_closed());
         match pusher.join().unwrap() {
             Admit::RejectedClosed(item) => assert_eq!(item, 2),
             _ => panic!("blocked producer must be rejected on close"),

@@ -24,6 +24,20 @@ pub trait InferenceBackend {
     /// Run on a `[capacity × features]` buffer (padded rows arbitrary);
     /// returns `[capacity × classes]` logits.
     fn infer_batch(&mut self, x: &[f32]) -> Vec<f32>;
+
+    /// Run on the first `rows` real rows of a `[capacity × features]`
+    /// buffer (the tail is padding).  The engine worker calls this; the
+    /// default forwards to [`InferenceBackend::infer_batch`], which
+    /// computes the padded rows too and returns `capacity × classes`
+    /// logits — callers must only read the first `rows × classes`.
+    /// Backends that can exploit the real row count override it: the
+    /// remote transport ships (and has the worker process compute)
+    /// only the real rows, so worker-side counters and latency
+    /// histograms count requests, never padding.
+    fn infer_rows(&mut self, x: &[f32], rows: usize) -> Vec<f32> {
+        let _ = rows;
+        self.infer_batch(x)
+    }
 }
 
 /// Blanket adapter for pure-rust [`crate::nn::Model`]s.

@@ -23,6 +23,13 @@ use std::sync::{Arc, Mutex};
 /// Instantaneous load view of one shard, passed to [`DispatchPolicy::pick`].
 #[derive(Debug, Clone, Copy)]
 pub struct ShardView {
+    /// Engine shard index this view describes.  The engine filters
+    /// dead (closed-queue) shards out of the candidate list before
+    /// `pick`, so positions in the slice shift — policies that keep
+    /// per-shard state (e.g. [`EwmaLatency`], whose `observe` feedback
+    /// is keyed by shard index) must look their state up by this `id`,
+    /// never by slice position.
+    pub id: usize,
     /// Requests dispatched to the shard and not yet answered
     /// (queued + in execution).
     pub inflight: usize,
@@ -33,7 +40,9 @@ pub struct ShardView {
 /// A shard-selection strategy.  Implementations must be cheap: `pick`
 /// runs on every submit.
 pub trait DispatchPolicy: Send + Sync {
-    /// Pick a shard index in `0..views.len()` (`views` is never empty).
+    /// Pick a position in `0..views.len()` (`views` is never empty —
+    /// it lists the live shards; the engine maps the position back to
+    /// an engine shard through [`ShardView::id`]).
     fn pick(&self, views: &[ShardView]) -> usize;
 
     /// Feedback: a request dispatched to `shard` completed with the
@@ -169,10 +178,13 @@ impl DispatchPolicy for EwmaLatency {
         let mut best_score = f64::INFINITY;
         for k in 0..n {
             let i = (start + k) % n;
-            // cold shards (few observations, or beyond the learned set)
-            // score as free capacity so every replica gets probed
-            // before the EWMA takes over
-            let tail = match self.stats.get(i) {
+            // per-shard state is keyed by the view's engine shard id,
+            // not its slice position — the engine filters dead shards
+            // out of the list, shifting positions.  Cold shards (few
+            // observations, or beyond the learned set) score as free
+            // capacity so every replica gets probed before the EWMA
+            // takes over
+            let tail = match self.stats.get(views[i].id) {
                 Some(cell) => {
                     let st = *cell.lock().unwrap();
                     if st.count < 4 {
@@ -261,7 +273,11 @@ mod tests {
     use super::*;
 
     fn views(loads: &[usize]) -> Vec<ShardView> {
-        loads.iter().map(|&l| ShardView { inflight: l, queue_depth: 0 }).collect()
+        loads
+            .iter()
+            .enumerate()
+            .map(|(id, &l)| ShardView { id, inflight: l, queue_depth: 0 })
+            .collect()
     }
 
     #[test]
@@ -345,6 +361,32 @@ mod tests {
             "shards beyond the learned set must still receive traffic: {picks:?}"
         );
         p.observe(7, 0.001); // out-of-range feedback is ignored, not a panic
+    }
+
+    /// The engine hands `pick` a *filtered* list when shards are dead,
+    /// so slice positions shift; the EWMA state must follow the view's
+    /// `id`, not its position.
+    #[test]
+    fn ewma_keys_state_by_shard_id_not_position() {
+        let p = EwmaLatency::new(3, 0.5);
+        for _ in 0..8 {
+            p.observe(0, 0.050); // shard 0: slow
+            p.observe(1, 0.001);
+            p.observe(2, 0.001);
+        }
+        // shard 1 died: the candidate list is [shard 0, shard 2]
+        let v = vec![
+            ShardView { id: 0, inflight: 1, queue_depth: 0 },
+            ShardView { id: 2, inflight: 1, queue_depth: 0 },
+        ];
+        for _ in 0..6 {
+            assert_eq!(
+                p.pick(&v),
+                1,
+                "position 1 (shard 2, fast) must win; keying by position would \
+                 score it with shard 1's stats"
+            );
+        }
     }
 
     #[test]

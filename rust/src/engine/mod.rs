@@ -37,8 +37,16 @@
 //!
 //! **Tickets** ([`Ticket`]): `try_submit` never blocks on a full queue
 //! (unless the policy is `Block`); it returns a one-shot handle whose
-//! payload is plain data — exactly the shape an IPC transport needs
-//! for the ROADMAP's multi-process sharding item.
+//! payload is plain data — which is what lets the [`remote`] transport
+//! carry the same contract across process boundaries.
+//!
+//! **Multi-process** ([`remote`]): `EngineBuilder::remote(addrs)` /
+//! `spawn_workers(n, spec)` + `build_remote()` put each worker shard
+//! in its own OS process behind a Unix/TCP socket, with dispatch,
+//! admission, and backpressure unchanged; a shard whose process dies
+//! resolves its tickets as [`RejectReason::WorkerFailed`] and the
+//! admit path routes around it.  The engine layering and the wire
+//! format are specified normatively in `docs/ARCHITECTURE.md`.
 //!
 //! **Determinism**: batching, padding, shard choice, and thread count
 //! cannot change a single output bit — each batch column is processed
@@ -55,6 +63,7 @@ pub mod admission;
 pub mod backend;
 pub mod batcher;
 pub mod dispatch;
+pub mod remote;
 pub mod ticket;
 pub(crate) mod worker;
 
@@ -62,6 +71,7 @@ pub use admission::{AdmissionPolicy, BoundedQueue};
 pub use backend::{InferenceBackend, ModelBackend};
 pub use batcher::{BatchSource, Batcher};
 pub use dispatch::{DispatchKind, DispatchPolicy, EwmaLatency, LeastLoaded, RoundRobin, ShardView};
+pub use remote::{RemoteBackend, RemoteOptions, SpawnSpec, SpawnedShards};
 pub use ticket::{RejectReason, Response, Ticket};
 
 pub use crate::coordinator::metrics::Metrics;
@@ -111,6 +121,9 @@ pub struct EngineBuilder {
     queue_depth: usize,
     admission: AdmissionPolicy,
     dispatch: DispatchChoice,
+    remote_addrs: Vec<String>,
+    remote_opts: RemoteOptions,
+    spawned: Option<SpawnedShards>,
 }
 
 impl Default for EngineBuilder {
@@ -122,6 +135,9 @@ impl Default for EngineBuilder {
             queue_depth: 1024,
             admission: AdmissionPolicy::Block,
             dispatch: DispatchChoice::Kind(DispatchKind::LeastLoaded),
+            remote_addrs: Vec::new(),
+            remote_opts: RemoteOptions::default(),
+            spawned: None,
         }
     }
 }
@@ -175,7 +191,11 @@ impl EngineBuilder {
         self
     }
 
-    /// Apply the `serve` section of an experiment config file.
+    /// Apply the `serve` section of an experiment config file
+    /// (including its `"remote"` subsection: pre-started shard
+    /// addresses and the stats poll cadence; a configured `spawn`
+    /// count is the CLI's job — it needs a [`SpawnSpec`] naming the
+    /// model arguments).
     pub fn from_config(mut self, cfg: &crate::config::ServeSection) -> Self {
         self.workers = cfg.workers.max(1);
         self.batch = cfg.batch.max(1);
@@ -183,7 +203,39 @@ impl EngineBuilder {
         self.queue_depth = cfg.queue_depth;
         self.admission = cfg.admission;
         self.dispatch = DispatchChoice::Kind(cfg.dispatch);
+        self.remote_opts.stats_every = cfg.remote.stats_every;
+        if !cfg.remote.addrs.is_empty() {
+            self.remote_addrs = cfg.remote.addrs.clone();
+        }
         self
+    }
+
+    /// Use worker shards in **other processes**: one
+    /// [`RemoteBackend`] per address (`unix:/path` or
+    /// `tcp:host:port`), each expected to run `sobolnet shard-worker`.
+    /// Finish with [`EngineBuilder::build_remote`]; the worker count
+    /// is `addrs.len()`.
+    pub fn remote<S: AsRef<str>>(mut self, addrs: &[S]) -> Self {
+        self.remote_addrs = addrs.iter().map(|a| a.as_ref().to_string()).collect();
+        self
+    }
+
+    /// Transport knobs of the remote path (connect timeout, reconnect
+    /// backoff, stats poll cadence).
+    pub fn remote_options(mut self, opts: RemoteOptions) -> Self {
+        self.remote_opts = opts;
+        self
+    }
+
+    /// Spawn `n` `shard-worker` child processes per `spec` and target
+    /// them (the spawned handles live inside the built engine, which
+    /// kills any survivor on drop).  Finish with
+    /// [`EngineBuilder::build_remote`].
+    pub fn spawn_workers(mut self, n: usize, spec: SpawnSpec) -> std::io::Result<Self> {
+        let shards = remote::spawn_shards(n, &spec)?;
+        self.remote_addrs = shards.addrs().to_vec();
+        self.spawned = Some(shards);
+        Ok(self)
     }
 
     /// Start the engine; every worker builds its own backend by calling
@@ -244,8 +296,9 @@ impl EngineBuilder {
         }
         let mut features: Option<usize> = None;
         let mut classes: Option<usize> = None;
+        let mut batch: Option<usize> = None;
         for meta_rx in metas {
-            let (feat, cls) = meta_rx.recv().expect("backend constructed");
+            let (feat, cls, cap) = meta_rx.recv().expect("backend constructed");
             match features {
                 None => features = Some(feat),
                 Some(prev) => assert_eq!(prev, feat, "workers disagree on feature count"),
@@ -253,6 +306,10 @@ impl EngineBuilder {
             match classes {
                 None => classes = Some(cls),
                 Some(prev) => assert_eq!(prev, cls, "workers disagree on class count"),
+            }
+            match batch {
+                None => batch = Some(cap),
+                Some(prev) => assert_eq!(prev, cap, "workers disagree on batch capacity"),
             }
         }
         Engine {
@@ -262,7 +319,70 @@ impl EngineBuilder {
             metrics,
             features: features.expect("at least one worker"),
             classes: classes.expect("at least one worker"),
+            batch: batch.expect("at least one worker"),
+            remote: None,
         }
+    }
+
+    /// Start the engine over the configured **remote** worker shards
+    /// (one [`RemoteBackend`] per address from
+    /// [`EngineBuilder::remote`] or [`EngineBuilder::spawn_workers`]).
+    /// Dispatch, admission, and backpressure are byte-for-byte the
+    /// in-process machinery — only the backend crosses a process
+    /// boundary.
+    ///
+    /// Every shard is pre-flighted with a bounded handshake first, so
+    /// an unreachable worker or a spec mismatch across workers
+    /// (different `--sizes`/`--batch`) returns a descriptive error
+    /// naming the offending address instead of panicking mid-build.
+    pub fn build_remote(mut self) -> std::io::Result<Engine> {
+        assert!(
+            !self.remote_addrs.is_empty(),
+            "build_remote needs .remote(addrs) or .spawn_workers(n, spec)"
+        );
+        let addrs = std::mem::take(&mut self.remote_addrs);
+        let spawned = self.spawned.take();
+        let opts = self.remote_opts.clone();
+        // pre-flight: one bounded handshake per shard
+        let mut shapes: Vec<(usize, usize, usize)> = Vec::with_capacity(addrs.len());
+        for addr_str in &addrs {
+            let addr = remote::Addr::parse(addr_str).map_err(std::io::Error::other)?;
+            let shape = RemoteBackend::probe(&addr, opts.connect_timeout)
+                .map_err(|e| std::io::Error::other(format!("preflight {addr_str}: {e}")))?;
+            shapes.push(shape);
+        }
+        let first = shapes[0];
+        for (i, shape) in shapes.iter().enumerate() {
+            if *shape != first {
+                return Err(std::io::Error::other(format!(
+                    "remote shards disagree on model shape: {} serves {}→{} (batch {}) but {} \
+                     serves {}→{} (batch {}) — start every shard-worker with identical \
+                     --sizes/--paths/--seed/--epochs/--batch",
+                    addrs[0], first.0, first.1, first.2, addrs[i], shape.0, shape.1, shape.2,
+                )));
+            }
+        }
+        // one coordinator-side metrics slot per remote shard: the
+        // shard's stats frames fold into it, and the engine merges the
+        // slots on read (raw samples, never averaged percentiles)
+        let slots: Vec<Arc<Metrics>> = addrs.iter().map(|_| Arc::new(Metrics::new())).collect();
+        let factories: Vec<BackendFactory> = addrs
+            .iter()
+            .zip(&slots)
+            .map(|(addr, slot)| {
+                let addr = addr.clone();
+                let slot = slot.clone();
+                let opts = opts.clone();
+                Box::new(move || {
+                    let backend = RemoteBackend::connect(&addr, opts, slot)
+                        .unwrap_or_else(|e| panic!("remote shard: {e}"));
+                    Box::new(backend) as Box<dyn InferenceBackend>
+                }) as BackendFactory
+            })
+            .collect();
+        let mut engine = self.build_each(factories);
+        engine.remote = Some(RemoteShards { metrics: slots, addrs, _spawned: spawned });
+        Ok(engine)
     }
 }
 
@@ -297,6 +417,18 @@ pub struct EngineStats {
     pub shards: Vec<ShardStats>,
 }
 
+/// Coordinator-side state of a multi-process engine: per-shard metric
+/// slots the workers' stats frames fold into, plus ownership of any
+/// spawned child processes (killed when the engine drops).
+struct RemoteShards {
+    metrics: Vec<Arc<Metrics>>,
+    addrs: Vec<String>,
+    /// Held for its `Drop` (kill + reap children); dropped after
+    /// `stop()` has joined the workers, whose backends send each child
+    /// a graceful `Shutdown` frame first.
+    _spawned: Option<SpawnedShards>,
+}
+
 /// A running inference engine: worker shards behind backpressure-aware
 /// admission and pluggable dispatch.  See the [module docs](self).
 pub struct Engine {
@@ -308,6 +440,8 @@ pub struct Engine {
     pub metrics: Arc<Metrics>,
     features: usize,
     classes: usize,
+    batch: usize,
+    remote: Option<RemoteShards>,
 }
 
 impl Engine {
@@ -324,6 +458,41 @@ impl Engine {
     /// Classes per sample.
     pub fn classes(&self) -> usize {
         self.classes
+    }
+
+    /// Batch capacity of the worker backends.
+    pub fn batch_capacity(&self) -> usize {
+        self.batch
+    }
+
+    /// `true` when the worker shards live in other processes.
+    pub fn is_remote(&self) -> bool {
+        self.remote.is_some()
+    }
+
+    /// Remote shard addresses (shard order), if this engine is
+    /// multi-process.
+    pub fn remote_addrs(&self) -> Option<&[String]> {
+        self.remote.as_ref().map(|r| r.addrs.as_slice())
+    }
+
+    /// Per-remote-shard metric registries (shard order), if this
+    /// engine is multi-process.  Each holds the **worker-process-side**
+    /// raw latency samples and counters from the shard's latest stats
+    /// frame; the `Arc`s stay valid after [`Engine::shutdown`], which
+    /// performs a final fold.
+    pub fn remote_shard_metrics(&self) -> Option<Vec<Arc<Metrics>>> {
+        self.remote.as_ref().map(|r| r.metrics.clone())
+    }
+
+    /// Worker-process-side latency percentiles `(p50, p90, p99)` in
+    /// seconds, computed over the **merged** raw samples from every
+    /// remote shard's stats frames (never by averaging per-shard
+    /// percentiles).  `None` for an in-process engine.
+    pub fn remote_percentiles(&self) -> Option<(f64, f64, f64)> {
+        self.remote
+            .as_ref()
+            .map(|r| Metrics::merged_percentiles(r.metrics.iter().map(|m| m.as_ref())))
     }
 
     /// Admission policy in force.
@@ -343,47 +512,82 @@ impl Engine {
             return Err(RejectReason::BadShape { expected: self.features, got: x.len() });
         }
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        // load snapshot in a reused thread-local buffer: inflight and
-        // queue depth are both plain atomic loads, so a submit costs no
-        // allocation and no shard-queue lock
-        let idx = VIEW_SCRATCH.with(|scratch| {
+        // load snapshot in a reused thread-local buffer: closed flag,
+        // inflight, and queue depth are all plain atomic loads, so a
+        // submit costs no allocation and no shard-queue lock.  Dead
+        // shards (closed queues) are filtered out *before* the policy
+        // picks, so survivors share a dead shard's traffic per the
+        // policy instead of it all spilling onto one neighbor; each
+        // view carries its engine shard `id` so learning policies stay
+        // keyed correctly on the filtered list.
+        let picked = VIEW_SCRATCH.with(|scratch| {
             let mut views = scratch.borrow_mut();
             views.clear();
-            views.extend(self.shards.iter().map(|s| ShardView {
-                inflight: s.inflight.load(Ordering::Relaxed),
-                queue_depth: s.queue.depth(),
-            }));
-            self.dispatch.pick(&views)
+            for (id, s) in self.shards.iter().enumerate() {
+                if s.queue.is_closed() {
+                    continue;
+                }
+                views.push(ShardView {
+                    id,
+                    inflight: s.inflight.load(Ordering::Relaxed),
+                    queue_depth: s.queue.depth(),
+                });
+            }
+            if views.is_empty() {
+                None
+            } else {
+                let k = self.dispatch.pick(&views).min(views.len() - 1);
+                Some(views[k].id)
+            }
         });
-        let idx = idx.min(self.shards.len() - 1);
-        let shard = &self.shards[idx];
-        shard.inflight.fetch_add(1, Ordering::Relaxed);
-        let req = EngineRequest { x, reply, t_start: crate::util::timer::Timer::start() };
-        match shard.queue.admit(req, self.admission) {
-            admission::Admit::Admitted => {
-                shard.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                Ok(idx)
+        let idx = match picked {
+            Some(i) => i,
+            // every shard queue is closed: the engine is gone
+            None => return Err(RejectReason::ShuttingDown),
+        };
+        let n = self.shards.len();
+        // failover scan: a *closed* shard queue means its worker is
+        // gone (thread panicked, remote process died) — skip it and
+        // route to the next live shard so the engine keeps serving on
+        // the survivors.  A *full* queue is not failed over: that is
+        // backpressure, and spilling would defeat the admission bound.
+        let mut req = EngineRequest { x, reply, t_start: crate::util::timer::Timer::start() };
+        for k in 0..n {
+            let i = (idx + k) % n;
+            let shard = &self.shards[i];
+            if shard.queue.is_closed() {
+                continue;
             }
-            admission::Admit::Evicted(old) => {
-                // the new request is in; the oldest queued one is shed
-                shard.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                shard.inflight.fetch_sub(1, Ordering::Relaxed);
-                shard.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                old.reply.send_rejected(RejectReason::QueueFull);
-                Ok(idx)
-            }
-            admission::Admit::RejectedFull(_) => {
-                shard.inflight.fetch_sub(1, Ordering::Relaxed);
-                shard.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                Err(RejectReason::QueueFull)
-            }
-            admission::Admit::RejectedClosed(_) => {
-                shard.inflight.fetch_sub(1, Ordering::Relaxed);
-                Err(RejectReason::ShuttingDown)
+            shard.inflight.fetch_add(1, Ordering::Relaxed);
+            match shard.queue.admit(req, self.admission) {
+                admission::Admit::Admitted => {
+                    shard.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    return Ok(i);
+                }
+                admission::Admit::Evicted(old) => {
+                    // the new request is in; the oldest queued one is shed
+                    shard.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                    shard.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    old.reply.send_rejected(RejectReason::QueueFull);
+                    return Ok(i);
+                }
+                admission::Admit::RejectedFull(_) => {
+                    shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                    shard.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                    return Err(RejectReason::QueueFull);
+                }
+                admission::Admit::RejectedClosed(r) => {
+                    // closed between the check and the admit: recover
+                    // the request and try the next shard
+                    shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                    req = r;
+                }
             }
         }
+        Err(RejectReason::ShuttingDown)
     }
 
     /// Non-blocking request path (the `Block` admission policy may
@@ -463,6 +667,29 @@ impl Engine {
                 s.metrics.summary(),
                 st.max_queue_depth
             ));
+        }
+        if let Some(r) = &self.remote {
+            // worker-process-side view, folded from stats frames (the
+            // lines above measure coordinator-side end-to-end latency).
+            // Printed field-by-field rather than via `summary()`: the
+            // fold carries completed/shed/batches + raw samples, and a
+            // summary line must not show unfolded fields as zeros.
+            for (i, (m, addr)) in r.metrics.iter().zip(&r.addrs).enumerate() {
+                let (p50, p90, p99) = m.latency_percentiles();
+                let completed = m.completed.load(Ordering::Relaxed);
+                let batches = m.batches.load(Ordering::Relaxed);
+                let mean_batch =
+                    if batches == 0 { 0.0 } else { completed as f64 / batches as f64 };
+                out.push_str(&format!(
+                    "\n  remote shard {i} ({addr}): completed={completed} shed={} \
+                     batches={batches} mean_batch={mean_batch:.1} \
+                     p50={:.3}ms p90={:.3}ms p99={:.3}ms",
+                    m.shed.load(Ordering::Relaxed),
+                    p50 * 1e3,
+                    p90 * 1e3,
+                    p99 * 1e3,
+                ));
+            }
         }
         out
     }
@@ -695,6 +922,63 @@ mod tests {
             Response::Rejected(RejectReason::ShuttingDown | RejectReason::WorkerFailed) => {}
             other => panic!("expected rejection from dead shard, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn dead_shard_is_routed_around() {
+        /// Same shape as `Echo`, but every inference panics.
+        struct Bomb3;
+        impl InferenceBackend for Bomb3 {
+            fn batch_capacity(&self) -> usize {
+                4
+            }
+            fn features(&self) -> usize {
+                3
+            }
+            fn classes(&self) -> usize {
+                2
+            }
+            fn infer_batch(&mut self, _x: &[f32]) -> Vec<f32> {
+                panic!("backend exploded (expected in this test)");
+            }
+        }
+        let healthy = Echo::factory(Arc::new(AtomicUsize::new(0)), Duration::ZERO);
+        let factories: Vec<BackendFactory> = vec![
+            Box::new(move || healthy()),
+            Box::new(|| Box::new(Bomb3) as Box<dyn InferenceBackend>),
+        ];
+        let eng = EngineBuilder::new()
+            .max_wait(Duration::from_millis(1))
+            .dispatch(DispatchKind::RoundRobin)
+            .build_each(factories);
+        assert_eq!(eng.workers(), 2);
+        // requests that land on the bomb shard before its queue closes
+        // resolve to WorkerFailed; once it is closed the admit path
+        // must skip it, so sustained traffic converges on all-served
+        let mut consecutive_ok = 0;
+        for i in 0..500 {
+            match eng.infer(vec![i as f32, 1.0, 0.0]) {
+                Response::Logits(l) => {
+                    assert_eq!(l, vec![i as f32 + 1.0, -1.0], "served bitwise-correct");
+                    consecutive_ok += 1;
+                    if consecutive_ok >= 16 {
+                        break;
+                    }
+                }
+                Response::Rejected(
+                    RejectReason::WorkerFailed | RejectReason::ShuttingDown,
+                ) => {
+                    consecutive_ok = 0;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        assert!(
+            consecutive_ok >= 16,
+            "engine must keep serving on the surviving shard after a worker death"
+        );
+        eng.shutdown();
     }
 
     #[test]

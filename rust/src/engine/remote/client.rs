@@ -1,0 +1,321 @@
+//! Coordinator-side remote backend: an [`InferenceBackend`] whose
+//! compute lives in another OS process, reached over a socket.
+//!
+//! [`RemoteBackend`] slots into the engine exactly where an in-process
+//! model backend would: each engine worker shard owns one, so
+//! admission, dispatch, batching, and backpressure behave **identically
+//! to the in-process path** — the only change is that inference
+//! serializes the batch's real rows (padding never crosses the wire)
+//! into a [`Frame::Request`] and resolves them from the matching
+//! [`Frame::Response`].
+//!
+//! Failure contract:
+//!
+//! * transient socket errors trigger **reconnect with exponential
+//!   backoff** (the exchange is retried — inference is idempotent, so a
+//!   batch resent after a reconnect cannot corrupt state);
+//! * a shard whose process is gone (retries exhausted) **panics** on
+//!   the engine worker thread, which is precisely the engine's
+//!   worker-death path: queued and in-flight tickets resolve to
+//!   [`RejectReason::WorkerFailed`](crate::engine::RejectReason) and
+//!   the engine routes new requests to the surviving shards
+//!   (`tests/remote_shard.rs`).
+//!
+//! Shared-nothing metrics: every `stats_every` batches the backend
+//! sends a [`Frame::StatsRequest`] and folds the worker's reply — its
+//! **raw** latency samples plus counters — into the per-shard metrics
+//! slot the coordinator merges through `Metrics::merged_percentiles`.
+//! Raw samples cross the wire so percentiles are merged, never
+//! averaged.  A final poll runs at backend drop, so after a graceful
+//! `Engine::shutdown` the folded stats are complete.
+
+use super::frame::{read_frame, write_frame, Frame};
+use super::transport::{Addr, Stream};
+use crate::coordinator::metrics::Metrics;
+use crate::engine::InferenceBackend;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Knobs of the remote transport (per shard connection).
+#[derive(Debug, Clone)]
+pub struct RemoteOptions {
+    /// Budget for the *initial* connect + `Hello` handshake, per dial
+    /// attempt (covers worker process startup — including its model
+    /// build/train — when the coordinator spawns its own shards; also
+    /// bounds each TCP connect so a blackholed host fails fast).
+    pub connect_timeout: Duration,
+    /// Reconnect attempts per failed exchange before the shard is
+    /// declared dead.
+    pub retry_attempts: u32,
+    /// Base backoff between reconnect attempts; doubles per attempt.
+    pub retry_backoff: Duration,
+    /// Poll worker stats every N batches (`0` disables periodic polls;
+    /// the final poll at drop still runs).
+    pub stats_every: u64,
+}
+
+impl Default for RemoteOptions {
+    fn default() -> Self {
+        RemoteOptions {
+            connect_timeout: Duration::from_secs(30),
+            retry_attempts: 3,
+            retry_backoff: Duration::from_millis(50),
+            stats_every: 8,
+        }
+    }
+}
+
+/// [`InferenceBackend`] proxying to a `shard-worker` process.
+pub struct RemoteBackend {
+    addr: Addr,
+    opts: RemoteOptions,
+    stream: Option<Stream>,
+    features: usize,
+    classes: usize,
+    capacity: usize,
+    next_id: u64,
+    batches: u64,
+    /// Coordinator-side slot the worker's stats frames fold into; the
+    /// engine merges these across shards on read.
+    slot: Arc<Metrics>,
+}
+
+impl RemoteBackend {
+    /// Dial `addr` (string form, `unix:…`/`tcp:…`), retrying with
+    /// backoff until [`RemoteOptions::connect_timeout`], and perform
+    /// the `Hello` handshake.  Runs on the engine worker thread via the
+    /// backend factory.
+    pub fn connect(addr: &str, opts: RemoteOptions, slot: Arc<Metrics>) -> Result<Self, String> {
+        let addr = Addr::parse(addr)?;
+        let deadline = Instant::now() + opts.connect_timeout;
+        let mut backoff = opts.retry_backoff.max(Duration::from_millis(1));
+        // the connect budget also bounds each dial's TCP connect and
+        // Hello read: a blackholed host or a child that accepted but
+        // never starts serving cannot hang the builder
+        let (stream, features, classes, capacity) = loop {
+            match Self::dial(&addr, opts.connect_timeout) {
+                Ok(ok) => break ok,
+                Err(e) => {
+                    if Instant::now() + backoff > deadline {
+                        return Err(format!("connect {addr}: {e}"));
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(500));
+                }
+            }
+        };
+        Ok(RemoteBackend {
+            addr,
+            opts,
+            stream: Some(stream),
+            features,
+            classes,
+            capacity,
+            next_id: 0,
+            batches: 0,
+            slot,
+        })
+    }
+
+    /// One dial + handshake attempt, fully bounded by `timeout`: it
+    /// caps the TCP connect (a blackholed host fails fast) and the
+    /// `Hello` read — a worker binds its listener before a possibly
+    /// slow model build, so a connect succeeding does not prove the
+    /// serve loop is running, and no caller may block on it forever.
+    /// The read timeout is cleared again after the handshake:
+    /// exchange reads must block while the worker computes.
+    fn dial(addr: &Addr, timeout: Duration) -> Result<(Stream, usize, usize, usize), String> {
+        let mut stream = addr.connect_timeout(timeout).map_err(|e| e.to_string())?;
+        let _ = stream.set_read_timeout(Some(timeout));
+        match read_frame(&mut stream) {
+            Ok(Frame::Hello { features, classes, batch_capacity }) => {
+                let _ = stream.set_read_timeout(None);
+                Ok((stream, features as usize, classes as usize, batch_capacity as usize))
+            }
+            Ok(other) => Err(format!("expected hello, got {} frame", other.name())),
+            Err(e) => Err(format!("hello: {e}")),
+        }
+    }
+
+    /// Bounded handshake probe: dial, read the `Hello`, drop the
+    /// connection (the worker just loops back to `accept`).  The
+    /// builder pre-flights every shard with this so operator mistakes
+    /// — mismatched `--sizes`/`--batch` across workers — surface as a
+    /// clean error naming the offending address instead of a
+    /// cross-thread assert panic.
+    pub(crate) fn probe(addr: &Addr, timeout: Duration) -> Result<(usize, usize, usize), String> {
+        Self::dial(addr, timeout).map(|(_stream, f, c, cap)| (f, c, cap))
+    }
+
+    /// Reconnect and re-validate the handshake against the shape this
+    /// backend was built with.  The dial is bounded: a wedged worker
+    /// must fail the retry ladder (→ `WorkerFailed`), not hang the
+    /// shard forever.
+    fn reconnect(&mut self) -> Result<(), String> {
+        let (stream, features, classes, capacity) =
+            Self::dial(&self.addr, Duration::from_secs(5))?;
+        if (features, classes, capacity) != (self.features, self.classes, self.capacity) {
+            return Err(format!(
+                "worker at {} changed shape: {}x{} cap {} (was {}x{} cap {})",
+                self.addr, features, classes, capacity, self.features, self.classes, self.capacity
+            ));
+        }
+        self.stream = Some(stream);
+        Ok(())
+    }
+
+    /// One request/response exchange of `rows` real rows on the live
+    /// stream.
+    fn exchange(&mut self, id: u64, x: &[f32], rows: usize) -> Result<Vec<f32>, String> {
+        let stream = self.stream.as_mut().ok_or("not connected")?;
+        let req = Frame::Request {
+            id,
+            rows: rows as u32,
+            features: self.features as u32,
+            data: x[..rows * self.features].to_vec(),
+        };
+        write_frame(stream, &req).map_err(|e| e.to_string())?;
+        match read_frame(stream) {
+            Ok(Frame::Response { id: rid, rows: rrows, classes, data }) => {
+                if rid != id {
+                    return Err(format!("response id {rid} != request id {id}"));
+                }
+                if (rrows as usize, classes as usize) != (rows, self.classes)
+                    || data.len() != rows * self.classes
+                {
+                    return Err(format!(
+                        "response shape {}x{} ({} values) != {}x{}",
+                        rrows,
+                        classes,
+                        data.len(),
+                        rows,
+                        self.classes
+                    ));
+                }
+                Ok(data)
+            }
+            Ok(Frame::Reject { reason, .. }) => Err(format!("worker rejected batch: {reason}")),
+            Ok(other) => Err(format!("expected response, got {} frame", other.name())),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+
+    /// Ask the worker for its raw metrics and fold them into the
+    /// coordinator-side slot.  Stats frames carry cumulative counters
+    /// plus a bounded window of recent raw samples, so the fold
+    /// replaces rather than appends.
+    fn poll_stats(&mut self) -> Result<(), String> {
+        let stream = self.stream.as_mut().ok_or("not connected")?;
+        write_frame(stream, &Frame::StatsRequest).map_err(|e| e.to_string())?;
+        match read_frame(stream) {
+            Ok(Frame::Stats { completed, shed, batches, latencies }) => {
+                self.slot.fold_remote(completed, shed, batches, &latencies);
+                Ok(())
+            }
+            Ok(other) => Err(format!("expected stats, got {} frame", other.name())),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+}
+
+impl InferenceBackend for RemoteBackend {
+    fn batch_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn features(&self) -> usize {
+        self.features
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Full-capacity path of the backend contract: ships every row
+    /// (padding included) and pads the reply back out.  The engine
+    /// worker uses [`InferenceBackend::infer_rows`] instead, which
+    /// skips the padding on the wire.
+    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
+        self.infer_rows(x, self.capacity)
+    }
+
+    /// Ship the real rows of the batch to the worker process; panic
+    /// once the shard is unreachable (the engine's worker-death path
+    /// turns that into `WorkerFailed` tickets + routing around this
+    /// shard).  Returns `rows × classes` logits — exactly what the
+    /// engine worker reads.
+    fn infer_rows(&mut self, x: &[f32], rows: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.capacity * self.features, "remote infer input shape");
+        assert!(rows <= self.capacity, "rows within batch capacity");
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut last_err = String::new();
+        for attempt in 0..=self.opts.retry_attempts {
+            if attempt > 0 {
+                // reconnect-with-backoff: drop the broken stream, wait,
+                // redial, revalidate the handshake
+                self.stream = None;
+                let backoff = self.opts.retry_backoff.max(Duration::from_millis(1))
+                    * 2u32.pow((attempt - 1).min(4));
+                std::thread::sleep(backoff.min(Duration::from_millis(500)));
+            }
+            if self.stream.is_none() {
+                if let Err(e) = self.reconnect() {
+                    last_err = e;
+                    continue;
+                }
+            }
+            match self.exchange(id, x, rows) {
+                Ok(logits) => {
+                    self.batches += 1;
+                    if self.opts.stats_every > 0 && self.batches % self.opts.stats_every == 0 {
+                        // periodic stats ride the same connection; a
+                        // failed poll only drops the stream — the next
+                        // batch reconnects
+                        if self.poll_stats().is_err() {
+                            self.stream = None;
+                        }
+                    }
+                    return logits;
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        panic!(
+            "remote shard {} unreachable after {} attempts: {last_err}",
+            self.addr,
+            self.opts.retry_attempts + 1
+        );
+    }
+}
+
+impl Drop for RemoteBackend {
+    /// Best-effort closing handshake: a final stats poll (bounded by a
+    /// read timeout so a wedged worker cannot hang shutdown) and a
+    /// `Shutdown` frame telling a spawned worker process to exit.
+    /// Never panics — drop also runs while unwinding a dead shard.
+    fn drop(&mut self) {
+        if self.stream.is_none() {
+            // a transient failure may have dropped the stream mid-run;
+            // one quick redial so the closing handshake (final stats
+            // fold + Shutdown for the worker process) still happens.
+            // The dial is bounded end to end, so neither a dead
+            // address nor a wedged worker can hang shutdown.
+            if let Ok((stream, f, c, cap)) = Self::dial(&self.addr, Duration::from_millis(500)) {
+                if (f, c, cap) == (self.features, self.classes, self.capacity) {
+                    self.stream = Some(stream);
+                }
+            }
+        }
+        match self.stream.as_ref() {
+            Some(stream) => {
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+            }
+            None => return,
+        }
+        let _ = self.poll_stats();
+        if let Some(stream) = self.stream.as_mut() {
+            let _ = write_frame(stream, &Frame::Shutdown);
+        }
+    }
+}

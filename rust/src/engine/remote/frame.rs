@@ -1,0 +1,672 @@
+//! Wire frame codec of the multi-process transport.
+//!
+//! This file is the *implementation* of the frame format; the
+//! normative byte-level specification lives in `docs/ARCHITECTURE.md`
+//! (§Wire protocol) at the repository root — keep the two in sync.
+//!
+//! Every frame is
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"SBN1" (protocol version is the last byte)
+//! 4       1     type   tag (see the `TYPE_*` constants)
+//! 5       4     len    payload length, u32 little-endian, ≤ MAX_PAYLOAD
+//! 9       len   payload (fields little-endian, f32/f64 as IEEE-754 bits)
+//! ```
+//!
+//! f32 payloads are carried as raw little-endian IEEE-754 bits
+//! (`to_le_bytes`/`from_le_bytes`), so a value crosses the wire
+//! **bitwise intact** — the property `tests/remote_shard.rs` pins when
+//! it compares a multi-process engine against the sequential
+//! single-process reference.
+//!
+//! Decoding is total: any malformed input — wrong magic, unknown type,
+//! oversize length, a frame cut short mid-read, a payload whose length
+//! disagrees with its declared row/sample counts — surfaces as a typed
+//! [`FrameError`], never a panic and never an unbounded allocation
+//! (the length is validated against [`MAX_PAYLOAD`] *before* any
+//! buffer is reserved).
+
+use crate::engine::RejectReason;
+use std::io::{Read, Write};
+
+/// Frame magic; the trailing byte is the protocol version.
+pub const MAGIC: [u8; 4] = *b"SBN1";
+
+/// Hard cap on a frame payload (64 MiB): a corrupt or hostile length
+/// header is rejected *before* allocation.
+pub const MAX_PAYLOAD: u32 = 64 * 1024 * 1024;
+
+const TYPE_HELLO: u8 = 1;
+const TYPE_REQUEST: u8 = 2;
+const TYPE_RESPONSE: u8 = 3;
+const TYPE_REJECT: u8 = 4;
+const TYPE_STATS_REQUEST: u8 = 5;
+const TYPE_STATS: u8 = 6;
+const TYPE_SHUTDOWN: u8 = 7;
+
+/// Typed decode/transport failure.  Every malformed input maps to one
+/// of these — the codec never panics and never hangs on bad bytes.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Underlying socket/pipe error.
+    Io(std::io::Error),
+    /// The peer closed the connection cleanly at a frame boundary.
+    Closed,
+    /// Stream ended (or errored with `UnexpectedEof`) mid-frame.
+    Truncated,
+    /// First four bytes were not [`MAGIC`] (version mismatches land
+    /// here too — the version is the last magic byte).
+    BadMagic([u8; 4]),
+    /// Unknown frame type tag.
+    UnknownType(u8),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    TooLarge {
+        /// Declared length.
+        len: u32,
+        /// The cap it exceeded.
+        max: u32,
+    },
+    /// Payload length disagrees with the frame's declared counts.
+    BadPayloadLen {
+        /// Frame type name.
+        frame: &'static str,
+        /// Bytes the declared counts require.
+        expected: usize,
+        /// Bytes actually present.
+        got: usize,
+    },
+    /// Reject frame carried an unknown reason code.
+    BadReason(u8),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame i/o: {e}"),
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::Truncated => write!(f, "frame truncated mid-read"),
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:?} (want {MAGIC:?})"),
+            FrameError::UnknownType(t) => write!(f, "unknown frame type {t}"),
+            FrameError::TooLarge { len, max } => {
+                write!(f, "frame payload {len} exceeds cap {max}")
+            }
+            FrameError::BadPayloadLen { frame, expected, got } => {
+                write!(f, "{frame} payload length {got} != expected {expected}")
+            }
+            FrameError::BadReason(c) => write!(f, "unknown reject reason code {c}"),
+        }
+    }
+}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FrameError::Truncated
+        } else {
+            FrameError::Io(e)
+        }
+    }
+}
+
+/// One protocol frame.  `Hello` flows worker → coordinator once per
+/// connection; `Request`/`StatsRequest`/`Shutdown` flow coordinator →
+/// worker; `Response`/`Reject`/`Stats` are the worker's replies.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Worker self-description, sent immediately after `accept`.
+    Hello {
+        /// Features per sample.
+        features: u32,
+        /// Classes per sample.
+        classes: u32,
+        /// The worker backend's fixed batch capacity.
+        batch_capacity: u32,
+    },
+    /// One inference batch (row-major `[rows × features]`, raw f32 bits).
+    Request {
+        /// Request id, echoed by the matching `Response`/`Reject`.
+        id: u64,
+        /// Rows in the batch (zero is legal: the reply is an empty
+        /// `Response`).
+        rows: u32,
+        /// Features per row (must match the worker's `Hello`).
+        features: u32,
+        /// `rows × features` values.
+        data: Vec<f32>,
+    },
+    /// Logits for a served request (row-major `[rows × classes]`).
+    Response {
+        /// Id of the request this answers.
+        id: u64,
+        /// Rows answered.
+        rows: u32,
+        /// Classes per row.
+        classes: u32,
+        /// `rows × classes` values.
+        data: Vec<f32>,
+    },
+    /// The request was not served.
+    Reject {
+        /// Id of the request this answers.
+        id: u64,
+        /// Why (codes mirror [`RejectReason`]).
+        reason: RejectReason,
+    },
+    /// Coordinator asks for the worker's raw metrics.
+    StatsRequest,
+    /// Shared-nothing stats: the worker's **raw** latency samples plus
+    /// counters, cumulative since worker start.  The coordinator folds
+    /// the samples through `Metrics::merged_percentiles` — raw samples
+    /// cross the wire precisely so percentiles are merged, never
+    /// averaged.
+    Stats {
+        /// Requests this worker answered with logits.
+        completed: u64,
+        /// Requests shed by this worker's admission control.
+        shed: u64,
+        /// Batches this worker executed.
+        batches: u64,
+        /// Raw end-to-end latency samples, seconds.
+        latencies: Vec<f64>,
+    },
+    /// Coordinator tells the worker process to exit.
+    Shutdown,
+}
+
+impl Frame {
+    /// Frame type name (diagnostics).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::Request { .. } => "request",
+            Frame::Response { .. } => "response",
+            Frame::Reject { .. } => "reject",
+            Frame::StatsRequest => "stats-request",
+            Frame::Stats { .. } => "stats",
+            Frame::Shutdown => "shutdown",
+        }
+    }
+}
+
+fn reason_code(r: RejectReason) -> (u8, u32, u32) {
+    match r {
+        RejectReason::QueueFull => (1, 0, 0),
+        RejectReason::ShuttingDown => (2, 0, 0),
+        RejectReason::BadShape { expected, got } => (3, expected as u32, got as u32),
+        RejectReason::WorkerFailed => (4, 0, 0),
+    }
+}
+
+fn reason_from_code(code: u8, a: u32, b: u32) -> Result<RejectReason, FrameError> {
+    match code {
+        1 => Ok(RejectReason::QueueFull),
+        2 => Ok(RejectReason::ShuttingDown),
+        3 => Ok(RejectReason::BadShape { expected: a as usize, got: b as usize }),
+        4 => Ok(RejectReason::WorkerFailed),
+        other => Err(FrameError::BadReason(other)),
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    out.reserve(vs.len() * 4);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    out.reserve(vs.len() * 8);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian payload reader.
+struct Cur<'a> {
+    frame: &'static str,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(frame: &'static str, buf: &'a [u8]) -> Self {
+        Cur { frame, buf, pos: 0 }
+    }
+
+    fn short(&self, needed: usize) -> FrameError {
+        FrameError::BadPayloadLen {
+            frame: self.frame,
+            expected: self.pos.saturating_add(needed),
+            got: self.buf.len(),
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if self.buf.len() - self.pos < n {
+            return Err(self.short(n));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>, FrameError> {
+        let n = match count.checked_mul(4) {
+            Some(n) => n,
+            None => return Err(self.short(usize::MAX)),
+        };
+        let b = self.take(n)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn f64s(&mut self, count: usize) -> Result<Vec<f64>, FrameError> {
+        let n = match count.checked_mul(8) {
+            Some(n) => n,
+            None => return Err(self.short(usize::MAX)),
+        };
+        let b = self.take(n)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+
+    /// Error unless the payload was consumed exactly.
+    fn finish(self) -> Result<(), FrameError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(FrameError::BadPayloadLen {
+                frame: self.frame,
+                expected: self.pos,
+                got: self.buf.len(),
+            })
+        }
+    }
+}
+
+/// Serialize `frame` to `w` (one `write_all` per header field plus the
+/// payload, then `flush`).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<(), FrameError> {
+    let (tag, payload) = encode_payload(frame);
+    if payload.len() as u64 > MAX_PAYLOAD as u64 {
+        return Err(FrameError::TooLarge { len: payload.len() as u32, max: MAX_PAYLOAD });
+    }
+    w.write_all(&MAGIC).map_err(FrameError::Io)?;
+    w.write_all(&[tag]).map_err(FrameError::Io)?;
+    w.write_all(&(payload.len() as u32).to_le_bytes()).map_err(FrameError::Io)?;
+    w.write_all(&payload).map_err(FrameError::Io)?;
+    w.flush().map_err(FrameError::Io)?;
+    Ok(())
+}
+
+fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
+    let mut p = Vec::new();
+    let tag = match frame {
+        Frame::Hello { features, classes, batch_capacity } => {
+            put_u32(&mut p, *features);
+            put_u32(&mut p, *classes);
+            put_u32(&mut p, *batch_capacity);
+            TYPE_HELLO
+        }
+        Frame::Request { id, rows, features, data } => {
+            put_u64(&mut p, *id);
+            put_u32(&mut p, *rows);
+            put_u32(&mut p, *features);
+            put_f32s(&mut p, data);
+            TYPE_REQUEST
+        }
+        Frame::Response { id, rows, classes, data } => {
+            put_u64(&mut p, *id);
+            put_u32(&mut p, *rows);
+            put_u32(&mut p, *classes);
+            put_f32s(&mut p, data);
+            TYPE_RESPONSE
+        }
+        Frame::Reject { id, reason } => {
+            let (code, a, b) = reason_code(*reason);
+            put_u64(&mut p, *id);
+            p.push(code);
+            put_u32(&mut p, a);
+            put_u32(&mut p, b);
+            TYPE_REJECT
+        }
+        Frame::StatsRequest => TYPE_STATS_REQUEST,
+        Frame::Stats { completed, shed, batches, latencies } => {
+            put_u64(&mut p, *completed);
+            put_u64(&mut p, *shed);
+            put_u64(&mut p, *batches);
+            put_u32(&mut p, latencies.len() as u32);
+            put_f64s(&mut p, latencies);
+            TYPE_STATS
+        }
+        Frame::Shutdown => TYPE_SHUTDOWN,
+    };
+    (tag, p)
+}
+
+/// Read one frame from `r`.  Blocks until a full frame arrives (socket
+/// read timeouts surface as [`FrameError::Io`]).  A peer that closed
+/// cleanly at a frame boundary yields [`FrameError::Closed`]; anything
+/// cut short mid-frame yields [`FrameError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, FrameError> {
+    // first byte read separately: zero bytes here is a clean close,
+    // not a truncation
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Err(FrameError::Closed),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::from(e)),
+        }
+    }
+    let mut magic = [0u8; 4];
+    magic[0] = first[0];
+    r.read_exact(&mut magic[1..])?;
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head)?;
+    let tag = head[0];
+    let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]);
+    // validation order is normative (ARCHITECTURE.md): magic, type,
+    // length cap — all before the payload buffer is allocated or read
+    if !(TYPE_HELLO..=TYPE_SHUTDOWN).contains(&tag) {
+        return Err(FrameError::UnknownType(tag));
+    }
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::TooLarge { len, max: MAX_PAYLOAD });
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    decode_payload(tag, &payload)
+}
+
+fn decode_payload(tag: u8, payload: &[u8]) -> Result<Frame, FrameError> {
+    match tag {
+        TYPE_HELLO => {
+            let mut c = Cur::new("hello", payload);
+            let features = c.u32()?;
+            let classes = c.u32()?;
+            let batch_capacity = c.u32()?;
+            c.finish()?;
+            Ok(Frame::Hello { features, classes, batch_capacity })
+        }
+        TYPE_REQUEST => {
+            let mut c = Cur::new("request", payload);
+            let id = c.u64()?;
+            let rows = c.u32()?;
+            let features = c.u32()?;
+            let data = c.f32s(rows as usize * features as usize)?;
+            c.finish()?;
+            Ok(Frame::Request { id, rows, features, data })
+        }
+        TYPE_RESPONSE => {
+            let mut c = Cur::new("response", payload);
+            let id = c.u64()?;
+            let rows = c.u32()?;
+            let classes = c.u32()?;
+            let data = c.f32s(rows as usize * classes as usize)?;
+            c.finish()?;
+            Ok(Frame::Response { id, rows, classes, data })
+        }
+        TYPE_REJECT => {
+            let mut c = Cur::new("reject", payload);
+            let id = c.u64()?;
+            let code = c.u8()?;
+            let a = c.u32()?;
+            let b = c.u32()?;
+            c.finish()?;
+            Ok(Frame::Reject { id, reason: reason_from_code(code, a, b)? })
+        }
+        TYPE_STATS_REQUEST => {
+            Cur::new("stats-request", payload).finish()?;
+            Ok(Frame::StatsRequest)
+        }
+        TYPE_STATS => {
+            let mut c = Cur::new("stats", payload);
+            let completed = c.u64()?;
+            let shed = c.u64()?;
+            let batches = c.u64()?;
+            let n = c.u32()?;
+            let latencies = c.f64s(n as usize)?;
+            c.finish()?;
+            Ok(Frame::Stats { completed, shed, batches, latencies })
+        }
+        TYPE_SHUTDOWN => {
+            Cur::new("shutdown", payload).finish()?;
+            Ok(Frame::Shutdown)
+        }
+        other => Err(FrameError::UnknownType(other)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, f).expect("encode");
+        read_frame(&mut Cursor::new(buf)).expect("decode")
+    }
+
+    fn encode(f: &Frame) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, f).expect("encode");
+        buf
+    }
+
+    #[test]
+    fn every_frame_type_round_trips() {
+        let frames = [
+            Frame::Hello { features: 784, classes: 10, batch_capacity: 64 },
+            Frame::Request { id: 7, rows: 2, features: 3, data: vec![1.0, -2.5, 0.0, 4.0, 5.0, -0.125] },
+            Frame::Response { id: 7, rows: 2, classes: 2, data: vec![0.5, -0.5, 1.5, 2.5] },
+            Frame::Reject { id: 9, reason: RejectReason::QueueFull },
+            Frame::Reject { id: 9, reason: RejectReason::BadShape { expected: 784, got: 3 } },
+            Frame::Reject { id: 1, reason: RejectReason::ShuttingDown },
+            Frame::Reject { id: 2, reason: RejectReason::WorkerFailed },
+            Frame::StatsRequest,
+            Frame::Stats {
+                completed: 100,
+                shed: 3,
+                batches: 25,
+                latencies: vec![0.001, 0.002, 0.101],
+            },
+            Frame::Shutdown,
+        ];
+        for f in &frames {
+            assert_eq!(&roundtrip(f), f, "{} round-trip", f.name());
+        }
+    }
+
+    #[test]
+    fn f32_payloads_cross_bitwise() {
+        // values with tricky bit patterns: -0.0, subnormal, NaN payload
+        let vals = vec![-0.0f32, f32::MIN_POSITIVE / 2.0, f32::NAN, f32::INFINITY, -1.0e-38];
+        let got = match roundtrip(&Frame::Request { id: 1, rows: 1, features: 5, data: vals.clone() }) {
+            Frame::Request { data, .. } => data,
+            other => panic!("wrong frame {other:?}"),
+        };
+        for (a, b) in vals.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bitwise-identical across the wire");
+        }
+    }
+
+    #[test]
+    fn zero_length_batch_is_legal() {
+        let f = Frame::Request { id: 3, rows: 0, features: 784, data: vec![] };
+        assert_eq!(roundtrip(&f), f);
+        let r = Frame::Response { id: 3, rows: 0, classes: 10, data: vec![] };
+        assert_eq!(roundtrip(&r), r);
+    }
+
+    #[test]
+    fn garbage_magic_is_typed_error() {
+        let mut bytes = encode(&Frame::Shutdown);
+        bytes[..4].copy_from_slice(b"XXXX");
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(FrameError::BadMagic(m)) => assert_eq!(&m, b"XXXX"),
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+        // pure noise, not even a header
+        match read_frame(&mut Cursor::new(b"hello sobolnet".to_vec())) {
+            Err(FrameError::BadMagic(_)) => {}
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_typed_error() {
+        let full = encode(&Frame::Request { id: 5, rows: 1, features: 4, data: vec![1.0; 4] });
+        // cut the stream at every possible byte offset: each must be a
+        // typed error (Closed at offset 0, Truncated elsewhere), never
+        // a panic or a bogus frame
+        for cut in 0..full.len() {
+            let r = read_frame(&mut Cursor::new(full[..cut].to_vec()));
+            match (cut, r) {
+                (0, Err(FrameError::Closed)) => {}
+                (_, Err(FrameError::Truncated)) => {}
+                (c, other) => panic!("cut at {c}: expected typed error, got {other:?}"),
+            }
+        }
+        // the intact frame still decodes after all those partial reads
+        assert!(read_frame(&mut Cursor::new(full)).is_ok());
+    }
+
+    #[test]
+    fn oversize_header_rejected_before_allocation() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(2); // request
+        bytes.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        // no payload follows — the length check must fire before any read
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(FrameError::TooLarge { len, max }) => {
+                assert_eq!(len, MAX_PAYLOAD + 1);
+                assert_eq!(max, MAX_PAYLOAD);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn max_size_payload_round_trips() {
+        // largest request that fits the cap: header is 16 bytes, so
+        // (MAX_PAYLOAD - 16) / 4 values exactly at the boundary
+        let n = (MAX_PAYLOAD as usize - 16) / 4;
+        let f = Frame::Request { id: 1, rows: 1, features: n as u32, data: vec![0.25; n] };
+        let bytes = encode(&f);
+        assert_eq!(bytes.len(), 9 + 16 + 4 * n);
+        match read_frame(&mut Cursor::new(bytes)).expect("decode at the cap") {
+            Frame::Request { data, .. } => assert_eq!(data.len(), n),
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn payload_count_mismatch_is_typed_error() {
+        // declared 8 rows but carried only 1 row of data
+        let mut bad = Vec::new();
+        put_u64(&mut bad, 1);
+        put_u32(&mut bad, 8); // rows
+        put_u32(&mut bad, 4); // features
+        put_f32s(&mut bad, &[0.0; 4]); // one row, not eight
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(2);
+        bytes.extend_from_slice(&(bad.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&bad);
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(FrameError::BadPayloadLen { frame: "request", .. }) => {}
+            other => panic!("expected BadPayloadLen, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut p = Vec::new();
+        put_u32(&mut p, 1);
+        put_u32(&mut p, 2);
+        put_u32(&mut p, 3);
+        p.push(0xFF); // one byte too many for a hello
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(1);
+        bytes.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&p);
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(FrameError::BadPayloadLen { frame: "hello", .. }) => {}
+            other => panic!("expected BadPayloadLen, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_type_and_reason_are_typed_errors() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(99);
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(FrameError::UnknownType(99)) => {}
+            other => panic!("expected UnknownType, got {other:?}"),
+        }
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        p.push(77); // bogus reason code
+        put_u32(&mut p, 0);
+        put_u32(&mut p, 0);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(4);
+        bytes.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&p);
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(FrameError::BadReason(77)) => {}
+            other => panic!("expected BadReason, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_display() {
+        let samples: Vec<FrameError> = vec![
+            FrameError::Closed,
+            FrameError::Truncated,
+            FrameError::BadMagic(*b"XXXX"),
+            FrameError::UnknownType(9),
+            FrameError::TooLarge { len: 1, max: 0 },
+            FrameError::BadPayloadLen { frame: "hello", expected: 12, got: 13 },
+            FrameError::BadReason(0),
+            FrameError::Io(std::io::Error::other("boom")),
+        ];
+        for e in samples {
+            assert!(!format!("{e}").is_empty());
+        }
+    }
+}

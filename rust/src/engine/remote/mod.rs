@@ -1,0 +1,84 @@
+//! Multi-process engine transport: worker shards in separate OS
+//! processes, connected over Unix-domain or TCP sockets.
+//!
+//! The paper keeps a sparse network fast by keeping its weight blocks
+//! contiguous and its layer hops permutations — contention-free
+//! parallel hardware (§3, §4.4).  This module applies the same idea
+//! one level up, in the spirit of interleaver-style partitioning
+//! across compute units: worker shards become **shared-nothing
+//! processes**, and the engine's existing
+//! [`Ticket`](crate::engine::Ticket)/[`Response`](crate::engine::Response)/
+//! [`RejectReason`](crate::engine::RejectReason) contract becomes the
+//! wire protocol (PR 3 shaped it as plain data for exactly this
+//! reason).
+//!
+//! Layering — the coordinator process keeps admission, dispatch, and
+//! batching **unchanged**; only the backend crosses a process
+//! boundary:
+//!
+//! ```text
+//! coordinator process                 worker processes
+//! ───────────────────                 ────────────────────────────
+//! EngineBuilder::remote(addrs)        sobolnet shard-worker --listen …
+//!   │  (or .spawn_workers(n, spec))     │
+//!   ▼                                   ▼
+//! Engine ── shard 0: RemoteBackend ◄── socket ──► single-shard Engine
+//!        ── shard 1: RemoteBackend ◄── socket ──► single-shard Engine
+//!        └─ shard N: …
+//! ```
+//!
+//! * [`frame`] — the length-prefixed binary frame codec (the byte-level
+//!   spec is normative in `docs/ARCHITECTURE.md` §Wire protocol);
+//! * [`transport`] — `unix:`/`tcp:` address grammar, streams, listeners;
+//! * [`client`] — [`RemoteBackend`], the coordinator-side
+//!   [`InferenceBackend`](crate::engine::InferenceBackend) proxy with
+//!   reconnect-with-backoff;
+//! * [`server`] — [`serve_shard`], the worker-process request loop;
+//! * [`spawn`] — [`SpawnedShards`], child-process lifecycle.
+//!
+//! **Metrics are shared-nothing**: each worker process records raw
+//! latency samples locally and ships them (plus shed counters) in
+//! [`Frame::Stats`](frame::Frame) replies; the coordinator folds the
+//! raw samples through
+//! [`Metrics::merged_percentiles`](crate::engine::Metrics::merged_percentiles).
+//! Percentiles are merged from pooled samples, **never averaged**.
+//!
+//! **Failure semantics match the in-process engine**: a dead worker
+//! process resolves its in-flight tickets as `WorkerFailed` (after
+//! reconnect-with-backoff is exhausted) and the engine keeps serving
+//! on the surviving shards; a full shard queue sheds per the
+//! configured [`AdmissionPolicy`](crate::engine::AdmissionPolicy).
+//! `tests/remote_shard.rs` pins both, plus bitwise equality of a
+//! multi-process engine against the sequential single-process
+//! reference.
+//!
+//! ```no_run
+//! # fn main() -> std::io::Result<()> {
+//! use sobolnet::engine::{EngineBuilder, Response, SpawnSpec};
+//!
+//! // four worker shards, each its own OS process with a replica built
+//! // from the same deterministic spec
+//! let spec = SpawnSpec::with_args([
+//!     "--sizes", "784,256,256,10", "--paths", "2048", "--seed", "1",
+//! ]);
+//! let engine = EngineBuilder::new().spawn_workers(4, spec)?.build_remote()?;
+//! match engine.infer(vec![0.0; 784]) {
+//!     Response::Logits(logits) => println!("{logits:?}"),
+//!     Response::Rejected(reason) => eprintln!("rejected: {reason}"),
+//! }
+//! engine.shutdown(); // graceful: final stats fold + Shutdown frames
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod client;
+pub mod frame;
+pub mod server;
+pub mod spawn;
+pub mod transport;
+
+pub use client::{RemoteBackend, RemoteOptions};
+pub use frame::{Frame, FrameError};
+pub use server::serve_shard;
+pub use spawn::{spawn_shards, SpawnSpec, SpawnedShards};
+pub use transport::{Addr, Listener, Stream};

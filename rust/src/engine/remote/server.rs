@@ -1,0 +1,205 @@
+//! Worker-process side of the multi-process engine: serve one engine
+//! shard behind a socket listener.
+//!
+//! This is what the `sobolnet shard-worker` subcommand runs.  The
+//! process hosts a normal (usually single-shard) [`Engine`] and
+//! answers the coordinator's frames:
+//!
+//! * `Request`  → rows are submitted through [`Engine::try_submit`]
+//!   (the same admission path every local caller uses) and the tickets
+//!   awaited in row order, so a remote batch is bitwise identical to
+//!   local submission of the same rows.  A request matching the
+//!   previous one (same id **and** same payload fingerprint) is
+//!   answered from a 1-deep reply cache that survives reconnects, so a
+//!   coordinator retry after a broken connection is idempotent — no
+//!   recomputation, no double-counted stats — while a restarted
+//!   coordinator reusing id 0 with different data recomputes;
+//! * `StatsRequest` → a `Stats` frame carrying this worker's counters
+//!   (cumulative since start) and its recent **raw** latency samples
+//!   (bounded by [`STATS_SAMPLE_CAP`]) — the shared-nothing half of
+//!   engine-wide percentile merging;
+//! * `Shutdown` → [`serve_shard`] returns so the process can exit.
+//!
+//! A dropped connection (coordinator restart, transient network) is
+//! not fatal: the loop goes back to `accept`, which is what makes the
+//! coordinator's reconnect-with-backoff work.  Malformed frames from a
+//! stray client are logged and treated as a disconnect — garbage on
+//! the socket can never crash a serving shard.
+
+use super::frame::{read_frame, write_frame, Frame, FrameError};
+use super::transport::{Listener, Stream};
+use crate::engine::{Engine, RejectReason, Response};
+use std::sync::atomic::Ordering;
+
+/// Why a single connection ended.
+enum ConnExit {
+    /// Coordinator sent `Shutdown`: the process should exit.
+    Shutdown,
+    /// Peer disconnected (or sent garbage): go back to `accept`.
+    Disconnected,
+}
+
+/// Serve `engine` behind `listener` until a `Shutdown` frame arrives.
+/// Accepts connections serially (the coordinator holds exactly one per
+/// shard); returns `Err` only for listener-level I/O failures.
+pub fn serve_shard(listener: &Listener, engine: &Engine) -> Result<(), FrameError> {
+    // 1-deep idempotency cache, surviving reconnects: a coordinator
+    // that lost the connection mid-exchange resends the same request
+    // id and gets the cached reply — a retried batch is never
+    // recomputed and never double-counted in worker-side stats.  The
+    // cache is keyed by (id, payload fingerprint), not id alone: a
+    // *restarted* coordinator also starts its ids at 0, and an
+    // id-only key would hand its first (different) batch the previous
+    // coordinator's cached logits.
+    let mut last_reply: Option<(u64, u64, Frame)> = None;
+    loop {
+        let mut conn = listener.accept().map_err(FrameError::Io)?;
+        match handle_conn(&mut conn, engine, &mut last_reply) {
+            Ok(ConnExit::Shutdown) => return Ok(()),
+            Ok(ConnExit::Disconnected) => continue,
+            Err(e) => {
+                // bad bytes or a mid-frame hangup: drop the connection,
+                // keep the shard serving
+                crate::log_warn!("shard-worker connection error: {e}");
+                continue;
+            }
+        }
+    }
+}
+
+fn handle_conn(
+    conn: &mut Stream,
+    engine: &Engine,
+    last_reply: &mut Option<(u64, u64, Frame)>,
+) -> Result<ConnExit, FrameError> {
+    write_frame(
+        conn,
+        &Frame::Hello {
+            features: engine.features() as u32,
+            classes: engine.classes() as u32,
+            batch_capacity: engine.batch_capacity() as u32,
+        },
+    )?;
+    loop {
+        let frame = match read_frame(conn) {
+            Ok(f) => f,
+            Err(FrameError::Closed) => return Ok(ConnExit::Disconnected),
+            Err(e) => return Err(e),
+        };
+        match frame {
+            Frame::Request { id, rows, features, data } => {
+                let fp = request_fingerprint(rows, features, &data);
+                let hit = last_reply
+                    .as_ref()
+                    .map(|(lid, lfp, _)| *lid == id && *lfp == fp)
+                    .unwrap_or(false);
+                if !hit {
+                    let reply =
+                        answer_request(engine, rows as usize, features as usize, &data, id);
+                    *last_reply = Some((id, fp, reply));
+                }
+                if let Some((_, _, reply)) = last_reply.as_ref() {
+                    write_frame(conn, reply)?;
+                }
+            }
+            Frame::StatsRequest => {
+                write_frame(conn, &stats_frame(engine))?;
+            }
+            Frame::Shutdown => return Ok(ConnExit::Shutdown),
+            // a worker never expects coordinator-bound frame types;
+            // treat a confused peer as a disconnect
+            other => {
+                crate::log_warn!(
+                    "shard-worker: unexpected {} frame, dropping connection",
+                    other.name()
+                );
+                return Ok(ConnExit::Disconnected);
+            }
+        }
+    }
+}
+
+/// FNV-1a over `bytes`, continuing from `h`.
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Content fingerprint of a request (shape + exact payload bits), the
+/// second half of the reply-cache key: an id match alone is not proof
+/// of a retry — a restarted coordinator reuses low ids.
+fn request_fingerprint(rows: u32, features: u32, data: &[f32]) -> u64 {
+    let mut h = fnv1a(0xcbf2_9ce4_8422_2325, &rows.to_le_bytes());
+    h = fnv1a(h, &features.to_le_bytes());
+    for v in data {
+        h = fnv1a(h, &v.to_le_bytes());
+    }
+    h
+}
+
+/// Submit every row of the batch through the engine's normal admission
+/// path, await the tickets in row order, and assemble the reply.
+fn answer_request(engine: &Engine, rows: usize, features: usize, data: &[f32], id: u64) -> Frame {
+    if features != engine.features() {
+        return Frame::Reject {
+            id,
+            reason: RejectReason::BadShape { expected: engine.features(), got: features },
+        };
+    }
+    if rows == 0 {
+        // zero-length batches are legal and answered in kind
+        return Frame::Response { id, rows: 0, classes: engine.classes() as u32, data: vec![] };
+    }
+    // submit all rows first (they coalesce into the shard's batcher),
+    // then await in row order so the reply layout is deterministic
+    let mut tickets = Vec::with_capacity(rows);
+    for r in 0..rows {
+        match engine.try_submit(data[r * features..(r + 1) * features].to_vec()) {
+            Ok(t) => tickets.push(t),
+            Err(reason) => return Frame::Reject { id, reason },
+        }
+    }
+    let classes = engine.classes();
+    let mut out = Vec::with_capacity(rows * classes);
+    for t in tickets {
+        match t.wait() {
+            Response::Logits(l) => out.extend_from_slice(&l),
+            Response::Rejected(reason) => return Frame::Reject { id, reason },
+        }
+    }
+    Frame::Response { id, rows: rows as u32, classes: classes as u32, data: out }
+}
+
+/// Most recent raw latency samples a single `Stats` frame will carry.
+/// Counters stay cumulative, but an unbounded sample vector would
+/// outgrow the frame payload cap on a long-lived worker (and make
+/// total stats traffic quadratic in request count), so each frame
+/// ships a bounded tail — 64 Ki samples ≈ 512 KiB, far more than any
+/// percentile needs.
+pub const STATS_SAMPLE_CAP: usize = 64 * 1024;
+
+/// Snapshot this worker's raw metrics into a `Stats` frame
+/// (shared-nothing: the coordinator folds, never averages).  Counters
+/// are cumulative since worker start; latency samples are the most
+/// recent [`STATS_SAMPLE_CAP`] (raw, so the coordinator can merge
+/// before ranking).
+fn stats_frame(engine: &Engine) -> Frame {
+    let mut latencies = Vec::new();
+    for m in engine.worker_metrics() {
+        // bounded copy: O(cap) under the metrics lock per poll, not
+        // O(everything this worker ever served)
+        m.extend_recent_latencies_into(&mut latencies, STATS_SAMPLE_CAP);
+    }
+    if latencies.len() > STATS_SAMPLE_CAP {
+        latencies.drain(..latencies.len() - STATS_SAMPLE_CAP);
+    }
+    Frame::Stats {
+        completed: engine.metrics.completed.load(Ordering::Relaxed),
+        shed: engine.metrics.shed.load(Ordering::Relaxed),
+        batches: engine.metrics.batches.load(Ordering::Relaxed),
+        latencies,
+    }
+}

@@ -1,0 +1,170 @@
+//! Child-process management for coordinator-spawned worker shards.
+//!
+//! [`spawn_shards`] launches `n` copies of the `sobolnet shard-worker`
+//! subcommand (or any program speaking the wire protocol), each
+//! listening on its own fresh Unix socket, and waits until every
+//! socket accepts a connection.  The returned [`SpawnedShards`] owns
+//! the `Child` handles: dropping it kills and reaps every process that
+//! is still alive, so an `Engine` built over spawned shards cannot
+//! leak children — and tests can [`SpawnedShards::kill`] one shard to
+//! exercise the `WorkerFailed` path.
+
+use super::transport::Addr;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Monotonic counter so concurrent spawns (parallel tests) never
+/// collide on a socket path.
+static SPAWN_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// How to launch a worker shard process.
+#[derive(Debug, Clone)]
+pub struct SpawnSpec {
+    /// Program to run; defaults to the current executable (the normal
+    /// case: a `sobolnet` coordinator spawning `sobolnet shard-worker`
+    /// children).  Tests point this at `env!("CARGO_BIN_EXE_sobolnet")`.
+    pub program: PathBuf,
+    /// Extra arguments appended after `shard-worker --listen <addr>` —
+    /// the model/topology spec the child builds its replica from
+    /// (`--sizes`, `--paths`, `--seed`, …).
+    pub shard_args: Vec<String>,
+    /// Directory for the per-shard Unix sockets.
+    pub socket_dir: PathBuf,
+    /// How long to wait for every child to start listening.
+    pub ready_timeout: Duration,
+}
+
+impl Default for SpawnSpec {
+    fn default() -> Self {
+        SpawnSpec {
+            program: std::env::current_exe().unwrap_or_else(|_| PathBuf::from("sobolnet")),
+            shard_args: Vec::new(),
+            socket_dir: std::env::temp_dir(),
+            ready_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+impl SpawnSpec {
+    /// Default spec with the given model/topology arguments.
+    pub fn with_args<S: Into<String>, I: IntoIterator<Item = S>>(args: I) -> Self {
+        SpawnSpec { shard_args: args.into_iter().map(Into::into).collect(), ..Default::default() }
+    }
+}
+
+/// Handle to a set of spawned worker-shard processes.
+pub struct SpawnedShards {
+    addrs: Vec<String>,
+    children: Vec<Option<Child>>,
+    socket_paths: Vec<PathBuf>,
+}
+
+impl SpawnedShards {
+    /// Shard addresses, in shard order (feed these to
+    /// `EngineBuilder::remote`).
+    pub fn addrs(&self) -> &[String] {
+        &self.addrs
+    }
+
+    /// Number of shards spawned.
+    pub fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    /// `true` when no shards were spawned.
+    pub fn is_empty(&self) -> bool {
+        self.addrs.is_empty()
+    }
+
+    /// Hard-kill one worker process (tests of the `WorkerFailed`
+    /// path).  Returns `false` if it was already reaped.
+    pub fn kill(&mut self, idx: usize) -> bool {
+        match self.children[idx].take() {
+            Some(mut child) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+impl Drop for SpawnedShards {
+    fn drop(&mut self) {
+        for child in self.children.iter_mut() {
+            if let Some(mut c) = child.take() {
+                // graceful exit already happened if the coordinator
+                // sent Shutdown; kill() on an exited child is a no-op
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+        for p in &self.socket_paths {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Spawn `n` worker shards per `spec` and wait until each one listens.
+/// On any failure every already-spawned child is killed before the
+/// error returns.
+pub fn spawn_shards(n: usize, spec: &SpawnSpec) -> std::io::Result<SpawnedShards> {
+    assert!(n > 0, "spawn at least one shard");
+    let mut shards = SpawnedShards {
+        addrs: Vec::with_capacity(n),
+        children: Vec::with_capacity(n),
+        socket_paths: Vec::with_capacity(n),
+    };
+    for i in 0..n {
+        let seq = SPAWN_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = spec
+            .socket_dir
+            .join(format!("sobolnet-shard-{}-{}-{}.sock", std::process::id(), seq, i));
+        let addr = format!("unix:{}", path.display());
+        let child = Command::new(&spec.program)
+            .arg("shard-worker")
+            .arg("--listen")
+            .arg(&addr)
+            .args(&spec.shard_args)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()?;
+        shards.addrs.push(addr);
+        shards.children.push(Some(child));
+        shards.socket_paths.push(path);
+    }
+    // readiness: poll-connect each socket (the probe connection is
+    // dropped immediately; the worker just loops back to accept)
+    let deadline = Instant::now() + spec.ready_timeout;
+    for i in 0..n {
+        let addr = Addr::parse(&shards.addrs[i])
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
+        loop {
+            if let Some(child) = shards.children[i].as_mut() {
+                if let Ok(Some(status)) = child.try_wait() {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::BrokenPipe,
+                        format!("shard-worker {i} exited during startup: {status}"),
+                    ));
+                }
+            }
+            match addr.connect() {
+                Ok(_probe) => break,
+                Err(_) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    return Err(std::io::Error::new(
+                        e.kind(),
+                        format!("shard-worker {i} never listened at {}: {e}", shards.addrs[i]),
+                    ));
+                }
+            }
+        }
+    }
+    Ok(shards)
+}

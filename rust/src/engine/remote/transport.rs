@@ -1,0 +1,226 @@
+//! Socket transport of the multi-process engine: one address grammar
+//! over Unix-domain and TCP sockets.
+//!
+//! Addresses are strings so they travel through config files and CLI
+//! flags unchanged:
+//!
+//! * `unix:/path/to/shard.sock` — Unix-domain socket (the default for
+//!   same-host sharding: lowest latency, filesystem permissions),
+//! * `tcp:host:port` — TCP socket (cross-host sharding).
+//!
+//! [`Addr::listen`] yields a [`Listener`], [`Addr::connect`] a
+//! [`Stream`]; both are thin enums over the std types so the frame
+//! codec ([`super::frame`]) reads/writes one `impl Read + Write`
+//! regardless of family.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// A parsed shard-worker address.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Addr {
+    /// Unix-domain socket path.
+    Unix(PathBuf),
+    /// TCP `host:port`.
+    Tcp(String),
+}
+
+impl Addr {
+    /// Parse `unix:/path` or `tcp:host:port`.
+    pub fn parse(s: &str) -> Result<Addr, String> {
+        if let Some(path) = s.strip_prefix("unix:") {
+            if path.is_empty() {
+                return Err(format!("empty unix socket path in '{s}'"));
+            }
+            Ok(Addr::Unix(PathBuf::from(path)))
+        } else if let Some(hostport) = s.strip_prefix("tcp:") {
+            if !hostport.contains(':') {
+                return Err(format!("tcp address '{s}' must be tcp:host:port"));
+            }
+            Ok(Addr::Tcp(hostport.to_string()))
+        } else {
+            Err(format!("address '{s}' must start with unix: or tcp:"))
+        }
+    }
+
+    /// Bind a listener at this address.  For Unix sockets a stale
+    /// socket file from a previous run is removed first.
+    pub fn listen(&self) -> std::io::Result<Listener> {
+        match self {
+            Addr::Unix(path) => {
+                // a leftover socket file makes bind fail with AddrInUse
+                // even though nothing is listening
+                let _ = std::fs::remove_file(path);
+                Ok(Listener::Unix(UnixListener::bind(path)?))
+            }
+            Addr::Tcp(hostport) => Ok(Listener::Tcp(TcpListener::bind(hostport.as_str())?)),
+        }
+    }
+
+    /// One connection attempt (no retry — the caller owns backoff).
+    /// TCP uses the OS default connect timeout; prefer
+    /// [`Addr::connect_timeout`] anywhere a blackholed host must not
+    /// stall the caller.
+    pub fn connect(&self) -> std::io::Result<Stream> {
+        match self {
+            Addr::Unix(path) => Ok(Stream::Unix(UnixStream::connect(path)?)),
+            Addr::Tcp(hostport) => Ok(Stream::Tcp(TcpStream::connect(hostport.as_str())?)),
+        }
+    }
+
+    /// One connection attempt with a per-address TCP connect timeout —
+    /// a SYN-blackholed host fails within `timeout` instead of the OS
+    /// default (minutes).  Unix-domain connects complete or fail
+    /// immediately, so the timeout only bounds TCP (name resolution,
+    /// if any, still runs untimed before it).
+    pub fn connect_timeout(&self, timeout: Duration) -> std::io::Result<Stream> {
+        match self {
+            Addr::Unix(path) => Ok(Stream::Unix(UnixStream::connect(path)?)),
+            Addr::Tcp(hostport) => {
+                use std::net::ToSocketAddrs;
+                let mut last: Option<std::io::Error> = None;
+                for sock_addr in hostport.as_str().to_socket_addrs()? {
+                    match TcpStream::connect_timeout(&sock_addr, timeout) {
+                        Ok(s) => return Ok(Stream::Tcp(s)),
+                        Err(e) => last = Some(e),
+                    }
+                }
+                Err(last.unwrap_or_else(|| {
+                    std::io::Error::new(
+                        std::io::ErrorKind::NotFound,
+                        format!("no socket addresses for {hostport}"),
+                    )
+                }))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Addr::Unix(p) => write!(f, "unix:{}", p.display()),
+            Addr::Tcp(hp) => write!(f, "tcp:{hp}"),
+        }
+    }
+}
+
+/// A bound server socket of either family.
+pub enum Listener {
+    /// Unix-domain listener.
+    Unix(UnixListener),
+    /// TCP listener.
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Block for the next inbound connection.
+    pub fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+        }
+    }
+}
+
+/// A connected socket of either family.
+pub enum Stream {
+    /// Unix-domain stream.
+    Unix(UnixStream),
+    /// TCP stream.
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    /// Set (or clear) the read timeout; used by best-effort paths like
+    /// the final stats poll at backend drop so they cannot hang.
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_read_timeout(d),
+            Stream::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_grammar() {
+        assert_eq!(
+            Addr::parse("unix:/tmp/shard.sock"),
+            Ok(Addr::Unix(PathBuf::from("/tmp/shard.sock")))
+        );
+        assert_eq!(Addr::parse("tcp:127.0.0.1:7070"), Ok(Addr::Tcp("127.0.0.1:7070".into())));
+        assert!(Addr::parse("/tmp/bare-path").is_err());
+        assert!(Addr::parse("udp:1.2.3.4:5").is_err());
+        assert!(Addr::parse("unix:").is_err());
+        assert!(Addr::parse("tcp:portless").is_err());
+        let a = Addr::parse("unix:/tmp/x.sock").unwrap();
+        assert_eq!(Addr::parse(&a.to_string()), Ok(a), "display round-trips through parse");
+    }
+
+    #[test]
+    fn unix_listen_connect_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("sobolnet-transport-test-{}.sock", std::process::id()));
+        let addr = Addr::Unix(path.clone());
+        let listener = addr.listen().expect("bind");
+        let server = std::thread::spawn(move || {
+            let mut conn = listener.accept().expect("accept");
+            let mut buf = [0u8; 4];
+            conn.read_exact(&mut buf).expect("read");
+            conn.write_all(&buf).expect("echo");
+            conn.flush().expect("flush");
+        });
+        let mut client = addr.connect().expect("connect");
+        client.write_all(b"ping").expect("send");
+        client.flush().expect("flush");
+        let mut echo = [0u8; 4];
+        client.read_exact(&mut echo).expect("recv");
+        assert_eq!(&echo, b"ping");
+        server.join().expect("server thread");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn stale_unix_socket_file_is_replaced() {
+        let path = std::env::temp_dir()
+            .join(format!("sobolnet-transport-stale-{}.sock", std::process::id()));
+        let addr = Addr::Unix(path.clone());
+        drop(addr.listen().expect("first bind"));
+        // the socket file lingers after the listener drops; a rebind
+        // must succeed anyway
+        let _second = addr.listen().expect("rebind over stale socket file");
+        let _ = std::fs::remove_file(path);
+    }
+}

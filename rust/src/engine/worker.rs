@@ -67,8 +67,8 @@ impl Drop for QueueGuard {
 }
 
 /// Spawn a worker shard.  Returns the shard handle plus a one-shot
-/// channel carrying `(features, classes)` once the backend is
-/// constructed on the worker thread.
+/// channel carrying `(features, classes, batch_capacity)` once the
+/// backend is constructed on the worker thread.
 pub(crate) fn spawn<F>(
     worker_id: usize,
     factory: F,
@@ -76,7 +76,7 @@ pub(crate) fn spawn<F>(
     queue_bound: usize,
     aggregate: Arc<Metrics>,
     dispatch: Arc<dyn DispatchPolicy>,
-) -> (Shard, Receiver<(usize, usize)>)
+) -> (Shard, Receiver<(usize, usize, usize)>)
 where
     F: FnOnce() -> Box<dyn InferenceBackend> + Send + 'static,
 {
@@ -95,7 +95,7 @@ where
             let cap = backend.batch_capacity();
             let feat = backend.features();
             let classes = backend.classes();
-            let _ = meta_tx.send((feat, classes));
+            let _ = meta_tx.send((feat, classes, cap));
             let batcher = Batcher { capacity: cap, max_wait };
             let mut xbuf = vec![0.0f32; cap * feat];
             while let Some(batch) = batcher.next_batch(&*q) {
@@ -107,7 +107,7 @@ where
                 for v in &mut xbuf[batch.len() * feat..] {
                     *v = 0.0;
                 }
-                let logits = backend.infer_batch(&xbuf);
+                let logits = backend.infer_rows(&xbuf, batch.len());
                 own.record_batch(batch.len(), cap);
                 aggregate.record_batch(batch.len(), cap);
                 for (i, r) in batch.into_iter().enumerate() {

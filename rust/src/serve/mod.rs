@@ -85,8 +85,39 @@ impl ServeConfig {
     }
 }
 
-/// Handle to a running sharded inference server (compatibility wrapper
-/// over [`crate::engine::Engine`]).
+/// Handle to a running sharded inference server.
+///
+/// **This is a compatibility wrapper** over [`crate::engine::Engine`],
+/// kept so pre-engine call sites keep compiling with the historical
+/// blocking semantics (unbounded queues, `Block` admission, bare-logits
+/// replies).  It will not grow new features — admission policies,
+/// ticket timeouts, and multi-process sharding only exist on the
+/// engine.  Migration is mechanical:
+///
+/// ```no_run
+/// use sobolnet::engine::{AdmissionPolicy, DispatchKind, EngineBuilder};
+/// # let model: sobolnet::nn::sparse::SparseMlp = todo!();
+/// // before:
+/// //   let cfg = ServeConfig { workers: 4, max_wait, dispatch: Dispatch::LeastLoaded };
+/// //   let server = ShardedServer::start_sharded_with(factory, cfg);
+/// //   let logits = server.infer(x);
+/// // after (identical semantics spelled out):
+/// let engine = EngineBuilder::new()
+///     .workers(4)
+///     .max_wait(std::time::Duration::from_millis(2))
+///     .dispatch(DispatchKind::LeastLoaded)
+///     .queue_depth(0)                    // unbounded queue…
+///     .admission(AdmissionPolicy::Block) // …blocking admission
+///     .build_model(model, 784, 10);
+/// let logits = engine.infer(vec![0.0; 784]).logits().expect("served");
+/// ```
+///
+/// From there the engine's extra surface is opt-in: bounded
+/// `queue_depth` + shedding admission for backpressure,
+/// `try_submit` → [`Ticket`](crate::engine::Ticket) for non-blocking
+/// submission, and `remote(addrs)`/`spawn_workers(n, spec)` +
+/// `build_remote()` for multi-process shards (see
+/// [`crate::engine::remote`] and `docs/ARCHITECTURE.md`).
 pub struct ShardedServer {
     engine: Engine,
     /// Aggregate *counters* across all shards.  Latency samples now

@@ -1,0 +1,374 @@
+//! Integration: the multi-process engine (worker shards in separate
+//! OS processes behind Unix sockets) behaves **identically** to the
+//! in-process engine.
+//!
+//! Pinned properties (the PR's acceptance criteria):
+//!
+//! 1. responses from a 4-process engine are **bitwise equal** to the
+//!    sequential single-process reference — f32 payloads cross the
+//!    wire as raw IEEE-754 bits and every worker process builds the
+//!    same deterministic replica from the same spec;
+//! 2. killing one worker process resolves its in-flight tickets as
+//!    `WorkerFailed` (reconnect-with-backoff exhausts, the shard
+//!    closes) and the engine **keeps serving on the survivors**;
+//! 3. remote stats frames carry each worker's **raw** latency samples;
+//!    folding them through `Metrics::merged_percentiles` equals
+//!    percentiles over the pooled union (merged, never averaged), and
+//!    the folded counters account for exactly the traffic an
+//!    in-process run of the same load accounts for;
+//! 4. garbage bytes on a shard socket can never take the worker down.
+//!
+//! Worker processes run the real `sobolnet shard-worker` subcommand
+//! (cargo builds the binary for integration tests and exposes it via
+//! `CARGO_BIN_EXE_sobolnet`).
+
+use sobolnet::engine::remote::{spawn_shards, Addr, SpawnSpec};
+use sobolnet::engine::{
+    DispatchKind, EngineBuilder, Metrics, RejectReason, RemoteOptions, Response,
+};
+use sobolnet::nn::init::Init;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::topology::{PathSource, TopologyBuilder};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+const FEATURES: usize = 16;
+const CLASSES: usize = 8;
+const PATHS: usize = 256;
+const SEED: u64 = 42;
+const BATCH: usize = 8;
+
+/// The shard-worker binary cargo built for this test run.
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_sobolnet"))
+}
+
+/// Spawn spec matching [`reference_net`]: the args are built from the
+/// same constants, so every worker process holds a bitwise-identical
+/// replica and the spec cannot silently diverge from the reference.
+fn spec(extra: &[&str]) -> SpawnSpec {
+    let mut args: Vec<String> = vec![
+        "--sizes".into(),
+        format!("{FEATURES},32,32,{CLASSES}"),
+        "--paths".into(),
+        PATHS.to_string(),
+        "--seed".into(),
+        SEED.to_string(),
+        "--batch".into(),
+        BATCH.to_string(),
+        "--max-wait-ms".into(),
+        "1".into(),
+    ];
+    args.extend(extra.iter().map(|s| s.to_string()));
+    SpawnSpec { program: bin(), shard_args: args, ..Default::default() }
+}
+
+/// In-process twin of the model every `shard-worker` child builds from
+/// the `spec()` flags (mirrors `cmd_shard_worker`, epochs 0).
+fn reference_net() -> SparseMlp {
+    let sizes = [FEATURES, 32, 32, CLASSES];
+    let topo = TopologyBuilder::new(&sizes)
+        .paths(PATHS)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+        .build();
+    SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantRandomSign, seed: SEED, ..Default::default() },
+    )
+}
+
+fn sample(i: usize) -> Vec<f32> {
+    (0..FEATURES).map(|j| ((i * FEATURES + j) as f32 * 0.173).sin()).collect()
+}
+
+fn assert_bitwise_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (k, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: logit {k}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn four_process_engine_matches_sequential_reference_bitwise() {
+    let n = 64usize;
+    // sequential single-process reference
+    let mut refnet = reference_net();
+    let expect: Vec<Vec<f32>> = (0..n)
+        .map(|i| refnet.forward(&Tensor::from_vec(sample(i), &[1, FEATURES]), false).data)
+        .collect();
+
+    let engine = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .dispatch(DispatchKind::RoundRobin)
+        .remote_options(RemoteOptions { stats_every: 4, ..Default::default() })
+        .spawn_workers(4, spec(&[]))
+        .expect("spawn 4 shard-worker processes")
+        .build_remote()
+        .expect("build remote engine");
+    assert!(engine.is_remote());
+    assert_eq!(engine.workers(), 4);
+    assert_eq!(engine.features(), FEATURES, "features discovered from the Hello handshake");
+    assert_eq!(engine.classes(), CLASSES);
+    assert_eq!(engine.batch_capacity(), BATCH);
+
+    // submit everything up front so batching + interleaving happen
+    let tickets: Vec<_> =
+        (0..n).map(|i| engine.try_submit(sample(i)).expect("block admission admits")).collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            Response::Logits(l) => assert_bitwise_eq(&l, &expect[i], &format!("request {i}")),
+            other => panic!("request {i}: expected logits, got {other:?}"),
+        }
+    }
+    // round-robin over 4 process shards: every one served traffic
+    for (w, m) in engine.worker_metrics().iter().enumerate() {
+        assert!(m.completed.load(Ordering::Relaxed) > 0, "process shard {w} served nothing");
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn killing_one_worker_resolves_in_flight_as_workerfailed_and_survivors_serve() {
+    // --delay-ms holds every batch in the child for 25 ms, so a kill
+    // lands while requests are in flight
+    let mut shards = spawn_shards(4, &spec(&["--delay-ms", "25"])).expect("spawn");
+    let addrs = shards.addrs().to_vec();
+    let engine = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .dispatch(DispatchKind::RoundRobin)
+        .remote_options(RemoteOptions {
+            retry_attempts: 2,
+            retry_backoff: Duration::from_millis(10),
+            stats_every: 0,
+            ..Default::default()
+        })
+        .remote(&addrs)
+        .build_remote()
+        .expect("build remote engine");
+
+    // 16 round-robin submissions put ~4 requests on every shard
+    let in_flight: Vec<_> =
+        (0..16).map(|i| engine.try_submit(sample(i)).expect("admitted")).collect();
+    assert!(shards.kill(0), "hard-kill worker process 0");
+
+    let mut refnet = reference_net();
+    let mut failed = 0usize;
+    for (i, t) in in_flight.into_iter().enumerate() {
+        // the contract: every ticket RESOLVES (never hangs)
+        match t.wait_timeout(Duration::from_secs(30)) {
+            Some(Response::Logits(l)) => {
+                let want = refnet.forward(&Tensor::from_vec(sample(i), &[1, FEATURES]), false);
+                assert_bitwise_eq(&l, &want.data, &format!("survivor answer {i}"));
+            }
+            Some(Response::Rejected(
+                RejectReason::WorkerFailed | RejectReason::ShuttingDown,
+            )) => failed += 1,
+            Some(other) => panic!("ticket {i}: unexpected outcome {other:?}"),
+            None => panic!("ticket {i} did not resolve — dead shard must not hang tickets"),
+        }
+    }
+    assert!(failed > 0, "requests in flight on the killed shard resolve as WorkerFailed");
+
+    // the engine keeps serving on the 3 survivors: sustained traffic
+    // converges to all-served once the dead shard's queue closes
+    let mut served = 0usize;
+    for i in 0..200 {
+        match engine.infer(sample(1000 + i)) {
+            Response::Logits(l) => {
+                let want =
+                    refnet.forward(&Tensor::from_vec(sample(1000 + i), &[1, FEATURES]), false);
+                assert_bitwise_eq(&l, &want.data, &format!("post-kill answer {i}"));
+                served += 1;
+                if served >= 12 {
+                    break;
+                }
+            }
+            Response::Rejected(RejectReason::WorkerFailed | RejectReason::ShuttingDown) => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            other => panic!("post-kill request {i}: unexpected outcome {other:?}"),
+        }
+    }
+    assert!(served >= 12, "engine must keep serving on the surviving worker processes");
+    engine.shutdown();
+}
+
+#[test]
+fn remote_stats_frames_fold_through_merged_percentiles() {
+    let n = 32usize;
+
+    // in-process run of the identical traffic: the accounting baseline
+    let local = EngineBuilder::new()
+        .workers(2)
+        .batch(8)
+        .max_wait(Duration::from_millis(1))
+        .dispatch(DispatchKind::RoundRobin)
+        .build_model(reference_net(), FEATURES, CLASSES);
+    for i in 0..n {
+        assert!(matches!(local.infer(sample(i)), Response::Logits(_)));
+    }
+    let local_samples: usize =
+        local.worker_metrics().iter().map(|m| m.latency_count()).sum();
+    assert_eq!(local_samples, n, "in-process run records one sample per request");
+    let local_completed = local.stats().completed;
+    local.shutdown();
+
+    // multi-process run of the same traffic, stats polled every batch
+    let engine = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .dispatch(DispatchKind::RoundRobin)
+        .remote_options(RemoteOptions { stats_every: 1, ..Default::default() })
+        .spawn_workers(2, spec(&[]))
+        .expect("spawn")
+        .build_remote()
+        .expect("build remote engine");
+    for i in 0..n {
+        assert!(matches!(engine.infer(sample(i)), Response::Logits(_)));
+    }
+    let slots = engine.remote_shard_metrics().expect("remote engine");
+    assert_eq!(slots.len(), 2);
+    // graceful shutdown performs the final stats fold on every shard
+    engine.shutdown();
+
+    // the folded remote counters account for exactly what the
+    // in-process run accounted for on identical traffic
+    let remote_completed: u64 = slots.iter().map(|m| m.completed.load(Ordering::Relaxed)).sum();
+    assert_eq!(remote_completed, local_completed, "completed counts match the in-process run");
+    assert_eq!(remote_completed, n as u64);
+    let remote_samples: usize = slots.iter().map(|m| m.latency_count()).sum();
+    assert_eq!(remote_samples, local_samples, "one raw sample per request, like in-process");
+    let shed: u64 = slots.iter().map(|m| m.shed.load(Ordering::Relaxed)).sum();
+    assert_eq!(shed, 0, "block/unbounded worker engines never shed");
+    // every shard produced samples (round-robin split the load)
+    for (i, m) in slots.iter().enumerate() {
+        assert!(m.latency_count() > 0, "remote shard {i} shipped no samples");
+    }
+
+    // the aggregation law: merging the per-shard registries folded
+    // from stats frames == percentiles over the pooled union of raw
+    // samples.  This is exactly how the in-process engine aggregates
+    // its per-worker histograms — merged, never averaged.
+    let merged = Metrics::merged_percentiles(slots.iter().map(|m| m.as_ref()));
+    let mut all = Vec::new();
+    for m in &slots {
+        m.extend_latencies_into(&mut all);
+    }
+    let pooled = Metrics::new();
+    for s in &all {
+        pooled.record_latency(*s);
+    }
+    assert_eq!(merged, pooled.latency_percentiles(), "merge-of-folds == pooled percentiles");
+    let (p50, p90, p99) = merged;
+    assert!(p50 > 0.0 && p90 >= p50 && p99 >= p90, "sane percentile ordering: {merged:?}");
+}
+
+/// Retry idempotency at the protocol level: a coordinator that loses
+/// the connection after the worker computed a batch resends the same
+/// request id; the worker must answer from its reply cache — same
+/// bits, and the batch counted **once** in worker-side stats.
+#[test]
+fn resent_request_id_is_answered_from_cache_not_recomputed() {
+    use sobolnet::engine::remote::frame::{read_frame, write_frame, Frame};
+
+    let shards = spawn_shards(1, &spec(&[])).expect("spawn");
+    let addr = Addr::parse(&shards.addrs()[0]).expect("addr");
+    let mut s = addr.connect().expect("connect");
+    let features = match read_frame(&mut s).expect("hello") {
+        Frame::Hello { features, .. } => features as usize,
+        other => panic!("expected hello, got {other:?}"),
+    };
+    assert_eq!(features, FEATURES);
+
+    let rows = 3usize;
+    let data: Vec<f32> = (0..rows).flat_map(sample).collect();
+    let req = Frame::Request { id: 7, rows: rows as u32, features: features as u32, data };
+    write_frame(&mut s, &req).expect("send");
+    let first = match read_frame(&mut s).expect("first response") {
+        Frame::Response { data, .. } => data,
+        other => panic!("expected response, got {other:?}"),
+    };
+    // simulate the coordinator's retry after a presumed transport error
+    write_frame(&mut s, &req).expect("resend");
+    let second = match read_frame(&mut s).expect("cached response") {
+        Frame::Response { data, .. } => data,
+        other => panic!("expected response, got {other:?}"),
+    };
+    assert_bitwise_eq(&second, &first, "cached reply");
+
+    // the worker computed (and counted) the batch exactly once
+    write_frame(&mut s, &Frame::StatsRequest).expect("stats request");
+    match read_frame(&mut s).expect("stats") {
+        Frame::Stats { completed, latencies, .. } => {
+            assert_eq!(completed, rows as u64, "retried batch must not double-count");
+            assert_eq!(latencies.len(), rows, "one latency sample per row, not per try");
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    // a *restarted* coordinator reuses low ids with different data:
+    // the cache must miss (fingerprint mismatch) and recompute
+    let other_data: Vec<f32> = (100..100 + rows).flat_map(sample).collect();
+    let fresh =
+        Frame::Request { id: 7, rows: rows as u32, features: features as u32, data: other_data };
+    write_frame(&mut s, &fresh).expect("send different payload under the same id");
+    let third = match read_frame(&mut s).expect("recomputed response") {
+        Frame::Response { data, .. } => data,
+        other => panic!("expected response, got {other:?}"),
+    };
+    let mut refnet = reference_net();
+    for r in 0..rows {
+        let want =
+            refnet.forward(&Tensor::from_vec(sample(100 + r), &[1, FEATURES]), false).data;
+        assert_bitwise_eq(
+            &third[r * CLASSES..(r + 1) * CLASSES],
+            &want,
+            "same id, different payload must be recomputed, not served from cache",
+        );
+    }
+    write_frame(&mut s, &Frame::StatsRequest).expect("stats request 2");
+    match read_frame(&mut s).expect("stats 2") {
+        Frame::Stats { completed, .. } => {
+            assert_eq!(completed, 2 * rows as u64, "the fresh batch was actually computed");
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+    write_frame(&mut s, &Frame::Shutdown).expect("shutdown");
+}
+
+#[test]
+fn garbage_on_the_socket_cannot_take_a_shard_down() {
+    let shards = spawn_shards(1, &spec(&[])).expect("spawn");
+    let addr = Addr::parse(&shards.addrs()[0]).expect("addr");
+    // connection 1: pure garbage, then hang up
+    {
+        use std::io::Write;
+        let mut s = addr.connect().expect("connect");
+        s.write_all(b"these bytes are not a frame").expect("send garbage");
+    }
+    // connection 2: a frame truncated mid-header, then hang up
+    {
+        use std::io::Write;
+        let mut s = addr.connect().expect("connect");
+        s.write_all(b"SBN1\x02\xff\xff").expect("send truncated frame");
+    }
+    // the worker must still serve a well-behaved engine
+    let engine = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .remote(shards.addrs())
+        .build_remote()
+        .expect("build remote engine");
+    let mut refnet = reference_net();
+    for i in 0..4 {
+        match engine.infer(sample(i)) {
+            Response::Logits(l) => {
+                let want = refnet.forward(&Tensor::from_vec(sample(i), &[1, FEATURES]), false);
+                assert_bitwise_eq(&l, &want.data, &format!("post-garbage answer {i}"));
+            }
+            other => panic!("post-garbage request {i}: {other:?}"),
+        }
+    }
+    engine.shutdown();
+}
