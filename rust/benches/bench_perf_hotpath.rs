@@ -4,7 +4,9 @@
 //! * Sobol' point generation (direct vs Gray-code) and topology builds,
 //! * the sparse engine's fwd/bwd throughput in paths·batch/s, with
 //!   `{1, 2, 4, 8}`-thread scaling sweeps for fwd, bwd, and fwd+bwd on
-//!   the persistent worker pool,
+//!   the persistent worker pool, plus a **contended-dispatch** sweep
+//!   (K concurrent dispatchers of small-batch forwards through the
+//!   multi-job pool — `sparse_fwd_contended_{k}d_*` metrics),
 //! * dense matmul GFLOP/s (the baseline's bottleneck),
 //! * pair-sparse conv vs masked-dense conv,
 //! * AOT runtime: PJRT execute overhead of the compiled kernels
@@ -147,6 +149,71 @@ fn main() {
                 report.metric(&format!("{key}_scaling_{threads}t"), tp / t1);
             }
         }
+    }
+
+    // --- multi-job pool: contended concurrent dispatch.  K threads
+    //     (standing in for K engine shards) each run small-batch
+    //     forwards on their own net replica, all fanning out through
+    //     the shared pool at once.  The pre-multi-job pool serialized
+    //     these on a single job slot, so K dispatchers bought almost
+    //     nothing; the contended scaling metric is the direct
+    //     observable of the multi-job win.
+    {
+        use sobolnet::util::parallel::{num_threads, pool_steals, set_num_threads};
+        use sobolnet::util::timer::Timer;
+        let ambient = num_threads();
+        set_num_threads(4);
+        let small_batch = 16usize;
+        let sx = Tensor::from_vec(
+            (0..small_batch * 784).map(|i| ((i as f32) * 0.01).sin().abs()).collect(),
+            &[small_batch, 784],
+        );
+        let swork = topo.paths * small_batch * topo.transitions();
+        let iters = if quick { 40usize } else { 200 };
+        let cfg = SparseMlpConfig { init: Init::ConstantRandomSign, seed: 0, ..Default::default() };
+        let mut tp1 = 0.0f64;
+        for &k in &[1usize, 2, 4, 8] {
+            let mut nets: Vec<SparseMlp> = (0..k).map(|_| SparseMlp::new(&topo, cfg)).collect();
+            // warm per-net scratch and the pool threads outside the clock
+            for n in nets.iter_mut() {
+                std::hint::black_box(n.forward(&sx, false));
+            }
+            let steals0 = pool_steals();
+            let barrier = std::sync::Barrier::new(k);
+            let barrier = &barrier;
+            let sx_ref = &sx;
+            let t = Timer::start();
+            std::thread::scope(|s| {
+                for n in nets.iter_mut() {
+                    s.spawn(move || {
+                        barrier.wait();
+                        for _ in 0..iters {
+                            std::hint::black_box(n.forward(sx_ref, false));
+                        }
+                    });
+                }
+            });
+            let secs = t.elapsed_secs();
+            let stolen = pool_steals() - steals0;
+            let tp = (k * iters * swork) as f64 / secs.max(1e-12);
+            if k == 1 {
+                tp1 = tp;
+            }
+            println!(
+                "bench hotpath/contended fwd: {k} dispatchers = {:.3e} edges/s \
+                 ({:.2}x over 1 dispatcher, {stolen} stolen chunks)",
+                tp,
+                tp / tp1.max(1e-12),
+            );
+            report.metric(&format!("sparse_fwd_contended_{k}d_edges_per_sec"), tp);
+            if k > 1 {
+                report.metric(
+                    &format!("sparse_fwd_contended_scaling_{k}d"),
+                    tp / tp1.max(1e-12),
+                );
+            }
+        }
+        set_num_threads(ambient);
     }
 
     // --- dense matmul baseline

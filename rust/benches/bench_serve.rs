@@ -10,6 +10,13 @@
 //! so the output shows how added workers convert shed requests into
 //! served ones and what happens to the latency tail.
 //!
+//! A second sweep measures the **contended-shards** regime: K worker
+//! shards × small batches driven by a closed burst, where every
+//! shard's forward is its own job in `util::parallel`'s multi-job pool
+//! (`serve_contended_{k}shards_*` metrics — the direct tracker of the
+//! multi-job pool's serving win; a single-job-slot pool flatlines this
+//! scaling).
+//!
 //! Every figure lands in `BENCH_serve.json` at the repo root
 //! ([`sobolnet::bench::BenchReport`] metrics): per
 //! `(policy, workers)` cell the achieved throughput, merged p50/p99,
@@ -170,6 +177,56 @@ fn main() {
             report.metric(&format!("serve_{key}_{w}w_p50_ms"), r.p50 * 1e3);
             report.metric(&format!("serve_{key}_{w}w_p99_ms"), r.p99 * 1e3);
             report.metric(&format!("serve_{key}_{w}w_shed"), r.shed as f64);
+        }
+    }
+
+    // --- contended shards: K shards × small batches, closed burst.
+    //     Each worker's small-batch forward is its own job in the
+    //     multi-job pool; the pre-multi-job pool serialized K shards on
+    //     a single job slot, so added shards bought almost nothing
+    //     here.  Closed burst (submit everything, wait for everything,
+    //     Block admission, unbounded queues): the quantity of interest
+    //     is aggregate service throughput under pool contention, not
+    //     shed behavior.
+    let burst_n: usize = if quick { 256 } else { 1024 };
+    let mut contended_tp1 = 0.0f64;
+    for &k in worker_counts {
+        let engine = EngineBuilder::new()
+            .workers(k)
+            .batch(8) // small batches: the contended regime
+            .max_wait(Duration::from_micros(200))
+            .queue_depth(0) // unbounded: a closed burst must not shed
+            .dispatch(DispatchKind::RoundRobin)
+            .build_model(net.clone(), FEATURES, CLASSES);
+        let t = Timer::start();
+        let tickets: Vec<_> =
+            (0..burst_n).map(|i| engine.try_submit(sample(i)).expect("unbounded")).collect();
+        for ticket in tickets {
+            assert!(matches!(ticket.wait(), Response::Logits(_)), "burst request served");
+        }
+        let secs = t.elapsed_secs();
+        let (p50, _, p99) = engine.latency_percentiles();
+        engine.shutdown();
+        let tp = burst_n as f64 / secs.max(1e-12);
+        if k == worker_counts[0] {
+            contended_tp1 = tp;
+        }
+        println!(
+            "bench serve/contended/{k}shards: {tp:.0} req/s ({:.2}x over {} shard(s)) \
+             p50={:.3}ms p99={:.3}ms",
+            tp / contended_tp1.max(1e-12),
+            worker_counts[0],
+            p50 * 1e3,
+            p99 * 1e3,
+        );
+        report.metric(&format!("serve_contended_{k}shards_req_per_sec"), tp);
+        report.metric(&format!("serve_contended_{k}shards_p50_ms"), p50 * 1e3);
+        report.metric(&format!("serve_contended_{k}shards_p99_ms"), p99 * 1e3);
+        if k > worker_counts[0] {
+            report.metric(
+                &format!("serve_contended_{k}shards_scaling"),
+                tp / contended_tp1.max(1e-12),
+            );
         }
     }
 

@@ -9,13 +9,84 @@
 //! would weigh as much as one that answered 10 000, and tail values
 //! from a slow shard would be diluted instead of dominating the
 //! aggregate tail) — the unit tests pin the difference.
+//!
+//! Storage contract: sample storage is a **fixed-capacity ring buffer**
+//! ([`DEFAULT_SAMPLE_WINDOW`] samples by default,
+//! `EngineBuilder::metrics_window` to resize).  Counters stay
+//! cumulative for the registry's lifetime, but latency/batch-size
+//! samples retain only the most recent window — a long-lived serving
+//! process holds O(window) memory no matter how many requests it has
+//! answered (the pre-ring `Vec` grew without bound, the leak the
+//! ROADMAP flagged).  Every percentile/merge/fold operation is defined
+//! over the retained window.
 
-use crate::util::stats::latency_percentiles;
+use crate::util::stats::percentile_sorted;
+use crate::util::sync::plock;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// Default ring capacity for latency and batch-size samples (64 Ki
+/// samples ≈ 512 KiB of f64 — far more than any percentile needs, and
+/// deliberately equal to the remote stats frames' per-poll sample cap
+/// so an in-process registry and a folded remote one retain the same
+/// window).
+pub const DEFAULT_SAMPLE_WINDOW: usize = 64 * 1024;
+
+/// `(p50, p90, p99)` of an owned sample vector, sorted in place — the
+/// copy the caller already made to linearize a ring (or merge several)
+/// doubles as the sort buffer, so percentile reads cost one copy, not
+/// two.
+fn percentiles_of(mut samples: Vec<f64>) -> (f64, f64, f64) {
+    samples.sort_by(f64::total_cmp);
+    (
+        percentile_sorted(&samples, 0.50),
+        percentile_sorted(&samples, 0.90),
+        percentile_sorted(&samples, 0.99),
+    )
+}
+
+/// Fixed-capacity ring buffer preserving arrival order.  Backing
+/// storage grows lazily up to `cap` (an idle registry costs nothing),
+/// then stays put: the oldest sample is overwritten in place.
+#[derive(Debug)]
+struct Ring<T> {
+    cap: usize,
+    buf: Vec<T>,
+    /// Index of the oldest element once `buf.len() == cap`.
+    start: usize,
+}
+
+impl<T: Copy> Ring<T> {
+    fn new(cap: usize) -> Self {
+        Ring { cap: cap.max(1), buf: Vec::new(), start: 0 }
+    }
+
+    fn push(&mut self, v: T) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.start] = v;
+            self.start = (self.start + 1) % self.cap;
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.start = 0;
+    }
+
+    /// Oldest → newest.
+    fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf[self.start..].iter().chain(self.buf[..self.start].iter())
+    }
+}
+
 /// Shared metrics registry (cheap to clone via `Arc`).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     /// Requests accepted.
     pub requests: AtomicU64,
@@ -27,44 +98,80 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Total samples padded into batches (wasted slots).
     pub padded_slots: AtomicU64,
-    latencies: Mutex<Vec<f64>>,
-    batch_sizes: Mutex<Vec<usize>>,
+    latencies: Mutex<Ring<f64>>,
+    batch_sizes: Mutex<Ring<usize>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::with_window(DEFAULT_SAMPLE_WINDOW)
+    }
 }
 
 impl Metrics {
-    /// New empty registry.
+    /// New empty registry with the default sample window
+    /// ([`DEFAULT_SAMPLE_WINDOW`]).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// New empty registry retaining at most `window` latency samples
+    /// and `window` batch-size samples (clamped to ≥ 1).  Memory is
+    /// O(window) for the registry's whole lifetime.
+    pub fn with_window(window: usize) -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            padded_slots: AtomicU64::new(0),
+            latencies: Mutex::new(Ring::new(window)),
+            batch_sizes: Mutex::new(Ring::new(window)),
+        }
+    }
+
+    /// Sample-window capacity (max latency samples retained).
+    pub fn window(&self) -> usize {
+        plock(&self.latencies).cap
     }
 
     /// Record a completed request with its end-to-end latency.
     pub fn record_latency(&self, secs: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        self.latencies.lock().unwrap().push(secs);
+        plock(&self.latencies).push(secs);
     }
 
     /// Record an executed batch (`used` real samples of `capacity`).
+    /// `used > capacity` is a caller bug (debug assert), tolerated in
+    /// release as zero padding rather than a wrapped garbage counter.
     pub fn record_batch(&self, used: usize, capacity: usize) {
+        debug_assert!(
+            used <= capacity,
+            "record_batch: used {used} exceeds batch capacity {capacity}"
+        );
         self.batches.fetch_add(1, Ordering::Relaxed);
-        self.padded_slots.fetch_add((capacity - used) as u64, Ordering::Relaxed);
-        self.batch_sizes.lock().unwrap().push(used);
+        self.padded_slots.fetch_add(capacity.saturating_sub(used) as u64, Ordering::Relaxed);
+        plock(&self.batch_sizes).push(used);
     }
 
-    /// Latency percentiles `(p50, p90, p99)` in seconds.
+    /// Latency percentiles `(p50, p90, p99)` in seconds over the
+    /// retained window.
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
-        let l = self.latencies.lock().unwrap();
-        latency_percentiles(&l)
+        let l = plock(&self.latencies);
+        let samples: Vec<f64> = l.iter().copied().collect();
+        drop(l);
+        percentiles_of(samples)
     }
 
-    /// Number of latency samples recorded.
+    /// Number of latency samples currently retained (≤ the window).
     pub fn latency_count(&self) -> usize {
-        self.latencies.lock().unwrap().len()
+        plock(&self.latencies).len()
     }
 
-    /// Append this registry's latency samples to `out` (the merge step
-    /// of cross-worker aggregation).
+    /// Append this registry's retained latency samples to `out`
+    /// (oldest first — the merge step of cross-worker aggregation).
     pub fn extend_latencies_into(&self, out: &mut Vec<f64>) {
-        out.extend_from_slice(&self.latencies.lock().unwrap());
+        out.extend(plock(&self.latencies).iter());
     }
 
     /// Append at most the `cap` most recent latency samples to `out`.
@@ -73,13 +180,13 @@ impl Metrics {
     /// `record_latency` needs) stays `O(cap)` no matter how long the
     /// worker has been running.
     pub fn extend_recent_latencies_into(&self, out: &mut Vec<f64>, cap: usize) {
-        let l = self.latencies.lock().unwrap();
-        out.extend_from_slice(&l[l.len().saturating_sub(cap)..]);
+        let l = plock(&self.latencies);
+        out.extend(l.iter().skip(l.len().saturating_sub(cap)));
     }
 
     /// Percentiles `(p50, p90, p99)` over the **union** of several
-    /// registries' latency samples.  This is the correct way to
-    /// aggregate per-worker histograms: merge first, then take
+    /// registries' retained latency samples.  This is the correct way
+    /// to aggregate per-worker histograms: merge first, then take
     /// percentiles — never average per-worker percentiles.
     pub fn merged_percentiles<'a, I>(parts: I) -> (f64, f64, f64)
     where
@@ -89,7 +196,7 @@ impl Metrics {
         for m in parts {
             m.extend_latencies_into(&mut all);
         }
-        latency_percentiles(&all)
+        percentiles_of(all)
     }
 
     /// Fold a remote worker's stats frame into this registry: the
@@ -97,26 +204,30 @@ impl Metrics {
     /// process start plus its most recent raw latency samples (the
     /// sender bounds the window), so the fold *replaces* the registry
     /// contents wholesale (idempotent — folding the same frame twice
-    /// is a no-op).  The coordinator keeps one registry per remote
-    /// shard and aggregates them with [`Metrics::merged_percentiles`];
-    /// shipping raw samples instead of per-worker percentiles is what
-    /// makes that merge correct.
+    /// is a no-op; a frame longer than this registry's window retains
+    /// its newest `window` samples).  The coordinator keeps one
+    /// registry per remote shard and aggregates them with
+    /// [`Metrics::merged_percentiles`]; shipping raw samples instead
+    /// of per-worker percentiles is what makes that merge correct.
     pub fn fold_remote(&self, completed: u64, shed: u64, batches: u64, latencies: &[f64]) {
         self.completed.store(completed, Ordering::Relaxed);
         self.shed.store(shed, Ordering::Relaxed);
         self.batches.store(batches, Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
+        let mut l = plock(&self.latencies);
         l.clear();
-        l.extend_from_slice(latencies);
+        for &s in latencies {
+            l.push(s);
+        }
     }
 
-    /// Mean executed batch occupancy.
+    /// Mean executed batch occupancy over the retained window.
     pub fn mean_batch_size(&self) -> f64 {
-        let b = self.batch_sizes.lock().unwrap();
-        if b.is_empty() {
+        let b = plock(&self.batch_sizes);
+        let n = b.len();
+        if n == 0 {
             0.0
         } else {
-            b.iter().sum::<usize>() as f64 / b.len() as f64
+            b.iter().sum::<usize>() as f64 / n as f64
         }
     }
 
@@ -144,6 +255,7 @@ mod tests {
     #[test]
     fn records_accumulate() {
         let m = Metrics::new();
+        assert_eq!(m.window(), DEFAULT_SAMPLE_WINDOW);
         m.requests.fetch_add(3, Ordering::Relaxed);
         m.record_latency(0.010);
         m.record_latency(0.020);
@@ -165,6 +277,68 @@ mod tests {
         assert!(p50.is_nan());
         assert_eq!(m.mean_batch_size(), 0.0);
         let _ = m.summary();
+    }
+
+    /// The headline leak fix: feed a registry far more samples than
+    /// its window and verify storage stays O(window) — only the newest
+    /// `window` samples are retained, in arrival order, and the
+    /// percentile/merge surface operates on exactly that window.
+    #[test]
+    fn sample_storage_is_bounded_by_the_window() {
+        let cap = 64usize;
+        let m = Metrics::with_window(cap);
+        assert_eq!(m.window(), cap);
+        let total = 2 * cap + 17; // > 2× capacity, not a multiple
+        for i in 0..total {
+            m.record_latency(i as f64);
+            m.record_batch(i % 5, 8);
+        }
+        // counters stay cumulative; sample storage does not
+        assert_eq!(m.completed.load(Ordering::Relaxed), total as u64);
+        assert_eq!(m.batches.load(Ordering::Relaxed), total as u64);
+        assert_eq!(m.latency_count(), cap, "retained at most window samples");
+
+        // retained window is exactly the newest `cap`, oldest first
+        let mut got = Vec::new();
+        m.extend_latencies_into(&mut got);
+        let want: Vec<f64> = ((total - cap)..total).map(|i| i as f64).collect();
+        assert_eq!(got, want, "ring retains the newest window in arrival order");
+
+        // percentiles are over the retained window, not the lifetime
+        let (p50, _, p99) = m.latency_percentiles();
+        assert!(p50 >= (total - cap) as f64, "p50 computed over retained window, got {p50}");
+        assert!(p99 <= (total - 1) as f64 + 1e-9);
+
+        // the recent-sample snapshot is the tail of the window
+        let mut recent = Vec::new();
+        m.extend_recent_latencies_into(&mut recent, 10);
+        let want_recent: Vec<f64> = ((total - 10)..total).map(|i| i as f64).collect();
+        assert_eq!(recent, want_recent);
+        // asking for more than retained yields the whole window
+        let mut all = Vec::new();
+        m.extend_recent_latencies_into(&mut all, cap * 10);
+        assert_eq!(all.len(), cap);
+
+        // batch-size window mirrors the latency window
+        let want_mean = ((total - cap)..total).map(|i| (i % 5) as f64).sum::<f64>() / cap as f64;
+        assert!((m.mean_batch_size() - want_mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_batch_tolerates_overfull_reports() {
+        let m = Metrics::new();
+        m.record_batch(4, 4); // exactly full: no padding
+        assert_eq!(m.padded_slots.load(Ordering::Relaxed), 0);
+        // a caller reporting used > capacity is a bug (debug_assert),
+        // but release builds must saturate to 0 padding instead of
+        // wrapping the counter to ~2^64
+        if cfg!(debug_assertions) {
+            let r = std::panic::catch_unwind(|| m.record_batch(9, 4));
+            assert!(r.is_err(), "debug build asserts on used > capacity");
+        } else {
+            m.record_batch(9, 4);
+            assert_eq!(m.padded_slots.load(Ordering::Relaxed), 0, "saturates, never wraps");
+        }
     }
 
     /// Known distribution: worker A answers 99 fast requests (1 ms),
@@ -223,6 +397,33 @@ mod tests {
             pooled.record_latency(*s);
         }
         assert_eq!(merged, pooled.latency_percentiles(), "fold+merge == pooled percentiles");
+    }
+
+    /// fold+merge == pooled percentiles must also hold when the folded
+    /// frames ride a *small* window: the retained suffixes behave
+    /// exactly like registries that only ever saw those samples.
+    #[test]
+    fn fold_remote_respects_the_window() {
+        let cap = 16usize;
+        let a = Metrics::with_window(cap);
+        let frame: Vec<f64> = (0..50).map(|i| i as f64 * 1e-3).collect();
+        a.fold_remote(50, 0, 5, &frame);
+        assert_eq!(a.latency_count(), cap, "oversized frame truncated to the window");
+        let mut got = Vec::new();
+        a.extend_latencies_into(&mut got);
+        assert_eq!(got, &frame[50 - cap..], "newest samples retained");
+        // idempotent under the window too
+        a.fold_remote(50, 0, 5, &frame);
+        assert_eq!(a.latency_count(), cap);
+
+        let b = Metrics::with_window(cap);
+        b.fold_remote(1, 0, 1, &[0.999]);
+        let merged = Metrics::merged_percentiles([&a, &b]);
+        let pooled = Metrics::new();
+        for s in frame[50 - cap..].iter().chain(&[0.999]) {
+            pooled.record_latency(*s);
+        }
+        assert_eq!(merged, pooled.latency_percentiles(), "windowed fold+merge == pooled");
     }
 
     #[test]

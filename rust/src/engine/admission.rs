@@ -18,7 +18,15 @@
 //! The queue also tracks a depth high-watermark under the same lock as
 //! the push, so "in-queue depth never exceeded the bound" is a checkable
 //! post-condition (`tests/engine_backpressure.rs`), not a hope.
+//!
+//! **Poison immunity**: every lock/wait recovers the guard from a
+//! poisoned mutex ([`crate::util::sync`]).  A thread that panics
+//! anywhere near a shard queue must not cascade `PoisonError` panics
+//! into every other shard's submit path for the rest of the process:
+//! the queue's invariants are maintained *before* any caller code can
+//! run, so the state behind a poisoned lock is always consistent.
 
+use crate::util::sync::{cwait, plock};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -122,7 +130,7 @@ impl<T> BoundedQueue<T> {
 
     /// Try to enqueue `item` under `policy`.  See [`Admit`].
     pub fn admit(&self, item: T, policy: AdmissionPolicy) -> Admit<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = plock(&self.state);
         if s.closed {
             return Admit::RejectedClosed(item);
         }
@@ -131,7 +139,7 @@ impl<T> BoundedQueue<T> {
             match policy {
                 AdmissionPolicy::Block => {
                     while s.q.len() >= self.bound && !s.closed {
-                        s = self.not_full.wait(s).unwrap();
+                        s = cwait(&self.not_full, s);
                     }
                     if s.closed {
                         return Admit::RejectedClosed(item);
@@ -154,7 +162,7 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking pop; `None` once the queue is closed *and* drained.
     pub fn pop_block(&self) -> Option<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = plock(&self.state);
         loop {
             if let Some(item) = s.q.pop_front() {
                 self.depth.store(s.q.len(), Ordering::Relaxed);
@@ -164,14 +172,14 @@ impl<T> BoundedQueue<T> {
             if s.closed {
                 return None;
             }
-            s = self.not_empty.wait(s).unwrap();
+            s = cwait(&self.not_empty, s);
         }
     }
 
     /// Pop with a timeout (used by the batcher's flush deadline).
     pub fn pop_timeout(&self, timeout: Duration) -> Result<T, PopWait> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut s = self.state.lock().unwrap();
+        let mut s = plock(&self.state);
         loop {
             if let Some(item) = s.q.pop_front() {
                 self.depth.store(s.q.len(), Ordering::Relaxed);
@@ -185,7 +193,10 @@ impl<T> BoundedQueue<T> {
             if now >= deadline {
                 return Err(PopWait::TimedOut);
             }
-            let (guard, _) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
+            let (guard, _) = self
+                .not_empty
+                .wait_timeout(s, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
             s = guard;
         }
     }
@@ -193,7 +204,7 @@ impl<T> BoundedQueue<T> {
     /// Close the queue: wakes all waiters; producers get
     /// [`Admit::RejectedClosed`], the consumer drains what remains.
     pub fn close(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = plock(&self.state);
         s.closed = true;
         self.closed.store(true, Ordering::Relaxed);
         self.not_empty.notify_all();
@@ -218,7 +229,7 @@ impl<T> BoundedQueue<T> {
 
     /// Highest depth ever observed (recorded under the push lock).
     pub fn max_depth(&self) -> usize {
-        self.state.lock().unwrap().max_depth
+        plock(&self.state).max_depth
     }
 }
 
@@ -312,6 +323,38 @@ mod tests {
         assert_eq!(q.pop_timeout(Duration::from_millis(2)), Ok(5));
         q.close();
         assert_eq!(q.pop_timeout(Duration::from_millis(2)), Err(PopWait::Closed));
+    }
+
+    /// A thread that panics while holding the state mutex poisons it;
+    /// every queue operation afterwards must recover the guard and
+    /// keep working instead of cascading `PoisonError` panics into
+    /// other shards' submit paths (the long-lived-serving bug this
+    /// module's poison immunity exists for).
+    #[test]
+    fn poisoned_state_lock_recovers() {
+        let q = Arc::new(BoundedQueue::new(2));
+        assert!(matches!(q.admit(1, AdmissionPolicy::Block), Admit::Admitted));
+        // genuinely poison the private state mutex
+        let q2 = q.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = q2.state.lock().unwrap();
+            panic!("poison the queue lock (expected in this test)");
+        })
+        .join();
+        assert!(q.state.is_poisoned(), "the mutex really is poisoned");
+        // the full surface still works on the recovered guard
+        assert!(matches!(q.admit(2, AdmissionPolicy::ShedNewest), Admit::Admitted));
+        match q.admit(3, AdmissionPolicy::ShedNewest) {
+            Admit::RejectedFull(item) => assert_eq!(item, 3),
+            _ => panic!("bound still enforced after poisoning"),
+        }
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.max_depth(), 2);
+        assert_eq!(q.pop_block(), Some(1));
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)), Ok(2));
+        q.close();
+        assert_eq!(q.pop_block(), None);
+        assert!(matches!(q.admit(4, AdmissionPolicy::Block), Admit::RejectedClosed(4)));
     }
 
     #[test]

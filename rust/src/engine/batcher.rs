@@ -12,6 +12,12 @@
 //! The batcher is generic over a [`BatchSource`] so the same policy
 //! drains both the engine's [`BoundedQueue`](super::admission::BoundedQueue)
 //! shard queues and plain `mpsc` channels (unit tests, ad-hoc tools).
+//!
+//! Each flushed batch becomes one job in `util::parallel`'s multi-job
+//! pool (via the backend's column-sharded forward), so K shards'
+//! batchers flushing small batches at once genuinely overlap instead
+//! of serializing on a single pool job slot — which is why small
+//! `capacity`/`max_wait` settings stay profitable under many shards.
 
 use super::admission::{BoundedQueue, PopWait};
 use crate::util::timer::Timer;

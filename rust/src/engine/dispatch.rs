@@ -16,7 +16,15 @@
 //!
 //! Workers feed completions back through [`DispatchPolicy::observe`];
 //! policies that don't learn ignore it.
+//!
+//! Like the admission queues, the learning policies' internal locks
+//! are **poison-immune** ([`crate::util::sync::plock`]): a worker
+//! thread that panics right after reporting a completion must not
+//! leave every future `pick` panicking on a `PoisonError` — the EWMA
+//! state is a pair of floats and a counter, consistent at every
+//! instruction boundary.
 
+use crate::util::sync::plock;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -159,7 +167,7 @@ impl EwmaLatency {
 
     /// Current `(mean, p99_estimate)` of one shard, in seconds.
     pub fn shard_latency(&self, shard: usize) -> (f64, f64) {
-        let s = self.stats[shard].lock().unwrap();
+        let s = plock(&self.stats[shard]);
         (s.mean, s.p99_estimate())
     }
 }
@@ -186,7 +194,7 @@ impl DispatchPolicy for EwmaLatency {
             // takes over
             let tail = match self.stats.get(views[i].id) {
                 Some(cell) => {
-                    let st = *cell.lock().unwrap();
+                    let st = *plock(cell);
                     if st.count < 4 {
                         0.0
                     } else {
@@ -209,7 +217,7 @@ impl DispatchPolicy for EwmaLatency {
         if shard >= self.stats.len() {
             return;
         }
-        let mut s = self.stats[shard].lock().unwrap();
+        let mut s = plock(&self.stats[shard]);
         s.count += 1;
         if s.count == 1 {
             s.mean = latency_secs;

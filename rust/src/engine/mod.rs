@@ -53,7 +53,19 @@
 //! in exact path order by the sparse engine, so an admitted request's
 //! logits are bitwise identical to a sequential single-worker
 //! reference (`tests/engine_backpressure.rs`,
-//! `tests/serve_concurrency.rs`).
+//! `tests/serve_concurrency.rs`).  This holds under *contended*
+//! dispatch too: worker shards fan their forwards out through
+//! [`crate::util::parallel`]'s multi-job pool, where K shards'
+//! small-batch jobs interleave on the same worker threads instead of
+//! queueing on a single job slot — chunk geometry and merge order are
+//! job-local, so concurrency is invisible in the bits
+//! (`tests/pool_contention.rs`).
+//!
+//! **Long-lived serving**: metrics sample storage is a fixed ring
+//! ([`EngineBuilder::metrics_window`]) and every engine-internal lock
+//! recovers from poisoning, so one panicking worker or client cannot
+//! leak memory without bound or cascade `PoisonError` panics into the
+//! other shards' submit paths.
 //!
 //! The legacy [`crate::serve::ShardedServer`] and
 //! `coordinator::server` surfaces are thin compatibility layers over
@@ -119,6 +131,7 @@ pub struct EngineBuilder {
     batch: usize,
     max_wait: Duration,
     queue_depth: usize,
+    metrics_window: usize,
     admission: AdmissionPolicy,
     dispatch: DispatchChoice,
     remote_addrs: Vec<String>,
@@ -133,6 +146,7 @@ impl Default for EngineBuilder {
             batch: 64,
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
+            metrics_window: crate::coordinator::metrics::DEFAULT_SAMPLE_WINDOW,
             admission: AdmissionPolicy::Block,
             dispatch: DispatchChoice::Kind(DispatchKind::LeastLoaded),
             remote_addrs: Vec::new(),
@@ -176,6 +190,17 @@ impl EngineBuilder {
     /// What happens when a request meets a full shard queue.
     pub fn admission(mut self, p: AdmissionPolicy) -> Self {
         self.admission = p;
+        self
+    }
+
+    /// Max latency/batch-size samples each metrics registry retains
+    /// (per worker shard, for the aggregate, and for remote-shard fold
+    /// slots; clamped to ≥ 1).  Counters stay cumulative; sample
+    /// storage is a ring, so a long-lived engine holds O(window)
+    /// metrics memory no matter how many requests it serves.  Default:
+    /// [`crate::coordinator::metrics::DEFAULT_SAMPLE_WINDOW`].
+    pub fn metrics_window(mut self, window: usize) -> Self {
+        self.metrics_window = window.max(1);
         self
     }
 
@@ -277,7 +302,7 @@ impl EngineBuilder {
             DispatchChoice::Kind(kind) => kind.instantiate(n),
             DispatchChoice::Custom(policy) => policy,
         };
-        let metrics = Arc::new(Metrics::new());
+        let metrics = Arc::new(Metrics::with_window(self.metrics_window));
         let mut shards = Vec::with_capacity(n);
         // spawn every worker first so the backends construct
         // concurrently, then collect their metadata
@@ -288,6 +313,7 @@ impl EngineBuilder {
                 factory,
                 self.max_wait,
                 self.queue_depth,
+                self.metrics_window,
                 metrics.clone(),
                 dispatch.clone(),
             );
@@ -365,7 +391,9 @@ impl EngineBuilder {
         // one coordinator-side metrics slot per remote shard: the
         // shard's stats frames fold into it, and the engine merges the
         // slots on read (raw samples, never averaged percentiles)
-        let slots: Vec<Arc<Metrics>> = addrs.iter().map(|_| Arc::new(Metrics::new())).collect();
+        let window = self.metrics_window;
+        let slots: Vec<Arc<Metrics>> =
+            addrs.iter().map(|_| Arc::new(Metrics::with_window(window))).collect();
         let factories: Vec<BackendFactory> = addrs
             .iter()
             .zip(&slots)
@@ -979,6 +1007,71 @@ mod tests {
             "engine must keep serving on the surviving shard after a worker death"
         );
         eng.shutdown();
+    }
+
+    /// A client thread that panics while holding a [`Ticket`] must not
+    /// take the engine down: its reply channel just closes, and every
+    /// later `try_submit` keeps working.
+    #[test]
+    fn panicked_ticket_holder_does_not_take_down_later_submits() {
+        let eng = Arc::new(quick_engine(2));
+        let e2 = eng.clone();
+        let holder = std::thread::spawn(move || {
+            let _ticket = e2.try_submit(vec![1.0, 1.0, 1.0]).expect("admitted");
+            panic!("ticket holder dies (expected in this test)");
+        });
+        assert!(holder.join().is_err(), "holder really panicked");
+        for i in 0..8 {
+            let t = eng.try_submit(vec![i as f32, 1.0, 0.0]).expect("submit after panic");
+            assert_eq!(t.wait(), Response::Logits(vec![i as f32 + 1.0, -1.0]));
+        }
+    }
+
+    /// A dispatch policy that panics inside `pick` fails that one
+    /// submit, not the engine: the submit path holds no engine lock
+    /// across `pick`, so nothing is poisoned and subsequent
+    /// `try_submit` calls (same thread and others) still serve.
+    #[test]
+    fn panicking_dispatch_policy_does_not_poison_submit_path() {
+        struct PanicOnce {
+            armed: std::sync::atomic::AtomicBool,
+            inner: RoundRobin,
+        }
+        impl DispatchPolicy for PanicOnce {
+            fn pick(&self, views: &[ShardView]) -> usize {
+                if self.armed.swap(false, Ordering::SeqCst) {
+                    panic!("policy exploded (expected in this test)");
+                }
+                self.inner.pick(views)
+            }
+            fn name(&self) -> &'static str {
+                "panic-once"
+            }
+        }
+        let eng = EngineBuilder::new()
+            .workers(2)
+            .max_wait(Duration::from_millis(1))
+            .dispatch_policy(Arc::new(PanicOnce {
+                armed: std::sync::atomic::AtomicBool::new(true),
+                inner: RoundRobin::new(),
+            }))
+            .build_with(Echo::factory(Arc::new(AtomicUsize::new(0)), Duration::ZERO));
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            eng.try_submit(vec![0.0, 0.0, 0.0])
+        }));
+        assert!(boom.is_err(), "the armed pick panicked the submitting thread");
+        // same thread recovers...
+        let t = eng.try_submit(vec![2.0, 1.0, 0.0]).expect("submit after policy panic");
+        assert_eq!(t.wait(), Response::Logits(vec![3.0, -1.0]));
+        // ...and so do other threads
+        let eng = Arc::new(eng);
+        let e2 = eng.clone();
+        let other = std::thread::spawn(move || e2.infer(vec![1.0, 1.0, 1.0]));
+        assert_eq!(other.join().expect("thread ok"), Response::Logits(vec![3.0, -1.0]));
+        match Arc::try_unwrap(eng) {
+            Ok(e) => e.shutdown(),
+            Err(_) => panic!("sole owner"),
+        }
     }
 
     #[test]

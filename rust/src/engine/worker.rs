@@ -4,12 +4,22 @@
 //!
 //! The backend is constructed *on* the worker thread via a factory, so
 //! non-`Send` backends (PJRT handles are `Rc`-based) work unchanged.
-//! Each worker keeps its own [`Metrics`] (the engine merges them on
-//! read — see `Metrics::merged_percentiles`), bumps the engine-wide
-//! aggregate counters, maintains the in-flight gauge the dispatcher
-//! reads, and reports each completion latency back to the
+//! Each worker keeps its own [`Metrics`] sized to the engine's sample
+//! window (the engine merges them on read — see
+//! `Metrics::merged_percentiles`; the window keeps a long-lived shard's
+//! sample storage O(window), not O(requests served)), bumps the
+//! engine-wide aggregate counters, maintains the in-flight gauge the
+//! dispatcher reads, and reports each completion latency back to the
 //! [`DispatchPolicy`](super::dispatch::DispatchPolicy) so learning
 //! policies (EWMA) can adapt.
+//!
+//! Each worker thread is also a *dispatcher* into
+//! [`util::parallel`](crate::util::parallel)'s multi-job pool: the
+//! backend's column-sharded forward runs as its own pool job, so K
+//! shards doing small-batch forwards execute concurrently instead of
+//! queueing on a single job slot (pre-multi-job pools serialized
+//! exactly here).  Determinism is unaffected — chunk geometry and
+//! merge order are job-local properties.
 
 use super::admission::BoundedQueue;
 use super::batcher::Batcher;
@@ -74,6 +84,7 @@ pub(crate) fn spawn<F>(
     factory: F,
     max_wait: Duration,
     queue_bound: usize,
+    metrics_window: usize,
     aggregate: Arc<Metrics>,
     dispatch: Arc<dyn DispatchPolicy>,
 ) -> (Shard, Receiver<(usize, usize, usize)>)
@@ -82,7 +93,7 @@ where
 {
     let queue = Arc::new(BoundedQueue::new(queue_bound));
     let (meta_tx, meta_rx) = channel();
-    let metrics = Arc::new(Metrics::new());
+    let metrics = Arc::new(Metrics::with_window(metrics_window));
     let inflight = Arc::new(AtomicUsize::new(0));
     let own = metrics.clone();
     let gauge = inflight.clone();

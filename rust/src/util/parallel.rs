@@ -1,40 +1,74 @@
 //! Data-parallel helpers (the `rayon` substrate) backed by a
-//! **persistent worker pool**: long-lived threads parked on a condvar,
-//! woken per dispatch, with chunk claiming under a mutex.
+//! **persistent multi-job worker pool**: long-lived threads parked on a
+//! condvar, a bounded queue of concurrently active jobs, and chunk
+//! claiming under one mutex.
 //!
-//! Earlier revisions spawned a fresh `std::thread::scope` per call,
-//! which put ~tens of microseconds of spawn/join cost on every forward
-//! pass and forced the sparse engine to gate parallelism behind a large
-//! `PAR_MIN_WORK` threshold.  The pool amortizes that cost to a
-//! wake/park round-trip, so small-batch serving and the backward pass
-//! profit from threads too.
+//! Earlier revisions spawned a fresh `std::thread::scope` per call
+//! (tens of microseconds of spawn/join on every forward pass), and the
+//! first pooled revision ran **one dispatch at a time**: N engine
+//! shards doing small-batch forwards queued on a single job slot, so
+//! concurrent serving serialized exactly where the paper promises
+//! parallel hardware stays busy.  The pool now holds up to
+//! [`MAX_ACTIVE_JOBS`] live jobs at once:
+//!
+//! * parked workers claim chunks from **any** live job (work stealing
+//!   across jobs, bounded per job by its thread target), and
+//! * a dispatcher that has drained its own job's unclaimed chunks but
+//!   is still waiting on stragglers **helps drain other live jobs**
+//!   instead of idling on the completion condvar (its foreign chunks
+//!   run under `catch_unwind`, so another job's panic is recorded
+//!   against *that* job and never unwinds into an innocent caller).
+//!   Stealing is chunk-granular and the dispatcher re-checks its own
+//!   job's completion between stolen chunks, so the latency a steal
+//!   can add to the stealer's own return is bounded by **one** foreign
+//!   chunk — chunks are the pool's unit of work everywhere and are
+//!   sized small (≈ `n / threads` or the caller's fixed reduction
+//!   width), which keeps that bound far below a straggler wait that
+//!   would have idled anyway.
 //!
 //! Used by the matmul kernel, the conv/batch loops, and the
 //! column-sharded forward/backward of [`crate::nn::sparse`].  Thread
 //! count defaults to the machine parallelism, capped by
 //! `SOBOLNET_THREADS` and overridable at runtime via
 //! [`set_num_threads`] (the pool grows on demand and never shrinks;
-//! each dispatch admits at most `threads − 1` workers, so surplus
+//! each job admits at most `threads − 1` pool workers, so surplus
 //! workers park through it and a lowered thread target is honored even
-//! when chunks outnumber threads).  A chunk panic on a worker is
-//! re-raised on the dispatching thread once the region completes, like
-//! the scoped-thread implementation it replaces.
+//! when chunks outnumber threads — a *dispatcher* of another job may
+//! transiently lend a hand on top, but it is a thread that was already
+//! awake and would otherwise spin-wait).  A chunk panic on a worker is
+//! re-raised on that job's dispatching thread once the region
+//! completes, like the scoped-thread implementation this replaces.
 //!
-//! Guarantees relied on elsewhere:
+//! Guarantees relied on elsewhere — all of them **per job**, and all of
+//! them independent of how many jobs are in flight:
 //!
 //! * **Exact chunk boundaries.**  [`parallel_chunks`] partitions `0..n`
-//!   at multiples of `chunk` regardless of the thread count, and the
-//!   sequential fallback iterates the *same* boundaries — callers can
-//!   key per-chunk shadow buffers off `start / chunk` and get
-//!   bitwise-deterministic reductions for every `SOBOLNET_THREADS`.
+//!   at multiples of `chunk` regardless of the thread count, the number
+//!   of concurrent jobs, or which thread (worker, own dispatcher,
+//!   foreign dispatcher) executes a chunk — and the sequential fallback
+//!   iterates the *same* boundaries.  Callers can key per-chunk shadow
+//!   buffers off `start / chunk` and get bitwise-deterministic
+//!   reductions for every `SOBOLNET_THREADS`, even while other jobs
+//!   run (`tests/pool_contention.rs`, `tests/golden_backward.rs`).
 //! * **Nested calls run inline.**  A `parallel_*` call from inside a
-//!   worker (or from the dispatching thread while it helps execute
-//!   chunks) degrades to the sequential path instead of deadlocking on
-//!   the single job slot.
+//!   chunk (worker, or a dispatcher helping any job) degrades to the
+//!   sequential path instead of re-entering the pool.
 //! * **Zero work is safe.**  `n == 0` dispatches nothing.
+//! * **Steady state allocates nothing.**  The job queue is
+//!   pre-allocated at [`MAX_ACTIVE_JOBS`]; dispatching, claiming,
+//!   stealing, and completing all run allocation-free once the worker
+//!   threads exist (`tests/alloc_hotpath.rs` pins this under
+//!   concurrent dispatch).
 
+use crate::util::sync::{cwait, plock};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+
+/// Upper bound on concurrently active jobs.  A dispatcher arriving at a
+/// full queue waits for a slot (the pre-multi-job behavior, generalized
+/// from 1 slot to this many).  Far above any realistic shard count, and
+/// small enough that the pre-allocated queue is trivial.
+pub const MAX_ACTIVE_JOBS: usize = 32;
 
 static CACHED_THREADS: AtomicUsize = AtomicUsize::new(0);
 
@@ -97,7 +131,9 @@ impl<T> std::fmt::Debug for SendPtr<T> {
 /// One dispatched parallel region: a type-erased `Fn(usize, usize)`
 /// living on the dispatcher's stack.  Valid only while that dispatch is
 /// active — the dispatcher does not return (or unwind) past its
-/// [`ActiveJob`] guard until every claimed chunk has finished.
+/// [`ActiveJob`] guard until every claimed chunk has finished, and a
+/// chunk can only be claimed while the job is still in the active
+/// queue, which it leaves strictly before the guard releases.
 #[derive(Clone, Copy)]
 struct Job {
     call: unsafe fn(*const (), usize, usize),
@@ -111,38 +147,53 @@ struct Job {
 // closure itself is required to be `Sync` by the public entry points.
 unsafe impl Send for Job {}
 
-struct PoolState {
-    /// Monotone dispatch generation; workers remember the last one they
-    /// looked at so a stale worker never claims chunks of a new job.
-    gen: u64,
-    /// The single active job slot (`None` between dispatches).
-    job: Option<Job>,
+/// Bookkeeping of one live job in the active queue.
+struct JobState {
+    /// Queue-unique id; chunk claims and completions are keyed by it so
+    /// a stale reference can never touch a newer job's state.
+    id: u64,
+    job: Job,
     /// Next unclaimed index (multiple of `job.chunk` from 0).
     next: usize,
-    /// Claimed-but-unfinished chunks.
+    /// Chunks not yet finished (claimed-but-running + unclaimed).
     remaining: usize,
-    /// Workers that joined the current generation (capped by `limit`,
-    /// so a dispatch never runs wider than its thread target even when
-    /// the pool holds more parked workers).
+    /// Pool workers that joined this job (capped by `limit`, so a job
+    /// never runs wider than its thread target even when the pool
+    /// holds more parked workers).
     joined: usize,
-    /// Max workers allowed to join the current generation
-    /// (thread target − 1; the dispatcher itself is the +1).
+    /// Max pool workers allowed to join (thread target − 1; the
+    /// dispatcher itself is the +1).  Foreign dispatchers stealing
+    /// chunks while they wait on their own stragglers are not counted:
+    /// they are threads that were already awake.
     limit: usize,
-    /// A chunk of the current dispatch panicked on a worker; re-raised
-    /// on the dispatcher after completion.
+    /// A chunk of this job panicked on a worker (or was caught on a
+    /// stealing dispatcher); re-raised on this job's dispatcher after
+    /// completion.
     panicked: bool,
+}
+
+struct PoolState {
+    /// Monotone id source for [`JobState::id`].
+    next_id: u64,
+    /// Live jobs, at most [`MAX_ACTIVE_JOBS`]; pre-allocated so the
+    /// dispatch path never allocates.
+    jobs: Vec<JobState>,
     /// Worker threads alive (dispatchers are not counted).
     spawned: usize,
     /// Completed dispatches (observability / tests).
     dispatches: u64,
+    /// Chunks executed by a dispatcher on behalf of *another* job
+    /// while waiting out its own stragglers (observability / benches).
+    steals: u64,
 }
 
 struct Pool {
     state: Mutex<PoolState>,
-    /// Workers park here waiting for a new generation.
+    /// Workers park here waiting for a claimable job.
     work_cv: Condvar,
-    /// Dispatchers park here waiting for `remaining == 0` (and queued
-    /// dispatchers wait here for the job slot to free up).
+    /// Dispatchers park here waiting for their job's `remaining == 0`
+    /// (when no other job has chunks to steal), and for a free slot in
+    /// the active queue.
     done_cv: Condvar,
 }
 
@@ -151,15 +202,11 @@ static POOL: OnceLock<Pool> = OnceLock::new();
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| Pool {
         state: Mutex::new(PoolState {
-            gen: 0,
-            job: None,
-            next: 0,
-            remaining: 0,
-            joined: 0,
-            limit: 0,
-            panicked: false,
+            next_id: 0,
+            jobs: Vec::with_capacity(MAX_ACTIVE_JOBS),
             spawned: 0,
             dispatches: 0,
+            steals: 0,
         }),
         work_cv: Condvar::new(),
         done_cv: Condvar::new(),
@@ -169,13 +216,14 @@ fn pool() -> &'static Pool {
 /// Poison-immune lock: a worker can only panic inside caller code while
 /// *not* holding the state lock, but be robust anyway.
 fn lock(p: &Pool) -> MutexGuard<'_, PoolState> {
-    p.state.lock().unwrap_or_else(|e| e.into_inner())
+    plock(&p.state)
 }
 
 thread_local! {
     /// True while this thread is executing chunks of a parallel region
-    /// (worker, or dispatcher helping).  Nested `parallel_*` calls then
-    /// run inline instead of re-entering the pool.
+    /// (worker, or dispatcher executing own/stolen chunks).  Nested
+    /// `parallel_*` calls then run inline instead of re-entering the
+    /// pool.
     static IN_PARALLEL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
 }
 
@@ -199,49 +247,88 @@ impl Drop for ParallelFlagGuard {
     }
 }
 
-/// Marks one claimed chunk finished on drop — including on unwind, so a
-/// panicking chunk cannot strand the dispatcher in its completion wait.
-struct ChunkDoneGuard(&'static Pool);
+/// Marks one claimed chunk of job `id` finished on drop — including on
+/// unwind, so a panicking chunk cannot strand its dispatcher in the
+/// completion wait.
+struct ChunkDoneGuard {
+    pool: &'static Pool,
+    id: u64,
+}
 
 impl Drop for ChunkDoneGuard {
     fn drop(&mut self) {
-        let mut st = lock(self.0);
-        if std::thread::panicking() {
-            st.panicked = true;
+        finish_chunk(self.pool, self.id, std::thread::panicking());
+    }
+}
+
+/// Mark one claimed chunk of job `id` finished: record a panic against
+/// the job, decrement its outstanding-chunk count, and wake its
+/// dispatcher at zero.  The single completion protocol shared by
+/// workers/dispatchers ([`ChunkDoneGuard`]) and the stealing path
+/// (whose panic bit comes from a caught `Result`, not the unwinding
+/// thread state).
+fn finish_chunk(pool: &Pool, id: u64, panicked: bool) {
+    let mut st = lock(pool);
+    if let Some(j) = st.jobs.iter_mut().find(|j| j.id == id) {
+        if panicked {
+            j.panicked = true;
         }
-        st.remaining -= 1;
-        if st.remaining == 0 {
-            self.0.done_cv.notify_all();
+        j.remaining -= 1;
+        if j.remaining == 0 {
+            pool.done_cv.notify_all();
         }
     }
 }
 
-/// Dispatcher-side guard: waits out stragglers and frees the job slot,
-/// on the normal path and on unwind alike, so `Job::data` never
-/// outlives the closure it points into.
-struct ActiveJob(&'static Pool);
+/// Claim the next chunk of job `id` under the lock.  `None` when the
+/// job has left the queue or has no unclaimed chunks.
+fn claim_chunk(st: &mut PoolState, id: u64) -> Option<(usize, usize)> {
+    let j = st.jobs.iter_mut().find(|j| j.id == id)?;
+    if j.next >= j.job.n {
+        return None;
+    }
+    let start = j.next;
+    let end = (start + j.job.chunk).min(j.job.n);
+    j.next = end;
+    Some((start, end))
+}
+
+/// Dispatcher-side guard: waits out stragglers and removes the job
+/// from the active queue, on the normal path and on unwind alike, so
+/// `Job::data` never outlives the closure it points into.
+struct ActiveJob {
+    pool: &'static Pool,
+    id: u64,
+}
 
 impl Drop for ActiveJob {
     fn drop(&mut self) {
-        let mut st = lock(self.0);
+        let mut st = lock(self.pool);
         // Cancel chunks nobody has claimed yet.  On the normal path the
         // dispatcher's help loop already drained them (no-op); on the
         // unwind path this prevents waiting forever on work no thread
         // will ever take (e.g. worker spawn failed entirely).
-        if let Some(j) = st.job {
-            if st.next < j.n {
-                let unclaimed = (j.n - st.next + j.chunk - 1) / j.chunk;
-                st.next = j.n;
-                st.remaining -= unclaimed;
+        if let Some(j) = st.jobs.iter_mut().find(|j| j.id == self.id) {
+            if j.next < j.job.n {
+                let unclaimed = (j.job.n - j.next + j.job.chunk - 1) / j.job.chunk;
+                j.next = j.job.n;
+                j.remaining -= unclaimed;
             }
         }
-        while st.remaining > 0 {
-            st = self.0.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        loop {
+            let remaining =
+                st.jobs.iter().find(|j| j.id == self.id).map_or(0, |j| j.remaining);
+            if remaining == 0 {
+                break;
+            }
+            st = cwait(&self.pool.done_cv, st);
         }
-        st.job = None;
+        if let Some(pos) = st.jobs.iter().position(|j| j.id == self.id) {
+            st.jobs.swap_remove(pos);
+        }
         st.dispatches += 1;
-        // wake dispatchers queued on the job slot
-        self.0.done_cv.notify_all();
+        // wake dispatchers queued on a full active-job queue
+        self.pool.done_cv.notify_all();
     }
 }
 
@@ -258,43 +345,31 @@ fn worker_main() {
     }
     let _alive = Alive(pool);
 
-    let mut seen = 0u64;
+    let mut st = lock(pool);
     loop {
-        let mut st = lock(pool);
-        loop {
-            if st.gen != seen {
-                match st.job {
-                    // join only while the dispatch is below its thread
-                    // target — surplus parked workers sit this one out
-                    Some(j) if st.next < j.n && st.joined < st.limit => {
-                        st.joined += 1;
-                        break;
-                    }
-                    _ => seen = st.gen, // nothing (left) for us here
-                }
-            }
-            st = pool.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
-        }
-        seen = st.gen;
-        let job = st.job.expect("claimable job");
-        let _flag = ParallelFlagGuard::enter();
-        loop {
-            // claim under the lock; generations guard against claiming
-            // chunks of a newer job with this job's closure
-            if st.gen != seen || st.next >= job.n {
-                break;
-            }
-            let start = st.next;
-            let end = (start + job.chunk).min(job.n);
-            st.next = end;
+        // join any live job that still has unclaimed chunks and room
+        // under its per-job worker cap
+        let Some(pos) =
+            st.jobs.iter().position(|j| j.next < j.job.n && j.joined < j.limit)
+        else {
+            st = cwait(&pool.work_cv, st);
+            continue;
+        };
+        st.jobs[pos].joined += 1;
+        let id = st.jobs[pos].id;
+        let job = st.jobs[pos].job;
+        let flag = ParallelFlagGuard::enter();
+        while let Some((start, end)) = claim_chunk(&mut st, id) {
             drop(st);
             {
-                let _done = ChunkDoneGuard(pool);
+                let _done = ChunkDoneGuard { pool, id };
                 unsafe { (job.call)(job.data, start, end) };
             }
             st = lock(pool);
         }
-        drop(st);
+        drop(flag);
+        // loop around (lock still held): another live job may have
+        // claimable chunks — steal into it before parking
     }
 }
 
@@ -303,17 +378,19 @@ unsafe fn invoke<F: Fn(usize, usize)>(data: *const (), start: usize, end: usize)
 }
 
 /// Dispatch `f` over `0..n` in `chunk`-sized pieces on the pool.  The
-/// calling thread installs the job, helps execute chunks, then waits
-/// for stragglers.  Requires `threads ≥ 2`, `n ≥ 1`, `chunk ≥ 1`.
+/// calling thread installs the job, helps execute its chunks, then
+/// drains *other* live jobs while waiting for stragglers.  Requires
+/// `threads ≥ 2`, `n ≥ 1`, `chunk ≥ 1`.
 fn run_pool<F: Fn(usize, usize) + Sync>(n: usize, chunk: usize, threads: usize, f: &F) {
     let pool = pool();
     let job = Job { call: invoke::<F>, data: f as *const F as *const (), n, chunk };
     let nchunks = (n + chunk - 1) / chunk;
 
     let mut st = lock(pool);
-    // single job slot: queue behind any active dispatch
-    while st.job.is_some() {
-        st = pool.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    // bounded active queue: wait for a free slot (jobs always complete
+    // because each one's dispatcher drives it even with zero workers)
+    while st.jobs.len() >= MAX_ACTIVE_JOBS {
+        st = cwait(&pool.done_cv, st);
     }
     // grow the pool to the requested width (never shrinks; surplus
     // workers claim nothing and park again)
@@ -328,50 +405,83 @@ fn run_pool<F: Fn(usize, usize) + Sync>(n: usize, chunk: usize, threads: usize, 
             Err(_) => break, // resource limit: proceed with what we have
         }
     }
-    st.gen = st.gen.wrapping_add(1);
-    st.job = Some(job);
-    st.next = 0;
-    st.remaining = nchunks;
-    st.joined = 0;
-    st.limit = want;
-    st.panicked = false;
+    let id = st.next_id;
+    st.next_id = st.next_id.wrapping_add(1);
+    st.jobs.push(JobState {
+        id,
+        job,
+        next: 0,
+        remaining: nchunks,
+        joined: 0,
+        limit: want,
+        panicked: false,
+    });
     pool.work_cv.notify_all();
+    // dispatchers parked in their straggler wait can steal from us too
+    pool.done_cv.notify_all();
 
-    // From here on the job slot MUST be cleaned up exactly once, even
-    // if `f` panics on this thread — ActiveJob's drop waits for the
-    // workers and frees the slot.
-    let active = ActiveJob(pool);
+    // From here on the job MUST be cleaned up exactly once, even if `f`
+    // panics on this thread — ActiveJob's drop waits for the workers
+    // and removes the job from the queue.
+    let active = ActiveJob { pool, id };
     {
         let _flag = ParallelFlagGuard::enter();
-        loop {
-            if st.next >= n {
-                break;
-            }
-            let start = st.next;
-            let end = (start + chunk).min(n);
-            st.next = end;
+        // drain our own job first
+        while let Some((start, end)) = claim_chunk(&mut st, id) {
             drop(st);
             {
-                let _done = ChunkDoneGuard(pool);
+                let _done = ChunkDoneGuard { pool, id };
                 f(start, end);
             }
             st = lock(pool);
         }
-        drop(st);
-    }
-    // Normal path: wait out stragglers while the slot is still ours so
-    // a worker-side chunk panic can be re-raised here (ActiveJob's drop
-    // stays the unwind path and must not panic).
-    let worker_panicked = {
-        let mut st = lock(pool);
-        while st.remaining > 0 {
-            st = pool.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        // straggler phase: our chunks are all claimed but some are
+        // still running on workers.  Instead of idling on done_cv,
+        // help drain any other live job; foreign chunks run under
+        // catch_unwind so another job's panic is recorded against that
+        // job (its own dispatcher re-raises it) and never unwinds into
+        // our caller.
+        loop {
+            let remaining = st.jobs.iter().find(|j| j.id == id).map_or(0, |j| j.remaining);
+            if remaining == 0 {
+                break;
+            }
+            let stolen = st
+                .jobs
+                .iter_mut()
+                .find(|j| j.id != id && j.next < j.job.n)
+                .map(|j| {
+                    let start = j.next;
+                    let end = (start + j.job.chunk).min(j.job.n);
+                    j.next = end;
+                    (j.id, j.job, start, end)
+                });
+            match stolen {
+                Some((sid, sjob, start, end)) => {
+                    st.steals += 1;
+                    drop(st);
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || unsafe { (sjob.call)(sjob.data, start, end) },
+                    ));
+                    finish_chunk(pool, sid, result.is_err());
+                    st = lock(pool);
+                }
+                None => {
+                    st = cwait(&pool.done_cv, st);
+                }
+            }
         }
-        st.panicked
-    };
-    drop(active); // clear the slot, count the dispatch
-    if worker_panicked {
-        panic!("worker pool: a parallel chunk panicked on a worker thread; results are incomplete");
+        // read the panic flag while the job is still ours (ActiveJob's
+        // drop stays the unwind path and must not panic)
+        let worker_panicked =
+            st.jobs.iter().find(|j| j.id == id).is_some_and(|j| j.panicked);
+        drop(st);
+        drop(active); // remove the job, count the dispatch
+        if worker_panicked {
+            panic!(
+                "worker pool: a parallel chunk panicked on another thread; results are incomplete"
+            );
+        }
     }
 }
 
@@ -384,6 +494,8 @@ fn run_pool<F: Fn(usize, usize) + Sync>(n: usize, chunk: usize, threads: usize, 
 ///
 /// Runs inline when `n <= min_chunk`, when only one thread is
 /// configured, or when called from inside another parallel region.
+/// Concurrent callers do not serialize: each call is its own job in
+/// the pool's active queue (see the [module docs](self)).
 pub fn parallel_ranges<F: Fn(usize, usize) + Sync>(n: usize, min_chunk: usize, f: F) {
     let threads = num_threads().min(n.max(1));
     if threads <= 1 || n <= min_chunk || in_parallel() {
@@ -396,13 +508,17 @@ pub fn parallel_ranges<F: Fn(usize, usize) + Sync>(n: usize, min_chunk: usize, f
 
 /// Run `f(start, end)` over **fixed** `chunk`-aligned pieces of `0..n`:
 /// every call sees `start % chunk == 0` and `end - start <= chunk`,
-/// independent of the thread count, and the single-thread/nested
-/// fallback iterates the exact same boundaries in order.
+/// independent of the thread count, the number of concurrently live
+/// jobs, or which thread executes a chunk — and the
+/// single-thread/nested fallback iterates the exact same boundaries in
+/// order.
 ///
 /// This is the deterministic-reduction primitive: callers may index
 /// per-chunk shadow accumulators by `start / chunk` and merge them in
 /// fixed chunk order, making the result bitwise identical for every
-/// `SOBOLNET_THREADS` setting (see `SparseMlp::backward`).
+/// `SOBOLNET_THREADS` setting (see `SparseMlp::backward`) — including
+/// under concurrent dispatch from many engine shards
+/// (`tests/pool_contention.rs`).
 pub fn parallel_chunks<F: Fn(usize, usize) + Sync>(n: usize, chunk: usize, f: F) {
     assert!(chunk > 0, "chunk must be positive");
     if n == 0 {
@@ -458,6 +574,13 @@ pub fn parallel_rows<F: Fn(usize, &mut [f32]) + Sync>(data: &mut [f32], row_len:
 pub fn pool_stats() -> (usize, u64) {
     let st = lock(pool());
     (st.spawned, st.dispatches)
+}
+
+/// Chunks executed by a dispatcher on behalf of **another** live job
+/// while waiting out its own stragglers (process-global, monotone).
+/// The direct observable of the multi-job pool's work stealing.
+pub fn pool_steals() -> u64 {
+    lock(pool()).steals
 }
 
 #[cfg(test)]
@@ -593,7 +716,7 @@ mod tests {
         parallel_ranges(64, 1, |a, b| {
             for outer in a..b {
                 // nested: must run inline on this thread, not re-enter
-                // the single job slot
+                // the pool
                 parallel_ranges(64, 1, |c, d| {
                     for inner in c..d {
                         hits[outer * 64 + inner].fetch_add(1, Ordering::Relaxed);
@@ -647,6 +770,11 @@ mod tests {
         }
     }
 
+    /// Pool *workers* honor the per-job thread cap: a 2-thread dispatch
+    /// admits at most 1 pool worker no matter how many are parked.  (A
+    /// concurrent test's dispatcher may transiently steal a chunk —
+    /// that is the multi-job contract — so the assertion counts
+    /// distinct `sobolnet-pool-*` threads, not all threads.)
     #[test]
     fn chunk_dispatch_respects_thread_cap() {
         let _guard = POOL_SHAPE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
@@ -655,14 +783,17 @@ mod tests {
         set_num_threads(max_target());
         parallel_ranges(1 << 12, 1, |_, _| {});
         // a 2-thread dispatch with many more chunks than threads must
-        // still run on at most 2 distinct threads
+        // admit at most 1 distinct pool worker
         set_num_threads(2);
         let ids = Mutex::new(std::collections::HashSet::new());
         parallel_chunks(256, 1, |_, _| {
-            ids.lock().unwrap().insert(std::thread::current().id());
+            let t = std::thread::current();
+            if t.name().is_some_and(|n| n.starts_with("sobolnet-pool-")) {
+                ids.lock().unwrap().insert(t.id());
+            }
         });
         let n = ids.into_inner().unwrap().len();
-        assert!(n <= 2, "2-thread dispatch ran on {n} distinct threads");
+        assert!(n <= 1, "2-thread dispatch admitted {n} distinct pool workers");
         set_num_threads(ambient);
     }
 

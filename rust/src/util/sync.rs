@@ -1,0 +1,69 @@
+//! Poison-immune synchronization helpers.
+//!
+//! The engine's long-lived serving contract is that one panicking
+//! thread must not cascade `PoisonError` panics into every other
+//! thread that later touches the same lock: all the state guarded by
+//! these locks (pool bookkeeping, admission queues, metrics rings,
+//! EWMA cells) is maintained to a consistent snapshot *before* any
+//! caller code can run, so recovering the guard from a poisoned mutex
+//! is always sound.  Every lock/wait in the serving and pool layers
+//! goes through these helpers (or inlines the same
+//! `unwrap_or_else(|e| e.into_inner())` where a typed wrapper doesn't
+//! fit, e.g. `Condvar::wait_timeout`'s tuple payload).
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if some other thread panicked while
+/// holding it.
+pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Wait on `cv`, recovering the guard from a poisoned mutex exactly
+/// like [`plock`].
+pub fn cwait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn plock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison (expected in this test)");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*plock(&m), 7, "state behind the poisoned lock is intact");
+        *plock(&m) = 8;
+        assert_eq!(*plock(&m), 8);
+    }
+
+    #[test]
+    fn cwait_wakes_through_poison() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        // poison the mutex first
+        let p2 = pair.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = p2.0.lock().unwrap();
+            panic!("poison (expected in this test)");
+        })
+        .join();
+        let p3 = pair.clone();
+        let waker = std::thread::spawn(move || {
+            *plock(&p3.0) = true;
+            p3.1.notify_all();
+        });
+        let mut done = plock(&pair.0);
+        while !*done {
+            done = cwait(&pair.1, done);
+        }
+        waker.join().expect("waker");
+    }
+}

@@ -5,14 +5,19 @@
 //! the reused logits/gradient tensors, a full train step —
 //! `forward_into` + `softmax_xent_into` + `backward` + `step` — must
 //! perform **zero** heap allocation, including on the worker-pool
-//! threads the passes fan out to.  A counting `#[global_allocator]`
-//! (all threads) pins this.
+//! threads the passes fan out to, and including while a *second*
+//! dispatcher contends for the multi-job pool (installing a job,
+//! claiming chunks, stealing, and completing are all allocation-free
+//! once the pool threads exist — the job queue is pre-allocated at
+//! `MAX_ACTIVE_JOBS`).  A counting `#[global_allocator]` (all threads)
+//! pins this.
 //!
 //! This file deliberately contains a single test: any concurrent test
 //! in the same binary would allocate and pollute the global counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 
 use sobolnet::nn::init::Init;
 use sobolnet::nn::loss::softmax_xent_into;
@@ -21,7 +26,7 @@ use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
 use sobolnet::nn::tensor::Tensor;
 use sobolnet::nn::Model;
 use sobolnet::topology::{PathSource, TopologyBuilder};
-use sobolnet::util::parallel::set_num_threads;
+use sobolnet::util::parallel::{parallel_ranges, set_num_threads, SendPtr};
 
 static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
 
@@ -87,17 +92,53 @@ fn steady_state_train_step_does_not_allocate() {
         step(&mut net, &mut logits, &mut glogits);
     }
 
+    // contender: a second dispatcher hammering the multi-job pool with
+    // its own (pre-warmed, allocation-free) jobs for the whole
+    // measured window, so the train step's pool jobs interleave with
+    // foreign ones — the contended-serving regime
+    let stop = Arc::new(AtomicBool::new(false));
+    let ready = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let ready2 = ready.clone();
+    let contender = std::thread::spawn(move || {
+        let mut buf = vec![0.0f32; 1 << 12];
+        let p = SendPtr::new(buf.as_mut_ptr());
+        let fill = |a: usize, b: usize| {
+            for i in a..b {
+                // Safety: disjoint ranges per chunk; `buf` outlives
+                // every dispatch on this thread.
+                unsafe { *p.get().add(i) = i as f32 };
+            }
+        };
+        // warm this thread's dispatch path before signalling ready
+        for _ in 0..8 {
+            parallel_ranges(1 << 12, 1, fill);
+        }
+        ready2.store(true, Ordering::Release);
+        while !stop2.load(Ordering::Acquire) {
+            parallel_ranges(1 << 12, 1, fill);
+        }
+        drop(buf);
+    });
+    while !ready.load(Ordering::Acquire) {
+        std::thread::yield_now();
+    }
+
     let before = ALLOCATIONS.load(Ordering::SeqCst);
     let mut loss_sink = 0.0f32;
     for _ in 0..5 {
         loss_sink += step(&mut net, &mut logits, &mut glogits);
     }
     let after = ALLOCATIONS.load(Ordering::SeqCst);
+    // stop the contender only after the post-window snapshot (its own
+    // shutdown/join machinery may allocate, and that's fine)
+    stop.store(true, Ordering::Release);
+    contender.join().expect("contender thread");
     assert!(loss_sink.is_finite());
     assert_eq!(
         after - before,
         0,
-        "steady-state train step allocated {} time(s) in 5 steps",
+        "steady-state train step allocated {} time(s) in 5 contended steps",
         after - before
     );
 }

@@ -138,6 +138,66 @@ fn backward_is_bitwise_invariant_across_thread_counts() {
     set_num_threads(ambient);
 }
 
+/// The multi-job pool must not let *concurrent* dispatch touch the
+/// bits: K = 4 threads (standing in for 4 engine shards / trainers
+/// sharing the process) each run forward+backward on their own fixture
+/// net **simultaneously**, their pool jobs interleaving on the same
+/// workers, for every `SOBOLNET_THREADS` ∈ {1, 2, 4, 8} — and every
+/// one of them must reproduce the single-threaded reference gradients
+/// bit for bit.  Chunk geometry and shadow-merge order are per-job
+/// properties; which thread (own dispatcher, pool worker, or a
+/// stealing foreign dispatcher) executes a chunk is invisible.
+#[test]
+fn backward_is_bitwise_stable_under_concurrent_dispatch() {
+    let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ambient = sobolnet::util::parallel::num_threads();
+    let (net, inputs) = net_from_fixture();
+    let classes = *net.topo.layer_sizes.last().unwrap();
+    drop(net);
+    let (x, batch) = tiled_batch(&inputs, 32);
+    let glogits = make_glogits(batch, classes);
+
+    let (gw1, gb1, gz1) = grads_at(1, &x, &glogits);
+    let ref_gw = bits2(&gw1);
+    let ref_gb = bits2(&gb1);
+    let ref_gz: Vec<u32> = gz1.iter().map(|f| f.to_bits()).collect();
+
+    for threads in [1usize, 2, 4, 8] {
+        set_num_threads(threads);
+        let k = 4usize;
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(k));
+        let handles: Vec<_> = (0..k)
+            .map(|_| {
+                let barrier = barrier.clone();
+                let x = x.clone();
+                let glogits = glogits.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    // NOTE: no set_num_threads here — the sweep value
+                    // set above applies to all K concurrent jobs
+                    let (mut net, _) = net_from_fixture();
+                    net.forward(&x, true);
+                    net.backward(&glogits);
+                    let gz: Vec<u32> = net
+                        .input_grad()
+                        .expect("input grad after backward")
+                        .iter()
+                        .map(|f| f.to_bits())
+                        .collect();
+                    (bits2(net.weight_grads()), bits2(net.bias_grads()), gz)
+                })
+            })
+            .collect();
+        for (shard, h) in handles.into_iter().enumerate() {
+            let (gw, gb, gz) = h.join().expect("concurrent shard thread");
+            assert_eq!(gw, ref_gw, "threads={threads} shard={shard}: gw diverged");
+            assert_eq!(gb, ref_gb, "threads={threads} shard={shard}: gb diverged");
+            assert_eq!(gz, ref_gz, "threads={threads} shard={shard}: gz diverged");
+        }
+    }
+    set_num_threads(ambient);
+}
+
 #[test]
 fn backward_matches_naive_single_threaded_reference() {
     let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
