@@ -7,6 +7,10 @@
 //!   the persistent worker pool, plus a **contended-dispatch** sweep
 //!   (K concurrent dispatchers of small-batch forwards through the
 //!   multi-job pool — `sparse_fwd_contended_{k}d_*` metrics),
+//! * a per-kernel fwd/bwd sweep over every pluggable hot-path kernel
+//!   (`scalar|simd|sign|int8`, see [`sobolnet::nn::kernel`]) on a
+//!   `freeze_signs` net — `sparse_{fwd,bwd}_edges_per_sec_{kernel}`
+//!   metrics,
 //! * dense matmul GFLOP/s (the baseline's bottleneck),
 //! * pair-sparse conv vs masked-dense conv,
 //! * AOT runtime: PJRT execute overhead of the compiled kernels
@@ -20,6 +24,7 @@
 use sobolnet::bench::{Bench, BenchReport};
 use sobolnet::nn::cnn::{Cnn, CnnConfig};
 use sobolnet::nn::init::Init;
+use sobolnet::nn::kernel::KernelKind;
 use sobolnet::nn::matmul::matmul_nt;
 use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
 use sobolnet::nn::tensor::Tensor;
@@ -149,6 +154,38 @@ fn main() {
                 report.metric(&format!("{key}_scaling_{threads}t"), tp / t1);
             }
         }
+    }
+
+    // --- pluggable kernels: fwd/bwd throughput per concrete kernel on
+    //     a freeze_signs net (so `sign` exercises its gated add/sub
+    //     path instead of downgrading to scalar).  The `scalar` numbers
+    //     here are the golden reference the other three are judged
+    //     against in tests/kernel_golden.rs.
+    for kind in KernelKind::ALL {
+        let mut knet = SparseMlp::new(
+            &topo,
+            SparseMlpConfig {
+                init: Init::ConstantRandomSign,
+                seed: 0,
+                freeze_signs: true,
+                kernel: kind,
+                ..Default::default()
+            },
+        );
+        let label = format!("sparse fwd kernel={} (path·batch edges)", kind.as_str());
+        let r = b.run(&label, work, || {
+            std::hint::black_box(knet.forward(&x, false));
+        });
+        report.push(&r);
+        report.metric(&format!("sparse_fwd_edges_per_sec_{}", kind.as_str()), r.throughput());
+        // cache train-mode activations once, then time backward alone
+        knet.forward(&x, true);
+        let label = format!("sparse bwd kernel={} (path·batch edges)", kind.as_str());
+        let r = b.run(&label, work, || {
+            knet.backward(&glogits);
+        });
+        report.push(&r);
+        report.metric(&format!("sparse_bwd_edges_per_sec_{}", kind.as_str()), r.throughput());
     }
 
     // --- multi-job pool: contended concurrent dispatch.  K threads

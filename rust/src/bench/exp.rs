@@ -104,10 +104,7 @@ pub fn run_sparse_mlp(
     te: &ClassificationData,
     epochs: usize,
 ) -> (History, usize) {
-    let mut net = SparseMlp::new(
-        topo,
-        SparseMlpConfig { init, seed: 0, bias: true, freeze_signs: false },
-    );
+    let mut net = SparseMlp::new(topo, SparseMlpConfig { init, seed: 0, ..Default::default() });
     let hist = train(&mut net, tr, te, &mlp_train_config(epochs));
     let n = net.nparams();
     (hist, n)

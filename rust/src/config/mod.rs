@@ -6,6 +6,7 @@ pub mod json;
 
 use crate::engine::{AdmissionPolicy, DispatchKind};
 use crate::nn::init::Init;
+use crate::nn::kernel::KernelKind;
 use crate::topology::{PathSource, SignPolicy};
 use json::JsonValue;
 use std::collections::BTreeMap;
@@ -94,6 +95,9 @@ pub struct ServeSection {
     pub dispatch: DispatchKind,
     /// Admission policy: "block", "shed-newest", "shed-oldest".
     pub admission: AdmissionPolicy,
+    /// Compute kernel: "auto", "scalar", "simd", "sign", "int8"
+    /// ([`crate::nn::kernel`]).
+    pub kernel: KernelKind,
     /// Multi-process subsection (`"remote": {...}`).
     pub remote: RemoteSection,
 }
@@ -107,6 +111,7 @@ impl Default for ServeSection {
             queue_depth: 1024,
             dispatch: DispatchKind::LeastLoaded,
             admission: AdmissionPolicy::Block,
+            kernel: KernelKind::Auto,
             remote: RemoteSection::default(),
         }
     }
@@ -137,6 +142,11 @@ impl ServeSection {
                     cfg.admission = AdmissionPolicy::parse(s)
                         .ok_or_else(|| format!("unknown serve.admission '{s}'"))?;
                 }
+                "kernel" => {
+                    let s = val.as_str().ok_or("serve.kernel string")?;
+                    cfg.kernel = KernelKind::parse(s)
+                        .ok_or_else(|| format!("unknown serve.kernel '{s}'"))?;
+                }
                 "remote" => cfg.remote = RemoteSection::from_json(val)?,
                 "comment" | "description" => {}
                 other => return Err(format!("unknown serve key '{other}'")),
@@ -161,6 +171,7 @@ impl ServeSection {
             "admission".to_string(),
             JsonValue::String(self.admission.as_str().to_string()),
         );
+        m.insert("kernel".to_string(), JsonValue::String(self.kernel.as_str().to_string()));
         m.insert("remote".to_string(), self.remote.to_json());
         JsonValue::Object(m)
     }
@@ -393,6 +404,8 @@ mod tests {
             queue_depth: 64,
             dispatch: DispatchKind::RoundRobin,
             admission: AdmissionPolicy::ShedOldest,
+            kernel: KernelKind::Simd,
+            remote: RemoteSection::default(),
         };
         let text = section.to_json().to_string_compact();
         let back = ServeSection::from_json(&json::parse(&text).unwrap()).unwrap();
@@ -405,6 +418,12 @@ mod tests {
         let cfg = ServeSection::from_json(&partial).unwrap();
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.dispatch, dflt.dispatch);
+        assert_eq!(cfg.kernel, KernelKind::Auto);
+        // every kernel spelling parses
+        for k in ["auto", "scalar", "simd", "sign", "int8"] {
+            let j = json::parse(&format!(r#"{{"kernel": "{k}"}}"#)).unwrap();
+            assert_eq!(ServeSection::from_json(&j).unwrap().kernel.as_str(), k);
+        }
     }
 
     #[test]
@@ -450,5 +469,8 @@ mod tests {
             .is_err());
         assert!(ServeSection::from_json(&json::parse(r#"{"admission": "yolo"}"#).unwrap())
             .is_err());
+        assert!(
+            ServeSection::from_json(&json::parse(r#"{"kernel": "avx512"}"#).unwrap()).is_err()
+        );
     }
 }

@@ -137,6 +137,7 @@ pub struct EngineBuilder {
     remote_addrs: Vec<String>,
     remote_opts: RemoteOptions,
     spawned: Option<SpawnedShards>,
+    kernel: Option<crate::nn::kernel::KernelKind>,
 }
 
 impl Default for EngineBuilder {
@@ -152,6 +153,7 @@ impl Default for EngineBuilder {
             remote_addrs: Vec::new(),
             remote_opts: RemoteOptions::default(),
             spawned: None,
+            kernel: None,
         }
     }
 }
@@ -204,6 +206,19 @@ impl EngineBuilder {
         self
     }
 
+    /// Compute kernel applied to the model handed to
+    /// [`EngineBuilder::build_model`] before it is replicated across
+    /// workers ([`crate::nn::kernel`]: scalar golden reference,
+    /// blocked SIMD, sign-only, int8).  Each kernel keeps logits
+    /// bitwise thread-invariant, so replicas answer identically under
+    /// any dispatch.  Remote shards pick theirs via the `shard-worker
+    /// --kernel` flag instead; models that don't support kernels
+    /// ignore this.
+    pub fn kernel(mut self, kind: crate::nn::kernel::KernelKind) -> Self {
+        self.kernel = Some(kind);
+        self
+    }
+
     /// Use a named built-in dispatch policy.
     pub fn dispatch(mut self, kind: DispatchKind) -> Self {
         self.dispatch = DispatchChoice::Kind(kind);
@@ -231,6 +246,12 @@ impl EngineBuilder {
         self.remote_opts.stats_every = cfg.remote.stats_every;
         if !cfg.remote.addrs.is_empty() {
             self.remote_addrs = cfg.remote.addrs.clone();
+        }
+        // `Auto` is the config default and resolves identically inside
+        // the model, so only an explicit concrete choice overrides a
+        // kernel already set on this builder
+        if cfg.kernel != crate::nn::kernel::KernelKind::Auto {
+            self.kernel = Some(cfg.kernel);
         }
         self
     }
@@ -282,10 +303,13 @@ impl EngineBuilder {
     /// Start the engine over replicas of a cloneable pure-rust model
     /// (each worker gets its own [`ModelBackend`] at the configured
     /// batch capacity).
-    pub fn build_model<M>(self, model: M, features: usize, classes: usize) -> Engine
+    pub fn build_model<M>(self, mut model: M, features: usize, classes: usize) -> Engine
     where
         M: crate::nn::Model + Clone + Send + 'static,
     {
+        if let Some(kind) = self.kernel {
+            model.set_kernel(kind);
+        }
         let capacity = self.batch;
         self.build_with(move || -> Box<dyn InferenceBackend> {
             Box::new(ModelBackend::new(model.clone(), capacity, features, classes))

@@ -1,0 +1,107 @@
+//! Int8 weight kernel: weights stream as one byte per path, activations
+//! and accumulation stay f32.
+//!
+//! [`SparseKernel::prepare`] re-quantizes each transition through
+//! [`crate::quantize::int8`] (symmetric per-transition scale
+//! `amax/127`) into reused [`KernelScratch`] buffers — weights change
+//! every optimizer step, so the codes are rebuilt per pass,
+//! allocation-free once warm.  The column loops are the scalar
+//! kernel's with one substitution: the path weight is
+//! `dequant(qw[t][p], scale[t])`, computed once per column run.
+//!
+//! **Contract.**  Dequantization is exact in f32, so this kernel is
+//! **bitwise identical** to the scalar kernel running on the
+//! round-tripped weights ([`crate::quantize::int8::dequantized`]) —
+//! and therefore bitwise thread-invariant — while the deviation from
+//! the full-precision net is bounded by the quantization step
+//! (per-weight error ≤ `amax/254`; `tests/kernel_golden.rs` states
+//! and pins both tolerances).
+
+use super::{
+    bias_row_sums, init_bias_columns, BwdCtx, FwdCtx, KernelKind, KernelScratch, SparseKernel,
+};
+use crate::quantize::int8;
+
+/// See the [module docs](self).
+pub struct Int8Kernel;
+
+impl SparseKernel for Int8Kernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Int8
+    }
+
+    fn prepare(&self, w: &[Vec<f32>], scratch: &mut KernelScratch) {
+        let t_cnt = w.len();
+        if scratch.qw.len() != t_cnt {
+            scratch.qw.resize_with(t_cnt, Vec::new);
+        }
+        scratch.qscale.clear();
+        for (t, wt) in w.iter().enumerate() {
+            let scale = int8::scale_for(int8::amax(wt));
+            int8::quantize_into(wt, scale, &mut scratch.qw[t]);
+            scratch.qscale.push(scale);
+        }
+    }
+
+    fn forward_columns(&self, ctx: &FwdCtx<'_>, c0: usize, c1: usize) {
+        let b = ctx.batch;
+        for t in 0..ctx.w.len() {
+            let src_idx = &ctx.index[t];
+            let dst_idx = &ctx.index[t + 1];
+            let qwt = &ctx.scratch.qw[t];
+            let scale = ctx.scratch.qscale[t];
+            let zprev = ctx.zptrs[t].get() as *const f32;
+            let znext = ctx.zptrs[t + 1].get();
+            if !ctx.bias[t].is_empty() {
+                // Safety: disjoint columns of a [sizes[t+1], b] buffer.
+                unsafe { init_bias_columns(&ctx.bias[t], znext, b, c0, c1) };
+            }
+            for p in 0..ctx.paths {
+                let s = src_idx[p] as usize * b;
+                let d = dst_idx[p] as usize * b;
+                let w = int8::dequant(qwt[p], scale);
+                for bi in c0..c1 {
+                    unsafe {
+                        *znext.add(d + bi) += w * (*zprev.add(s + bi)).max(0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    fn backward_shard(&self, ctx: &BwdCtx<'_>, c0: usize, c1: usize) {
+        let b = ctx.batch;
+        let t_cnt = ctx.w.len();
+        let s_idx = c0 / ctx.shard_width;
+        let tp = t_cnt * ctx.paths;
+        // Safety: shard-exclusive shadow rows (see the scalar kernel).
+        let gwb = unsafe { ctx.gw_shadow.get().add(s_idx * tp) };
+        let gbb = unsafe { ctx.gb_shadow.get().add(s_idx * ctx.brow) };
+        for t in (0..t_cnt).rev() {
+            let gznext = ctx.gzptrs[t + 1].get() as *const f32;
+            let gzprev = ctx.gzptrs[t].get();
+            if !ctx.bias[t].is_empty() {
+                unsafe { bias_row_sums(gznext, gbb, ctx.gb_off[t], ctx.sizes[t + 1], b, c0, c1) };
+            }
+            let src_idx = &ctx.index[t];
+            let dst_idx = &ctx.index[t + 1];
+            let qwt = &ctx.scratch.qw[t];
+            let scale = ctx.scratch.qscale[t];
+            let zprev = &ctx.z[t];
+            for p in 0..ctx.paths {
+                let sb = src_idx[p] as usize * b;
+                let db = dst_idx[p] as usize * b;
+                let w = int8::dequant(qwt[p], scale);
+                let mut gacc = 0.0f32;
+                for bi in c0..c1 {
+                    let v = zprev[sb + bi];
+                    let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
+                    let g = unsafe { *gznext.add(db + bi) } * gate;
+                    gacc += g * v;
+                    unsafe { *gzprev.add(sb + bi) += w * g };
+                }
+                unsafe { *gwb.add(t * ctx.paths + p) += gacc };
+            }
+        }
+    }
+}

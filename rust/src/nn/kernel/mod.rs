@@ -1,0 +1,330 @@
+//! Pluggable compute kernels for the sparse forward/backward hot path.
+//!
+//! [`crate::nn::sparse::SparseMlp`] shards both passes over batch
+//! columns (forward via `parallel_ranges`, backward via
+//! `parallel_chunks` at a fixed shard width) and hands each column
+//! range to a [`SparseKernel`].  The kernel owns only the *innermost*
+//! per-transition/per-path loops; the shard partition, the shadow
+//! merge order, and the scratch lifecycle stay in `sparse.rs`, so the
+//! determinism contract — **bitwise identical results for every
+//! `SOBOLNET_THREADS` setting** — is preserved per kernel by
+//! construction, provided the kernel computes each column with a fixed
+//! floating-point op order independent of `(c0, c1)` placement.
+//!
+//! Four implementations are selectable via
+//! [`SparseMlpConfig::kernel`](crate::nn::sparse::SparseMlpConfig) /
+//! the `SOBOLNET_KERNEL` environment variable /
+//! [`EngineBuilder::kernel`](crate::engine::EngineBuilder::kernel):
+//!
+//! | kernel   | idea | vs [`Scalar`](KernelKind::Scalar) |
+//! |----------|------|-----------------------------------|
+//! | `scalar` | the pre-refactor loops, extracted verbatim | bitwise (it *is* the golden reference) |
+//! | `simd`   | 8-column blocks; AVX2 intrinsics on x86_64 (runtime-detected), blocked scalar elsewhere | bitwise by IEEE-754 analysis, pinned ≤ 1e-6 |
+//! | `sign`   | fixed-sign nets: multiply collapses to gated add/sub over a magnitude-free block representation | bitwise |
+//! | `int8`   | per-transition symmetric int8 weights, f32 accumulate | quantization tolerance (≈ `amax/254` per weight) |
+//!
+//! Every kernel keeps the **zero-alloc steady state**: derived weight
+//! representations ([`KernelScratch`]) are rebuilt each pass into
+//! capacity-retaining buffers (`tests/alloc_hotpath.rs` runs its
+//! counting-allocator audit under all four kernels).
+
+use crate::util::parallel::SendPtr;
+
+mod int8;
+mod scalar;
+mod sign;
+mod simd;
+
+pub use int8::Int8Kernel;
+pub use scalar::ScalarKernel;
+pub use sign::SignKernel;
+pub use simd::SimdKernel;
+
+/// Which [`SparseKernel`] a model runs its hot loops through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// Resolve from the `SOBOLNET_KERNEL` environment variable at
+    /// model build time; unset or unrecognized falls back to
+    /// [`Scalar`](KernelKind::Scalar) (the golden reference — default
+    /// output bits never change behind the operator's back).
+    #[default]
+    Auto,
+    /// The pre-refactor per-path loops, verbatim: the bitwise-golden
+    /// reference every other kernel is tested against.
+    Scalar,
+    /// Explicitly blocked 8-column loops; AVX2 intrinsics on x86_64
+    /// when the CPU has them (runtime-detected), blocked scalar
+    /// otherwise.  No FMA and in-order lane reduction keep it bitwise
+    /// equal to `scalar`.
+    Simd,
+    /// Sign-only kernel for `freeze_signs` nets: weights split into a
+    /// magnitude block and packed sign bits, the multiply collapses to
+    /// a gated add/sub.  Falls back to `scalar` on nets without fixed
+    /// signs.
+    Sign,
+    /// Weights quantized to int8 per transition (symmetric scale
+    /// `amax/127`, f32 accumulate) via [`crate::quantize::int8`].
+    Int8,
+}
+
+impl KernelKind {
+    /// The four concrete kernels, in bench/report order.
+    pub const ALL: [KernelKind; 4] =
+        [KernelKind::Scalar, KernelKind::Simd, KernelKind::Sign, KernelKind::Int8];
+
+    /// Parse a CLI/env/config spelling; `None` if unrecognized.
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelKind::Auto),
+            "scalar" => Some(KernelKind::Scalar),
+            "simd" => Some(KernelKind::Simd),
+            "sign" => Some(KernelKind::Sign),
+            "int8" => Some(KernelKind::Int8),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (round-trips through [`KernelKind::parse`]).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+            KernelKind::Sign => "sign",
+            KernelKind::Int8 => "int8",
+        }
+    }
+
+    /// Resolve [`Auto`](KernelKind::Auto) via the `SOBOLNET_KERNEL`
+    /// environment variable (unset, empty, or unrecognized → `Scalar`;
+    /// a concrete kind passes through).  Reads the environment — call
+    /// at model build time, never per pass (the hot path must not
+    /// allocate, and `std::env::var` does).
+    pub fn resolve(self) -> KernelKind {
+        if self != KernelKind::Auto {
+            return self;
+        }
+        match std::env::var("SOBOLNET_KERNEL") {
+            Ok(v) => match KernelKind::parse(&v) {
+                Some(KernelKind::Auto) | None => KernelKind::Scalar,
+                Some(k) => k,
+            },
+            Err(_) => KernelKind::Scalar,
+        }
+    }
+
+    /// The kind that will actually run for a model:
+    /// [`KernelKind::Sign`] requires frozen signs and downgrades to
+    /// `Scalar` otherwise; a stray `Auto` (defensive — models store
+    /// resolved kinds) is treated as `Scalar`.
+    pub fn effective(self, has_fixed_signs: bool) -> KernelKind {
+        match self {
+            KernelKind::Auto => KernelKind::Scalar,
+            KernelKind::Sign if !has_fixed_signs => KernelKind::Scalar,
+            k => k,
+        }
+    }
+
+    /// The kernel implementation for this kind (`Auto` → scalar;
+    /// callers resolve first).
+    pub fn instance(self) -> &'static dyn SparseKernel {
+        match self {
+            KernelKind::Auto | KernelKind::Scalar => &ScalarKernel,
+            KernelKind::Simd => &SimdKernel,
+            KernelKind::Sign => &SignKernel,
+            KernelKind::Int8 => &Int8Kernel,
+        }
+    }
+}
+
+/// Per-model derived weight representations, rebuilt by
+/// [`SparseKernel::prepare`] each pass into capacity-retaining buffers
+/// (no allocation at steady state).  Unused fields stay empty for
+/// kernels that don't need them.
+#[derive(Debug, Default)]
+pub struct KernelScratch {
+    /// `int8`: per-transition quantized weights.
+    pub qw: Vec<Vec<i8>>,
+    /// `int8`: per-transition symmetric dequantization scale.
+    pub qscale: Vec<f32>,
+    /// `sign`: per-transition weight magnitudes `|w[t][p]|`.
+    pub mags: Vec<Vec<f32>>,
+    /// `sign`: per-transition packed sign bits, bit `p` set iff
+    /// `w[t][p]` has a negative sign bit.
+    pub neg: Vec<Vec<u64>>,
+    /// `sign`: the uniform magnitude of transition `t` when every
+    /// `|w[t][p]|` shares one bit pattern (the magnitude-free block
+    /// representation — true for `ConstantSignAlongPath` at init);
+    /// `None` once training has diversified the magnitudes.
+    pub uniform: Vec<Option<f32>>,
+}
+
+/// Everything a kernel needs to run the forward loops for a column
+/// range.  All fields borrow model state that outlives the fan-out;
+/// `zptrs` alias per-layer activation buffers whose column ranges are
+/// disjoint across concurrent calls.
+pub struct FwdCtx<'a> {
+    /// Per-layer activation buffer base pointers (`[sizes[l], B]`).
+    pub zptrs: &'a [SendPtr<f32>],
+    /// Per-layer path→neuron index (`index[l][p]`).
+    pub index: &'a [Vec<u32>],
+    /// Path weights `w[t][p]`.
+    pub w: &'a [Vec<f32>],
+    /// Per-transition biases of layer `t+1` (empty when disabled).
+    pub bias: &'a [Vec<f32>],
+    /// Batch size (columns per neuron row).
+    pub batch: usize,
+    /// Paths per transition.
+    pub paths: usize,
+    /// Derived weight representations from [`SparseKernel::prepare`].
+    pub scratch: &'a KernelScratch,
+}
+
+/// Everything a kernel needs to run the backward loops for one fixed
+/// column shard `[c0, c1)`.  Cross-column reductions go to the shard's
+/// slice of the shadow accumulators (`gw_shadow`/`gb_shadow`), which
+/// `sparse.rs` merges in fixed shard order afterwards.
+pub struct BwdCtx<'a> {
+    /// Per-layer gradient buffer base pointers (`[sizes[l], B]`).
+    pub gzptrs: &'a [SendPtr<f32>],
+    /// Per-layer cached forward activations (`[sizes[l], B]`).
+    pub z: &'a [Vec<f32>],
+    /// Per-layer path→neuron index.
+    pub index: &'a [Vec<u32>],
+    /// Path weights `w[t][p]`.
+    pub w: &'a [Vec<f32>],
+    /// Per-transition biases (empty when disabled).
+    pub bias: &'a [Vec<f32>],
+    /// Layer sizes (`layer_sizes[l]` neurons in layer `l`).
+    pub sizes: &'a [usize],
+    /// Offset of transition `t`'s bias segment inside one `gb` shadow
+    /// row.
+    pub gb_off: &'a [usize],
+    /// Base of the per-shard `gw` shadows, `[shards][T·P]` flat.
+    pub gw_shadow: SendPtr<f32>,
+    /// Base of the per-shard `gb` shadows, `[shards][Σ sizes[1..]]`
+    /// flat.
+    pub gb_shadow: SendPtr<f32>,
+    /// Fixed shard width in columns (`bwd_shard_width(b)`); shard
+    /// index = `c0 / shard_width`.
+    pub shard_width: usize,
+    /// Length of one `gb` shadow row (`Σ sizes[1..]`).
+    pub brow: usize,
+    /// Batch size.
+    pub batch: usize,
+    /// Paths per transition.
+    pub paths: usize,
+    /// Derived weight representations from [`SparseKernel::prepare`].
+    pub scratch: &'a KernelScratch,
+}
+
+/// One hot-path implementation.  `forward_columns` and
+/// `backward_shard` are called concurrently for disjoint column
+/// ranges; each must compute every column with a floating-point op
+/// order that depends only on the column index — never on `(c0, c1)`
+/// placement — so results stay bitwise thread-invariant.
+pub trait SparseKernel: Send + Sync {
+    /// This kernel's kind (for labels and dispatch assertions).
+    fn kind(&self) -> KernelKind;
+
+    /// Rebuild derived weight representations into `scratch`.  Called
+    /// once at the top of each forward *and* backward (weights may
+    /// have stepped in between); must be allocation-free once the
+    /// buffers are warm.
+    fn prepare(&self, w: &[Vec<f32>], scratch: &mut KernelScratch) {
+        let _ = (w, scratch);
+    }
+
+    /// Run the whole multi-transition forward loop for columns
+    /// `[c0, c1)` of every layer buffer.
+    fn forward_columns(&self, ctx: &FwdCtx<'_>, c0: usize, c1: usize);
+
+    /// Run the whole reversed multi-transition backward loop for the
+    /// fixed shard `[c0, c1)`.
+    fn backward_shard(&self, ctx: &BwdCtx<'_>, c0: usize, c1: usize);
+}
+
+/// Forward bias seeding for columns `[c0, c1)` of layer `t+1`
+/// (extracted verbatim from the pre-kernel forward; shared by every
+/// kernel).
+///
+/// # Safety
+/// `znext` must point to a `[rows, b]` buffer with `bias.len() ≤ rows`
+/// and `c1 ≤ b`, and no concurrent access to these columns.
+#[inline]
+pub(crate) unsafe fn init_bias_columns(
+    bias: &[f32],
+    znext: *mut f32,
+    b: usize,
+    c0: usize,
+    c1: usize,
+) {
+    for (i, &bv) in bias.iter().enumerate() {
+        for bi in c0..c1 {
+            *znext.add(i * b + bi) = bv;
+        }
+    }
+}
+
+/// Backward bias-gradient row sums for one shard (extracted verbatim
+/// from the pre-kernel backward; shared by every kernel):
+/// `gbb[off + i] += Σ_{bi ∈ [c0, c1)} gznext[i·b + bi]`.
+///
+/// # Safety
+/// `gznext` must point to an `[n, b]` buffer with `c1 ≤ b`; `gbb` to a
+/// shadow row with `off + n` elements owned by this shard.
+#[inline]
+pub(crate) unsafe fn bias_row_sums(
+    gznext: *const f32,
+    gbb: *mut f32,
+    off: usize,
+    n: usize,
+    b: usize,
+    c0: usize,
+    c1: usize,
+) {
+    for i in 0..n {
+        let mut s = 0.0f32;
+        for bi in c0..c1 {
+            s += *gznext.add(i * b + bi);
+        }
+        *gbb.add(off + i) += s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_canonical_spellings() {
+        for k in [
+            KernelKind::Auto,
+            KernelKind::Scalar,
+            KernelKind::Simd,
+            KernelKind::Sign,
+            KernelKind::Int8,
+        ] {
+            assert_eq!(KernelKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(KernelKind::parse(" SIMD "), Some(KernelKind::Simd));
+        assert_eq!(KernelKind::parse("avx512"), None);
+        assert_eq!(KernelKind::parse(""), None);
+    }
+
+    #[test]
+    fn effective_downgrades_sign_without_frozen_signs() {
+        assert_eq!(KernelKind::Sign.effective(false), KernelKind::Scalar);
+        assert_eq!(KernelKind::Sign.effective(true), KernelKind::Sign);
+        assert_eq!(KernelKind::Auto.effective(true), KernelKind::Scalar);
+        assert_eq!(KernelKind::Int8.effective(false), KernelKind::Int8);
+    }
+
+    #[test]
+    fn concrete_kinds_resolve_to_themselves() {
+        for k in KernelKind::ALL {
+            assert_eq!(k.resolve(), k);
+            assert_eq!(k.instance().kind(), k);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! The bitwise-golden scalar kernel.
+//!
+//! These are the pre-refactor per-path loops from `sparse.rs`,
+//! extracted **verbatim**: same traversal order, same branchless
+//! ReLU gating, same floating-point op order per column.  Every other
+//! kernel is tested against this one (`tests/kernel_golden.rs`), and
+//! the existing golden fixtures (`tests/golden_{forward,backward}.rs`)
+//! pin that the extraction itself changed no bits.
+
+use super::{bias_row_sums, init_bias_columns, BwdCtx, FwdCtx, KernelKind, SparseKernel};
+
+/// See the [module docs](self).
+pub struct ScalarKernel;
+
+impl SparseKernel for ScalarKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Scalar
+    }
+
+    fn forward_columns(&self, ctx: &FwdCtx<'_>, c0: usize, c1: usize) {
+        let b = ctx.batch;
+        for t in 0..ctx.w.len() {
+            let src_idx = &ctx.index[t];
+            let dst_idx = &ctx.index[t + 1];
+            let wt = &ctx.w[t];
+            let zprev = ctx.zptrs[t].get() as *const f32;
+            let znext = ctx.zptrs[t + 1].get();
+            if !ctx.bias[t].is_empty() {
+                // Safety: layer buffers are [sizes[t+1], b]; columns
+                // [c0, c1) are exclusively this call's.
+                unsafe { init_bias_columns(&ctx.bias[t], znext, b, c0, c1) };
+            }
+            for p in 0..ctx.paths {
+                let s = src_idx[p] as usize * b;
+                let d = dst_idx[p] as usize * b;
+                let w = wt[p];
+                // branchless ReLU gate: w·max(v,0) — vectorizes
+                // cleanly (EXPERIMENTS.md §Perf)
+                for bi in c0..c1 {
+                    unsafe {
+                        *znext.add(d + bi) += w * (*zprev.add(s + bi)).max(0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    fn backward_shard(&self, ctx: &BwdCtx<'_>, c0: usize, c1: usize) {
+        let b = ctx.batch;
+        let t_cnt = ctx.w.len();
+        let s_idx = c0 / ctx.shard_width;
+        let tp = t_cnt * ctx.paths;
+        // Safety: shard s_idx owns shadow rows [s_idx·tp, (s_idx+1)·tp)
+        // and [s_idx·brow, (s_idx+1)·brow) exclusively.
+        let gwb = unsafe { ctx.gw_shadow.get().add(s_idx * tp) };
+        let gbb = unsafe { ctx.gb_shadow.get().add(s_idx * ctx.brow) };
+        for t in (0..t_cnt).rev() {
+            let gznext = ctx.gzptrs[t + 1].get() as *const f32;
+            let gzprev = ctx.gzptrs[t].get();
+            // bias gradients: per-shard row sums of gz (layer t+1)
+            if !ctx.bias[t].is_empty() {
+                unsafe {
+                    bias_row_sums(gznext, gbb, ctx.gb_off[t], ctx.sizes[t + 1], b, c0, c1)
+                };
+            }
+            let src_idx = &ctx.index[t];
+            let dst_idx = &ctx.index[t + 1];
+            let wt = &ctx.w[t];
+            let zprev = &ctx.z[t];
+            for p in 0..ctx.paths {
+                let sb = src_idx[p] as usize * b;
+                let db = dst_idx[p] as usize * b;
+                let w = wt[p];
+                let mut gacc = 0.0f32;
+                // branchless gating: the (v > 0) indicator multiplies
+                // both products, letting LLVM vectorize the loop
+                for bi in c0..c1 {
+                    let v = zprev[sb + bi];
+                    let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
+                    let g = unsafe { *gznext.add(db + bi) } * gate;
+                    gacc += g * v;
+                    unsafe { *gzprev.add(sb + bi) += w * g };
+                }
+                unsafe { *gwb.add(t * ctx.paths + p) += gacc };
+            }
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Sign-only kernel for `freeze_signs` nets (paper §3.2 / §4.4).
+//!
+//! With frozen signs the weight of path `p` is `±|w[p]|`, so
+//! [`SparseKernel::prepare`] splits each transition into a
+//! **magnitude-free block representation**: packed sign bits (one
+//! `u64` word per 64 paths) plus either a single broadcast magnitude —
+//! when every `|w[t][p]|` shares one bit pattern, as
+//! `ConstantSignAlongPath` init guarantees — or a per-path magnitude
+//! block once training has diversified them.  The inner multiply then
+//! collapses to a gated add/sub: `acc ± mag·max(v, 0)`.
+//!
+//! **Bitwise contract.**  IEEE-754 negation is exact:
+//! `(-m)·r == -(m·r)` bit-for-bit, and `acc -= x` is the same
+//! operation as `acc += (-x)`.  Signs are derived from the *weight
+//! bits* (`is_sign_negative`), and magnitudes as `|w|`, so
+//! `±mag ≡ w` exactly and every column reproduces the scalar kernel's
+//! rounding sequence — the kernel is bitwise equal to `scalar`
+//! (pinned by `tests/kernel_golden.rs`), not merely close.
+//!
+//! On a net without frozen signs [`KernelKind::effective`] downgrades
+//! this kernel to `scalar` before dispatch; it never runs there.
+
+use super::{
+    bias_row_sums, init_bias_columns, BwdCtx, FwdCtx, KernelKind, KernelScratch, SparseKernel,
+};
+
+/// See the [module docs](self).
+pub struct SignKernel;
+
+/// True iff bit `p` of the packed sign words is set (weight negative).
+#[inline(always)]
+fn neg_bit(neg: &[u64], p: usize) -> bool {
+    (neg[p >> 6] >> (p & 63)) & 1 == 1
+}
+
+/// Forward column run for one path: `znext[d + bi] ±= m·max(v, 0)`.
+///
+/// # Safety
+/// Same pointer/range contract as the scalar kernel's inner loop.
+#[inline(always)]
+unsafe fn fwd_columns_one_path(
+    znext: *mut f32,
+    zprev: *const f32,
+    d: usize,
+    s: usize,
+    m: f32,
+    neg: bool,
+    c0: usize,
+    c1: usize,
+) {
+    if neg {
+        for bi in c0..c1 {
+            *znext.add(d + bi) -= m * (*zprev.add(s + bi)).max(0.0);
+        }
+    } else {
+        for bi in c0..c1 {
+            *znext.add(d + bi) += m * (*zprev.add(s + bi)).max(0.0);
+        }
+    }
+}
+
+impl SparseKernel for SignKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Sign
+    }
+
+    fn prepare(&self, w: &[Vec<f32>], scratch: &mut KernelScratch) {
+        let t_cnt = w.len();
+        if scratch.mags.len() != t_cnt {
+            scratch.mags.resize_with(t_cnt, Vec::new);
+        }
+        if scratch.neg.len() != t_cnt {
+            scratch.neg.resize_with(t_cnt, Vec::new);
+        }
+        scratch.uniform.clear();
+        for (t, wt) in w.iter().enumerate() {
+            let paths = wt.len();
+            let words = paths.div_ceil(64);
+            let negt = &mut scratch.neg[t];
+            negt.clear();
+            negt.resize(words, 0);
+            // magnitudes are always materialized (cheap, and keeps the
+            // steady state allocation-free even if a transition drifts
+            // between the uniform and per-path tiers mid-training)
+            let magt = &mut scratch.mags[t];
+            magt.clear();
+            magt.resize(paths, 0.0);
+            let mut uni_bits = wt.first().map(|v| v.abs().to_bits());
+            for (p, &wv) in wt.iter().enumerate() {
+                let a = wv.abs();
+                magt[p] = a;
+                if wv.is_sign_negative() {
+                    negt[p >> 6] |= 1u64 << (p & 63);
+                }
+                if uni_bits != Some(a.to_bits()) {
+                    uni_bits = None;
+                }
+            }
+            scratch.uniform.push(uni_bits.map(f32::from_bits));
+        }
+    }
+
+    fn forward_columns(&self, ctx: &FwdCtx<'_>, c0: usize, c1: usize) {
+        let b = ctx.batch;
+        for t in 0..ctx.w.len() {
+            let src_idx = &ctx.index[t];
+            let dst_idx = &ctx.index[t + 1];
+            let zprev = ctx.zptrs[t].get() as *const f32;
+            let znext = ctx.zptrs[t + 1].get();
+            if !ctx.bias[t].is_empty() {
+                // Safety: disjoint columns of a [sizes[t+1], b] buffer.
+                unsafe { init_bias_columns(&ctx.bias[t], znext, b, c0, c1) };
+            }
+            let negt = &ctx.scratch.neg[t];
+            let magt = &ctx.scratch.mags[t];
+            let uni = ctx.scratch.uniform[t];
+            for p in 0..ctx.paths {
+                let s = src_idx[p] as usize * b;
+                let d = dst_idx[p] as usize * b;
+                let m = match uni {
+                    Some(mu) => mu,
+                    None => magt[p],
+                };
+                // Safety: as in the scalar kernel.
+                unsafe { fwd_columns_one_path(znext, zprev, d, s, m, neg_bit(negt, p), c0, c1) };
+            }
+        }
+    }
+
+    fn backward_shard(&self, ctx: &BwdCtx<'_>, c0: usize, c1: usize) {
+        let b = ctx.batch;
+        let t_cnt = ctx.w.len();
+        let s_idx = c0 / ctx.shard_width;
+        let tp = t_cnt * ctx.paths;
+        // Safety: shard-exclusive shadow rows (see the scalar kernel).
+        let gwb = unsafe { ctx.gw_shadow.get().add(s_idx * tp) };
+        let gbb = unsafe { ctx.gb_shadow.get().add(s_idx * ctx.brow) };
+        for t in (0..t_cnt).rev() {
+            let gznext = ctx.gzptrs[t + 1].get() as *const f32;
+            let gzprev = ctx.gzptrs[t].get();
+            if !ctx.bias[t].is_empty() {
+                unsafe { bias_row_sums(gznext, gbb, ctx.gb_off[t], ctx.sizes[t + 1], b, c0, c1) };
+            }
+            let src_idx = &ctx.index[t];
+            let dst_idx = &ctx.index[t + 1];
+            let zprev = &ctx.z[t];
+            let negt = &ctx.scratch.neg[t];
+            let magt = &ctx.scratch.mags[t];
+            let uni = ctx.scratch.uniform[t];
+            for p in 0..ctx.paths {
+                let sb = src_idx[p] as usize * b;
+                let db = dst_idx[p] as usize * b;
+                let m = match uni {
+                    Some(mu) => mu,
+                    None => magt[p],
+                };
+                let neg = neg_bit(negt, p);
+                let mut gacc = 0.0f32;
+                // `gacc` (the ∂loss/∂w of the *signed* weight) is
+                // weight-free — identical to the scalar loop; only the
+                // gz_prev update gets the add/sub collapse.
+                if neg {
+                    for bi in c0..c1 {
+                        let v = zprev[sb + bi];
+                        let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
+                        let g = unsafe { *gznext.add(db + bi) } * gate;
+                        gacc += g * v;
+                        unsafe { *gzprev.add(sb + bi) -= m * g };
+                    }
+                } else {
+                    for bi in c0..c1 {
+                        let v = zprev[sb + bi];
+                        let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
+                        let g = unsafe { *gznext.add(db + bi) } * gate;
+                        gacc += g * v;
+                        unsafe { *gzprev.add(sb + bi) += m * g };
+                    }
+                }
+                unsafe { *gwb.add(t * ctx.paths + p) += gacc };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_splits_weights_into_signs_and_magnitudes() {
+        let w = vec![vec![0.5f32, -0.5, 0.5, -0.5], vec![0.25, 0.75, -0.125]];
+        let mut scratch = KernelScratch::default();
+        SignKernel.prepare(&w, &mut scratch);
+        // transition 0: uniform magnitude tier
+        assert_eq!(scratch.uniform[0], Some(0.5));
+        assert_eq!(scratch.mags[0], vec![0.5; 4]);
+        assert!(!neg_bit(&scratch.neg[0], 0));
+        assert!(neg_bit(&scratch.neg[0], 1));
+        assert!(neg_bit(&scratch.neg[0], 3));
+        // transition 1: per-path tier
+        assert_eq!(scratch.uniform[1], None);
+        assert_eq!(scratch.mags[1], vec![0.25, 0.75, 0.125]);
+        assert!(neg_bit(&scratch.neg[1], 2));
+        // reconstruction is exact: ±mag == w bit-for-bit
+        for (t, wt) in w.iter().enumerate() {
+            for (p, &wv) in wt.iter().enumerate() {
+                let m = scratch.mags[t][p];
+                let rec = if neg_bit(&scratch.neg[t], p) { -m } else { m };
+                assert_eq!(rec.to_bits(), wv.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn prepare_reuses_capacity() {
+        let w = vec![vec![1.0f32; 100], vec![-2.0f32; 100]];
+        let mut scratch = KernelScratch::default();
+        SignKernel.prepare(&w, &mut scratch);
+        let caps: Vec<usize> = scratch.mags.iter().map(|m| m.capacity()).collect();
+        for _ in 0..3 {
+            SignKernel.prepare(&w, &mut scratch);
+        }
+        assert_eq!(caps, scratch.mags.iter().map(|m| m.capacity()).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,255 @@
+//! Blocked/unrolled SIMD kernel: AVX2 intrinsics on x86_64 behind
+//! runtime feature detection, an 8-column blocked scalar loop
+//! everywhere else.
+//!
+//! **Bitwise contract.**  Both paths reproduce the scalar kernel's
+//! bits exactly, by IEEE-754 argument (pinned defensively at ≤ 1e-6 in
+//! `tests/kernel_golden.rs`, and bitwise thread-invariant per kernel):
+//!
+//! * No FMA: the vector forward uses separate `mul` + `add`, so each
+//!   column sees the identical `acc + w·max(v, 0)` rounding sequence
+//!   as the scalar loop.
+//! * `_mm256_max_ps(v, 0)` differs from `f32::max(v, 0.0)` only in
+//!   NaN handling (both return `0` here — the intrinsic takes the
+//!   second operand on NaN) and in the sign of a zero result, which
+//!   cannot reach the accumulator bits: an accumulator that starts at
+//!   `+0.0` never becomes `-0.0` under round-to-nearest addition.
+//! * The backward `gacc` reduction stores the 8 lane products and sums
+//!   them **in lane order** — the same left-to-right add sequence as
+//!   the scalar column loop — instead of a horizontal tree reduction.
+//! * The ReLU gate is applied by masking the *gradient* with the
+//!   `v > 0` compare; masked lanes contribute `±0` exactly as the
+//!   scalar `g · 0.0` does.
+//!
+//! Block starts depend only on the column index (`bi` advances from
+//! `c0` in steps of 8), and every op order is per-column, so shard
+//! placement — and therefore the thread count — never changes a bit.
+
+use super::{bias_row_sums, init_bias_columns, BwdCtx, FwdCtx, KernelKind, SparseKernel};
+
+/// Columns per block in the fallback path (one AVX2 register of f32).
+const BLOCK: usize = 8;
+
+/// See the [module docs](self).
+pub struct SimdKernel;
+
+impl SparseKernel for SimdKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Simd
+    }
+
+    fn forward_columns(&self, ctx: &FwdCtx<'_>, c0: usize, c1: usize) {
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // Safety: AVX2 presence just checked; pointer/range
+            // contract identical to the scalar kernel's.
+            unsafe { fwd_avx2(ctx, c0, c1) };
+            return;
+        }
+        fwd_blocked(ctx, c0, c1);
+    }
+
+    fn backward_shard(&self, ctx: &BwdCtx<'_>, c0: usize, c1: usize) {
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // Safety: as above.
+            unsafe { bwd_avx2(ctx, c0, c1) };
+            return;
+        }
+        bwd_blocked(ctx, c0, c1);
+    }
+}
+
+/// Fallback forward: the scalar loops restructured into fixed 8-column
+/// blocks (a constant-trip inner loop LLVM unrolls and vectorizes);
+/// per-column op order is unchanged, so the bits are too.
+fn fwd_blocked(ctx: &FwdCtx<'_>, c0: usize, c1: usize) {
+    let b = ctx.batch;
+    for t in 0..ctx.w.len() {
+        let src_idx = &ctx.index[t];
+        let dst_idx = &ctx.index[t + 1];
+        let wt = &ctx.w[t];
+        let zprev = ctx.zptrs[t].get() as *const f32;
+        let znext = ctx.zptrs[t + 1].get();
+        if !ctx.bias[t].is_empty() {
+            // Safety: disjoint columns [c0, c1) of a [sizes[t+1], b]
+            // buffer.
+            unsafe { init_bias_columns(&ctx.bias[t], znext, b, c0, c1) };
+        }
+        for p in 0..ctx.paths {
+            let s = src_idx[p] as usize * b;
+            let d = dst_idx[p] as usize * b;
+            let w = wt[p];
+            let mut bi = c0;
+            while bi + BLOCK <= c1 {
+                for k in 0..BLOCK {
+                    unsafe {
+                        *znext.add(d + bi + k) += w * (*zprev.add(s + bi + k)).max(0.0);
+                    }
+                }
+                bi += BLOCK;
+            }
+            while bi < c1 {
+                unsafe {
+                    *znext.add(d + bi) += w * (*zprev.add(s + bi)).max(0.0);
+                }
+                bi += 1;
+            }
+        }
+    }
+}
+
+/// Fallback backward: fixed 8-column blocks, scalar op order per
+/// column (`gacc` accumulates left-to-right exactly as in the scalar
+/// kernel).
+fn bwd_blocked(ctx: &BwdCtx<'_>, c0: usize, c1: usize) {
+    let b = ctx.batch;
+    let t_cnt = ctx.w.len();
+    let s_idx = c0 / ctx.shard_width;
+    let tp = t_cnt * ctx.paths;
+    // Safety: shard-exclusive shadow rows (see the scalar kernel).
+    let gwb = unsafe { ctx.gw_shadow.get().add(s_idx * tp) };
+    let gbb = unsafe { ctx.gb_shadow.get().add(s_idx * ctx.brow) };
+    for t in (0..t_cnt).rev() {
+        let gznext = ctx.gzptrs[t + 1].get() as *const f32;
+        let gzprev = ctx.gzptrs[t].get();
+        if !ctx.bias[t].is_empty() {
+            unsafe { bias_row_sums(gznext, gbb, ctx.gb_off[t], ctx.sizes[t + 1], b, c0, c1) };
+        }
+        let src_idx = &ctx.index[t];
+        let dst_idx = &ctx.index[t + 1];
+        let wt = &ctx.w[t];
+        let zprev = &ctx.z[t];
+        for p in 0..ctx.paths {
+            let sb = src_idx[p] as usize * b;
+            let db = dst_idx[p] as usize * b;
+            let w = wt[p];
+            let mut gacc = 0.0f32;
+            let mut bi = c0;
+            while bi + BLOCK <= c1 {
+                for k in 0..BLOCK {
+                    let v = zprev[sb + bi + k];
+                    let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
+                    let g = unsafe { *gznext.add(db + bi + k) } * gate;
+                    gacc += g * v;
+                    unsafe { *gzprev.add(sb + bi + k) += w * g };
+                }
+                bi += BLOCK;
+            }
+            while bi < c1 {
+                let v = zprev[sb + bi];
+                let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
+                let g = unsafe { *gznext.add(db + bi) } * gate;
+                gacc += g * v;
+                unsafe { *gzprev.add(sb + bi) += w * g };
+                bi += 1;
+            }
+            unsafe { *gwb.add(t * ctx.paths + p) += gacc };
+        }
+    }
+}
+
+/// AVX2 forward: 8 columns per vector step, separate mul + add (no
+/// FMA), scalar tail.
+///
+/// # Safety
+/// Caller must have verified AVX2 support; pointer/range contract as
+/// in the scalar kernel.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn fwd_avx2(ctx: &FwdCtx<'_>, c0: usize, c1: usize) {
+    use std::arch::x86_64::*;
+    let b = ctx.batch;
+    let zero = _mm256_setzero_ps();
+    for t in 0..ctx.w.len() {
+        let src_idx = &ctx.index[t];
+        let dst_idx = &ctx.index[t + 1];
+        let wt = &ctx.w[t];
+        let zprev = ctx.zptrs[t].get() as *const f32;
+        let znext = ctx.zptrs[t + 1].get();
+        if !ctx.bias[t].is_empty() {
+            init_bias_columns(&ctx.bias[t], znext, b, c0, c1);
+        }
+        for p in 0..ctx.paths {
+            let s = src_idx[p] as usize * b;
+            let d = dst_idx[p] as usize * b;
+            let w = wt[p];
+            let wv = _mm256_set1_ps(w);
+            let mut bi = c0;
+            while bi + 8 <= c1 {
+                let v = _mm256_loadu_ps(zprev.add(s + bi));
+                let r = _mm256_max_ps(v, zero); // NaN → 0, like f32::max
+                let acc = _mm256_loadu_ps(znext.add(d + bi) as *const f32);
+                let acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, r));
+                _mm256_storeu_ps(znext.add(d + bi), acc);
+                bi += 8;
+            }
+            while bi < c1 {
+                *znext.add(d + bi) += w * (*zprev.add(s + bi)).max(0.0);
+                bi += 1;
+            }
+        }
+    }
+}
+
+/// AVX2 backward: the ReLU gate masks the gradient vector
+/// (`g = gz & (v > 0)`), lane products are summed **in lane order**
+/// into `gacc`, and `gz_prev += w·g` uses separate mul + add.
+///
+/// # Safety
+/// Caller must have verified AVX2 support; pointer/range contract as
+/// in the scalar kernel.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn bwd_avx2(ctx: &BwdCtx<'_>, c0: usize, c1: usize) {
+    use std::arch::x86_64::*;
+    let b = ctx.batch;
+    let t_cnt = ctx.w.len();
+    let s_idx = c0 / ctx.shard_width;
+    let tp = t_cnt * ctx.paths;
+    let gwb = ctx.gw_shadow.get().add(s_idx * tp);
+    let gbb = ctx.gb_shadow.get().add(s_idx * ctx.brow);
+    let zero = _mm256_setzero_ps();
+    let mut lanes = [0.0f32; 8];
+    for t in (0..t_cnt).rev() {
+        let gznext = ctx.gzptrs[t + 1].get() as *const f32;
+        let gzprev = ctx.gzptrs[t].get();
+        if !ctx.bias[t].is_empty() {
+            bias_row_sums(gznext, gbb, ctx.gb_off[t], ctx.sizes[t + 1], b, c0, c1);
+        }
+        let src_idx = &ctx.index[t];
+        let dst_idx = &ctx.index[t + 1];
+        let wt = &ctx.w[t];
+        let zprev = &ctx.z[t];
+        for p in 0..ctx.paths {
+            let sb = src_idx[p] as usize * b;
+            let db = dst_idx[p] as usize * b;
+            let w = wt[p];
+            let wv = _mm256_set1_ps(w);
+            let mut gacc = 0.0f32;
+            let mut bi = c0;
+            while bi + 8 <= c1 {
+                let v = _mm256_loadu_ps(zprev.as_ptr().add(sb + bi));
+                let mask = _mm256_cmp_ps::<_CMP_GT_OQ>(v, zero);
+                let g = _mm256_and_ps(_mm256_loadu_ps(gznext.add(db + bi)), mask);
+                let prod = _mm256_mul_ps(g, v);
+                _mm256_storeu_ps(lanes.as_mut_ptr(), prod);
+                for &l in &lanes {
+                    gacc += l;
+                }
+                let prev = _mm256_loadu_ps(gzprev.add(sb + bi) as *const f32);
+                _mm256_storeu_ps(gzprev.add(sb + bi), _mm256_add_ps(prev, _mm256_mul_ps(wv, g)));
+                bi += 8;
+            }
+            while bi < c1 {
+                let v = zprev[sb + bi];
+                let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
+                let g = *gznext.add(db + bi) * gate;
+                gacc += g * v;
+                *gzprev.add(sb + bi) += w * g;
+                bi += 1;
+            }
+            *gwb.add(t * ctx.paths + p) += gacc;
+        }
+    }
+}

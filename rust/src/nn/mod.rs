@@ -16,6 +16,7 @@ pub mod cnn;
 pub mod conv;
 pub mod dense;
 pub mod init;
+pub mod kernel;
 pub mod loss;
 pub mod matmul;
 pub mod mlp;
@@ -47,6 +48,16 @@ pub trait Model {
 
     /// Apply one optimizer step and clear gradients.
     fn step(&mut self, opt: &Sgd);
+
+    /// Select the compute kernel for the forward/backward hot loops
+    /// ([`kernel::KernelKind`]).  Returns `true` if the model supports
+    /// pluggable kernels ([`sparse::SparseMlp`] does); the default is
+    /// a no-op returning `false`, so kernel selection composes with
+    /// any [`Model`] (engine plumbing calls this unconditionally).
+    fn set_kernel(&mut self, kernel: kernel::KernelKind) -> bool {
+        let _ = kernel;
+        false
+    }
 
     /// Number of trainable parameters (sparsity-aware).
     fn nparams(&self) -> usize;

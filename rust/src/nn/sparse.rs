@@ -16,6 +16,11 @@
 //! the forward and the backward pass shard over batch columns on the
 //! persistent worker pool of [`crate::util::parallel`] (thread count:
 //! `SOBOLNET_THREADS` / [`crate::util::parallel::set_num_threads`]).
+//! The inner loop bodies are pluggable compute kernels
+//! ([`crate::nn::kernel`]: scalar golden reference, blocked SIMD,
+//! sign-only, int8), selected via [`SparseMlpConfig::kernel`] /
+//! `SOBOLNET_KERNEL`; the sharding, shadow merge, and scratch
+//! lifecycle described here are kernel-independent.
 //!
 //! * *Forward* shards via [`parallel_ranges`]: each thread owns a
 //!   disjoint column range of every layer buffer and runs the whole
@@ -50,6 +55,7 @@
 //! (EXPERIMENTS.md §Perf).
 
 use super::init::{w_init_magnitude, Init};
+use super::kernel::{self, KernelKind, KernelScratch};
 use super::optim::Sgd;
 use super::tensor::Tensor;
 use super::Model;
@@ -149,6 +155,9 @@ struct Scratch {
     /// Offset of transition `t`'s bias segment inside one `gb` shadow
     /// row (layer `t+1`, length `sizes[t+1]`).
     gb_off: Vec<usize>,
+    /// Derived weight representations for the active compute kernel
+    /// (sign split, int8 codes), rebuilt each pass into reused buffers.
+    kernel: KernelScratch,
 }
 
 impl Clone for Scratch {
@@ -174,11 +183,22 @@ pub struct SparseMlpConfig {
     pub bias: bool,
     /// Freeze the initial signs and train only magnitudes (§3.2).
     pub freeze_signs: bool,
+    /// Compute kernel for the forward/backward hot loops
+    /// ([`crate::nn::kernel`]).  [`KernelKind::Auto`] resolves the
+    /// `SOBOLNET_KERNEL` environment variable at build time (default:
+    /// the bitwise-golden scalar kernel).
+    pub kernel: KernelKind,
 }
 
 impl Default for SparseMlpConfig {
     fn default() -> Self {
-        SparseMlpConfig { init: Init::ConstantPositive, seed: 0, bias: true, freeze_signs: false }
+        SparseMlpConfig {
+            init: Init::ConstantPositive,
+            seed: 0,
+            bias: true,
+            freeze_signs: false,
+            kernel: KernelKind::Auto,
+        }
     }
 }
 
@@ -204,6 +224,9 @@ pub struct SparseMlp {
     /// True iff the most recent forward ran with `train = true` (the
     /// precondition for `backward`).
     z_train: bool,
+    /// Resolved compute kernel (never [`KernelKind::Auto`]); see
+    /// [`SparseMlp::kernel`].
+    kernel: KernelKind,
     scratch: Scratch,
 }
 
@@ -264,8 +287,16 @@ impl SparseMlp {
             z: Vec::new(),
             zbatch: 0,
             z_train: false,
+            kernel: cfg.kernel.resolve(),
             scratch: Scratch::default(),
         }
+    }
+
+    /// The compute kernel configured for this model (resolved, never
+    /// `Auto`).  The kind that actually runs may still downgrade per
+    /// [`KernelKind::effective`]: `Sign` requires frozen signs.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
     }
 
     /// Accumulated weight gradients `gw[t][p]` (cleared by
@@ -348,43 +379,27 @@ impl Model for SparseMlp {
             // Column-sharded execution: each thread owns a disjoint
             // range [c0, c1) of batch columns of EVERY layer buffer and
             // runs the whole multi-layer loop for it — one pool fan-out
-            // per forward, no barriers between transitions.
+            // per forward, no barriers between transitions.  The inner
+            // per-transition/per-path loops belong to the selected
+            // compute kernel; every kernel computes each column with a
+            // fixed op order, so logits stay bitwise identical for
+            // every thread count.
             self.scratch.zptrs.clear();
             for zl in self.z.iter_mut() {
                 self.scratch.zptrs.push(SendPtr::new(zl.as_mut_ptr()));
             }
-            let ptrs = &self.scratch.zptrs;
-            let index = &self.topo.index;
-            let ws = &self.w;
-            let biases = &self.bias;
-            let columns = |c0: usize, c1: usize| {
-                for t in 0..t_cnt {
-                    let src_idx = &index[t];
-                    let dst_idx = &index[t + 1];
-                    let wt = &ws[t];
-                    let zprev = ptrs[t].get() as *const f32;
-                    let znext = ptrs[t + 1].get();
-                    if !biases[t].is_empty() {
-                        for (i, &bv) in biases[t].iter().enumerate() {
-                            for bi in c0..c1 {
-                                unsafe { *znext.add(i * b + bi) = bv };
-                            }
-                        }
-                    }
-                    for p in 0..paths {
-                        let s = src_idx[p] as usize * b;
-                        let d = dst_idx[p] as usize * b;
-                        let w = wt[p];
-                        // branchless ReLU gate: w·max(v,0) — vectorizes
-                        // cleanly (EXPERIMENTS.md §Perf)
-                        for bi in c0..c1 {
-                            unsafe {
-                                *znext.add(d + bi) += w * (*zprev.add(s + bi)).max(0.0);
-                            }
-                        }
-                    }
-                }
+            let kern = self.kernel.effective(self.fixed_signs.is_some()).instance();
+            kern.prepare(&self.w, &mut self.scratch.kernel);
+            let ctx = kernel::FwdCtx {
+                zptrs: &self.scratch.zptrs,
+                index: &self.topo.index,
+                w: &self.w,
+                bias: &self.bias,
+                batch: b,
+                paths,
+                scratch: &self.scratch.kernel,
             };
+            let columns = |c0: usize, c1: usize| kern.forward_columns(&ctx, c0, c1);
             // below the work threshold run inline (min_chunk = b makes
             // parallel_ranges take its sequential path)
             let min_chunk = if paths * b * t_cnt >= PAR_MIN_WORK { 1 } else { b.max(1) };
@@ -454,61 +469,34 @@ impl Model for SparseMlp {
             for gzl in self.scratch.gz.iter_mut() {
                 self.scratch.gzptrs.push(SendPtr::new(gzl.as_mut_ptr()));
             }
-            let gzptrs = &self.scratch.gzptrs;
-            let gb_off = &self.scratch.gb_off;
-            let gw_sh = SendPtr::new(self.scratch.gw_shadow.as_mut_ptr());
-            let gb_sh = SendPtr::new(self.scratch.gb_shadow.as_mut_ptr());
-            let sizes = &self.topo.layer_sizes;
-            let index = &self.topo.index;
-            let ws = &self.w;
-            let biases = &self.bias;
-            let z = &self.z;
-
             // One shard = one fixed chunk of batch columns.  The shard
             // runs the whole reversed multi-transition loop for its
             // columns (no barriers): gz writes are column-disjoint, and
             // the cross-column reductions go to this shard's shadows.
-            let shard = |c0: usize, c1: usize| {
-                let s_idx = c0 / width;
-                let gwb = unsafe { gw_sh.get().add(s_idx * tp) };
-                let gbb = unsafe { gb_sh.get().add(s_idx * brow) };
-                for t in (0..t_cnt).rev() {
-                    let gznext = gzptrs[t + 1].get() as *const f32;
-                    let gzprev = gzptrs[t].get();
-                    // bias gradients: per-shard row sums of gz (layer t+1)
-                    if !biases[t].is_empty() {
-                        let off = gb_off[t];
-                        for i in 0..sizes[t + 1] {
-                            let mut s = 0.0f32;
-                            for bi in c0..c1 {
-                                s += unsafe { *gznext.add(i * b + bi) };
-                            }
-                            unsafe { *gbb.add(off + i) += s };
-                        }
-                    }
-                    let src_idx = &index[t];
-                    let dst_idx = &index[t + 1];
-                    let wt = &ws[t];
-                    let zprev = &z[t];
-                    for p in 0..paths {
-                        let sb = src_idx[p] as usize * b;
-                        let db = dst_idx[p] as usize * b;
-                        let w = wt[p];
-                        let mut gacc = 0.0f32;
-                        // branchless gating: the (v > 0) indicator
-                        // multiplies both products, letting LLVM
-                        // vectorize the loop
-                        for bi in c0..c1 {
-                            let v = zprev[sb + bi];
-                            let gate = if v > 0.0 { 1.0f32 } else { 0.0 };
-                            let g = unsafe { *gznext.add(db + bi) } * gate;
-                            gacc += g * v;
-                            unsafe { *gzprev.add(sb + bi) += w * g };
-                        }
-                        unsafe { *gwb.add(t * paths + p) += gacc };
-                    }
-                }
+            // The loop bodies belong to the selected compute kernel;
+            // the shard partition and merge order stay here, pure
+            // functions of the batch size.
+            let kern = self.kernel.effective(self.fixed_signs.is_some()).instance();
+            kern.prepare(&self.w, &mut self.scratch.kernel);
+            let gw_sh = SendPtr::new(self.scratch.gw_shadow.as_mut_ptr());
+            let gb_sh = SendPtr::new(self.scratch.gb_shadow.as_mut_ptr());
+            let ctx = kernel::BwdCtx {
+                gzptrs: &self.scratch.gzptrs,
+                z: &self.z,
+                index: &self.topo.index,
+                w: &self.w,
+                bias: &self.bias,
+                sizes: &self.topo.layer_sizes,
+                gb_off: &self.scratch.gb_off,
+                gw_shadow: gw_sh,
+                gb_shadow: gb_sh,
+                shard_width: width,
+                brow,
+                batch: b,
+                paths,
+                scratch: &self.scratch.kernel,
             };
+            let shard = |c0: usize, c1: usize| kern.backward_shard(&ctx, c0, c1);
             if paths * b * t_cnt >= PAR_MIN_WORK {
                 parallel_chunks(b, width, &shard);
             } else {
@@ -557,6 +545,11 @@ impl Model for SparseMlp {
         }
     }
 
+    fn set_kernel(&mut self, kernel: KernelKind) -> bool {
+        self.kernel = kernel.resolve();
+        true
+    }
+
     fn nparams(&self) -> usize {
         self.w.iter().map(|w| w.len()).sum::<usize>()
             + self.bias.iter().map(|b| b.len()).sum::<usize>()
@@ -585,7 +578,7 @@ mod tests {
         let t = topo(&[8, 16, 16, 4], 64);
         let mut net = SparseMlp::new(
             &t,
-            SparseMlpConfig { init: Init::UniformRandom, seed: 3, bias: true, freeze_signs: false },
+            SparseMlpConfig { init: Init::UniformRandom, seed: 3, ..Default::default() },
         );
         // non-trivial biases
         for bl in net.bias.iter_mut() {
@@ -705,7 +698,7 @@ mod tests {
         let t = topo(&[5, 7, 3], 24);
         let mut net = SparseMlp::new(
             &t,
-            SparseMlpConfig { init: Init::UniformRandom, seed: 7, bias: true, freeze_signs: false },
+            SparseMlpConfig { init: Init::UniformRandom, seed: 7, ..Default::default() },
         );
         let x = Tensor::from_vec(
             (0..10).map(|i| (i as f32 * 0.7).sin().abs() + 0.1).collect(),
@@ -780,6 +773,7 @@ mod tests {
                 seed: 0,
                 bias: true,
                 freeze_signs: false,
+                kernel: KernelKind::Auto,
             },
         );
         let mk = |seed: u64| {
@@ -832,6 +826,7 @@ mod tests {
                 seed: 0,
                 bias: false,
                 freeze_signs: true,
+                kernel: KernelKind::Auto,
             },
         );
         let signs: Vec<Vec<f32>> =

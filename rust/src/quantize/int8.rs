@@ -1,0 +1,125 @@
+//! Symmetric per-transition int8 weight quantization — the arithmetic
+//! behind the `int8` compute kernel ([`crate::nn::kernel`]).
+//!
+//! One scale per transition: `scale = amax/127` with
+//! `amax = max |w[t][p]|`, weights rounded to the nearest int8 and
+//! clamped to `±127` (the `-128` slot is unused, keeping the code
+//! symmetric).  Accumulation stays in f32: the kernel dequantizes each
+//! path weight once per column run (`q as f32 · scale` — exact, both
+//! factors are representable) and then runs the standard loops, so the
+//! int8 kernel is **bitwise identical** to the scalar kernel running
+//! on the dequantized weights (pinned by `tests/kernel_golden.rs`),
+//! and within quantization tolerance — per-weight error ≤ `scale/2 =
+//! amax/254` — of the full-precision net.
+//!
+//! Degenerate transitions are safe by construction: an all-zero (or
+//! all-NaN) transition gets `scale = 0` and all-zero codes, which
+//! dequantize to exactly `0.0`.
+
+/// Largest finite `|w|` in a transition; NaN entries are ignored
+/// (they fail every `>` comparison) rather than poisoning the scale.
+pub fn amax(w: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &v in w {
+        let a = v.abs();
+        if a.is_finite() && a > m {
+            m = a;
+        }
+    }
+    m
+}
+
+/// Symmetric scale mapping `[-amax, amax]` onto `[-127, 127]`.
+pub fn scale_for(amax: f32) -> f32 {
+    amax / 127.0
+}
+
+/// Quantize a transition's weights into `out` (cleared and refilled;
+/// capacity is reused, so the call is allocation-free once warm).
+/// Non-finite weights and a non-positive scale quantize to `0`.
+pub fn quantize_into(w: &[f32], scale: f32, out: &mut Vec<i8>) {
+    out.clear();
+    if scale <= 0.0 || scale.is_nan() || scale.is_infinite() {
+        out.resize(w.len(), 0);
+        return;
+    }
+    out.extend(w.iter().map(|&v| {
+        let q = (v / scale).round();
+        if q.is_nan() {
+            0
+        } else {
+            q.clamp(-127.0, 127.0) as i8
+        }
+    }));
+}
+
+/// Dequantize one code: exact in f32 (both factors are representable).
+#[inline(always)]
+pub fn dequant(q: i8, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+/// Round-trip a transition through int8: the weights the `int8` kernel
+/// actually computes with (test/oracle helper).
+pub fn dequantized(w: &[f32]) -> Vec<f32> {
+    let scale = scale_for(amax(w));
+    let mut q = Vec::new();
+    quantize_into(w, scale, &mut q);
+    q.iter().map(|&qi| dequant(qi, scale)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_error_is_bounded_by_half_a_step() {
+        let w: Vec<f32> = (0..257).map(|i| ((i as f32) * 0.7).sin() * 3.0).collect();
+        let a = amax(&w);
+        let scale = scale_for(a);
+        let dq = dequantized(&w);
+        for (orig, got) in w.iter().zip(&dq) {
+            assert!(
+                (orig - got).abs() <= scale * 0.5 + 1e-7,
+                "{orig} → {got} (scale {scale})"
+            );
+        }
+    }
+
+    #[test]
+    fn extremes_hit_the_full_code_range() {
+        let w = [3.0f32, -3.0, 0.0];
+        let scale = scale_for(amax(&w));
+        let mut q = Vec::new();
+        quantize_into(&w, scale, &mut q);
+        assert_eq!(q, vec![127, -127, 0]);
+        assert!((dequant(q[0], scale) - 3.0).abs() <= 0.5 * scale);
+        assert!((dequant(q[1], scale) + 3.0).abs() <= 0.5 * scale);
+    }
+
+    #[test]
+    fn degenerate_transitions_quantize_to_zero() {
+        for w in [vec![0.0f32; 5], vec![f32::NAN; 5], Vec::new()] {
+            let scale = scale_for(amax(&w));
+            let mut q = Vec::new();
+            quantize_into(&w, scale, &mut q);
+            assert_eq!(q.len(), w.len());
+            assert!(q.iter().all(|&qi| qi == 0));
+            assert!(dequantized(&w).iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn quantize_into_reuses_capacity() {
+        let w = vec![1.0f32; 64];
+        let mut q = Vec::new();
+        quantize_into(&w, 0.5, &mut q);
+        let cap = q.capacity();
+        let ptr = q.as_ptr();
+        for _ in 0..3 {
+            quantize_into(&w, 0.5, &mut q);
+        }
+        assert_eq!(cap, q.capacity());
+        assert_eq!(ptr, q.as_ptr());
+    }
+}

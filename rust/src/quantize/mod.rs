@@ -10,6 +10,12 @@
 //!
 //! The sampler supports both a PRNG and — in the spirit of the paper —
 //! a low discrepancy sequence driving the inverse-CDF selection.
+//!
+//! The [`int8`] submodule carries the symmetric per-transition int8
+//! weight quantization behind the `int8` compute kernel
+//! ([`crate::nn::kernel`]).
+
+pub mod int8;
 
 use crate::nn::dense::Dense;
 use crate::nn::mlp::DenseMlp;
@@ -27,28 +33,49 @@ pub enum SampleDriver {
     Sobol,
 }
 
-/// Build the cumulative distribution of `|w|` for one output neuron row.
+/// Build the cumulative distribution of `|w|` for one output neuron
+/// row.  NaN magnitudes count as zero mass (a NaN entry must never
+/// poison the row, and `select` must never land on it).  An all-zero
+/// (degenerate) row gets the **uniform** CDF `(i+1)/n`, so `select`
+/// samples it uniformly from `u` instead of deterministically
+/// collapsing to one index.
 fn row_cdf(w: &[f32]) -> Vec<f32> {
     let mut cdf = Vec::with_capacity(w.len());
     let mut acc = 0.0f32;
     for &v in w {
-        acc += v.abs();
+        let a = v.abs();
+        acc += if a.is_nan() { 0.0 } else { a };
         cdf.push(acc);
     }
     if acc > 0.0 {
         for c in &mut cdf {
             *c /= acc;
         }
+    } else {
+        let n = cdf.len() as f32;
+        for (i, c) in cdf.iter_mut().enumerate() {
+            *c = (i + 1) as f32 / n;
+        }
     }
     cdf
 }
 
-/// Inverse-CDF selection: first index whose cdf ≥ u.
+/// Inverse-CDF selection: the first index whose cdf ≥ u **and** whose
+/// entry carries probability mass.
+///
+/// `partition_point` returns the *first* index reaching `u`; a
+/// zero-weight edge never strictly increases the CDF, so a duplicated
+/// cumulative value (e.g. `[0.5, 0.5, 1.0]` from weights
+/// `[2, 0, 2]`) can never be selected even when `u` lands exactly on
+/// the repeated value — unlike `binary_search_by`, which may return
+/// any of the equal entries (and whose `partial_cmp().unwrap()`
+/// panicked on NaN).  `u` is clamped strictly positive so `u = 0`
+/// (the first point of an unscrambled Sobol' sequence) cannot pick a
+/// leading zero-mass entry, and the result is clamped to the last
+/// index so `u ≥ cdf[n-1]` (round-off or NaN `u`) stays in range.
 fn select(cdf: &[f32], u: f32) -> usize {
-    match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
-        Ok(i) => i,
-        Err(i) => i.min(cdf.len() - 1),
-    }
+    let u = u.max(f32::MIN_POSITIVE);
+    cdf.partition_point(|&c| c < u).min(cdf.len().saturating_sub(1))
 }
 
 /// Quantize a trained [`DenseMlp`] by tracing `paths_per_output` paths
@@ -71,7 +98,13 @@ pub fn quantize_mlp(
         SampleDriver::Random(seed) => Some(Pcg32::seeded(seed)),
         SampleDriver::Sobol => None,
     };
-    let sobol = Sobol::new(net.layers.len().min(crate::qmc::sobol::MAX_DIMS));
+    // One Sobol' dimension per layer, capped at MAX_DIMS: nets deeper
+    // than MAX_DIMS wrap the dimension index (`li % dims` below),
+    // trading some cross-layer decorrelation for correctness — the
+    // uncapped `li` indexed past the driver's direction numbers and
+    // panicked on deep nets.
+    let dims = net.layers.len().min(crate::qmc::sobol::MAX_DIMS);
+    let sobol = Sobol::new(dims);
     let outputs = net.layers.last().unwrap().out_dim;
     let mut path_i = 0u64;
     for out in 0..outputs {
@@ -81,7 +114,7 @@ pub fn quantize_mlp(
             for (li, layer) in net.layers.iter().enumerate().rev() {
                 let u = match &mut rng {
                     Some(r) => r.next_f32(),
-                    None => sobol.component(path_i, li) as f32,
+                    None => sobol.component(path_i, li % dims) as f32,
                 };
                 let src = select(&cdfs[li][cur], u);
                 masks[li][cur * layer.in_dim + src] = 1.0;
@@ -156,9 +189,59 @@ mod tests {
     }
 
     #[test]
-    fn zero_row_cdf_is_safe() {
-        let cdf = row_cdf(&[0.0, 0.0]);
-        assert_eq!(select(&cdf, 0.5), 1.min(cdf.len() - 1));
+    fn zero_row_selects_uniformly() {
+        // degenerate all-zero row: uniform CDF, so `u` spreads the
+        // selection over every index instead of collapsing to the last
+        let cdf = row_cdf(&[0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(cdf, vec![0.25, 0.5, 0.75, 1.0]);
+        assert_eq!(select(&cdf, 0.1), 0);
+        assert_eq!(select(&cdf, 0.3), 1);
+        assert_eq!(select(&cdf, 0.6), 2);
+        assert_eq!(select(&cdf, 0.9), 3);
+        // boundaries stay in range
+        assert_eq!(select(&cdf, 0.0), 0);
+        assert_eq!(select(&cdf, 1.0), 3);
+    }
+
+    #[test]
+    fn duplicated_cdf_never_selects_zero_weight_edge() {
+        // interior zero-weight entry bracketed by equal cumulative
+        // values: [2, 0, 2] → cdf [0.5, 0.5, 1.0].  The old
+        // binary_search_by could return index 1 (a dead edge) when u
+        // landed exactly on the repeated 0.5.
+        let cdf = row_cdf(&[2.0, 0.0, 2.0]);
+        assert_eq!(cdf, vec![0.5, 0.5, 1.0]);
+        assert_eq!(select(&cdf, 0.5), 0, "u on the repeated value must take the live edge");
+        for k in 0..=64 {
+            let u = k as f32 / 64.0;
+            assert_ne!(select(&cdf, u), 1, "u={u} selected the zero-weight edge");
+        }
+    }
+
+    #[test]
+    fn nan_weights_are_ignored_not_fatal() {
+        // the old partial_cmp().unwrap() panicked here
+        let cdf = row_cdf(&[1.0, f32::NAN, 3.0]);
+        assert_eq!(cdf, vec![0.25, 0.25, 1.0]);
+        for k in 0..=64 {
+            let u = k as f32 / 64.0;
+            let i = select(&cdf, u);
+            assert!(i < 3);
+            assert_ne!(i, 1, "u={u} selected the NaN edge");
+        }
+        assert_eq!(select(&cdf, f32::NAN), 0, "NaN u stays in range");
+    }
+
+    #[test]
+    fn sobol_driver_survives_nets_deeper_than_max_dims() {
+        // regression: the Sobol' driver was built with
+        // min(layers, MAX_DIMS) dims but indexed by the raw layer
+        // index — out of bounds (panic) for > MAX_DIMS layers
+        let deep: Vec<usize> = vec![4; crate::qmc::sobol::MAX_DIMS + 5];
+        let net = DenseMlp::new(&deep, Init::UniformRandom, 13);
+        assert!(net.layers.len() > crate::qmc::sobol::MAX_DIMS);
+        let q = quantize_mlp(&net, 2, SampleDriver::Sobol);
+        assert!(kept_fraction(&q) > 0.0);
     }
 
     #[test]

@@ -12,6 +12,12 @@
 //! `MAX_ACTIVE_JOBS`).  A counting `#[global_allocator]` (all threads)
 //! pins this.
 //!
+//! The audit sweeps **every pluggable kernel**
+//! ([`sobolnet::nn::kernel::KernelKind::ALL`]): the derived weight
+//! representations the `sign`/`int8` kernels rebuild each pass
+//! ([`SparseKernel::prepare`]) must reuse their capacity-retaining
+//! buffers, so the zero-alloc contract holds under all four.
+//!
 //! This file deliberately contains a single test: any concurrent test
 //! in the same binary would allocate and pollute the global counter.
 
@@ -20,6 +26,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use sobolnet::nn::init::Init;
+use sobolnet::nn::kernel::KernelKind;
 use sobolnet::nn::loss::softmax_xent_into;
 use sobolnet::nn::optim::Sgd;
 use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
@@ -64,10 +71,6 @@ fn steady_state_train_step_does_not_allocate() {
         .paths(2048)
         .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
         .build();
-    let mut net = SparseMlp::new(
-        &topo,
-        SparseMlpConfig { init: Init::UniformRandom, seed: 11, bias: true, freeze_signs: false },
-    );
     set_num_threads(4);
     let batch = 64usize;
     let x = Tensor::from_vec(
@@ -76,8 +79,6 @@ fn steady_state_train_step_does_not_allocate() {
     );
     let labels: Vec<u32> = (0..batch as u32).map(|i| i % 10).collect();
     let opt = Sgd { lr: 0.01, momentum: 0.9, weight_decay: 1e-4 };
-    let mut logits = Tensor::empty();
-    let mut glogits = Tensor::empty();
 
     let step = |net: &mut SparseMlp, logits: &mut Tensor, glogits: &mut Tensor| {
         net.forward_into(&x, true, logits);
@@ -86,11 +87,6 @@ fn steady_state_train_step_does_not_allocate() {
         net.step(&opt);
         loss
     };
-
-    // warm-up: sizes every scratch buffer and spawns the pool threads
-    for _ in 0..3 {
-        step(&mut net, &mut logits, &mut glogits);
-    }
 
     // contender: a second dispatcher hammering the multi-job pool with
     // its own (pre-warmed, allocation-free) jobs for the whole
@@ -124,21 +120,44 @@ fn steady_state_train_step_does_not_allocate() {
         std::thread::yield_now();
     }
 
-    let before = ALLOCATIONS.load(Ordering::SeqCst);
-    let mut loss_sink = 0.0f32;
-    for _ in 0..5 {
-        loss_sink += step(&mut net, &mut logits, &mut glogits);
+    // sweep every kernel under the same contended regime: a fresh
+    // freeze_signs net per kernel (so `sign` runs its real gated
+    // add/sub path), warmed outside the measured window
+    for kind in KernelKind::ALL {
+        let mut net = SparseMlp::new(
+            &topo,
+            SparseMlpConfig {
+                init: Init::UniformRandom,
+                seed: 11,
+                freeze_signs: true,
+                kernel: kind,
+                ..Default::default()
+            },
+        );
+        let mut logits = Tensor::empty();
+        let mut glogits = Tensor::empty();
+        // warm-up: sizes every scratch buffer (incl. the kernel's
+        // derived weight representations) and spawns the pool threads
+        for _ in 0..3 {
+            step(&mut net, &mut logits, &mut glogits);
+        }
+        let before = ALLOCATIONS.load(Ordering::SeqCst);
+        let mut loss_sink = 0.0f32;
+        for _ in 0..5 {
+            loss_sink += step(&mut net, &mut logits, &mut glogits);
+        }
+        let after = ALLOCATIONS.load(Ordering::SeqCst);
+        assert!(loss_sink.is_finite());
+        assert_eq!(
+            after - before,
+            0,
+            "kernel={}: steady-state train step allocated {} time(s) in 5 contended steps",
+            kind.as_str(),
+            after - before
+        );
     }
-    let after = ALLOCATIONS.load(Ordering::SeqCst);
-    // stop the contender only after the post-window snapshot (its own
+    // stop the contender only after the post-window snapshots (its own
     // shutdown/join machinery may allocate, and that's fine)
     stop.store(true, Ordering::Release);
     contender.join().expect("contender thread");
-    assert!(loss_sink.is_finite());
-    assert_eq!(
-        after - before,
-        0,
-        "steady-state train step allocated {} time(s) in 5 contended steps",
-        after - before
-    );
 }

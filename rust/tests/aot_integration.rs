@@ -102,7 +102,7 @@ fn forward_artifact_matches_rust_engine() {
             init: Init::ConstantRandomSign,
             seed: 42,
             bias: false,
-            freeze_signs: false,
+            ..Default::default()
         },
     );
     let p = topo.paths;

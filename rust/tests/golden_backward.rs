@@ -57,7 +57,12 @@ fn net_from_fixture() -> (SparseMlp, Vec<Vec<f32>>) {
     };
     let mut net = SparseMlp::new(
         &topo,
-        SparseMlpConfig { init: Init::ConstantPositive, seed: 0, bias: false, freeze_signs: false },
+        SparseMlpConfig {
+            init: Init::ConstantPositive,
+            seed: 0,
+            bias: false,
+            ..Default::default()
+        },
     );
     let weights = nested(fx.get("weights").unwrap(), f32s);
     assert_eq!(weights.len(), net.w.len());

@@ -53,7 +53,12 @@ fn net_from_fixture(fx: &JsonValue) -> (SparseMlp, Vec<Vec<f32>>, Vec<Vec<f32>>)
     // bias disabled: the jnp oracle models the bias-free Fig 3 network
     let mut net = SparseMlp::new(
         &topo,
-        SparseMlpConfig { init: Init::ConstantPositive, seed: 0, bias: false, freeze_signs: false },
+        SparseMlpConfig {
+            init: Init::ConstantPositive,
+            seed: 0,
+            bias: false,
+            ..Default::default()
+        },
     );
     let weights = nested(fx.get("weights").unwrap(), f32s);
     assert_eq!(weights.len(), net.w.len());
@@ -116,7 +121,7 @@ fn forward_is_bitwise_invariant_to_thread_count_on_parallel_path() {
         .build();
     let mut net = SparseMlp::new(
         &topo,
-        SparseMlpConfig { init: Init::UniformRandom, seed: 9, bias: true, freeze_signs: false },
+        SparseMlpConfig { init: Init::UniformRandom, seed: 9, ..Default::default() },
     );
     let batch = 64;
     let x = Tensor::from_vec(

@@ -1,0 +1,379 @@
+//! Golden-equivalence tests for every pluggable hot-path kernel
+//! (`sobolnet::nn::kernel`): the scalar kernel is the bitwise-golden
+//! reference (the pre-refactor loops, extracted verbatim, already
+//! pinned against the jnp oracle by `golden_forward.rs` /
+//! `golden_backward.rs`), and each alternative kernel must reproduce
+//! it within its stated tolerance —
+//!
+//! * `simd` — ≤ 1e-6 relative (argued bitwise in its module docs: no
+//!   FMA, in-order lane reduction, mask-gating);
+//! * `sign` — **bitwise**, on nets with frozen signs (exact IEEE-754
+//!   negation distribution: `(-m)·r = -(m·r)`, `acc -= t ≡ acc += -t`);
+//! * `int8` — **bitwise** against scalar running on the round-tripped
+//!   weights (`quantize::int8::dequantized` — dequantization is exact
+//!   in f32), and within quantization tolerance of the full-precision
+//!   net.
+//!
+//! Every kernel must also keep the engine's bitwise
+//! thread-invariance contract across `SOBOLNET_THREADS` ∈ {1, 2, 4, 8},
+//! and kernel selection must flow through `EngineBuilder` into the
+//! worker replicas.
+
+use sobolnet::config::json::{self, JsonValue};
+use sobolnet::engine::{EngineBuilder, Response};
+use sobolnet::nn::init::Init;
+use sobolnet::nn::kernel::KernelKind;
+use sobolnet::nn::optim::Sgd;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::quantize::int8;
+use sobolnet::topology::{PathSource, PathTopology, SignPolicy, TopologyBuilder};
+use sobolnet::util::parallel::set_num_threads;
+
+const FIXTURE: &str = include_str!("fixtures/sparse_forward_golden.json");
+
+/// Tests sweep the process-global thread count; serialize them so none
+/// observes another's setting mid-sweep.
+static THREADS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn usizes(v: &JsonValue) -> Vec<usize> {
+    v.as_array().expect("array").iter().map(|x| x.as_usize().expect("usize")).collect()
+}
+
+fn f32s(v: &JsonValue) -> Vec<f32> {
+    v.as_array().expect("array").iter().map(|x| x.as_f64().expect("f64") as f32).collect()
+}
+
+fn nested<T, F: Fn(&JsonValue) -> Vec<T>>(v: &JsonValue, inner: F) -> Vec<Vec<T>> {
+    v.as_array().expect("array").iter().map(inner).collect()
+}
+
+/// Fixture network (bias-free, Fig 3) plus its input rows.
+fn net_from_fixture() -> (SparseMlp, Vec<Vec<f32>>) {
+    let fx = json::parse(FIXTURE).expect("fixture parses");
+    let layer_sizes = usizes(fx.get("layer_sizes").unwrap());
+    let paths = fx.get("paths").unwrap().as_usize().unwrap();
+    let index: Vec<Vec<u32>> = nested(fx.get("index").unwrap(), |l| {
+        usizes(l).into_iter().map(|v| v as u32).collect()
+    });
+    let topo = PathTopology {
+        layer_sizes,
+        paths,
+        index,
+        signs: None,
+        source: PathSource::Random { seed: 0 },
+        dims_used: None,
+    };
+    let mut net = SparseMlp::new(
+        &topo,
+        SparseMlpConfig {
+            init: Init::ConstantPositive,
+            seed: 0,
+            bias: false,
+            ..Default::default()
+        },
+    );
+    let weights = nested(fx.get("weights").unwrap(), f32s);
+    assert_eq!(weights.len(), net.w.len());
+    for (t, wt) in weights.iter().enumerate() {
+        net.w[t].copy_from_slice(wt);
+    }
+    let inputs = nested(fx.get("inputs").unwrap(), f32s);
+    (net, inputs)
+}
+
+/// Tile the fixture rows `copies`× so the batch clears the engine's
+/// parallel-work threshold and spans many fixed-width backward shards.
+fn tiled_batch(inputs: &[Vec<f32>], copies: usize) -> (Tensor, usize) {
+    let base = inputs.len();
+    let features = inputs[0].len();
+    let batch = base * copies;
+    let mut flat: Vec<f32> = Vec::with_capacity(batch * features);
+    for _ in 0..copies {
+        flat.extend(inputs.iter().flatten().copied());
+    }
+    (Tensor::from_vec(flat, &[batch, features]), batch)
+}
+
+/// Deterministic, small loss gradient.
+fn make_glogits(batch: usize, classes: usize) -> Tensor {
+    Tensor::from_vec(
+        (0..batch * classes).map(|i| 0.01 * ((i as f32) * 0.37).sin()).collect(),
+        &[batch, classes],
+    )
+}
+
+/// Give the fixture net frozen signs derived from its loaded weights
+/// (so `KernelKind::Sign` runs instead of downgrading).
+fn freeze_fixture_signs(net: &mut SparseMlp) {
+    net.fixed_signs =
+        Some(net.w.iter().map(|wt| wt.iter().map(|v| v.signum()).collect()).collect());
+}
+
+/// Run forward(train)+backward on a fresh fixture net under `kind` at
+/// the given thread count; return `(logits, gw, input_grad)`.
+fn run_fixture(
+    kind: KernelKind,
+    threads: usize,
+    x: &Tensor,
+    glogits: &Tensor,
+) -> (Vec<f32>, Vec<Vec<f32>>, Vec<f32>) {
+    set_num_threads(threads);
+    let (mut net, _) = net_from_fixture();
+    if kind == KernelKind::Sign {
+        freeze_fixture_signs(&mut net);
+    }
+    assert!(net.set_kernel(kind), "SparseMlp supports pluggable kernels");
+    let logits = net.forward(x, true);
+    net.backward(glogits);
+    (
+        logits.data.clone(),
+        net.weight_grads().to_vec(),
+        net.input_grad().expect("input grad after backward").to_vec(),
+    )
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+fn bits2(v: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    v.iter().map(|row| bits(row)).collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() <= tol * (1.0 + w.abs()), "{what}[{i}]: {g} vs {w} (tol {tol})");
+    }
+}
+
+/// Every kernel preserves the engine's determinism contract: logits,
+/// weight gradients, and the propagated input gradient are bitwise
+/// identical for every thread count.
+#[test]
+fn every_kernel_is_bitwise_invariant_across_thread_counts() {
+    let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ambient = sobolnet::util::parallel::num_threads();
+    let (net, inputs) = net_from_fixture();
+    let classes = *net.topo.layer_sizes.last().unwrap();
+    drop(net);
+    // 32 copies of the 5 fixture rows: batch 160 = 20 shards of 8
+    // columns; 48 paths × 160 × 3 transitions clears PAR_MIN_WORK
+    let (x, batch) = tiled_batch(&inputs, 32);
+    let glogits = make_glogits(batch, classes);
+
+    for kind in KernelKind::ALL {
+        let (l1, gw1, gz1) = run_fixture(kind, 1, &x, &glogits);
+        for threads in [2usize, 4, 8] {
+            let (l, gw, gz) = run_fixture(kind, threads, &x, &glogits);
+            let k = kind.as_str();
+            assert_eq!(bits(&l), bits(&l1), "kernel={k} threads={threads}: logits");
+            assert_eq!(bits2(&gw), bits2(&gw1), "kernel={k} threads={threads}: gw");
+            assert_eq!(bits(&gz), bits(&gz1), "kernel={k} threads={threads}: gz");
+        }
+    }
+    set_num_threads(ambient);
+}
+
+/// The SIMD kernel reproduces the scalar golden reference to ≤ 1e-6
+/// relative on logits, weight gradients, and the input gradient (by
+/// the no-FMA/in-order-reduction argument it should be bitwise; the
+/// test pins the stated tolerance).
+#[test]
+fn simd_matches_the_scalar_golden() {
+    let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ambient = sobolnet::util::parallel::num_threads();
+    let (net, inputs) = net_from_fixture();
+    let classes = *net.topo.layer_sizes.last().unwrap();
+    drop(net);
+    let (x, batch) = tiled_batch(&inputs, 32);
+    let glogits = make_glogits(batch, classes);
+
+    let (ls, gws, gzs) = run_fixture(KernelKind::Scalar, 1, &x, &glogits);
+    for threads in [1usize, 8] {
+        let (l, gw, gz) = run_fixture(KernelKind::Simd, threads, &x, &glogits);
+        assert_close(&l, &ls, 1e-6, &format!("simd threads={threads} logits"));
+        for (t, (got_t, want_t)) in gw.iter().zip(&gws).enumerate() {
+            assert_close(got_t, want_t, 1e-6, &format!("simd threads={threads} gw[{t}]"));
+        }
+        assert_close(&gz, &gzs, 1e-6, &format!("simd threads={threads} gz"));
+    }
+    set_num_threads(ambient);
+}
+
+/// On a net with frozen signs the sign-only kernel is **bitwise**
+/// equal to scalar: `(-m)·r = -(m·r)` exactly in IEEE-754, and
+/// `acc -= t` is `acc += (-t)`.
+#[test]
+fn sign_kernel_is_bitwise_equal_to_scalar_on_frozen_sign_nets() {
+    let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ambient = sobolnet::util::parallel::num_threads();
+    let (net, inputs) = net_from_fixture();
+    let classes = *net.topo.layer_sizes.last().unwrap();
+    drop(net);
+    let (x, batch) = tiled_batch(&inputs, 32);
+    let glogits = make_glogits(batch, classes);
+
+    let (ls, gws, gzs) = run_fixture(KernelKind::Scalar, 1, &x, &glogits);
+    for threads in [1usize, 8] {
+        let (l, gw, gz) = run_fixture(KernelKind::Sign, threads, &x, &glogits);
+        assert_eq!(bits(&l), bits(&ls), "sign threads={threads}: logits");
+        assert_eq!(bits2(&gw), bits2(&gws), "sign threads={threads}: gw");
+        assert_eq!(bits(&gz), bits(&gzs), "sign threads={threads}: gz");
+    }
+    set_num_threads(ambient);
+}
+
+/// `ConstantSignAlongPath` + `freeze_signs` net with a real sign
+/// topology (the sign kernel's home turf, exercising its uniform-
+/// magnitude tier at init and the per-path magnitude tier after an
+/// optimizer step diversifies `|w|`).
+fn sign_path_net(kind: KernelKind) -> SparseMlp {
+    let topo = TopologyBuilder::new(&[8, 16, 16, 4])
+        .paths(64)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(1174) })
+        .sign_policy(SignPolicy::FirstHalfPositive)
+        .build();
+    SparseMlp::new(
+        &topo,
+        SparseMlpConfig {
+            init: Init::ConstantSignAlongPath,
+            seed: 3,
+            bias: true,
+            freeze_signs: true,
+            kernel: kind,
+        },
+    )
+}
+
+/// Sign vs scalar on a `ConstantSignAlongPath` net, bitwise through a
+/// train step: pass 1 runs the uniform-magnitude tier (every `|w|`
+/// shares one bit pattern at init), the optimizer step diversifies the
+/// magnitudes, and pass 2 runs the materialized per-path tier.
+#[test]
+fn sign_kernel_uniform_and_diversified_tiers_match_scalar_bitwise() {
+    let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ambient = sobolnet::util::parallel::num_threads();
+    set_num_threads(4);
+    // batch 128: 64 paths × 128 × 3 transitions clears PAR_MIN_WORK
+    let batch = 128usize;
+    let x = Tensor::from_vec(
+        (0..batch * 8).map(|i| ((i as f32) * 0.31).sin()).collect(),
+        &[batch, 8],
+    );
+    let glogits = make_glogits(batch, 4);
+    let opt = Sgd { lr: 0.05, momentum: 0.0, weight_decay: 0.0 };
+
+    let mut scalar = sign_path_net(KernelKind::Scalar);
+    let mut sign = sign_path_net(KernelKind::Sign);
+    assert_eq!(bits2(&scalar.w), bits2(&sign.w), "identical init weights");
+    for pass in 0..2 {
+        let ls = scalar.forward(&x, true);
+        let lg = sign.forward(&x, true);
+        assert_eq!(bits(&ls.data), bits(&lg.data), "pass {pass}: logits");
+        scalar.backward(&glogits);
+        sign.backward(&glogits);
+        assert_eq!(bits2(scalar.weight_grads()), bits2(sign.weight_grads()), "pass {pass}: gw");
+        scalar.step(&opt);
+        sign.step(&opt);
+        assert_eq!(bits2(&scalar.w), bits2(&sign.w), "pass {pass}: stepped weights");
+    }
+    set_num_threads(ambient);
+}
+
+/// The int8 kernel is bitwise equal to the scalar kernel running on
+/// the int8 round-tripped weights — dequantization (`q as f32 ·
+/// scale`) is exact in f32, so the two compute literally the same
+/// floating-point program.
+#[test]
+fn int8_is_bitwise_equal_to_scalar_on_dequantized_weights() {
+    let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ambient = sobolnet::util::parallel::num_threads();
+    set_num_threads(4);
+    let (mut qnet, inputs) = net_from_fixture();
+    qnet.set_kernel(KernelKind::Int8);
+    let (mut ref_net, _) = net_from_fixture();
+    for (rw, qw) in ref_net.w.iter_mut().zip(&qnet.w) {
+        *rw = int8::dequantized(qw);
+    }
+    ref_net.set_kernel(KernelKind::Scalar);
+    let classes = *qnet.topo.layer_sizes.last().unwrap();
+    let (x, batch) = tiled_batch(&inputs, 32);
+    let glogits = make_glogits(batch, classes);
+
+    let lq = qnet.forward(&x, true);
+    let lr = ref_net.forward(&x, true);
+    assert_eq!(bits(&lq.data), bits(&lr.data), "logits");
+    qnet.backward(&glogits);
+    ref_net.backward(&glogits);
+    assert_eq!(bits2(qnet.weight_grads()), bits2(ref_net.weight_grads()), "gw");
+    assert_eq!(
+        bits(qnet.input_grad().expect("input grad")),
+        bits(ref_net.input_grad().expect("input grad")),
+        "gz"
+    );
+    set_num_threads(ambient);
+}
+
+/// The int8 kernel stays within quantization tolerance of the
+/// full-precision scalar reference: the per-weight error is ≤ half a
+/// quantization step (`amax/254`), pinned here as ≤ 5% relative error
+/// on the logit vector norm (the exactness claim lives in the
+/// dequantized-weights bitwise test above; this one bounds the
+/// end-to-end deviation incl. cancellation and ReLU gate flips).
+#[test]
+fn int8_stays_within_quantization_tolerance_of_full_precision() {
+    let _guard = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ambient = sobolnet::util::parallel::num_threads();
+    let (net, inputs) = net_from_fixture();
+    let classes = *net.topo.layer_sizes.last().unwrap();
+    drop(net);
+    let (x, batch) = tiled_batch(&inputs, 32);
+    let glogits = make_glogits(batch, classes);
+
+    let (ls, _, _) = run_fixture(KernelKind::Scalar, 1, &x, &glogits);
+    let (lq, _, _) = run_fixture(KernelKind::Int8, 1, &x, &glogits);
+    let ref_norm = ls.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    let diff_norm = ls
+        .iter()
+        .zip(&lq)
+        .map(|(a, b)| ((a - b) as f64) * ((a - b) as f64))
+        .sum::<f64>()
+        .sqrt();
+    assert!(ref_norm > 0.0, "degenerate fixture logits");
+    assert!(
+        diff_norm <= 0.05 * ref_norm,
+        "int8 logits deviate {:.4}% in norm from full precision",
+        100.0 * diff_norm / ref_norm
+    );
+    set_num_threads(ambient);
+}
+
+/// Kernel selection flows through `EngineBuilder::kernel` into the
+/// worker replicas: an engine built with the int8 kernel answers with
+/// the int8 logits, bit for bit.
+#[test]
+fn engine_builder_kernel_selection_reaches_the_workers() {
+    let (net, inputs) = net_from_fixture();
+    let features = net.topo.layer_sizes[0];
+    let classes = *net.topo.layer_sizes.last().unwrap();
+    let engine = EngineBuilder::new()
+        .workers(1)
+        .batch(1)
+        .kernel(KernelKind::Int8)
+        .build_model(net, features, classes);
+
+    let (mut local, _) = net_from_fixture();
+    local.set_kernel(KernelKind::Int8);
+    for row in &inputs {
+        let want = local.forward(&Tensor::from_vec(row.clone(), &[1, features]), false);
+        match engine.infer(row.clone()) {
+            Response::Logits(got) => {
+                assert_eq!(bits(&got), bits(&want.data), "engine logits diverge from int8 local");
+            }
+            Response::Rejected(r) => panic!("unexpected rejection: {r}"),
+        }
+    }
+}

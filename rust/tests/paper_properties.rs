@@ -3,7 +3,8 @@
 //! seeded generator drives many cases per property and shrink-free
 //! assertion messages carry the configuration).
 
-use sobolnet::nn::init::Init;
+use sobolnet::nn::init::{w_init_magnitude, Init};
+use sobolnet::nn::kernel::KernelKind;
 use sobolnet::nn::loss::softmax_xent;
 use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
 use sobolnet::nn::tensor::Tensor;
@@ -97,7 +98,7 @@ fn prop_batch_gradient_additivity() {
             init: Init::UniformRandom,
             seed: rng.next_u64(),
             bias: false,
-            freeze_signs: false,
+            ..Default::default()
         };
         let b = 4usize;
         let xs: Vec<f32> = (0..b * 6).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
@@ -310,6 +311,74 @@ fn prop_growth_preserves_prefix() {
                 &b.index[l][..small],
                 "case {case} source={source:?} layer {l}"
             );
+        }
+    }
+}
+
+/// Property (§3.2 fixed-sign training): a `ConstantSignAlongPath` net
+/// with frozen signs starts at exactly `w[t][p] = mag(t) · sign[p]`
+/// (bit for bit, with `mag(t)` recomputed from the transition's
+/// average valence), and training under the sign-only kernel never
+/// flips a sign — weights stay on their side of zero (crossings clamp
+/// to exactly 0.0), which is the representation invariant the sign
+/// kernel's magnitude/sign-bit split relies on.
+#[test]
+fn prop_fixed_sign_invariant_under_sign_kernel() {
+    let mut rng = Pcg32::seeded(0x516E);
+    for case in 0..4 {
+        let width = 8usize << rng.next_below(2); // 8 or 16
+        let paths = 32 << rng.next_below(3) as usize; // 32..128
+        let sizes = [8usize, width, width, 4];
+        let topo = TopologyBuilder::new(&sizes)
+            .paths(paths)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(rng.next_u64()) })
+            .sign_policy(SignPolicy::FirstHalfPositive)
+            .build();
+        let signs = topo.signs.clone().expect("sign policy populates per-path signs");
+        let mut net = SparseMlp::new(
+            &topo,
+            SparseMlpConfig {
+                init: Init::ConstantSignAlongPath,
+                seed: rng.next_u64(),
+                bias: true,
+                freeze_signs: true,
+                kernel: KernelKind::Sign,
+            },
+        );
+
+        // exact init: w[t][p] == mag(t) · sign[p], bit for bit
+        for (t, wt) in net.w.iter().enumerate() {
+            let fan_in = (paths as f32 / sizes[t + 1] as f32).max(1.0) as usize;
+            let fan_out = (paths as f32 / sizes[t] as f32).max(1.0) as usize;
+            let mag = w_init_magnitude(fan_in, fan_out);
+            for (p, (wv, s)) in wt.iter().zip(&signs).enumerate() {
+                let want = mag * s.signum();
+                assert_eq!(
+                    wv.to_bits(),
+                    want.to_bits(),
+                    "case {case} t={t} p={p}: init {wv} vs mag·sign {want}"
+                );
+            }
+        }
+
+        // training under the sign kernel never flips a sign
+        let batch = 32usize;
+        let opt = sobolnet::nn::optim::Sgd { lr: 0.1, momentum: 0.9, weight_decay: 1e-4 };
+        for step in 0..30 {
+            let xs: Vec<f32> = (0..batch * 8).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let ys: Vec<u32> = (0..batch).map(|_| rng.next_below(4)).collect();
+            let logits = net.forward(&Tensor::from_vec(xs, &[batch, 8]), true);
+            let (_, g) = softmax_xent(&logits, &ys);
+            net.backward(&g);
+            net.step(&opt);
+            for (t, wt) in net.w.iter().enumerate() {
+                for (p, (wv, s)) in wt.iter().zip(&signs).enumerate() {
+                    assert!(
+                        wv * s.signum() >= 0.0,
+                        "case {case} step {step} t={t} p={p}: sign flipped ({wv} vs sign {s})"
+                    );
+                }
+            }
         }
     }
 }

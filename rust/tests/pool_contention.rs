@@ -221,7 +221,7 @@ fn make_net() -> SparseMlp {
         .build();
     let mut net = SparseMlp::new(
         &topo,
-        SparseMlpConfig { init: Init::UniformRandom, seed: 42, bias: true, freeze_signs: false },
+        SparseMlpConfig { init: Init::UniformRandom, seed: 42, ..Default::default() },
     );
     // non-trivial biases so padding bugs would show
     for bl in net.bias.iter_mut() {
