@@ -15,8 +15,12 @@
 //! ([`sobolnet::bench::BenchReport`] metrics): per worker count the
 //! achieved throughput and merged p50/p99 for `inproc` and `remote`,
 //! plus the remote worker-process-side percentiles folded from stats
-//! frames.  Pass `--quick` (CI smoke mode) for a low-request run with
-//! the same coverage.
+//! frames.  A final **chaos sweep** measures availability under
+//! failure: 2 replica groups × 2 replicas with one replica hard-killed
+//! mid-burst — every ticket must still resolve with logits (sibling
+//! failover), and the `remote_chaos_*` metrics capture what the kill
+//! cost in throughput and tail latency.  Pass `--quick` (CI smoke
+//! mode) for a low-request run with the same coverage.
 
 use sobolnet::bench::BenchReport;
 use sobolnet::engine::{
@@ -154,6 +158,65 @@ fn main() {
             &format!("remote_proc_{w}w_transport_tax"),
             b.p50 / a.p50.max(1e-12),
         );
+    }
+
+    // chaos sweep: 2 groups × 2 replicas, replica 1 (second member of
+    // group 0) hard-killed right after the burst is submitted.  Block
+    // admission + sibling failover mean every ticket must still
+    // resolve with logits; the metrics price the kill.
+    {
+        let nc = if quick { 96 } else { 256 };
+        let spec = SpawnSpec {
+            program: std::path::PathBuf::from(env!("CARGO_BIN_EXE_sobolnet")),
+            shard_args: shard_args.clone(),
+            ..Default::default()
+        };
+        let mut shards =
+            sobolnet::engine::remote::spawn_shards(4, &spec).expect("spawn 2x2 replica workers");
+        let addrs = shards.addrs().to_vec();
+        let engine = EngineBuilder::new()
+            .max_wait(Duration::from_millis(1))
+            .dispatch(DispatchKind::RoundRobin)
+            .replicas(2)
+            .remote_options(RemoteOptions {
+                stats_every: 0,
+                retry_backoff: Duration::from_millis(10),
+                probe_interval: Duration::from_millis(50),
+                ..Default::default()
+            })
+            .remote(&addrs)
+            .build_remote()
+            .expect("build 2x2 replica-group engine");
+        let t = Timer::start();
+        let tickets: Vec<_> =
+            (0..nc).map(|i| engine.try_submit(sample(i)).expect("block admission")).collect();
+        assert!(shards.kill(1), "hard-kill one replica mid-burst");
+        let mut served = 0usize;
+        for ticket in tickets {
+            if matches!(ticket.wait(), Response::Logits(_)) {
+                served += 1;
+            }
+        }
+        let secs = t.elapsed_secs();
+        assert_eq!(served, nc, "a group with a live replica serves every ticket");
+        let (p50, _, p99) = engine.latency_percentiles();
+        let h = engine.health_counters();
+        let throughput = served as f64 / secs.max(1e-12);
+        println!(
+            "bench remote/chaos 2x2: {throughput:.0} req/s under a mid-burst replica kill \
+             (p50 {:.3}ms p99 {:.3}ms, failovers={} hedges={} marks_down={})",
+            p50 * 1e3,
+            p99 * 1e3,
+            h.failovers,
+            h.hedges,
+            h.marks_down,
+        );
+        report.metric("remote_chaos_2x2_req_per_sec", throughput);
+        report.metric("remote_chaos_2x2_p50_ms", p50 * 1e3);
+        report.metric("remote_chaos_2x2_p99_ms", p99 * 1e3);
+        report.metric("remote_chaos_2x2_failovers", h.failovers as f64);
+        report.metric("remote_chaos_2x2_hedges", h.hedges as f64);
+        engine.shutdown();
     }
 
     // machine-readable output, tracked across PRs

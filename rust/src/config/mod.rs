@@ -26,11 +26,36 @@ pub struct RemoteSection {
     /// Poll each worker's stats frame every N batches (`0` = only the
     /// final poll at shutdown).
     pub stats_every: u64,
+    /// Budget in milliseconds for the initial connect + `Hello`
+    /// handshake per shard (covers spawned-worker startup).
+    pub connect_timeout_ms: u64,
+    /// Reconnect attempts per failed exchange before a shard is
+    /// declared dead.
+    pub retry_attempts: u32,
+    /// Base reconnect backoff in milliseconds; doubles per attempt,
+    /// capped at [`crate::engine::remote::client::BACKOFF_CAP`].
+    pub retry_backoff_ms: u64,
+    /// Hedge deadline floor in milliseconds: an exchange not answered
+    /// within `max(hedge_after, 2 × recent p99)` re-fires at a sibling
+    /// replica (`0` = hedging off; needs `serve.replicas` ≥ 2 to have
+    /// a sibling).
+    pub hedge_after_ms: u64,
+    /// Health-prober cadence in milliseconds (`0` = no prober).
+    pub probe_interval_ms: u64,
 }
 
 impl Default for RemoteSection {
     fn default() -> Self {
-        RemoteSection { addrs: Vec::new(), spawn: 0, stats_every: 8 }
+        RemoteSection {
+            addrs: Vec::new(),
+            spawn: 0,
+            stats_every: 8,
+            connect_timeout_ms: 30_000,
+            retry_attempts: 3,
+            retry_backoff_ms: 50,
+            hedge_after_ms: 0,
+            probe_interval_ms: 250,
+        }
     }
 }
 
@@ -57,6 +82,26 @@ impl RemoteSection {
                 "stats_every" => {
                     cfg.stats_every = val.as_usize().ok_or("serve.remote.stats_every int")? as u64
                 }
+                "connect_timeout_ms" => {
+                    cfg.connect_timeout_ms =
+                        val.as_usize().ok_or("serve.remote.connect_timeout_ms int")? as u64
+                }
+                "retry_attempts" => {
+                    cfg.retry_attempts =
+                        val.as_usize().ok_or("serve.remote.retry_attempts int")? as u32
+                }
+                "retry_backoff_ms" => {
+                    cfg.retry_backoff_ms =
+                        val.as_usize().ok_or("serve.remote.retry_backoff_ms int")? as u64
+                }
+                "hedge_after_ms" => {
+                    cfg.hedge_after_ms =
+                        val.as_usize().ok_or("serve.remote.hedge_after_ms int")? as u64
+                }
+                "probe_interval_ms" => {
+                    cfg.probe_interval_ms =
+                        val.as_usize().ok_or("serve.remote.probe_interval_ms int")? as u64
+                }
                 "comment" | "description" => {}
                 other => return Err(format!("unknown serve.remote key '{other}'")),
             }
@@ -74,6 +119,20 @@ impl RemoteSection {
         );
         m.insert("spawn".to_string(), JsonValue::Number(self.spawn as f64));
         m.insert("stats_every".to_string(), JsonValue::Number(self.stats_every as f64));
+        m.insert(
+            "connect_timeout_ms".to_string(),
+            JsonValue::Number(self.connect_timeout_ms as f64),
+        );
+        m.insert("retry_attempts".to_string(), JsonValue::Number(self.retry_attempts as f64));
+        m.insert(
+            "retry_backoff_ms".to_string(),
+            JsonValue::Number(self.retry_backoff_ms as f64),
+        );
+        m.insert("hedge_after_ms".to_string(), JsonValue::Number(self.hedge_after_ms as f64));
+        m.insert(
+            "probe_interval_ms".to_string(),
+            JsonValue::Number(self.probe_interval_ms as f64),
+        );
         JsonValue::Object(m)
     }
 }
@@ -98,6 +157,9 @@ pub struct ServeSection {
     /// Compute kernel: "auto", "scalar", "simd", "sign", "int8"
     /// ([`crate::nn::kernel`]).
     pub kernel: KernelKind,
+    /// Replicas per remote shard group (`1` = no replication; the
+    /// spawned/required worker count is `workers × replicas`).
+    pub replicas: usize,
     /// Multi-process subsection (`"remote": {...}`).
     pub remote: RemoteSection,
 }
@@ -112,6 +174,7 @@ impl Default for ServeSection {
             dispatch: DispatchKind::LeastLoaded,
             admission: AdmissionPolicy::Block,
             kernel: KernelKind::Auto,
+            replicas: 1,
             remote: RemoteSection::default(),
         }
     }
@@ -147,6 +210,7 @@ impl ServeSection {
                     cfg.kernel = KernelKind::parse(s)
                         .ok_or_else(|| format!("unknown serve.kernel '{s}'"))?;
                 }
+                "replicas" => cfg.replicas = val.as_usize().ok_or("serve.replicas int")?,
                 "remote" => cfg.remote = RemoteSection::from_json(val)?,
                 "comment" | "description" => {}
                 other => return Err(format!("unknown serve key '{other}'")),
@@ -172,6 +236,7 @@ impl ServeSection {
             JsonValue::String(self.admission.as_str().to_string()),
         );
         m.insert("kernel".to_string(), JsonValue::String(self.kernel.as_str().to_string()));
+        m.insert("replicas".to_string(), JsonValue::Number(self.replicas as f64));
         m.insert("remote".to_string(), self.remote.to_json());
         JsonValue::Object(m)
     }
@@ -405,6 +470,7 @@ mod tests {
             dispatch: DispatchKind::RoundRobin,
             admission: AdmissionPolicy::ShedOldest,
             kernel: KernelKind::Simd,
+            replicas: 2,
             remote: RemoteSection::default(),
         };
         let text = section.to_json().to_string_compact();
@@ -445,8 +511,22 @@ mod tests {
         );
         assert_eq!(cfg.serve.remote.spawn, 0);
         assert_eq!(cfg.serve.remote.stats_every, 4);
+        // unset transport knobs fall back to defaults
+        assert_eq!(cfg.serve.remote.connect_timeout_ms, 30_000);
+        assert_eq!(cfg.serve.remote.retry_attempts, 3);
+        assert_eq!(cfg.serve.remote.hedge_after_ms, 0, "hedging defaults to off");
+        assert_eq!(cfg.serve.replicas, 1);
         // serializer round-trips, with and without defaults
-        let sec = RemoteSection { addrs: vec!["unix:/x.sock".into()], spawn: 3, stats_every: 1 };
+        let sec = RemoteSection {
+            addrs: vec!["unix:/x.sock".into()],
+            spawn: 3,
+            stats_every: 1,
+            connect_timeout_ms: 5_000,
+            retry_attempts: 2,
+            retry_backoff_ms: 25,
+            hedge_after_ms: 40,
+            probe_interval_ms: 100,
+        };
         let back =
             RemoteSection::from_json(&json::parse(&sec.to_json().to_string_compact()).unwrap())
                 .unwrap();
@@ -456,6 +536,12 @@ mod tests {
             ServeSection::from_json(&json::parse(&dflt.to_json().to_string_compact()).unwrap())
                 .unwrap();
         assert_eq!(back, dflt, "serve section with remote subsection round-trips");
+        // fault-tolerance knobs parse from the serve section
+        let text = r#"{"replicas": 2, "remote": {"hedge_after_ms": 30, "probe_interval_ms": 0}}"#;
+        let sec = ServeSection::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(sec.replicas, 2);
+        assert_eq!(sec.remote.hedge_after_ms, 30);
+        assert_eq!(sec.remote.probe_interval_ms, 0, "prober can be configured off");
         // malformed remote sections are typed errors
         assert!(RemoteSection::from_json(&json::parse(r#"{"bogus": 1}"#).unwrap()).is_err());
         assert!(RemoteSection::from_json(&json::parse(r#"{"addrs": [1]}"#).unwrap()).is_err());

@@ -17,6 +17,13 @@
 //! Workers feed completions back through [`DispatchPolicy::observe`];
 //! policies that don't learn ignore it.
 //!
+//! **Replica groups** need no special casing here: every replica is a
+//! physical shard with its own view, so under `EwmaLatency` traffic
+//! flows to the replica with the best learned p99, and the engine's
+//! candidate filter (closed queues + health-board marks, see
+//! [`crate::engine::Engine`]) removes dead replicas before `pick`
+//! ever sees them.
+//!
 //! Like the admission queues, the learning policies' internal locks
 //! are **poison-immune** ([`crate::util::sync::plock`]): a worker
 //! thread that panics right after reporting a completion must not

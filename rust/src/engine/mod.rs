@@ -45,7 +45,13 @@
 //! in its own OS process behind a Unix/TCP socket, with dispatch,
 //! admission, and backpressure unchanged; a shard whose process dies
 //! resolves its tickets as [`RejectReason::WorkerFailed`] and the
-//! admit path routes around it.  The engine layering and the wire
+//! admit path routes around it.  With
+//! [`EngineBuilder::replicas`], shards form **replica groups** of
+//! bitwise-interchangeable workers: slow exchanges hedge to a sibling,
+//! hard failures fail over to one, a background prober marks dead
+//! replicas down on the engine's [`HealthBoard`] so admission stops
+//! routing into them, and the engine serves a group as long as one
+//! replica lives.  The engine layering and the wire
 //! format are specified normatively in `docs/ARCHITECTURE.md`.
 //!
 //! **Determinism**: batching, padding, shard choice, and thread count
@@ -83,7 +89,9 @@ pub use admission::{AdmissionPolicy, BoundedQueue};
 pub use backend::{InferenceBackend, ModelBackend};
 pub use batcher::{BatchSource, Batcher};
 pub use dispatch::{DispatchKind, DispatchPolicy, EwmaLatency, LeastLoaded, RoundRobin, ShardView};
-pub use remote::{RemoteBackend, RemoteOptions, SpawnSpec, SpawnedShards};
+pub use remote::{
+    FaultPlan, HealthBoard, HealthCounters, RemoteBackend, RemoteOptions, SpawnSpec, SpawnedShards,
+};
 pub use ticket::{RejectReason, Response, Ticket};
 
 pub use crate::coordinator::metrics::Metrics;
@@ -136,6 +144,7 @@ pub struct EngineBuilder {
     dispatch: DispatchChoice,
     remote_addrs: Vec<String>,
     remote_opts: RemoteOptions,
+    replicas: usize,
     spawned: Option<SpawnedShards>,
     kernel: Option<crate::nn::kernel::KernelKind>,
 }
@@ -152,6 +161,7 @@ impl Default for EngineBuilder {
             dispatch: DispatchChoice::Kind(DispatchKind::LeastLoaded),
             remote_addrs: Vec::new(),
             remote_opts: RemoteOptions::default(),
+            replicas: 1,
             spawned: None,
             kernel: None,
         }
@@ -243,7 +253,17 @@ impl EngineBuilder {
         self.queue_depth = cfg.queue_depth;
         self.admission = cfg.admission;
         self.dispatch = DispatchChoice::Kind(cfg.dispatch);
+        self.replicas = cfg.replicas.max(1);
         self.remote_opts.stats_every = cfg.remote.stats_every;
+        self.remote_opts.connect_timeout = Duration::from_millis(cfg.remote.connect_timeout_ms);
+        self.remote_opts.retry_attempts = cfg.remote.retry_attempts;
+        self.remote_opts.retry_backoff = Duration::from_millis(cfg.remote.retry_backoff_ms);
+        // 0 = disabled, for both optional cadences
+        self.remote_opts.hedge_after = match cfg.remote.hedge_after_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        };
+        self.remote_opts.probe_interval = Duration::from_millis(cfg.remote.probe_interval_ms);
         if !cfg.remote.addrs.is_empty() {
             self.remote_addrs = cfg.remote.addrs.clone();
         }
@@ -267,18 +287,46 @@ impl EngineBuilder {
     }
 
     /// Transport knobs of the remote path (connect timeout, reconnect
-    /// backoff, stats poll cadence).
+    /// backoff, stats poll cadence, hedge deadline, prober cadence).
     pub fn remote_options(mut self, opts: RemoteOptions) -> Self {
         self.remote_opts = opts;
         self
     }
 
-    /// Spawn `n` `shard-worker` child processes per `spec` and target
-    /// them (the spawned handles live inside the built engine, which
-    /// kills any survivor on drop).  Finish with
-    /// [`EngineBuilder::build_remote`].
+    /// **Replica groups** (remote path): build every shard group out of
+    /// `r` bitwise-interchangeable worker copies.  The physical shard
+    /// list becomes `groups × r` addresses, laid out group-major
+    /// (group *g* owns addresses `g·r .. g·r+r`); each backend learns
+    /// its group siblings, so a hedge or hard failure re-fires the
+    /// exchange at a sibling instead of burning the retry ladder, and
+    /// the engine keeps serving a group as long as **one** replica
+    /// lives.  Set this *before* [`EngineBuilder::spawn_workers`] (the
+    /// spawn count is `groups × r`); with explicit
+    /// [`EngineBuilder::remote`] addresses, their count must divide by
+    /// `r`.  In-process engines don't need this knob — every worker
+    /// already is a bitwise replica; just raise
+    /// [`EngineBuilder::workers`].
+    pub fn replicas(mut self, r: usize) -> Self {
+        self.replicas = r.max(1);
+        self
+    }
+
+    /// Inject a deterministic [`FaultPlan`] into every remote data
+    /// connection this engine makes (chaos testing; equivalent to the
+    /// `SOBOLNET_FAULTS` environment plan, but scoped to this engine
+    /// with fresh counters).
+    pub fn faults(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.remote_opts.faults = Some(plan);
+        self
+    }
+
+    /// Spawn `n × replicas` `shard-worker` child processes per `spec` —
+    /// `n` shard groups of [`EngineBuilder::replicas`] interchangeable
+    /// copies each — and target them (the spawned handles live inside
+    /// the built engine, which kills any survivor on drop).  Finish
+    /// with [`EngineBuilder::build_remote`].
     pub fn spawn_workers(mut self, n: usize, spec: SpawnSpec) -> std::io::Result<Self> {
-        let shards = remote::spawn_shards(n, &spec)?;
+        let shards = remote::spawn_shards(n * self.replicas, &spec)?;
         self.remote_addrs = shards.addrs().to_vec();
         self.spawned = Some(shards);
         Ok(self)
@@ -370,6 +418,7 @@ impl EngineBuilder {
             features: features.expect("at least one worker"),
             classes: classes.expect("at least one worker"),
             batch: batch.expect("at least one worker"),
+            health: HealthBoard::new(n),
             remote: None,
         }
     }
@@ -393,12 +442,23 @@ impl EngineBuilder {
         let addrs = std::mem::take(&mut self.remote_addrs);
         let spawned = self.spawned.take();
         let opts = self.remote_opts.clone();
+        let replicas = self.replicas;
+        if addrs.len() % replicas != 0 {
+            return Err(std::io::Error::other(format!(
+                "{} remote addresses cannot form groups of {} replicas — the address count \
+                 must be a multiple of .replicas(r)",
+                addrs.len(),
+                replicas
+            )));
+        }
         // pre-flight: one bounded handshake per shard
+        let mut parsed: Vec<remote::Addr> = Vec::with_capacity(addrs.len());
         let mut shapes: Vec<(usize, usize, usize)> = Vec::with_capacity(addrs.len());
         for addr_str in &addrs {
             let addr = remote::Addr::parse(addr_str).map_err(std::io::Error::other)?;
             let shape = RemoteBackend::probe(&addr, opts.connect_timeout)
                 .map_err(|e| std::io::Error::other(format!("preflight {addr_str}: {e}")))?;
+            parsed.push(addr);
             shapes.push(shape);
         }
         let first = shapes[0];
@@ -418,22 +478,56 @@ impl EngineBuilder {
         let window = self.metrics_window;
         let slots: Vec<Arc<Metrics>> =
             addrs.iter().map(|_| Arc::new(Metrics::with_window(window))).collect();
+        // one health board for the whole engine: the prober flips its
+        // marks, the backends count hedges/failovers on it, and the
+        // admit path filters on it
+        let board = HealthBoard::new(addrs.len());
         let factories: Vec<BackendFactory> = addrs
             .iter()
             .zip(&slots)
-            .map(|(addr, slot)| {
+            .enumerate()
+            .map(|(i, (addr, slot))| {
                 let addr = addr.clone();
                 let slot = slot.clone();
                 let opts = opts.clone();
+                // replica-group siblings: the other addresses of this
+                // shard's group (group-major layout), in fixed index
+                // order so hedge/failover target order is reproducible
+                let group = i / replicas;
+                let siblings: Vec<String> = (group * replicas..(group + 1) * replicas)
+                    .filter(|&j| j != i)
+                    .map(|j| addrs[j].clone())
+                    .collect();
+                let board = Arc::clone(&board);
                 Box::new(move || {
                     let backend = RemoteBackend::connect(&addr, opts, slot)
+                        .and_then(|b| b.with_group(&siblings, board))
                         .unwrap_or_else(|e| panic!("remote shard: {e}"));
                     Box::new(backend) as Box<dyn InferenceBackend>
                 }) as BackendFactory
             })
             .collect();
+        let prober = if opts.probe_interval.is_zero() {
+            None
+        } else {
+            // each probe exchange is short (no compute); bound it well
+            // under the data-path timeouts so a wedged worker costs the
+            // prober at most one slot per round
+            let timeout = opts.probe_interval.clamp(
+                Duration::from_millis(50),
+                Duration::from_millis(500),
+            );
+            Some(remote::Prober::spawn(
+                parsed,
+                Arc::clone(&board),
+                opts.probe_interval,
+                timeout,
+            ))
+        };
         let mut engine = self.build_each(factories);
-        engine.remote = Some(RemoteShards { metrics: slots, addrs, _spawned: spawned });
+        engine.health = Arc::clone(&board);
+        engine.remote =
+            Some(RemoteShards { metrics: slots, addrs, replicas, prober, _spawned: spawned });
         Ok(engine)
     }
 }
@@ -475,6 +569,10 @@ pub struct EngineStats {
 struct RemoteShards {
     metrics: Vec<Arc<Metrics>>,
     addrs: Vec<String>,
+    /// Replicas per shard group (physical shards = groups × replicas).
+    replicas: usize,
+    /// Health-probe thread; stopped (joined) first in `Engine::stop`.
+    prober: Option<remote::Prober>,
     /// Held for its `Drop` (kill + reap children); dropped after
     /// `stop()` has joined the workers, whose backends send each child
     /// a graceful `Shutdown` frame first.
@@ -493,6 +591,11 @@ pub struct Engine {
     features: usize,
     classes: usize,
     batch: usize,
+    /// Per-shard liveness + hedge/failover counters.  In-process
+    /// engines never mark anything down (their all-up board exists so
+    /// the admit path has one code path); remote engines share this
+    /// `Arc` with their backends and prober.
+    health: Arc<HealthBoard>,
     remote: Option<RemoteShards>,
 }
 
@@ -520,6 +623,21 @@ impl Engine {
     /// `true` when the worker shards live in other processes.
     pub fn is_remote(&self) -> bool {
         self.remote.is_some()
+    }
+
+    /// Replicas per shard group (`1` unless the engine was built with
+    /// [`EngineBuilder::replicas`]; the shard count is
+    /// `groups × replicas`).
+    pub fn replicas(&self) -> usize {
+        self.remote.as_ref().map(|r| r.replicas).unwrap_or(1)
+    }
+
+    /// Snapshot of the fault-tolerance counters: hedged and
+    /// failed-over exchanges, prober up/down transitions, and the
+    /// number of shards currently marked down.  All zero for an
+    /// in-process engine.
+    pub fn health_counters(&self) -> HealthCounters {
+        self.health.snapshot()
     }
 
     /// Remote shard addresses (shard order), if this engine is
@@ -567,16 +685,26 @@ impl Engine {
         // load snapshot in a reused thread-local buffer: closed flag,
         // inflight, and queue depth are all plain atomic loads, so a
         // submit costs no allocation and no shard-queue lock.  Dead
-        // shards (closed queues) are filtered out *before* the policy
-        // picks, so survivors share a dead shard's traffic per the
-        // policy instead of it all spilling onto one neighbor; each
-        // view carries its engine shard `id` so learning policies stay
-        // keyed correctly on the filtered list.
+        // shards (closed queues) and shards the health board marks
+        // down are filtered out *before* the policy picks, so
+        // survivors share a dead shard's traffic per the policy
+        // instead of it all spilling onto one neighbor; each view
+        // carries its engine shard `id` so learning policies stay
+        // keyed correctly on the filtered list.  Health marks only
+        // *advise*: if they would empty the candidate list while open
+        // queues remain (a prober false-negative, or every replica
+        // flapping at once), admission falls back to the open queues —
+        // the backends' own hedge/failover path still covers them.
         let picked = VIEW_SCRATCH.with(|scratch| {
             let mut views = scratch.borrow_mut();
             views.clear();
+            let mut open_queues = 0usize;
             for (id, s) in self.shards.iter().enumerate() {
                 if s.queue.is_closed() {
+                    continue;
+                }
+                open_queues += 1;
+                if !self.health.is_up(id) {
                     continue;
                 }
                 views.push(ShardView {
@@ -584,6 +712,18 @@ impl Engine {
                     inflight: s.inflight.load(Ordering::Relaxed),
                     queue_depth: s.queue.depth(),
                 });
+            }
+            if views.is_empty() && open_queues > 0 {
+                for (id, s) in self.shards.iter().enumerate() {
+                    if s.queue.is_closed() {
+                        continue;
+                    }
+                    views.push(ShardView {
+                        id,
+                        inflight: s.inflight.load(Ordering::Relaxed),
+                        queue_depth: s.queue.depth(),
+                    });
+                }
             }
             if views.is_empty() {
                 None
@@ -721,6 +861,12 @@ impl Engine {
             ));
         }
         if let Some(r) = &self.remote {
+            let h = self.health.snapshot();
+            out.push_str(&format!(
+                "\n  fault tolerance: replicas={} hedges={} failovers={} marks_down={} \
+                 marks_up={} down_now={}",
+                r.replicas, h.hedges, h.failovers, h.marks_down, h.marks_up, h.down_now
+            ));
             // worker-process-side view, folded from stats frames (the
             // lines above measure coordinator-side end-to-end latency).
             // Printed field-by-field rather than via `summary()`: the
@@ -747,6 +893,14 @@ impl Engine {
     }
 
     fn stop(&mut self) {
+        // prober first: it must not dial workers that are shutting
+        // down and flap the board while backends run their closing
+        // handshakes
+        if let Some(r) = self.remote.as_mut() {
+            if let Some(p) = r.prober.as_mut() {
+                p.stop();
+            }
+        }
         for s in self.shards.iter() {
             s.queue.close();
         }
@@ -1110,5 +1264,31 @@ mod tests {
         assert!(r.contains("ewma-p99") && r.contains("shed-newest"), "{r}");
         assert_eq!(eng.dispatch_name(), "ewma-p99");
         assert_eq!(eng.admission(), AdmissionPolicy::ShedNewest);
+    }
+
+    #[test]
+    fn health_marks_narrow_routing_but_never_brick_open_queues() {
+        let eng = quick_engine(2);
+        assert_eq!(eng.replicas(), 1);
+        assert_eq!(eng.health_counters(), HealthCounters::default());
+        // shard 0 marked down: traffic converges on shard 1
+        eng.health.mark(0, false);
+        for i in 0..6 {
+            assert_eq!(
+                eng.infer(vec![i as f32, 1.0, 0.0]),
+                Response::Logits(vec![i as f32 + 1.0, -1.0])
+            );
+        }
+        let m = eng.worker_metrics();
+        assert_eq!(m[0].completed.load(Ordering::Relaxed), 0, "down shard got no traffic");
+        assert_eq!(m[1].completed.load(Ordering::Relaxed), 6);
+        assert_eq!(eng.health_counters().down_now, 1);
+        // every shard marked down, yet queues are open: marks are
+        // advisory and must fall back, not reject the world
+        eng.health.mark(1, false);
+        assert_eq!(eng.infer(vec![1.0, 1.0, 1.0]), Response::Logits(vec![3.0, -1.0]));
+        eng.health.mark(0, true);
+        assert_eq!(eng.health_counters().marks_up, 1);
+        eng.shutdown();
     }
 }

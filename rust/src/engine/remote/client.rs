@@ -14,12 +14,27 @@
 //! * transient socket errors trigger **reconnect with exponential
 //!   backoff** (the exchange is retried — inference is idempotent, so a
 //!   batch resent after a reconnect cannot corrupt state);
-//! * a shard whose process is gone (retries exhausted) **panics** on
-//!   the engine worker thread, which is precisely the engine's
-//!   worker-death path: queued and in-flight tickets resolve to
-//!   [`RejectReason::WorkerFailed`](crate::engine::RejectReason) and
-//!   the engine routes new requests to the surviving shards
-//!   (`tests/remote_shard.rs`).
+//! * with replica siblings configured ([`RemoteBackend::with_group`]),
+//!   an exchange that fails hard (reset/refused — the killed-worker
+//!   case) **fails over**: the same request is re-fired at the next
+//!   sibling in fixed order, and only when every replica is
+//!   unreachable does the ladder give up;
+//! * with a hedge deadline configured ([`RemoteOptions::hedge_after`]),
+//!   an exchange whose response exceeds the deadline (the larger of
+//!   the configured floor and twice this backend's recent p99
+//!   estimate) is **hedged**: the primary connection is severed — a
+//!   late reply must never desync the strict request/response stream —
+//!   and the request re-fired at a sibling, first answer wins.
+//!   Duplicates are safe twice over: inference is pure, and the
+//!   worker-side reply cache answers a true resend without
+//!   recomputing.  Replicas are bitwise-interchangeable, so hedging
+//!   never changes an output bit;
+//! * a shard whose process is gone (retries and siblings exhausted)
+//!   **panics** on the engine worker thread, which is precisely the
+//!   engine's worker-death path: queued and in-flight tickets resolve
+//!   to [`RejectReason::WorkerFailed`](crate::engine::RejectReason)
+//!   and the engine routes new requests to the surviving shards
+//!   (`tests/remote_shard.rs`, `tests/chaos.rs`).
 //!
 //! Shared-nothing metrics: every `stats_every` batches the backend
 //! sends a [`Frame::StatsRequest`] and folds the worker's reply — its
@@ -30,11 +45,30 @@
 //! `Engine::shutdown` the folded stats are complete.
 
 use super::frame::{read_frame, write_frame, Frame};
-use super::transport::{Addr, Stream};
+use super::health::HealthBoard;
+use super::transport::{Addr, FaultPlan, Stream};
 use crate::coordinator::metrics::Metrics;
 use crate::engine::InferenceBackend;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// The one backoff cap of the remote transport: every exponential
+/// ladder (initial connect, per-exchange reconnect) tops out here.
+pub const BACKOFF_CAP: Duration = Duration::from_millis(500);
+
+/// How long a hedged or failed-over exchange waits for the sibling's
+/// answer.  Generous relative to any hedge deadline — the sibling is
+/// doing real compute — but bounded, so a sick sibling falls through
+/// to the retry ladder instead of hanging the shard.
+pub const SIBLING_READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Exponential backoff delay for 0-based `attempt`:
+/// `base · 2^attempt`, with `base` floored at 1 ms, the exponent
+/// clamped (so large attempt counts cannot overflow), and the result
+/// capped at [`BACKOFF_CAP`].
+pub fn backoff_delay(base: Duration, attempt: u32) -> Duration {
+    (base.max(Duration::from_millis(1)) * 2u32.pow(attempt.min(16))).min(BACKOFF_CAP)
+}
 
 /// Knobs of the remote transport (per shard connection).
 #[derive(Debug, Clone)]
@@ -47,11 +81,25 @@ pub struct RemoteOptions {
     /// Reconnect attempts per failed exchange before the shard is
     /// declared dead.
     pub retry_attempts: u32,
-    /// Base backoff between reconnect attempts; doubles per attempt.
+    /// Base backoff between reconnect attempts; doubles per attempt
+    /// (capped at [`BACKOFF_CAP`]).
     pub retry_backoff: Duration,
     /// Poll worker stats every N batches (`0` disables periodic polls;
     /// the final poll at drop still runs).
     pub stats_every: u64,
+    /// Hedge deadline floor: an exchange not answered within
+    /// `max(hedge_after, 2 × recent p99)` is re-fired at a sibling
+    /// replica.  `None` disables hedging (exchanges block until the
+    /// worker answers or the connection breaks).  Only effective when
+    /// the backend has siblings ([`RemoteBackend::with_group`]).
+    pub hedge_after: Option<Duration>,
+    /// Cadence of the coordinator-side health prober
+    /// (`Duration::ZERO` disables it).
+    pub probe_interval: Duration,
+    /// Deterministic fault plan injected into this backend's data
+    /// connections (chaos testing).  `None` falls back to the
+    /// process-wide `SOBOLNET_FAULTS` plan, if any.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for RemoteOptions {
@@ -61,6 +109,27 @@ impl Default for RemoteOptions {
             retry_attempts: 3,
             retry_backoff: Duration::from_millis(50),
             stats_every: 8,
+            hedge_after: None,
+            probe_interval: Duration::from_millis(250),
+            faults: None,
+        }
+    }
+}
+
+/// How an exchange failed: past the hedge deadline (the sibling path
+/// may still win the request) or hard (broken stream, reject, shape
+/// mismatch — reconnect/failover territory).
+enum ExchangeFail {
+    /// The response did not arrive within the hedge deadline.
+    Timeout(String),
+    /// The exchange is unrecoverable on this connection.
+    Hard(String),
+}
+
+impl ExchangeFail {
+    fn msg(self) -> String {
+        match self {
+            ExchangeFail::Timeout(m) | ExchangeFail::Hard(m) => m,
         }
     }
 }
@@ -78,6 +147,19 @@ pub struct RemoteBackend {
     /// Coordinator-side slot the worker's stats frames fold into; the
     /// engine merges these across shards on read.
     slot: Arc<Metrics>,
+    /// Sibling replica addresses (same group, fixed order) — the hedge
+    /// and failover targets.  Empty for ungrouped backends.
+    siblings: Vec<Addr>,
+    /// Shared hedge/failover counters (`None` for standalone use
+    /// outside an engine).
+    board: Option<Arc<HealthBoard>>,
+    /// Resolved fault plan (options override, else `SOBOLNET_FAULTS`).
+    faults: Option<Arc<FaultPlan>>,
+    /// EWMA of successful exchange latency (seconds) feeding the
+    /// adaptive hedge deadline.
+    lat_mean: f64,
+    lat_var: f64,
+    lat_n: u64,
 }
 
 impl RemoteBackend {
@@ -87,20 +169,22 @@ impl RemoteBackend {
     /// backend factory.
     pub fn connect(addr: &str, opts: RemoteOptions, slot: Arc<Metrics>) -> Result<Self, String> {
         let addr = Addr::parse(addr)?;
+        let faults = opts.faults.clone().or_else(FaultPlan::from_env);
         let deadline = Instant::now() + opts.connect_timeout;
-        let mut backoff = opts.retry_backoff.max(Duration::from_millis(1));
+        let mut attempt = 0u32;
         // the connect budget also bounds each dial's TCP connect and
         // Hello read: a blackholed host or a child that accepted but
         // never starts serving cannot hang the builder
         let (stream, features, classes, capacity) = loop {
-            match Self::dial(&addr, opts.connect_timeout) {
+            match Self::dial(&addr, opts.connect_timeout, faults.as_ref()) {
                 Ok(ok) => break ok,
                 Err(e) => {
+                    let backoff = backoff_delay(opts.retry_backoff, attempt);
+                    attempt += 1;
                     if Instant::now() + backoff > deadline {
                         return Err(format!("connect {addr}: {e}"));
                     }
                     std::thread::sleep(backoff);
-                    backoff = (backoff * 2).min(Duration::from_millis(500));
                 }
             }
         };
@@ -114,7 +198,28 @@ impl RemoteBackend {
             next_id: 0,
             batches: 0,
             slot,
+            siblings: Vec::new(),
+            board: None,
+            faults,
+            lat_mean: 0.0,
+            lat_var: 0.0,
+            lat_n: 0,
         })
+    }
+
+    /// Attach this backend to its replica group: `siblings` are the
+    /// other replicas' addresses (fixed order — hedges and failovers
+    /// try them in exactly this order, which keeps recovery behavior
+    /// reproducible), `board` the engine-wide hedge/failover counters.
+    pub fn with_group(
+        mut self,
+        siblings: &[String],
+        board: Arc<HealthBoard>,
+    ) -> Result<Self, String> {
+        self.siblings =
+            siblings.iter().map(|s| Addr::parse(s)).collect::<Result<Vec<_>, String>>()?;
+        self.board = Some(board);
+        Ok(self)
     }
 
     /// One dial + handshake attempt, fully bounded by `timeout`: it
@@ -124,8 +229,17 @@ impl RemoteBackend {
     /// serve loop is running, and no caller may block on it forever.
     /// The read timeout is cleared again after the handshake:
     /// exchange reads must block while the worker computes.
-    fn dial(addr: &Addr, timeout: Duration) -> Result<(Stream, usize, usize, usize), String> {
+    /// `faults`, when present, wraps the data connection in the
+    /// deterministic chaos layer.
+    fn dial(
+        addr: &Addr,
+        timeout: Duration,
+        faults: Option<&Arc<FaultPlan>>,
+    ) -> Result<(Stream, usize, usize, usize), String> {
         let mut stream = addr.connect_timeout(timeout).map_err(|e| e.to_string())?;
+        if let Some(plan) = faults {
+            stream = plan.wrap(stream);
+        }
         let _ = stream.set_read_timeout(Some(timeout));
         match read_frame(&mut stream) {
             Ok(Frame::Hello { features, classes, batch_capacity }) => {
@@ -142,9 +256,10 @@ impl RemoteBackend {
     /// builder pre-flights every shard with this so operator mistakes
     /// — mismatched `--sizes`/`--batch` across workers — surface as a
     /// clean error naming the offending address instead of a
-    /// cross-thread assert panic.
+    /// cross-thread assert panic.  Probes never inject faults: they
+    /// answer "is the worker there", not "does recovery work".
     pub(crate) fn probe(addr: &Addr, timeout: Duration) -> Result<(usize, usize, usize), String> {
-        Self::dial(addr, timeout).map(|(_stream, f, c, cap)| (f, c, cap))
+        Self::dial(addr, timeout, None).map(|(_stream, f, c, cap)| (f, c, cap))
     }
 
     /// Reconnect and re-validate the handshake against the shape this
@@ -153,7 +268,7 @@ impl RemoteBackend {
     /// shard forever.
     fn reconnect(&mut self) -> Result<(), String> {
         let (stream, features, classes, capacity) =
-            Self::dial(&self.addr, Duration::from_secs(5))?;
+            Self::dial(&self.addr, Duration::from_secs(5), self.faults.as_ref())?;
         if (features, classes, capacity) != (self.features, self.classes, self.capacity) {
             return Err(format!(
                 "worker at {} changed shape: {}x{} cap {} (was {}x{} cap {})",
@@ -164,39 +279,168 @@ impl RemoteBackend {
         Ok(())
     }
 
+    /// Effective hedge deadline for the next exchange: the configured
+    /// floor, raised to twice the recent p99 estimate once enough
+    /// samples exist (a cold backend must not hedge off noise).
+    /// `None` — hedging off or no siblings to hedge to — leaves the
+    /// response read unbounded.
+    fn hedge_deadline(&self) -> Option<Duration> {
+        let floor = self.opts.hedge_after?;
+        if self.siblings.is_empty() {
+            return None;
+        }
+        if self.lat_n >= 8 {
+            let p99 = self.lat_mean + 2.33 * self.lat_var.max(0.0).sqrt();
+            let adaptive = Duration::from_secs_f64((2.0 * p99).max(0.0));
+            Some(floor.max(adaptive))
+        } else {
+            Some(floor)
+        }
+    }
+
+    /// Fold a successful exchange latency into the hedge-deadline EWMA.
+    fn observe_latency(&mut self, d: Duration) {
+        const ALPHA: f64 = 0.2;
+        let x = d.as_secs_f64();
+        if self.lat_n == 0 {
+            self.lat_mean = x;
+            self.lat_var = 0.0;
+        } else {
+            let delta = x - self.lat_mean;
+            self.lat_mean += ALPHA * delta;
+            self.lat_var = (1.0 - ALPHA) * (self.lat_var + ALPHA * delta * delta);
+        }
+        self.lat_n += 1;
+    }
+
+    /// Read and validate one `Response` for `id` from `stream`.
+    fn read_response(
+        stream: &mut Stream,
+        id: u64,
+        rows: usize,
+        classes: usize,
+    ) -> Result<Vec<f32>, ExchangeFail> {
+        match read_frame(stream) {
+            Ok(Frame::Response { id: rid, rows: rrows, classes: rclasses, data }) => {
+                if rid != id {
+                    return Err(ExchangeFail::Hard(format!(
+                        "response id {rid} != request id {id}"
+                    )));
+                }
+                if (rrows as usize, rclasses as usize) != (rows, classes)
+                    || data.len() != rows * classes
+                {
+                    return Err(ExchangeFail::Hard(format!(
+                        "response shape {}x{} ({} values) != {}x{}",
+                        rrows,
+                        rclasses,
+                        data.len(),
+                        rows,
+                        classes
+                    )));
+                }
+                Ok(data)
+            }
+            Ok(Frame::Reject { reason, .. }) => {
+                Err(ExchangeFail::Hard(format!("worker rejected batch: {reason}")))
+            }
+            Ok(other) => {
+                Err(ExchangeFail::Hard(format!("expected response, got {} frame", other.name())))
+            }
+            Err(super::frame::FrameError::Io(e))
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                Err(ExchangeFail::Timeout(e.to_string()))
+            }
+            Err(e) => Err(ExchangeFail::Hard(e.to_string())),
+        }
+    }
+
     /// One request/response exchange of `rows` real rows on the live
-    /// stream.
-    fn exchange(&mut self, id: u64, x: &[f32], rows: usize) -> Result<Vec<f32>, String> {
-        let stream = self.stream.as_mut().ok_or("not connected")?;
+    /// stream.  With hedging active, the response read is bounded by
+    /// the hedge deadline; a deadline miss surfaces as
+    /// [`ExchangeFail::Timeout`] for the caller to hedge on.
+    fn exchange(&mut self, id: u64, x: &[f32], rows: usize) -> Result<Vec<f32>, ExchangeFail> {
+        let deadline = self.hedge_deadline();
+        let classes = self.classes;
+        let stream =
+            self.stream.as_mut().ok_or_else(|| ExchangeFail::Hard("not connected".into()))?;
         let req = Frame::Request {
             id,
             rows: rows as u32,
             features: self.features as u32,
             data: x[..rows * self.features].to_vec(),
         };
-        write_frame(stream, &req).map_err(|e| e.to_string())?;
-        match read_frame(stream) {
-            Ok(Frame::Response { id: rid, rows: rrows, classes, data }) => {
-                if rid != id {
-                    return Err(format!("response id {rid} != request id {id}"));
+        write_frame(stream, &req).map_err(|e| ExchangeFail::Hard(e.to_string()))?;
+        let _ = stream.set_read_timeout(deadline);
+        let started = Instant::now();
+        let res = Self::read_response(stream, id, rows, classes);
+        let _ = stream.set_read_timeout(None);
+        if res.is_ok() {
+            self.observe_latency(started.elapsed());
+        }
+        res
+    }
+
+    /// Re-fire request `id` at the sibling replicas, fixed order, on a
+    /// fresh one-shot connection each.  Replicas are
+    /// bitwise-interchangeable, so whichever sibling answers first
+    /// returns the exact bits the primary would have.  Every step is
+    /// bounded: dial by [`BACKOFF_CAP`], the response read by
+    /// [`SIBLING_READ_TIMEOUT`].
+    fn exchange_via_sibling(&mut self, id: u64, x: &[f32], rows: usize) -> Result<Vec<f32>, String> {
+        let mut last = String::from("no sibling replicas");
+        for i in 0..self.siblings.len() {
+            let sib = self.siblings[i].clone();
+            let (mut stream, f, c, cap) = match Self::dial(&sib, BACKOFF_CAP, self.faults.as_ref())
+            {
+                Ok(ok) => ok,
+                Err(e) => {
+                    last = format!("sibling {sib}: {e}");
+                    continue;
                 }
-                if (rrows as usize, classes as usize) != (rows, self.classes)
-                    || data.len() != rows * self.classes
-                {
-                    return Err(format!(
-                        "response shape {}x{} ({} values) != {}x{}",
-                        rrows,
-                        classes,
-                        data.len(),
-                        rows,
-                        self.classes
-                    ));
-                }
-                Ok(data)
+            };
+            if (f, c, cap) != (self.features, self.classes, self.capacity) {
+                last = format!("sibling {sib}: shape mismatch {f}x{c} cap {cap}");
+                continue;
             }
-            Ok(Frame::Reject { reason, .. }) => Err(format!("worker rejected batch: {reason}")),
-            Ok(other) => Err(format!("expected response, got {} frame", other.name())),
-            Err(e) => Err(e.to_string()),
+            let req = Frame::Request {
+                id,
+                rows: rows as u32,
+                features: self.features as u32,
+                data: x[..rows * self.features].to_vec(),
+            };
+            if let Err(e) = write_frame(&mut stream, &req) {
+                last = format!("sibling {sib}: {e}");
+                continue;
+            }
+            let _ = stream.set_read_timeout(Some(SIBLING_READ_TIMEOUT));
+            match Self::read_response(&mut stream, id, rows, self.classes) {
+                Ok(data) => return Ok(data),
+                Err(e) => {
+                    last = format!("sibling {sib}: {}", e.msg());
+                    continue;
+                }
+            }
+        }
+        Err(last)
+    }
+
+    /// Hard-failure failover: try the siblings, count a failover on
+    /// success.
+    fn try_failover(&mut self, id: u64, x: &[f32], rows: usize) -> Option<Vec<f32>> {
+        if self.siblings.is_empty() {
+            return None;
+        }
+        match self.exchange_via_sibling(id, x, rows) {
+            Ok(data) => {
+                if let Some(board) = &self.board {
+                    board.failovers.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                Some(data)
+            }
+            Err(_) => None,
         }
     }
 
@@ -255,13 +499,18 @@ impl InferenceBackend for RemoteBackend {
                 // reconnect-with-backoff: drop the broken stream, wait,
                 // redial, revalidate the handshake
                 self.stream = None;
-                let backoff = self.opts.retry_backoff.max(Duration::from_millis(1))
-                    * 2u32.pow((attempt - 1).min(4));
-                std::thread::sleep(backoff.min(Duration::from_millis(500)));
+                std::thread::sleep(backoff_delay(self.opts.retry_backoff, attempt - 1));
             }
             if self.stream.is_none() {
                 if let Err(e) = self.reconnect() {
                     last_err = e;
+                    // primary unreachable (killed worker): a sibling
+                    // replica can answer with identical bits — route
+                    // around the corpse before burning backoff on it
+                    if let Some(logits) = self.try_failover(id, x, rows) {
+                        self.batches += 1;
+                        return logits;
+                    }
                     continue;
                 }
             }
@@ -278,7 +527,31 @@ impl InferenceBackend for RemoteBackend {
                     }
                     return logits;
                 }
-                Err(e) => last_err = e,
+                Err(ExchangeFail::Timeout(e)) => {
+                    // hedge: sever the primary first — its late reply
+                    // must never desync the strict request/response
+                    // stream — then re-fire at a sibling, first answer
+                    // wins (bitwise identical either way)
+                    self.stream = None;
+                    if let Some(board) = &self.board {
+                        board.hedges.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    match self.exchange_via_sibling(id, x, rows) {
+                        Ok(logits) => {
+                            self.batches += 1;
+                            return logits;
+                        }
+                        Err(e2) => last_err = format!("hedge after timeout ({e}): {e2}"),
+                    }
+                }
+                Err(ExchangeFail::Hard(e)) => {
+                    last_err = e;
+                    self.stream = None;
+                    if let Some(logits) = self.try_failover(id, x, rows) {
+                        self.batches += 1;
+                        return logits;
+                    }
+                }
             }
         }
         panic!(
@@ -301,7 +574,9 @@ impl Drop for RemoteBackend {
             // fold + Shutdown for the worker process) still happens.
             // The dial is bounded end to end, so neither a dead
             // address nor a wedged worker can hang shutdown.
-            if let Ok((stream, f, c, cap)) = Self::dial(&self.addr, Duration::from_millis(500)) {
+            if let Ok((stream, f, c, cap)) =
+                Self::dial(&self.addr, Duration::from_millis(500), self.faults.as_ref())
+            {
                 if (f, c, cap) == (self.features, self.classes, self.capacity) {
                     self.stream = Some(stream);
                 }

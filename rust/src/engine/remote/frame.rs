@@ -44,6 +44,16 @@ const TYPE_REJECT: u8 = 4;
 const TYPE_STATS_REQUEST: u8 = 5;
 const TYPE_STATS: u8 = 6;
 const TYPE_SHUTDOWN: u8 = 7;
+const TYPE_HEALTH: u8 = 8;
+const TYPE_DRAIN: u8 = 9;
+
+/// `Health` state: coordinator → worker probe (asks "how are you?").
+pub const HEALTH_PROBE: u8 = 0;
+/// `Health` state: worker → coordinator, accepting traffic.
+pub const HEALTH_SERVING: u8 = 1;
+/// `Health` state: worker → coordinator, draining — still answering
+/// in-flight requests but asking for no new traffic.
+pub const HEALTH_DRAINING: u8 = 2;
 
 /// Typed decode/transport failure.  Every malformed input maps to one
 /// of these — the codec never panics and never hangs on bad bytes.
@@ -78,6 +88,8 @@ pub enum FrameError {
     },
     /// Reject frame carried an unknown reason code.
     BadReason(u8),
+    /// Health frame carried an unknown state code.
+    BadHealthState(u8),
 }
 
 impl std::fmt::Display for FrameError {
@@ -95,6 +107,7 @@ impl std::fmt::Display for FrameError {
                 write!(f, "{frame} payload length {got} != expected {expected}")
             }
             FrameError::BadReason(c) => write!(f, "unknown reject reason code {c}"),
+            FrameError::BadHealthState(s) => write!(f, "unknown health state code {s}"),
         }
     }
 }
@@ -172,6 +185,18 @@ pub enum Frame {
     },
     /// Coordinator tells the worker process to exit.
     Shutdown,
+    /// Health probe/report.  Coordinator → worker with
+    /// [`HEALTH_PROBE`]; the worker answers with [`HEALTH_SERVING`] or
+    /// [`HEALTH_DRAINING`].
+    Health {
+        /// One of the `HEALTH_*` codes.
+        state: u8,
+    },
+    /// Coordinator asks the worker to stop advertising itself as
+    /// serving: in-flight requests still complete, but subsequent
+    /// `Health` probes answer [`HEALTH_DRAINING`] so the prober routes
+    /// new traffic elsewhere.
+    Drain,
 }
 
 impl Frame {
@@ -185,6 +210,8 @@ impl Frame {
             Frame::StatsRequest => "stats-request",
             Frame::Stats { .. } => "stats",
             Frame::Shutdown => "shutdown",
+            Frame::Health { .. } => "health",
+            Frame::Drain => "drain",
         }
     }
 }
@@ -363,6 +390,11 @@ fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             TYPE_STATS
         }
         Frame::Shutdown => TYPE_SHUTDOWN,
+        Frame::Health { state } => {
+            p.push(*state);
+            TYPE_HEALTH
+        }
+        Frame::Drain => TYPE_DRAIN,
     };
     (tag, p)
 }
@@ -395,7 +427,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, FrameError> {
     let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]);
     // validation order is normative (ARCHITECTURE.md): magic, type,
     // length cap — all before the payload buffer is allocated or read
-    if !(TYPE_HELLO..=TYPE_SHUTDOWN).contains(&tag) {
+    if !(TYPE_HELLO..=TYPE_DRAIN).contains(&tag) {
         return Err(FrameError::UnknownType(tag));
     }
     if len > MAX_PAYLOAD {
@@ -461,6 +493,19 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Frame, FrameError> {
             Cur::new("shutdown", payload).finish()?;
             Ok(Frame::Shutdown)
         }
+        TYPE_HEALTH => {
+            let mut c = Cur::new("health", payload);
+            let state = c.u8()?;
+            c.finish()?;
+            if !(HEALTH_PROBE..=HEALTH_DRAINING).contains(&state) {
+                return Err(FrameError::BadHealthState(state));
+            }
+            Ok(Frame::Health { state })
+        }
+        TYPE_DRAIN => {
+            Cur::new("drain", payload).finish()?;
+            Ok(Frame::Drain)
+        }
         other => Err(FrameError::UnknownType(other)),
     }
 }
@@ -500,9 +545,38 @@ mod tests {
                 latencies: vec![0.001, 0.002, 0.101],
             },
             Frame::Shutdown,
+            Frame::Health { state: HEALTH_PROBE },
+            Frame::Health { state: HEALTH_SERVING },
+            Frame::Health { state: HEALTH_DRAINING },
+            Frame::Drain,
         ];
         for f in &frames {
             assert_eq!(&roundtrip(f), f, "{} round-trip", f.name());
+        }
+    }
+
+    #[test]
+    fn unknown_health_state_is_typed_error() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(8); // health
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(42); // bogus state code
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(FrameError::BadHealthState(42)) => {}
+            other => panic!("expected BadHealthState, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn type_beyond_drain_is_still_unknown() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(10); // one past the last assigned tag
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(FrameError::UnknownType(10)) => {}
+            other => panic!("expected UnknownType, got {other:?}"),
         }
     }
 
@@ -663,6 +737,7 @@ mod tests {
             FrameError::TooLarge { len: 1, max: 0 },
             FrameError::BadPayloadLen { frame: "hello", expected: 12, got: 13 },
             FrameError::BadReason(0),
+            FrameError::BadHealthState(3),
             FrameError::Io(std::io::Error::other("boom")),
         ];
         for e in samples {

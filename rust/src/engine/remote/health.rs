@@ -1,0 +1,205 @@
+//! Replica health tracking: the coordinator-side up/down board and the
+//! prober thread that maintains it.
+//!
+//! Every engine owns a [`HealthBoard`] — one up/down flag per physical
+//! shard plus the fault-tolerance counters (hedges, failovers, health
+//! marks).  In-process engines never mark anything down (a thread that
+//! dies closes its queue, which the admit path already filters);
+//! remote engines with a probe interval also run a [`Prober`]: a
+//! background thread that dials each worker between requests, speaks
+//! the `Health` probe exchange, and flips the board so dispatch stops
+//! routing into a corpse *before* a data exchange has to fail.
+//!
+//! The counters live here — not in the per-shard metrics slots —
+//! deliberately: worker `Stats` folds replace slot counters wholesale
+//! (`Metrics::fold_remote`), so a coordinator-side count stored there
+//! would be clobbered by the next stats frame.
+
+use super::frame::{read_frame, write_frame, Frame, HEALTH_PROBE, HEALTH_SERVING};
+use super::transport::Addr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-shard liveness flags plus fault-tolerance counters, shared by
+/// the admit path, the remote backends, and the prober.
+pub struct HealthBoard {
+    up: Vec<AtomicBool>,
+    /// Exchanges re-fired at a sibling replica after the hedge
+    /// deadline expired.
+    pub hedges: AtomicU64,
+    /// Exchanges answered by a sibling replica after the primary
+    /// failed hard (reset/refused), before the retry ladder gave up.
+    pub failovers: AtomicU64,
+    /// Up→down transitions recorded by the prober.
+    pub marks_down: AtomicU64,
+    /// Down→up transitions recorded by the prober.
+    pub marks_up: AtomicU64,
+}
+
+/// Snapshot of a [`HealthBoard`] for reports and test assertions.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealthCounters {
+    /// Hedged exchanges (see [`HealthBoard::hedges`]).
+    pub hedges: u64,
+    /// Failed-over exchanges (see [`HealthBoard::failovers`]).
+    pub failovers: u64,
+    /// Up→down prober transitions.
+    pub marks_down: u64,
+    /// Down→up prober transitions.
+    pub marks_up: u64,
+    /// Shards currently marked down.
+    pub down_now: u64,
+}
+
+impl HealthBoard {
+    /// All-up board for `shards` physical shards.
+    pub fn new(shards: usize) -> Arc<HealthBoard> {
+        Arc::new(HealthBoard {
+            up: (0..shards).map(|_| AtomicBool::new(true)).collect(),
+            hedges: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            marks_down: AtomicU64::new(0),
+            marks_up: AtomicU64::new(0),
+        })
+    }
+
+    /// Is `shard` currently marked serving?  Unknown shard ids read as
+    /// up — the board only ever *narrows* routing.
+    pub fn is_up(&self, shard: usize) -> bool {
+        self.up.get(shard).map(|f| f.load(Ordering::Acquire)).unwrap_or(true)
+    }
+
+    /// Record a probe verdict, counting only transitions.
+    pub fn mark(&self, shard: usize, up: bool) {
+        if let Some(flag) = self.up.get(shard) {
+            let was = flag.swap(up, Ordering::AcqRel);
+            if was != up {
+                if up {
+                    self.marks_up.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.marks_down.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Counter snapshot plus the number of shards currently down.
+    pub fn snapshot(&self) -> HealthCounters {
+        HealthCounters {
+            hedges: self.hedges.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            marks_down: self.marks_down.load(Ordering::Relaxed),
+            marks_up: self.marks_up.load(Ordering::Relaxed),
+            down_now: self.up.iter().filter(|f| !f.load(Ordering::Acquire)).count() as u64,
+        }
+    }
+}
+
+/// One bounded health-probe exchange: dial, read the `Hello`, send a
+/// `Health` probe, read the state reply.  Every read is bounded by
+/// `timeout`, so a wedged worker answers "down", never a hang.
+pub fn probe_health(addr: &Addr, timeout: Duration) -> Result<u8, String> {
+    let mut stream = addr.connect_timeout(timeout).map_err(|e| e.to_string())?;
+    let _ = stream.set_read_timeout(Some(timeout));
+    match read_frame(&mut stream) {
+        Ok(Frame::Hello { .. }) => {}
+        Ok(other) => return Err(format!("expected hello, got {} frame", other.name())),
+        Err(e) => return Err(format!("hello: {e}")),
+    }
+    write_frame(&mut stream, &Frame::Health { state: HEALTH_PROBE }).map_err(|e| e.to_string())?;
+    match read_frame(&mut stream) {
+        Ok(Frame::Health { state }) => Ok(state),
+        Ok(other) => Err(format!("expected health, got {} frame", other.name())),
+        Err(e) => Err(format!("health: {e}")),
+    }
+}
+
+/// Handle to the prober thread; stopping joins it.
+pub struct Prober {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Prober {
+    /// Start probing `addrs` (shard *i* ↔ `addrs[i]`) every `interval`,
+    /// each probe bounded by `timeout`, flipping `board` marks.
+    pub fn spawn(
+        addrs: Vec<Addr>,
+        board: Arc<HealthBoard>,
+        interval: Duration,
+        timeout: Duration,
+    ) -> Prober {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("sobolnet-prober".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    for (i, addr) in addrs.iter().enumerate() {
+                        if stop2.load(Ordering::Acquire) {
+                            return;
+                        }
+                        let serving = matches!(probe_health(addr, timeout), Ok(HEALTH_SERVING));
+                        board.mark(i, serving);
+                    }
+                    // sleep in short slices so stop() never waits a
+                    // whole interval
+                    let mut left = interval;
+                    while !left.is_zero() && !stop2.load(Ordering::Acquire) {
+                        let step = left.min(Duration::from_millis(10));
+                        std::thread::sleep(step);
+                        left -= step;
+                    }
+                }
+            })
+            .expect("spawn prober thread");
+        Prober { stop, handle: Some(handle) }
+    }
+
+    /// Signal the thread and join it (idempotent).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Prober {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn board_counts_transitions_not_reaffirmations() {
+        let b = HealthBoard::new(3);
+        assert!(b.is_up(0) && b.is_up(2));
+        assert!(b.is_up(99), "unknown shards read as up");
+        b.mark(1, true); // reaffirmation: no transition
+        b.mark(1, false);
+        b.mark(1, false); // reaffirmation: no transition
+        b.mark(1, true);
+        b.mark(2, false);
+        let s = b.snapshot();
+        assert_eq!(s.marks_down, 2);
+        assert_eq!(s.marks_up, 1);
+        assert_eq!(s.down_now, 1);
+        assert!(!b.is_up(2));
+        b.mark(99, false); // out of range: ignored, no panic
+        assert_eq!(b.snapshot().marks_down, 2);
+    }
+
+    #[test]
+    fn probe_against_dead_address_is_bounded_error() {
+        let addr = Addr::Unix(std::path::PathBuf::from("/nonexistent/sobolnet-probe.sock"));
+        let start = std::time::Instant::now();
+        assert!(probe_health(&addr, Duration::from_millis(200)).is_err());
+        assert!(start.elapsed() < Duration::from_secs(2));
+    }
+}

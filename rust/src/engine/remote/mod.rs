@@ -34,7 +34,18 @@
 //!   [`InferenceBackend`](crate::engine::InferenceBackend) proxy with
 //!   reconnect-with-backoff;
 //! * [`server`] — [`serve_shard`], the worker-process request loop;
-//! * [`spawn`] — [`SpawnedShards`], child-process lifecycle.
+//! * [`spawn`] — [`SpawnedShards`], child-process lifecycle;
+//! * [`health`] — [`HealthBoard`] (per-shard up/down flags +
+//!   hedge/failover counters) and the [`Prober`] thread keeping it
+//!   current between requests.
+//!
+//! **Fault tolerance** (docs/ARCHITECTURE.md §Fault tolerance): shards
+//! can be built as **replica groups** (`EngineBuilder::replicas`) of
+//! bitwise-interchangeable copies; exchanges that miss a hedge
+//! deadline are re-fired at a sibling, hard failures fail over to one,
+//! and a seeded [`FaultPlan`](transport::FaultPlan) injects
+//! delay/drop/sever/garble faults deterministically for
+//! `tests/chaos.rs`.
 //!
 //! **Metrics are shared-nothing**: each worker process records raw
 //! latency samples locally and ships them (plus shed counters) in
@@ -73,12 +84,14 @@
 
 pub mod client;
 pub mod frame;
+pub mod health;
 pub mod server;
 pub mod spawn;
 pub mod transport;
 
 pub use client::{RemoteBackend, RemoteOptions};
 pub use frame::{Frame, FrameError};
+pub use health::{HealthBoard, HealthCounters, Prober};
 pub use server::serve_shard;
 pub use spawn::{spawn_shards, SpawnSpec, SpawnedShards};
-pub use transport::{Addr, Listener, Stream};
+pub use transport::{Addr, FaultCounts, FaultPlan, Listener, Stream};

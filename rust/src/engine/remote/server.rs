@@ -18,18 +18,31 @@
 //!   (cumulative since start) and its recent **raw** latency samples
 //!   (bounded by [`STATS_SAMPLE_CAP`]) — the shared-nothing half of
 //!   engine-wide percentile merging;
+//! * `Health` (probe) → a `Health` reply carrying the worker's state,
+//!   serving or draining — the coordinator-side prober's signal;
+//! * `Drain` → the worker flips to the draining state (in-flight and
+//!   subsequent requests still answer, but probes now report draining
+//!   so the prober routes new traffic to siblings), acked with a
+//!   `Health` reply;
 //! * `Shutdown` → [`serve_shard`] returns so the process can exit.
 //!
-//! A dropped connection (coordinator restart, transient network) is
-//! not fatal: the loop goes back to `accept`, which is what makes the
-//! coordinator's reconnect-with-backoff work.  Malformed frames from a
-//! stray client are logged and treated as a disconnect — garbage on
-//! the socket can never crash a serving shard.
+//! Connections are accepted **concurrently** (one thread per
+//! connection): the long-lived coordinator data connection never
+//! blocks short-lived health probes out of the listener.  A dropped
+//! connection (coordinator restart, transient network) is not fatal:
+//! its thread ends and the listener keeps accepting, which is what
+//! makes the coordinator's reconnect-with-backoff work.  Malformed
+//! frames from a stray client are logged and treated as a disconnect —
+//! garbage on the socket can never crash a serving shard.
 
-use super::frame::{read_frame, write_frame, Frame, FrameError};
+use super::frame::{
+    read_frame, write_frame, Frame, FrameError, HEALTH_DRAINING, HEALTH_PROBE, HEALTH_SERVING,
+};
 use super::transport::{Listener, Stream};
 use crate::engine::{Engine, RejectReason, Response};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
 
 /// Why a single connection ended.
 enum ConnExit {
@@ -40,8 +53,9 @@ enum ConnExit {
 }
 
 /// Serve `engine` behind `listener` until a `Shutdown` frame arrives.
-/// Accepts connections serially (the coordinator holds exactly one per
-/// shard); returns `Err` only for listener-level I/O failures.
+/// Connections are handled on their own threads (a coordinator data
+/// connection plus any number of health probes); returns `Err` only
+/// for listener-level I/O failures.
 pub fn serve_shard(listener: &Listener, engine: &Engine) -> Result<(), FrameError> {
     // 1-deep idempotency cache, surviving reconnects: a coordinator
     // that lost the connection mid-exchange resends the same request
@@ -50,27 +64,56 @@ pub fn serve_shard(listener: &Listener, engine: &Engine) -> Result<(), FrameErro
     // cache is keyed by (id, payload fingerprint), not id alone: a
     // *restarted* coordinator also starts its ids at 0, and an
     // id-only key would hand its first (different) batch the previous
-    // coordinator's cached logits.
-    let mut last_reply: Option<(u64, u64, Frame)> = None;
-    loop {
-        let mut conn = listener.accept().map_err(FrameError::Io)?;
-        match handle_conn(&mut conn, engine, &mut last_reply) {
-            Ok(ConnExit::Shutdown) => return Ok(()),
-            Ok(ConnExit::Disconnected) => continue,
-            Err(e) => {
-                // bad bytes or a mid-frame hangup: drop the connection,
-                // keep the shard serving
-                crate::log_warn!("shard-worker connection error: {e}");
-                continue;
+    // coordinator's cached logits.  Shared under a mutex across
+    // connection threads — request handling serializes on it, which
+    // matches the protocol (one data connection per shard at a time)
+    // and keeps retried-after-reconnect semantics identical to the
+    // serial-accept implementation.
+    let last_reply: Mutex<Option<(u64, u64, Frame)>> = Mutex::new(None);
+    // serving/draining state machine: Drain flips it once, Health
+    // probes report it
+    let state = AtomicU8::new(HEALTH_SERVING);
+    let shutdown = AtomicBool::new(false);
+    listener.set_nonblocking(true).map_err(FrameError::Io)?;
+    std::thread::scope(|scope| {
+        loop {
+            if shutdown.load(Ordering::Acquire) {
+                return Ok(());
+            }
+            match listener.accept() {
+                Ok(conn) => {
+                    // the listener is nonblocking; the accepted stream
+                    // must not be (inheritance is platform-dependent)
+                    conn.set_nonblocking(false).map_err(FrameError::Io)?;
+                    let (last_reply, state, shutdown) = (&last_reply, &state, &shutdown);
+                    scope.spawn(move || {
+                        let mut conn = conn;
+                        match handle_conn(&mut conn, engine, last_reply, state) {
+                            Ok(ConnExit::Shutdown) => shutdown.store(true, Ordering::Release),
+                            Ok(ConnExit::Disconnected) => {}
+                            Err(e) => {
+                                // bad bytes or a mid-frame hangup: drop
+                                // the connection, keep the shard serving
+                                crate::log_warn!("shard-worker connection error: {e}");
+                            }
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(FrameError::Io(e)),
             }
         }
-    }
+    })
 }
 
 fn handle_conn(
     conn: &mut Stream,
     engine: &Engine,
-    last_reply: &mut Option<(u64, u64, Frame)>,
+    last_reply: &Mutex<Option<(u64, u64, Frame)>>,
+    state: &AtomicU8,
 ) -> Result<ConnExit, FrameError> {
     write_frame(
         conn,
@@ -89,21 +132,32 @@ fn handle_conn(
         match frame {
             Frame::Request { id, rows, features, data } => {
                 let fp = request_fingerprint(rows, features, &data);
-                let hit = last_reply
+                // the cache lock is held across the compute: requests
+                // from racing connections (a reconnect overtaking its
+                // predecessor) serialize, exactly like serial accept did
+                let mut cache = crate::util::sync::plock(last_reply);
+                let hit = cache
                     .as_ref()
                     .map(|(lid, lfp, _)| *lid == id && *lfp == fp)
                     .unwrap_or(false);
                 if !hit {
                     let reply =
                         answer_request(engine, rows as usize, features as usize, &data, id);
-                    *last_reply = Some((id, fp, reply));
+                    *cache = Some((id, fp, reply));
                 }
-                if let Some((_, _, reply)) = last_reply.as_ref() {
+                if let Some((_, _, reply)) = cache.as_ref() {
                     write_frame(conn, reply)?;
                 }
             }
             Frame::StatsRequest => {
                 write_frame(conn, &stats_frame(engine))?;
+            }
+            Frame::Health { state: HEALTH_PROBE } => {
+                write_frame(conn, &Frame::Health { state: state.load(Ordering::Acquire) })?;
+            }
+            Frame::Drain => {
+                state.store(HEALTH_DRAINING, Ordering::Release);
+                write_frame(conn, &Frame::Health { state: HEALTH_DRAINING })?;
             }
             Frame::Shutdown => return Ok(ConnExit::Shutdown),
             // a worker never expects coordinator-bound frame types;

@@ -3,7 +3,11 @@
 //! [`spawn_shards`] launches `n` copies of the `sobolnet shard-worker`
 //! subcommand (or any program speaking the wire protocol), each
 //! listening on its own fresh Unix socket, and waits until every
-//! socket accepts a connection.  The returned [`SpawnedShards`] owns
+//! child completes a `Hello` handshake — a child that merely *binds*
+//! its socket but wedges before serving (slow model build gone wrong)
+//! fails readiness at `ready_timeout` with an error naming the
+//! address, instead of hanging `build_remote`.  The returned
+//! [`SpawnedShards`] owns
 //! the `Child` handles: dropping it kills and reaps every process that
 //! is still alive, so an `Engine` built over spawned shards cannot
 //! leak children — and tests can [`SpawnedShards::kill`] one shard to
@@ -129,6 +133,11 @@ pub fn spawn_shards(n: usize, spec: &SpawnSpec) -> std::io::Result<SpawnedShards
             .arg("--listen")
             .arg(&addr)
             .args(&spec.shard_args)
+            // fault injection is a coordinator-side harness: a child
+            // inheriting the plan would garble its own Hello frames and
+            // make worker startup nondeterministic — worker-process
+            // faults are exercised by killing real processes instead
+            .env_remove("SOBOLNET_FAULTS")
             .stdin(Stdio::null())
             .stdout(Stdio::null())
             .stderr(Stdio::inherit())
@@ -137,8 +146,12 @@ pub fn spawn_shards(n: usize, spec: &SpawnSpec) -> std::io::Result<SpawnedShards
         shards.children.push(Some(child));
         shards.socket_paths.push(path);
     }
-    // readiness: poll-connect each socket (the probe connection is
-    // dropped immediately; the worker just loops back to accept)
+    // readiness: a full Hello handshake per shard, not a bare connect —
+    // binding the socket proves nothing about the serve loop (the
+    // worker binds before its possibly slow model build), and a child
+    // wedged between bind and serve must fail readiness, not hang the
+    // caller.  Each probe attempt is bounded; the probe connection is
+    // dropped immediately (the worker just loops back to accept).
     let deadline = Instant::now() + spec.ready_timeout;
     for i in 0..n {
         let addr = Addr::parse(&shards.addrs[i])
@@ -152,15 +165,23 @@ pub fn spawn_shards(n: usize, spec: &SpawnSpec) -> std::io::Result<SpawnedShards
                     ));
                 }
             }
-            match addr.connect() {
-                Ok(_probe) => break,
+            // bound each attempt so the loop re-checks the child and
+            // the deadline even against a bound-but-wedged socket
+            let left = deadline.saturating_duration_since(Instant::now());
+            let attempt = left.min(Duration::from_millis(250)).max(Duration::from_millis(10));
+            match super::client::RemoteBackend::probe(&addr, attempt) {
+                Ok(_shape) => break,
                 Err(_) if Instant::now() < deadline => {
                     std::thread::sleep(Duration::from_millis(10));
                 }
                 Err(e) => {
                     return Err(std::io::Error::new(
-                        e.kind(),
-                        format!("shard-worker {i} never listened at {}: {e}", shards.addrs[i]),
+                        std::io::ErrorKind::TimedOut,
+                        format!(
+                            "shard-worker {i} at {} not ready within {:?}: \
+                             no Hello handshake ({e})",
+                            shards.addrs[i], spec.ready_timeout
+                        ),
                     ));
                 }
             }

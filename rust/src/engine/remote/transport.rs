@@ -12,11 +12,25 @@
 //! [`Stream`]; both are thin enums over the std types so the frame
 //! codec ([`super::frame`]) reads/writes one `impl Read + Write`
 //! regardless of family.
+//!
+//! # Deterministic fault injection
+//!
+//! [`FaultPlan`] wraps a connected [`Stream`] in a deterministic
+//! chaos layer ([`FaultPlan::wrap`]): every I/O operation rolls a
+//! pseudo-random value derived purely from `(seed, connection index,
+//! operation index)` — no wall clock, no OS entropy — so a fixed seed
+//! replays the identical fault schedule on every run.  Plans come from
+//! the `SOBOLNET_FAULTS` env var ([`FaultPlan::from_env`], read once)
+//! or programmatically via `EngineBuilder::faults`; the spec grammar is
+//! documented on [`FaultPlan::parse`].  `tests/chaos.rs` is the
+//! consumer.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 /// A parsed shard-worker address.
@@ -117,21 +131,34 @@ pub enum Listener {
 }
 
 impl Listener {
-    /// Block for the next inbound connection.
+    /// Block for the next inbound connection (or return `WouldBlock`
+    /// immediately when the listener is nonblocking).
     pub fn accept(&self) -> std::io::Result<Stream> {
         match self {
             Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
             Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
         }
     }
+
+    /// Toggle nonblocking accept; the concurrent worker serve loop
+    /// polls accept so it can also watch its shutdown flag.
+    pub fn set_nonblocking(&self, nonblocking: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Unix(l) => l.set_nonblocking(nonblocking),
+            Listener::Tcp(l) => l.set_nonblocking(nonblocking),
+        }
+    }
 }
 
-/// A connected socket of either family.
+/// A connected socket of either family — or one wrapped in a
+/// deterministic fault-injection layer ([`FaultPlan::wrap`]).
 pub enum Stream {
     /// Unix-domain stream.
     Unix(UnixStream),
     /// TCP stream.
     Tcp(TcpStream),
+    /// A stream with a [`FaultPlan`] interposed on every I/O op.
+    Faulty(Box<FaultStream>),
 }
 
 impl Stream {
@@ -141,6 +168,29 @@ impl Stream {
         match self {
             Stream::Unix(s) => s.set_read_timeout(d),
             Stream::Tcp(s) => s.set_read_timeout(d),
+            Stream::Faulty(f) => f.set_read_timeout(d),
+        }
+    }
+
+    /// Toggle nonblocking mode (accepted connections are returned to
+    /// blocking mode by the serve loop).
+    pub fn set_nonblocking(&self, nonblocking: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_nonblocking(nonblocking),
+            Stream::Tcp(s) => s.set_nonblocking(nonblocking),
+            Stream::Faulty(f) => f.inner.set_nonblocking(nonblocking),
+        }
+    }
+
+    fn shutdown_both(&self) {
+        match self {
+            Stream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            Stream::Faulty(f) => f.inner.shutdown_both(),
         }
     }
 }
@@ -150,6 +200,7 @@ impl Read for Stream {
         match self {
             Stream::Unix(s) => s.read(buf),
             Stream::Tcp(s) => s.read(buf),
+            Stream::Faulty(f) => f.read(buf),
         }
     }
 }
@@ -159,6 +210,7 @@ impl Write for Stream {
         match self {
             Stream::Unix(s) => s.write(buf),
             Stream::Tcp(s) => s.write(buf),
+            Stream::Faulty(f) => f.write(buf),
         }
     }
 
@@ -166,7 +218,314 @@ impl Write for Stream {
         match self {
             Stream::Unix(s) => s.flush(),
             Stream::Tcp(s) => s.flush(),
+            Stream::Faulty(f) => f.flush(),
         }
+    }
+}
+
+/// Injected-fault totals, for chaos-test assertions and log lines.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    /// Reads delayed (including delays converted into read timeouts).
+    pub delays: u64,
+    /// Whole frames swallowed on the write side.
+    pub drops: u64,
+    /// Connections severed mid-conversation.
+    pub severs: u64,
+    /// Frame headers corrupted on the write side.
+    pub garbles: u64,
+}
+
+/// A seeded, deterministic connection-fault schedule.
+///
+/// Probabilities are rolled per I/O operation from a counter-based
+/// hash of `(seed, connection index, operation index)` — two runs with
+/// the same seed and the same I/O sequence inject the identical
+/// faults.  Fault classes:
+///
+/// * **delay** — sleep before a read completes; if the stream has a
+///   read timeout shorter than the injected delay, the read surfaces
+///   the timeout (`WouldBlock`) exactly as a slow peer would.
+/// * **drop** — swallow one entire outbound frame (write-side, gated
+///   on the frame-magic write so framing never desyncs).  The peer
+///   simply never sees the frame; recovery therefore requires a read
+///   timeout or hedge deadline on the caller, as with any lost
+///   message.
+/// * **sever** — shut the socket down both ways mid-conversation;
+///   subsequent ops fail with `ConnectionReset`/`BrokenPipe`.
+/// * **garble** — corrupt an outbound **frame header** (flip a magic
+///   byte).  The receiver detects it (`BadMagic`) and drops the
+///   connection per the wire spec.  Payload bytes are never garbled:
+///   the protocol carries no payload checksum, so undetectable
+///   payload corruption would break the bitwise-determinism contract
+///   rather than exercise recovery.
+pub struct FaultPlan {
+    seed: u64,
+    delay_prob: f64,
+    delay: Duration,
+    drop_prob: f64,
+    sever_prob: f64,
+    garble_prob: f64,
+    conn_seq: AtomicU64,
+    delays: AtomicU64,
+    drops: AtomicU64,
+    severs: AtomicU64,
+    garbles: AtomicU64,
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("seed", &self.seed)
+            .field("delay_prob", &self.delay_prob)
+            .field("delay", &self.delay)
+            .field("drop_prob", &self.drop_prob)
+            .field("sever_prob", &self.sever_prob)
+            .field("garble_prob", &self.garble_prob)
+            .finish()
+    }
+}
+
+impl FaultPlan {
+    /// Parse a fault spec: comma-separated `key=value` pairs.
+    ///
+    /// * `seed=<u64>` — schedule seed (default 0)
+    /// * `delay=<prob>x<ms>` — delay reads with probability `prob`
+    ///   (e.g. `delay=0.25x100`: a quarter of reads stall 100 ms)
+    /// * `drop=<prob>` — swallow outbound frames
+    /// * `sever=<prob>` — cut the connection (per I/O op)
+    /// * `garble=<prob>` — corrupt outbound frame headers
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan {
+            seed: 0,
+            delay_prob: 0.0,
+            delay: Duration::ZERO,
+            drop_prob: 0.0,
+            sever_prob: 0.0,
+            garble_prob: 0.0,
+            conn_seq: AtomicU64::new(0),
+            delays: AtomicU64::new(0),
+            drops: AtomicU64::new(0),
+            severs: AtomicU64::new(0),
+            garbles: AtomicU64::new(0),
+        };
+        let parse_prob = |key: &str, v: &str| -> Result<f64, String> {
+            let p: f64 =
+                v.parse().map_err(|_| format!("fault spec: {key}={v} is not a probability"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("fault spec: {key}={v} must be in [0, 1]"));
+            }
+            Ok(p)
+        };
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec: '{part}' is not key=value"))?;
+            match key {
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| format!("fault spec: seed={value} is not a u64"))?;
+                }
+                "delay" => {
+                    let (prob, ms) = value
+                        .split_once('x')
+                        .ok_or_else(|| format!("fault spec: delay={value} must be <prob>x<ms>"))?;
+                    plan.delay_prob = parse_prob("delay", prob)?;
+                    let ms: u64 = ms
+                        .parse()
+                        .map_err(|_| format!("fault spec: delay={value} has a bad ms count"))?;
+                    plan.delay = Duration::from_millis(ms);
+                }
+                "drop" => plan.drop_prob = parse_prob("drop", value)?,
+                "sever" => plan.sever_prob = parse_prob("sever", value)?,
+                "garble" => plan.garble_prob = parse_prob("garble", value)?,
+                other => return Err(format!("fault spec: unknown key '{other}'")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The process-wide plan from `SOBOLNET_FAULTS`, read and parsed
+    /// once.  A malformed spec panics with the parse error — a chaos
+    /// run with a typo'd spec silently running fault-free would defeat
+    /// the test it was meant to power.
+    pub fn from_env() -> Option<Arc<FaultPlan>> {
+        static PLAN: OnceLock<Option<Arc<FaultPlan>>> = OnceLock::new();
+        PLAN.get_or_init(|| match std::env::var("SOBOLNET_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => match FaultPlan::parse(&spec) {
+                Ok(p) => Some(Arc::new(p)),
+                Err(e) => panic!("invalid SOBOLNET_FAULTS: {e}"),
+            },
+            _ => None,
+        })
+        .clone()
+    }
+
+    /// Interpose this plan on a connected stream.  Each wrapped
+    /// connection gets the next connection index, so a fresh plan plus
+    /// a fixed connect/IO sequence replays identically.
+    pub fn wrap(self: &Arc<Self>, inner: Stream) -> Stream {
+        if matches!(inner, Stream::Faulty(_)) {
+            return inner;
+        }
+        let conn = self.conn_seq.fetch_add(1, Ordering::Relaxed);
+        Stream::Faulty(Box::new(FaultStream {
+            inner,
+            plan: Arc::clone(self),
+            conn,
+            op: 0,
+            read_timeout: None,
+            severed: false,
+            dropping: false,
+        }))
+    }
+
+    /// Injected-fault totals so far.
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            delays: self.delays.load(Ordering::Relaxed),
+            drops: self.drops.load(Ordering::Relaxed),
+            severs: self.severs.load(Ordering::Relaxed),
+            garbles: self.garbles.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The schedule seed (diagnostics).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Counter-based roll in `[0, 1)`: a pure function of
+    /// `(seed, conn, op, salt)`.
+    fn roll(&self, conn: u64, op: u64, salt: u64) -> f64 {
+        let h = splitmix(splitmix(self.seed ^ salt) ^ splitmix(conn) ^ splitmix(op ^ 0xA5A5));
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+const SALT_DELAY: u64 = 0xD1;
+const SALT_DROP: u64 = 0xD2;
+const SALT_SEVER: u64 = 0xD3;
+const SALT_GARBLE: u64 = 0xD4;
+
+/// A [`Stream`] with a [`FaultPlan`] interposed.  Constructed only via
+/// [`FaultPlan::wrap`].
+pub struct FaultStream {
+    inner: Stream,
+    plan: Arc<FaultPlan>,
+    conn: u64,
+    op: u64,
+    read_timeout: Option<Duration>,
+    severed: bool,
+    dropping: bool,
+}
+
+impl FaultStream {
+    fn set_read_timeout(&mut self, d: Option<Duration>) -> std::io::Result<()> {
+        self.read_timeout = d;
+        self.inner.set_read_timeout(d)
+    }
+
+    fn next_op(&mut self) -> u64 {
+        let op = self.op;
+        self.op += 1;
+        op
+    }
+
+    fn sever(&mut self) -> std::io::Error {
+        self.severed = true;
+        self.inner.shutdown_both();
+        self.plan.severs.fetch_add(1, Ordering::Relaxed);
+        std::io::Error::new(std::io::ErrorKind::ConnectionReset, "injected fault: severed")
+    }
+
+    fn severed_err(kind: std::io::ErrorKind) -> std::io::Error {
+        std::io::Error::new(kind, "injected fault: connection severed")
+    }
+}
+
+impl Read for FaultStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.severed {
+            return Err(Self::severed_err(std::io::ErrorKind::ConnectionReset));
+        }
+        let op = self.next_op();
+        if self.plan.roll(self.conn, op, SALT_SEVER) < self.plan.sever_prob {
+            return Err(self.sever());
+        }
+        if self.plan.roll(self.conn, op, SALT_DELAY) < self.plan.delay_prob {
+            self.plan.delays.fetch_add(1, Ordering::Relaxed);
+            match self.read_timeout {
+                // a delay past the caller's read timeout behaves like a
+                // slow peer: sleep out the timeout, surface WouldBlock
+                Some(t) if t <= self.plan.delay => {
+                    std::thread::sleep(t);
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WouldBlock,
+                        "injected fault: delayed past read timeout",
+                    ));
+                }
+                _ => std::thread::sleep(self.plan.delay),
+            }
+        }
+        self.inner.read(buf)
+    }
+}
+
+impl Write for FaultStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.severed {
+            return Err(Self::severed_err(std::io::ErrorKind::BrokenPipe));
+        }
+        if self.dropping {
+            // swallowing the rest of a dropped frame; `flush` ends it
+            return Ok(buf.len());
+        }
+        let op = self.next_op();
+        if self.plan.roll(self.conn, op, SALT_SEVER) < self.plan.sever_prob {
+            return Err(self.sever());
+        }
+        // drop/garble fire only on a frame-magic write so framing on
+        // the wire never silently desyncs (see the FaultPlan docs)
+        if buf == super::frame::MAGIC {
+            if self.plan.roll(self.conn, op, SALT_DROP) < self.plan.drop_prob {
+                self.plan.drops.fetch_add(1, Ordering::Relaxed);
+                self.dropping = true;
+                return Ok(buf.len());
+            }
+            if self.plan.roll(self.conn, op, SALT_GARBLE) < self.plan.garble_prob {
+                self.plan.garbles.fetch_add(1, Ordering::Relaxed);
+                let mut bad = [0u8; 4];
+                bad.copy_from_slice(buf);
+                bad[0] ^= 0xFF;
+                self.inner.write_all(&bad)?;
+                return Ok(buf.len());
+            }
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.severed {
+            return Err(Self::severed_err(std::io::ErrorKind::BrokenPipe));
+        }
+        if self.dropping {
+            self.dropping = false;
+            return Ok(());
+        }
+        self.inner.flush()
     }
 }
 
@@ -210,6 +569,109 @@ mod tests {
         assert_eq!(&echo, b"ping");
         server.join().expect("server thread");
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn fault_spec_grammar() {
+        let p = FaultPlan::parse("seed=42,delay=0.25x100,sever=0.01,garble=0.02,drop=0.05")
+            .expect("full spec");
+        assert_eq!(p.seed(), 42);
+        assert_eq!(p.delay, Duration::from_millis(100));
+        assert_eq!(p.delay_prob, 0.25);
+        assert_eq!(p.drop_prob, 0.05);
+        assert_eq!(p.sever_prob, 0.01);
+        assert_eq!(p.garble_prob, 0.02);
+        // every field is optional; empty spec is a no-op plan
+        let p = FaultPlan::parse("").expect("empty spec");
+        assert_eq!(p.seed(), 0);
+        assert_eq!(p.delay_prob, 0.0);
+        assert!(FaultPlan::parse("seed=notanumber").is_err());
+        assert!(FaultPlan::parse("delay=0.5").is_err(), "delay needs <prob>x<ms>");
+        assert!(FaultPlan::parse("drop=1.5").is_err(), "probability out of range");
+        assert!(FaultPlan::parse("jitter=0.1").is_err(), "unknown key");
+        assert!(FaultPlan::parse("seed").is_err(), "not key=value");
+    }
+
+    #[test]
+    fn fault_rolls_are_deterministic_and_distinct() {
+        let a = FaultPlan::parse("seed=7").unwrap();
+        let b = FaultPlan::parse("seed=7").unwrap();
+        let c = FaultPlan::parse("seed=8").unwrap();
+        let mut same = 0;
+        for conn in 0..4u64 {
+            for op in 0..64u64 {
+                let ra = a.roll(conn, op, SALT_DELAY);
+                assert!((0.0..1.0).contains(&ra));
+                assert_eq!(ra, b.roll(conn, op, SALT_DELAY), "same seed, same schedule");
+                if ra == c.roll(conn, op, SALT_DELAY) {
+                    same += 1;
+                }
+                assert_ne!(
+                    a.roll(conn, op, SALT_DELAY),
+                    a.roll(conn, op, SALT_SEVER),
+                    "salts decorrelate fault classes"
+                );
+            }
+        }
+        assert!(same < 4, "different seeds give different schedules");
+    }
+
+    fn fault_pair(spec: &str) -> (Stream, Stream, Arc<FaultPlan>) {
+        let (a, b) = UnixStream::pair().expect("socketpair");
+        let plan = Arc::new(FaultPlan::parse(spec).unwrap());
+        (plan.wrap(Stream::Unix(a)), Stream::Unix(b), plan)
+    }
+
+    #[test]
+    fn dropped_frames_vanish_whole_and_are_counted() {
+        use crate::engine::remote::frame::{read_frame, write_frame, Frame};
+        // drop=1: every frame is swallowed at the magic write
+        let (mut faulty, mut peer, plan) = fault_pair("drop=1");
+        write_frame(&mut faulty, &Frame::Shutdown).expect("write side reports success");
+        assert_eq!(plan.counts().drops, 1);
+        // the peer never sees a byte: a short read timeout trips
+        peer.set_read_timeout(Some(Duration::from_millis(30))).unwrap();
+        assert!(read_frame(&mut peer).is_err(), "frame was swallowed");
+        // a fresh drop=0 wrap of the same plan delivers normally
+        let (mut ok, mut peer2, _plan2) = fault_pair("drop=0");
+        write_frame(&mut ok, &Frame::Shutdown).expect("write");
+        assert!(matches!(read_frame(&mut peer2), Ok(Frame::Shutdown)));
+    }
+
+    #[test]
+    fn garbled_headers_surface_as_bad_magic() {
+        use crate::engine::remote::frame::{read_frame, write_frame, Frame, FrameError};
+        let (mut faulty, mut peer, plan) = fault_pair("garble=1");
+        write_frame(&mut faulty, &Frame::Shutdown).expect("write completes");
+        assert_eq!(plan.counts().garbles, 1);
+        match read_frame(&mut peer) {
+            Err(FrameError::BadMagic(_)) => {}
+            other => panic!("expected BadMagic from a garbled header, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn severed_connections_fail_both_sides() {
+        let (mut faulty, mut peer, plan) = fault_pair("sever=1");
+        let err = faulty.write(b"SBN1").expect_err("first op severs");
+        assert_eq!(err.kind(), std::io::ErrorKind::ConnectionReset);
+        assert_eq!(plan.counts().severs, 1);
+        // subsequent ops fail without touching the socket
+        assert!(faulty.write(b"x").is_err());
+        assert!(faulty.read(&mut [0u8; 1]).is_err());
+        // the peer sees EOF, not a hang
+        assert_eq!(peer.read(&mut [0u8; 8]).unwrap_or(0), 0);
+    }
+
+    #[test]
+    fn delay_past_read_timeout_surfaces_would_block() {
+        let (mut faulty, _peer, plan) = fault_pair("delay=1x10000");
+        faulty.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        let start = std::time::Instant::now();
+        let err = faulty.read(&mut [0u8; 1]).expect_err("delayed past timeout");
+        assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock);
+        assert!(start.elapsed() < Duration::from_secs(2), "slept the timeout, not the delay");
+        assert_eq!(plan.counts().delays, 1);
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Chaos: replica groups under injected faults and real process kills.
+//!
+//! The determinism contract does not bend under failure — that is the
+//! point of this file.  Every test serves real traffic against real
+//! `shard-worker` processes while something goes wrong (a replica is
+//! hard-killed mid-burst; a seeded [`FaultPlan`] delays, severs, or
+//! garbles the coordinator's connections) and pins the same three
+//! properties:
+//!
+//! 1. **zero wrong bits** — every answer is bitwise equal to the
+//!    sequential reference, no matter which replica produced it or how
+//!    many hedges/failovers/retries it took;
+//! 2. **every ticket resolves** — no request hangs, ever;
+//! 3. **the recovery machinery actually fired** — the hedge/failover/
+//!    mark counters prove the test exercised the path it claims to.
+//!
+//! Fault injection is deterministic: a [`FaultPlan`] rolls
+//! counter-based hashes of `(seed, connection, operation)`, so a fixed
+//! `SOBOLNET_FAULTS` spec yields the same fault schedule on every run
+//! (`delay_plan_hedges_with_zero_wrong_bits_and_is_rerun_deterministic`
+//! pins this end-to-end).  CI runs this file under two fixed seeds and greps the
+//! `[chaos]` lines below into the job log.
+
+use sobolnet::engine::remote::{spawn_shards, FaultPlan, SpawnSpec};
+use sobolnet::engine::{
+    DispatchKind, EngineBuilder, RejectReason, RemoteOptions, Response,
+};
+use sobolnet::nn::init::Init;
+use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::topology::{PathSource, TopologyBuilder};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+const FEATURES: usize = 16;
+const CLASSES: usize = 8;
+const PATHS: usize = 256;
+const SEED: u64 = 42;
+const BATCH: usize = 8;
+
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_sobolnet"))
+}
+
+/// Spawn spec matching [`reference_net`] (same constants, so workers
+/// hold bitwise-identical replicas of the reference).
+fn spec(extra: &[&str]) -> SpawnSpec {
+    let mut args: Vec<String> = vec![
+        "--sizes".into(),
+        format!("{FEATURES},32,32,{CLASSES}"),
+        "--paths".into(),
+        PATHS.to_string(),
+        "--seed".into(),
+        SEED.to_string(),
+        "--batch".into(),
+        BATCH.to_string(),
+        "--max-wait-ms".into(),
+        "1".into(),
+    ];
+    args.extend(extra.iter().map(|s| s.to_string()));
+    SpawnSpec { program: bin(), shard_args: args, ..Default::default() }
+}
+
+/// In-process twin of the model every worker builds from `spec()`.
+fn reference_net() -> SparseMlp {
+    let sizes = [FEATURES, 32, 32, CLASSES];
+    let topo = TopologyBuilder::new(&sizes)
+        .paths(PATHS)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+        .build();
+    SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantRandomSign, seed: SEED, ..Default::default() },
+    )
+}
+
+fn sample(i: usize) -> Vec<f32> {
+    (0..FEATURES).map(|j| ((i * FEATURES + j) as f32 * 0.173).sin()).collect()
+}
+
+fn assert_bitwise_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (k, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: logit {k}: {g} vs {w}");
+    }
+}
+
+/// A plan that injects nothing: pinned to the builder so a
+/// `SOBOLNET_FAULTS` environment plan (CI chaos sweeps) cannot leak
+/// into tests that exercise *process* faults, not *transport* faults.
+fn quiet_plan() -> Arc<FaultPlan> {
+    Arc::new(FaultPlan::parse("seed=1").expect("empty plan"))
+}
+
+/// The acceptance scenario: 2 replica groups × 2 replicas = 4 worker
+/// processes; one replica is hard-killed while a burst is in flight.
+/// Its group keeps serving through the sibling — every ticket resolves
+/// with the exact reference bits, zero `WorkerFailed`, and the
+/// failover counter proves the sibling path carried real traffic.
+#[test]
+fn kill_one_replica_mid_burst_zero_wrong_bits_every_ticket_resolves() {
+    let n = 48usize;
+    // --delay-ms 10 holds batches in the workers so the kill lands
+    // while requests are genuinely in flight
+    let mut shards = spawn_shards(4, &spec(&["--delay-ms", "10"])).expect("spawn 4 workers");
+    let addrs = shards.addrs().to_vec();
+    let engine = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .dispatch(DispatchKind::RoundRobin)
+        .replicas(2)
+        .faults(quiet_plan())
+        .remote_options(RemoteOptions {
+            retry_attempts: 2,
+            retry_backoff: Duration::from_millis(10),
+            stats_every: 0,
+            probe_interval: Duration::from_millis(50),
+            ..Default::default()
+        })
+        .remote(&addrs)
+        .build_remote()
+        .expect("build 2x2 replica-group engine");
+    assert_eq!(engine.workers(), 4);
+    assert_eq!(engine.replicas(), 2);
+
+    let tickets: Vec<_> =
+        (0..n).map(|i| engine.try_submit(sample(i)).expect("admitted")).collect();
+    // kill replica 1 — the second member of group 0 (groups are laid
+    // out group-major: [g0r0, g0r1, g1r0, g1r1])
+    assert!(shards.kill(1), "hard-kill replica 1 mid-burst");
+
+    let mut refnet = reference_net();
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait_timeout(Duration::from_secs(60)) {
+            Some(Response::Logits(l)) => {
+                let want = refnet.forward(&Tensor::from_vec(sample(i), &[1, FEATURES]), false);
+                assert_bitwise_eq(&l, &want.data, &format!("burst answer {i}"));
+            }
+            Some(Response::Rejected(r)) => panic!(
+                "ticket {i} rejected with {r}: a group with a live replica must keep serving"
+            ),
+            None => panic!("ticket {i} did not resolve — tickets never hang, even mid-kill"),
+        }
+    }
+
+    // the sibling path really carried the dead replica's traffic
+    let h = engine.health_counters();
+    assert!(h.failovers >= 1, "kill landed mid-burst, failovers must have fired: {h:?}");
+
+    // the prober notices the corpse and marks it down (bounded wait:
+    // it probes every 50 ms)
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let h = engine.health_counters();
+        if h.marks_down >= 1 && h.down_now >= 1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "prober never marked the killed replica down: {h:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // post-kill traffic keeps serving the exact bits
+    for i in 0..8 {
+        match engine.infer(sample(1000 + i)) {
+            Response::Logits(l) => {
+                let want =
+                    refnet.forward(&Tensor::from_vec(sample(1000 + i), &[1, FEATURES]), false);
+                assert_bitwise_eq(&l, &want.data, &format!("post-kill answer {i}"));
+            }
+            other => panic!("post-kill request {i}: unexpected outcome {other:?}"),
+        }
+    }
+    let h = engine.health_counters();
+    println!(
+        "[chaos] kill-one-replica: hedges={} failovers={} marks_down={} marks_up={} down_now={}",
+        h.hedges, h.failovers, h.marks_down, h.marks_up, h.down_now
+    );
+    engine.shutdown();
+}
+
+/// Serve `n` sequential requests through a 1-group × 2-replica engine
+/// under `plan`, asserting every answer is bitwise-correct.  Returns
+/// the hedge/failover counters observed.
+fn run_under_plan(plan: Arc<FaultPlan>, opts: RemoteOptions, n: usize) -> (u64, u64) {
+    let engine = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .dispatch(DispatchKind::RoundRobin)
+        .replicas(2)
+        .faults(plan)
+        .remote_options(opts)
+        .spawn_workers(1, spec(&[]))
+        .expect("spawn replica pair")
+        .build_remote()
+        .expect("build remote engine");
+    let mut refnet = reference_net();
+    for i in 0..n {
+        match engine.infer(sample(i)) {
+            Response::Logits(l) => {
+                let want = refnet.forward(&Tensor::from_vec(sample(i), &[1, FEATURES]), false);
+                assert_bitwise_eq(&l, &want.data, &format!("under-fault answer {i}"));
+            }
+            Response::Rejected(RejectReason::QueueFull) => {
+                panic!("sequential client cannot fill a queue")
+            }
+            other => panic!("request {i} under faults: unexpected outcome {other:?}"),
+        }
+    }
+    let h = engine.health_counters();
+    engine.shutdown();
+    (h.hedges, h.failovers)
+}
+
+/// Injected-delay plan: responses that the plan delays past the hedge
+/// floor are re-fired at the sibling replica.  Every answer stays
+/// bitwise-correct, the hedge counter is non-zero, and — the
+/// determinism claim — a rerun under the *same spec* injects the same
+/// fault schedule and hedges the same number of times.
+#[test]
+fn delay_plan_hedges_with_zero_wrong_bits_and_is_rerun_deterministic() {
+    // CI overrides the spec to sweep seeds; the default exercises a
+    // ~30% per-read chance of a 50 ms delay against a 15 ms hedge floor
+    let spec_str = std::env::var("SOBOLNET_FAULTS")
+        .unwrap_or_else(|_| "seed=7,delay=0.3x50".to_string());
+    let opts = RemoteOptions {
+        hedge_after: Some(Duration::from_millis(15)),
+        probe_interval: Duration::ZERO,
+        stats_every: 0,
+        ..Default::default()
+    };
+    let n = 24usize;
+
+    let plan_a = Arc::new(FaultPlan::parse(&spec_str).expect("fault spec"));
+    let (hedges_a, failovers_a) = run_under_plan(Arc::clone(&plan_a), opts.clone(), n);
+    let counts_a = plan_a.counts();
+    assert!(hedges_a > 0, "the delay plan must force hedges (spec {spec_str})");
+    assert!(counts_a.delays > 0, "the plan must actually have injected delays");
+
+    // fresh plan, same spec, same traffic: same schedule, same counters
+    let plan_b = Arc::new(FaultPlan::parse(&spec_str).expect("fault spec"));
+    let (hedges_b, failovers_b) = run_under_plan(Arc::clone(&plan_b), opts, n);
+    let counts_b = plan_b.counts();
+    assert_eq!(
+        (hedges_a, failovers_a, counts_a.delays),
+        (hedges_b, failovers_b, counts_b.delays),
+        "fixed SOBOLNET_FAULTS spec must reproduce the same fault schedule"
+    );
+    println!(
+        "[chaos] delay-plan spec={spec_str}: hedges={hedges_a} failovers={failovers_a} \
+         delays={} drops={} severs={} garbles={}",
+        counts_a.delays, counts_a.drops, counts_a.severs, counts_a.garbles
+    );
+}
+
+/// Sever/garble plan: connections die and frame headers corrupt
+/// mid-conversation, yet retries and sibling failover keep every
+/// answer bitwise-correct.  (Corruption is detectable by construction
+/// — the plan only garbles frame magics, never payloads, because the
+/// protocol has no payload checksum to catch a flipped logit bit.)
+#[test]
+fn sever_and_garble_plan_recovers_with_zero_wrong_bits() {
+    let spec_str = "seed=11,sever=0.04,garble=0.04";
+    let plan = Arc::new(FaultPlan::parse(spec_str).expect("fault spec"));
+    let opts = RemoteOptions {
+        retry_backoff: Duration::from_millis(10),
+        probe_interval: Duration::ZERO,
+        stats_every: 0,
+        ..Default::default()
+    };
+    let (hedges, failovers) = run_under_plan(Arc::clone(&plan), opts, 24);
+    let c = plan.counts();
+    assert!(
+        c.severs + c.garbles > 0,
+        "the plan must actually have injected connection faults: {c:?}"
+    );
+    println!(
+        "[chaos] sever-garble-plan spec={spec_str}: hedges={hedges} failovers={failovers} \
+         delays={} drops={} severs={} garbles={}",
+        c.delays, c.drops, c.severs, c.garbles
+    );
+}

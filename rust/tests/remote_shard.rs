@@ -338,6 +338,80 @@ fn resent_request_id_is_answered_from_cache_not_recomputed() {
     write_frame(&mut s, &Frame::Shutdown).expect("shutdown");
 }
 
+/// Readiness means a completed `Hello` handshake, not a bound socket:
+/// a worker wedged between bind and serve (here: `--delay-hello-ms`
+/// holds that window open far past the deadline) must fail
+/// `spawn_shards` at `ready_timeout` with an error naming the address
+/// — never hang the caller.
+#[test]
+fn wedged_after_bind_worker_fails_readiness_with_descriptive_error() {
+    let mut s = spec(&["--delay-hello-ms", "60000"]);
+    s.ready_timeout = Duration::from_millis(800);
+    let start = std::time::Instant::now();
+    let err = spawn_shards(1, &s).expect_err("bound-but-wedged worker must fail readiness");
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "readiness fails at ready_timeout, not whenever the wedge clears"
+    );
+    assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+    let msg = err.to_string();
+    assert!(msg.contains("not ready within"), "describes the failure: {msg}");
+    assert!(msg.contains("unix:"), "names the offending address: {msg}");
+    assert!(msg.contains("Hello") || msg.contains("hello"), "names the missing step: {msg}");
+}
+
+/// A [`Ticket::wait_timeout`] that expires while its exchange is
+/// mid-hedge is dropped cleanly: the late sibling answer lands in a
+/// closed reply channel (no panic), the request still counts exactly
+/// once, and the engine keeps serving bitwise-correct answers.
+#[test]
+fn ticket_timeout_expiring_mid_hedge_drops_late_response_cleanly() {
+    let engine = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .dispatch(DispatchKind::RoundRobin)
+        .replicas(2)
+        .remote_options(RemoteOptions {
+            // every batch takes ~80 ms in the worker, so a 15 ms hedge
+            // floor fires on every exchange; the prober and periodic
+            // stats stay out of the way
+            hedge_after: Some(Duration::from_millis(15)),
+            probe_interval: Duration::ZERO,
+            stats_every: 0,
+            ..Default::default()
+        })
+        .spawn_workers(1, spec(&["--delay-ms", "80"]))
+        .expect("spawn one replica pair")
+        .build_remote()
+        .expect("build remote engine");
+    assert_eq!(engine.workers(), 2, "1 group x 2 replicas = 2 physical shards");
+    assert_eq!(engine.replicas(), 2);
+
+    let t = engine.try_submit(sample(0)).expect("admitted");
+    // expires while the hedged exchange is still waiting on the sibling
+    assert_eq!(t.wait_timeout(Duration::from_millis(30)), None, "ticket expires mid-hedge");
+    drop(t);
+
+    // the late answer must not desync anything: subsequent requests
+    // serve the exact reference bits
+    let mut refnet = reference_net();
+    for i in 1..4 {
+        match engine.infer(sample(i)) {
+            Response::Logits(l) => {
+                let want = refnet.forward(&Tensor::from_vec(sample(i), &[1, FEATURES]), false);
+                assert_bitwise_eq(&l, &want.data, &format!("post-abandon answer {i}"));
+            }
+            other => panic!("post-abandon request {i}: unexpected outcome {other:?}"),
+        }
+    }
+    let h = engine.health_counters();
+    assert!(h.hedges >= 1, "the slow exchanges hedged: {h:?}");
+    // exactly-once accounting: the abandoned request completed once in
+    // the engine (its reply just had no listener), the served three
+    // completed once each — an expired ticket must not double-count
+    assert_eq!(engine.stats().completed, 4, "no double-count from the abandoned hedge");
+    engine.shutdown();
+}
+
 #[test]
 fn garbage_on_the_socket_cannot_take_a_shard_down() {
     let shards = spawn_shards(1, &spec(&[])).expect("spawn");
