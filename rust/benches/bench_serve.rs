@@ -17,6 +17,11 @@
 //! multi-job pool's serving win; a single-job-slot pool flatlines this
 //! scaling).
 //!
+//! A third sweep measures **multi-tenant** serving: N registered
+//! tenants round-robined through a per-shard LRU weight cache
+//! (`serve_tenants_{n}_*` metrics, including the cache hit rate — the
+//! direct tracker of the model registry's serving cost).
+//!
 //! Every figure lands in `BENCH_serve.json` at the repo root
 //! ([`sobolnet::bench::BenchReport`] metrics): per
 //! `(policy, workers)` cell the achieved throughput, merged p50/p99,
@@ -228,6 +233,71 @@ fn main() {
                 tp / contended_tp1.max(1e-12),
             );
         }
+    }
+
+    // --- multi-tenant serving: N registered tenants round-robined by
+    //     a closed burst through a fixed 2-worker engine with a
+    //     4-model per-shard weight cache.  At N ≤ cache capacity every
+    //     lookup after the cold loads hits; past it the LRU churns, so
+    //     the hit rate (and the p99, which absorbs the rebuild cost)
+    //     tracks the cache's effectiveness as tenant count grows.
+    let tenant_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    for &nt in tenant_counts {
+        let reg = Arc::new(sobolnet::registry::Registry::new());
+        for tid in 1..=nt as u64 {
+            let spec = sobolnet::registry::ModelSpec {
+                sizes: vec![FEATURES, 64, 64, CLASSES],
+                paths: 1024,
+                seed: 100 + tid,
+                kernel: sobolnet::nn::kernel::KernelKind::Scalar,
+            };
+            reg.register(tid, spec.clone()).expect("register tenant");
+            let tnet = spec.build();
+            reg.publish(tid, tnet.w.clone(), tnet.bias.clone()).expect("publish v1");
+        }
+        let engine = EngineBuilder::new()
+            .workers(2)
+            .batch(8)
+            .max_wait(Duration::from_micros(200))
+            .queue_depth(0) // closed burst must not shed
+            .dispatch(DispatchKind::RoundRobin)
+            .registry(Arc::clone(&reg))
+            .model_cache(4)
+            .build_model(net.clone(), FEATURES, CLASSES);
+        let t = Timer::start();
+        let tickets: Vec<_> = (0..burst_n)
+            .map(|i| {
+                let tid = (i % nt) as u64 + 1;
+                engine.try_submit_model(tid, sample(i)).expect("tenant admitted")
+            })
+            .collect();
+        for ticket in tickets {
+            assert!(matches!(ticket.wait(), Response::Logits(_)), "tenant request served");
+        }
+        let secs = t.elapsed_secs();
+        let (_, _, p99) = engine.latency_percentiles();
+        // cache counters live on the per-shard worker metrics
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for m in engine.worker_metrics() {
+            hits += m.cache_hits.load(std::sync::atomic::Ordering::Relaxed);
+            misses += m.cache_misses.load(std::sync::atomic::Ordering::Relaxed);
+        }
+        engine.shutdown();
+        let tp = burst_n as f64 / secs.max(1e-12);
+        let hit_rate = if hits + misses > 0 {
+            hits as f64 / (hits + misses) as f64
+        } else {
+            0.0
+        };
+        println!(
+            "bench serve/tenants/{nt}: {tp:.0} req/s p99={:.3}ms \
+             cache hit rate {:.3} ({hits} hits / {misses} misses)",
+            p99 * 1e3,
+            hit_rate,
+        );
+        report.metric(&format!("serve_tenants_{nt}_req_per_sec"), tp);
+        report.metric(&format!("serve_tenants_{nt}_p99_ms"), p99 * 1e3);
+        report.metric(&format!("serve_tenants_{nt}_cache_hit_rate"), hit_rate);
     }
 
     // machine-readable output, tracked across PRs

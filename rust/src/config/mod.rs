@@ -160,6 +160,14 @@ pub struct ServeSection {
     /// Replicas per remote shard group (`1` = no replication; the
     /// spawned/required worker count is `workers × replicas`).
     pub replicas: usize,
+    /// Model-registry snapshot directory for multi-tenant serving
+    /// (empty = in-memory only / no registry; the CLI decides whether
+    /// to attach one — see `sobolnet serve --registry`).
+    pub registry: String,
+    /// Per-shard weight-cache capacity in models (LRU;
+    /// [`crate::registry::cache::ModelCache`]).  Clamped to ≥ 1 by
+    /// `EngineBuilder::from_config`.
+    pub model_cache: usize,
     /// Multi-process subsection (`"remote": {...}`).
     pub remote: RemoteSection,
 }
@@ -175,6 +183,8 @@ impl Default for ServeSection {
             admission: AdmissionPolicy::Block,
             kernel: KernelKind::Auto,
             replicas: 1,
+            registry: String::new(),
+            model_cache: 8,
             remote: RemoteSection::default(),
         }
     }
@@ -211,6 +221,13 @@ impl ServeSection {
                         .ok_or_else(|| format!("unknown serve.kernel '{s}'"))?;
                 }
                 "replicas" => cfg.replicas = val.as_usize().ok_or("serve.replicas int")?,
+                "registry" => {
+                    cfg.registry =
+                        val.as_str().ok_or("serve.registry string")?.to_string()
+                }
+                "model_cache" => {
+                    cfg.model_cache = val.as_usize().ok_or("serve.model_cache int")?
+                }
                 "remote" => cfg.remote = RemoteSection::from_json(val)?,
                 "comment" | "description" => {}
                 other => return Err(format!("unknown serve key '{other}'")),
@@ -237,6 +254,8 @@ impl ServeSection {
         );
         m.insert("kernel".to_string(), JsonValue::String(self.kernel.as_str().to_string()));
         m.insert("replicas".to_string(), JsonValue::Number(self.replicas as f64));
+        m.insert("registry".to_string(), JsonValue::String(self.registry.clone()));
+        m.insert("model_cache".to_string(), JsonValue::Number(self.model_cache as f64));
         m.insert("remote".to_string(), self.remote.to_json());
         JsonValue::Object(m)
     }
@@ -471,6 +490,8 @@ mod tests {
             admission: AdmissionPolicy::ShedOldest,
             kernel: KernelKind::Simd,
             replicas: 2,
+            registry: "/tmp/reg".to_string(),
+            model_cache: 4,
             remote: RemoteSection::default(),
         };
         let text = section.to_json().to_string_compact();
@@ -485,6 +506,17 @@ mod tests {
         assert_eq!(cfg.workers, 3);
         assert_eq!(cfg.dispatch, dflt.dispatch);
         assert_eq!(cfg.kernel, KernelKind::Auto);
+        assert_eq!(cfg.registry, "", "no registry by default");
+        assert_eq!(cfg.model_cache, 8);
+        // multi-tenant knobs parse
+        let j = json::parse(r#"{"registry": "/var/reg", "model_cache": 2}"#).unwrap();
+        let cfg = ServeSection::from_json(&j).unwrap();
+        assert_eq!(cfg.registry, "/var/reg");
+        assert_eq!(cfg.model_cache, 2);
+        assert!(
+            ServeSection::from_json(&json::parse(r#"{"registry": 7}"#).unwrap()).is_err(),
+            "registry must be a string path"
+        );
         // every kernel spelling parses
         for k in ["auto", "scalar", "simd", "sign", "int8"] {
             let j = json::parse(&format!(r#"{{"kernel": "{k}"}}"#)).unwrap();

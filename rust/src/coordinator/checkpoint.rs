@@ -119,12 +119,24 @@ impl Checkpoint {
     }
 
     /// Save to a file.
+    #[deprecated(
+        since = "0.1.0",
+        note = "use `registry::persist::save_checkpoint_file` — the registry \
+                owns checkpoint-file IO now (one String error type shared \
+                with snapshot persistence)"
+    )]
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let f = std::fs::File::create(path)?;
         self.write_to(std::io::BufWriter::new(f))
     }
 
     /// Load from a file.
+    #[deprecated(
+        since = "0.1.0",
+        note = "use `registry::persist::load_checkpoint_file` — the registry \
+                owns checkpoint-file IO now (one String error type shared \
+                with snapshot persistence)"
+    )]
     pub fn load(path: &Path) -> Result<Checkpoint, String> {
         let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
         Self::read_from(std::io::BufReader::new(f))
@@ -150,6 +162,9 @@ mod tests {
     }
 
     #[test]
+    // pins that the deprecated convenience wrappers still function
+    // until their removal; new code goes through registry::persist
+    #[allow(deprecated)]
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join("sobolnet_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();

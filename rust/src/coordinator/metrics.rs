@@ -98,6 +98,15 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Total samples padded into batches (wasted slots).
     pub padded_slots: AtomicU64,
+    /// Per-shard model-cache hits (multi-tenant weight cache,
+    /// [`crate::registry::cache::ModelCache`]).
+    pub cache_hits: AtomicU64,
+    /// Per-shard model-cache misses (each one is a cold load from the
+    /// registry).
+    pub cache_misses: AtomicU64,
+    /// Per-shard model-cache evictions (LRU entry retired at
+    /// capacity).
+    pub cache_evictions: AtomicU64,
     latencies: Mutex<Ring<f64>>,
     batch_sizes: Mutex<Ring<usize>>,
 }
@@ -125,8 +134,23 @@ impl Metrics {
             shed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             padded_slots: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
             latencies: Mutex::new(Ring::new(window)),
             batch_sizes: Mutex::new(Ring::new(window)),
+        }
+    }
+
+    /// Model-cache hit rate `hits / (hits + misses)` over this
+    /// registry's lifetime; `None` before any lookup happened.
+    pub fn cache_hit_rate(&self) -> Option<f64> {
+        let h = self.cache_hits.load(Ordering::Relaxed);
+        let m = self.cache_misses.load(Ordering::Relaxed);
+        if h + m == 0 {
+            None
+        } else {
+            Some(h as f64 / (h + m) as f64)
         }
     }
 
@@ -256,6 +280,10 @@ mod tests {
     fn records_accumulate() {
         let m = Metrics::new();
         assert_eq!(m.window(), DEFAULT_SAMPLE_WINDOW);
+        assert_eq!(m.cache_hit_rate(), None, "no cache lookups yet");
+        m.cache_hits.fetch_add(3, Ordering::Relaxed);
+        m.cache_misses.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.cache_hit_rate(), Some(0.75));
         m.requests.fetch_add(3, Ordering::Relaxed);
         m.record_latency(0.010);
         m.record_latency(0.020);

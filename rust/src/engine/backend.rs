@@ -2,6 +2,8 @@
 //! fixed-size batch, plus the blanket adapter for pure-rust models.
 //! (Moved here from `serve`; `serve` re-exports both names.)
 
+use super::ticket::RejectReason;
+
 /// Something that can classify a fixed-size batch.
 ///
 /// Implemented by the AOT executable wrapper (see
@@ -37,6 +39,31 @@ pub trait InferenceBackend {
     fn infer_rows(&mut self, x: &[f32], rows: usize) -> Vec<f32> {
         let _ = rows;
         self.infer_batch(x)
+    }
+
+    /// Multi-tenant entry point: run `rows` rows against the model
+    /// pinned as `(model_id, version)`.  `(0, 0)` is the default
+    /// (builder-configured) model and must behave exactly like
+    /// [`InferenceBackend::infer_rows`].  The default implementation
+    /// serves *only* the default model — any other key is rejected with
+    /// [`RejectReason::UnknownModel`] — which is correct for legacy
+    /// single-model backends.  Backends that can route by model
+    /// override it: the remote transport ships the key in the request
+    /// frame so the worker *process* resolves it against its own
+    /// registry cache, and engine workers with local tenancy intercept
+    /// non-default keys before this method via their per-shard
+    /// [`ModelCache`](crate::registry::cache::ModelCache).
+    fn infer_rows_model(
+        &mut self,
+        model_id: u64,
+        version: u64,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>, RejectReason> {
+        if (model_id, version) != (0, 0) {
+            return Err(RejectReason::UnknownModel { model_id, version });
+        }
+        Ok(self.infer_rows(x, rows))
     }
 }
 

@@ -89,11 +89,55 @@ impl Batcher {
     }
 }
 
+/// Split `items` into maximal consecutive runs whose `key` is equal,
+/// returned as `(start, end)` index pairs covering the slice in order.
+///
+/// A multi-tenant worker drains one mixed batch from its queue but a
+/// backend execution serves one `(model_id, version)`; this is the
+/// splitting step between the two.  Runs preserve arrival order — the
+/// batcher never reorders across tenants, so a run boundary costs one
+/// extra backend execution, never a fairness inversion.
+pub fn homogeneous_runs<T, K: PartialEq>(
+    items: &[T],
+    key: impl Fn(&T) -> K,
+) -> Vec<(usize, usize)> {
+    let mut runs = Vec::new();
+    let mut start = 0;
+    while start < items.len() {
+        let k = key(&items[start]);
+        let mut end = start + 1;
+        while end < items.len() && key(&items[end]) == k {
+            end += 1;
+        }
+        runs.push((start, end));
+        start = end;
+    }
+    runs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::engine::admission::AdmissionPolicy;
     use std::sync::mpsc::channel;
+
+    #[test]
+    fn homogeneous_runs_split_in_order() {
+        assert!(homogeneous_runs(&[] as &[u32], |&x| x).is_empty());
+        assert_eq!(homogeneous_runs(&[5], |&x| x), vec![(0, 1)]);
+        assert_eq!(homogeneous_runs(&[1, 1, 1], |&x| x), vec![(0, 3)]);
+        // interleaved tenants split at every boundary, in arrival order
+        assert_eq!(
+            homogeneous_runs(&[1, 1, 2, 1, 2, 2], |&x| x),
+            vec![(0, 2), (2, 3), (3, 4), (4, 6)]
+        );
+        // runs cover the slice exactly
+        let items = [3u32, 3, 7, 7, 7, 3];
+        let runs = homogeneous_runs(&items, |&x| x);
+        assert_eq!(runs.iter().map(|&(s, e)| e - s).sum::<usize>(), items.len());
+        assert_eq!(runs[0], (0, 2));
+        assert_eq!(runs.last(), Some(&(5, 6)));
+    }
 
     #[test]
     fn full_batch_flushes_without_waiting() {

@@ -96,13 +96,14 @@ pub use ticket::{RejectReason, Response, Ticket};
 
 pub use crate::coordinator::metrics::Metrics;
 
+use crate::registry::Registry;
 use std::cell::RefCell;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 use ticket::ReplyTx;
-use worker::{EngineRequest, Shard};
+use worker::{EngineRequest, Shard, Tenancy};
 
 thread_local! {
     /// Reused per-thread scratch for the dispatch load snapshot, so the
@@ -147,6 +148,8 @@ pub struct EngineBuilder {
     replicas: usize,
     spawned: Option<SpawnedShards>,
     kernel: Option<crate::nn::kernel::KernelKind>,
+    registry: Option<Arc<Registry>>,
+    model_cache: usize,
 }
 
 impl Default for EngineBuilder {
@@ -164,6 +167,8 @@ impl Default for EngineBuilder {
             replicas: 1,
             spawned: None,
             kernel: None,
+            registry: None,
+            model_cache: 8,
         }
     }
 }
@@ -229,6 +234,29 @@ impl EngineBuilder {
         self
     }
 
+    /// Attach a multi-tenant model [`Registry`]: requests submitted
+    /// with [`Engine::try_submit_model`] resolve their version against
+    /// it **at admission**, worker shards cold-load tenant backends
+    /// from it through their bounded per-shard LRU cache
+    /// ([`EngineBuilder::model_cache`]), and
+    /// [`Engine::publish`] appends new weight versions into it.  All
+    /// tenant specs must match the engine's feature/class/batch shape
+    /// (one batch buffer serves every tenant).  Without a registry the
+    /// engine serves only the default model (`model_id` 0).
+    pub fn registry(mut self, registry: Arc<Registry>) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Per-shard tenant cache bound: how many *built* tenant backends
+    /// each worker shard keeps resident (LRU-evicted past the bound;
+    /// clamped to ≥ 1; default 8).  Evictions/hits/misses land on the
+    /// worker's [`Metrics`] counters.
+    pub fn model_cache(mut self, cap: usize) -> Self {
+        self.model_cache = cap.max(1);
+        self
+    }
+
     /// Use a named built-in dispatch policy.
     pub fn dispatch(mut self, kind: DispatchKind) -> Self {
         self.dispatch = DispatchChoice::Kind(kind);
@@ -254,6 +282,9 @@ impl EngineBuilder {
         self.admission = cfg.admission;
         self.dispatch = DispatchChoice::Kind(cfg.dispatch);
         self.replicas = cfg.replicas.max(1);
+        // the registry *directory* is the CLI's job (it owns the IO and
+        // the error reporting); the cache bound is pure config
+        self.model_cache = cfg.model_cache.max(1);
         self.remote_opts.stats_every = cfg.remote.stats_every;
         self.remote_opts.connect_timeout = Duration::from_millis(cfg.remote.connect_timeout_ms);
         self.remote_opts.retry_attempts = cfg.remote.retry_attempts;
@@ -380,6 +411,10 @@ impl EngineBuilder {
         // concurrently, then collect their metadata
         let mut metas = Vec::with_capacity(n);
         for (wid, factory) in factories.into_iter().enumerate() {
+            let tenancy = self.registry.as_ref().map(|r| Tenancy {
+                registry: Arc::clone(r),
+                cache_cap: self.model_cache,
+            });
             let (shard, meta_rx) = worker::spawn(
                 wid,
                 factory,
@@ -388,6 +423,7 @@ impl EngineBuilder {
                 self.metrics_window,
                 metrics.clone(),
                 dispatch.clone(),
+                tenancy,
             );
             shards.push(shard);
             metas.push(meta_rx);
@@ -420,6 +456,7 @@ impl EngineBuilder {
             batch: batch.expect("at least one worker"),
             health: HealthBoard::new(n),
             remote: None,
+            registry: self.registry,
         }
     }
 
@@ -443,6 +480,13 @@ impl EngineBuilder {
         let spawned = self.spawned.take();
         let opts = self.remote_opts.clone();
         let replicas = self.replicas;
+        // remote engines route tenant keys *through the wire* (the
+        // worker process owns the tenant cache); local worker-side
+        // tenancy would serve tenants in-process instead of remotely,
+        // so the registry is held at the engine (admission-time version
+        // resolution + publish source of truth) but NOT handed to the
+        // coordinator-side worker threads
+        let registry = self.registry.take();
         if addrs.len() % replicas != 0 {
             return Err(std::io::Error::other(format!(
                 "{} remote addresses cannot form groups of {} replicas — the address count \
@@ -526,8 +570,15 @@ impl EngineBuilder {
         };
         let mut engine = self.build_each(factories);
         engine.health = Arc::clone(&board);
-        engine.remote =
-            Some(RemoteShards { metrics: slots, addrs, replicas, prober, _spawned: spawned });
+        engine.registry = registry;
+        engine.remote = Some(RemoteShards {
+            metrics: slots,
+            addrs,
+            replicas,
+            prober,
+            opts,
+            _spawned: spawned,
+        });
         Ok(engine)
     }
 }
@@ -573,6 +624,10 @@ struct RemoteShards {
     replicas: usize,
     /// Health-probe thread; stopped (joined) first in `Engine::stop`.
     prober: Option<remote::Prober>,
+    /// Transport knobs, kept for publish connections (each publish
+    /// dials a *fresh* connection per shard so it never interleaves
+    /// with the strict request/response exchange stream).
+    opts: RemoteOptions,
     /// Held for its `Drop` (kill + reap children); dropped after
     /// `stop()` has joined the workers, whose backends send each child
     /// a graceful `Shutdown` frame first.
@@ -597,6 +652,10 @@ pub struct Engine {
     /// `Arc` with their backends and prober.
     health: Arc<HealthBoard>,
     remote: Option<RemoteShards>,
+    /// Multi-tenant model registry, when attached
+    /// ([`EngineBuilder::registry`]): admission resolves tenant
+    /// versions against it, [`Engine::publish`] appends to it.
+    registry: Option<Arc<Registry>>,
 }
 
 impl Engine {
@@ -675,9 +734,22 @@ impl Engine {
         self.dispatch.name()
     }
 
+    /// Attached model registry, if any.
+    pub fn registry(&self) -> Option<&Arc<Registry>> {
+        self.registry.as_ref()
+    }
+
     /// Route `x` and enqueue it under the reply channel; the common
-    /// path behind both the ticket API and the legacy `submit`.
-    pub(crate) fn admit(&self, x: Vec<f32>, reply: ReplyTx) -> Result<usize, RejectReason> {
+    /// path behind both the ticket API and the legacy `submit`.  The
+    /// `(model_id, version)` key is already resolved — `(0, 0)` is the
+    /// default model — and is carried to the worker verbatim.
+    pub(crate) fn admit(
+        &self,
+        model_id: u64,
+        version: u64,
+        x: Vec<f32>,
+        reply: ReplyTx,
+    ) -> Result<usize, RejectReason> {
         if x.len() != self.features {
             return Err(RejectReason::BadShape { expected: self.features, got: x.len() });
         }
@@ -743,7 +815,13 @@ impl Engine {
         // route to the next live shard so the engine keeps serving on
         // the survivors.  A *full* queue is not failed over: that is
         // backpressure, and spilling would defeat the admission bound.
-        let mut req = EngineRequest { x, reply, t_start: crate::util::timer::Timer::start() };
+        let mut req = EngineRequest {
+            x,
+            model_id,
+            version,
+            reply,
+            t_start: crate::util::timer::Timer::start(),
+        };
         for k in 0..n {
             let i = (idx + k) % n;
             let shard = &self.shards[i];
@@ -789,7 +867,62 @@ impl Engine {
     /// evicted (`ShedOldest`) or its worker dies.
     pub fn try_submit(&self, x: Vec<f32>) -> Result<Ticket, RejectReason> {
         let (tx, rx) = channel();
-        let shard = self.admit(x, ReplyTx::Ticket(tx))?;
+        let shard = self.admit(0, 0, x, ReplyTx::Ticket(tx))?;
+        Ok(Ticket { rx, shard })
+    }
+
+    /// Submit against a registered tenant model.  The model's **latest
+    /// published version is resolved here, at admission** — the
+    /// returned ticket is pinned to it, so a
+    /// [`Engine::publish`] that lands after this call cannot change
+    /// which weights answer it (in-flight requests always complete
+    /// against the version they were admitted under).  Rejections:
+    /// [`RejectReason::UnknownModel`] when no registry is attached, the
+    /// id is unregistered, or it has no published version (detail
+    /// `version` 0); [`RejectReason::BadShape`] when the tenant's spec
+    /// doesn't match the engine's feature/class shape (all tenants of
+    /// one engine share its batch buffer shape).
+    pub fn try_submit_model(&self, model_id: u64, x: Vec<f32>) -> Result<Ticket, RejectReason> {
+        if model_id == 0 {
+            return self.try_submit(x);
+        }
+        let reg = self
+            .registry
+            .as_ref()
+            .ok_or(RejectReason::UnknownModel { model_id, version: 0 })?;
+        let spec =
+            reg.spec(model_id).ok_or(RejectReason::UnknownModel { model_id, version: 0 })?;
+        if spec.features() != self.features {
+            return Err(RejectReason::BadShape {
+                expected: self.features,
+                got: spec.features(),
+            });
+        }
+        if spec.classes() != self.classes {
+            return Err(RejectReason::BadShape { expected: self.classes, got: spec.classes() });
+        }
+        let version = reg
+            .latest_version(model_id)
+            .ok_or(RejectReason::UnknownModel { model_id, version: 0 })?;
+        self.try_submit_pinned(model_id, version, x)
+    }
+
+    /// Submit against an **explicit** `(model_id, version)` without
+    /// resolving the latest version.  This is the replay path of the
+    /// remote server: a coordinator already pinned the version at its
+    /// own admission, and the worker process must honor that pin — a
+    /// publish between the coordinator's admit and this call must not
+    /// upgrade the request.  An unknown key is rejected by the worker
+    /// shard (cold-load failure), not here, so the reject carries
+    /// exactly what the shard knows.
+    pub fn try_submit_pinned(
+        &self,
+        model_id: u64,
+        version: u64,
+        x: Vec<f32>,
+    ) -> Result<Ticket, RejectReason> {
+        let (tx, rx) = channel();
+        let shard = self.admit(model_id, version, x, ReplyTx::Ticket(tx))?;
         Ok(Ticket { rx, shard })
     }
 
@@ -799,6 +932,63 @@ impl Engine {
             Ok(ticket) => ticket.wait(),
             Err(reason) => Response::Rejected(reason),
         }
+    }
+
+    /// Convenience: submit against a tenant model and wait.
+    pub fn infer_model(&self, model_id: u64, x: Vec<f32>) -> Response {
+        match self.try_submit_model(model_id, x) {
+            Ok(ticket) => ticket.wait(),
+            Err(reason) => Response::Rejected(reason),
+        }
+    }
+
+    /// **Hot snapshot publish**: append `(w, bias)` as the next version
+    /// of `model_id` and make it live without dropping or corrupting
+    /// in-flight traffic.  Returns the new version number.
+    ///
+    /// Ordering is the whole contract:
+    ///
+    /// 1. the new version is pushed to every **remote** worker process
+    ///    first (fresh connection per shard — never interleaved with
+    ///    the request/response exchange stream), so no worker can be
+    ///    asked for a version it has never heard of;
+    /// 2. only then is it committed to the engine's local registry,
+    ///    which is the instant [`Engine::try_submit_model`] starts
+    ///    resolving to it.
+    ///
+    /// Tickets admitted before the commit carry their old pinned
+    /// version and complete bitwise-identically against it (worker
+    /// caches key by `(model_id, version)`; snapshots are immutable).
+    /// If a remote push fails the publish returns an error and is
+    /// **not** committed — already-pushed shards merely hold an unused
+    /// version that admission never resolves to.
+    pub fn publish(
+        &self,
+        model_id: u64,
+        w: Vec<Vec<f32>>,
+        bias: Vec<Vec<f32>>,
+    ) -> Result<u64, String> {
+        let reg = self.registry.as_ref().ok_or_else(|| {
+            "engine has no registry attached (EngineBuilder::registry)".to_string()
+        })?;
+        let spec = reg
+            .spec(model_id)
+            .ok_or_else(|| format!("model {model_id} is not registered"))?;
+        spec.validate_weights(&w, &bias)?;
+        let version = reg.latest_version(model_id).map_or(1, |v| v + 1);
+        if let Some(r) = &self.remote {
+            let snap = crate::registry::Snapshot {
+                version,
+                w: w.clone(),
+                bias: bias.clone(),
+            };
+            for addr in &r.addrs {
+                remote::publish_to(addr, &r.opts, model_id, &spec, &snap)
+                    .map_err(|e| format!("publish v{version} to {addr}: {e}"))?;
+            }
+        }
+        reg.publish_at(model_id, version, w, bias)?;
+        Ok(version)
     }
 
     /// Per-worker metrics, shard order.

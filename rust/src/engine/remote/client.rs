@@ -48,7 +48,9 @@ use super::frame::{read_frame, write_frame, Frame};
 use super::health::HealthBoard;
 use super::transport::{Addr, FaultPlan, Stream};
 use crate::coordinator::metrics::Metrics;
+use crate::engine::ticket::RejectReason;
 use crate::engine::InferenceBackend;
+use crate::registry::{ModelSpec, Snapshot};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -124,12 +126,18 @@ enum ExchangeFail {
     Timeout(String),
     /// The exchange is unrecoverable on this connection.
     Hard(String),
+    /// The worker answered with a *definitive* reject that no retry,
+    /// hedge, or failover can change (it doesn't know the pinned
+    /// `(model_id, version)`) — propagate it to the ticket instead of
+    /// burning the ladder.
+    Rejected(RejectReason),
 }
 
 impl ExchangeFail {
     fn msg(self) -> String {
         match self {
             ExchangeFail::Timeout(m) | ExchangeFail::Hard(m) => m,
+            ExchangeFail::Rejected(r) => format!("worker rejected batch: {r}"),
         }
     }
 }
@@ -313,18 +321,36 @@ impl RemoteBackend {
         self.lat_n += 1;
     }
 
-    /// Read and validate one `Response` for `id` from `stream`.
+    /// Read and validate one `Response` for `id` (pinned to
+    /// `(model_id, version)`) from `stream`.
     fn read_response(
         stream: &mut Stream,
         id: u64,
+        model_id: u64,
+        version: u64,
         rows: usize,
         classes: usize,
     ) -> Result<Vec<f32>, ExchangeFail> {
         match read_frame(stream) {
-            Ok(Frame::Response { id: rid, rows: rrows, classes: rclasses, data }) => {
+            Ok(Frame::Response {
+                id: rid,
+                model_id: rmodel,
+                version: rversion,
+                rows: rrows,
+                classes: rclasses,
+                data,
+            }) => {
                 if rid != id {
                     return Err(ExchangeFail::Hard(format!(
                         "response id {rid} != request id {id}"
+                    )));
+                }
+                if (rmodel, rversion) != (model_id, version) {
+                    // a worker that re-resolved the version would break
+                    // admission-time pinning — treat it as corruption
+                    return Err(ExchangeFail::Hard(format!(
+                        "response model {rmodel} v{rversion} != pinned model {model_id} \
+                         v{version}"
                     )));
                 }
                 if (rrows as usize, rclasses as usize) != (rows, classes)
@@ -340,6 +366,9 @@ impl RemoteBackend {
                     )));
                 }
                 Ok(data)
+            }
+            Ok(Frame::Reject { reason: reason @ RejectReason::UnknownModel { .. }, .. }) => {
+                Err(ExchangeFail::Rejected(reason))
             }
             Ok(Frame::Reject { reason, .. }) => {
                 Err(ExchangeFail::Hard(format!("worker rejected batch: {reason}")))
@@ -361,13 +390,21 @@ impl RemoteBackend {
     /// stream.  With hedging active, the response read is bounded by
     /// the hedge deadline; a deadline miss surfaces as
     /// [`ExchangeFail::Timeout`] for the caller to hedge on.
-    fn exchange(&mut self, id: u64, x: &[f32], rows: usize) -> Result<Vec<f32>, ExchangeFail> {
+    fn exchange(
+        &mut self,
+        id: u64,
+        key: (u64, u64),
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>, ExchangeFail> {
         let deadline = self.hedge_deadline();
         let classes = self.classes;
         let stream =
             self.stream.as_mut().ok_or_else(|| ExchangeFail::Hard("not connected".into()))?;
         let req = Frame::Request {
             id,
+            model_id: key.0,
+            version: key.1,
             rows: rows as u32,
             features: self.features as u32,
             data: x[..rows * self.features].to_vec(),
@@ -375,7 +412,7 @@ impl RemoteBackend {
         write_frame(stream, &req).map_err(|e| ExchangeFail::Hard(e.to_string()))?;
         let _ = stream.set_read_timeout(deadline);
         let started = Instant::now();
-        let res = Self::read_response(stream, id, rows, classes);
+        let res = Self::read_response(stream, id, key.0, key.1, rows, classes);
         let _ = stream.set_read_timeout(None);
         if res.is_ok() {
             self.observe_latency(started.elapsed());
@@ -389,37 +426,48 @@ impl RemoteBackend {
     /// returns the exact bits the primary would have.  Every step is
     /// bounded: dial by [`BACKOFF_CAP`], the response read by
     /// [`SIBLING_READ_TIMEOUT`].
-    fn exchange_via_sibling(&mut self, id: u64, x: &[f32], rows: usize) -> Result<Vec<f32>, String> {
-        let mut last = String::from("no sibling replicas");
+    fn exchange_via_sibling(
+        &mut self,
+        id: u64,
+        key: (u64, u64),
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>, ExchangeFail> {
+        let mut last = ExchangeFail::Hard(String::from("no sibling replicas"));
         for i in 0..self.siblings.len() {
             let sib = self.siblings[i].clone();
             let (mut stream, f, c, cap) = match Self::dial(&sib, BACKOFF_CAP, self.faults.as_ref())
             {
                 Ok(ok) => ok,
                 Err(e) => {
-                    last = format!("sibling {sib}: {e}");
+                    last = ExchangeFail::Hard(format!("sibling {sib}: {e}"));
                     continue;
                 }
             };
             if (f, c, cap) != (self.features, self.classes, self.capacity) {
-                last = format!("sibling {sib}: shape mismatch {f}x{c} cap {cap}");
+                last = ExchangeFail::Hard(format!("sibling {sib}: shape mismatch {f}x{c} cap {cap}"));
                 continue;
             }
             let req = Frame::Request {
                 id,
+                model_id: key.0,
+                version: key.1,
                 rows: rows as u32,
                 features: self.features as u32,
                 data: x[..rows * self.features].to_vec(),
             };
             if let Err(e) = write_frame(&mut stream, &req) {
-                last = format!("sibling {sib}: {e}");
+                last = ExchangeFail::Hard(format!("sibling {sib}: {e}"));
                 continue;
             }
             let _ = stream.set_read_timeout(Some(SIBLING_READ_TIMEOUT));
-            match Self::read_response(&mut stream, id, rows, self.classes) {
+            match Self::read_response(&mut stream, id, key.0, key.1, rows, self.classes) {
                 Ok(data) => return Ok(data),
+                // a definitive reject from a bitwise-interchangeable
+                // sibling is definitive for the group
+                Err(r @ ExchangeFail::Rejected(_)) => return Err(r),
                 Err(e) => {
-                    last = format!("sibling {sib}: {}", e.msg());
+                    last = ExchangeFail::Hard(format!("sibling {sib}: {}", e.msg()));
                     continue;
                 }
             }
@@ -428,18 +476,26 @@ impl RemoteBackend {
     }
 
     /// Hard-failure failover: try the siblings, count a failover on
-    /// success.
-    fn try_failover(&mut self, id: u64, x: &[f32], rows: usize) -> Option<Vec<f32>> {
+    /// success.  `Some(Err(_))` is a definitive reject (no point
+    /// continuing the ladder); `None` means the siblings couldn't help.
+    fn try_failover(
+        &mut self,
+        id: u64,
+        key: (u64, u64),
+        x: &[f32],
+        rows: usize,
+    ) -> Option<Result<Vec<f32>, RejectReason>> {
         if self.siblings.is_empty() {
             return None;
         }
-        match self.exchange_via_sibling(id, x, rows) {
+        match self.exchange_via_sibling(id, key, x, rows) {
             Ok(data) => {
                 if let Some(board) = &self.board {
                     board.failovers.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 }
-                Some(data)
+                Some(Ok(data))
             }
+            Err(ExchangeFail::Rejected(r)) => Some(Err(r)),
             Err(_) => None,
         }
     }
@@ -489,8 +545,45 @@ impl InferenceBackend for RemoteBackend {
     /// shard).  Returns `rows × classes` logits — exactly what the
     /// engine worker reads.
     fn infer_rows(&mut self, x: &[f32], rows: usize) -> Vec<f32> {
+        match self.infer_keyed(0, 0, x, rows) {
+            Ok(logits) => logits,
+            // the default model always exists on the worker — a reject
+            // here is a protocol violation, handled like worker death
+            Err(r) => panic!("remote shard {} rejected default-model batch: {r}", self.addr),
+        }
+    }
+
+    /// Tenant path: ship the key with the batch; the worker process
+    /// resolves it against its own registry cache.  A worker that
+    /// doesn't know the pinned `(model_id, version)` answers with a
+    /// definitive [`RejectReason::UnknownModel`], which propagates to
+    /// the tickets instead of burning the retry ladder.
+    fn infer_rows_model(
+        &mut self,
+        model_id: u64,
+        version: u64,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>, RejectReason> {
+        self.infer_keyed(model_id, version, x, rows)
+    }
+}
+
+impl RemoteBackend {
+    /// The retry/hedge/failover ladder shared by the default and
+    /// tenant paths.  `Err` carries only *definitive* rejects; every
+    /// transient failure either recovers inside the ladder or panics
+    /// the shard (the engine's worker-death path).
+    fn infer_keyed(
+        &mut self,
+        model_id: u64,
+        version: u64,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>, RejectReason> {
         assert_eq!(x.len(), self.capacity * self.features, "remote infer input shape");
         assert!(rows <= self.capacity, "rows within batch capacity");
+        let key = (model_id, version);
         let id = self.next_id;
         self.next_id += 1;
         let mut last_err = String::new();
@@ -507,14 +600,14 @@ impl InferenceBackend for RemoteBackend {
                     // primary unreachable (killed worker): a sibling
                     // replica can answer with identical bits — route
                     // around the corpse before burning backoff on it
-                    if let Some(logits) = self.try_failover(id, x, rows) {
+                    if let Some(outcome) = self.try_failover(id, key, x, rows) {
                         self.batches += 1;
-                        return logits;
+                        return outcome;
                     }
                     continue;
                 }
             }
-            match self.exchange(id, x, rows) {
+            match self.exchange(id, key, x, rows) {
                 Ok(logits) => {
                     self.batches += 1;
                     if self.opts.stats_every > 0 && self.batches % self.opts.stats_every == 0 {
@@ -525,8 +618,9 @@ impl InferenceBackend for RemoteBackend {
                             self.stream = None;
                         }
                     }
-                    return logits;
+                    return Ok(logits);
                 }
+                Err(ExchangeFail::Rejected(r)) => return Err(r),
                 Err(ExchangeFail::Timeout(e)) => {
                     // hedge: sever the primary first — its late reply
                     // must never desync the strict request/response
@@ -536,20 +630,23 @@ impl InferenceBackend for RemoteBackend {
                     if let Some(board) = &self.board {
                         board.hedges.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     }
-                    match self.exchange_via_sibling(id, x, rows) {
+                    match self.exchange_via_sibling(id, key, x, rows) {
                         Ok(logits) => {
                             self.batches += 1;
-                            return logits;
+                            return Ok(logits);
                         }
-                        Err(e2) => last_err = format!("hedge after timeout ({e}): {e2}"),
+                        Err(ExchangeFail::Rejected(r)) => return Err(r),
+                        Err(e2) => {
+                            last_err = format!("hedge after timeout ({e}): {}", e2.msg())
+                        }
                     }
                 }
                 Err(ExchangeFail::Hard(e)) => {
                     last_err = e;
                     self.stream = None;
-                    if let Some(logits) = self.try_failover(id, x, rows) {
+                    if let Some(outcome) = self.try_failover(id, key, x, rows) {
                         self.batches += 1;
-                        return logits;
+                        return outcome;
                     }
                 }
             }
@@ -559,6 +656,49 @@ impl InferenceBackend for RemoteBackend {
             self.addr,
             self.opts.retry_attempts + 1
         );
+    }
+}
+
+/// Push one snapshot into a worker process over a **fresh** connection
+/// (Hello handshake → `Publish` → `PublishAck`), never the live
+/// exchange stream — a publish racing an in-flight request must not
+/// interleave with the strict request/response conversation.  Bounded
+/// end to end by [`RemoteOptions::connect_timeout`] on the dial and on
+/// the ack read.  Publish connections are deliberately not
+/// fault-injected: chaos plans exercise the data path, and a
+/// half-applied publish would make every later bitwise assertion
+/// meaningless.
+pub fn publish_to(
+    addr: &str,
+    opts: &RemoteOptions,
+    model_id: u64,
+    spec: &ModelSpec,
+    snap: &Snapshot,
+) -> Result<(), String> {
+    let addr = Addr::parse(addr)?;
+    let (mut stream, _f, _c, _cap) = RemoteBackend::dial(&addr, opts.connect_timeout, None)?;
+    let frame = Frame::Publish {
+        model_id,
+        version: snap.version,
+        spec: spec.clone(),
+        w: snap.w.clone(),
+        bias: snap.bias.clone(),
+    };
+    write_frame(&mut stream, &frame).map_err(|e| format!("publish to {addr}: {e}"))?;
+    let _ = stream.set_read_timeout(Some(opts.connect_timeout));
+    match read_frame(&mut stream) {
+        Ok(Frame::PublishAck { model_id: am, version: av }) => {
+            if (am, av) != (model_id, snap.version) {
+                return Err(format!(
+                    "{addr} acked model {am} v{av}, expected model {model_id} v{}",
+                    snap.version
+                ));
+            }
+            Ok(())
+        }
+        Ok(Frame::Reject { reason, .. }) => Err(format!("{addr} refused publish: {reason}")),
+        Ok(other) => Err(format!("{addr}: expected publish-ack, got {} frame", other.name())),
+        Err(e) => Err(format!("{addr}: publish-ack: {e}")),
     }
 }
 

@@ -8,11 +8,21 @@
 //!
 //! ```text
 //! offset  size  field
-//! 0       4     magic  b"SBN1" (protocol version is the last byte)
+//! 0       4     magic  b"SBN2" (protocol version is the last byte)
 //! 4       1     type   tag (see the `TYPE_*` constants)
 //! 5       4     len    payload length, u32 little-endian, ≤ MAX_PAYLOAD
 //! 9       len   payload (fields little-endian, f32/f64 as IEEE-754 bits)
 //! ```
+//!
+//! **Protocol version 2** (the multi-tenant registry PR) added a
+//! `model_id + version` pair to `Request`/`Response`, widened the
+//! `Reject` detail fields to u64 (they now carry model ids), and
+//! introduced the `Publish`/`PublishAck` frames for hot snapshot
+//! publication.  Those are *silent* layout changes — an SBN1 peer
+//! would misparse every data frame — so the magic's version byte was
+//! bumped and a peer speaking any other `SBN*` version is rejected
+//! with the descriptive [`FrameError::VersionMismatch`] instead of
+//! the generic bad-magic error.
 //!
 //! f32 payloads are carried as raw little-endian IEEE-754 bits
 //! (`to_le_bytes`/`from_le_bytes`), so a value crosses the wire
@@ -28,10 +38,13 @@
 //! buffer is reserved).
 
 use crate::engine::RejectReason;
+use crate::nn::kernel::KernelKind;
+use crate::registry::ModelSpec;
 use std::io::{Read, Write};
 
-/// Frame magic; the trailing byte is the protocol version.
-pub const MAGIC: [u8; 4] = *b"SBN1";
+/// Frame magic; the trailing byte is the protocol version (`'2'`
+/// since `model_id` entered the data frames — see the module docs).
+pub const MAGIC: [u8; 4] = *b"SBN2";
 
 /// Hard cap on a frame payload (64 MiB): a corrupt or hostile length
 /// header is rejected *before* allocation.
@@ -46,6 +59,8 @@ const TYPE_STATS: u8 = 6;
 const TYPE_SHUTDOWN: u8 = 7;
 const TYPE_HEALTH: u8 = 8;
 const TYPE_DRAIN: u8 = 9;
+const TYPE_PUBLISH: u8 = 10;
+const TYPE_PUBLISH_ACK: u8 = 11;
 
 /// `Health` state: coordinator → worker probe (asks "how are you?").
 pub const HEALTH_PROBE: u8 = 0;
@@ -65,9 +80,18 @@ pub enum FrameError {
     Closed,
     /// Stream ended (or errored with `UnexpectedEof`) mid-frame.
     Truncated,
-    /// First four bytes were not [`MAGIC`] (version mismatches land
-    /// here too — the version is the last magic byte).
+    /// First four bytes were not [`MAGIC`] and not an `SBN*` prefix at
+    /// all — noise, not a sobolnet peer.
     BadMagic([u8; 4]),
+    /// The peer *is* a sobolnet process, but speaks a different
+    /// protocol version (first three bytes matched `b"SBN"`, the
+    /// version byte did not) — e.g. an old SBN1 worker answering an
+    /// SBN2 coordinator.  Split from [`FrameError::BadMagic`] so
+    /// operators see "upgrade that peer", not "garbage on the wire".
+    VersionMismatch {
+        /// The peer's version byte (the 4th magic byte).
+        got: u8,
+    },
     /// Unknown frame type tag.
     UnknownType(u8),
     /// Declared payload length exceeds [`MAX_PAYLOAD`].
@@ -90,6 +114,8 @@ pub enum FrameError {
     BadReason(u8),
     /// Health frame carried an unknown state code.
     BadHealthState(u8),
+    /// Publish frame carried an unknown kernel code.
+    BadKernelCode(u8),
 }
 
 impl std::fmt::Display for FrameError {
@@ -99,6 +125,14 @@ impl std::fmt::Display for FrameError {
             FrameError::Closed => write!(f, "connection closed"),
             FrameError::Truncated => write!(f, "frame truncated mid-read"),
             FrameError::BadMagic(m) => write!(f, "bad frame magic {m:?} (want {MAGIC:?})"),
+            FrameError::VersionMismatch { got } => write!(
+                f,
+                "peer speaks wire protocol version '{}' but this build requires \
+                 version '{}' (magic {}) — upgrade the older side",
+                *got as char,
+                MAGIC[3] as char,
+                std::str::from_utf8(&MAGIC).unwrap_or("SBN?"),
+            ),
             FrameError::UnknownType(t) => write!(f, "unknown frame type {t}"),
             FrameError::TooLarge { len, max } => {
                 write!(f, "frame payload {len} exceeds cap {max}")
@@ -108,6 +142,7 @@ impl std::fmt::Display for FrameError {
             }
             FrameError::BadReason(c) => write!(f, "unknown reject reason code {c}"),
             FrameError::BadHealthState(s) => write!(f, "unknown health state code {s}"),
+            FrameError::BadKernelCode(k) => write!(f, "unknown kernel code {k}"),
         }
     }
 }
@@ -140,6 +175,14 @@ pub enum Frame {
     Request {
         /// Request id, echoed by the matching `Response`/`Reject`.
         id: u64,
+        /// Tenant model this batch runs against (`0` = the worker's
+        /// default model, the single-tenant path).
+        model_id: u64,
+        /// Snapshot version the batch is **pinned** to — resolved by
+        /// the coordinator at admission, never re-resolved by the
+        /// worker, so a publish racing this request cannot change
+        /// which weights answer it (`0` = default model, unversioned).
+        version: u64,
         /// Rows in the batch (zero is legal: the reply is an empty
         /// `Response`).
         rows: u32,
@@ -152,6 +195,11 @@ pub enum Frame {
     Response {
         /// Id of the request this answers.
         id: u64,
+        /// Model that produced these logits (echoes the request).
+        model_id: u64,
+        /// Snapshot version that produced these logits (echoes the
+        /// request) — lets the coordinator verify the pin survived.
+        version: u64,
         /// Rows answered.
         rows: u32,
         /// Classes per row.
@@ -197,6 +245,35 @@ pub enum Frame {
     /// `Health` probes answer [`HEALTH_DRAINING`] so the prober routes
     /// new traffic elsewhere.
     Drain,
+    /// Hot snapshot publish: push a new weight version of a tenant
+    /// model into a live worker.  Carries the full deterministic spec
+    /// so a worker that has never seen the model can register it, plus
+    /// the weight payload at a coordinator-assigned version (the
+    /// coordinator's registry is authoritative for version numbers).
+    /// The worker stores the snapshot and answers [`Frame::PublishAck`];
+    /// requests already in flight keep resolving against the version
+    /// they were admitted under.
+    Publish {
+        /// Tenant model being published.
+        model_id: u64,
+        /// Coordinator-assigned snapshot version (1-based).
+        version: u64,
+        /// Deterministic rebuild spec (sizes/paths/seed/kernel).
+        spec: ModelSpec,
+        /// Per-transition path weights, `w[t][p]`.
+        w: Vec<Vec<f32>>,
+        /// Per-layer biases (empty vecs when bias is disabled).
+        bias: Vec<Vec<f32>>,
+    },
+    /// Worker's acknowledgement of a [`Frame::Publish`]: the snapshot
+    /// is stored and every request admitted from now on may resolve to
+    /// it.
+    PublishAck {
+        /// Model id echoed from the publish.
+        model_id: u64,
+        /// Version echoed from the publish.
+        version: u64,
+    },
 }
 
 impl Frame {
@@ -212,26 +289,55 @@ impl Frame {
             Frame::Shutdown => "shutdown",
             Frame::Health { .. } => "health",
             Frame::Drain => "drain",
+            Frame::Publish { .. } => "publish",
+            Frame::PublishAck { .. } => "publish-ack",
         }
     }
 }
 
-fn reason_code(r: RejectReason) -> (u8, u32, u32) {
+// reject detail fields are u64 since protocol version 2: code 5
+// carries a model id + version, which do not fit the old u32 pair
+fn reason_code(r: RejectReason) -> (u8, u64, u64) {
     match r {
         RejectReason::QueueFull => (1, 0, 0),
         RejectReason::ShuttingDown => (2, 0, 0),
-        RejectReason::BadShape { expected, got } => (3, expected as u32, got as u32),
+        RejectReason::BadShape { expected, got } => (3, expected as u64, got as u64),
         RejectReason::WorkerFailed => (4, 0, 0),
+        RejectReason::UnknownModel { model_id, version } => (5, model_id, version),
     }
 }
 
-fn reason_from_code(code: u8, a: u32, b: u32) -> Result<RejectReason, FrameError> {
+fn reason_from_code(code: u8, a: u64, b: u64) -> Result<RejectReason, FrameError> {
     match code {
         1 => Ok(RejectReason::QueueFull),
         2 => Ok(RejectReason::ShuttingDown),
         3 => Ok(RejectReason::BadShape { expected: a as usize, got: b as usize }),
         4 => Ok(RejectReason::WorkerFailed),
+        5 => Ok(RejectReason::UnknownModel { model_id: a, version: b }),
         other => Err(FrameError::BadReason(other)),
+    }
+}
+
+/// Wire code of a [`KernelKind`] (Publish frames carry the spec's
+/// kernel as one byte).
+fn kernel_code(k: KernelKind) -> u8 {
+    match k {
+        KernelKind::Auto => 0,
+        KernelKind::Scalar => 1,
+        KernelKind::Simd => 2,
+        KernelKind::Sign => 3,
+        KernelKind::Int8 => 4,
+    }
+}
+
+fn kernel_from_code(code: u8) -> Result<KernelKind, FrameError> {
+    match code {
+        0 => Ok(KernelKind::Auto),
+        1 => Ok(KernelKind::Scalar),
+        2 => Ok(KernelKind::Simd),
+        3 => Ok(KernelKind::Sign),
+        4 => Ok(KernelKind::Int8),
+        other => Err(FrameError::BadKernelCode(other)),
     }
 }
 
@@ -254,6 +360,16 @@ fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
     out.reserve(vs.len() * 8);
     for v in vs {
         out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Length-prefixed list of length-prefixed f32 vectors (the weight /
+/// bias payloads of a `Publish`).
+fn put_f32_vecs(out: &mut Vec<u8>, vs: &[Vec<f32>]) {
+    put_u32(out, vs.len() as u32);
+    for v in vs {
+        put_u32(out, v.len() as u32);
+        put_f32s(out, v);
     }
 }
 
@@ -320,6 +436,21 @@ impl<'a> Cur<'a> {
             .collect())
     }
 
+    /// Length-prefixed list of length-prefixed f32 vectors.  Counts
+    /// are untrusted: nothing is preallocated from them — every
+    /// element read is bounds-checked against the remaining payload,
+    /// so a hostile count fails with `BadPayloadLen` before any
+    /// oversized buffer exists.
+    fn f32_vecs(&mut self) -> Result<Vec<Vec<f32>>, FrameError> {
+        let n = self.u32()? as usize;
+        let mut vs = Vec::new();
+        for _ in 0..n {
+            let len = self.u32()? as usize;
+            vs.push(self.f32s(len)?);
+        }
+        Ok(vs)
+    }
+
     /// Error unless the payload was consumed exactly.
     fn finish(self) -> Result<(), FrameError> {
         if self.pos == self.buf.len() {
@@ -358,15 +489,19 @@ fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             put_u32(&mut p, *batch_capacity);
             TYPE_HELLO
         }
-        Frame::Request { id, rows, features, data } => {
+        Frame::Request { id, model_id, version, rows, features, data } => {
             put_u64(&mut p, *id);
+            put_u64(&mut p, *model_id);
+            put_u64(&mut p, *version);
             put_u32(&mut p, *rows);
             put_u32(&mut p, *features);
             put_f32s(&mut p, data);
             TYPE_REQUEST
         }
-        Frame::Response { id, rows, classes, data } => {
+        Frame::Response { id, model_id, version, rows, classes, data } => {
             put_u64(&mut p, *id);
+            put_u64(&mut p, *model_id);
+            put_u64(&mut p, *version);
             put_u32(&mut p, *rows);
             put_u32(&mut p, *classes);
             put_f32s(&mut p, data);
@@ -376,8 +511,8 @@ fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             let (code, a, b) = reason_code(*reason);
             put_u64(&mut p, *id);
             p.push(code);
-            put_u32(&mut p, a);
-            put_u32(&mut p, b);
+            put_u64(&mut p, a);
+            put_u64(&mut p, b);
             TYPE_REJECT
         }
         Frame::StatsRequest => TYPE_STATS_REQUEST,
@@ -395,6 +530,25 @@ fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             TYPE_HEALTH
         }
         Frame::Drain => TYPE_DRAIN,
+        Frame::Publish { model_id, version, spec, w, bias } => {
+            put_u64(&mut p, *model_id);
+            put_u64(&mut p, *version);
+            put_u32(&mut p, spec.sizes.len() as u32);
+            for s in &spec.sizes {
+                put_u32(&mut p, *s as u32);
+            }
+            put_u32(&mut p, spec.paths as u32);
+            put_u64(&mut p, spec.seed);
+            p.push(kernel_code(spec.kernel));
+            put_f32_vecs(&mut p, w);
+            put_f32_vecs(&mut p, bias);
+            TYPE_PUBLISH
+        }
+        Frame::PublishAck { model_id, version } => {
+            put_u64(&mut p, *model_id);
+            put_u64(&mut p, *version);
+            TYPE_PUBLISH_ACK
+        }
     };
     (tag, p)
 }
@@ -419,7 +573,14 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, FrameError> {
     magic[0] = first[0];
     r.read_exact(&mut magic[1..])?;
     if magic != MAGIC {
-        return Err(FrameError::BadMagic(magic));
+        // an `SBN`-prefixed magic with the wrong version byte is a
+        // sobolnet peer of another protocol generation — tell the
+        // operator to upgrade it rather than reporting wire garbage
+        return if magic[..3] == MAGIC[..3] {
+            Err(FrameError::VersionMismatch { got: magic[3] })
+        } else {
+            Err(FrameError::BadMagic(magic))
+        };
     }
     let mut head = [0u8; 5];
     r.read_exact(&mut head)?;
@@ -427,7 +588,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, FrameError> {
     let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]);
     // validation order is normative (ARCHITECTURE.md): magic, type,
     // length cap — all before the payload buffer is allocated or read
-    if !(TYPE_HELLO..=TYPE_DRAIN).contains(&tag) {
+    if !(TYPE_HELLO..=TYPE_PUBLISH_ACK).contains(&tag) {
         return Err(FrameError::UnknownType(tag));
     }
     if len > MAX_PAYLOAD {
@@ -451,27 +612,31 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Frame, FrameError> {
         TYPE_REQUEST => {
             let mut c = Cur::new("request", payload);
             let id = c.u64()?;
+            let model_id = c.u64()?;
+            let version = c.u64()?;
             let rows = c.u32()?;
             let features = c.u32()?;
             let data = c.f32s(rows as usize * features as usize)?;
             c.finish()?;
-            Ok(Frame::Request { id, rows, features, data })
+            Ok(Frame::Request { id, model_id, version, rows, features, data })
         }
         TYPE_RESPONSE => {
             let mut c = Cur::new("response", payload);
             let id = c.u64()?;
+            let model_id = c.u64()?;
+            let version = c.u64()?;
             let rows = c.u32()?;
             let classes = c.u32()?;
             let data = c.f32s(rows as usize * classes as usize)?;
             c.finish()?;
-            Ok(Frame::Response { id, rows, classes, data })
+            Ok(Frame::Response { id, model_id, version, rows, classes, data })
         }
         TYPE_REJECT => {
             let mut c = Cur::new("reject", payload);
             let id = c.u64()?;
             let code = c.u8()?;
-            let a = c.u32()?;
-            let b = c.u32()?;
+            let a = c.u64()?;
+            let b = c.u64()?;
             c.finish()?;
             Ok(Frame::Reject { id, reason: reason_from_code(code, a, b)? })
         }
@@ -506,6 +671,31 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Frame, FrameError> {
             Cur::new("drain", payload).finish()?;
             Ok(Frame::Drain)
         }
+        TYPE_PUBLISH => {
+            let mut c = Cur::new("publish", payload);
+            let model_id = c.u64()?;
+            let version = c.u64()?;
+            let n_sizes = c.u32()? as usize;
+            let mut sizes = Vec::new();
+            for _ in 0..n_sizes {
+                sizes.push(c.u32()? as usize);
+            }
+            let paths = c.u32()? as usize;
+            let seed = c.u64()?;
+            let kernel = kernel_from_code(c.u8()?)?;
+            let w = c.f32_vecs()?;
+            let bias = c.f32_vecs()?;
+            c.finish()?;
+            let spec = ModelSpec { sizes, paths, seed, kernel };
+            Ok(Frame::Publish { model_id, version, spec, w, bias })
+        }
+        TYPE_PUBLISH_ACK => {
+            let mut c = Cur::new("publish-ack", payload);
+            let model_id = c.u64()?;
+            let version = c.u64()?;
+            c.finish()?;
+            Ok(Frame::PublishAck { model_id, version })
+        }
         other => Err(FrameError::UnknownType(other)),
     }
 }
@@ -527,16 +717,38 @@ mod tests {
         buf
     }
 
+    fn test_spec() -> ModelSpec {
+        ModelSpec { sizes: vec![8, 16, 4], paths: 32, seed: 5, kernel: KernelKind::Scalar }
+    }
+
     #[test]
     fn every_frame_type_round_trips() {
         let frames = [
             Frame::Hello { features: 784, classes: 10, batch_capacity: 64 },
-            Frame::Request { id: 7, rows: 2, features: 3, data: vec![1.0, -2.5, 0.0, 4.0, 5.0, -0.125] },
-            Frame::Response { id: 7, rows: 2, classes: 2, data: vec![0.5, -0.5, 1.5, 2.5] },
+            Frame::Request {
+                id: 7,
+                model_id: 3,
+                version: 2,
+                rows: 2,
+                features: 3,
+                data: vec![1.0, -2.5, 0.0, 4.0, 5.0, -0.125],
+            },
+            Frame::Response {
+                id: 7,
+                model_id: 3,
+                version: 2,
+                rows: 2,
+                classes: 2,
+                data: vec![0.5, -0.5, 1.5, 2.5],
+            },
             Frame::Reject { id: 9, reason: RejectReason::QueueFull },
             Frame::Reject { id: 9, reason: RejectReason::BadShape { expected: 784, got: 3 } },
             Frame::Reject { id: 1, reason: RejectReason::ShuttingDown },
             Frame::Reject { id: 2, reason: RejectReason::WorkerFailed },
+            Frame::Reject {
+                id: 3,
+                reason: RejectReason::UnknownModel { model_id: u64::MAX, version: 17 },
+            },
             Frame::StatsRequest,
             Frame::Stats {
                 completed: 100,
@@ -549,6 +761,14 @@ mod tests {
             Frame::Health { state: HEALTH_SERVING },
             Frame::Health { state: HEALTH_DRAINING },
             Frame::Drain,
+            Frame::Publish {
+                model_id: 11,
+                version: 4,
+                spec: test_spec(),
+                w: vec![vec![0.5, -0.25, 1.0e-9], vec![]],
+                bias: vec![vec![0.125; 16], vec![]],
+            },
+            Frame::PublishAck { model_id: 11, version: 4 },
         ];
         for f in &frames {
             assert_eq!(&roundtrip(f), f, "{} round-trip", f.name());
@@ -572,10 +792,10 @@ mod tests {
     fn type_beyond_drain_is_still_unknown() {
         let mut bytes = Vec::new();
         bytes.extend_from_slice(&MAGIC);
-        bytes.push(10); // one past the last assigned tag
+        bytes.push(12); // one past the last assigned tag
         bytes.extend_from_slice(&0u32.to_le_bytes());
         match read_frame(&mut Cursor::new(bytes)) {
-            Err(FrameError::UnknownType(10)) => {}
+            Err(FrameError::UnknownType(12)) => {}
             other => panic!("expected UnknownType, got {other:?}"),
         }
     }
@@ -584,7 +804,15 @@ mod tests {
     fn f32_payloads_cross_bitwise() {
         // values with tricky bit patterns: -0.0, subnormal, NaN payload
         let vals = vec![-0.0f32, f32::MIN_POSITIVE / 2.0, f32::NAN, f32::INFINITY, -1.0e-38];
-        let got = match roundtrip(&Frame::Request { id: 1, rows: 1, features: 5, data: vals.clone() }) {
+        let req = Frame::Request {
+            id: 1,
+            model_id: 0,
+            version: 0,
+            rows: 1,
+            features: 5,
+            data: vals.clone(),
+        };
+        let got = match roundtrip(&req) {
             Frame::Request { data, .. } => data,
             other => panic!("wrong frame {other:?}"),
         };
@@ -595,9 +823,9 @@ mod tests {
 
     #[test]
     fn zero_length_batch_is_legal() {
-        let f = Frame::Request { id: 3, rows: 0, features: 784, data: vec![] };
+        let f = Frame::Request { id: 3, model_id: 0, version: 0, rows: 0, features: 784, data: vec![] };
         assert_eq!(roundtrip(&f), f);
-        let r = Frame::Response { id: 3, rows: 0, classes: 10, data: vec![] };
+        let r = Frame::Response { id: 3, model_id: 0, version: 0, rows: 0, classes: 10, data: vec![] };
         assert_eq!(roundtrip(&r), r);
     }
 
@@ -618,7 +846,14 @@ mod tests {
 
     #[test]
     fn truncation_at_every_boundary_is_typed_error() {
-        let full = encode(&Frame::Request { id: 5, rows: 1, features: 4, data: vec![1.0; 4] });
+        let full = encode(&Frame::Request {
+            id: 5,
+            model_id: 2,
+            version: 1,
+            rows: 1,
+            features: 4,
+            data: vec![1.0; 4],
+        });
         // cut the stream at every possible byte offset: each must be a
         // typed error (Closed at offset 0, Truncated elsewhere), never
         // a panic or a bogus frame
@@ -652,12 +887,20 @@ mod tests {
 
     #[test]
     fn max_size_payload_round_trips() {
-        // largest request that fits the cap: header is 16 bytes, so
-        // (MAX_PAYLOAD - 16) / 4 values exactly at the boundary
-        let n = (MAX_PAYLOAD as usize - 16) / 4;
-        let f = Frame::Request { id: 1, rows: 1, features: n as u32, data: vec![0.25; n] };
+        // largest request that fits the cap: payload header is 32 bytes
+        // (id + model_id + version + rows + features), so
+        // (MAX_PAYLOAD - 32) / 4 values exactly at the boundary
+        let n = (MAX_PAYLOAD as usize - 32) / 4;
+        let f = Frame::Request {
+            id: 1,
+            model_id: 0,
+            version: 0,
+            rows: 1,
+            features: n as u32,
+            data: vec![0.25; n],
+        };
         let bytes = encode(&f);
-        assert_eq!(bytes.len(), 9 + 16 + 4 * n);
+        assert_eq!(bytes.len(), 9 + 32 + 4 * n);
         match read_frame(&mut Cursor::new(bytes)).expect("decode at the cap") {
             Frame::Request { data, .. } => assert_eq!(data.len(), n),
             other => panic!("wrong frame {other:?}"),
@@ -669,6 +912,8 @@ mod tests {
         // declared 8 rows but carried only 1 row of data
         let mut bad = Vec::new();
         put_u64(&mut bad, 1);
+        put_u64(&mut bad, 0); // model_id
+        put_u64(&mut bad, 0); // version
         put_u32(&mut bad, 8); // rows
         put_u32(&mut bad, 4); // features
         put_f32s(&mut bad, &[0.0; 4]); // one row, not eight
@@ -714,8 +959,8 @@ mod tests {
         let mut p = Vec::new();
         put_u64(&mut p, 1);
         p.push(77); // bogus reason code
-        put_u32(&mut p, 0);
-        put_u32(&mut p, 0);
+        put_u64(&mut p, 0);
+        put_u64(&mut p, 0);
         let mut bytes = Vec::new();
         bytes.extend_from_slice(&MAGIC);
         bytes.push(4);
@@ -738,10 +983,66 @@ mod tests {
             FrameError::BadPayloadLen { frame: "hello", expected: 12, got: 13 },
             FrameError::BadReason(0),
             FrameError::BadHealthState(3),
+            FrameError::VersionMismatch { got: b'1' },
+            FrameError::BadKernelCode(9),
             FrameError::Io(std::io::Error::other("boom")),
         ];
         for e in samples {
             assert!(!format!("{e}").is_empty());
+        }
+    }
+
+    #[test]
+    fn old_protocol_magic_is_version_mismatch_not_garbage() {
+        // a protocol-1 peer sends SBN1-magic frames: the error must name
+        // the version clash, not report wire garbage
+        let mut bytes = encode(&Frame::Shutdown);
+        bytes[..4].copy_from_slice(b"SBN1");
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(FrameError::VersionMismatch { got }) => assert_eq!(got, b'1'),
+            other => panic!("expected VersionMismatch, got {other:?}"),
+        }
+        // and the display text tells the operator which side to upgrade
+        let msg = format!("{}", FrameError::VersionMismatch { got: b'1' });
+        assert!(msg.contains('1') && msg.contains('2'), "unhelpful message: {msg}");
+    }
+
+    #[test]
+    fn publish_truncation_and_bad_kernel_are_typed_errors() {
+        let full = encode(&Frame::Publish {
+            model_id: 11,
+            version: 4,
+            spec: test_spec(),
+            w: vec![vec![0.5, -0.25], vec![1.0]],
+            bias: vec![vec![0.125; 16], vec![]],
+        });
+        for cut in 9..full.len() {
+            let r = read_frame(&mut Cursor::new(full[..cut].to_vec()));
+            assert!(
+                matches!(r, Err(FrameError::Truncated)),
+                "cut at {cut}: expected Truncated, got {r:?}"
+            );
+        }
+        assert!(read_frame(&mut Cursor::new(full.clone())).is_ok());
+        // corrupt the kernel code: u64 id + u64 version + u32 count +
+        // 3 × u32 sizes + u32 paths + u64 seed = 44 bytes into the payload
+        let mut bad = full;
+        bad[9 + 44] = 0xEE;
+        match read_frame(&mut Cursor::new(bad)) {
+            Err(FrameError::BadKernelCode(0xEE)) => {}
+            other => panic!("expected BadKernelCode, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_model_reject_round_trips_detail() {
+        let f = Frame::Reject {
+            id: 4,
+            reason: RejectReason::UnknownModel { model_id: 7, version: 0 },
+        };
+        match roundtrip(&f) {
+            Frame::Reject { id: 4, reason: RejectReason::UnknownModel { model_id: 7, version: 0 } } => {}
+            other => panic!("detail fields lost: {other:?}"),
         }
     }
 }

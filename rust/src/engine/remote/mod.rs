@@ -89,7 +89,7 @@ pub mod server;
 pub mod spawn;
 pub mod transport;
 
-pub use client::{RemoteBackend, RemoteOptions};
+pub use client::{publish_to, RemoteBackend, RemoteOptions};
 pub use frame::{Frame, FrameError};
 pub use health::{HealthBoard, HealthCounters, Prober};
 pub use server::serve_shard;

@@ -24,6 +24,11 @@
 //!   subsequent requests still answer, but probes now report draining
 //!   so the prober routes new traffic to siblings), acked with a
 //!   `Health` reply;
+//! * `Publish` → the carried snapshot is registered and appended to
+//!   this worker's registry at exactly the coordinator-assigned
+//!   version (idempotent for an identical retry), acked with
+//!   `PublishAck`; in-flight requests keep completing against the
+//!   version pinned at their admission;
 //! * `Shutdown` → [`serve_shard`] returns so the process can exit.
 //!
 //! Connections are accepted **concurrently** (one thread per
@@ -130,8 +135,8 @@ fn handle_conn(
             Err(e) => return Err(e),
         };
         match frame {
-            Frame::Request { id, rows, features, data } => {
-                let fp = request_fingerprint(rows, features, &data);
+            Frame::Request { id, model_id, version, rows, features, data } => {
+                let fp = request_fingerprint(model_id, version, rows, features, &data);
                 // the cache lock is held across the compute: requests
                 // from racing connections (a reconnect overtaking its
                 // predecessor) serialize, exactly like serial accept did
@@ -141,12 +146,49 @@ fn handle_conn(
                     .map(|(lid, lfp, _)| *lid == id && *lfp == fp)
                     .unwrap_or(false);
                 if !hit {
-                    let reply =
-                        answer_request(engine, rows as usize, features as usize, &data, id);
+                    let reply = answer_request(
+                        engine,
+                        model_id,
+                        version,
+                        rows as usize,
+                        features as usize,
+                        &data,
+                        id,
+                    );
                     *cache = Some((id, fp, reply));
                 }
                 if let Some((_, _, reply)) = cache.as_ref() {
                     write_frame(conn, reply)?;
+                }
+            }
+            Frame::Publish { model_id, version, spec, w, bias } => {
+                // hot snapshot publish into this worker's registry:
+                // register the spec if first contact (idempotent for an
+                // identical spec), then append the snapshot at exactly
+                // the version the coordinator assigned.  Versions are
+                // immutable and the tenant cache keys include them, so
+                // requests already admitted against an older version
+                // keep completing against its exact bits.
+                let outcome = match engine.registry() {
+                    Some(reg) => reg
+                        .register(model_id, spec)
+                        .and_then(|()| reg.publish_at(model_id, version, w, bias)),
+                    None => Err("worker engine has no registry attached".to_string()),
+                };
+                match outcome {
+                    Ok(()) => write_frame(conn, &Frame::PublishAck { model_id, version })?,
+                    Err(e) => {
+                        crate::log_warn!(
+                            "shard-worker: refused publish of model {model_id} v{version}: {e}"
+                        );
+                        write_frame(
+                            conn,
+                            &Frame::Reject {
+                                id: 0,
+                                reason: RejectReason::UnknownModel { model_id, version },
+                            },
+                        )?;
+                    }
                 }
             }
             Frame::StatsRequest => {
@@ -182,11 +224,17 @@ fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
     h
 }
 
-/// Content fingerprint of a request (shape + exact payload bits), the
-/// second half of the reply-cache key: an id match alone is not proof
-/// of a retry — a restarted coordinator reuses low ids.
-fn request_fingerprint(rows: u32, features: u32, data: &[f32]) -> u64 {
-    let mut h = fnv1a(0xcbf2_9ce4_8422_2325, &rows.to_le_bytes());
+/// Content fingerprint of a request (model key + shape + exact payload
+/// bits), the second half of the reply-cache key: an id match alone is
+/// not proof of a retry — a restarted coordinator reuses low ids.  The
+/// `(model_id, version)` pair **must** be folded in: a retried id with
+/// the same payload but a different pinned version is a different
+/// request, and answering it from the stale version's cached reply
+/// would silently serve old weights after a publish.
+fn request_fingerprint(model_id: u64, version: u64, rows: u32, features: u32, data: &[f32]) -> u64 {
+    let mut h = fnv1a(0xcbf2_9ce4_8422_2325, &model_id.to_le_bytes());
+    h = fnv1a(h, &version.to_le_bytes());
+    h = fnv1a(h, &rows.to_le_bytes());
     h = fnv1a(h, &features.to_le_bytes());
     for v in data {
         h = fnv1a(h, &v.to_le_bytes());
@@ -195,8 +243,18 @@ fn request_fingerprint(rows: u32, features: u32, data: &[f32]) -> u64 {
 }
 
 /// Submit every row of the batch through the engine's normal admission
-/// path, await the tickets in row order, and assemble the reply.
-fn answer_request(engine: &Engine, rows: usize, features: usize, data: &[f32], id: u64) -> Frame {
+/// path — pinned to exactly the `(model_id, version)` the coordinator
+/// stamped at *its* admission, never re-resolved here — await the
+/// tickets in row order, and assemble the reply.
+fn answer_request(
+    engine: &Engine,
+    model_id: u64,
+    version: u64,
+    rows: usize,
+    features: usize,
+    data: &[f32],
+    id: u64,
+) -> Frame {
     if features != engine.features() {
         return Frame::Reject {
             id,
@@ -205,13 +263,24 @@ fn answer_request(engine: &Engine, rows: usize, features: usize, data: &[f32], i
     }
     if rows == 0 {
         // zero-length batches are legal and answered in kind
-        return Frame::Response { id, rows: 0, classes: engine.classes() as u32, data: vec![] };
+        return Frame::Response {
+            id,
+            model_id,
+            version,
+            rows: 0,
+            classes: engine.classes() as u32,
+            data: vec![],
+        };
     }
     // submit all rows first (they coalesce into the shard's batcher),
     // then await in row order so the reply layout is deterministic
     let mut tickets = Vec::with_capacity(rows);
     for r in 0..rows {
-        match engine.try_submit(data[r * features..(r + 1) * features].to_vec()) {
+        match engine.try_submit_pinned(
+            model_id,
+            version,
+            data[r * features..(r + 1) * features].to_vec(),
+        ) {
             Ok(t) => tickets.push(t),
             Err(reason) => return Frame::Reject { id, reason },
         }
@@ -224,7 +293,14 @@ fn answer_request(engine: &Engine, rows: usize, features: usize, data: &[f32], i
             Response::Rejected(reason) => return Frame::Reject { id, reason },
         }
     }
-    Frame::Response { id, rows: rows as u32, classes: classes as u32, data: out }
+    Frame::Response {
+        id,
+        model_id,
+        version,
+        rows: rows as u32,
+        classes: classes as u32,
+        data: out,
+    }
 }
 
 /// Most recent raw latency samples a single `Stats` frame will carry.

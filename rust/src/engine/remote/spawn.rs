@@ -32,7 +32,9 @@ pub struct SpawnSpec {
     pub program: PathBuf,
     /// Extra arguments appended after `shard-worker --listen <addr>` —
     /// the model/topology spec the child builds its replica from
-    /// (`--sizes`, `--paths`, `--seed`, …).
+    /// (`--sizes`, `--paths`, `--seed`, …), plus multi-tenant knobs
+    /// (`--registry <dir>`, `--model-cache <n>`) when the coordinator
+    /// will `Publish` tenant snapshots to the children.
     pub shard_args: Vec<String>,
     /// Directory for the per-shard Unix sockets.
     pub socket_dir: PathBuf,

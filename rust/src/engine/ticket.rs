@@ -28,6 +28,16 @@ pub enum RejectReason {
     },
     /// The worker shard died before answering (its thread panicked).
     WorkerFailed,
+    /// The request named a model (or model version) the registry does
+    /// not hold.  `version == 0` means the model id itself is unknown;
+    /// a nonzero version means the model exists but that snapshot was
+    /// never published.
+    UnknownModel {
+        /// Requested model id.
+        model_id: u64,
+        /// Requested snapshot version (`0` = id lookup failed).
+        version: u64,
+    },
 }
 
 impl std::fmt::Display for RejectReason {
@@ -39,6 +49,12 @@ impl std::fmt::Display for RejectReason {
                 write!(f, "bad input shape: expected {expected} features, got {got}")
             }
             RejectReason::WorkerFailed => write!(f, "worker shard failed"),
+            RejectReason::UnknownModel { model_id, version: 0 } => {
+                write!(f, "unknown model id {model_id}")
+            }
+            RejectReason::UnknownModel { model_id, version } => {
+                write!(f, "model {model_id} has no published version {version}")
+            }
         }
     }
 }
@@ -176,5 +192,9 @@ mod tests {
     fn reject_reasons_display() {
         assert!(format!("{}", RejectReason::QueueFull).contains("full"));
         assert!(format!("{}", RejectReason::BadShape { expected: 784, got: 3 }).contains("784"));
+        assert!(format!("{}", RejectReason::UnknownModel { model_id: 9, version: 0 })
+            .contains("unknown model id 9"));
+        assert!(format!("{}", RejectReason::UnknownModel { model_id: 9, version: 4 })
+            .contains("no published version 4"));
     }
 }

@@ -22,11 +22,13 @@
 //! merge order are job-local properties.
 
 use super::admission::BoundedQueue;
-use super::batcher::Batcher;
+use super::batcher::{homogeneous_runs, Batcher};
 use super::dispatch::DispatchPolicy;
 use super::ticket::{RejectReason, ReplyTx};
 use super::InferenceBackend;
 use crate::coordinator::metrics::Metrics;
+use crate::registry::cache::ModelCache;
+use crate::registry::Registry;
 use crate::util::timer::Timer;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -38,10 +40,28 @@ use std::time::Duration;
 pub(crate) struct EngineRequest {
     /// Flattened input features.
     pub x: Vec<f32>,
+    /// Tenant model this request was admitted against (`0` = the
+    /// builder-configured default model).
+    pub model_id: u64,
+    /// Snapshot version pinned **at admission** — the worker never
+    /// re-resolves it, so a publish racing this request cannot change
+    /// which weights answer it.
+    pub version: u64,
     /// Where the outcome goes.
     pub reply: ReplyTx,
     /// End-to-end latency stopwatch, started at submit.
     pub t_start: Timer,
+}
+
+/// Multi-tenant wiring handed to each worker shard: the shared
+/// registry to cold-load from, plus the per-shard cache bound.  The
+/// worker builds its own [`ModelCache`] (single-owner, no lock) once
+/// it knows the backend's batch capacity.
+pub(crate) struct Tenancy {
+    /// Shared model registry (specs + versioned snapshots).
+    pub registry: Arc<Registry>,
+    /// Max built tenant backends resident per shard.
+    pub cache_cap: usize,
 }
 
 /// Handle to a running worker shard.
@@ -87,6 +107,7 @@ pub(crate) fn spawn<F>(
     metrics_window: usize,
     aggregate: Arc<Metrics>,
     dispatch: Arc<dyn DispatchPolicy>,
+    tenancy: Option<Tenancy>,
 ) -> (Shard, Receiver<(usize, usize, usize)>)
 where
     F: FnOnce() -> Box<dyn InferenceBackend> + Send + 'static,
@@ -107,32 +128,77 @@ where
             let feat = backend.features();
             let classes = backend.classes();
             let _ = meta_tx.send((feat, classes, cap));
+            // per-shard tenant cache, bounded and single-owner; built
+            // here because the batch capacity comes from the backend
+            let mut tenants: Option<(Arc<Registry>, ModelCache)> =
+                tenancy.map(|t| (t.registry, ModelCache::new(t.cache_cap, cap)));
             let batcher = Batcher { capacity: cap, max_wait };
             let mut xbuf = vec![0.0f32; cap * feat];
             while let Some(batch) = batcher.next_batch(&*q) {
-                // assemble the padded batch: real rows are overwritten,
-                // only the tail padding needs (re)zeroing
-                for (i, r) in batch.iter().enumerate() {
-                    xbuf[i * feat..(i + 1) * feat].copy_from_slice(&r.x);
-                }
-                for v in &mut xbuf[batch.len() * feat..] {
-                    *v = 0.0;
-                }
-                let logits = backend.infer_rows(&xbuf, batch.len());
-                own.record_batch(batch.len(), cap);
-                aggregate.record_batch(batch.len(), cap);
-                for (i, r) in batch.into_iter().enumerate() {
-                    let out = logits[i * classes..(i + 1) * classes].to_vec();
-                    let secs = r.t_start.elapsed_secs();
-                    // latency samples live only in the per-worker
-                    // metrics; the engine merges them before computing
-                    // aggregate percentiles, so the per-request cost
-                    // here is one uncontended lock, not two
-                    own.record_latency(secs);
-                    aggregate.completed.fetch_add(1, Ordering::Relaxed);
-                    dispatch.observe(worker_id, secs);
-                    gauge.fetch_sub(1, Ordering::Relaxed);
-                    r.reply.send_logits(out);
+                // one drained batch may mix tenants; each backend
+                // execution serves one (model_id, version), so split
+                // into consecutive homogeneous runs (arrival order is
+                // preserved — a boundary costs one extra execution,
+                // never a reorder)
+                let runs = homogeneous_runs(&batch, |r| (r.model_id, r.version));
+                let mut remaining = batch.into_iter();
+                for (s, e) in runs {
+                    let run: Vec<EngineRequest> = remaining.by_ref().take(e - s).collect();
+                    let rows = run.len();
+                    // assemble the padded run: real rows are
+                    // overwritten, only the tail needs (re)zeroing
+                    for (i, r) in run.iter().enumerate() {
+                        xbuf[i * feat..(i + 1) * feat].copy_from_slice(&r.x);
+                    }
+                    for v in &mut xbuf[rows * feat..] {
+                        *v = 0.0;
+                    }
+                    let key = (run[0].model_id, run[0].version);
+                    let result: Result<Vec<f32>, RejectReason> = if key == (0, 0) {
+                        Ok(backend.infer_rows(&xbuf, rows))
+                    } else if let Some((reg, cache)) = tenants.as_mut() {
+                        // the version was pinned at admission; the
+                        // cache key includes it, so a concurrent
+                        // publish can never swap weights under this run
+                        match cache.get_or_load(reg, key.0, key.1, &own) {
+                            Ok(b) => Ok(b.infer_rows(&xbuf, rows)),
+                            Err(_) => Err(RejectReason::UnknownModel {
+                                model_id: key.0,
+                                version: key.1,
+                            }),
+                        }
+                    } else {
+                        // no local tenancy: the backend itself may
+                        // route by model (the remote transport ships
+                        // the key to the worker process)
+                        backend.infer_rows_model(key.0, key.1, &xbuf, rows)
+                    };
+                    own.record_batch(rows, cap);
+                    aggregate.record_batch(rows, cap);
+                    match result {
+                        Ok(logits) => {
+                            for (i, r) in run.into_iter().enumerate() {
+                                let out = logits[i * classes..(i + 1) * classes].to_vec();
+                                let secs = r.t_start.elapsed_secs();
+                                // latency samples live only in the
+                                // per-worker metrics; the engine merges
+                                // them before computing aggregate
+                                // percentiles, so the per-request cost
+                                // here is one uncontended lock, not two
+                                own.record_latency(secs);
+                                aggregate.completed.fetch_add(1, Ordering::Relaxed);
+                                dispatch.observe(worker_id, secs);
+                                gauge.fetch_sub(1, Ordering::Relaxed);
+                                r.reply.send_logits(out);
+                            }
+                        }
+                        Err(reason) => {
+                            for r in run {
+                                gauge.fetch_sub(1, Ordering::Relaxed);
+                                r.reply.send_rejected(reason);
+                            }
+                        }
+                    }
                 }
             }
         })

@@ -1,0 +1,186 @@
+//! Bounded per-shard LRU cache of *built* tenant backends.
+//!
+//! Worker shards do not hold every tenant's model resident: each shard
+//! owns one `ModelCache` holding at most `cap` built
+//! [`ModelBackend`]s keyed by `(model_id, version)`.  A hit moves the
+//! entry to most-recently-used; a miss cold-loads from the
+//! [`Registry`] (spec build + snapshot apply — bitwise-identical to
+//! the net the snapshot was captured from) and, at capacity, evicts
+//! the least-recently-used entry.  Hit/miss/eviction counts are
+//! recorded on the shard's [`Metrics`]
+//! (`cache_hits`/`cache_misses`/`cache_evictions`).
+//!
+//! The cache is single-owner (one per worker thread) — no lock, no
+//! sharing; the registry behind it is the shared, locked object.
+//! Because keys include the version, a hot publish never mutates a
+//! cached entry: the old version stays resident (and keeps serving
+//! requests admitted under it) until LRU pressure retires it.
+
+use super::Registry;
+use crate::coordinator::Metrics;
+use crate::engine::ModelBackend;
+use crate::nn::sparse::SparseMlp;
+use std::sync::atomic::Ordering;
+
+/// One cached, ready-to-serve tenant backend.
+struct Entry {
+    model_id: u64,
+    version: u64,
+    backend: ModelBackend<SparseMlp>,
+}
+
+/// Bounded LRU of built tenant backends (see the module docs).
+pub struct ModelCache {
+    cap: usize,
+    batch: usize,
+    /// LRU order: index 0 is the eviction candidate, the last entry is
+    /// the most recently used.
+    entries: Vec<Entry>,
+}
+
+impl ModelCache {
+    /// New empty cache holding at most `cap` built models (clamped to
+    /// ≥ 1), each with batch capacity `batch`.
+    pub fn new(cap: usize, batch: usize) -> Self {
+        ModelCache { cap: cap.max(1), batch, entries: Vec::new() }
+    }
+
+    /// Capacity bound.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Resident entry count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// `true` when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Resident keys in LRU order (first = next eviction candidate,
+    /// last = most recently used).
+    pub fn keys(&self) -> Vec<(u64, u64)> {
+        self.entries.iter().map(|e| (e.model_id, e.version)).collect()
+    }
+
+    /// `true` when `(model_id, version)` is resident (does not touch
+    /// LRU order or counters).
+    pub fn contains(&self, model_id: u64, version: u64) -> bool {
+        self.entries.iter().any(|e| e.model_id == model_id && e.version == version)
+    }
+
+    /// The backend for `(model_id, version)`: resident entry on a hit
+    /// (moved to most-recently-used), cold-loaded from `registry` on a
+    /// miss (evicting the LRU entry at capacity).  Counters land on
+    /// `metrics`.
+    pub fn get_or_load(
+        &mut self,
+        registry: &Registry,
+        model_id: u64,
+        version: u64,
+        metrics: &Metrics,
+    ) -> Result<&mut ModelBackend<SparseMlp>, String> {
+        if let Some(i) =
+            self.entries.iter().position(|e| e.model_id == model_id && e.version == version)
+        {
+            metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+            let e = self.entries.remove(i);
+            self.entries.push(e);
+        } else {
+            metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+            let spec = registry
+                .spec(model_id)
+                .ok_or_else(|| format!("model {model_id} is not registered"))?;
+            let net = registry.build_model(model_id, version)?;
+            let backend =
+                ModelBackend::new(net, self.batch, spec.features(), spec.classes());
+            if self.entries.len() >= self.cap {
+                metrics.cache_evictions.fetch_add(1, Ordering::Relaxed);
+                self.entries.remove(0);
+            }
+            self.entries.push(Entry { model_id, version, backend });
+        }
+        Ok(&mut self.entries.last_mut().expect("entry just pushed").backend)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::ModelSpec;
+    use crate::nn::kernel::KernelKind;
+
+    fn registry_with(ids: &[u64]) -> Registry {
+        let reg = Registry::new();
+        for &id in ids {
+            let spec = ModelSpec {
+                sizes: vec![4, 8, 2],
+                paths: 16,
+                seed: id, // distinct weights per tenant
+                kernel: KernelKind::Scalar,
+            };
+            reg.register(id, spec.clone()).unwrap();
+            let net = spec.build();
+            reg.publish(id, net.w.clone(), net.bias.clone()).unwrap();
+        }
+        reg
+    }
+
+    #[test]
+    fn lru_eviction_order_and_counters() {
+        let reg = registry_with(&[1, 2, 3]);
+        let m = Metrics::new();
+        let mut cache = ModelCache::new(2, 4);
+        assert!(cache.is_empty());
+        cache.get_or_load(&reg, 1, 1, &m).unwrap();
+        cache.get_or_load(&reg, 2, 1, &m).unwrap();
+        assert_eq!(cache.keys(), vec![(1, 1), (2, 1)]);
+        // hit on 1 moves it to MRU; 2 becomes the eviction candidate
+        cache.get_or_load(&reg, 1, 1, &m).unwrap();
+        assert_eq!(cache.keys(), vec![(2, 1), (1, 1)]);
+        // loading 3 at capacity evicts 2 (the LRU), not 1
+        cache.get_or_load(&reg, 3, 1, &m).unwrap();
+        assert_eq!(cache.keys(), vec![(1, 1), (3, 1)]);
+        assert!(!cache.contains(2, 1));
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 3);
+        assert_eq!(m.cache_evictions.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.cap(), 2);
+    }
+
+    #[test]
+    fn cold_load_is_bitwise_equal_to_first_load() {
+        use crate::engine::InferenceBackend;
+        let reg = registry_with(&[1, 2]);
+        let m = Metrics::new();
+        let mut cache = ModelCache::new(1, 4);
+        // [capacity × features] buffer with one real row, zero padding
+        let mut x = vec![0.0f32; 4 * 4];
+        x[..4].copy_from_slice(&[0.25, -0.5, 1.0, 0.125]);
+        let first = cache.get_or_load(&reg, 1, 1, &m).unwrap().infer_rows(&x, 1);
+        // force eviction of model 1, then cold-load it again
+        cache.get_or_load(&reg, 2, 1, &m).unwrap();
+        assert!(!cache.contains(1, 1));
+        let again = cache.get_or_load(&reg, 1, 1, &m).unwrap().infer_rows(&x, 1);
+        assert_eq!(first.len(), again.len());
+        for (a, b) in first.iter().zip(&again) {
+            assert_eq!(a.to_bits(), b.to_bits(), "evict + cold-load returns identical bits");
+        }
+        assert_eq!(m.cache_evictions.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn unknown_model_or_version_is_typed_error() {
+        let reg = registry_with(&[1]);
+        let m = Metrics::new();
+        let mut cache = ModelCache::new(2, 4);
+        assert!(cache.get_or_load(&reg, 9, 1, &m).is_err());
+        assert!(cache.get_or_load(&reg, 1, 9, &m).is_err());
+        // failed loads do not leave entries behind
+        assert!(cache.is_empty());
+    }
+}

@@ -1,0 +1,528 @@
+//! Multi-tenant model registry: versioned weight snapshots behind
+//! deterministic model specs.
+//!
+//! The paper's construction makes a model almost free to *store*: a
+//! topology is a pure function of `(layer sizes, path count)` under a
+//! fixed Sobol' source, and the weights of a path-sparse net are a few
+//! KB — the regime where per-tenant personalized models are
+//! economical.  The registry is the serving-side embodiment:
+//!
+//! * [`ModelSpec`] — the deterministic part.  `sizes/paths/seed/kernel`
+//!   rebuild the topology and init bit-for-bit in any process
+//!   ([`ModelSpec::build`]), so a spec never ships weights it does not
+//!   have to.
+//! * [`Snapshot`] — the learned part.  An immutable, versioned copy of
+//!   a net's `w`/`bias` vectors.  Versions are append-only: once
+//!   published, a `(model, version)` pair resolves to the same bits
+//!   forever — which is what lets an in-flight request pin the version
+//!   it was admitted under while a newer snapshot is published
+//!   underneath it (the hot-publish invariant `tests/registry.rs`
+//!   pins).
+//! * [`Registry`] — the store: `ModelId → spec + ordered snapshot
+//!   chain`, in memory, optionally mirrored to a directory in the
+//!   `SBNC` checkpoint format ([`crate::coordinator::checkpoint`]) via
+//!   [`persist`].
+//! * [`cache::ModelCache`] — the per-shard bounded LRU of *built*
+//!   backends, cold-loading from the registry on miss (hit/miss/evict
+//!   counters land in [`crate::coordinator::Metrics`]).
+//!
+//! Concurrency: the registry is `Mutex`-guarded and snapshots are
+//! `Arc`ed — publishing clones nothing and readers hold no lock while
+//! using a snapshot.  Reads are read-your-writes: a `publish` that
+//! returned version `v` is immediately resolvable at `v` by every
+//! subsequent `snapshot`/`latest_version` call.
+
+pub mod cache;
+pub mod persist;
+
+use crate::nn::init::Init;
+use crate::nn::kernel::KernelKind;
+use crate::nn::sparse::{SparseMlp, SparseMlpConfig};
+use crate::nn::Model;
+use crate::topology::{PathSource, TopologyBuilder};
+use crate::util::sync::plock;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// The deterministic half of a registered model: everything needed to
+/// rebuild its topology and initial weights bit-for-bit in any
+/// process.  The path source is fixed (Sobol', `skip_bad_dims`, no
+/// scrambling) and the init scheme is `ConstantRandomSign` — the same
+/// spec the `shard-worker` CLI builds from, so a spec that crossed the
+/// wire and one parsed from a CLI produce identical replicas.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    /// Layer sizes, input first.
+    pub sizes: Vec<usize>,
+    /// Path count.
+    pub paths: usize,
+    /// Init seed.
+    pub seed: u64,
+    /// Compute kernel the built backend uses.
+    pub kernel: KernelKind,
+}
+
+impl ModelSpec {
+    /// Features per sample (`sizes[0]`).
+    pub fn features(&self) -> usize {
+        self.sizes[0]
+    }
+
+    /// Classes per sample (`sizes.last()`).
+    pub fn classes(&self) -> usize {
+        *self.sizes.last().expect("spec has at least one layer")
+    }
+
+    /// Transitions (weight groups) of the spec'd topology.
+    pub fn transitions(&self) -> usize {
+        self.sizes.len().saturating_sub(1)
+    }
+
+    /// Build the model this spec describes, deterministically: same
+    /// spec → bitwise-identical topology, init, and kernel in every
+    /// process.
+    pub fn build(&self) -> SparseMlp {
+        let topo = TopologyBuilder::new(&self.sizes)
+            .paths(self.paths)
+            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+            .build();
+        let mut net = SparseMlp::new(
+            &topo,
+            SparseMlpConfig {
+                init: Init::ConstantRandomSign,
+                seed: self.seed,
+                ..Default::default()
+            },
+        );
+        net.set_kernel(self.kernel);
+        net
+    }
+
+    /// Shape-check a weight payload against this spec: one `paths`-long
+    /// weight vector per transition; per-layer bias vectors either
+    /// empty (bias disabled) or `sizes[l+1]` long.
+    pub fn validate_weights(&self, w: &[Vec<f32>], bias: &[Vec<f32>]) -> Result<(), String> {
+        if w.len() != self.transitions() {
+            return Err(format!(
+                "snapshot has {} weight transitions, spec {:?} needs {}",
+                w.len(),
+                self.sizes,
+                self.transitions()
+            ));
+        }
+        for (t, wt) in w.iter().enumerate() {
+            if wt.len() != self.paths {
+                return Err(format!(
+                    "transition {t} has {} weights, spec has {} paths",
+                    wt.len(),
+                    self.paths
+                ));
+            }
+        }
+        if bias.len() != self.transitions() {
+            return Err(format!(
+                "snapshot has {} bias layers, spec needs {}",
+                bias.len(),
+                self.transitions()
+            ));
+        }
+        for (l, bl) in bias.iter().enumerate() {
+            if !bl.is_empty() && bl.len() != self.sizes[l + 1] {
+                return Err(format!(
+                    "bias layer {l} has {} entries, spec layer holds {}",
+                    bl.len(),
+                    self.sizes[l + 1]
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One immutable versioned weight snapshot.  Snapshots are the unit of
+/// publish: capture from a (possibly still-training) net, publish into
+/// a registry, apply onto a spec-built replica elsewhere — the applied
+/// replica is bitwise-identical to the captured net.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Version number within the model's chain (1-based; `0` is never
+    /// a valid published version — the wire uses it for "unresolved").
+    pub version: u64,
+    /// Per-transition path weights, `w[t][p]`.
+    pub w: Vec<Vec<f32>>,
+    /// Per-layer biases (empty vecs when bias is disabled).
+    pub bias: Vec<Vec<f32>>,
+}
+
+impl Snapshot {
+    /// Capture the learnable state of `net` as version `version`.
+    pub fn capture(version: u64, net: &SparseMlp) -> Self {
+        Snapshot { version, w: net.w.clone(), bias: net.bias.clone() }
+    }
+
+    /// Copy this snapshot's weights into `net` (shapes must match —
+    /// build `net` from the owning [`ModelSpec`]).
+    pub fn apply(&self, net: &mut SparseMlp) -> Result<(), String> {
+        if net.w.len() != self.w.len() {
+            return Err(format!(
+                "snapshot has {} transitions, net has {}",
+                self.w.len(),
+                net.w.len()
+            ));
+        }
+        for (t, (dst, src)) in net.w.iter_mut().zip(&self.w).enumerate() {
+            if dst.len() != src.len() {
+                return Err(format!(
+                    "transition {t}: snapshot holds {} weights, net {}",
+                    src.len(),
+                    dst.len()
+                ));
+            }
+            dst.copy_from_slice(src);
+        }
+        if net.bias.len() != self.bias.len() {
+            return Err(format!(
+                "snapshot has {} bias layers, net has {}",
+                self.bias.len(),
+                net.bias.len()
+            ));
+        }
+        for (l, (dst, src)) in net.bias.iter_mut().zip(&self.bias).enumerate() {
+            if dst.len() != src.len() {
+                return Err(format!(
+                    "bias layer {l}: snapshot holds {}, net {}",
+                    src.len(),
+                    dst.len()
+                ));
+            }
+            dst.copy_from_slice(src);
+        }
+        Ok(())
+    }
+}
+
+/// One model's slot in the registry: the spec plus its append-only
+/// snapshot chain (ascending versions).
+#[derive(Debug)]
+struct Entry {
+    spec: ModelSpec,
+    snaps: Vec<Arc<Snapshot>>,
+}
+
+/// Versioned multi-tenant model store.  Cheap to share (`Arc<Registry>`
+/// is the idiom); all methods take `&self`.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<u64, Entry>>,
+    dir: Option<PathBuf>,
+}
+
+impl Registry {
+    /// New empty in-memory registry (no persistence).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Directory-backed registry: existing snapshot files under `dir`
+    /// (written by earlier [`Registry::publish`] calls) are loaded, and
+    /// every future publish is mirrored to `dir` in the `SBNC`
+    /// checkpoint format.
+    pub fn with_dir<P: Into<PathBuf>>(dir: P) -> Result<Self, String> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("registry dir {}: {e}", dir.display()))?;
+        let mut reg = Registry { inner: Mutex::new(BTreeMap::new()), dir: None };
+        persist::load_dir(&dir, &mut reg)?;
+        reg.dir = Some(dir);
+        Ok(reg)
+    }
+
+    /// Register a model id with its deterministic spec.  Idempotent
+    /// for an identical spec; an id re-registered with a *different*
+    /// spec is an error (specs are immutable — versions change, the
+    /// topology does not).
+    pub fn register(&self, model_id: u64, spec: ModelSpec) -> Result<(), String> {
+        let mut inner = plock(&self.inner);
+        match inner.get(&model_id) {
+            Some(e) if e.spec == spec => Ok(()),
+            Some(e) => Err(format!(
+                "model {model_id} already registered with a different spec \
+                 ({:?} vs {:?})",
+                e.spec.sizes, spec.sizes
+            )),
+            None => {
+                inner.insert(model_id, Entry { spec, snaps: Vec::new() });
+                Ok(())
+            }
+        }
+    }
+
+    /// All registered model ids, ascending.
+    pub fn models(&self) -> Vec<u64> {
+        plock(&self.inner).keys().copied().collect()
+    }
+
+    /// The spec registered for `model_id`.
+    pub fn spec(&self, model_id: u64) -> Option<ModelSpec> {
+        plock(&self.inner).get(&model_id).map(|e| e.spec.clone())
+    }
+
+    /// Newest published version of `model_id` (`None` when the model
+    /// is unknown or has no snapshot yet).
+    pub fn latest_version(&self, model_id: u64) -> Option<u64> {
+        plock(&self.inner).get(&model_id).and_then(|e| e.snaps.last()).map(|s| s.version)
+    }
+
+    /// The snapshot of `model_id` at exactly `version`.
+    pub fn snapshot(&self, model_id: u64, version: u64) -> Option<Arc<Snapshot>> {
+        plock(&self.inner)
+            .get(&model_id)
+            .and_then(|e| e.snaps.iter().find(|s| s.version == version).cloned())
+    }
+
+    /// Publish new weights as the next version of `model_id`; returns
+    /// the assigned version (1 for the first snapshot).  Shapes are
+    /// validated against the spec before anything becomes visible.
+    pub fn publish(
+        &self,
+        model_id: u64,
+        w: Vec<Vec<f32>>,
+        bias: Vec<Vec<f32>>,
+    ) -> Result<u64, String> {
+        let next = self.latest_version(model_id).unwrap_or(0) + 1;
+        self.publish_at(model_id, next, w, bias)?;
+        Ok(next)
+    }
+
+    /// Publish new weights at an explicitly assigned `version` — the
+    /// worker-side half of hot publish, where the coordinator's
+    /// registry is authoritative for version numbers and the worker
+    /// must store the snapshot at exactly the number that will arrive
+    /// in pinned requests.  Re-publishing an existing version with
+    /// identical bits is a no-op (publishes are retried over the
+    /// wire); different bits at an existing version is an error —
+    /// versions are immutable.
+    pub fn publish_at(
+        &self,
+        model_id: u64,
+        version: u64,
+        w: Vec<Vec<f32>>,
+        bias: Vec<Vec<f32>>,
+    ) -> Result<(), String> {
+        if version == 0 {
+            return Err("snapshot versions are 1-based; 0 is reserved".into());
+        }
+        let mut inner = plock(&self.inner);
+        let entry = inner
+            .get_mut(&model_id)
+            .ok_or_else(|| format!("model {model_id} is not registered"))?;
+        entry.spec.validate_weights(&w, &bias)?;
+        let snap = Arc::new(Snapshot { version, w, bias });
+        match entry.snaps.binary_search_by_key(&version, |s| s.version) {
+            Ok(i) => {
+                if *entry.snaps[i] != *snap {
+                    return Err(format!(
+                        "model {model_id} version {version} already published \
+                         with different bits (versions are immutable)"
+                    ));
+                }
+                return Ok(()); // idempotent retry
+            }
+            Err(i) => entry.snaps.insert(i, snap.clone()),
+        }
+        let (spec, dir) = (entry.spec.clone(), self.dir.clone());
+        drop(inner);
+        if let Some(dir) = dir {
+            persist::save_snapshot(&dir, model_id, &spec, &snap)?;
+        }
+        Ok(())
+    }
+
+    /// Build `model_id` at `version`: spec-built replica with the
+    /// snapshot applied.  This is the cache's cold-load path; the
+    /// result is bitwise-identical to the net the snapshot was captured
+    /// from (pinned in `tests/registry.rs`).
+    pub fn build_model(&self, model_id: u64, version: u64) -> Result<SparseMlp, String> {
+        let spec = self
+            .spec(model_id)
+            .ok_or_else(|| format!("model {model_id} is not registered"))?;
+        let snap = self
+            .snapshot(model_id, version)
+            .ok_or_else(|| format!("model {model_id} has no version {version}"))?;
+        let mut net = spec.build();
+        snap.apply(&mut net)?;
+        Ok(net)
+    }
+
+    /// Internal: insert an entry loaded from disk (see [`persist`]).
+    pub(crate) fn load_entry(
+        &mut self,
+        model_id: u64,
+        spec: ModelSpec,
+        snap: Arc<Snapshot>,
+    ) -> Result<(), String> {
+        let inner = self.inner.get_mut().expect("unshared registry during load");
+        match inner.get_mut(&model_id) {
+            Some(e) => {
+                if e.spec != spec {
+                    return Err(format!(
+                        "registry dir holds conflicting specs for model {model_id}"
+                    ));
+                }
+                match e.snaps.binary_search_by_key(&snap.version, |s| s.version) {
+                    Ok(_) => Err(format!(
+                        "registry dir holds duplicate snapshot files for \
+                         model {model_id} v{}",
+                        snap.version
+                    )),
+                    Err(i) => {
+                        e.snaps.insert(i, snap);
+                        Ok(())
+                    }
+                }
+            }
+            None => {
+                inner.insert(model_id, Entry { spec, snaps: vec![snap] });
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec { sizes: vec![8, 16, 4], paths: 64, seed: 3, kernel: KernelKind::Scalar }
+    }
+
+    #[test]
+    fn spec_builds_deterministically() {
+        let s = spec();
+        assert_eq!(s.features(), 8);
+        assert_eq!(s.classes(), 4);
+        assert_eq!(s.transitions(), 2);
+        let a = s.build();
+        let b = s.build();
+        for (wa, wb) in a.w.iter().zip(&b.w) {
+            for (x, y) in wa.iter().zip(wb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "same spec → same init bits");
+            }
+        }
+    }
+
+    #[test]
+    fn read_your_writes_per_version() {
+        let reg = Registry::new();
+        reg.register(7, spec()).unwrap();
+        assert_eq!(reg.latest_version(7), None);
+        let mut net = spec().build();
+        let v1 = reg.publish(7, net.w.clone(), net.bias.clone()).unwrap();
+        assert_eq!(v1, 1);
+        assert_eq!(reg.latest_version(7), Some(1));
+        // mutate and publish again: both versions stay resolvable with
+        // their own bits
+        for wt in net.w.iter_mut() {
+            for v in wt.iter_mut() {
+                *v *= 2.0;
+            }
+        }
+        let v2 = reg.publish(7, net.w.clone(), net.bias.clone()).unwrap();
+        assert_eq!(v2, 2);
+        assert_eq!(reg.latest_version(7), Some(2));
+        let s1 = reg.snapshot(7, 1).unwrap();
+        let s2 = reg.snapshot(7, 2).unwrap();
+        for (a, b) in s1.w[0].iter().zip(&s2.w[0]) {
+            assert_eq!((*a * 2.0).to_bits(), b.to_bits(), "v1 bits untouched by v2 publish");
+        }
+        assert!(reg.snapshot(7, 3).is_none());
+        assert!(reg.snapshot(8, 1).is_none());
+    }
+
+    #[test]
+    fn register_is_idempotent_but_spec_immutable() {
+        let reg = Registry::new();
+        reg.register(1, spec()).unwrap();
+        reg.register(1, spec()).unwrap();
+        let other = ModelSpec { sizes: vec![8, 32, 4], ..spec() };
+        assert!(reg.register(1, other).is_err());
+        assert_eq!(reg.models(), vec![1]);
+    }
+
+    #[test]
+    fn publish_validates_shapes_and_versions() {
+        let reg = Registry::new();
+        reg.register(1, spec()).unwrap();
+        assert!(reg.publish(2, vec![], vec![]).is_err(), "unknown model");
+        assert!(reg.publish(1, vec![vec![0.0; 64]], vec![]).is_err(), "wrong transitions");
+        let net = spec().build();
+        assert!(
+            reg.publish_at(1, 0, net.w.clone(), net.bias.clone()).is_err(),
+            "version 0 reserved"
+        );
+        reg.publish_at(1, 5, net.w.clone(), net.bias.clone()).unwrap();
+        // idempotent retry with identical bits
+        reg.publish_at(1, 5, net.w.clone(), net.bias.clone()).unwrap();
+        // same version, different bits: rejected
+        let mut w2 = net.w.clone();
+        w2[0][0] += 1.0;
+        assert!(reg.publish_at(1, 5, w2, net.bias.clone()).is_err());
+        // auto-assign continues after the explicit version
+        let v = reg.publish(1, net.w.clone(), net.bias.clone()).unwrap();
+        assert_eq!(v, 6);
+    }
+
+    #[test]
+    fn snapshot_apply_round_trips_bitwise() {
+        let s = spec();
+        let mut trained = s.build();
+        // nudge weights so the snapshot differs from init
+        for wt in trained.w.iter_mut() {
+            for (i, v) in wt.iter_mut().enumerate() {
+                *v += (i as f32) * 0.125;
+            }
+        }
+        let snap = Snapshot::capture(1, &trained);
+        let mut fresh = s.build();
+        snap.apply(&mut fresh).unwrap();
+        for (wa, wb) in trained.w.iter().zip(&fresh.w) {
+            for (x, y) in wa.iter().zip(wb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        for (ba, bb) in trained.bias.iter().zip(&fresh.bias) {
+            for (x, y) in ba.iter().zip(bb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // wrong-shaped target is a typed error, not a panic
+        let mut other = ModelSpec { sizes: vec![8, 32, 4], ..spec() }.build();
+        assert!(snap.apply(&mut other).is_err());
+    }
+
+    #[test]
+    fn build_model_equals_source_net_forward() {
+        use crate::nn::tensor::Tensor;
+        let s = spec();
+        let mut trained = s.build();
+        for wt in trained.w.iter_mut() {
+            for (i, v) in wt.iter_mut().enumerate() {
+                *v -= (i % 7) as f32 * 0.03125;
+            }
+        }
+        let reg = Registry::new();
+        reg.register(9, s.clone()).unwrap();
+        let v = reg.publish(9, trained.w.clone(), trained.bias.clone()).unwrap();
+        let mut rebuilt = reg.build_model(9, v).unwrap();
+        let x = Tensor::from_vec(vec![0.5; 8], &[1, 8]);
+        let ya = trained.forward(&x, false);
+        let yb = rebuilt.forward(&x, false);
+        for (a, b) in ya.data.iter().zip(&yb.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "cold-loaded model forwards identically");
+        }
+        assert!(reg.build_model(9, 99).is_err());
+        assert!(reg.build_model(99, 1).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Directory-backed registry persistence in the `SBNC` checkpoint
+//! format.
+//!
+//! One file per `(model, version)` snapshot, named
+//! `m{model_id}_v{version}.sbnc`.  The checkpoint's f32 blobs carry
+//! the per-transition weight vectors (`w.0000`, `w.0001`, …) and bias
+//! layers (`b.0000`, …); the JSON meta header carries the
+//! [`ModelSpec`] plus identity, so a directory is self-describing — a
+//! fresh [`Registry::with_dir`](super::Registry::with_dir) rebuilds
+//! specs and snapshot chains from the files alone.  f32 values travel
+//! as raw little-endian bits end to end, so a snapshot loaded from
+//! disk serves bitwise-identically to the one that was saved (the
+//! cold-load half of the hot-publish invariant).
+//!
+//! These free functions are also the replacement surface for the
+//! deprecated [`Checkpoint::save`]/[`Checkpoint::load`] convenience
+//! wrappers in [`crate::coordinator::checkpoint`].
+
+use super::{ModelSpec, Registry, Snapshot};
+use crate::config::json::JsonValue;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::nn::kernel::KernelKind;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Snapshot file name for `(model_id, version)`.
+pub fn snapshot_file_name(model_id: u64, version: u64) -> String {
+    format!("m{model_id}_v{version}.sbnc")
+}
+
+/// Parse a snapshot file name back to `(model_id, version)`; `None`
+/// for files that are not registry snapshots (the scan skips them).
+fn parse_file_name(name: &str) -> Option<(u64, u64)> {
+    let rest = name.strip_prefix('m')?.strip_suffix(".sbnc")?;
+    let (id, ver) = rest.split_once("_v")?;
+    Some((id.parse().ok()?, ver.parse().ok()?))
+}
+
+/// Encode `(spec, snapshot)` as a checkpoint: weight/bias blobs plus a
+/// self-describing meta header.
+pub fn to_checkpoint(model_id: u64, spec: &ModelSpec, snap: &Snapshot) -> Checkpoint {
+    let mut ck = Checkpoint::new();
+    for (t, wt) in snap.w.iter().enumerate() {
+        ck.f32s.insert(format!("w.{t:04}"), wt.clone());
+    }
+    for (l, bl) in snap.bias.iter().enumerate() {
+        ck.f32s.insert(format!("b.{l:04}"), bl.clone());
+    }
+    ck.meta.insert("format".into(), JsonValue::String("sobolnet-registry-snapshot".into()));
+    ck.meta.insert("model_id".into(), JsonValue::Number(model_id as f64));
+    ck.meta.insert("version".into(), JsonValue::Number(snap.version as f64));
+    ck.meta.insert(
+        "sizes".into(),
+        JsonValue::Array(spec.sizes.iter().map(|&s| JsonValue::Number(s as f64)).collect()),
+    );
+    ck.meta.insert("paths".into(), JsonValue::Number(spec.paths as f64));
+    ck.meta.insert("seed".into(), JsonValue::Number(spec.seed as f64));
+    ck.meta.insert("kernel".into(), JsonValue::String(spec.kernel.as_str().into()));
+    ck
+}
+
+/// Decode a registry snapshot checkpoint back to
+/// `(model_id, spec, snapshot)`.
+pub fn from_checkpoint(ck: &Checkpoint) -> Result<(u64, ModelSpec, Snapshot), String> {
+    let meta_usize = |key: &str| -> Result<usize, String> {
+        ck.meta.get(key).and_then(|v| v.as_usize()).ok_or_else(|| {
+            format!("registry snapshot meta missing or non-integer '{key}'")
+        })
+    };
+    match ck.meta.get("format").and_then(|v| v.as_str()) {
+        Some("sobolnet-registry-snapshot") => {}
+        other => {
+            return Err(format!(
+                "not a registry snapshot (format meta = {other:?})"
+            ))
+        }
+    }
+    let model_id = meta_usize("model_id")? as u64;
+    let version = meta_usize("version")? as u64;
+    let sizes: Vec<usize> = ck
+        .meta
+        .get("sizes")
+        .and_then(|v| v.as_array())
+        .ok_or("registry snapshot meta missing 'sizes'")?
+        .iter()
+        .map(|v| v.as_usize().ok_or("non-integer layer size in snapshot meta"))
+        .collect::<Result<_, _>>()?;
+    let kernel_str = ck
+        .meta
+        .get("kernel")
+        .and_then(|v| v.as_str())
+        .ok_or("registry snapshot meta missing 'kernel'")?;
+    let spec = ModelSpec {
+        sizes,
+        paths: meta_usize("paths")?,
+        seed: meta_usize("seed")? as u64,
+        kernel: KernelKind::parse(kernel_str)
+            .ok_or_else(|| format!("unknown kernel '{kernel_str}' in snapshot meta"))?,
+    };
+    let mut w = Vec::with_capacity(spec.transitions());
+    let mut bias = Vec::with_capacity(spec.transitions());
+    for t in 0..spec.transitions() {
+        let wt = ck
+            .f32s
+            .get(&format!("w.{t:04}"))
+            .ok_or_else(|| format!("registry snapshot missing blob w.{t:04}"))?;
+        w.push(wt.clone());
+        // bias blobs are optional per layer (empty = bias disabled)
+        bias.push(ck.f32s.get(&format!("b.{t:04}")).cloned().unwrap_or_default());
+    }
+    spec.validate_weights(&w, &bias)?;
+    Ok((model_id, spec, Snapshot { version, w, bias }))
+}
+
+/// Write one snapshot file into `dir` (atomic: written to a temp name
+/// in the same directory, then renamed — a concurrent
+/// [`load_dir`] never sees a half-written snapshot).
+pub fn save_snapshot(
+    dir: &Path,
+    model_id: u64,
+    spec: &ModelSpec,
+    snap: &Snapshot,
+) -> Result<(), String> {
+    let ck = to_checkpoint(model_id, spec, snap);
+    let path = dir.join(snapshot_file_name(model_id, snap.version));
+    let tmp = dir.join(format!(
+        ".{}.tmp-{}",
+        snapshot_file_name(model_id, snap.version),
+        std::process::id()
+    ));
+    save_checkpoint_file(&ck, &tmp)?;
+    std::fs::rename(&tmp, &path).map_err(|e| format!("rename to {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Load one snapshot file.
+pub fn load_snapshot(path: &Path) -> Result<(u64, ModelSpec, Snapshot), String> {
+    let ck = load_checkpoint_file(path)?;
+    from_checkpoint(&ck).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Write any [`Checkpoint`] to a file — the non-deprecated replacement
+/// for [`Checkpoint::save`].
+pub fn save_checkpoint_file(ck: &Checkpoint, path: &Path) -> Result<(), String> {
+    let f = std::fs::File::create(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    ck.write_to(std::io::BufWriter::new(f))
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+/// Read any [`Checkpoint`] from a file — the non-deprecated
+/// replacement for [`Checkpoint::load`].
+pub fn load_checkpoint_file(path: &Path) -> Result<Checkpoint, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    Checkpoint::read_from(std::io::BufReader::new(f))
+        .map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Scan `dir` for snapshot files and load them into `reg` (ascending
+/// `(model, version)` order so chains come out sorted regardless of
+/// directory iteration order).
+pub(super) fn load_dir(dir: &Path, reg: &mut Registry) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("scan {}: {e}", dir.display()))?;
+    let mut files: Vec<(u64, u64, PathBuf)> = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("scan {}: {e}", dir.display()))?;
+        let name = entry.file_name();
+        if let Some((id, ver)) = name.to_str().and_then(parse_file_name) {
+            files.push((id, ver, entry.path()));
+        }
+    }
+    files.sort();
+    for (_, _, path) in &files {
+        let (model_id, spec, snap) = load_snapshot(path)?;
+        reg.load_entry(model_id, spec, Arc::new(snap))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::Registry;
+
+    fn spec() -> ModelSpec {
+        ModelSpec { sizes: vec![6, 12, 3], paths: 32, seed: 11, kernel: KernelKind::Scalar }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("sobolnet_registry_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn file_names_round_trip() {
+        assert_eq!(snapshot_file_name(7, 3), "m7_v3.sbnc");
+        assert_eq!(parse_file_name("m7_v3.sbnc"), Some((7, 3)));
+        assert_eq!(parse_file_name("m7_v3.json"), None);
+        assert_eq!(parse_file_name("x7_v3.sbnc"), None);
+        assert_eq!(parse_file_name("m7v3.sbnc"), None);
+        assert_eq!(parse_file_name("m_v.sbnc"), None);
+    }
+
+    #[test]
+    fn checkpoint_codec_round_trips_bitwise() {
+        let s = spec();
+        let net = s.build();
+        let snap = Snapshot::capture(4, &net);
+        let ck = to_checkpoint(42, &s, &snap);
+        let (id, spec2, snap2) = from_checkpoint(&ck).unwrap();
+        assert_eq!(id, 42);
+        assert_eq!(spec2, s);
+        assert_eq!(snap2.version, 4);
+        for (a, b) in snap.w.iter().zip(&snap2.w) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // a plain (non-registry) checkpoint is a typed error
+        assert!(from_checkpoint(&Checkpoint::new()).is_err());
+    }
+
+    #[test]
+    fn dir_persistence_round_trips_registry() {
+        let dir = temp_dir("roundtrip");
+        {
+            let reg = Registry::with_dir(&dir).unwrap();
+            reg.register(5, spec()).unwrap();
+            let mut net = spec().build();
+            reg.publish(5, net.w.clone(), net.bias.clone()).unwrap();
+            net.w[0][0] += 0.5;
+            reg.publish(5, net.w.clone(), net.bias.clone()).unwrap();
+        }
+        // a fresh registry over the same dir sees both versions
+        let reg2 = Registry::with_dir(&dir).unwrap();
+        assert_eq!(reg2.models(), vec![5]);
+        assert_eq!(reg2.latest_version(5), Some(2));
+        assert_eq!(reg2.spec(5), Some(spec()));
+        let s1 = reg2.snapshot(5, 1).unwrap();
+        let s2 = reg2.snapshot(5, 2).unwrap();
+        assert_eq!((s1.w[0][0] + 0.5).to_bits(), s2.w[0][0].to_bits());
+        // non-snapshot files in the dir are ignored by the scan
+        std::fs::write(dir.join("notes.txt"), b"hello").unwrap();
+        assert!(Registry::with_dir(&dir).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

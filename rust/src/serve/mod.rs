@@ -177,7 +177,7 @@ impl ShardedServer {
     pub fn submit(&self, x: Vec<f32>) -> Receiver<Vec<f32>> {
         assert_eq!(x.len(), self.engine.features(), "wrong feature count");
         let (rtx, rrx) = channel();
-        self.engine.admit(x, ReplyTx::Legacy(rtx)).expect("server running");
+        self.engine.admit(0, 0, x, ReplyTx::Legacy(rtx)).expect("server running");
         rrx
     }
 

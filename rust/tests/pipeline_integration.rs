@@ -76,10 +76,10 @@ fn trained_model_survives_checkpoint_roundtrip() {
     let dir = std::env::temp_dir().join("sobolnet_pipeline_test");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("model.ckpt");
-    ckpt.save(&path).unwrap();
+    sobolnet::registry::persist::save_checkpoint_file(&ckpt, &path).unwrap();
 
     // restore into a FRESH model over the same (deterministic) topology
-    let loaded = Checkpoint::load(&path).unwrap();
+    let loaded = sobolnet::registry::persist::load_checkpoint_file(&path).unwrap();
     let mut restored = SparseMlp::new(
         &topo,
         SparseMlpConfig { init: Init::ConstantPositive, seed: 99, ..Default::default() },

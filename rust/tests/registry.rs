@@ -1,0 +1,404 @@
+//! Integration: the multi-tenant model registry, the per-shard weight
+//! cache, and hot snapshot publish.
+//!
+//! Pinned properties (the PR's acceptance criteria):
+//!
+//! 1. **read-your-writes per version** — a snapshot published into a
+//!    registry is immediately buildable at exactly its version, and
+//!    the serving path answers from the *latest* version the moment
+//!    `publish` returns;
+//! 2. **published == fresh**: an engine serving a published snapshot
+//!    answers **bitwise identically** to a fresh model built from that
+//!    snapshot — in-process AND across a 2-process remote engine whose
+//!    workers received the snapshot over the wire (`Publish` frames);
+//! 3. **version pinning across a hot swap**: a ticket admitted under
+//!    version `v` resolves with version `v`'s bits even when a newer
+//!    version is published while it is in flight;
+//! 4. **version-keyed reply cache**: a worker's retry-idempotency
+//!    cache can never answer a request pinned to version `v2` with a
+//!    reply computed under `v1`, even for an identical request id and
+//!    payload (the stale-reply bug this PR fixes).
+//!
+//! The model seed honours `SOBOLNET_TEST_SEED` so CI can sweep seeds
+//! without a recompile.
+
+use sobolnet::engine::remote::frame::{read_frame, write_frame, Frame};
+use sobolnet::engine::remote::{spawn_shards, Addr, SpawnSpec};
+use sobolnet::engine::{EngineBuilder, RejectReason, Response};
+use sobolnet::nn::kernel::KernelKind;
+use sobolnet::nn::sparse::SparseMlp;
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::registry::{ModelSpec, Registry, Snapshot};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+const FEATURES: usize = 12;
+const HIDDEN: usize = 24;
+const CLASSES: usize = 6;
+const PATHS: usize = 128;
+const TENANT: u64 = 7;
+
+/// Model seed, sweepable from CI: `SOBOLNET_TEST_SEED=n cargo test`.
+fn test_seed() -> u64 {
+    std::env::var("SOBOLNET_TEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42)
+}
+
+/// The tenant's deterministic spec (scalar kernel: bitwise-stable
+/// everywhere, no autodetection involved).
+fn tenant_spec() -> ModelSpec {
+    ModelSpec {
+        sizes: vec![FEATURES, HIDDEN, CLASSES],
+        paths: PATHS,
+        seed: test_seed(),
+        kernel: KernelKind::Scalar,
+    }
+}
+
+/// Deterministic, version-distinct weight payloads: version `salt`'s
+/// weights are a pure function of (spec, salt), so a reference net for
+/// any version is computable without the registry that published it.
+fn weights_for(spec: &ModelSpec, salt: u64) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut net = spec.build();
+    let s = salt as f32;
+    for wt in net.w.iter_mut() {
+        for (i, v) in wt.iter_mut().enumerate() {
+            *v = *v * (1.0 + 0.125 * s) + (i % 5) as f32 * 0.01 * s;
+        }
+    }
+    for bl in net.bias.iter_mut() {
+        for (i, v) in bl.iter_mut().enumerate() {
+            *v += 0.001 * s * (i + 1) as f32;
+        }
+    }
+    (net.w, net.bias)
+}
+
+/// Reference logits for `x` under version `salt` of the tenant spec —
+/// built from scratch, no registry involved.
+fn reference_logits(salt: u64, x: &[f32]) -> Vec<f32> {
+    let spec = tenant_spec();
+    let (w, bias) = weights_for(&spec, salt);
+    let mut net = spec.build();
+    Snapshot { version: salt, w, bias }.apply(&mut net).expect("shapes match spec");
+    net.forward(&Tensor::from_vec(x.to_vec(), &[1, FEATURES]), false).data
+}
+
+/// The engine's single-tenant default model (model id 0).
+fn default_net() -> SparseMlp {
+    ModelSpec {
+        sizes: vec![FEATURES, HIDDEN, CLASSES],
+        paths: PATHS,
+        seed: test_seed() ^ 0x5a5a,
+        kernel: KernelKind::Scalar,
+    }
+    .build()
+}
+
+fn sample(i: usize) -> Vec<f32> {
+    (0..FEATURES).map(|j| ((i * FEATURES + j) as f32 * 0.173).sin()).collect()
+}
+
+fn assert_bitwise_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (k, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: logit {k}: {g} vs {w}");
+    }
+}
+
+fn logits(r: Response, ctx: &str) -> Vec<f32> {
+    match r {
+        Response::Logits(l) => l,
+        Response::Rejected(why) => panic!("{ctx}: rejected: {why}"),
+    }
+}
+
+/// Spawn spec for `shard-worker` children whose default model matches
+/// [`default_net`] and whose sizes admit the tenant spec.
+fn worker_spec(extra: &[&str]) -> SpawnSpec {
+    let mut args: Vec<String> = vec![
+        "--sizes".into(),
+        format!("{FEATURES},{HIDDEN},{CLASSES}"),
+        "--paths".into(),
+        PATHS.to_string(),
+        "--seed".into(),
+        (test_seed() ^ 0x5a5a).to_string(),
+        "--kernel".into(),
+        "scalar".into(),
+        "--batch".into(),
+        "8".into(),
+        "--max-wait-ms".into(),
+        "1".into(),
+        "--model-cache".into(),
+        "4".into(),
+    ];
+    args.extend(extra.iter().map(|s| s.to_string()));
+    SpawnSpec {
+        program: PathBuf::from(env!("CARGO_BIN_EXE_sobolnet")),
+        shard_args: args,
+        ..Default::default()
+    }
+}
+
+/// Property 1 + 2, in-process: read-your-writes per version through
+/// both the registry API and the serving path, and bitwise equality of
+/// served logits against a fresh from-snapshot build.
+#[test]
+fn published_snapshot_serves_bitwise_identical_to_fresh_build() {
+    let reg = Arc::new(Registry::new());
+    reg.register(TENANT, tenant_spec()).expect("register");
+    let (w1, b1) = weights_for(&tenant_spec(), 1);
+    assert_eq!(reg.publish(TENANT, w1.clone(), b1.clone()).expect("publish v1"), 1);
+
+    // read-your-writes at the registry: the exact bits, at the exact version
+    assert_eq!(reg.latest_version(TENANT), Some(1));
+    let snap = reg.snapshot(TENANT, 1).expect("snapshot v1 readable");
+    assert_eq!(snap.w, w1, "published bits read back unchanged");
+    let built = reg.build_model(TENANT, 1).expect("buildable at v1");
+    assert_bitwise_eq(
+        &built.w.concat(),
+        &w1.concat(),
+        "cold-built model holds the published weights",
+    );
+
+    let engine = EngineBuilder::new()
+        .workers(2)
+        .max_wait(Duration::from_millis(1))
+        .registry(Arc::clone(&reg))
+        .model_cache(2)
+        .build_model(default_net(), FEATURES, CLASSES);
+
+    // read-your-writes through the serving path, bitwise
+    for i in 0..6 {
+        let got = logits(engine.infer_model(TENANT, sample(i)), "tenant v1");
+        assert_bitwise_eq(&got, &reference_logits(1, &sample(i)), "served v1 == fresh build");
+    }
+    // the default model is untouched by tenancy
+    let mut dflt = default_net();
+    let want = dflt.forward(&Tensor::from_vec(sample(0), &[1, FEATURES]), false).data;
+    assert_bitwise_eq(&logits(engine.infer(sample(0)), "default"), &want, "default model");
+
+    // publish v2 through the engine; the very next resolve serves it
+    let (w2, b2) = weights_for(&tenant_spec(), 2);
+    assert_eq!(engine.publish(TENANT, w2, b2).expect("publish v2"), 2);
+    let got = logits(engine.infer_model(TENANT, sample(3)), "tenant v2");
+    assert_bitwise_eq(&got, &reference_logits(2, &sample(3)), "served v2 == fresh build");
+
+    // unknown tenants are definitive rejections, not panics
+    match engine.infer_model(99, sample(0)) {
+        Response::Rejected(RejectReason::UnknownModel { model_id: 99, version: 0 }) => {}
+        other => panic!("unknown tenant: unexpected outcome {other:?}"),
+    }
+    engine.shutdown();
+}
+
+/// Property 3, in-process: tickets pinned at admission resolve with
+/// their admitted version's bits across a concurrent publish storm,
+/// and a single client's pinned versions are non-decreasing.
+#[test]
+fn in_flight_tickets_resolve_with_their_admitted_versions_bits() {
+    let reg = Arc::new(Registry::new());
+    reg.register(TENANT, tenant_spec()).expect("register");
+    let (w1, b1) = weights_for(&tenant_spec(), 1);
+    reg.publish(TENANT, w1, b1).expect("publish v1");
+
+    let engine = Arc::new(
+        EngineBuilder::new()
+            .workers(2)
+            .max_wait(Duration::from_millis(1))
+            .registry(Arc::clone(&reg))
+            .model_cache(2)
+            .build_model(default_net(), FEATURES, CLASSES),
+    );
+
+    // explicit pin: admitted under v1, then v2 lands, then they resolve
+    let probe = sample(0);
+    let pinned: Vec<_> = (0..8)
+        .map(|_| engine.try_submit_pinned(TENANT, 1, probe.clone()).expect("admit pinned v1"))
+        .collect();
+    let (w2, b2) = weights_for(&tenant_spec(), 2);
+    assert_eq!(engine.publish(TENANT, w2, b2).expect("publish v2"), 2);
+    let v1_bits = reference_logits(1, &probe);
+    for (k, t) in pinned.into_iter().enumerate() {
+        let got = logits(t.wait(), "pinned ticket");
+        assert_bitwise_eq(&got, &v1_bits, &format!("ticket {k} admitted under v1"));
+    }
+    // and the swap really happened: latest now serves v2 bits
+    let got = logits(engine.infer_model(TENANT, probe.clone()), "post-swap");
+    assert_bitwise_eq(&got, &reference_logits(2, &probe), "latest == v2 after the swap");
+
+    // concurrent storm: publisher appends v3..=v8 while a client
+    // serves; every answer must be bitwise one of the published
+    // versions, and (sequential admission) non-decreasing
+    let version_bits: Vec<Vec<f32>> = (1..=8).map(|v| reference_logits(v, &probe)).collect();
+    let publisher = {
+        let engine = Arc::clone(&engine);
+        std::thread::spawn(move || {
+            for v in 3..=8u64 {
+                let (w, b) = weights_for(&tenant_spec(), v);
+                assert_eq!(engine.publish(TENANT, w, b).expect("publish"), v);
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    };
+    let mut last_version = 0u64;
+    for i in 0..60 {
+        let got = logits(engine.infer_model(TENANT, probe.clone()), "storm");
+        let v = version_bits
+            .iter()
+            .position(|want| {
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits())
+            })
+            .map(|p| p as u64 + 1)
+            .unwrap_or_else(|| panic!("answer {i} matches no published version's bits"));
+        assert!(
+            v >= last_version,
+            "pinned versions went backwards: {v} after {last_version}"
+        );
+        last_version = v;
+    }
+    publisher.join().expect("publisher");
+    // after the storm settles, the latest version is the storm's last
+    let got = logits(engine.infer_model(TENANT, probe.clone()), "post-storm");
+    assert_bitwise_eq(&got, &reference_logits(8, &probe), "post-storm latest == v8");
+    // the publisher's clone is joined, so this is the sole `Arc`;
+    // dropping it runs the same graceful stop as `shutdown()`
+    drop(engine);
+}
+
+/// Property 2 + 3, across processes: a coordinator publishes snapshots
+/// to two real `shard-worker` processes over the wire; remote serving
+/// is bitwise-identical to a fresh from-snapshot build, pinned tickets
+/// survive a mid-flight publish, and unknown pinned versions come back
+/// as definitive `UnknownModel` rejections.
+#[test]
+fn remote_publish_and_serve_is_bitwise_and_pinned_across_processes() {
+    let shards = spawn_shards(2, &worker_spec(&[])).expect("spawn 2 shard-workers");
+    let reg = Arc::new(Registry::new());
+    reg.register(TENANT, tenant_spec()).expect("register");
+
+    let engine = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .registry(Arc::clone(&reg))
+        .remote(shards.addrs())
+        .build_remote()
+        .expect("build remote engine");
+
+    // hot publish: Publish frames reach both workers before the
+    // version commits locally, so the next admit can use it
+    let (w1, b1) = weights_for(&tenant_spec(), 1);
+    assert_eq!(engine.publish(TENANT, w1, b1).expect("publish v1 over the wire"), 1);
+    for i in 0..6 {
+        let got = logits(engine.infer_model(TENANT, sample(i)), "remote tenant v1");
+        assert_bitwise_eq(
+            &got,
+            &reference_logits(1, &sample(i)),
+            "remote worker serves the published bits",
+        );
+    }
+
+    // pinned across a remote hot swap
+    let probe = sample(1);
+    let pinned: Vec<_> = (0..6)
+        .map(|_| engine.try_submit_pinned(TENANT, 1, probe.clone()).expect("admit pinned v1"))
+        .collect();
+    let (w2, b2) = weights_for(&tenant_spec(), 2);
+    assert_eq!(engine.publish(TENANT, w2, b2).expect("publish v2 over the wire"), 2);
+    let v1_bits = reference_logits(1, &probe);
+    for (k, t) in pinned.into_iter().enumerate() {
+        let got = logits(t.wait(), "remote pinned ticket");
+        assert_bitwise_eq(&got, &v1_bits, &format!("remote ticket {k} admitted under v1"));
+    }
+    let got = logits(engine.infer_model(TENANT, probe.clone()), "remote post-swap");
+    assert_bitwise_eq(&got, &reference_logits(2, &probe), "remote latest == v2");
+
+    // a pinned version no worker holds is a definitive rejection — it
+    // must not burn the retry/failover ladder or kill the shard
+    let t = engine.try_submit_pinned(TENANT, 99, probe.clone()).expect("admitted");
+    match t.wait() {
+        Response::Rejected(RejectReason::UnknownModel { model_id, version }) => {
+            assert_eq!((model_id, version), (TENANT, 99));
+        }
+        other => panic!("unknown pinned version: unexpected outcome {other:?}"),
+    }
+    // ...and the engine keeps serving afterwards
+    let got = logits(engine.infer_model(TENANT, probe.clone()), "post-reject");
+    assert_bitwise_eq(&got, &reference_logits(2, &probe), "serving survives the reject");
+    engine.shutdown();
+}
+
+/// Property 4, at the protocol level: same request id, same payload,
+/// different pinned version — the worker's reply cache must MISS and
+/// recompute under the newly pinned version.  Before this PR the
+/// fingerprint ignored the model key, so the second request would have
+/// been answered with version 1's cached logits.
+#[test]
+fn reply_cache_is_version_keyed_never_serves_stale_snapshot() {
+    let shards = spawn_shards(1, &worker_spec(&[])).expect("spawn");
+    let addr = Addr::parse(&shards.addrs()[0]).expect("addr");
+    let mut s = addr.connect().expect("connect");
+    match read_frame(&mut s).expect("hello") {
+        Frame::Hello { features, .. } => assert_eq!(features as usize, FEATURES),
+        other => panic!("expected hello, got {other:?}"),
+    }
+
+    let spec = tenant_spec();
+    let publish = |s: &mut _, salt: u64| {
+        let (w, bias) = weights_for(&spec, salt);
+        write_frame(
+            s,
+            &Frame::Publish { model_id: TENANT, version: salt, spec: spec.clone(), w, bias },
+        )
+        .expect("send publish");
+        match read_frame(s).expect("publish ack") {
+            Frame::PublishAck { model_id, version } => {
+                assert_eq!((model_id, version), (TENANT, salt));
+            }
+            other => panic!("expected PublishAck, got {other:?}"),
+        }
+    };
+    publish(&mut s, 1);
+    // idempotent retry: re-publishing identical bits at v1 acks again
+    publish(&mut s, 1);
+
+    let data = sample(0);
+    let request = |s: &mut _, version: u64| {
+        write_frame(
+            s,
+            &Frame::Request {
+                id: 21, // the SAME id for both versions — the cache trap
+                model_id: TENANT,
+                version,
+                rows: 1,
+                features: FEATURES as u32,
+                data: data.clone(),
+            },
+        )
+        .expect("send request");
+        match read_frame(s).expect("response") {
+            Frame::Response { id, model_id, version: got_v, data, .. } => {
+                assert_eq!(id, 21);
+                assert_eq!(model_id, TENANT, "response echoes the model");
+                assert_eq!(got_v, version, "response echoes the pinned version");
+                data
+            }
+            other => panic!("expected response, got {other:?}"),
+        }
+    };
+    let first = request(&mut s, 1);
+    assert_bitwise_eq(&first, &reference_logits(1, &data), "v1 bits");
+    // retry of the identical request is served from cache — same bits
+    let retry = request(&mut s, 1);
+    assert_bitwise_eq(&retry, &first, "idempotent retry");
+
+    publish(&mut s, 2);
+    // same id, same payload, NEW pinned version: must recompute
+    let second = request(&mut s, 2);
+    assert_bitwise_eq(
+        &second,
+        &reference_logits(2, &data),
+        "same id + payload under a new version must be recomputed, not served stale",
+    );
+    write_frame(&mut s, &Frame::Shutdown).expect("shutdown");
+}

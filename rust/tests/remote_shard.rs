@@ -284,7 +284,14 @@ fn resent_request_id_is_answered_from_cache_not_recomputed() {
 
     let rows = 3usize;
     let data: Vec<f32> = (0..rows).flat_map(sample).collect();
-    let req = Frame::Request { id: 7, rows: rows as u32, features: features as u32, data };
+    let req = Frame::Request {
+        id: 7,
+        model_id: 0,
+        version: 0,
+        rows: rows as u32,
+        features: features as u32,
+        data,
+    };
     write_frame(&mut s, &req).expect("send");
     let first = match read_frame(&mut s).expect("first response") {
         Frame::Response { data, .. } => data,
@@ -311,8 +318,14 @@ fn resent_request_id_is_answered_from_cache_not_recomputed() {
     // a *restarted* coordinator reuses low ids with different data:
     // the cache must miss (fingerprint mismatch) and recompute
     let other_data: Vec<f32> = (100..100 + rows).flat_map(sample).collect();
-    let fresh =
-        Frame::Request { id: 7, rows: rows as u32, features: features as u32, data: other_data };
+    let fresh = Frame::Request {
+        id: 7,
+        model_id: 0,
+        version: 0,
+        rows: rows as u32,
+        features: features as u32,
+        data: other_data,
+    };
     write_frame(&mut s, &fresh).expect("send different payload under the same id");
     let third = match read_frame(&mut s).expect("recomputed response") {
         Frame::Response { data, .. } => data,
@@ -426,7 +439,14 @@ fn garbage_on_the_socket_cannot_take_a_shard_down() {
     {
         use std::io::Write;
         let mut s = addr.connect().expect("connect");
-        s.write_all(b"SBN1\x02\xff\xff").expect("send truncated frame");
+        s.write_all(b"SBN2\x02\xff\xff").expect("send truncated frame");
+    }
+    // connection 3: an old-protocol (v1) peer — the worker answers the
+    // version mismatch by dropping the connection, nothing more
+    {
+        use std::io::Write;
+        let mut s = addr.connect().expect("connect");
+        s.write_all(b"SBN1\x02\x00\x00\x00\x00").expect("send v1 frame");
     }
     // the worker must still serve a well-behaved engine
     let engine = EngineBuilder::new()
