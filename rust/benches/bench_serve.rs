@@ -22,6 +22,11 @@
 //! (`serve_tenants_{n}_*` metrics, including the cache hit rate — the
 //! direct tracker of the model registry's serving cost).
 //!
+//! A fourth sweep measures **ensemble** serving: N member models
+//! behind one submit with a fixed-member-order mean merge
+//! (`serve_ensemble_{n}m_*`), plus a 2-of-3 quorum cell
+//! (`serve_ensemble_quorum_2of3_*`) tracking the partial-merge tail.
+//!
 //! Every figure lands in `BENCH_serve.json` at the repo root
 //! ([`sobolnet::bench::BenchReport`] metrics): per
 //! `(policy, workers)` cell the achieved throughput, merged p50/p99,
@@ -29,7 +34,7 @@
 //! run with the same coverage.
 
 use sobolnet::bench::BenchReport;
-use sobolnet::engine::{AdmissionPolicy, DispatchKind, EngineBuilder, Response};
+use sobolnet::engine::{AdmissionPolicy, DispatchKind, EngineBuilder, EnsembleMode, Response};
 use sobolnet::nn::init::Init;
 use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
 use sobolnet::topology::{PathSource, TopologyBuilder};
@@ -298,6 +303,89 @@ fn main() {
         report.metric(&format!("serve_tenants_{nt}_req_per_sec"), tp);
         report.metric(&format!("serve_tenants_{nt}_p99_ms"), p99 * 1e3);
         report.metric(&format!("serve_tenants_{nt}_cache_hit_rate"), hit_rate);
+    }
+
+    // --- ensemble serving: N member models (same spec, member-indexed
+    //     init seeds) behind one submit, closed burst, fixed-order
+    //     mean merge.  N members multiply the compute behind every
+    //     request; these cells track what the fan-out + deterministic
+    //     merge cost on top of that as N grows, and the quorum cell
+    //     what a 2-of-3 partial merge does to the tail (`_members`
+    //     records the average member count actually merged).
+    let eburst: usize = if quick { 128 } else { 512 };
+    let espec = sobolnet::registry::ModelSpec {
+        sizes: vec![FEATURES, 64, 64, CLASSES],
+        paths: 1024,
+        seed: 7,
+        kernel: sobolnet::nn::kernel::KernelKind::Auto,
+    };
+    for &nm in &[1usize, 3, 5] {
+        let engine = EngineBuilder::new()
+            .workers(1) // one shard per member
+            .batch(8)
+            .max_wait(Duration::from_micros(200))
+            .queue_depth(0) // closed burst must not shed
+            .dispatch(DispatchKind::RoundRobin)
+            .ensemble(nm, EnsembleMode::Mean)
+            .build_ensemble(&espec);
+        let t = Timer::start();
+        let tickets: Vec<_> =
+            (0..eburst).map(|i| engine.try_submit(sample(i)).expect("unbounded")).collect();
+        for ticket in tickets {
+            assert!(
+                matches!(ticket.wait(), Response::Logits(_) | Response::Merged { .. }),
+                "ensemble request served"
+            );
+        }
+        let secs = t.elapsed_secs();
+        let (p50, _, p99) = engine.latency_percentiles();
+        engine.shutdown();
+        let tp = eburst as f64 / secs.max(1e-12);
+        println!(
+            "bench serve/ensemble/{nm}m: {tp:.0} req/s p50={:.3}ms p99={:.3}ms",
+            p50 * 1e3,
+            p99 * 1e3,
+        );
+        report.metric(&format!("serve_ensemble_{nm}m_req_per_sec"), tp);
+        report.metric(&format!("serve_ensemble_{nm}m_p50_ms"), p50 * 1e3);
+        report.metric(&format!("serve_ensemble_{nm}m_p99_ms"), p99 * 1e3);
+    }
+    {
+        // 2-of-3 quorum under a deliberately tight straggler deadline:
+        // the merge returns as soon as two members answered and the
+        // third blows the deadline, so `_members` lands between the
+        // quorum (2) and the full count (3)
+        let engine = EngineBuilder::new()
+            .workers(1)
+            .batch(8)
+            .max_wait(Duration::from_micros(200))
+            .queue_depth(0)
+            .dispatch(DispatchKind::RoundRobin)
+            .ensemble(3, EnsembleMode::Mean)
+            .quorum(2)
+            .quorum_deadline(Duration::from_micros(500))
+            .build_ensemble(&espec);
+        let tickets: Vec<_> =
+            (0..eburst).map(|i| engine.try_submit(sample(i)).expect("unbounded")).collect();
+        let (mut members_sum, mut count) = (0usize, 0usize);
+        for ticket in tickets {
+            match ticket.wait() {
+                Response::Merged { members_merged, .. } => {
+                    members_sum += members_merged;
+                    count += 1;
+                }
+                other => panic!("quorum request: unexpected outcome {other:?}"),
+            }
+        }
+        let (_, _, p99) = engine.latency_percentiles();
+        engine.shutdown();
+        let avg_members = members_sum as f64 / count.max(1) as f64;
+        println!(
+            "bench serve/ensemble/quorum-2of3: p99={:.3}ms avg members merged {avg_members:.2}",
+            p99 * 1e3,
+        );
+        report.metric("serve_ensemble_quorum_2of3_p99_ms", p99 * 1e3);
+        report.metric("serve_ensemble_quorum_2of3_members", avg_members);
     }
 
     // machine-readable output, tracked across PRs

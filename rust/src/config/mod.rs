@@ -4,7 +4,7 @@
 
 pub mod json;
 
-use crate::engine::{AdmissionPolicy, DispatchKind};
+use crate::engine::{AdmissionPolicy, DispatchKind, EnsembleMode};
 use crate::nn::init::Init;
 use crate::nn::kernel::KernelKind;
 use crate::topology::{PathSource, SignPolicy};
@@ -168,6 +168,17 @@ pub struct ServeSection {
     /// [`crate::registry::cache::ModelCache`]).  Clamped to ≥ 1 by
     /// `EngineBuilder::from_config`.
     pub model_cache: usize,
+    /// Ensemble members served behind a single submit (`1` = plain
+    /// serving).  Worker/shard counts are per member, so the engine
+    /// runs `workers × ensemble` shards — see
+    /// [`crate::engine::EngineBuilder::ensemble`].
+    pub ensemble: usize,
+    /// Ensemble merge rule: "mean" or "vote"
+    /// ([`crate::engine::EnsembleMode`]).
+    pub ensemble_mode: EnsembleMode,
+    /// K-of-N quorum: a merge may close over K members once the
+    /// straggler deadline passes (`0` = wait for every member).
+    pub quorum: usize,
     /// Multi-process subsection (`"remote": {...}`).
     pub remote: RemoteSection,
 }
@@ -185,6 +196,9 @@ impl Default for ServeSection {
             replicas: 1,
             registry: String::new(),
             model_cache: 8,
+            ensemble: 1,
+            ensemble_mode: EnsembleMode::Mean,
+            quorum: 0,
             remote: RemoteSection::default(),
         }
     }
@@ -228,6 +242,12 @@ impl ServeSection {
                 "model_cache" => {
                     cfg.model_cache = val.as_usize().ok_or("serve.model_cache int")?
                 }
+                "ensemble" => cfg.ensemble = val.as_usize().ok_or("serve.ensemble int")?,
+                "ensemble_mode" => {
+                    let s = val.as_str().ok_or("serve.ensemble_mode string")?;
+                    cfg.ensemble_mode = EnsembleMode::parse(s)?;
+                }
+                "quorum" => cfg.quorum = val.as_usize().ok_or("serve.quorum int")?,
                 "remote" => cfg.remote = RemoteSection::from_json(val)?,
                 "comment" | "description" => {}
                 other => return Err(format!("unknown serve key '{other}'")),
@@ -256,6 +276,12 @@ impl ServeSection {
         m.insert("replicas".to_string(), JsonValue::Number(self.replicas as f64));
         m.insert("registry".to_string(), JsonValue::String(self.registry.clone()));
         m.insert("model_cache".to_string(), JsonValue::Number(self.model_cache as f64));
+        m.insert("ensemble".to_string(), JsonValue::Number(self.ensemble as f64));
+        m.insert(
+            "ensemble_mode".to_string(),
+            JsonValue::String(self.ensemble_mode.as_str().to_string()),
+        );
+        m.insert("quorum".to_string(), JsonValue::Number(self.quorum as f64));
         m.insert("remote".to_string(), self.remote.to_json());
         JsonValue::Object(m)
     }
@@ -492,6 +518,9 @@ mod tests {
             replicas: 2,
             registry: "/tmp/reg".to_string(),
             model_cache: 4,
+            ensemble: 3,
+            ensemble_mode: EnsembleMode::Vote,
+            quorum: 2,
             remote: RemoteSection::default(),
         };
         let text = section.to_json().to_string_compact();
@@ -508,11 +537,21 @@ mod tests {
         assert_eq!(cfg.kernel, KernelKind::Auto);
         assert_eq!(cfg.registry, "", "no registry by default");
         assert_eq!(cfg.model_cache, 8);
+        assert_eq!(cfg.ensemble, 1, "plain serving by default");
+        assert_eq!(cfg.ensemble_mode, EnsembleMode::Mean);
+        assert_eq!(cfg.quorum, 0, "full merge by default");
         // multi-tenant knobs parse
         let j = json::parse(r#"{"registry": "/var/reg", "model_cache": 2}"#).unwrap();
         let cfg = ServeSection::from_json(&j).unwrap();
         assert_eq!(cfg.registry, "/var/reg");
         assert_eq!(cfg.model_cache, 2);
+        // ensemble knobs parse
+        let j =
+            json::parse(r#"{"ensemble": 5, "ensemble_mode": "vote", "quorum": 3}"#).unwrap();
+        let cfg = ServeSection::from_json(&j).unwrap();
+        assert_eq!(cfg.ensemble, 5);
+        assert_eq!(cfg.ensemble_mode, EnsembleMode::Vote);
+        assert_eq!(cfg.quorum, 3);
         assert!(
             ServeSection::from_json(&json::parse(r#"{"registry": 7}"#).unwrap()).is_err(),
             "registry must be a string path"
@@ -589,6 +628,11 @@ mod tests {
             .is_err());
         assert!(
             ServeSection::from_json(&json::parse(r#"{"kernel": "avx512"}"#).unwrap()).is_err()
+        );
+        assert!(ServeSection::from_json(&json::parse(r#"{"ensemble_mode": "median"}"#).unwrap())
+            .is_err());
+        assert!(
+            ServeSection::from_json(&json::parse(r#"{"quorum": "half"}"#).unwrap()).is_err()
         );
     }
 }

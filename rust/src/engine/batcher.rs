@@ -18,6 +18,13 @@
 //! batchers flushing small batches at once genuinely overlap instead
 //! of serializing on a single pool job slot — which is why small
 //! `capacity`/`max_wait` settings stay profitable under many shards.
+//!
+//! Batch composition is irrelevant to ensemble determinism: member
+//! shards never share a queue (the fan-out admits each member copy
+//! into that member's own shard block), and each request's logits are
+//! bit-identical regardless of which batch it lands in, so the merge
+//! in [`super::ensemble`] sees the same member values however the
+//! batcher happened to coalesce them.
 
 use super::admission::{BoundedQueue, PopWait};
 use crate::util::timer::Timer;

@@ -24,6 +24,13 @@
 //! [`crate::engine::Engine`]) removes dead replicas before `pick`
 //! ever sees them.
 //!
+//! **Ensemble fan-out** also needs no special casing: the engine calls
+//! the policy once per member over that member's shard-block views
+//! only (`admit_within`), so `pick` can never route a member's copy of
+//! a request onto another member's shards, and — because merge order
+//! is fixed by member index, not by completion order — no policy
+//! choice can perturb ensemble response bits.
+//!
 //! Like the admission queues, the learning policies' internal locks
 //! are **poison-immune** ([`crate::util::sync::plock`]): a worker
 //! thread that panics right after reporting a completion must not

@@ -1,0 +1,427 @@
+//! Ensemble serving: N member models behind one submit, merged in
+//! **fixed member order**.
+//!
+//! The paper's construction makes ensemble members nearly free: the
+//! same LDS-generated paths with a different init seed yield another
+//! network of identical topology and cost (Baldassi et al.,
+//! arXiv:1605.06444 argue such cheap-replica ensembles recover the
+//! accuracy a single sparse member lacks).  [`EngineBuilder::ensemble`]
+//! builds the members from one base [`ModelSpec`] via
+//! [`ModelSpec::member`] (member-indexed seed derivation), `try_submit`
+//! fans each request out across the member shard blocks as concurrent
+//! jobs, and the ticket merges the member logits here.
+//!
+//! **Determinism is the whole design.**  Member responses arrive in
+//! whatever order dispatch, batching, and thread scheduling produce —
+//! the merge never looks at arrival order.  Arrived members are
+//! combined in ascending member index (the same fixed-merge-order
+//! trick that makes the sharded backward bitwise thread-invariant), so
+//! an ensemble response is bitwise identical for any
+//! `SOBOLNET_THREADS`, any dispatch policy, and in-process vs remote
+//! members (`tests/ensemble.rs` pins all three axes).
+//!
+//! **Merge rules** ([`EnsembleMerger`], the normative reference):
+//!
+//! - [`EnsembleMode::Mean`]: sum the arrived member logit vectors
+//!   element-wise in ascending member order, then divide each element
+//!   by the arrived count with a single `f32` division.  A one-member
+//!   merge divides by `1.0`, which is exact — an N=1 ensemble answers
+//!   bitwise like the plain engine.
+//! - [`EnsembleMode::Vote`]: each arrived member votes for its argmax
+//!   class (intra-member ties resolve to the lowest class index); the
+//!   response is a one-hot vector of the winning class.  A vote-count
+//!   tie is broken by the **lowest member index**: scanning members in
+//!   ascending order, the first member whose voted class holds the
+//!   maximum count names the winner.
+//!
+//! **Partial quorum** ([`EngineBuilder::quorum`]): a K-of-N ticket
+//! returns once K members arrived and the stragglers blow a
+//! p99-derived deadline (`max(floor, 2 × p99)` over the member-latency
+//! EWMA, the same rule the remote hedge uses), annotated with
+//! `members_merged`.  A dead member resolves its slot as rejected —
+//! degrading the quorum — instead of failing the ticket; see
+//! [`super::ticket::Ticket::wait`].
+//!
+//! The merge scratch (vote tally, member argmax list) is **builder
+//! held** on the shared engine state, not allocated per request —
+//! `tests/alloc_hotpath.rs` pins the warm merge path at zero
+//! allocations.
+//!
+//! [`EngineBuilder::ensemble`]: super::EngineBuilder::ensemble
+//! [`EngineBuilder::quorum`]: super::EngineBuilder::quorum
+//! [`ModelSpec`]: crate::registry::ModelSpec
+//! [`ModelSpec::member`]: crate::registry::ModelSpec::member
+
+use crate::util::sync::plock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// How member logits combine into one ensemble response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EnsembleMode {
+    /// Element-wise mean over the arrived members (fixed member order;
+    /// the bitwise-pinned default).
+    #[default]
+    Mean,
+    /// Majority vote over member argmax classes; the response is a
+    /// one-hot vector of the winning class.
+    Vote,
+}
+
+impl EnsembleMode {
+    /// Parse a mode name (`"mean"` or `"vote"`, as the CLI and config
+    /// spell them).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "mean" => Ok(EnsembleMode::Mean),
+            "vote" => Ok(EnsembleMode::Vote),
+            other => Err(format!("unknown ensemble mode '{other}' (expected mean|vote)")),
+        }
+    }
+
+    /// Canonical name (round-trips through [`EnsembleMode::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EnsembleMode::Mean => "mean",
+            EnsembleMode::Vote => "vote",
+        }
+    }
+}
+
+impl std::fmt::Display for EnsembleMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The fixed-member-order merge, usable standalone as the sequential
+/// reference (`tests/ensemble.rs` compares engine responses bitwise
+/// against exactly this code run over in-process member forwards).
+///
+/// The vote tally and argmax scratch are held here and reused across
+/// merges, so a warm merge allocates nothing: the mean path folds into
+/// the first arrived member's own vector, and the vote path reuses it
+/// for the one-hot output.
+pub struct EnsembleMerger {
+    mode: EnsembleMode,
+    /// Vote tally per class (vote mode scratch; zeroed per merge).
+    votes: Vec<u32>,
+    /// Arrived members' voted classes, ascending member order (vote
+    /// mode scratch; the tie-break scan reads it back).
+    voted: Vec<u32>,
+}
+
+impl EnsembleMerger {
+    /// Merger for `classes`-way logits over at most `members` members.
+    pub fn new(mode: EnsembleMode, classes: usize, members: usize) -> Self {
+        EnsembleMerger { mode, votes: vec![0; classes], voted: Vec::with_capacity(members) }
+    }
+
+    /// Merge the arrived member logits (slot index = member index;
+    /// `None` = member never answered) in **fixed member order**,
+    /// taking the vectors out of `slots`.  Returns the merged logits
+    /// and the arrived-member count, or `None` when nothing arrived.
+    pub fn merge(&mut self, slots: &mut [Option<Vec<f32>>]) -> Option<(Vec<f32>, usize)> {
+        match self.mode {
+            EnsembleMode::Mean => self.merge_mean(slots),
+            EnsembleMode::Vote => self.merge_vote(slots),
+        }
+    }
+
+    fn merge_mean(&mut self, slots: &mut [Option<Vec<f32>>]) -> Option<(Vec<f32>, usize)> {
+        let mut acc: Option<Vec<f32>> = None;
+        let mut arrived = 0usize;
+        for slot in slots.iter_mut() {
+            let Some(l) = slot.take() else { continue };
+            arrived += 1;
+            match acc.as_mut() {
+                // the first arrived vector (lowest member index) is the
+                // accumulator — no per-merge allocation
+                None => acc = Some(l),
+                Some(a) => {
+                    debug_assert_eq!(a.len(), l.len(), "members disagree on class count");
+                    for (ai, li) in a.iter_mut().zip(&l) {
+                        *ai += *li;
+                    }
+                }
+            }
+        }
+        let mut out = acc?;
+        // one f32 division per element — the normative mean rule; /1.0
+        // is exact, so N=1 stays bitwise-equal to the single model
+        let n = arrived as f32;
+        for v in out.iter_mut() {
+            *v /= n;
+        }
+        Some((out, arrived))
+    }
+
+    fn merge_vote(&mut self, slots: &mut [Option<Vec<f32>>]) -> Option<(Vec<f32>, usize)> {
+        for v in self.votes.iter_mut() {
+            *v = 0;
+        }
+        self.voted.clear();
+        let mut out: Option<Vec<f32>> = None;
+        let mut arrived = 0usize;
+        for slot in slots.iter_mut() {
+            let Some(l) = slot.take() else { continue };
+            arrived += 1;
+            debug_assert_eq!(l.len(), self.votes.len(), "member logits disagree on classes");
+            // member argmax; strict `>` keeps the lowest class on ties
+            let mut best = 0usize;
+            for (c, v) in l.iter().enumerate() {
+                if *v > l[best] {
+                    best = c;
+                }
+            }
+            self.votes[best] += 1;
+            self.voted.push(best as u32);
+            if out.is_none() {
+                out = Some(l);
+            }
+        }
+        let mut out = out?;
+        let top = *self.votes.iter().max().expect("at least one class");
+        // tie-break by lowest member index: the first arrived member
+        // (ascending member order) whose class holds the max count
+        let winner = self
+            .voted
+            .iter()
+            .find(|&&c| self.votes[c as usize] == top)
+            .copied()
+            .expect("some member voted the top class") as usize;
+        for v in out.iter_mut() {
+            *v = 0.0;
+        }
+        out[winner] = 1.0;
+        Some((out, arrived))
+    }
+}
+
+/// Member-completion latency EWMA feeding the straggler deadline —
+/// same constants as the remote hedge deadline (`client.rs`): α = 0.2,
+/// p99 ≈ mean + 2.33·σ once 8 samples exist.
+struct LatencyEwma {
+    mean: f64,
+    var: f64,
+    n: u64,
+}
+
+const ALPHA: f64 = 0.2;
+const MIN_SAMPLES: u64 = 8;
+
+/// Shared state of an ensemble engine: merge configuration, the
+/// builder-held merge scratch, the member-latency EWMA behind the
+/// quorum deadline, and merge counters for [`Engine::report`].
+///
+/// [`Engine::report`]: super::Engine::report
+pub(crate) struct EnsembleShared {
+    /// Merge rule.
+    pub(crate) mode: EnsembleMode,
+    /// Member count N (each owns an equal contiguous shard block).
+    pub(crate) members: usize,
+    /// Quorum K (`1..=members`; `members` = wait for everyone).
+    pub(crate) quorum: usize,
+    /// Deadline floor while the EWMA is cold (and lower bound after).
+    deadline_floor: Duration,
+    lat: Mutex<LatencyEwma>,
+    merger: Mutex<EnsembleMerger>,
+    /// Completed merges (full or partial).
+    pub(crate) merges: AtomicU64,
+    /// Merges that returned with fewer than N members.
+    pub(crate) partial_merges: AtomicU64,
+}
+
+impl EnsembleShared {
+    pub(crate) fn new(
+        mode: EnsembleMode,
+        members: usize,
+        quorum: usize,
+        deadline_floor: Duration,
+        classes: usize,
+    ) -> Self {
+        EnsembleShared {
+            mode,
+            members,
+            quorum: quorum.clamp(1, members),
+            deadline_floor,
+            lat: Mutex::new(LatencyEwma { mean: 0.0, var: 0.0, n: 0 }),
+            merger: Mutex::new(EnsembleMerger::new(mode, classes, members)),
+            merges: AtomicU64::new(0),
+            partial_merges: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one member's submit→arrival latency.
+    pub(crate) fn observe(&self, secs: f64) {
+        let mut g = plock(&self.lat);
+        if g.n == 0 {
+            g.mean = secs;
+            g.var = 0.0;
+        } else {
+            let d = secs - g.mean;
+            g.mean += ALPHA * d;
+            g.var = (1.0 - ALPHA) * (g.var + ALPHA * d * d);
+        }
+        g.n += 1;
+    }
+
+    /// Straggler deadline, measured from submit: `max(floor, 2 × p99)`
+    /// once the EWMA holds [`MIN_SAMPLES`] observations, the bare
+    /// floor before — mirroring the remote hedge deadline.
+    pub(crate) fn deadline(&self) -> Duration {
+        let g = plock(&self.lat);
+        if g.n >= MIN_SAMPLES {
+            let p99 = g.mean + 2.33 * g.var.max(0.0).sqrt();
+            let adaptive = Duration::from_secs_f64((2.0 * p99).max(0.0));
+            self.deadline_floor.max(adaptive)
+        } else {
+            self.deadline_floor
+        }
+    }
+
+    /// Run the fixed-order merge over the arrived slots (shared
+    /// builder-held scratch; counters updated).
+    pub(crate) fn merge(&self, slots: &mut [Option<Vec<f32>>]) -> Option<(Vec<f32>, usize)> {
+        let merged = plock(&self.merger).merge(slots);
+        if let Some((_, arrived)) = &merged {
+            self.merges.fetch_add(1, Ordering::Relaxed);
+            if *arrived < self.members {
+                self.partial_merges.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slots(v: &[Option<Vec<f32>>]) -> Vec<Option<Vec<f32>>> {
+        v.to_vec()
+    }
+
+    #[test]
+    fn mean_merge_is_fixed_order_sum_then_one_division() {
+        let mut m = EnsembleMerger::new(EnsembleMode::Mean, 2, 3);
+        let mut s = slots(&[
+            Some(vec![1.0, -2.0]),
+            Some(vec![3.0, 0.5]),
+            Some(vec![-1.0, 0.25]),
+        ]);
+        let (out, n) = m.merge(&mut s).expect("merged");
+        assert_eq!(n, 3);
+        // the normative formula, spelled out: ((a + b) + c) / 3.0
+        assert_eq!(out[0].to_bits(), (((1.0f32 + 3.0) + -1.0) / 3.0).to_bits());
+        assert_eq!(out[1].to_bits(), (((-2.0f32 + 0.5) + 0.25) / 3.0).to_bits());
+        assert!(s.iter().all(|x| x.is_none()), "merge takes the slots");
+    }
+
+    #[test]
+    fn mean_merge_of_one_member_is_bitwise_identity() {
+        let mut m = EnsembleMerger::new(EnsembleMode::Mean, 3, 1);
+        let v = vec![0.1f32, -0.7, 3.3e-7];
+        let mut s = slots(&[Some(v.clone())]);
+        let (out, n) = m.merge(&mut s).expect("merged");
+        assert_eq!(n, 1);
+        for (o, w) in out.iter().zip(&v) {
+            assert_eq!(o.to_bits(), w.to_bits(), "x / 1.0 must be exact");
+        }
+    }
+
+    #[test]
+    fn mean_merge_skips_holes_and_counts_arrived_only() {
+        let mut m = EnsembleMerger::new(EnsembleMode::Mean, 1, 3);
+        let mut s = slots(&[Some(vec![2.0]), None, Some(vec![4.0])]);
+        let (out, n) = m.merge(&mut s).expect("merged");
+        assert_eq!(n, 2);
+        assert_eq!(out[0].to_bits(), 3.0f32.to_bits());
+        assert!(m.merge(&mut slots(&[None, None])).is_none(), "nothing arrived");
+    }
+
+    #[test]
+    fn vote_merge_majority_and_one_hot_output() {
+        let mut m = EnsembleMerger::new(EnsembleMode::Vote, 3, 3);
+        // members vote classes [2, 0, 0] → class 0 wins 2-1
+        let mut s = slots(&[
+            Some(vec![0.0, 0.1, 0.9]),
+            Some(vec![0.8, 0.1, 0.0]),
+            Some(vec![0.7, 0.2, 0.1]),
+        ]);
+        let (out, n) = m.merge(&mut s).expect("merged");
+        assert_eq!(n, 3);
+        assert_eq!(out, vec![1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn vote_tie_breaks_to_lowest_member_index() {
+        let mut m = EnsembleMerger::new(EnsembleMode::Vote, 2, 4);
+        // votes [c1, c0, c1, c0]: 2-2 tie → member 0 voted c1 → c1 wins
+        let mut s = slots(&[
+            Some(vec![0.1, 0.9]),
+            Some(vec![0.9, 0.1]),
+            Some(vec![0.2, 0.8]),
+            Some(vec![0.8, 0.2]),
+        ]);
+        let (out, _) = m.merge(&mut s).expect("merged");
+        assert_eq!(out, vec![0.0, 1.0], "tie must resolve to member 0's class");
+        // ...and NOT to the class that *reached* the tied count first:
+        // votes [c1, c0, c0, c1] — member 0 still names the winner
+        let mut s = slots(&[
+            Some(vec![0.1, 0.9]),
+            Some(vec![0.9, 0.1]),
+            Some(vec![0.7, 0.3]),
+            Some(vec![0.3, 0.7]),
+        ]);
+        let (out, _) = m.merge(&mut s).expect("merged");
+        assert_eq!(out, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn vote_intra_member_argmax_tie_takes_lowest_class() {
+        let mut m = EnsembleMerger::new(EnsembleMode::Vote, 3, 1);
+        let mut s = slots(&[Some(vec![0.5, 0.5, 0.1])]);
+        let (out, _) = m.merge(&mut s).expect("merged");
+        assert_eq!(out, vec![1.0, 0.0, 0.0], "flat argmax pins the lowest class");
+    }
+
+    #[test]
+    fn mode_names_round_trip_and_reject_garbage() {
+        for mode in [EnsembleMode::Mean, EnsembleMode::Vote] {
+            assert_eq!(EnsembleMode::parse(mode.as_str()), Ok(mode));
+        }
+        assert!(EnsembleMode::parse("median").is_err());
+    }
+
+    #[test]
+    fn deadline_floor_holds_until_warm_then_tracks_p99() {
+        let es =
+            EnsembleShared::new(EnsembleMode::Mean, 3, 2, Duration::from_millis(40), 2);
+        assert_eq!(es.deadline(), Duration::from_millis(40), "cold EWMA uses the floor");
+        for _ in 0..16 {
+            es.observe(0.100); // steady 100 ms members
+        }
+        let d = es.deadline();
+        assert!(d >= Duration::from_millis(150), "2×p99 of ~100ms members: {d:?}");
+        // a fast service keeps the floor as the lower bound
+        let fast =
+            EnsembleShared::new(EnsembleMode::Mean, 3, 2, Duration::from_millis(40), 2);
+        for _ in 0..16 {
+            fast.observe(0.001);
+        }
+        assert_eq!(fast.deadline(), Duration::from_millis(40));
+    }
+
+    #[test]
+    fn shared_merge_counts_full_and_partial() {
+        let es = EnsembleShared::new(EnsembleMode::Mean, 3, 2, Duration::from_millis(5), 1);
+        let mut all = slots(&[Some(vec![1.0]), Some(vec![2.0]), Some(vec![3.0])]);
+        assert_eq!(es.merge(&mut all), Some((vec![2.0], 3)));
+        let mut partial = slots(&[Some(vec![1.0]), None, Some(vec![3.0])]);
+        assert_eq!(es.merge(&mut partial), Some((vec![2.0], 2)));
+        assert_eq!(es.merges.load(Ordering::Relaxed), 2);
+        assert_eq!(es.partial_merges.load(Ordering::Relaxed), 1);
+    }
+}

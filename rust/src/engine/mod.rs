@@ -54,6 +54,16 @@
 //! replica lives.  The engine layering and the wire
 //! format are specified normatively in `docs/ARCHITECTURE.md`.
 //!
+//! **Ensembles** ([`ensemble`]): `EngineBuilder::ensemble(n, mode)`
+//! splits the shard list into N member-major blocks, each serving a
+//! distinct-seed model derived from one base spec
+//! ([`crate::registry::ModelSpec::member`] — the paper's cheap-replica
+//! trick); one `try_submit` fans out across the members as concurrent
+//! jobs and the ticket merges their logits in fixed member order
+//! (mean or majority vote), optionally returning a K-of-N partial
+//! merge when stragglers blow a p99-derived deadline
+//! ([`EngineBuilder::quorum`]).
+//!
 //! **Determinism**: batching, padding, shard choice, and thread count
 //! cannot change a single output bit — each batch column is processed
 //! in exact path order by the sparse engine, so an admitted request's
@@ -81,6 +91,7 @@ pub mod admission;
 pub mod backend;
 pub mod batcher;
 pub mod dispatch;
+pub mod ensemble;
 pub mod remote;
 pub mod ticket;
 pub(crate) mod worker;
@@ -89,6 +100,7 @@ pub use admission::{AdmissionPolicy, BoundedQueue};
 pub use backend::{InferenceBackend, ModelBackend};
 pub use batcher::{BatchSource, Batcher};
 pub use dispatch::{DispatchKind, DispatchPolicy, EwmaLatency, LeastLoaded, RoundRobin, ShardView};
+pub use ensemble::{EnsembleMerger, EnsembleMode};
 pub use remote::{
     FaultPlan, HealthBoard, HealthCounters, RemoteBackend, RemoteOptions, SpawnSpec, SpawnedShards,
 };
@@ -97,6 +109,7 @@ pub use ticket::{RejectReason, Response, Ticket};
 pub use crate::coordinator::metrics::Metrics;
 
 use crate::registry::Registry;
+use ensemble::EnsembleShared;
 use std::cell::RefCell;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::channel;
@@ -150,6 +163,10 @@ pub struct EngineBuilder {
     kernel: Option<crate::nn::kernel::KernelKind>,
     registry: Option<Arc<Registry>>,
     model_cache: usize,
+    ensemble: usize,
+    ensemble_mode: EnsembleMode,
+    quorum: usize,
+    quorum_deadline: Duration,
 }
 
 impl Default for EngineBuilder {
@@ -169,6 +186,10 @@ impl Default for EngineBuilder {
             kernel: None,
             registry: None,
             model_cache: 8,
+            ensemble: 1,
+            ensemble_mode: EnsembleMode::Mean,
+            quorum: 0,
+            quorum_deadline: Duration::from_millis(25),
         }
     }
 }
@@ -257,6 +278,46 @@ impl EngineBuilder {
         self
     }
 
+    /// Serve an **N-member ensemble** behind one submit: the engine's
+    /// shard list splits into N equal member-major blocks (member `m`
+    /// owns shards `m·per .. (m+1)·per`), [`Engine::try_submit`] fans a
+    /// request out across the members as concurrent jobs, and the
+    /// ticket merges the member logits in **fixed member order** per
+    /// `mode` — bitwise identical for any `SOBOLNET_THREADS`, any
+    /// dispatch policy, and in-process vs remote members.  Build with
+    /// [`EngineBuilder::build_ensemble`] (member models derived from a
+    /// base [`crate::registry::ModelSpec`] via member-indexed seeds),
+    /// with [`EngineBuilder::build_members`] (explicit member models),
+    /// or over spawned processes via [`EngineBuilder::spawn_workers`] +
+    /// [`EngineBuilder::build_remote`] (per-member child seeds).
+    /// `n = 1` is the plain engine.
+    pub fn ensemble(mut self, n: usize, mode: EnsembleMode) -> Self {
+        self.ensemble = n.max(1);
+        self.ensemble_mode = mode;
+        self
+    }
+
+    /// **K-of-N partial quorum** for ensemble waits: once `k` members
+    /// answered, stragglers get until a p99-derived deadline (measured
+    /// from submit; see [`EngineBuilder::quorum_deadline`]), after
+    /// which `Ticket::wait` returns the fixed-order merge of whatever
+    /// arrived, annotated with `members_merged`.  `0` (the default)
+    /// means full quorum — wait for every member, no deadline, fully
+    /// deterministic.  Values clamp to `1..=n`.
+    pub fn quorum(mut self, k: usize) -> Self {
+        self.quorum = k;
+        self
+    }
+
+    /// Floor (and cold-start value) of the quorum straggler deadline.
+    /// Once enough member latencies are observed the deadline adapts to
+    /// `max(floor, 2 × p99)` over an EWMA — the same rule the remote
+    /// hedge uses.  Default 25 ms.
+    pub fn quorum_deadline(mut self, d: Duration) -> Self {
+        self.quorum_deadline = d;
+        self
+    }
+
     /// Use a named built-in dispatch policy.
     pub fn dispatch(mut self, kind: DispatchKind) -> Self {
         self.dispatch = DispatchChoice::Kind(kind);
@@ -282,6 +343,9 @@ impl EngineBuilder {
         self.admission = cfg.admission;
         self.dispatch = DispatchChoice::Kind(cfg.dispatch);
         self.replicas = cfg.replicas.max(1);
+        self.ensemble = cfg.ensemble.max(1);
+        self.ensemble_mode = cfg.ensemble_mode;
+        self.quorum = cfg.quorum;
         // the registry *directory* is the CLI's job (it owns the IO and
         // the error reporting); the cache bound is pure config
         self.model_cache = cfg.model_cache.max(1);
@@ -354,9 +418,31 @@ impl EngineBuilder {
     /// Spawn `n × replicas` `shard-worker` child processes per `spec` —
     /// `n` shard groups of [`EngineBuilder::replicas`] interchangeable
     /// copies each — and target them (the spawned handles live inside
-    /// the built engine, which kills any survivor on drop).  Finish
-    /// with [`EngineBuilder::build_remote`].
+    /// the built engine, which kills any survivor on drop).  With
+    /// [`EngineBuilder::ensemble`]`(N, _)` this spawns `N × n ×
+    /// replicas` children in member-major order: member `m`'s children
+    /// build from `member_seed(base, m)` of the spec's `--seed` (the
+    /// `shard-worker` default, 1, when absent), so each member block is
+    /// a distinct-seed replica set of the same topology.  Finish with
+    /// [`EngineBuilder::build_remote`].
     pub fn spawn_workers(mut self, n: usize, spec: SpawnSpec) -> std::io::Result<Self> {
+        let members = self.ensemble.max(1);
+        if members > 1 {
+            let base = spec.seed_arg().unwrap_or(1);
+            let mut all: Option<SpawnedShards> = None;
+            for m in 0..members {
+                let mspec = spec.with_seed(crate::registry::member_seed(base, m));
+                let batch = remote::spawn_shards(n * self.replicas, &mspec)?;
+                match all.as_mut() {
+                    Some(a) => a.append(batch),
+                    None => all = Some(batch),
+                }
+            }
+            let shards = all.expect("members >= 1");
+            self.remote_addrs = shards.addrs().to_vec();
+            self.spawned = Some(shards);
+            return Ok(self);
+        }
         let shards = remote::spawn_shards(n * self.replicas, &spec)?;
         self.remote_addrs = shards.addrs().to_vec();
         self.spawned = Some(shards);
@@ -395,9 +481,56 @@ impl EngineBuilder {
         })
     }
 
+    /// Start an **ensemble engine** over explicit member models, one
+    /// entry per member in member-index order; each member is
+    /// replicated across [`EngineBuilder::workers`] shards (total
+    /// shards = `members × workers`, member-major).  Overrides any
+    /// earlier member count from [`EngineBuilder::ensemble`] with
+    /// `models.len()` (the mode and quorum knobs are kept).
+    pub fn build_members<M>(self, models: Vec<M>, features: usize, classes: usize) -> Engine
+    where
+        M: crate::nn::Model + Clone + Send + 'static,
+    {
+        assert!(!models.is_empty(), "at least one ensemble member");
+        let mut this = self;
+        this.ensemble = models.len();
+        let per = this.workers;
+        let capacity = this.batch;
+        let kernel = this.kernel;
+        let mut factories: Vec<BackendFactory> = Vec::with_capacity(models.len() * per);
+        for mut model in models {
+            if let Some(kind) = kernel {
+                model.set_kernel(kind);
+            }
+            for _ in 0..per {
+                let m = model.clone();
+                factories.push(Box::new(move || {
+                    Box::new(ModelBackend::new(m, capacity, features, classes))
+                        as Box<dyn InferenceBackend>
+                }) as BackendFactory);
+            }
+        }
+        this.build_each(factories)
+    }
+
+    /// Start the ensemble configured by [`EngineBuilder::ensemble`]
+    /// from one base [`crate::registry::ModelSpec`]: member `m` builds
+    /// `spec.member(m)` — identical sizes/paths/kernel, member-indexed
+    /// init seed — so the members share topology and cost but answer
+    /// with different weights (the paper's cheap-replica ensemble).
+    pub fn build_ensemble(self, spec: &crate::registry::ModelSpec) -> Engine {
+        let members = self.ensemble.max(1);
+        let models: Vec<_> = (0..members).map(|m| spec.member(m).build()).collect();
+        let (features, classes) = (spec.features(), spec.classes());
+        self.build_members(models, features, classes)
+    }
+
     /// Start the engine with one explicit factory per worker (the
     /// worker count is `factories.len()`); this is the `FnOnce` path
     /// for backends that cannot be built from a cloneable factory.
+    /// With [`EngineBuilder::ensemble`]`(N, _)` the factory list must
+    /// split into N equal member-major blocks (`factories.len() % N ==
+    /// 0`): block `m` serves member `m`.
     pub fn build_each(self, factories: Vec<BackendFactory>) -> Engine {
         assert!(!factories.is_empty(), "at least one worker factory");
         let n = factories.len();
@@ -446,17 +579,38 @@ impl EngineBuilder {
                 Some(prev) => assert_eq!(prev, cap, "workers disagree on batch capacity"),
             }
         }
+        let features = features.expect("at least one worker");
+        let classes = classes.expect("at least one worker");
+        let batch = batch.expect("at least one worker");
+        let members = self.ensemble.max(1);
+        assert!(
+            members == 1 || n % members == 0,
+            "{n} worker shards cannot split evenly across {members} ensemble members"
+        );
+        let ensemble = if members > 1 {
+            let quorum = if self.quorum == 0 { members } else { self.quorum.min(members) };
+            Some(Arc::new(EnsembleShared::new(
+                self.ensemble_mode,
+                members,
+                quorum,
+                self.quorum_deadline,
+                classes,
+            )))
+        } else {
+            None
+        };
         Engine {
             shards,
             dispatch,
             admission: self.admission,
             metrics,
-            features: features.expect("at least one worker"),
-            classes: classes.expect("at least one worker"),
-            batch: batch.expect("at least one worker"),
+            features,
+            classes,
+            batch,
             health: HealthBoard::new(n),
             remote: None,
             registry: self.registry,
+            ensemble,
         }
     }
 
@@ -494,6 +648,28 @@ impl EngineBuilder {
                 addrs.len(),
                 replicas
             )));
+        }
+        // ensemble layout is member-major: the address list must split
+        // into equal member blocks, and each block into whole replica
+        // groups — so no replica group (whose members are assumed
+        // bitwise-interchangeable) ever straddles two ensemble members
+        // (which answer with *different* bits by construction)
+        let members = self.ensemble.max(1);
+        if members > 1 {
+            if addrs.len() % members != 0 {
+                return Err(std::io::Error::other(format!(
+                    "{} remote addresses cannot split across {} ensemble members evenly",
+                    addrs.len(),
+                    members
+                )));
+            }
+            if (addrs.len() / members) % replicas != 0 {
+                return Err(std::io::Error::other(format!(
+                    "{} shards per ensemble member cannot form groups of {} replicas",
+                    addrs.len() / members,
+                    replicas
+                )));
+            }
         }
         // pre-flight: one bounded handshake per shard
         let mut parsed: Vec<remote::Addr> = Vec::with_capacity(addrs.len());
@@ -656,6 +832,10 @@ pub struct Engine {
     /// ([`EngineBuilder::registry`]): admission resolves tenant
     /// versions against it, [`Engine::publish`] appends to it.
     registry: Option<Arc<Registry>>,
+    /// Ensemble state ([`EngineBuilder::ensemble`]): merge mode and
+    /// scratch, member/quorum geometry, latency EWMA behind the
+    /// straggler deadline.  `None` = plain single-model engine.
+    ensemble: Option<Arc<EnsembleShared>>,
 }
 
 impl Engine {
@@ -689,6 +869,23 @@ impl Engine {
     /// `groups × replicas`).
     pub fn replicas(&self) -> usize {
         self.remote.as_ref().map(|r| r.replicas).unwrap_or(1)
+    }
+
+    /// Ensemble member count (`1` = plain single-model engine; the
+    /// shard count is `members × shards-per-member`).
+    pub fn ensemble_members(&self) -> usize {
+        self.ensemble.as_ref().map(|e| e.members).unwrap_or(1)
+    }
+
+    /// Merge mode, when this engine serves an ensemble.
+    pub fn ensemble_mode(&self) -> Option<EnsembleMode> {
+        self.ensemble.as_ref().map(|e| e.mode)
+    }
+
+    /// Effective quorum K (`members` when no partial quorum was
+    /// configured), when this engine serves an ensemble.
+    pub fn ensemble_quorum(&self) -> Option<usize> {
+        self.ensemble.as_ref().map(|e| e.quorum)
     }
 
     /// Snapshot of the fault-tolerance counters: hedged and
@@ -750,6 +947,23 @@ impl Engine {
         x: Vec<f32>,
         reply: ReplyTx,
     ) -> Result<usize, RejectReason> {
+        self.admit_within(0, self.shards.len(), model_id, version, x, reply)
+    }
+
+    /// [`Engine::admit`] restricted to the `len` shards starting at
+    /// `start` — the ensemble fan-out path, where member `m`'s job may
+    /// only route into member `m`'s shard block (dispatch, the health
+    /// fallback, and the failover scan all stay inside the block, so a
+    /// member job can never be answered by a different member's model).
+    fn admit_within(
+        &self,
+        start: usize,
+        len: usize,
+        model_id: u64,
+        version: u64,
+        x: Vec<f32>,
+        reply: ReplyTx,
+    ) -> Result<usize, RejectReason> {
         if x.len() != self.features {
             return Err(RejectReason::BadShape { expected: self.features, got: x.len() });
         }
@@ -771,7 +985,8 @@ impl Engine {
             let mut views = scratch.borrow_mut();
             views.clear();
             let mut open_queues = 0usize;
-            for (id, s) in self.shards.iter().enumerate() {
+            for (off, s) in self.shards[start..start + len].iter().enumerate() {
+                let id = start + off;
                 if s.queue.is_closed() {
                     continue;
                 }
@@ -786,7 +1001,8 @@ impl Engine {
                 });
             }
             if views.is_empty() && open_queues > 0 {
-                for (id, s) in self.shards.iter().enumerate() {
+                for (off, s) in self.shards[start..start + len].iter().enumerate() {
+                    let id = start + off;
                     if s.queue.is_closed() {
                         continue;
                     }
@@ -806,10 +1022,10 @@ impl Engine {
         });
         let idx = match picked {
             Some(i) => i,
-            // every shard queue is closed: the engine is gone
+            // every shard queue in range is closed: nothing can serve
             None => return Err(RejectReason::ShuttingDown),
         };
-        let n = self.shards.len();
+        let n = len;
         // failover scan: a *closed* shard queue means its worker is
         // gone (thread panicked, remote process died) — skip it and
         // route to the next live shard so the engine keeps serving on
@@ -823,7 +1039,7 @@ impl Engine {
             t_start: crate::util::timer::Timer::start(),
         };
         for k in 0..n {
-            let i = (idx + k) % n;
+            let i = start + ((idx - start) + k) % n;
             let shard = &self.shards[i];
             if shard.queue.is_closed() {
                 continue;
@@ -864,11 +1080,57 @@ impl Engine {
     /// still park the caller at a full queue — that is its contract).
     /// `Err` means the request was never admitted; an `Ok` ticket
     /// resolves to logits, or to a rejection if the request is later
-    /// evicted (`ShedOldest`) or its worker dies.
+    /// evicted (`ShedOldest`) or its worker dies.  On an ensemble
+    /// engine this fans the request out across every member's shard
+    /// block as concurrent jobs; the ticket resolves to the
+    /// fixed-member-order [`Response::Merged`].
     pub fn try_submit(&self, x: Vec<f32>) -> Result<Ticket, RejectReason> {
+        if let Some(es) = &self.ensemble {
+            return self.try_submit_ensemble(es, x);
+        }
         let (tx, rx) = channel();
         let shard = self.admit(0, 0, x, ReplyTx::Ticket(tx))?;
-        Ok(Ticket { rx, shard })
+        Ok(Ticket::single(rx, shard))
+    }
+
+    /// Ensemble fan-out: one member-tagged job per member, each
+    /// restricted to that member's shard block.  A member whose
+    /// admission fails outright is pre-resolved on the ticket (it
+    /// degrades the quorum); the submit only errs when **no** member
+    /// admits.
+    fn try_submit_ensemble(
+        &self,
+        es: &Arc<EnsembleShared>,
+        x: Vec<f32>,
+    ) -> Result<Ticket, RejectReason> {
+        let members = es.members;
+        let per = self.shards.len() / members;
+        let (tx, rx) = channel();
+        let mut failed: Vec<(usize, RejectReason)> = Vec::new();
+        let mut first_shard: Option<usize> = None;
+        let mut last_err = RejectReason::ShuttingDown;
+        for m in 0..members {
+            let reply = ReplyTx::Member { tx: tx.clone(), member: m };
+            match self.admit_within(m * per, per, 0, 0, x.clone(), reply) {
+                Ok(shard) => {
+                    if first_shard.is_none() {
+                        first_shard = Some(shard);
+                    }
+                }
+                Err(r) => {
+                    last_err = r;
+                    failed.push((m, r));
+                }
+            }
+        }
+        // drop the submit-side sender: once every admitted member's
+        // worker answered (or died), the fan-in disconnects and the
+        // ticket can prove no straggler is coming
+        drop(tx);
+        match first_shard {
+            Some(shard) => Ok(Ticket::ensemble(rx, shard, Arc::clone(es), failed)),
+            None => Err(last_err),
+        }
     }
 
     /// Submit against a registered tenant model.  The model's **latest
@@ -882,6 +1144,14 @@ impl Engine {
     /// `version` 0); [`RejectReason::BadShape`] when the tenant's spec
     /// doesn't match the engine's feature/class shape (all tenants of
     /// one engine share its batch buffer shape).
+    ///
+    /// On an ensemble engine, tenant requests (`model_id != 0`) route
+    /// across **all** shards unrestricted and return a plain
+    /// single-model ticket: a tenant snapshot resolves to identical
+    /// bits on every shard regardless of member block, and "merging" N
+    /// copies of the same logits would *change* the bits (`(x+x+x)/3 ≠
+    /// x` in `f32`).  Only the default model (`model_id` 0) is served
+    /// as an ensemble.
     pub fn try_submit_model(&self, model_id: u64, x: Vec<f32>) -> Result<Ticket, RejectReason> {
         if model_id == 0 {
             return self.try_submit(x);
@@ -923,7 +1193,7 @@ impl Engine {
     ) -> Result<Ticket, RejectReason> {
         let (tx, rx) = channel();
         let shard = self.admit(model_id, version, x, ReplyTx::Ticket(tx))?;
-        Ok(Ticket { rx, shard })
+        Ok(Ticket::single(rx, shard))
     }
 
     /// Convenience: submit and wait for the outcome.
@@ -1042,6 +1312,16 @@ impl Engine {
             p90 * 1e3,
             p99 * 1e3,
         );
+        if let Some(e) = &self.ensemble {
+            out.push_str(&format!(
+                "\n  ensemble: members={} mode={} quorum={} merges={} partial_merges={}",
+                e.members,
+                e.mode,
+                e.quorum,
+                e.merges.load(Ordering::Relaxed),
+                e.partial_merges.load(Ordering::Relaxed),
+            ));
+        }
         for (i, (s, st)) in self.shards.iter().zip(&stats.shards).enumerate() {
             // the summary line already carries this shard's shed counter
             out.push_str(&format!(
@@ -1196,6 +1476,29 @@ mod tests {
             assert_eq!(eng.infer(x), Response::Logits(vec![i as f32 + 1.0, -1.0]));
         }
         assert_eq!(eng.stats().completed, 8);
+    }
+
+    #[test]
+    fn ensemble_engine_fans_out_and_merges() {
+        let eng = EngineBuilder::new()
+            .workers(2) // total shards: 2 members × 1 shard each
+            .max_wait(Duration::from_millis(1))
+            .ensemble(2, EnsembleMode::Mean)
+            .build_with(Echo::factory(Arc::new(AtomicUsize::new(0)), Duration::ZERO));
+        assert_eq!(eng.ensemble_members(), 2);
+        assert_eq!(eng.ensemble_mode(), Some(EnsembleMode::Mean));
+        assert_eq!(eng.ensemble_quorum(), Some(2), "quorum 0 defaults to full");
+        let t = eng.try_submit(vec![1.0, 2.0, 3.0]).expect("admitted");
+        match t.wait() {
+            Response::Merged { logits, members_merged } => {
+                assert_eq!(members_merged, 2);
+                // both Echo members answer [6, -1]; (x + x) / 2 is exact
+                assert_eq!(logits, vec![6.0, -1.0]);
+            }
+            other => panic!("expected merged response, got {other:?}"),
+        }
+        assert!(eng.report().contains("ensemble: members=2 mode=mean quorum=2"));
+        eng.shutdown();
     }
 
     #[test]

@@ -290,6 +290,9 @@ fn answer_request(
     for t in tickets {
         match t.wait() {
             Response::Logits(l) => out.extend_from_slice(&l),
+            // a shard-worker serving an ensemble engine answers with
+            // merged logits; the wire carries them like any others
+            Response::Merged { logits, .. } => out.extend_from_slice(&logits),
             Response::Rejected(reason) => return Frame::Reject { id, reason },
         }
     }

@@ -58,6 +58,30 @@ impl SpawnSpec {
     pub fn with_args<S: Into<String>, I: IntoIterator<Item = S>>(args: I) -> Self {
         SpawnSpec { shard_args: args.into_iter().map(Into::into).collect(), ..Default::default() }
     }
+
+    /// The `--seed` value in `shard_args`, if present and parseable.
+    pub fn seed_arg(&self) -> Option<u64> {
+        let i = self.shard_args.iter().position(|a| a == "--seed")?;
+        self.shard_args.get(i + 1)?.parse().ok()
+    }
+
+    /// Clone of this spec with the child's `--seed` replaced (appended
+    /// when absent) — the per-member spawn path of ensemble engines,
+    /// where member `m`'s children build from `member_seed(base, m)`.
+    pub fn with_seed(&self, seed: u64) -> SpawnSpec {
+        let mut spec = self.clone();
+        match spec.shard_args.iter().position(|a| a == "--seed") {
+            Some(i) if i + 1 < spec.shard_args.len() => {
+                spec.shard_args[i + 1] = seed.to_string();
+            }
+            Some(_) => spec.shard_args.push(seed.to_string()),
+            None => {
+                spec.shard_args.push("--seed".into());
+                spec.shard_args.push(seed.to_string());
+            }
+        }
+        spec
+    }
 }
 
 /// Handle to a set of spawned worker-shard processes.
@@ -82,6 +106,17 @@ impl SpawnedShards {
     /// `true` when no shards were spawned.
     pub fn is_empty(&self) -> bool {
         self.addrs.is_empty()
+    }
+
+    /// Absorb another spawned set: addresses, child handles, and socket
+    /// paths concatenate in spawn order (ensemble spawning launches one
+    /// set per member, then folds them into a single handle whose
+    /// address order is member-major).  `other` is left empty, so its
+    /// `Drop` kills nothing.
+    pub fn append(&mut self, mut other: SpawnedShards) {
+        self.addrs.append(&mut other.addrs);
+        self.children.append(&mut other.children);
+        self.socket_paths.append(&mut other.socket_paths);
     }
 
     /// Hard-kill one worker process (tests of the `WorkerFailed`

@@ -6,9 +6,21 @@
 //! needs: it is a one-shot channel whose payload ([`Response`]) is
 //! plain data, so an IPC transport can carry the same contract across
 //! process boundaries without touching the engine internals.
+//!
+//! On an ensemble engine ([`EngineBuilder::ensemble`]) one submit fans
+//! out to N member shards, and the ticket holds the merge state: member
+//! responses are absorbed in arrival order but merged in **fixed member
+//! order**, the quorum deadline is enforced on `wait`, and a
+//! `wait_timeout` that expires mid-fan-out keeps the partial state so
+//! late member responses are absorbed (exactly once) by the next wait.
+//!
+//! [`EngineBuilder::ensemble`]: super::EngineBuilder::ensemble
 
+use super::ensemble::EnsembleShared;
+use std::cell::RefCell;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Why a request was not (or will not be) served.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,71 +76,303 @@ impl std::fmt::Display for RejectReason {
 pub enum Response {
     /// Class logits for the submitted sample.
     Logits(Vec<f32>),
+    /// Fixed-member-order ensemble merge.  `members_merged` counts the
+    /// members whose logits made it into the merge — equal to the
+    /// ensemble size on a full merge, the quorum-satisfying subset on a
+    /// partial one.
+    Merged {
+        /// Merged class logits (mean or one-hot vote winner).
+        logits: Vec<f32>,
+        /// How many member responses the merge combined.
+        members_merged: usize,
+    },
     /// The request was admitted but later rejected (evicted by
     /// `ShedOldest`, or its worker died).
     Rejected(RejectReason),
 }
 
 impl Response {
-    /// Logits if served, `None` on rejection.
+    /// Logits if served (single-model or merged), `None` on rejection.
     pub fn logits(self) -> Option<Vec<f32>> {
         match self {
             Response::Logits(l) => Some(l),
+            Response::Merged { logits, .. } => Some(logits),
             Response::Rejected(_) => None,
+        }
+    }
+
+    /// Merged-member count of an ensemble response, `None` otherwise.
+    pub fn members_merged(&self) -> Option<usize> {
+        match self {
+            Response::Merged { members_merged, .. } => Some(*members_merged),
+            _ => None,
         }
     }
 }
 
+/// Merge progress of one fan-out: which members resolved (answered or
+/// died), the arrived logits awaiting the fixed-order merge, and the
+/// first rejection seen (reported if nothing merges).
+struct MergeState {
+    /// Arrived logits, slot index = member index.
+    got: Vec<Option<Vec<f32>>>,
+    /// Members that terminally resolved (logits or rejection) — a slot
+    /// resolves at most once, so a late duplicate can't double-count.
+    resolved: Vec<bool>,
+    /// Members that arrived with logits.
+    arrived: usize,
+    /// Members resolved either way.
+    resolved_n: usize,
+    /// First rejection observed across members.
+    first_reject: Option<RejectReason>,
+    /// The merge already ran and its response was handed out.
+    done: bool,
+}
+
+/// Ensemble half of a ticket: the shared fan-in channel plus the merge
+/// state.  `RefCell` is fine here — `Ticket` was never `Sync` (it holds
+/// an mpsc `Receiver`), and all waits go through `&self` methods.
+struct EnsembleWait {
+    rx: Receiver<(usize, Response)>,
+    shard: usize,
+    state: Arc<EnsembleShared>,
+    /// Submit time; the quorum straggler deadline is measured from it.
+    t0: Instant,
+    merge: RefCell<MergeState>,
+}
+
+enum Inner {
+    Single { rx: Receiver<Response>, shard: usize },
+    Ensemble(Box<EnsembleWait>),
+}
+
 /// Handle to one in-flight request.
 pub struct Ticket {
-    pub(crate) rx: Receiver<Response>,
-    pub(crate) shard: usize,
+    inner: Inner,
 }
 
 impl Ticket {
-    /// Index of the worker shard the request was dispatched to.
+    /// Ticket over a plain single-model submit.
+    pub(crate) fn single(rx: Receiver<Response>, shard: usize) -> Ticket {
+        Ticket { inner: Inner::Single { rx, shard } }
+    }
+
+    /// Ticket over an ensemble fan-out.  `failed` pre-resolves members
+    /// whose admission already failed — they degrade the quorum instead
+    /// of failing the ticket.
+    pub(crate) fn ensemble(
+        rx: Receiver<(usize, Response)>,
+        shard: usize,
+        state: Arc<EnsembleShared>,
+        failed: Vec<(usize, RejectReason)>,
+    ) -> Ticket {
+        let members = state.members;
+        let mut st = MergeState {
+            got: (0..members).map(|_| None).collect(),
+            resolved: vec![false; members],
+            arrived: 0,
+            resolved_n: 0,
+            first_reject: None,
+            done: false,
+        };
+        for (m, r) in failed {
+            if m < members && !st.resolved[m] {
+                st.resolved[m] = true;
+                st.resolved_n += 1;
+                st.first_reject.get_or_insert(r);
+            }
+        }
+        Ticket {
+            inner: Inner::Ensemble(Box::new(EnsembleWait {
+                rx,
+                shard,
+                state,
+                t0: Instant::now(),
+                merge: RefCell::new(st),
+            })),
+        }
+    }
+
+    /// Index of the worker shard the request was dispatched to (the
+    /// first member's shard on an ensemble fan-out).
     pub fn shard(&self) -> usize {
-        self.shard
+        match &self.inner {
+            Inner::Single { shard, .. } => *shard,
+            Inner::Ensemble(w) => w.shard,
+        }
     }
 
     /// Block until the outcome arrives.  A dead worker resolves to
     /// [`Response::Rejected`]`(`[`RejectReason::WorkerFailed`]`)`
-    /// instead of panicking.
+    /// instead of panicking.  On an ensemble ticket this blocks until
+    /// the quorum is met and stragglers either arrive or blow the
+    /// p99-derived deadline, then returns the fixed-order
+    /// [`Response::Merged`].
     pub fn wait(self) -> Response {
-        self.rx.recv().unwrap_or(Response::Rejected(RejectReason::WorkerFailed))
+        match self.inner {
+            Inner::Single { rx, .. } => {
+                rx.recv().unwrap_or(Response::Rejected(RejectReason::WorkerFailed))
+            }
+            Inner::Ensemble(w) => {
+                w.resolve(None).expect("unbounded ensemble wait always resolves")
+            }
+        }
     }
 
     /// Wait up to `timeout`; `None` if no outcome arrived in time (the
-    /// ticket stays valid — call again or [`Ticket::wait`]).
+    /// ticket stays valid — call again or [`Ticket::wait`]).  An
+    /// ensemble ticket keeps its partial fan-in state across a timeout:
+    /// members that answered are retained, and late responses are
+    /// absorbed exactly once by the next wait.
     pub fn wait_timeout(&self, timeout: Duration) -> Option<Response> {
-        match self.rx.recv_timeout(timeout) {
-            Ok(r) => Some(r),
-            Err(RecvTimeoutError::Timeout) => None,
-            Err(RecvTimeoutError::Disconnected) => {
-                Some(Response::Rejected(RejectReason::WorkerFailed))
-            }
+        match &self.inner {
+            Inner::Single { rx, .. } => match rx.recv_timeout(timeout) {
+                Ok(r) => Some(r),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    Some(Response::Rejected(RejectReason::WorkerFailed))
+                }
+            },
+            Inner::Ensemble(w) => w.resolve(Some(timeout)),
         }
     }
 
     /// Non-blocking poll; `None` if the outcome is not ready yet.
     pub fn try_wait(&self) -> Option<Response> {
-        match self.rx.try_recv() {
-            Ok(r) => Some(r),
-            Err(TryRecvError::Empty) => None,
-            Err(TryRecvError::Disconnected) => {
-                Some(Response::Rejected(RejectReason::WorkerFailed))
+        match &self.inner {
+            Inner::Single { rx, .. } => match rx.try_recv() {
+                Ok(r) => Some(r),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => {
+                    Some(Response::Rejected(RejectReason::WorkerFailed))
+                }
+            },
+            Inner::Ensemble(w) => w.resolve(Some(Duration::ZERO)),
+        }
+    }
+}
+
+impl EnsembleWait {
+    /// Drive the fan-in until a response is due (or `budget` runs out —
+    /// `None` keeps the partial state for the next call).
+    ///
+    /// Quorum semantics: block until at least `quorum` members arrived
+    /// or every member resolved; once the quorum is met, stragglers get
+    /// until `t0 + state.deadline()` (measured from submit), after
+    /// which the arrived subset merges in fixed member order.  With
+    /// `quorum == members` (the default) no deadline applies and the
+    /// merge is always full — fully deterministic.  A rejected member
+    /// resolves its slot without arriving, so a dead member degrades
+    /// the quorum instead of failing the ticket.
+    fn resolve(&self, budget: Option<Duration>) -> Option<Response> {
+        let mut st = self.merge.borrow_mut();
+        if st.done {
+            // the merge was already handed out; mirror the drained
+            // single-ticket channel
+            return Some(Response::Rejected(
+                st.first_reject.unwrap_or(RejectReason::WorkerFailed),
+            ));
+        }
+        let give_up = budget.map(|d| Instant::now() + d);
+        let members = self.state.members;
+        loop {
+            if st.resolved_n == members {
+                return Some(self.finish(&mut st));
             }
+            let mut straggler_deadline = None;
+            if st.arrived >= self.state.quorum {
+                let dl = self.t0 + self.state.deadline();
+                if Instant::now() >= dl {
+                    return Some(self.finish(&mut st));
+                }
+                straggler_deadline = Some(dl);
+            }
+            let mut wait_until = straggler_deadline;
+            if let Some(g) = give_up {
+                wait_until = Some(wait_until.map_or(g, |w| w.min(g)));
+            }
+            let received = match wait_until {
+                Some(w) => {
+                    self.rx.recv_timeout(w.saturating_duration_since(Instant::now()))
+                }
+                None => self.rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+            };
+            match received {
+                Ok((member, resp)) => {
+                    if member >= members || st.resolved[member] {
+                        // late duplicate (or garbage index): drop it —
+                        // a slot resolves exactly once
+                        continue;
+                    }
+                    st.resolved[member] = true;
+                    st.resolved_n += 1;
+                    match resp {
+                        Response::Logits(l) | Response::Merged { logits: l, .. } => {
+                            self.state.observe(self.t0.elapsed().as_secs_f64());
+                            st.got[member] = Some(l);
+                            st.arrived += 1;
+                        }
+                        Response::Rejected(r) => {
+                            st.first_reject.get_or_insert(r);
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    let now = Instant::now();
+                    if let Some(dl) = straggler_deadline {
+                        if now >= dl {
+                            return Some(self.finish(&mut st));
+                        }
+                    }
+                    if let Some(g) = give_up {
+                        if now >= g {
+                            // caller budget exhausted: keep the partial
+                            // state, absorb stragglers on the next call
+                            return None;
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // every sender hung up: unresolved members are dead
+                    for m in 0..members {
+                        if !st.resolved[m] {
+                            st.resolved[m] = true;
+                            st.resolved_n += 1;
+                        }
+                    }
+                    st.first_reject.get_or_insert(RejectReason::WorkerFailed);
+                }
+            }
+        }
+    }
+
+    /// Run the fixed-order merge over what arrived and seal the ticket.
+    fn finish(&self, st: &mut MergeState) -> Response {
+        st.done = true;
+        match self.state.merge(&mut st.got) {
+            Some((logits, members_merged)) => Response::Merged { logits, members_merged },
+            None => Response::Rejected(st.first_reject.unwrap_or(RejectReason::WorkerFailed)),
         }
     }
 }
 
 /// Reply channel of one queued request.  The engine's ticket path
-/// carries a typed [`Response`]; the legacy `ShardedServer::submit`
-/// path carries bare logits (rejections there surface as a closed
-/// channel, matching the historical behavior).
+/// carries a typed [`Response`]; an ensemble fan-out tags it with the
+/// member index so the ticket can slot it for the fixed-order merge;
+/// the legacy `ShardedServer::submit` path carries bare logits
+/// (rejections there surface as a closed channel, matching the
+/// historical behavior).
 pub(crate) enum ReplyTx {
     /// `try_submit` path: typed response.
     Ticket(Sender<Response>),
+    /// Ensemble fan-out: member-tagged response into the shared fan-in
+    /// channel of one ticket.
+    Member {
+        /// Fan-in sender (cloned per member).
+        tx: Sender<(usize, Response)>,
+        /// Member index this job serves.
+        member: usize,
+    },
     /// Legacy `submit` path: bare logits.
     Legacy(Sender<Vec<f32>>),
 }
@@ -139,6 +383,9 @@ impl ReplyTx {
         match self {
             ReplyTx::Ticket(tx) => {
                 let _ = tx.send(Response::Logits(logits));
+            }
+            ReplyTx::Member { tx, member } => {
+                let _ = tx.send((member, Response::Logits(logits)));
             }
             ReplyTx::Legacy(tx) => {
                 let _ = tx.send(logits);
@@ -153,6 +400,9 @@ impl ReplyTx {
             ReplyTx::Ticket(tx) => {
                 let _ = tx.send(Response::Rejected(reason));
             }
+            ReplyTx::Member { tx, member } => {
+                let _ = tx.send((member, Response::Rejected(reason)));
+            }
             ReplyTx::Legacy(_) => {}
         }
     }
@@ -160,13 +410,14 @@ impl ReplyTx {
 
 #[cfg(test)]
 mod tests {
+    use super::super::ensemble::EnsembleMode;
     use super::*;
     use std::sync::mpsc::channel;
 
     #[test]
     fn ticket_waits_and_times_out() {
         let (tx, rx) = channel();
-        let t = Ticket { rx, shard: 3 };
+        let t = Ticket::single(rx, 3);
         assert_eq!(t.shard(), 3);
         assert!(t.try_wait().is_none());
         assert!(t.wait_timeout(Duration::from_millis(2)).is_none(), "nothing sent yet");
@@ -178,14 +429,23 @@ mod tests {
     fn dead_worker_resolves_to_worker_failed() {
         let (tx, rx) = channel::<Response>();
         drop(tx);
-        let t = Ticket { rx, shard: 0 };
+        let t = Ticket::single(rx, 0);
         assert_eq!(t.wait(), Response::Rejected(RejectReason::WorkerFailed));
     }
 
     #[test]
     fn response_logits_accessor() {
         assert_eq!(Response::Logits(vec![0.5]).logits(), Some(vec![0.5]));
+        assert_eq!(
+            Response::Merged { logits: vec![0.25], members_merged: 3 }.logits(),
+            Some(vec![0.25])
+        );
         assert_eq!(Response::Rejected(RejectReason::QueueFull).logits(), None);
+        assert_eq!(
+            Response::Merged { logits: vec![], members_merged: 2 }.members_merged(),
+            Some(2)
+        );
+        assert_eq!(Response::Logits(vec![]).members_merged(), None);
     }
 
     #[test]
@@ -196,5 +456,156 @@ mod tests {
             .contains("unknown model id 9"));
         assert!(format!("{}", RejectReason::UnknownModel { model_id: 9, version: 4 })
             .contains("no published version 4"));
+    }
+
+    fn shared(members: usize, quorum: usize, floor_ms: u64) -> Arc<EnsembleShared> {
+        Arc::new(EnsembleShared::new(
+            EnsembleMode::Mean,
+            members,
+            quorum,
+            Duration::from_millis(floor_ms),
+            2,
+        ))
+    }
+
+    #[test]
+    fn ensemble_merges_in_member_order_not_arrival_order() {
+        let (tx, rx) = channel();
+        let t = Ticket::ensemble(rx, 0, shared(3, 3, 1_000), Vec::new());
+        // arrival order 2, 0, 1 — merge must still run 0, 1, 2
+        tx.send((2, Response::Logits(vec![4.0, 8.0]))).unwrap();
+        tx.send((0, Response::Logits(vec![1.0, -1.0]))).unwrap();
+        tx.send((1, Response::Logits(vec![2.0, 0.5]))).unwrap();
+        let expected0 = ((1.0f32 + 2.0) + 4.0) / 3.0;
+        let expected1 = ((-1.0f32 + 0.5) + 8.0) / 3.0;
+        match t.wait() {
+            Response::Merged { logits, members_merged } => {
+                assert_eq!(members_merged, 3);
+                assert_eq!(logits[0].to_bits(), expected0.to_bits());
+                assert_eq!(logits[1].to_bits(), expected1.to_bits());
+            }
+            other => panic!("expected merged response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_member_response_is_dropped_not_double_counted() {
+        let (tx, rx) = channel();
+        let t = Ticket::ensemble(rx, 0, shared(2, 2, 1_000), Vec::new());
+        tx.send((0, Response::Logits(vec![2.0, 2.0]))).unwrap();
+        tx.send((0, Response::Logits(vec![99.0, 99.0]))).unwrap(); // hedge double-send
+        tx.send((1, Response::Logits(vec![4.0, 4.0]))).unwrap();
+        match t.wait() {
+            Response::Merged { logits, members_merged } => {
+                assert_eq!(members_merged, 2);
+                assert_eq!(logits, vec![3.0, 3.0], "first slot-0 response wins");
+            }
+            other => panic!("expected merged response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejected_member_degrades_quorum_instead_of_failing_ticket() {
+        let (tx, rx) = channel();
+        let t = Ticket::ensemble(rx, 0, shared(3, 3, 1_000), Vec::new());
+        tx.send((0, Response::Logits(vec![1.0, 3.0]))).unwrap();
+        tx.send((1, Response::Rejected(RejectReason::WorkerFailed))).unwrap();
+        tx.send((2, Response::Logits(vec![3.0, 5.0]))).unwrap();
+        match t.wait() {
+            Response::Merged { logits, members_merged } => {
+                assert_eq!(members_merged, 2);
+                assert_eq!(logits, vec![2.0, 4.0]);
+            }
+            other => panic!("expected merged response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admission_failed_members_are_preresolved() {
+        let (tx, rx) = channel();
+        let t =
+            Ticket::ensemble(rx, 0, shared(2, 2, 1_000), vec![(1, RejectReason::QueueFull)]);
+        tx.send((0, Response::Logits(vec![7.0, 9.0]))).unwrap();
+        match t.wait() {
+            Response::Merged { logits, members_merged } => {
+                assert_eq!(members_merged, 1);
+                assert_eq!(logits, vec![7.0, 9.0], "mean over one member is identity");
+            }
+            other => panic!("expected merged response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn all_members_rejected_reports_first_reason() {
+        let (tx, rx) = channel();
+        let t = Ticket::ensemble(rx, 0, shared(2, 2, 1_000), Vec::new());
+        tx.send((1, Response::Rejected(RejectReason::QueueFull))).unwrap();
+        tx.send((0, Response::Rejected(RejectReason::WorkerFailed))).unwrap();
+        assert_eq!(
+            t.wait(),
+            Response::Rejected(RejectReason::QueueFull),
+            "first rejection seen (arrival order) is reported"
+        );
+    }
+
+    #[test]
+    fn disconnected_fanout_resolves_to_worker_failed() {
+        let (tx, rx) = channel::<(usize, Response)>();
+        drop(tx);
+        let t = Ticket::ensemble(rx, 0, shared(3, 3, 1_000), Vec::new());
+        assert_eq!(t.wait(), Response::Rejected(RejectReason::WorkerFailed));
+    }
+
+    #[test]
+    fn quorum_returns_partial_merge_after_deadline() {
+        let (tx, rx) = channel();
+        // K=1 of 3, 5 ms straggler floor; members 1 and 2 never answer
+        let t = Ticket::ensemble(rx, 0, shared(3, 1, 5), Vec::new());
+        tx.send((0, Response::Logits(vec![6.0, 10.0]))).unwrap();
+        let t0 = Instant::now();
+        match t.wait() {
+            Response::Merged { logits, members_merged } => {
+                assert_eq!(members_merged, 1);
+                assert_eq!(logits, vec![6.0, 10.0]);
+            }
+            other => panic!("expected merged response, got {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "quorum must not block unboundedly");
+    }
+
+    #[test]
+    fn wait_timeout_keeps_partial_state_and_absorbs_stragglers_once() {
+        let (tx, rx) = channel();
+        let t = Ticket::ensemble(rx, 0, shared(2, 2, 10_000), Vec::new());
+        tx.send((0, Response::Logits(vec![2.0, 6.0]))).unwrap();
+        assert!(
+            t.wait_timeout(Duration::from_millis(5)).is_none(),
+            "quorum of 2 not met: times out, state retained"
+        );
+        tx.send((1, Response::Logits(vec![4.0, 2.0]))).unwrap();
+        match t.wait_timeout(Duration::from_secs(30)) {
+            Some(Response::Merged { logits, members_merged }) => {
+                assert_eq!(members_merged, 2);
+                assert_eq!(logits, vec![3.0, 4.0]);
+            }
+            other => panic!("expected merged response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn try_wait_polls_ensemble_without_blocking() {
+        let (tx, rx) = channel();
+        let t = Ticket::ensemble(rx, 0, shared(2, 2, 10_000), Vec::new());
+        assert!(t.try_wait().is_none());
+        tx.send((0, Response::Logits(vec![1.0, 1.0]))).unwrap();
+        assert!(t.try_wait().is_none(), "one of two members is not a quorum");
+        tx.send((1, Response::Logits(vec![3.0, 5.0]))).unwrap();
+        match t.try_wait() {
+            Some(Response::Merged { logits, members_merged }) => {
+                assert_eq!(members_merged, 2);
+                assert_eq!(logits, vec![2.0, 3.0]);
+            }
+            other => panic!("expected merged response, got {other:?}"),
+        }
     }
 }

@@ -20,6 +20,13 @@
 //! queueing on a single job slot (pre-multi-job pools serialized
 //! exactly here).  Determinism is unaffected — chunk geometry and
 //! merge order are job-local properties.
+//!
+//! Workers are **ensemble-agnostic**: a fan-out request arrives as an
+//! ordinary [`EngineRequest`] whose `reply` is a member-tagged
+//! [`ReplyTx::Member`], and the worker answers it exactly like any
+//! other — the member tag rides along in the reply channel, and all
+//! merge bookkeeping lives in the ticket
+//! ([`super::ticket::Ticket`]) and [`super::ensemble`].
 
 use super::admission::BoundedQueue;
 use super::batcher::{homogeneous_runs, Batcher};

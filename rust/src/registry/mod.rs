@@ -138,6 +138,30 @@ impl ModelSpec {
         }
         Ok(())
     }
+
+    /// The spec of ensemble member `member` derived from this base
+    /// spec: identical sizes/paths/kernel (so the member shares the
+    /// base topology and cost — the paper's cheap-replica property),
+    /// init seed replaced by [`member_seed`].  Member 0 **is** the base
+    /// spec, so a 1-member ensemble serves the base model's exact bits.
+    pub fn member(&self, member: usize) -> ModelSpec {
+        ModelSpec { seed: member_seed(self.seed, member), ..self.clone() }
+    }
+}
+
+/// Deterministic per-member init seed: member 0 keeps the base seed;
+/// member `m > 0` mixes `base ^ (m · golden-gamma)` through
+/// [`splitmix64`].  The xor pre-mix uses an odd multiplier, so for a
+/// fixed base the pre-mix is a bijection over `m` and splitmix64 (a
+/// bijection itself) keeps distinct members on distinct seeds.
+///
+/// [`splitmix64`]: crate::rng::splitmix64
+pub fn member_seed(base: u64, member: usize) -> u64 {
+    if member == 0 {
+        base
+    } else {
+        crate::rng::splitmix64(base ^ (member as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
 }
 
 /// One immutable versioned weight snapshot.  Snapshots are the unit of
@@ -411,6 +435,25 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "same spec → same init bits");
             }
         }
+    }
+
+    #[test]
+    fn member_specs_share_topology_but_not_seed() {
+        let base = spec();
+        assert_eq!(base.member(0), base, "member 0 is the base spec");
+        let mut seeds = std::collections::BTreeSet::new();
+        for m in 0..16 {
+            let ms = base.member(m);
+            assert_eq!(ms.sizes, base.sizes);
+            assert_eq!(ms.paths, base.paths);
+            assert_eq!(ms.kernel, base.kernel);
+            assert_eq!(ms, base.member(m), "member derivation is deterministic");
+            seeds.insert(ms.seed);
+        }
+        assert_eq!(seeds.len(), 16, "all member seeds distinct");
+        // different base seeds derive different member families
+        let other = ModelSpec { seed: 4, ..spec() };
+        assert_ne!(member_seed(base.seed, 1), member_seed(other.seed, 1));
     }
 
     #[test]

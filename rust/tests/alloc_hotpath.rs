@@ -18,6 +18,12 @@
 //! ([`SparseKernel::prepare`]) must reuse their capacity-retaining
 //! buffers, so the zero-alloc contract holds under all four.
 //!
+//! The audit also covers the serving-side ensemble merge: a warm
+//! [`EnsembleMerger`] (vote scratch sized at construction, output
+//! reusing an arrived member vector) must merge without a single heap
+//! allocation in either mode — the per-request cost of ensemble
+//! serving is arithmetic, never allocator traffic.
+//!
 //! This file deliberately contains a single test: any concurrent test
 //! in the same binary would allocate and pollute the global counter.
 
@@ -25,6 +31,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
+use sobolnet::engine::{EnsembleMerger, EnsembleMode};
 use sobolnet::nn::init::Init;
 use sobolnet::nn::kernel::KernelKind;
 use sobolnet::nn::loss::softmax_xent_into;
@@ -156,6 +163,49 @@ fn steady_state_train_step_does_not_allocate() {
             after - before
         );
     }
+    // warm ensemble merge: both modes, with inputs (and the output
+    // sink) pre-allocated outside the measured window — the merger's
+    // scratch is sized at construction and every merge reuses an
+    // arrived member vector for its output, so N merges cost zero
+    // allocations, full and partial arrivals alike
+    let members = 5usize;
+    let classes = 10usize;
+    for mode in [EnsembleMode::Mean, EnsembleMode::Vote] {
+        let mut merger = EnsembleMerger::new(mode, classes, members);
+        let fill = |r: usize| -> Vec<Option<Vec<f32>>> {
+            (0..members)
+                .map(|m| {
+                    Some(
+                        (0..classes)
+                            .map(|c| (((r * members + m) * classes + c) as f32 * 0.017).sin())
+                            .collect(),
+                    )
+                })
+                .collect()
+        };
+        // warm once (touches every vote counter and the voted scratch)
+        merger.merge(&mut fill(0)).expect("warm merge");
+        let mut rounds: Vec<Vec<Option<Vec<f32>>>> = (1..=5).map(fill).collect();
+        // a straggler round: partial merges must be just as clean
+        rounds[2][1] = None;
+        rounds[2][4] = None;
+        let mut merged = Vec::with_capacity(rounds.len());
+        let before = ALLOCATIONS.load(Ordering::SeqCst);
+        for slots in rounds.iter_mut() {
+            merged.push(merger.merge(slots).expect("measured merge"));
+        }
+        let after = ALLOCATIONS.load(Ordering::SeqCst);
+        assert_eq!(merged.len(), 5);
+        assert_eq!(merged[2].1, members - 2, "the straggler round merged the arrived subset");
+        assert_eq!(
+            after - before,
+            0,
+            "mode={}: warm ensemble merge allocated {} time(s) in 5 merges",
+            mode,
+            after - before
+        );
+    }
+
     // stop the contender only after the post-window snapshots (its own
     // shutdown/join machinery may allocate, and that's fine)
     stop.store(true, Ordering::Release);

@@ -23,12 +23,14 @@
 
 use sobolnet::engine::remote::{spawn_shards, FaultPlan, SpawnSpec};
 use sobolnet::engine::{
-    DispatchKind, EngineBuilder, RejectReason, RemoteOptions, Response,
+    DispatchKind, EngineBuilder, EnsembleMerger, EnsembleMode, RejectReason, RemoteOptions,
+    Response,
 };
 use sobolnet::nn::init::Init;
 use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
 use sobolnet::nn::tensor::Tensor;
 use sobolnet::nn::Model;
+use sobolnet::registry::member_seed;
 use sobolnet::topology::{PathSource, TopologyBuilder};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -140,6 +142,7 @@ fn kill_one_replica_mid_burst_zero_wrong_bits_every_ticket_resolves() {
             Some(Response::Rejected(r)) => panic!(
                 "ticket {i} rejected with {r}: a group with a live replica must keep serving"
             ),
+            Some(other) => panic!("ticket {i}: unexpected outcome {other:?}"),
             None => panic!("ticket {i} did not resolve — tickets never hang, even mid-kill"),
         }
     }
@@ -178,6 +181,142 @@ fn kill_one_replica_mid_burst_zero_wrong_bits_every_ticket_resolves() {
     println!(
         "[chaos] kill-one-replica: hedges={} failovers={} marks_down={} marks_up={} down_now={}",
         h.hedges, h.failovers, h.marks_down, h.marks_up, h.down_now
+    );
+    engine.shutdown();
+}
+
+/// `spec()` with the `--seed` value swapped for member `m`'s derived
+/// seed, so a spawned process builds the same net as
+/// `ModelSpec::member(m)` would in-process.
+fn member_spec(m: usize, extra: &[&str]) -> SpawnSpec {
+    let mut s = spec(extra);
+    let i = s.shard_args.iter().position(|a| a == "--seed").expect("spec has --seed");
+    s.shard_args[i + 1] = member_seed(SEED, m).to_string();
+    s
+}
+
+/// In-process twin of ensemble member `m` (same topology as
+/// [`reference_net`], member-derived seed).
+fn member_net(m: usize) -> SparseMlp {
+    let sizes = [FEATURES, 32, 32, CLASSES];
+    let topo = TopologyBuilder::new(&sizes)
+        .paths(PATHS)
+        .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+        .build();
+    SparseMlp::new(
+        &topo,
+        SparseMlpConfig {
+            init: Init::ConstantRandomSign,
+            seed: member_seed(SEED, m),
+            ..Default::default()
+        },
+    )
+}
+
+/// Ensemble under fire: 2 members × 1 shard, one member process is
+/// hard-killed while a burst is in flight.  Under failure the response
+/// *set* shrinks but never corrupts — every ticket resolves, and each
+/// answer is bitwise equal to exactly one of the two valid merges
+/// (both members, or the surviving member alone) with a
+/// `members_merged` count that says which.  The health board marks the
+/// corpse down, and post-kill traffic keeps serving degraded merges
+/// with the exact surviving-member bits.
+#[test]
+fn kill_one_member_mid_burst_every_ticket_resolves_with_a_valid_merge() {
+    let n = 32usize;
+    // --delay-ms 10 holds batches in the workers so the kill lands
+    // while fan-outs are genuinely in flight
+    let mut shards =
+        spawn_shards(1, &member_spec(0, &["--delay-ms", "10"])).expect("spawn member 0");
+    shards.append(spawn_shards(1, &member_spec(1, &["--delay-ms", "10"])).expect("spawn member 1"));
+    let addrs = shards.addrs().to_vec();
+    let engine = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .dispatch(DispatchKind::RoundRobin)
+        .ensemble(2, EnsembleMode::Mean)
+        .faults(quiet_plan())
+        .remote_options(RemoteOptions {
+            retry_attempts: 2,
+            retry_backoff: Duration::from_millis(10),
+            stats_every: 0,
+            probe_interval: Duration::from_millis(50),
+            ..Default::default()
+        })
+        .remote(&addrs)
+        .build_remote()
+        .expect("build 2-member ensemble engine");
+    assert_eq!(engine.workers(), 2);
+    assert_eq!(engine.ensemble_members(), 2);
+
+    let tickets: Vec<_> =
+        (0..n).map(|i| engine.try_submit(sample(i)).expect("admitted")).collect();
+    // member shards are laid out member-major: [m0s0, m1s0]
+    assert!(shards.kill(1), "hard-kill member 1 mid-burst");
+
+    let mut members = [member_net(0), member_net(1)];
+    let mut merger = EnsembleMerger::new(EnsembleMode::Mean, CLASSES, 2);
+    let (mut full, mut degraded) = (0usize, 0usize);
+    for (i, t) in tickets.into_iter().enumerate() {
+        let x = Tensor::from_vec(sample(i), &[1, FEATURES]);
+        let m0 = members[0].forward(&x, false).data;
+        let m1 = members[1].forward(&x, false).data;
+        // the two valid outcomes for request i, merged by the same
+        // normative rule the engine uses
+        let (solo, _) = merger.merge(&mut [Some(m0.clone()), None]).expect("solo merge");
+        let (both, _) = merger.merge(&mut [Some(m0), Some(m1)]).expect("both merge");
+        match t.wait_timeout(Duration::from_secs(60)) {
+            Some(Response::Merged { logits, members_merged: 2 }) => {
+                assert_bitwise_eq(&logits, &both, &format!("burst answer {i} (full merge)"));
+                full += 1;
+            }
+            Some(Response::Merged { logits, members_merged: 1 }) => {
+                assert_bitwise_eq(&logits, &solo, &format!("burst answer {i} (degraded merge)"));
+                degraded += 1;
+            }
+            Some(other) => panic!("ticket {i}: unexpected outcome {other:?}"),
+            None => panic!("ticket {i} did not resolve — tickets never hang, even mid-kill"),
+        }
+    }
+    assert_eq!(full + degraded, n, "every ticket resolved to one of the two valid merges");
+    assert!(
+        degraded >= 1,
+        "the kill landed mid-burst; some merges must have degraded to the survivor"
+    );
+
+    // the prober notices the corpse and marks it down (bounded wait:
+    // it probes every 50 ms)
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let h = engine.health_counters();
+        if h.marks_down >= 1 && h.down_now >= 1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "prober never marked the killed member down: {h:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // post-kill traffic keeps serving: degraded merges, exact
+    // surviving-member bits
+    for i in 0..4 {
+        let x = Tensor::from_vec(sample(2000 + i), &[1, FEATURES]);
+        let m0 = members[0].forward(&x, false).data;
+        let (solo, _) = merger.merge(&mut [Some(m0), None]).expect("solo merge");
+        match engine.infer(sample(2000 + i)) {
+            Response::Merged { logits, members_merged } => {
+                assert_eq!(members_merged, 1, "post-kill merge {i} must report the survivor only");
+                assert_bitwise_eq(&logits, &solo, &format!("post-kill answer {i}"));
+            }
+            other => panic!("post-kill request {i}: unexpected outcome {other:?}"),
+        }
+    }
+    let h = engine.health_counters();
+    println!(
+        "[chaos] kill-one-member: full_merges={full} degraded_merges={degraded} \
+         marks_down={} down_now={}",
+        h.marks_down, h.down_now
     );
     engine.shutdown();
 }

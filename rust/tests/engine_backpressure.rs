@@ -129,7 +129,7 @@ fn shed_newest_bounds_depth_and_serves_admitted_bitwise() {
             Response::Logits(logits) => {
                 assert_eq!(&logits, reference, "request {i}: served logits differ");
             }
-            Response::Rejected(r) => panic!("admitted request {i} rejected: {r}"),
+            other => panic!("admitted request {i}: unexpected outcome {other:?}"),
         }
     }
 
@@ -179,7 +179,7 @@ fn shed_oldest_evicts_tickets_but_never_corrupts_survivors() {
                 assert_eq!(&logits, &reference[i], "request {i}: served logits differ");
             }
             Response::Rejected(RejectReason::QueueFull) => evicted += 1,
-            Response::Rejected(r) => panic!("request {i}: unexpected rejection {r}"),
+            other => panic!("request {i}: unexpected outcome {other:?}"),
         }
     }
     assert_eq!(served + evicted, N);
@@ -221,7 +221,7 @@ fn block_admission_never_sheds_under_the_same_burst() {
             Response::Logits(logits) => {
                 assert_eq!(&logits, &reference[i], "request {i}")
             }
-            Response::Rejected(r) => panic!("request {i} rejected under Block: {r}"),
+            other => panic!("request {i} under Block: unexpected outcome {other:?}"),
         }
     }
     let stats = engine.stats();

@@ -1,0 +1,357 @@
+//! Cross-suite determinism harness for ensemble serving: N member
+//! models behind one submit, merged in **fixed member order**.
+//!
+//! Pinned properties (the PR's acceptance criteria):
+//!
+//! 1. ensemble responses are **bitwise equal** to a sequential
+//!    fixed-order reference merge — for N ∈ {1, 3, 5}, for any
+//!    `SOBOLNET_THREADS` ∈ {1, 2, 4, 8}, and under both a static
+//!    (round-robin) and a learning (EWMA-p99) dispatch policy, in both
+//!    mean and vote modes.  Arrival order must never leak into the
+//!    response bits;
+//! 2. a vote-count tie resolves to the **lowest member index** (pinned
+//!    with constant-output members in both orders, so the tie-break
+//!    cannot silently become "first to reach the count" or "lowest
+//!    class");
+//! 3. a K-of-N quorum wait returns exactly the quorum-satisfying
+//!    subset's fixed-order merge, annotated `members_merged == K`, and
+//!    never blocks until the straggler finishes;
+//! 4. an in-process ensemble and a multi-process one (real
+//!    `shard-worker` child processes, one per member, seeded via
+//!    `member_seed`) answer **bitwise identically**.
+//!
+//! The reference merge is [`EnsembleMerger`] itself run over sequential
+//! single-model forwards — the same code the engine uses, so the merge
+//! rule is normative and the tests pin the *fan-out path* around it.
+
+use sobolnet::engine::remote::SpawnSpec;
+use sobolnet::engine::{
+    BackendFactory, DispatchKind, EngineBuilder, EnsembleMerger, EnsembleMode, InferenceBackend,
+    Response,
+};
+use sobolnet::nn::kernel::KernelKind;
+use sobolnet::nn::tensor::Tensor;
+use sobolnet::nn::Model;
+use sobolnet::registry::ModelSpec;
+use sobolnet::util::parallel::{num_threads, set_num_threads};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+const FEATURES: usize = 16;
+const CLASSES: usize = 8;
+const PATHS: usize = 256;
+const BASE_SEED: u64 = 42;
+const BATCH: usize = 8;
+
+/// The base spec every ensemble in this file derives its members from.
+/// Member `m` is `base_spec().member(m)`: identical sizes/paths/kernel,
+/// member-indexed init seed.
+fn base_spec() -> ModelSpec {
+    ModelSpec {
+        sizes: vec![FEATURES, 32, 32, CLASSES],
+        paths: PATHS,
+        seed: BASE_SEED,
+        kernel: KernelKind::Auto,
+    }
+}
+
+/// The shard-worker binary cargo built for this test run.
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_sobolnet"))
+}
+
+/// Spawn spec matching [`base_spec`]: `--seed` carries the base seed,
+/// and `EngineBuilder::spawn_workers` derives each member child's seed
+/// from it with the same `member_seed` the in-process build uses.
+fn spec(extra: &[&str]) -> SpawnSpec {
+    let mut args: Vec<String> = vec![
+        "--sizes".into(),
+        format!("{FEATURES},32,32,{CLASSES}"),
+        "--paths".into(),
+        PATHS.to_string(),
+        "--seed".into(),
+        BASE_SEED.to_string(),
+        "--batch".into(),
+        BATCH.to_string(),
+        "--max-wait-ms".into(),
+        "1".into(),
+    ];
+    args.extend(extra.iter().map(|s| s.to_string()));
+    SpawnSpec { program: bin(), shard_args: args, ..Default::default() }
+}
+
+fn sample(i: usize) -> Vec<f32> {
+    (0..FEATURES).map(|j| ((i * FEATURES + j) as f32 * 0.173).sin()).collect()
+}
+
+fn assert_bitwise_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (k, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: logit {k}: {g} vs {w}");
+    }
+}
+
+/// Sequential reference: forward each request through every member net
+/// one after another (no engine, no threads), then run the normative
+/// fixed-order merge.  Returns `(merged_logits, members_merged)` per
+/// request.
+fn reference_merge(
+    mode: EnsembleMode,
+    members: usize,
+    n_requests: usize,
+) -> Vec<(Vec<f32>, usize)> {
+    let mut nets: Vec<_> = (0..members).map(|m| base_spec().member(m).build()).collect();
+    let mut merger = EnsembleMerger::new(mode, CLASSES, members);
+    (0..n_requests)
+        .map(|i| {
+            let mut slots: Vec<Option<Vec<f32>>> = nets
+                .iter_mut()
+                .map(|net| {
+                    Some(net.forward(&Tensor::from_vec(sample(i), &[1, FEATURES]), false).data)
+                })
+                .collect();
+            merger.merge(&mut slots).expect("every member answered")
+        })
+        .collect()
+}
+
+/// Unpack a served response: `(logits, members_merged)`, with a plain
+/// `Logits` (the N=1 engine has no ensemble state) counting as one.
+fn served(r: Response, ctx: &str) -> (Vec<f32>, usize) {
+    match r {
+        Response::Logits(l) => (l, 1),
+        Response::Merged { logits, members_merged } => (logits, members_merged),
+        Response::Rejected(r) => panic!("{ctx}: rejected: {r}"),
+    }
+}
+
+/// Acceptance criterion 1: the engine's ensemble responses are bitwise
+/// equal to the sequential fixed-order reference merge across ensemble
+/// sizes, thread counts, dispatch policies, and both merge modes.
+#[test]
+fn ensemble_is_bitwise_invariant_to_threads_dispatch_and_size() {
+    const REQS: usize = 8;
+    let ambient = num_threads();
+    for mode in [EnsembleMode::Mean, EnsembleMode::Vote] {
+        for members in [1usize, 3, 5] {
+            let expect = reference_merge(mode, members, REQS);
+            for threads in [1usize, 2, 4, 8] {
+                for dispatch in [DispatchKind::RoundRobin, DispatchKind::EwmaP99] {
+                    set_num_threads(threads);
+                    let engine = EngineBuilder::new()
+                        .workers(2)
+                        .batch(BATCH)
+                        .max_wait(Duration::from_millis(1))
+                        .dispatch(dispatch)
+                        .ensemble(members, mode)
+                        .build_ensemble(&base_spec());
+                    assert_eq!(engine.workers(), 2 * members, "2 shards per member");
+                    assert_eq!(engine.ensemble_members(), members);
+                    // burst-submit so batching and member interleaving
+                    // genuinely overlap before any wait
+                    let tickets: Vec<_> = (0..REQS)
+                        .map(|i| engine.try_submit(sample(i)).expect("block admission admits"))
+                        .collect();
+                    for (i, t) in tickets.into_iter().enumerate() {
+                        let ctx = format!(
+                            "mode={mode} members={members} threads={threads} \
+                             dispatch={dispatch:?} request {i}"
+                        );
+                        let (logits, merged) = served(t.wait(), &ctx);
+                        assert_eq!(merged, expect[i].1, "{ctx}: members_merged");
+                        assert_bitwise_eq(&logits, &expect[i].0, &ctx);
+                    }
+                    engine.shutdown();
+                }
+            }
+        }
+    }
+    set_num_threads(ambient);
+}
+
+/// A member backend that always answers the same logits — the fixture
+/// that makes vote ties and quorum timing exactly controllable.
+struct ConstBackend {
+    out: Vec<f32>,
+    features: usize,
+    delay: Duration,
+}
+
+impl InferenceBackend for ConstBackend {
+    fn batch_capacity(&self) -> usize {
+        4
+    }
+    fn features(&self) -> usize {
+        self.features
+    }
+    fn classes(&self) -> usize {
+        self.out.len()
+    }
+    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let rows = x.len() / self.features;
+        let mut v = Vec::with_capacity(rows * self.out.len());
+        for _ in 0..rows {
+            v.extend_from_slice(&self.out);
+        }
+        v
+    }
+}
+
+/// One shard per member, each a [`ConstBackend`] answering
+/// `member_logits[m]` after `delays[m]`.
+fn const_engine(
+    builder: EngineBuilder,
+    mode: EnsembleMode,
+    member_logits: &[Vec<f32>],
+    delays: &[Duration],
+) -> sobolnet::engine::Engine {
+    let members = member_logits.len();
+    let factories: Vec<BackendFactory> = member_logits
+        .iter()
+        .zip(delays)
+        .map(|(out, delay)| {
+            let (out, delay) = (out.clone(), *delay);
+            Box::new(move || {
+                Box::new(ConstBackend { out, features: 2, delay }) as Box<dyn InferenceBackend>
+            }) as BackendFactory
+        })
+        .collect();
+    builder.max_wait(Duration::from_millis(1)).ensemble(members, mode).build_each(factories)
+}
+
+/// Acceptance criterion 2: a vote-count tie resolves to the lowest
+/// member index — swapping which member holds which opinion flips the
+/// winner, so the pin is on the member order, not the class value.
+#[test]
+fn vote_tie_is_pinned_to_lowest_member_index() {
+    let zero = [Duration::ZERO, Duration::ZERO];
+    // member 0 votes class 2, member 1 votes class 0: a 1-1 tie
+    let engine = const_engine(
+        EngineBuilder::new(),
+        EnsembleMode::Vote,
+        &[vec![0.0, 0.1, 0.9], vec![0.9, 0.1, 0.0]],
+        &zero,
+    );
+    match engine.infer(vec![0.0, 0.0]) {
+        Response::Merged { logits, members_merged } => {
+            assert_eq!(members_merged, 2);
+            assert_eq!(logits, vec![0.0, 0.0, 1.0], "tie resolves to member 0's class (2)");
+        }
+        other => panic!("unexpected outcome {other:?}"),
+    }
+    engine.shutdown();
+    // same opinions, swapped members: now member 0 votes class 0
+    let engine = const_engine(
+        EngineBuilder::new(),
+        EnsembleMode::Vote,
+        &[vec![0.9, 0.1, 0.0], vec![0.0, 0.1, 0.9]],
+        &zero,
+    );
+    match engine.infer(vec![0.0, 0.0]) {
+        Response::Merged { logits, .. } => {
+            assert_eq!(logits, vec![1.0, 0.0, 0.0], "swapped members flip the winner");
+        }
+        other => panic!("unexpected outcome {other:?}"),
+    }
+    engine.shutdown();
+}
+
+/// Acceptance criterion 3: with `quorum(2)` over 3 members — one of
+/// which takes 2 s against a 50 ms straggler floor — `wait` returns the
+/// fixed-order merge of exactly the two fast members, reports
+/// `members_merged == 2`, and comes back in deadline time, not
+/// straggler time.
+#[test]
+fn quorum_merges_k_members_and_never_blocks_past_the_deadline() {
+    let engine = const_engine(
+        EngineBuilder::new().quorum(2).quorum_deadline(Duration::from_millis(50)),
+        EnsembleMode::Mean,
+        &[vec![2.0, 0.0], vec![4.0, 2.0], vec![99.0, 99.0]],
+        &[Duration::ZERO, Duration::ZERO, Duration::from_secs(2)],
+    );
+    assert_eq!(engine.ensemble_members(), 3);
+    assert_eq!(engine.ensemble_quorum(), Some(2));
+    let t0 = Instant::now();
+    let t = engine.try_submit(vec![0.0, 0.0]).expect("admitted");
+    match t.wait() {
+        Response::Merged { logits, members_merged } => {
+            assert_eq!(members_merged, 2, "exactly the quorum-satisfying subset merges");
+            assert_eq!(logits, vec![3.0, 1.0], "fixed-order mean over members 0 and 1 only");
+        }
+        other => panic!("unexpected outcome {other:?}"),
+    }
+    let waited = t0.elapsed();
+    assert!(
+        waited < Duration::from_secs(1),
+        "quorum wait must return at the deadline, not at the straggler: {waited:?}"
+    );
+    let report = engine.report();
+    assert!(report.contains("partial_merges=1"), "partial merge counted once: {report}");
+    engine.shutdown();
+}
+
+/// Full-quorum waits (the default) ignore the deadline machinery
+/// entirely: all members merge even when one is slower than the floor,
+/// so determinism is never traded away silently.
+#[test]
+fn default_full_quorum_waits_for_every_member() {
+    let engine = const_engine(
+        EngineBuilder::new().quorum_deadline(Duration::from_millis(5)),
+        EnsembleMode::Mean,
+        &[vec![1.0, 0.0], vec![3.0, 8.0]],
+        &[Duration::ZERO, Duration::from_millis(60)],
+    );
+    match engine.infer(vec![0.0, 0.0]) {
+        Response::Merged { logits, members_merged } => {
+            assert_eq!(members_merged, 2, "full quorum outwaits the slow member");
+            assert_eq!(logits, vec![2.0, 4.0]);
+        }
+        other => panic!("unexpected outcome {other:?}"),
+    }
+    engine.shutdown();
+}
+
+/// Acceptance criterion 4: an in-process ensemble and a multi-process
+/// one (real `shard-worker` child processes, one per member, seeds
+/// derived from the same base `--seed`) answer bitwise identically —
+/// both equal to the sequential reference merge.
+#[test]
+fn in_process_and_spawned_process_ensembles_answer_identically() {
+    const MEMBERS: usize = 3;
+    const REQS: usize = 6;
+    let expect = reference_merge(EnsembleMode::Mean, MEMBERS, REQS);
+
+    let local = EngineBuilder::new()
+        .workers(1)
+        .batch(BATCH)
+        .max_wait(Duration::from_millis(1))
+        .ensemble(MEMBERS, EnsembleMode::Mean)
+        .build_ensemble(&base_spec());
+    assert_eq!(local.workers(), MEMBERS);
+
+    let remote = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .ensemble(MEMBERS, EnsembleMode::Mean)
+        .spawn_workers(1, spec(&[]))
+        .expect("spawn one shard-worker process per member")
+        .build_remote()
+        .expect("build remote ensemble engine");
+    assert!(remote.is_remote());
+    assert_eq!(remote.workers(), MEMBERS, "one worker process per member");
+    assert_eq!(remote.ensemble_members(), MEMBERS);
+    assert_eq!(remote.ensemble_mode(), Some(EnsembleMode::Mean));
+
+    for i in 0..REQS {
+        let (l_loc, m_loc) = served(local.infer(sample(i)), &format!("in-process {i}"));
+        let (l_rem, m_rem) = served(remote.infer(sample(i)), &format!("multi-process {i}"));
+        assert_eq!(m_loc, MEMBERS);
+        assert_eq!(m_rem, MEMBERS);
+        assert_bitwise_eq(&l_loc, &expect[i].0, &format!("in-process request {i}"));
+        assert_bitwise_eq(&l_rem, &expect[i].0, &format!("multi-process request {i}"));
+    }
+    local.shutdown();
+    remote.shutdown();
+}

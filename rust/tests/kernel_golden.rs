@@ -373,7 +373,7 @@ fn engine_builder_kernel_selection_reaches_the_workers() {
             Response::Logits(got) => {
                 assert_eq!(bits(&got), bits(&want.data), "engine logits diverge from int8 local");
             }
-            Response::Rejected(r) => panic!("unexpected rejection: {r}"),
+            other => panic!("unexpected outcome: {other:?}"),
         }
     }
 }

@@ -315,6 +315,60 @@ fn prop_growth_preserves_prefix() {
     }
 }
 
+/// Property: ensemble member derivation ([`ModelSpec::member`]) is
+/// pure, keeps member 0 bitwise-identical to the base model, never
+/// collides seeds across a wide member range, and gives every member
+/// the **same topology** (the member-indexed seed perturbs only the
+/// weight init, never the Sobol' index tables) while actually
+/// decorrelating the weights.  The ensemble serving path relies on
+/// all four: spawned member processes and in-process member builds
+/// must agree bit for bit, and a merge over clones would be
+/// statistically worthless.
+///
+/// [`ModelSpec::member`]: sobolnet::registry::ModelSpec::member
+#[test]
+fn prop_ensemble_member_derivation() {
+    use sobolnet::registry::{member_seed, ModelSpec};
+    use std::collections::HashSet;
+
+    let mut rng = Pcg32::seeded(0xE45E);
+    for case in 0..6 {
+        let base = ModelSpec {
+            sizes: vec![8, 16, 16, 4],
+            paths: 64usize << rng.next_below(2) as usize,
+            seed: rng.next_u64(),
+            kernel: KernelKind::Auto,
+        };
+
+        // member 0 IS the base model, bit for bit
+        assert_eq!(member_seed(base.seed, 0), base.seed, "case {case}: member 0 keeps the seed");
+        assert_eq!(
+            base.member(0).build().w,
+            base.build().w,
+            "case {case}: member 0 must be the base model"
+        );
+
+        // derivation is pure and seeds never collide across members
+        let mut seen = HashSet::new();
+        for m in 0..64 {
+            let s = member_seed(base.seed, m);
+            assert_eq!(s, member_seed(base.seed, m), "case {case}: derivation must be pure");
+            assert!(seen.insert(s), "case {case}: member {m} collides with an earlier seed");
+        }
+
+        // distinct members: identical topology, decorrelated weights
+        let a = base.member(1).build();
+        let b = base.member(2).build();
+        assert_eq!(a.w, base.member(1).build().w, "case {case}: member builds are deterministic");
+        let mut differing = 0usize;
+        for (t, (wa, wb)) in a.w.iter().zip(&b.w).enumerate() {
+            assert_eq!(wa.len(), wb.len(), "case {case} t={t}: members disagree on topology");
+            differing += wa.iter().zip(wb).filter(|(x, y)| x.to_bits() != y.to_bits()).count();
+        }
+        assert!(differing > 0, "case {case}: members 1 and 2 built identical weights");
+    }
+}
+
 /// Property (§3.2 fixed-sign training): a `ConstantSignAlongPath` net
 /// with frozen signs starts at exactly `w[t][p] = mag(t) · sign[p]`
 /// (bit for bit, with `mag(t)` recomputed from the transition's

@@ -118,7 +118,7 @@ fn server_serves_trained_sparse_model_correctly() {
     for i in 0..te.len() {
         let y = match engine.infer(te.x.row(i).to_vec()) {
             Response::Logits(y) => y,
-            Response::Rejected(r) => panic!("sample {i} rejected: {r}"),
+            other => panic!("sample {i}: unexpected outcome {other:?}"),
         };
         let pred = (0..10).max_by(|&a, &b| y[a].partial_cmp(&y[b]).unwrap()).unwrap();
         assert_eq!(pred, offline[i], "sample {i}");

@@ -110,7 +110,7 @@ fn assert_bitwise_eq(got: &[f32], want: &[f32], ctx: &str) {
 fn logits(r: Response, ctx: &str) -> Vec<f32> {
     match r {
         Response::Logits(l) => l,
-        Response::Rejected(why) => panic!("{ctx}: rejected: {why}"),
+        other => panic!("{ctx}: unexpected outcome {other:?}"),
     }
 }
 

@@ -24,12 +24,14 @@
 
 use sobolnet::engine::remote::{spawn_shards, Addr, SpawnSpec};
 use sobolnet::engine::{
-    DispatchKind, EngineBuilder, Metrics, RejectReason, RemoteOptions, Response,
+    DispatchKind, EngineBuilder, EnsembleMerger, EnsembleMode, Metrics, RejectReason,
+    RemoteOptions, Response,
 };
 use sobolnet::nn::init::Init;
 use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
 use sobolnet::nn::tensor::Tensor;
 use sobolnet::nn::Model;
+use sobolnet::registry::member_seed;
 use sobolnet::topology::{PathSource, TopologyBuilder};
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -422,6 +424,94 @@ fn ticket_timeout_expiring_mid_hedge_drops_late_response_cleanly() {
     // the engine (its reply just had no listener), the served three
     // completed once each — an expired ticket must not double-count
     assert_eq!(engine.stats().completed, 4, "no double-count from the abandoned hedge");
+    engine.shutdown();
+}
+
+/// The ensemble variant of the mid-flight-expiry bugfix: a
+/// [`Ticket::wait_timeout`] that expires while the fan-out is only
+/// partially resolved must (a) keep the already-arrived member logits
+/// so a later `wait` on the same ticket still merges every member, and
+/// (b) when the ticket is instead dropped, let the late member
+/// responses land in a closed channel without double-counting or
+/// cross-wiring any subsequent request.
+#[test]
+fn ensemble_ticket_timeout_mid_fanout_keeps_state_and_never_double_counts() {
+    let engine = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .dispatch(DispatchKind::RoundRobin)
+        .ensemble(2, EnsembleMode::Mean)
+        .remote_options(RemoteOptions { probe_interval: Duration::ZERO, stats_every: 0, ..Default::default() })
+        // every batch takes ~80 ms in the children, so a short
+        // wait_timeout reliably expires mid-fan-out
+        .spawn_workers(1, spec(&["--delay-ms", "80"]))
+        .expect("spawn one shard per member")
+        .build_remote()
+        .expect("build 2-member ensemble engine");
+    assert_eq!(engine.workers(), 2, "2 members x 1 shard = 2 worker processes");
+    assert_eq!(engine.ensemble_members(), 2);
+
+    // member-derived in-process twins of the two spawned children
+    let sizes = [FEATURES, 32, 32, CLASSES];
+    let mut members: Vec<SparseMlp> = (0..2)
+        .map(|m| {
+            let topo = TopologyBuilder::new(&sizes)
+                .paths(PATHS)
+                .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+                .build();
+            SparseMlp::new(
+                &topo,
+                SparseMlpConfig {
+                    init: Init::ConstantRandomSign,
+                    seed: member_seed(SEED, m),
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    let mut merger = EnsembleMerger::new(EnsembleMode::Mean, CLASSES, 2);
+    let expect = |i: usize, merger: &mut EnsembleMerger, members: &mut Vec<SparseMlp>| {
+        let x = Tensor::from_vec(sample(i), &[1, FEATURES]);
+        let mut slots: Vec<Option<Vec<f32>>> =
+            members.iter_mut().map(|m| Some(m.forward(&x, false).data)).collect();
+        merger.merge(&mut slots).expect("reference merge").0
+    };
+
+    // ticket 1: expires mid-fan-out, then a later wait still merges
+    // every member — partial state survives the expiry
+    let t1 = engine.try_submit(sample(0)).expect("admitted");
+    assert_eq!(t1.wait_timeout(Duration::from_millis(10)), None, "expires mid-fan-out");
+    match t1.wait() {
+        Response::Merged { logits, members_merged } => {
+            assert_eq!(members_merged, 2, "the expired wait must not have dropped a member");
+            assert_bitwise_eq(&logits, &expect(0, &mut merger, &mut members), "resumed wait");
+        }
+        other => panic!("resumed wait: unexpected outcome {other:?}"),
+    }
+
+    // ticket 2: expires mid-fan-out and is abandoned — the late member
+    // answers land in a closed reply channel, harmlessly
+    let t2 = engine.try_submit(sample(1)).expect("admitted");
+    assert_eq!(t2.wait_timeout(Duration::from_millis(10)), None, "expires mid-fan-out");
+    drop(t2);
+
+    // subsequent fan-outs are unaffected: exact full-merge bits
+    for i in 2..5 {
+        match engine.infer(sample(i)) {
+            Response::Merged { logits, members_merged } => {
+                assert_eq!(members_merged, 2);
+                assert_bitwise_eq(
+                    &logits,
+                    &expect(i, &mut merger, &mut members),
+                    &format!("post-abandon answer {i}"),
+                );
+            }
+            other => panic!("post-abandon request {i}: unexpected outcome {other:?}"),
+        }
+    }
+    // exactly-once accounting: 5 fan-outs x 2 members, every member
+    // request computed once — the expired and abandoned tickets must
+    // not re-fire or double-count anything
+    assert_eq!(engine.stats().completed, 10, "no double-count from expired fan-outs");
     engine.shutdown();
 }
 
