@@ -11,6 +11,10 @@
 //!   (`scalar|simd|sign|int8`, see [`sobolnet::nn::kernel`]) on a
 //!   `freeze_signs` net — `sparse_{fwd,bwd}_edges_per_sec_{kernel}`
 //!   metrics,
+//! * an A/B convergence comparison of shuffled vs low-discrepancy
+//!   mini-batch sampling ([`sobolnet::nn::trainer::BatchSampler`]) on
+//!   the synthetic task — `lds_batch_*` metrics carry the per-epoch
+//!   accuracy curves and final/best accuracy per sampler,
 //! * dense matmul GFLOP/s (the baseline's bottleneck),
 //! * pair-sparse conv vs masked-dense conv,
 //! * AOT runtime: PJRT execute overhead of the compiled kernels
@@ -251,6 +255,56 @@ fn main() {
             }
         }
         set_num_threads(ambient);
+    }
+
+    // --- mini-batch sampling A/B: shuffled vs low-discrepancy index
+    //     streams, identical data/model/seed/schedule — the only
+    //     variable is the within-epoch sample order, so the accuracy
+    //     curves measure the BatchSampler seam itself
+    {
+        use sobolnet::data::synth::SynthMnist;
+        use sobolnet::nn::mlp::DenseMlp;
+        use sobolnet::nn::optim::LrSchedule;
+        use sobolnet::nn::trainer::{train, BatchSampler, TrainConfig};
+        use sobolnet::qmc::SequenceFamily;
+        let (n_train, n_test, epochs) = if quick { (512, 128, 2) } else { (2048, 512, 6) };
+        let (tr, te) = SynthMnist::new(n_train, n_test, 5);
+        for (key, sampler) in [
+            ("shuffled", BatchSampler::Shuffled),
+            ("lds_sobol", BatchSampler::Lds(SequenceFamily::sobol())),
+            ("lds_sobol_owen", BatchSampler::Lds(SequenceFamily::sobol_scrambled(7))),
+        ] {
+            let mut net = DenseMlp::new(&[784, 64, 10], Init::UniformRandom, 1);
+            let cfg = TrainConfig {
+                epochs,
+                batch_size: 64,
+                schedule: LrSchedule::Constant(0.05),
+                weight_decay: 0.0,
+                seed: 5,
+                sampler,
+                ..Default::default()
+            };
+            let hist = train(&mut net, &tr, &te, &cfg);
+            let curve: Vec<String> =
+                hist.test_acc.iter().map(|a| format!("{a:.4}")).collect();
+            println!(
+                "bench hotpath/lds batch {key}: acc per epoch [{}], final {:.4}, \
+                 train loss {:.4} in {:.1}s",
+                curve.join(" "),
+                hist.final_acc(),
+                hist.final_loss(),
+                hist.wall_secs
+            );
+            report.metric(&format!("lds_batch_final_acc_{key}"), hist.final_acc());
+            report.metric(&format!("lds_batch_best_acc_{key}"), hist.best_acc());
+            report.metric(
+                &format!("lds_batch_final_train_loss_{key}"),
+                f64::from(hist.final_loss()),
+            );
+            for (e, acc) in hist.test_acc.iter().enumerate() {
+                report.metric(&format!("lds_batch_acc_{key}_epoch{e}"), *acc);
+            }
+        }
     }
 
     // --- dense matmul baseline

@@ -255,6 +255,7 @@ fn main() {
                 paths: 1024,
                 seed: 100 + tid,
                 kernel: sobolnet::nn::kernel::KernelKind::Scalar,
+                sequence: sobolnet::qmc::SequenceFamily::default(),
             };
             reg.register(tid, spec.clone()).expect("register tenant");
             let tnet = spec.build();
@@ -318,6 +319,7 @@ fn main() {
         paths: 1024,
         seed: 7,
         kernel: sobolnet::nn::kernel::KernelKind::Auto,
+        sequence: sobolnet::qmc::SequenceFamily::default(),
     };
     for &nm in &[1usize, 3, 5] {
         let engine = EngineBuilder::new()

@@ -84,6 +84,7 @@ pub fn paper_train_config(epochs: usize, augment: bool) -> TrainConfig {
         seed: 0,
         augment,
         augment_pad: 2,
+        ..TrainConfig::default()
     }
 }
 

@@ -7,6 +7,7 @@ pub mod json;
 use crate::engine::{AdmissionPolicy, DispatchKind, EnsembleMode};
 use crate::nn::init::Init;
 use crate::nn::kernel::KernelKind;
+use crate::qmc::SequenceFamily;
 use crate::topology::{PathSource, SignPolicy};
 use json::JsonValue;
 use std::collections::BTreeMap;
@@ -157,6 +158,11 @@ pub struct ServeSection {
     /// Compute kernel: "auto", "scalar", "simd", "sign", "int8"
     /// ([`crate::nn::kernel`]).
     pub kernel: KernelKind,
+    /// Sequence family the served model's topology is drawn from, in
+    /// canonical string form (`"sobol"`, `"sobol:owen=7"`,
+    /// `"halton:scramble=3"`, `"prng:seed=1"`, …) — see
+    /// [`crate::qmc::SequenceFamily`].
+    pub sequence: SequenceFamily,
     /// Replicas per remote shard group (`1` = no replication; the
     /// spawned/required worker count is `workers × replicas`).
     pub replicas: usize,
@@ -193,6 +199,7 @@ impl Default for ServeSection {
             dispatch: DispatchKind::LeastLoaded,
             admission: AdmissionPolicy::Block,
             kernel: KernelKind::Auto,
+            sequence: SequenceFamily::default(),
             replicas: 1,
             registry: String::new(),
             model_cache: 8,
@@ -234,6 +241,10 @@ impl ServeSection {
                     cfg.kernel = KernelKind::parse(s)
                         .ok_or_else(|| format!("unknown serve.kernel '{s}'"))?;
                 }
+                "sequence" => {
+                    let s = val.as_str().ok_or("serve.sequence string")?;
+                    cfg.sequence = SequenceFamily::parse(s)?;
+                }
                 "replicas" => cfg.replicas = val.as_usize().ok_or("serve.replicas int")?,
                 "registry" => {
                     cfg.registry =
@@ -273,6 +284,7 @@ impl ServeSection {
             JsonValue::String(self.admission.as_str().to_string()),
         );
         m.insert("kernel".to_string(), JsonValue::String(self.kernel.as_str().to_string()));
+        m.insert("sequence".to_string(), JsonValue::String(self.sequence.canonical()));
         m.insert("replicas".to_string(), JsonValue::Number(self.replicas as f64));
         m.insert("registry".to_string(), JsonValue::String(self.registry.clone()));
         m.insert("model_cache".to_string(), JsonValue::Number(self.model_cache as f64));
@@ -349,6 +361,10 @@ impl ExperimentConfig {
         // deferred: keys iterate alphabetically (BTreeMap), so
         // scramble_seed may precede source — apply it after the loop.
         let mut scramble: Option<u64> = None;
+        // deferred for the same reason: a canonical `sequence` string
+        // overrides `source`/`scramble_seed` whichever order they
+        // appear in.
+        let mut sequence: Option<SequenceFamily> = None;
         for (key, val) in obj {
             match key.as_str() {
                 "layer_sizes" => {
@@ -386,6 +402,10 @@ impl ExperimentConfig {
                 "scramble_seed" => {
                     scramble = Some(val.as_usize().ok_or("scramble_seed int")? as u64);
                 }
+                "sequence" => {
+                    let s = val.as_str().ok_or("sequence must be string")?;
+                    sequence = Some(SequenceFamily::parse(s)?);
+                }
                 "serve" => cfg.serve = ServeSection::from_json(val)?,
                 "comment" | "description" => {}
                 "sign_policy" => {
@@ -416,6 +436,9 @@ impl ExperimentConfig {
                 }
                 _ => {}
             }
+        }
+        if let Some(fam) = sequence {
+            cfg.source = fam.to_source();
         }
         Ok(cfg)
     }
@@ -515,6 +538,7 @@ mod tests {
             dispatch: DispatchKind::RoundRobin,
             admission: AdmissionPolicy::ShedOldest,
             kernel: KernelKind::Simd,
+            sequence: SequenceFamily::halton_scrambled(9),
             replicas: 2,
             registry: "/tmp/reg".to_string(),
             model_cache: 4,
@@ -561,6 +585,32 @@ mod tests {
             let j = json::parse(&format!(r#"{{"kernel": "{k}"}}"#)).unwrap();
             assert_eq!(ServeSection::from_json(&j).unwrap().kernel.as_str(), k);
         }
+        // every registered sequence family round-trips through its
+        // canonical string
+        for fam in SequenceFamily::registered() {
+            let j = json::parse(&format!(r#"{{"sequence": "{}"}}"#, fam.canonical())).unwrap();
+            assert_eq!(ServeSection::from_json(&j).unwrap().sequence, fam);
+        }
+        assert!(
+            ServeSection::from_json(&json::parse(r#"{"sequence": "fibonacci"}"#).unwrap())
+                .is_err(),
+            "unknown family is a typed error"
+        );
+    }
+
+    #[test]
+    fn sequence_key_overrides_source() {
+        // `sequence` wins regardless of the (alphabetical) key order
+        // BTreeMap iterates the object in
+        let text = r#"{"source": "random", "sequence": "sobol:owen=5"}"#;
+        let cfg = ExperimentConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(
+            cfg.source,
+            PathSource::Sobol { skip_bad_dims: true, scramble_seed: Some(5) }
+        );
+        let text = r#"{"sequence": "halton"}"#;
+        let cfg = ExperimentConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.source, PathSource::Halton { scramble_seed: None });
     }
 
     #[test]

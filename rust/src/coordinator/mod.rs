@@ -1,8 +1,7 @@
 //! Layer-3 coordinator: process lifecycle, training orchestration over
 //! the AOT runtime, metrics and checkpoints.  The inference engine
 //! itself lives in [`crate::engine`] (admission + dispatch + worker
-//! shards; [`crate::serve`] is its blocking compatibility surface);
-//! [`server`] keeps the historical names as deprecated aliases.
+//! shards).
 //!
 //! Rust owns the event loop; the compiled HLO artifacts (JAX+Pallas,
 //! lowered once at build time) are the only compute the request path
@@ -10,11 +9,8 @@
 
 pub mod checkpoint;
 pub mod metrics;
-pub mod server;
 pub mod train;
 
+pub use crate::engine::InferenceBackend;
 pub use metrics::Metrics;
-pub use server::InferenceBackend;
-#[allow(deprecated)]
-pub use server::{InferenceServer, ServerConfig};
 pub use train::{AotTrainer, AotTrainerConfig};

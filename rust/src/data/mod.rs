@@ -55,10 +55,19 @@ impl ClassificationData {
 
     /// Shuffled epoch order.
     pub fn epoch_order(&self, seed: u64) -> Vec<usize> {
-        let mut order: Vec<usize> = (0..self.len()).collect();
-        let mut rng = Pcg32::seeded(seed);
-        rng.shuffle(&mut order);
+        let mut order = Vec::new();
+        self.epoch_order_into(seed, &mut order);
         order
+    }
+
+    /// Shuffled epoch order written into a caller-held scratch — the
+    /// training loop reuses one Vec across epochs instead of
+    /// reallocating `len` indices per epoch.
+    pub fn epoch_order_into(&self, seed: u64, order: &mut Vec<usize>) {
+        order.clear();
+        order.extend(0..self.len());
+        let mut rng = Pcg32::seeded(seed);
+        rng.shuffle(order);
     }
 
     /// Iterate over batches of a given order.
@@ -100,6 +109,18 @@ mod tests {
         let mut sorted = order.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn epoch_order_into_reuses_scratch_and_matches() {
+        let d = toy();
+        let mut scratch = vec![99usize; 32]; // stale garbage must not leak
+        d.epoch_order_into(3, &mut scratch);
+        assert_eq!(scratch, d.epoch_order(3), "scratch path is bitwise-identical");
+        let cap = scratch.capacity();
+        d.epoch_order_into(4, &mut scratch);
+        assert_eq!(scratch.capacity(), cap, "refill does not reallocate");
+        assert_eq!(scratch, d.epoch_order(4));
     }
 
     #[test]

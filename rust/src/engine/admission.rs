@@ -6,8 +6,8 @@
 //! arrives at a full queue:
 //!
 //! * [`AdmissionPolicy::Block`] — the submitting thread waits for a
-//!   slot (closed-loop clients self-throttle; this is the legacy
-//!   `ShardedServer::submit` behavior when the bound is unlimited),
+//!   slot (closed-loop clients self-throttle; with an unlimited bound
+//!   this is classic blocking submission),
 //! * [`AdmissionPolicy::ShedNewest`] — the *new* request is rejected
 //!   immediately (`try_submit` returns
 //!   [`RejectReason::QueueFull`](super::ticket::RejectReason)),

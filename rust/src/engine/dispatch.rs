@@ -1,7 +1,7 @@
 //! Pluggable shard dispatch: how the engine picks the worker shard for
 //! an incoming request.
 //!
-//! Replaces the old hardcoded `serve::Dispatch` enum with a
+//! Replaces the old hardcoded dispatch enum with a
 //! [`DispatchPolicy`] trait object plus three built-ins:
 //!
 //! * [`RoundRobin`] — strict rotation (deterministic spread, the

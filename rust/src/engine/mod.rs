@@ -83,9 +83,9 @@
 //! leak memory without bound or cascade `PoisonError` panics into the
 //! other shards' submit paths.
 //!
-//! The legacy [`crate::serve::ShardedServer`] and
-//! `coordinator::server` surfaces are thin compatibility layers over
-//! this module.
+//! This module is the only serving surface: callers build engines
+//! through [`EngineBuilder`] directly (the pre-engine `ShardedServer`
+//! and `coordinator::server` compatibility shims are gone).
 
 pub mod admission;
 pub mod backend;
@@ -131,8 +131,8 @@ enum DispatchChoice {
 
 /// Composes topology/model/serving knobs into a running [`Engine`].
 ///
-/// Absorbs what used to be scattered across `serve::ServeConfig`,
-/// `main.rs serve` flags, and ad-hoc example code:
+/// Absorbs what used to be scattered across the pre-engine serving
+/// config, `main.rs serve` flags, and ad-hoc example code:
 ///
 /// ```no_run
 /// use sobolnet::engine::{AdmissionPolicy, DispatchKind, EngineBuilder};

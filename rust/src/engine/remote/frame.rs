@@ -8,7 +8,7 @@
 //!
 //! ```text
 //! offset  size  field
-//! 0       4     magic  b"SBN2" (protocol version is the last byte)
+//! 0       4     magic  b"SBN3" (protocol version is the last byte)
 //! 4       1     type   tag (see the `TYPE_*` constants)
 //! 5       4     len    payload length, u32 little-endian, ≤ MAX_PAYLOAD
 //! 9       len   payload (fields little-endian, f32/f64 as IEEE-754 bits)
@@ -18,11 +18,16 @@
 //! `model_id + version` pair to `Request`/`Response`, widened the
 //! `Reject` detail fields to u64 (they now carry model ids), and
 //! introduced the `Publish`/`PublishAck` frames for hot snapshot
-//! publication.  Those are *silent* layout changes — an SBN1 peer
-//! would misparse every data frame — so the magic's version byte was
-//! bumped and a peer speaking any other `SBN*` version is rejected
-//! with the descriptive [`FrameError::VersionMismatch`] instead of
-//! the generic bad-magic error.
+//! publication.  **Protocol version 3** (the `SequenceFamily`
+//! unification) appended the spec's sequence descriptor — kind byte,
+//! flags byte, u64 scramble/seed parameter — to the `Publish` spec
+//! header, so a remote worker rebuilds a non-default topology (Owen-
+//! scrambled Sobol', Halton, PRNG baseline) bitwise-identically.
+//! These are *silent* layout changes — an older peer would misparse
+//! the frames — so the magic's version byte was bumped each time and
+//! a peer speaking any other `SBN*` version is rejected with the
+//! descriptive [`FrameError::VersionMismatch`] instead of the generic
+//! bad-magic error.
 //!
 //! f32 payloads are carried as raw little-endian IEEE-754 bits
 //! (`to_le_bytes`/`from_le_bytes`), so a value crosses the wire
@@ -39,12 +44,14 @@
 
 use crate::engine::RejectReason;
 use crate::nn::kernel::KernelKind;
+use crate::qmc::{SequenceFamily, SequenceKind};
 use crate::registry::ModelSpec;
 use std::io::{Read, Write};
 
-/// Frame magic; the trailing byte is the protocol version (`'2'`
-/// since `model_id` entered the data frames — see the module docs).
-pub const MAGIC: [u8; 4] = *b"SBN2";
+/// Frame magic; the trailing byte is the protocol version (`'3'`
+/// since the sequence descriptor entered the `Publish` spec header —
+/// see the module docs).
+pub const MAGIC: [u8; 4] = *b"SBN3";
 
 /// Hard cap on a frame payload (64 MiB): a corrupt or hostile length
 /// header is rejected *before* allocation.
@@ -85,8 +92,8 @@ pub enum FrameError {
     BadMagic([u8; 4]),
     /// The peer *is* a sobolnet process, but speaks a different
     /// protocol version (first three bytes matched `b"SBN"`, the
-    /// version byte did not) — e.g. an old SBN1 worker answering an
-    /// SBN2 coordinator.  Split from [`FrameError::BadMagic`] so
+    /// version byte did not) — e.g. an old SBN2 worker answering an
+    /// SBN3 coordinator.  Split from [`FrameError::BadMagic`] so
     /// operators see "upgrade that peer", not "garbage on the wire".
     VersionMismatch {
         /// The peer's version byte (the 4th magic byte).
@@ -116,6 +123,8 @@ pub enum FrameError {
     BadHealthState(u8),
     /// Publish frame carried an unknown kernel code.
     BadKernelCode(u8),
+    /// Publish frame carried an unknown sequence-family kind code.
+    BadSequenceCode(u8),
 }
 
 impl std::fmt::Display for FrameError {
@@ -143,6 +152,9 @@ impl std::fmt::Display for FrameError {
             FrameError::BadReason(c) => write!(f, "unknown reject reason code {c}"),
             FrameError::BadHealthState(s) => write!(f, "unknown health state code {s}"),
             FrameError::BadKernelCode(k) => write!(f, "unknown kernel code {k}"),
+            FrameError::BadSequenceCode(k) => {
+                write!(f, "unknown sequence family code {k}")
+            }
         }
     }
 }
@@ -258,7 +270,8 @@ pub enum Frame {
         model_id: u64,
         /// Coordinator-assigned snapshot version (1-based).
         version: u64,
-        /// Deterministic rebuild spec (sizes/paths/seed/kernel).
+        /// Deterministic rebuild spec
+        /// (sizes/paths/seed/kernel/sequence).
         spec: ModelSpec,
         /// Per-transition path weights, `w[t][p]`.
         w: Vec<Vec<f32>>,
@@ -339,6 +352,37 @@ fn kernel_from_code(code: u8) -> Result<KernelKind, FrameError> {
         4 => Ok(KernelKind::Int8),
         other => Err(FrameError::BadKernelCode(other)),
     }
+}
+
+/// Wire form of a [`SequenceFamily`] (protocol version 3): kind byte
+/// (1 = Sobol', 2 = Halton, 3 = PRNG), flags byte (bit 0 = scramble
+/// present, bit 1 = Sobol' bad-dimension skipping), u64 scramble/seed
+/// parameter (0 when absent).
+fn sequence_code(f: &SequenceFamily) -> (u8, u8, u64) {
+    let kind = match f.kind {
+        SequenceKind::Sobol => 1,
+        SequenceKind::Halton => 2,
+        SequenceKind::Prng => 3,
+    };
+    let mut flags = 0u8;
+    if f.scramble.is_some() {
+        flags |= 1;
+    }
+    if f.skip_bad_dims {
+        flags |= 2;
+    }
+    (kind, flags, f.scramble.unwrap_or(0))
+}
+
+fn sequence_from_code(kind: u8, flags: u8, param: u64) -> Result<SequenceFamily, FrameError> {
+    let kind = match kind {
+        1 => SequenceKind::Sobol,
+        2 => SequenceKind::Halton,
+        3 => SequenceKind::Prng,
+        other => return Err(FrameError::BadSequenceCode(other)),
+    };
+    let scramble = if flags & 1 != 0 { Some(param) } else { None };
+    Ok(SequenceFamily { kind, scramble, skip_bad_dims: flags & 2 != 0 })
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -540,6 +584,10 @@ fn encode_payload(frame: &Frame) -> (u8, Vec<u8>) {
             put_u32(&mut p, spec.paths as u32);
             put_u64(&mut p, spec.seed);
             p.push(kernel_code(spec.kernel));
+            let (kind, flags, param) = sequence_code(&spec.sequence);
+            p.push(kind);
+            p.push(flags);
+            put_u64(&mut p, param);
             put_f32_vecs(&mut p, w);
             put_f32_vecs(&mut p, bias);
             TYPE_PUBLISH
@@ -683,10 +731,14 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Frame, FrameError> {
             let paths = c.u32()? as usize;
             let seed = c.u64()?;
             let kernel = kernel_from_code(c.u8()?)?;
+            let seq_kind = c.u8()?;
+            let seq_flags = c.u8()?;
+            let seq_param = c.u64()?;
+            let sequence = sequence_from_code(seq_kind, seq_flags, seq_param)?;
             let w = c.f32_vecs()?;
             let bias = c.f32_vecs()?;
             c.finish()?;
-            let spec = ModelSpec { sizes, paths, seed, kernel };
+            let spec = ModelSpec { sizes, paths, seed, kernel, sequence };
             Ok(Frame::Publish { model_id, version, spec, w, bias })
         }
         TYPE_PUBLISH_ACK => {
@@ -718,7 +770,13 @@ mod tests {
     }
 
     fn test_spec() -> ModelSpec {
-        ModelSpec { sizes: vec![8, 16, 4], paths: 32, seed: 5, kernel: KernelKind::Scalar }
+        ModelSpec {
+            sizes: vec![8, 16, 4],
+            paths: 32,
+            seed: 5,
+            kernel: KernelKind::Scalar,
+            sequence: SequenceFamily::default(),
+        }
     }
 
     #[test]
@@ -767,6 +825,25 @@ mod tests {
                 spec: test_spec(),
                 w: vec![vec![0.5, -0.25, 1.0e-9], vec![]],
                 bias: vec![vec![0.125; 16], vec![]],
+            },
+            // non-default sequence families must survive the wire so
+            // remote workers rebuild the same topology
+            Frame::Publish {
+                model_id: 12,
+                version: 1,
+                spec: ModelSpec {
+                    sequence: SequenceFamily::halton_scrambled(9),
+                    ..test_spec()
+                },
+                w: vec![vec![1.0]],
+                bias: vec![vec![0.0]],
+            },
+            Frame::Publish {
+                model_id: 13,
+                version: 1,
+                spec: ModelSpec { sequence: SequenceFamily::prng(3), ..test_spec() },
+                w: vec![vec![1.0]],
+                bias: vec![vec![0.0]],
             },
             Frame::PublishAck { model_id: 11, version: 4 },
         ];
@@ -985,6 +1062,7 @@ mod tests {
             FrameError::BadHealthState(3),
             FrameError::VersionMismatch { got: b'1' },
             FrameError::BadKernelCode(9),
+            FrameError::BadSequenceCode(9),
             FrameError::Io(std::io::Error::other("boom")),
         ];
         for e in samples {
@@ -1004,7 +1082,7 @@ mod tests {
         }
         // and the display text tells the operator which side to upgrade
         let msg = format!("{}", FrameError::VersionMismatch { got: b'1' });
-        assert!(msg.contains('1') && msg.contains('2'), "unhelpful message: {msg}");
+        assert!(msg.contains('1') && msg.contains('3'), "unhelpful message: {msg}");
     }
 
     #[test]
@@ -1026,11 +1104,18 @@ mod tests {
         assert!(read_frame(&mut Cursor::new(full.clone())).is_ok());
         // corrupt the kernel code: u64 id + u64 version + u32 count +
         // 3 × u32 sizes + u32 paths + u64 seed = 44 bytes into the payload
-        let mut bad = full;
+        let mut bad = full.clone();
         bad[9 + 44] = 0xEE;
         match read_frame(&mut Cursor::new(bad)) {
             Err(FrameError::BadKernelCode(0xEE)) => {}
             other => panic!("expected BadKernelCode, got {other:?}"),
+        }
+        // the sequence kind byte sits right after the kernel code
+        let mut bad = full;
+        bad[9 + 45] = 0xDD;
+        match read_frame(&mut Cursor::new(bad)) {
+            Err(FrameError::BadSequenceCode(0xDD)) => {}
+            other => panic!("expected BadSequenceCode, got {other:?}"),
         }
     }
 

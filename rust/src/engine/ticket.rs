@@ -358,10 +358,7 @@ impl EnsembleWait {
 
 /// Reply channel of one queued request.  The engine's ticket path
 /// carries a typed [`Response`]; an ensemble fan-out tags it with the
-/// member index so the ticket can slot it for the fixed-order merge;
-/// the legacy `ShardedServer::submit` path carries bare logits
-/// (rejections there surface as a closed channel, matching the
-/// historical behavior).
+/// member index so the ticket can slot it for the fixed-order merge.
 pub(crate) enum ReplyTx {
     /// `try_submit` path: typed response.
     Ticket(Sender<Response>),
@@ -373,8 +370,6 @@ pub(crate) enum ReplyTx {
         /// Member index this job serves.
         member: usize,
     },
-    /// Legacy `submit` path: bare logits.
-    Legacy(Sender<Vec<f32>>),
 }
 
 impl ReplyTx {
@@ -387,14 +382,10 @@ impl ReplyTx {
             ReplyTx::Member { tx, member } => {
                 let _ = tx.send((member, Response::Logits(logits)));
             }
-            ReplyTx::Legacy(tx) => {
-                let _ = tx.send(logits);
-            }
         }
     }
 
-    /// Answer with a rejection (legacy receivers just see the channel
-    /// close).
+    /// Answer with a rejection.
     pub(crate) fn send_rejected(self, reason: RejectReason) {
         match self {
             ReplyTx::Ticket(tx) => {
@@ -403,7 +394,6 @@ impl ReplyTx {
             ReplyTx::Member { tx, member } => {
                 let _ = tx.send((member, Response::Rejected(reason)));
             }
-            ReplyTx::Legacy(_) => {}
         }
     }
 }

@@ -1,6 +1,7 @@
-//! Training loop: epochs, shuffled mini-batches, learning-rate schedule,
-//! optional augmentation, and per-epoch evaluation — the shared driver
-//! of every experiment bench.
+//! Training loop: epochs, mini-batch sampling (shuffled or
+//! low-discrepancy), learning-rate schedule, optional augmentation,
+//! and per-epoch evaluation — the shared driver of every experiment
+//! bench.
 
 use super::loss::{accuracy, softmax_xent_into};
 use super::optim::{LrSchedule, Sgd};
@@ -8,8 +9,27 @@ use super::tensor::Tensor;
 use super::Model;
 use crate::data::{augment, ClassificationData};
 use crate::log_debug;
+use crate::qmc::{Sequence, SequenceFamily};
 use crate::rng::Pcg32;
 use crate::util::timer::Timer;
+
+/// How the training loop orders samples within each epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchSampler {
+    /// Fisher–Yates shuffle per epoch, seeded from
+    /// `TrainConfig::seed` and the epoch index — the historical
+    /// behavior and the default.
+    #[default]
+    Shuffled,
+    /// Low-discrepancy index stream over the family's 1-D sequence:
+    /// epoch `e` of an `n`-sample set draws sample `k` as
+    /// `seq.map_to(e·n + k, 0, n)`.  Within one epoch this samples
+    /// with replacement, but consecutive draws are stratified — each
+    /// prefix of the stream covers the index range near-uniformly, so
+    /// successive mini-batches overlap less than independent uniform
+    /// draws would.
+    Lds(SequenceFamily),
+}
 
 /// Training configuration.
 #[derive(Debug, Clone)]
@@ -30,6 +50,8 @@ pub struct TrainConfig {
     pub augment: bool,
     /// Padding for the crop augmentation.
     pub augment_pad: usize,
+    /// Within-epoch sample ordering.
+    pub sampler: BatchSampler,
 }
 
 impl Default for TrainConfig {
@@ -43,6 +65,7 @@ impl Default for TrainConfig {
             seed: 0,
             augment: false,
             augment_pad: 4,
+            sampler: BatchSampler::Shuffled,
         }
     }
 }
@@ -80,7 +103,20 @@ impl History {
 
 /// Evaluate mean loss and accuracy over a dataset.
 pub fn evaluate(model: &mut dyn Model, data: &ClassificationData, batch_size: usize) -> (f32, f64) {
-    let order: Vec<usize> = (0..data.len()).collect();
+    evaluate_into(model, data, batch_size, &mut Vec::new())
+}
+
+/// [`evaluate`] with a caller-held index scratch: the training loop
+/// reuses one Vec across its per-epoch evaluations instead of
+/// allocating `len` indices each time.
+pub fn evaluate_into(
+    model: &mut dyn Model,
+    data: &ClassificationData,
+    batch_size: usize,
+    order: &mut Vec<usize>,
+) -> (f32, f64) {
+    order.clear();
+    order.extend(0..data.len());
     let mut loss_sum = 0.0f64;
     let mut acc_sum = 0.0f64;
     let mut n = 0usize;
@@ -107,18 +143,35 @@ pub fn train(
     let timer = Timer::start();
     let mut hist = History::default();
     let mut aug_rng = Pcg32::seeded(cfg.seed ^ 0xAA99);
-    // logits/gradient tensors are reused across every step: together
-    // with the model-held scratch this makes the steady-state epoch
-    // loop allocation-free apart from batch assembly
+    // logits/gradient tensors and both index buffers are reused across
+    // every step and epoch: together with the model-held scratch this
+    // makes the steady-state epoch loop allocation-free apart from
+    // batch assembly
     let mut logits = Tensor::empty();
     let mut glogits = Tensor::empty();
+    let mut order: Vec<usize> = Vec::with_capacity(train.len());
+    let mut eval_order: Vec<usize> = Vec::new();
+    let lds_seq = match &cfg.sampler {
+        BatchSampler::Shuffled => None,
+        BatchSampler::Lds(fam) => Some(fam.build(1)),
+    };
     for epoch in 0..cfg.epochs {
         let opt = Sgd {
             lr: cfg.schedule.lr_at(epoch, cfg.epochs),
             momentum: cfg.momentum,
             weight_decay: cfg.weight_decay,
         };
-        let order = train.epoch_order(cfg.seed ^ (epoch as u64) << 7);
+        match &lds_seq {
+            None => train.epoch_order_into(cfg.seed ^ (epoch as u64) << 7, &mut order),
+            Some(seq) => {
+                // one continuous low-discrepancy stream across epochs:
+                // epoch boundaries do not restart the sequence
+                let n = train.len();
+                let base = (epoch * n) as u64;
+                order.clear();
+                order.extend((0..n).map(|k| seq.map_to(base + k as u64, 0, n)));
+            }
+        }
         let mut loss_sum = 0.0f64;
         let mut n = 0usize;
         for (mut x, y) in train.batches(&order, cfg.batch_size) {
@@ -133,7 +186,8 @@ pub fn train(
             n += y.len();
         }
         let train_loss = (loss_sum / n as f64) as f32;
-        let (test_loss, test_acc) = evaluate(model, test, cfg.batch_size.max(128));
+        let (test_loss, test_acc) =
+            evaluate_into(model, test, cfg.batch_size.max(128), &mut eval_order);
         log_debug!(
             "epoch {epoch}: lr={:.4} train_loss={train_loss:.4} test_loss={test_loss:.4} acc={test_acc:.4}",
             opt.lr
@@ -208,6 +262,45 @@ mod tests {
             "sparse MLP should learn synth-mnist, acc={}",
             hist.final_acc()
         );
+    }
+
+    #[test]
+    fn lds_sampler_learns_synth_mnist() {
+        let (tr, te) = SynthMnist::new(512, 256, 7);
+        let mut mlp = DenseMlp::new(&[784, 64, 10], Init::UniformRandom, 1);
+        let cfg = TrainConfig {
+            epochs: 4,
+            batch_size: 64,
+            schedule: LrSchedule::Constant(0.05),
+            weight_decay: 0.0,
+            sampler: BatchSampler::Lds(crate::qmc::SequenceFamily::sobol()),
+            ..Default::default()
+        };
+        let hist = train(&mut mlp, &tr, &te, &cfg);
+        assert!(
+            hist.final_acc() > 0.6,
+            "LDS-sampled training should learn synth-mnist, acc={}",
+            hist.final_acc()
+        );
+    }
+
+    #[test]
+    fn lds_stream_is_deterministic_and_near_uniform() {
+        // the van der Corput index stream over n slots: every epoch's
+        // draw counts stay within a tight band of uniform
+        let fam = crate::qmc::SequenceFamily::sobol();
+        let seq = fam.build(1);
+        let n = 100usize;
+        let mut counts = vec![0usize; n];
+        for k in 0..n as u64 {
+            counts[seq.map_to(k, 0, n)] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        assert!(max <= 2, "one epoch never draws any sample more than twice, max={max}");
+        let covered = counts.iter().filter(|&&c| c > 0).count();
+        // one epoch of the stream covers most of the set (84/100 for
+        // this n); a uniform-with-replacement draw covers ~63%
+        assert!(covered * 4 >= n * 3, "covers ≥75% of samples per epoch, got {covered}/{n}");
     }
 
     #[test]

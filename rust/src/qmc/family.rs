@@ -1,0 +1,387 @@
+//! Registered sequence families: one descriptor type behind every
+//! place the system consumes a low discrepancy sequence.
+//!
+//! A [`SequenceFamily`] is a small, comparable, copyable value that
+//! names *which* sequence to construct — Sobol', Owen-scrambled
+//! Sobol', Halton, digit-scrambled Halton, or the counter-based PRNG
+//! baseline — with one canonical string form (`sobol`, `sobol:owen=7`,
+//! `halton:scramble=7`, `prng:seed=3`, …) used uniformly by CLI flags,
+//! config JSON, registry checkpoints, and the wire protocol.  The
+//! topology builder, the trainer's low-discrepancy batch sampler, and
+//! the sweep service all call [`SequenceFamily::build`] instead of
+//! hard-coding a concrete generator, so adding a family (e.g. a
+//! learned generator in the spirit of Neural LDS, arXiv:2510.03745)
+//! is one new `SequenceKind` arm, not a cross-codebase hunt.
+//!
+//! The descriptor is deliberately *data*, not a trait object: two
+//! processes holding equal descriptors build bitwise-identical
+//! sequences, which is what lets `registry::ModelSpec` carry one and
+//! remote workers rebuild the same topology from the Publish frame.
+
+use super::halton::Halton;
+use super::scramble::OwenScramble;
+use super::sobol::{Sobol, MAX_DIMS};
+use super::Sequence;
+use crate::rng::splitmix64;
+use crate::topology::PathSource;
+use std::fmt;
+
+/// Which generator family a [`SequenceFamily`] names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SequenceKind {
+    /// The Sobol' (0,1)-sequence in base 2 (paper §4.2), optionally
+    /// Owen-scrambled (§4.3) and with bad-dimension skipping.
+    Sobol,
+    /// The Halton sequence in coprime prime bases (paper §6 future
+    /// work), optionally digit-scrambled.
+    Halton,
+    /// Counter-based PRNG baseline ("fake sequence"): splitmix64 of
+    /// `(seed, dim, index)`.  Progressive in the index like the real
+    /// sequences, but with none of their stratification.
+    Prng,
+}
+
+/// A buildable, serializable descriptor of one sequence configuration.
+///
+/// Canonical string grammar (`parse` ∘ `canonical` is the identity):
+///
+/// ```text
+/// sobol                  Sobol', skip_bad_dims, unscrambled (default)
+/// sobol:owen=7           Owen-scrambled Sobol', seed 7
+/// sobol:skip=0           Sobol' without bad-dimension skipping
+/// sobol:owen=7,skip=0    both
+/// halton                 Halton, unscrambled
+/// halton:scramble=7      digit-scrambled Halton, seed 7
+/// prng                   PRNG baseline, seed 0
+/// prng:seed=3            PRNG baseline, seed 3
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SequenceFamily {
+    /// Generator family.
+    pub kind: SequenceKind,
+    /// Scramble seed (Sobol' Owen / Halton digit) or the PRNG seed;
+    /// `None` = unscrambled (PRNG: seed 0).
+    pub scramble: Option<u64>,
+    /// Skip badly-paired dimensions during topology generation
+    /// (meaningful for Sobol' only; see §4.3).
+    pub skip_bad_dims: bool,
+}
+
+impl Default for SequenceFamily {
+    /// Today's hard-coded configuration: Sobol' with bad-dimension
+    /// skipping and no scrambling.  Existing `ModelSpec`s therefore
+    /// stay bitwise-identical.
+    fn default() -> Self {
+        SequenceFamily { kind: SequenceKind::Sobol, scramble: None, skip_bad_dims: true }
+    }
+}
+
+impl SequenceFamily {
+    /// Plain Sobol' (the default).
+    pub fn sobol() -> Self {
+        Self::default()
+    }
+
+    /// Owen-scrambled Sobol'.
+    pub fn sobol_scrambled(seed: u64) -> Self {
+        SequenceFamily { kind: SequenceKind::Sobol, scramble: Some(seed), skip_bad_dims: true }
+    }
+
+    /// Plain Halton.
+    pub fn halton() -> Self {
+        SequenceFamily { kind: SequenceKind::Halton, scramble: None, skip_bad_dims: false }
+    }
+
+    /// Digit-scrambled Halton.
+    pub fn halton_scrambled(seed: u64) -> Self {
+        SequenceFamily { kind: SequenceKind::Halton, scramble: Some(seed), skip_bad_dims: false }
+    }
+
+    /// Counter-based PRNG baseline.
+    pub fn prng(seed: u64) -> Self {
+        SequenceFamily { kind: SequenceKind::Prng, scramble: Some(seed), skip_bad_dims: false }
+    }
+
+    /// Every family the test-suite exercises (one representative per
+    /// registered configuration class).
+    pub fn registered() -> Vec<SequenceFamily> {
+        vec![
+            Self::sobol(),
+            Self::sobol_scrambled(7),
+            SequenceFamily { kind: SequenceKind::Sobol, scramble: None, skip_bad_dims: false },
+            Self::halton(),
+            Self::halton_scrambled(7),
+            Self::prng(3),
+        ]
+    }
+
+    /// Parse the canonical string form (see type docs for the grammar).
+    pub fn parse(s: &str) -> Result<SequenceFamily, String> {
+        let (head, rest) = match s.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (s, None),
+        };
+        let mut fam = match head {
+            "sobol" => Self::sobol(),
+            "halton" => Self::halton(),
+            "prng" => SequenceFamily { kind: SequenceKind::Prng, scramble: None, skip_bad_dims: false },
+            other => return Err(format!("unknown sequence family '{other}'")),
+        };
+        if let Some(rest) = rest {
+            for kv in rest.split(',') {
+                let (key, val) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("expected key=value in sequence param '{kv}'"))?;
+                match (fam.kind, key) {
+                    (SequenceKind::Sobol, "owen")
+                    | (SequenceKind::Halton, "scramble")
+                    | (SequenceKind::Prng, "seed") => {
+                        let seed: u64 = val
+                            .parse()
+                            .map_err(|_| format!("bad integer '{val}' for sequence '{key}'"))?;
+                        fam.scramble = Some(seed);
+                    }
+                    (SequenceKind::Sobol, "skip") => {
+                        fam.skip_bad_dims = match val {
+                            "0" | "false" => false,
+                            "1" | "true" => true,
+                            _ => return Err(format!("bad skip value '{val}' (want 0/1)")),
+                        };
+                    }
+                    _ => return Err(format!("unknown param '{key}' for family '{head}'")),
+                }
+            }
+        }
+        Ok(fam)
+    }
+
+    /// The canonical string form; `parse` of this yields `self`.
+    pub fn canonical(&self) -> String {
+        match self.kind {
+            SequenceKind::Sobol => {
+                let mut params = Vec::new();
+                if let Some(s) = self.scramble {
+                    params.push(format!("owen={s}"));
+                }
+                if !self.skip_bad_dims {
+                    params.push("skip=0".to_string());
+                }
+                if params.is_empty() {
+                    "sobol".to_string()
+                } else {
+                    format!("sobol:{}", params.join(","))
+                }
+            }
+            SequenceKind::Halton => match self.scramble {
+                None => "halton".to_string(),
+                Some(s) => format!("halton:scramble={s}"),
+            },
+            SequenceKind::Prng => match self.scramble {
+                None => "prng".to_string(),
+                Some(s) => format!("prng:seed={s}"),
+            },
+        }
+    }
+
+    /// Construct the concrete sequence over `dims` dimensions.
+    pub fn build(&self, dims: usize) -> Box<dyn Sequence + Send + Sync> {
+        match (self.kind, self.scramble) {
+            (SequenceKind::Sobol, None) => Box::new(Sobol::new(dims)),
+            (SequenceKind::Sobol, Some(s)) => Box::new(OwenScramble::new(Sobol::new(dims), s)),
+            (SequenceKind::Halton, None) => Box::new(Halton::new(dims)),
+            (SequenceKind::Halton, Some(s)) => Box::new(Halton::scrambled(dims, s)),
+            (SequenceKind::Prng, seed) => {
+                Box::new(PrngSequence { dims, seed: seed.unwrap_or(0) })
+            }
+        }
+    }
+
+    /// Dimension budget the topology builder should construct the
+    /// sequence with for a `layers`-layer network: Sobol' keeps its
+    /// full table so bad-dimension skipping can scan ahead; Halton and
+    /// the PRNG use exactly one dimension per layer.
+    pub fn topology_dims(&self, layers: usize) -> usize {
+        match self.kind {
+            SequenceKind::Sobol => MAX_DIMS,
+            SequenceKind::Halton | SequenceKind::Prng => layers,
+        }
+    }
+
+    /// The dedicated sign component for
+    /// [`crate::topology::SignPolicy::SequenceDimension`]: a sequence
+    /// plus the dimension index to threshold at ½ (paper §4.3).
+    pub fn sign_sequence(&self, layers: usize) -> (Box<dyn Sequence + Send + Sync>, usize) {
+        match self.kind {
+            // far from the topology dims
+            SequenceKind::Sobol => (self.build(MAX_DIMS), MAX_DIMS - 1),
+            // the next unused prime-base dimension
+            SequenceKind::Halton | SequenceKind::Prng => (self.build(layers + 1), layers),
+        }
+    }
+
+    /// Translate a topology [`PathSource`] into a family descriptor.
+    /// `Drand48` has no counterpart (it is sequential, not indexed) and
+    /// maps to `None`.
+    pub fn from_source(source: &PathSource) -> Option<SequenceFamily> {
+        match source {
+            PathSource::Sobol { skip_bad_dims, scramble_seed } => Some(SequenceFamily {
+                kind: SequenceKind::Sobol,
+                scramble: *scramble_seed,
+                skip_bad_dims: *skip_bad_dims,
+            }),
+            PathSource::Halton { scramble_seed } => Some(SequenceFamily {
+                kind: SequenceKind::Halton,
+                scramble: *scramble_seed,
+                skip_bad_dims: false,
+            }),
+            PathSource::Random { seed } => Some(Self::prng(*seed)),
+            PathSource::Drand48 { .. } => None,
+        }
+    }
+
+    /// The topology [`PathSource`] this family selects.
+    pub fn to_source(&self) -> PathSource {
+        match self.kind {
+            SequenceKind::Sobol => PathSource::Sobol {
+                skip_bad_dims: self.skip_bad_dims,
+                scramble_seed: self.scramble,
+            },
+            SequenceKind::Halton => PathSource::Halton { scramble_seed: self.scramble },
+            SequenceKind::Prng => PathSource::Random { seed: self.scramble.unwrap_or(0) },
+        }
+    }
+}
+
+impl fmt::Display for SequenceFamily {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.canonical())
+    }
+}
+
+impl std::str::FromStr for SequenceFamily {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+/// Counter-based PRNG "sequence": component `(index, dim)` is the top
+/// 32 bits of `splitmix64(seed ^ dim<<40 ^ index·φ)` — exactly the
+/// draw the topology builder's random walk has always used, so routing
+/// `PathSource::Random` through the unified build path is bitwise
+/// neutral.  Progressive in the index; no stratification.
+#[derive(Debug, Clone)]
+pub struct PrngSequence {
+    dims: usize,
+    seed: u64,
+}
+
+impl PrngSequence {
+    /// PRNG sequence over `dims` dimensions.
+    pub fn new(dims: usize, seed: u64) -> Self {
+        PrngSequence { dims, seed }
+    }
+}
+
+impl Sequence for PrngSequence {
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn component_u32(&self, index: u64, dim: usize) -> u32 {
+        let h = splitmix64(self.seed ^ (dim as u64) << 40 ^ index.wrapping_mul(0x9E3779B97F4A7C15));
+        (h >> 32) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_round_trips_for_all_registered() {
+        for fam in SequenceFamily::registered() {
+            let s = fam.canonical();
+            let back = SequenceFamily::parse(&s).expect(&s);
+            assert_eq!(back, fam, "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_documented_forms() {
+        assert_eq!(SequenceFamily::parse("sobol").unwrap(), SequenceFamily::sobol());
+        assert_eq!(
+            SequenceFamily::parse("sobol:owen=7").unwrap(),
+            SequenceFamily::sobol_scrambled(7)
+        );
+        assert_eq!(
+            SequenceFamily::parse("sobol:owen=7,skip=0").unwrap(),
+            SequenceFamily { kind: SequenceKind::Sobol, scramble: Some(7), skip_bad_dims: false }
+        );
+        assert_eq!(SequenceFamily::parse("halton").unwrap(), SequenceFamily::halton());
+        assert_eq!(
+            SequenceFamily::parse("halton:scramble=9").unwrap(),
+            SequenceFamily::halton_scrambled(9)
+        );
+        assert_eq!(SequenceFamily::parse("prng:seed=3").unwrap(), SequenceFamily::prng(3));
+        assert!(SequenceFamily::parse("niederreiter").is_err());
+        assert!(SequenceFamily::parse("sobol:seed=3").is_err());
+        assert!(SequenceFamily::parse("halton:owen=3").is_err());
+        assert!(SequenceFamily::parse("sobol:owen=x").is_err());
+    }
+
+    #[test]
+    fn source_round_trip() {
+        for fam in SequenceFamily::registered() {
+            let src = fam.to_source();
+            let back = SequenceFamily::from_source(&src).unwrap();
+            // `prng` without an explicit seed normalizes to seed 0
+            let want = if fam.kind == SequenceKind::Prng && fam.scramble.is_none() {
+                SequenceFamily::prng(0)
+            } else {
+                fam
+            };
+            assert_eq!(back, want);
+        }
+        assert!(SequenceFamily::from_source(&PathSource::Drand48 { seed: 1 }).is_none());
+    }
+
+    #[test]
+    fn prng_matches_random_walk_hash() {
+        // the unified topology path must reproduce build_random bitwise
+        let seq = PrngSequence::new(4, 42);
+        for l in 0..4usize {
+            for p in 0..64u64 {
+                let h = splitmix64(42 ^ (l as u64) << 40 ^ p.wrapping_mul(0x9E3779B97F4A7C15));
+                let n = 300u64;
+                assert_eq!(seq.map_to(p, l, n as usize), (((h >> 32) * n) >> 32) as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn build_respects_kind_and_scramble() {
+        let plain = SequenceFamily::sobol().build(4);
+        let scr = SequenceFamily::sobol_scrambled(7).build(4);
+        assert_ne!(plain.component_u32(5, 1), scr.component_u32(5, 1));
+        let h = SequenceFamily::halton().build(3);
+        // dim 1 is base 3: first nonzero value is 1/3
+        assert!((h.component(1, 1) - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn map_block_matches_map_to_for_every_family() {
+        for fam in SequenceFamily::registered() {
+            let dims = fam.topology_dims(3).min(4);
+            let seq = fam.build(dims);
+            for d in 0..dims.min(3) {
+                for n in [8usize, 27, 300] {
+                    let block = seq.map_block(d, 64, n);
+                    let direct: Vec<usize> = (0..64u64).map(|i| seq.map_to(i, d, n)).collect();
+                    assert_eq!(block, direct, "{} dim {d} n {n}", fam.canonical());
+                }
+            }
+        }
+    }
+}

@@ -75,6 +75,13 @@ impl Sequence for Halton {
         let (num, den) = self.radical_parts(index, dim);
         ((num as u128 * n as u128) / den as u128) as usize
     }
+
+    fn map_block(&self, dim: usize, count: usize, n: usize) -> Vec<usize> {
+        // point-wise so every slot goes through the exact-rational
+        // `map_to` above; the fixed-point default would round below
+        // non-dyadic slot boundaries
+        (0..count as u64).map(|i| self.map_to(i, dim, n)).collect()
+    }
 }
 
 impl Halton {

@@ -11,11 +11,14 @@
 //! routing, and natural progressive growth (paper §4.2-4.4).
 
 pub mod f2;
+pub mod family;
 pub mod halton;
 pub mod nets;
 pub mod scramble;
 pub mod sobol;
 pub mod vdc;
+
+pub use family::{PrngSequence, SequenceFamily, SequenceKind};
 
 /// A deterministic point sequence in [0,1)^s addressed by (index, dim).
 ///
@@ -47,6 +50,20 @@ pub trait Sequence {
     fn map_to(&self, index: u64, dim: usize, n: usize) -> usize {
         debug_assert!(n > 0 && n <= u32::MAX as usize);
         ((self.component_u32(index, dim) as u64 * n as u64) >> 32) as usize
+    }
+
+    /// `map_to` over the first `count` indices in natural order.  The
+    /// default routes through [`Sequence::component_block`] (digital
+    /// sequences keep their XOR-doubling speed) and the fixed-point
+    /// multiply of the default `map_to`.  Sequences whose `map_to` must
+    /// use exact non-dyadic arithmetic (Halton) override this so the
+    /// block path gives the same slots as point-wise `map_to`.
+    fn map_block(&self, dim: usize, count: usize, n: usize) -> Vec<usize> {
+        debug_assert!(n > 0 && n <= u32::MAX as usize);
+        self.component_block(dim, count)
+            .into_iter()
+            .map(|x| ((x as u64 * n as u64) >> 32) as usize)
+            .collect()
     }
 }
 

@@ -121,6 +121,7 @@ mod tests {
                 paths: 16,
                 seed: id, // distinct weights per tenant
                 kernel: KernelKind::Scalar,
+                sequence: crate::qmc::SequenceFamily::default(),
             };
             reg.register(id, spec.clone()).unwrap();
             let net = spec.build();

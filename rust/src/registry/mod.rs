@@ -39,7 +39,8 @@ use crate::nn::init::Init;
 use crate::nn::kernel::KernelKind;
 use crate::nn::sparse::{SparseMlp, SparseMlpConfig};
 use crate::nn::Model;
-use crate::topology::{PathSource, TopologyBuilder};
+use crate::qmc::SequenceFamily;
+use crate::topology::TopologyBuilder;
 use crate::util::sync::plock;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -47,10 +48,13 @@ use std::sync::{Arc, Mutex};
 
 /// The deterministic half of a registered model: everything needed to
 /// rebuild its topology and initial weights bit-for-bit in any
-/// process.  The path source is fixed (Sobol', `skip_bad_dims`, no
-/// scrambling) and the init scheme is `ConstantRandomSign` — the same
-/// spec the `shard-worker` CLI builds from, so a spec that crossed the
-/// wire and one parsed from a CLI produce identical replicas.
+/// process.  The path source is named by `sequence` (a
+/// [`SequenceFamily`] descriptor; the default is the historical
+/// Sobol'-with-skipping configuration, so pre-existing specs build the
+/// exact same bits) and the init scheme is `ConstantRandomSign` — the
+/// same spec the `shard-worker` CLI builds from, so a spec that
+/// crossed the wire and one parsed from a CLI produce identical
+/// replicas.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelSpec {
     /// Layer sizes, input first.
@@ -61,6 +65,10 @@ pub struct ModelSpec {
     pub seed: u64,
     /// Compute kernel the built backend uses.
     pub kernel: KernelKind,
+    /// Sequence family generating the topology (wire-encoded in the
+    /// Publish frame and the registry checkpoint, so remote workers
+    /// rebuild the same topology).
+    pub sequence: SequenceFamily,
 }
 
 impl ModelSpec {
@@ -85,7 +93,7 @@ impl ModelSpec {
     pub fn build(&self) -> SparseMlp {
         let topo = TopologyBuilder::new(&self.sizes)
             .paths(self.paths)
-            .source(PathSource::Sobol { skip_bad_dims: true, scramble_seed: None })
+            .source(self.sequence.to_source())
             .build();
         let mut net = SparseMlp::new(
             &topo,
@@ -419,7 +427,25 @@ mod tests {
     use super::*;
 
     fn spec() -> ModelSpec {
-        ModelSpec { sizes: vec![8, 16, 4], paths: 64, seed: 3, kernel: KernelKind::Scalar }
+        ModelSpec {
+            sizes: vec![8, 16, 4],
+            paths: 64,
+            seed: 3,
+            kernel: KernelKind::Scalar,
+            sequence: SequenceFamily::default(),
+        }
+    }
+
+    #[test]
+    fn sequence_field_selects_topology() {
+        // same sizes/paths/seed, different family → different topology,
+        // each deterministic on rebuild
+        let base = spec();
+        let halton = ModelSpec { sequence: SequenceFamily::halton(), ..spec() };
+        let a = base.build();
+        let b = halton.build();
+        assert_eq!(b.topo.index, halton.build().topo.index, "family build is deterministic");
+        assert_ne!(a.topo.index, b.topo.index, "families generate distinct topologies");
     }
 
     #[test]

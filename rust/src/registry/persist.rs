@@ -56,6 +56,7 @@ pub fn to_checkpoint(model_id: u64, spec: &ModelSpec, snap: &Snapshot) -> Checkp
     ck.meta.insert("paths".into(), JsonValue::Number(spec.paths as f64));
     ck.meta.insert("seed".into(), JsonValue::Number(spec.seed as f64));
     ck.meta.insert("kernel".into(), JsonValue::String(spec.kernel.as_str().into()));
+    ck.meta.insert("sequence".into(), JsonValue::String(spec.sequence.canonical()));
     ck
 }
 
@@ -90,12 +91,23 @@ pub fn from_checkpoint(ck: &Checkpoint) -> Result<(u64, ModelSpec, Snapshot), St
         .get("kernel")
         .and_then(|v| v.as_str())
         .ok_or("registry snapshot meta missing 'kernel'")?;
+    // absent "sequence" (files written before the SequenceFamily
+    // refactor) means the historical default: Sobol' with skipping
+    let sequence = match ck.meta.get("sequence") {
+        None => crate::qmc::SequenceFamily::default(),
+        Some(v) => {
+            let s = v.as_str().ok_or("non-string 'sequence' in snapshot meta")?;
+            crate::qmc::SequenceFamily::parse(s)
+                .map_err(|e| format!("bad 'sequence' in snapshot meta: {e}"))?
+        }
+    };
     let spec = ModelSpec {
         sizes,
         paths: meta_usize("paths")?,
         seed: meta_usize("seed")? as u64,
         kernel: KernelKind::parse(kernel_str)
             .ok_or_else(|| format!("unknown kernel '{kernel_str}' in snapshot meta"))?,
+        sequence,
     };
     let mut w = Vec::with_capacity(spec.transitions());
     let mut bias = Vec::with_capacity(spec.transitions());
@@ -183,7 +195,30 @@ mod tests {
     use crate::registry::Registry;
 
     fn spec() -> ModelSpec {
-        ModelSpec { sizes: vec![6, 12, 3], paths: 32, seed: 11, kernel: KernelKind::Scalar }
+        ModelSpec {
+            sizes: vec![6, 12, 3],
+            paths: 32,
+            seed: 11,
+            kernel: KernelKind::Scalar,
+            sequence: crate::qmc::SequenceFamily::default(),
+        }
+    }
+
+    #[test]
+    fn non_default_sequence_survives_codec_and_absent_key_defaults() {
+        // a non-Sobol' family round-trips through the checkpoint meta
+        let s = ModelSpec { sequence: crate::qmc::SequenceFamily::halton_scrambled(9), ..spec() };
+        let net = s.build();
+        let snap = Snapshot::capture(1, &net);
+        let ck = to_checkpoint(1, &s, &snap);
+        let (_, spec2, _) = from_checkpoint(&ck).unwrap();
+        assert_eq!(spec2.sequence, s.sequence);
+        // a checkpoint written before the refactor (no "sequence" key)
+        // decodes to the historical default family
+        let mut old = to_checkpoint(2, &spec(), &Snapshot::capture(1, &spec().build()));
+        old.meta.remove("sequence");
+        let (_, spec3, _) = from_checkpoint(&old).unwrap();
+        assert_eq!(spec3.sequence, crate::qmc::SequenceFamily::default());
     }
 
     fn temp_dir(tag: &str) -> PathBuf {

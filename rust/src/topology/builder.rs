@@ -3,9 +3,7 @@
 //! bad-dimension skipping (§4.3, Table 1 caption).
 
 use super::PathTopology;
-use crate::qmc::scramble::OwenScramble;
-use crate::qmc::sobol::{Sobol, MAX_DIMS};
-use crate::qmc::Sequence;
+use crate::qmc::{Sequence, SequenceFamily, SequenceKind};
 use crate::rng::{Drand48, Pcg32, Rng};
 
 /// Which engine generates the path indices.
@@ -107,25 +105,11 @@ impl TopologyBuilder {
     /// Generate the topology.
     pub fn build(&self) -> PathTopology {
         let (index, dims_used) = match &self.source {
-            PathSource::Random { seed } => (self.build_random(*seed), None),
             PathSource::Drand48 { seed } => (self.build_drand48(*seed), None),
-            PathSource::Sobol { skip_bad_dims, scramble_seed } => {
-                let (idx, dims) = self.build_sobol(*skip_bad_dims, *scramble_seed);
-                (idx, Some(dims))
-            }
-            PathSource::Halton { scramble_seed } => {
-                let layers = self.layer_sizes.len();
-                let seq: crate::qmc::halton::Halton = match scramble_seed {
-                    None => crate::qmc::halton::Halton::new(layers),
-                    Some(s) => crate::qmc::halton::Halton::scrambled(layers, *s),
-                };
-                let idx = (0..layers)
-                    .map(|l| {
-                        let n = self.layer_sizes[l];
-                        (0..self.paths).map(|p| seq.map_to(p as u64, l, n) as u32).collect()
-                    })
-                    .collect();
-                (idx, Some((0..layers).collect()))
+            source => {
+                let fam = SequenceFamily::from_source(source)
+                    .expect("every indexed source maps to a SequenceFamily");
+                self.build_family(&fam)
             }
         };
         let signs = self.build_signs();
@@ -139,27 +123,10 @@ impl TopologyBuilder {
         }
     }
 
-    /// Counter-based random walk: draw (layer, path) ↦ uniform via a
-    /// stateless hash so the prefix is stable under growth.
-    fn build_random(&self, seed: u64) -> Vec<Vec<u32>> {
-        self.layer_sizes
-            .iter()
-            .enumerate()
-            .map(|(l, &n)| {
-                (0..self.paths)
-                    .map(|p| {
-                        let h = crate::rng::splitmix64(
-                            seed ^ (l as u64) << 40 ^ (p as u64).wrapping_mul(0x9E3779B97F4A7C15),
-                        );
-                        (((h >> 32) * n as u64) >> 32) as u32
-                    })
-                    .collect()
-            })
-            .collect()
-    }
-
     /// Bit-exact Fig 3 reference: sequential drand48 over layers, then
     /// paths (`index[l][p] = (int)(drand48()*neuronsPerLayer[l])`).
+    /// The only source that cannot route through [`SequenceFamily`]:
+    /// its draws are sequential, not indexed by (layer, path).
     fn build_drand48(&self, seed: u32) -> Vec<Vec<u32>> {
         let mut rng = Drand48::new(seed);
         self.layer_sizes
@@ -168,17 +135,14 @@ impl TopologyBuilder {
             .collect()
     }
 
-    /// Sobol' enumeration per Eqn 6, optionally skipping bad dimensions.
-    fn build_sobol(
-        &self,
-        skip_bad_dims: bool,
-        scramble_seed: Option<u64>,
-    ) -> (Vec<Vec<u32>>, Vec<usize>) {
-        let seq: Box<dyn Sequence> = match scramble_seed {
-            None => Box::new(Sobol::new(MAX_DIMS)),
-            Some(s) => Box::new(OwenScramble::new(Sobol::new(MAX_DIMS), s)),
-        };
+    /// Unified enumeration per Eqn 6 for every registered
+    /// [`SequenceFamily`]: layer `l` links path `p` at
+    /// `floor(n_l · x_p^{(dim_l)})`, with bad-dimension skipping (§4.3)
+    /// when the family asks for it.
+    fn build_family(&self, fam: &SequenceFamily) -> (Vec<Vec<u32>>, Option<Vec<usize>>) {
         let layers = self.layer_sizes.len();
+        let seq = fam.build(fam.topology_dims(layers));
+        let max_dims = seq.dims();
         let mut dims_used = Vec::with_capacity(layers);
         let mut next_dim = 0usize;
         // scan at most this many candidate dimensions per layer; if none
@@ -186,12 +150,13 @@ impl TopologyBuilder {
         // no pairing can avoid duplicates, so "skip forever" must not
         // exhaust the dimension budget).
         const MAX_SCAN: usize = 8;
+        let skip = fam.kind == SequenceKind::Sobol && fam.skip_bad_dims;
         for l in 0..layers {
             let mut dim = next_dim;
-            if skip_bad_dims && l > 0 {
+            if skip && l > 0 {
                 let prev_dim = *dims_used.last().unwrap();
                 let mut best = (usize::MAX, dim);
-                for cand in next_dim..(next_dim + MAX_SCAN).min(MAX_DIMS) {
+                for cand in next_dim..(next_dim + MAX_SCAN).min(max_dims) {
                     let avoidable = self.avoidable_duplicates(
                         seq.as_ref(),
                         prev_dim,
@@ -209,18 +174,23 @@ impl TopologyBuilder {
                 }
                 dim = best.1;
             }
-            assert!(dim < MAX_DIMS, "ran out of Sobol' dimensions");
+            assert!(dim < max_dims, "ran out of sequence dimensions");
             dims_used.push(dim);
             next_dim = dim + 1;
         }
         let index = (0..layers)
             .map(|l| {
-                let n = self.layer_sizes[l] as u64;
-                let block = seq.component_block(dims_used[l], self.paths);
-                block.iter().map(|&x| ((x as u64 * n) >> 32) as u32).collect()
+                let n = self.layer_sizes[l];
+                seq.map_block(dims_used[l], self.paths, n).into_iter().map(|s| s as u32).collect()
             })
             .collect();
-        (index, dims_used)
+        // the random-walk baseline has no meaningful per-layer
+        // dimension provenance
+        let dims = match fam.kind {
+            SequenceKind::Prng => None,
+            _ => Some(dims_used),
+        };
+        (index, dims)
     }
 
     /// Duplicate (src, dst) pairs beyond the pigeonhole minimum for a
@@ -280,15 +250,14 @@ impl TopologyBuilder {
                 // MAX_DIMS-1 (far from topology dims) or a hashed draw
                 // for random sources.
                 match &self.source {
-                    PathSource::Sobol { scramble_seed, .. } => {
-                        let seq: Box<dyn Sequence> = match scramble_seed {
-                            None => Box::new(Sobol::new(MAX_DIMS)),
-                            Some(s) => Box::new(OwenScramble::new(Sobol::new(MAX_DIMS), *s)),
-                        };
+                    PathSource::Sobol { .. } | PathSource::Halton { .. } => {
+                        let fam = SequenceFamily::from_source(&self.source)
+                            .expect("sequence sources map to a SequenceFamily");
+                        let (seq, dim) = fam.sign_sequence(self.layer_sizes.len());
                         Some(
                             (0..self.paths)
                                 .map(|p| {
-                                    if seq.component_u32(p as u64, MAX_DIMS - 1) >> 31 == 0 {
+                                    if seq.component_u32(p as u64, dim) >> 31 == 0 {
                                         1.0
                                     } else {
                                         -1.0
@@ -317,25 +286,6 @@ impl TopologyBuilder {
                                 .collect(),
                         )
                     }
-                    PathSource::Halton { scramble_seed } => {
-                        // dedicate the next unused prime-base dimension
-                        let dims = self.layer_sizes.len();
-                        let seq = match scramble_seed {
-                            None => crate::qmc::halton::Halton::new(dims + 1),
-                            Some(s) => crate::qmc::halton::Halton::scrambled(dims + 1, *s),
-                        };
-                        Some(
-                            (0..self.paths)
-                                .map(|p| {
-                                    if seq.component_u32(p as u64, dims) >> 31 == 0 {
-                                        1.0
-                                    } else {
-                                        -1.0
-                                    }
-                                })
-                                .collect(),
-                        )
-                    }
                 }
             }
         }
@@ -359,6 +309,26 @@ mod tests {
         for l in 0..3 {
             assert_eq!(&a.index[l][..], &b.index[l][..32]);
         }
+    }
+
+    #[test]
+    fn random_source_bitwise_matches_counter_hash() {
+        // regression guard for the SequenceFamily unification: the
+        // PRNG family must reproduce the historical (layer, path)
+        // counter hash bit for bit
+        let t = TopologyBuilder::new(&[10, 300, 7])
+            .paths(100)
+            .source(PathSource::Random { seed: 42 })
+            .build();
+        for (l, &n) in t.layer_sizes.iter().enumerate() {
+            for p in 0..100usize {
+                let h = crate::rng::splitmix64(
+                    42 ^ (l as u64) << 40 ^ (p as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                );
+                assert_eq!(t.index[l][p], (((h >> 32) * n as u64) >> 32) as u32, "l={l} p={p}");
+            }
+        }
+        assert!(t.dims_used.is_none());
     }
 
     #[test]

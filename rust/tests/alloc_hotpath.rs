@@ -39,6 +39,7 @@ use sobolnet::nn::optim::Sgd;
 use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
 use sobolnet::nn::tensor::Tensor;
 use sobolnet::nn::Model;
+use sobolnet::qmc::Sequence;
 use sobolnet::topology::{PathSource, TopologyBuilder};
 use sobolnet::util::parallel::{parallel_ranges, set_num_threads, SendPtr};
 
@@ -163,6 +164,33 @@ fn steady_state_train_step_does_not_allocate() {
             after - before
         );
     }
+    // the trainer's per-epoch index orders: once the scratch Vec has
+    // seen one epoch, both the shuffled refill (`epoch_order_into`)
+    // and the low-discrepancy stream fill cost zero allocations — the
+    // training loop holds one order Vec (plus one evaluate order Vec)
+    // for its whole run instead of allocating `len` indices per epoch
+    let data = sobolnet::data::synth::SynthMnist::new(256, 64, 1).0;
+    let mut order: Vec<usize> = Vec::new();
+    let lds = sobolnet::qmc::SequenceFamily::sobol().build(1);
+    data.epoch_order_into(0, &mut order); // warm: sizes the scratch
+    let n = data.len();
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for epoch in 0..8u64 {
+        data.epoch_order_into(epoch << 7, &mut order);
+        assert_eq!(order.len(), n);
+        // the BatchSampler::Lds fill in nn::trainer::train
+        order.clear();
+        order.extend((0..n).map(|k| lds.map_to(epoch * n as u64 + k as u64, 0, n)));
+        assert_eq!(order.len(), n);
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "warm epoch-order refill allocated {} time(s) in 8 epochs",
+        after - before
+    );
+
     // warm ensemble merge: both modes, with inputs (and the output
     // sink) pre-allocated outside the measured window — the merger's
     // scratch is sized at construction and every merge reuses an

@@ -32,6 +32,7 @@ use sobolnet::engine::{
 use sobolnet::nn::kernel::KernelKind;
 use sobolnet::nn::tensor::Tensor;
 use sobolnet::nn::Model;
+use sobolnet::qmc::SequenceFamily;
 use sobolnet::registry::ModelSpec;
 use sobolnet::util::parallel::{num_threads, set_num_threads};
 use std::path::PathBuf;
@@ -52,6 +53,7 @@ fn base_spec() -> ModelSpec {
         paths: PATHS,
         seed: BASE_SEED,
         kernel: KernelKind::Auto,
+        sequence: SequenceFamily::default(),
     }
 }
 

@@ -29,6 +29,7 @@ use sobolnet::nn::kernel::KernelKind;
 use sobolnet::nn::sparse::SparseMlp;
 use sobolnet::nn::tensor::Tensor;
 use sobolnet::nn::Model;
+use sobolnet::qmc::SequenceFamily;
 use sobolnet::registry::{ModelSpec, Registry, Snapshot};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -53,6 +54,7 @@ fn tenant_spec() -> ModelSpec {
         paths: PATHS,
         seed: test_seed(),
         kernel: KernelKind::Scalar,
+        sequence: SequenceFamily::default(),
     }
 }
 
@@ -92,6 +94,7 @@ fn default_net() -> SparseMlp {
         paths: PATHS,
         seed: test_seed() ^ 0x5a5a,
         kernel: KernelKind::Scalar,
+        sequence: SequenceFamily::default(),
     }
     .build()
 }

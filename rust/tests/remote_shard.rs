@@ -132,6 +132,47 @@ fn four_process_engine_matches_sequential_reference_bitwise() {
     engine.shutdown();
 }
 
+/// A non-default sequence family given as the canonical `--sequence`
+/// descriptor reaches the worker *processes* and selects the same
+/// topology there: answers from spawned shards are bitwise equal to an
+/// in-process reference built from the same family.
+#[test]
+fn non_sobol_sequence_flag_flows_to_worker_processes_bitwise() {
+    use sobolnet::qmc::SequenceFamily;
+    let fam = SequenceFamily::halton_scrambled(7);
+    let n = 32usize;
+    let topo = TopologyBuilder::new(&[FEATURES, 32, 32, CLASSES])
+        .paths(PATHS)
+        .source(fam.to_source())
+        .build();
+    let mut refnet = SparseMlp::new(
+        &topo,
+        SparseMlpConfig { init: Init::ConstantRandomSign, seed: SEED, ..Default::default() },
+    );
+    let expect: Vec<Vec<f32>> = (0..n)
+        .map(|i| refnet.forward(&Tensor::from_vec(sample(i), &[1, FEATURES]), false).data)
+        .collect();
+
+    let engine = EngineBuilder::new()
+        .max_wait(Duration::from_millis(1))
+        .dispatch(DispatchKind::RoundRobin)
+        .spawn_workers(2, spec(&["--sequence", &fam.canonical()]))
+        .expect("spawn shard-worker processes")
+        .build_remote()
+        .expect("build remote engine");
+    let tickets: Vec<_> =
+        (0..n).map(|i| engine.try_submit(sample(i)).expect("block admission admits")).collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            Response::Logits(l) => {
+                assert_bitwise_eq(&l, &expect[i], &format!("halton request {i}"))
+            }
+            other => panic!("halton request {i}: expected logits, got {other:?}"),
+        }
+    }
+    engine.shutdown();
+}
+
 #[test]
 fn killing_one_worker_resolves_in_flight_as_workerfailed_and_survivors_serve() {
     // --delay-ms holds every batch in the child for 25 ms, so a kill

@@ -1,4 +1,4 @@
-//! Integration: the sharded multi-worker server under concurrent load
+//! Integration: the sharded multi-worker engine under concurrent load
 //! answers every request with logits **bitwise identical** to a
 //! sequential single-backend reference pass.
 //!
@@ -6,12 +6,20 @@
 //! the `[neurons, batch]` layout processes each batch column in exact
 //! path order, so neither server-side batching/padding nor the worker
 //! count nor `SOBOLNET_THREADS` can change a single bit of the output.
+//! The Echo-backend tests at the bottom pin the batching behaviors the
+//! pre-engine blocking server used to assert (coalescing, partial
+//! flush, least-loaded spread) on the same `EngineBuilder`
+//! configuration that replaced it: unbounded queues + `Block`
+//! admission.
 
+use sobolnet::coordinator::Metrics;
+use sobolnet::engine::{
+    AdmissionPolicy, DispatchKind, EngineBuilder, InferenceBackend, ModelBackend, Response,
+};
 use sobolnet::nn::init::Init;
 use sobolnet::nn::sparse::{SparseMlp, SparseMlpConfig};
 use sobolnet::nn::tensor::Tensor;
 use sobolnet::nn::Model;
-use sobolnet::serve::{Dispatch, InferenceBackend, ModelBackend, ServeConfig, ShardedServer};
 use sobolnet::topology::{PathSource, TopologyBuilder};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -42,8 +50,15 @@ fn sample(i: usize) -> Vec<f32> {
     (0..FEATURES).map(|j| ((i * FEATURES + j) as f32 * 0.173).sin()).collect()
 }
 
+fn logits(r: Response) -> Vec<f32> {
+    match r {
+        Response::Logits(l) => l,
+        other => panic!("expected logits, got {other:?}"),
+    }
+}
+
 #[test]
-fn sharded_server_matches_sequential_reference_bitwise() {
+fn sharded_engine_matches_sequential_reference_bitwise() {
     let n_requests = 384usize;
     let clients = 8usize;
 
@@ -54,44 +69,45 @@ fn sharded_server_matches_sequential_reference_bitwise() {
         .collect();
 
     let net = make_net();
-    let server = Arc::new(ShardedServer::start_sharded_with(
-        move || -> Box<dyn InferenceBackend> {
-            Box::new(ModelBackend::new(net.clone(), 8, FEATURES, CLASSES))
-        },
-        ServeConfig {
-            workers: 4,
-            max_wait: Duration::from_millis(1),
-            dispatch: Dispatch::LeastLoaded,
-        },
-    ));
-    assert_eq!(server.workers(), 4);
+    let engine = Arc::new(
+        EngineBuilder::new()
+            .workers(4)
+            .max_wait(Duration::from_millis(1))
+            .dispatch(DispatchKind::LeastLoaded)
+            .queue_depth(0)
+            .admission(AdmissionPolicy::Block)
+            .build_with(move || -> Box<dyn InferenceBackend> {
+                Box::new(ModelBackend::new(net.clone(), 8, FEATURES, CLASSES))
+            }),
+    );
+    assert_eq!(engine.workers(), 4);
 
     let mut handles = Vec::new();
     for c in 0..clients {
-        let s = server.clone();
+        let e = engine.clone();
         handles.push(std::thread::spawn(move || {
             let per = n_requests / clients;
             let mut got = Vec::with_capacity(per);
             for k in 0..per {
                 let i = c * per + k;
-                got.push((i, s.infer(sample(i))));
+                got.push((i, logits(e.infer(sample(i)))));
             }
             got
         }));
     }
     let mut answered = 0usize;
     for h in handles {
-        for (i, logits) in h.join().expect("client thread") {
+        for (i, l) in h.join().expect("client thread") {
             answered += 1;
-            assert_eq!(logits, reference[i], "request {i}: served logits differ from reference");
+            assert_eq!(l, reference[i], "request {i}: served logits differ from reference");
         }
     }
     assert_eq!(answered, n_requests, "every request answered");
-    assert_eq!(server.metrics.completed.load(Ordering::Relaxed), n_requests as u64);
+    assert_eq!(engine.metrics.completed.load(Ordering::Relaxed), n_requests as u64);
 
     // per-worker metrics add up to the aggregate, and the load actually
     // spread across shards
-    let per_worker = server.worker_metrics();
+    let per_worker = engine.worker_metrics();
     let counts: Vec<u64> =
         per_worker.iter().map(|m| m.completed.load(Ordering::Relaxed)).collect();
     assert_eq!(counts.iter().sum::<u64>(), n_requests as u64, "shard counts {counts:?}");
@@ -104,26 +120,147 @@ fn round_robin_sharding_answers_everything_in_order_of_dispatch() {
     let n_requests = 64usize;
     let net = make_net();
     let mut reference_net = make_net();
-    let server = ShardedServer::start_sharded_with(
-        move || -> Box<dyn InferenceBackend> {
+    let engine = EngineBuilder::new()
+        .workers(4)
+        .max_wait(Duration::from_millis(1))
+        .dispatch(DispatchKind::RoundRobin)
+        .queue_depth(0)
+        .admission(AdmissionPolicy::Block)
+        .build_with(move || -> Box<dyn InferenceBackend> {
             // capacity 1: every request is its own full batch (no waits)
             Box::new(ModelBackend::new(net.clone(), 1, FEATURES, CLASSES))
-        },
-        ServeConfig {
-            workers: 4,
-            max_wait: Duration::from_millis(1),
-            dispatch: Dispatch::RoundRobin,
-        },
-    );
+        });
     for i in 0..n_requests {
-        let served = server.infer(sample(i));
+        let served = logits(engine.infer(sample(i)));
         let reference =
             reference_net.forward(&Tensor::from_vec(sample(i), &[1, FEATURES]), false).data;
         assert_eq!(served, reference, "request {i}");
     }
     // strict rotation: every shard served exactly a quarter
-    for (w, m) in server.worker_metrics().iter().enumerate() {
+    for (w, m) in engine.worker_metrics().iter().enumerate() {
         assert_eq!(m.completed.load(Ordering::Relaxed), (n_requests / 4) as u64, "worker {w}");
     }
-    server.shutdown();
+    engine.shutdown();
+}
+
+/// Backend that sums features into class 0 and counts batch calls —
+/// the vehicle of the migrated pre-engine server tests.
+struct Echo {
+    calls: Arc<Metrics>,
+}
+
+impl InferenceBackend for Echo {
+    fn batch_capacity(&self) -> usize {
+        4
+    }
+    fn features(&self) -> usize {
+        3
+    }
+    fn classes(&self) -> usize {
+        2
+    }
+    fn infer_batch(&mut self, x: &[f32]) -> Vec<f32> {
+        self.calls.batches.fetch_add(1, Ordering::Relaxed);
+        let mut out = vec![0.0; 4 * 2];
+        for i in 0..4 {
+            out[i * 2] = x[i * 3] + x[i * 3 + 1] + x[i * 3 + 2];
+            out[i * 2 + 1] = -1.0;
+        }
+        out
+    }
+}
+
+fn echo_engine(workers: usize, max_wait: Duration, dispatch: DispatchKind, calls: Arc<Metrics>) -> sobolnet::engine::Engine {
+    EngineBuilder::new()
+        .workers(workers)
+        .max_wait(max_wait)
+        .dispatch(dispatch)
+        .queue_depth(0)
+        .admission(AdmissionPolicy::Block)
+        .build_with(move || -> Box<dyn InferenceBackend> {
+            Box::new(Echo { calls: calls.clone() })
+        })
+}
+
+#[test]
+fn batching_coalesces_requests() {
+    let counter = Arc::new(Metrics::new());
+    let engine = echo_engine(
+        1,
+        Duration::from_millis(50),
+        DispatchKind::LeastLoaded,
+        counter.clone(),
+    );
+    // submit 4 requests quickly: should execute as ONE batch
+    let tickets: Vec<_> = (0..4)
+        .map(|i| engine.try_submit(vec![i as f32, 0.0, 0.0]).expect("block policy admits"))
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        assert_eq!(logits(t.wait())[0], i as f32);
+    }
+    assert_eq!(counter.batches.load(Ordering::Relaxed), 1, "one coalesced batch");
+    assert_eq!(engine.metrics.mean_batch_size(), 4.0);
+    engine.shutdown();
+}
+
+#[test]
+fn flushes_partial_batch_on_timeout() {
+    let engine = echo_engine(
+        1,
+        Duration::from_millis(5),
+        DispatchKind::LeastLoaded,
+        Arc::new(Metrics::new()),
+    );
+    let y = logits(engine.infer(vec![1.0, 1.0, 1.0])); // alone in its batch
+    assert_eq!(y[0], 3.0);
+    assert!(engine.metrics.padded_slots.load(Ordering::Relaxed) >= 3);
+    engine.shutdown();
+}
+
+#[test]
+fn many_concurrent_clients_all_served() {
+    let engine = Arc::new(echo_engine(
+        1,
+        Duration::from_millis(2),
+        DispatchKind::LeastLoaded,
+        Arc::new(Metrics::new()),
+    ));
+    let mut handles = Vec::new();
+    for k in 0..16 {
+        let e = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let y = logits(e.infer(vec![k as f32, k as f32, 0.0]));
+            assert_eq!(y[0], 2.0 * k as f32);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(engine.metrics.completed.load(Ordering::Relaxed), 16);
+}
+
+#[test]
+fn least_loaded_prefers_idle_shard() {
+    let engine = echo_engine(
+        2,
+        Duration::from_millis(40),
+        DispatchKind::LeastLoaded,
+        Arc::new(Metrics::new()),
+    );
+    // four un-awaited submissions: the gauge steers them across both
+    // shards (each shard waits for its batch, so inflight stays up)
+    let tickets: Vec<_> = (0..4)
+        .map(|i| engine.try_submit(vec![i as f32, 0.0, 0.0]).expect("block policy admits"))
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        assert_eq!(logits(t.wait())[0], i as f32);
+    }
+    let served: Vec<u64> = engine
+        .worker_metrics()
+        .iter()
+        .map(|m| m.completed.load(Ordering::Relaxed))
+        .collect();
+    assert_eq!(served.iter().sum::<u64>(), 4);
+    assert!(served.iter().all(|&c| c > 0), "both shards served: {served:?}");
+    engine.shutdown();
 }
